@@ -1,0 +1,88 @@
+//! Remark 2(4): sparsign is robust to re-scaling attacks because no
+//! magnitude is ever exchanged — a malicious worker can multiply its
+//! gradient by 10⁶ and still flips at most ±1 per coordinate, while
+//! norm-scaled compressors (TernGrad, QSGD) let it dominate the average.
+//!
+//! ```bash
+//! cargo run --release --example attack_robustness
+//! ```
+
+use sparsignd::compressors::{CompressorKind, NormKind};
+use sparsignd::config::ExperimentConfig;
+use sparsignd::coordinator::{AggregationRule, Algorithm, Attack, AttackPlan, TrainingRun};
+use sparsignd::experiments::build_env;
+use sparsignd::metrics::TablePrinter;
+use sparsignd::util::rng::Pcg64;
+
+fn main() {
+    let rosters: Vec<(Algorithm, f64)> = vec![
+        (
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::Sparsign { budget: 1.0 },
+                aggregation: AggregationRule::MajorityVote,
+            },
+            0.005,
+        ),
+        (
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::TernGrad,
+                aggregation: AggregationRule::Mean,
+            },
+            0.05,
+        ),
+        (
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::Qsgd { levels: 1, norm: NormKind::L2 },
+                aggregation: AggregationRule::Mean,
+            },
+            0.05,
+        ),
+    ];
+    let attacks: Vec<(&str, Option<AttackPlan>)> = vec![
+        ("clean", None),
+        (
+            "rescale ×1e4 (20% malicious)",
+            Some(AttackPlan { attack: Attack::Rescale { factor: 1e4 }, malicious: 4 }),
+        ),
+        (
+            "sign-flip (20% malicious)",
+            Some(AttackPlan { attack: Attack::SignFlip, malicious: 4 }),
+        ),
+    ];
+
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 120;
+    let mut table = TablePrinter::new(
+        "Final accuracy under attack (20 workers, fast task)",
+        &["Algorithm", "clean", "rescale ×1e4", "sign-flip"],
+    );
+
+    for (alg, lr) in &rosters {
+        let mut row = vec![alg.label()];
+        for (_, plan) in &attacks {
+            let env = build_env(&cfg, 0xda7a);
+            let mut init_rng = Pcg64::new(0, 0x1217);
+            let init = env.init_params(&mut init_rng);
+            let run = TrainingRun {
+                algorithm: alg.clone(),
+                schedule: sparsignd::optim::LrSchedule::Const { lr: *lr },
+                rounds: cfg.rounds,
+                participation: 1.0,
+                eval_every: 0,
+                seed: 0,
+                attack: *plan,
+                allow_stateful_with_sampling: false,
+            };
+            let hist = run.run(&env, init, &|p| env.evaluate(p));
+            let (_, acc) = hist.final_eval().unwrap();
+            row.push(format!("{:.1}%", 100.0 * acc));
+        }
+        table.add_row(row);
+    }
+    println!("{}", table.render());
+    println!(
+        "Expected shape: the re-scaling column hurts the norm-scaled \
+         compressors (TernGrad / 1-bit QSGD decode to ‖g‖-scaled values) far \
+         more than sparsign, whose messages are bounded in {{-1,0,1}}."
+    );
+}

@@ -1,0 +1,76 @@
+//! The motivating sweep from the paper's introduction: how does each
+//! compressor family degrade as data heterogeneity grows?
+//!
+//! Runs signSGD, TernGrad, SPARSIGNSGD and EF-SPARSIGNSGD across
+//! Dirichlet α ∈ {0.05, 0.1, 0.5, 1, 10} and prints final accuracy per
+//! cell — sign-based majority vote should collapse at low α while the
+//! magnitude-aware compressor holds.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneity_sweep
+//! ```
+
+use sparsignd::compressors::CompressorKind;
+use sparsignd::config::ExperimentConfig;
+use sparsignd::coordinator::{AggregationRule, Algorithm};
+use sparsignd::experiments::run_classification;
+use sparsignd::metrics::TablePrinter;
+
+fn main() {
+    let alphas = [0.05, 0.1, 0.5, 1.0, 10.0];
+    let algorithms = vec![
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::TernGrad,
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 1.0 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        Algorithm::EfSparsign { b_local: 10.0, b_global: 1.0, tau: 1, server_lr_scale: None, server_ef: true },
+    ];
+    let lr_overrides = vec![Some(0.005), Some(0.05), Some(0.005), Some(0.005)];
+
+    let mut table = TablePrinter::new(
+        "Final accuracy vs heterogeneity (lower α = more skew)",
+        &["Algorithm", "α=0.05", "α=0.1", "α=0.5", "α=1", "α=10"],
+    );
+    let mut cells: Vec<Vec<String>> = algorithms
+        .iter()
+        .map(|a| vec![a.label()])
+        .collect();
+
+    for &alpha in &alphas {
+        let mut cfg = ExperimentConfig::fast_preset();
+        cfg.name = format!("sweep α={alpha}");
+        cfg.alpha = alpha;
+        cfg.rounds = 120;
+        cfg.seeds = vec![0, 1];
+        cfg.algorithms = algorithms.clone();
+        cfg.lr_overrides = lr_overrides.clone();
+        let report = run_classification(&cfg);
+        println!(
+            "α = {alpha}: partition skew (mean max class fraction) = {:.3}",
+            report.mean_max_class_fraction
+        );
+        for (row, s) in cells.iter_mut().zip(&report.summaries) {
+            row.push(format!("{:.1}%", 100.0 * s.final_acc_mean));
+        }
+    }
+    for row in cells {
+        table.add_row(row);
+    }
+    println!("\n{}", table.render());
+    println!(
+        "Expected shape: majority-vote sign shows the STEEPEST relative \
+         degradation as α shrinks (heterogeneous signs cancel), while the \
+         magnitude-aware rows degrade gently. Note signSGD does not fully \
+         collapse under label-skew + mini-batch noise (the paper's own \
+         Table 1 shows it reaching 74%); the catastrophic regime is the \
+         adversarial eq. (11) population of Fig. 1 (`examples/rosenbrock`)."
+    );
+}

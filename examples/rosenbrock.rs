@@ -1,0 +1,67 @@
+//! Figures 1 & 2 (§6.1): minimize the d=10 Rosenbrock function with 100
+//! workers where 80 see sign-flipped scaled objectives (eq. 11), and
+//! measure the probability of wrong aggregation.
+//!
+//! ```bash
+//! cargo run --release --example rosenbrock            # fast
+//! cargo run --release --example rosenbrock -- 10000   # more rounds
+//! ```
+//!
+//! Emits `fig1.csv` / `fig2.csv` next to the binary's working directory.
+
+use sparsignd::experiments::{run_fig1, run_fig2, RosenbrockSeries};
+use sparsignd::metrics::write_csv;
+
+fn dump(fig: &str, series: &[RosenbrockSeries]) {
+    println!("## {fig}");
+    for s in series {
+        println!(
+            "  {:<28} wrong-aggregation {:.3}   F: {:>6.2} → {:>12.2}   {}",
+            s.label,
+            s.mean_wrong_agg(),
+            s.fvalue.first().unwrap(),
+            s.final_value(),
+            if s.final_value() > *s.fvalue.first().unwrap() {
+                "DIVERGES"
+            } else {
+                "converges"
+            }
+        );
+    }
+    let path = format!("{}.csv", fig.to_lowercase().replace([' ', '.'], ""));
+    let mut headers = vec!["round".to_string()];
+    for s in series {
+        headers.push(format!("{}:wrong_agg", s.label));
+        headers.push(format!("{}:F", s.label));
+    }
+    let rows: Vec<Vec<String>> = (0..series[0].fvalue.len())
+        .map(|t| {
+            let mut row = vec![t.to_string()];
+            for s in series {
+                row.push(format!("{:.6}", s.wrong_agg[t]));
+                row.push(format!("{:.6}", s.fvalue[t]));
+            }
+            row
+        })
+        .collect();
+    let h: Vec<&str> = headers.iter().map(|x| x.as_str()).collect();
+    write_csv(&path, &h, &rows).expect("csv");
+    println!("  series → {path}\n");
+}
+
+fn main() {
+    let rounds: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(3_000);
+    let lr = 0.01;
+    println!(
+        "Rosenbrock d=10, M=100 workers, 80 sign-flipped (eq. 11), lr={lr}, {rounds} rounds\n"
+    );
+    dump("Fig 1", &run_fig1(rounds, lr, 7));
+    dump("Fig 2", &run_fig2(rounds, lr, 7));
+    println!(
+        "Expected shape (paper Fig. 1/2): deterministic sign has wrong-aggregation ≈ 1\n\
+         and diverges; sparsign stays < 1/2 and descends, faster with more sampling."
+    );
+}

@@ -1,0 +1,142 @@
+"""AOT lowering: every (model, shape) variant → ``artifacts/<name>.hlo.txt``.
+
+HLO *text* is the interchange format (NOT ``lowered.compile()`` /
+``.serialize()``): jax ≥ 0.5 serializes HloModuleProto with 64-bit
+instruction ids, which the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Each artifact gets a sidecar line in ``artifacts/manifest.txt``:
+
+    <name> :: in0=f32[235146];in1=f32[64,784];... :: out=tuple(f32[],f32[235146])
+
+which the rust runtime parses to validate shapes before executing.
+
+Run ``python -m compile.aot --out ../artifacts`` (the Makefile's
+``make artifacts`` does this and is a no-op when sources are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Batch sizes baked into the artifacts (the rust engine pads/chunks to
+# these; keep in sync with runtime::artifact::BATCH docs).
+MLP_BATCH = 64
+TRANSFORMER_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the rust
+    side unwraps with to_tuple())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_shape(s: jax.ShapeDtypeStruct) -> str:
+    dt = jnp.dtype(s.dtype).name
+    dims = ",".join(str(d) for d in s.shape)
+    return f"{dt}[{dims}]"
+
+
+def artifact_suite():
+    """(name, fn, example_args) for every artifact we ship."""
+    f32 = jnp.float32
+    suite = []
+
+    # Paper §C.2 Fashion-MNIST MLP: grad, grad+sparsign-fused, logits.
+    spec = M.PAPER_FMNIST
+    p = jax.ShapeDtypeStruct((spec.dim,), f32)
+    x = jax.ShapeDtypeStruct((MLP_BATCH, spec.widths[0]), f32)
+    y = jax.ShapeDtypeStruct((MLP_BATCH, spec.widths[-1]), f32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    suite.append(("mlp_fmnist_grad", M.mlp_grad(spec), (p, x, y)))
+    suite.append(
+        ("mlp_fmnist_grad_sparsign_b1", M.mlp_grad_compress(spec, 1.0), (p, x, y, key))
+    )
+    suite.append(
+        ("mlp_fmnist_logits", lambda pp, xx: (M.mlp_logits(spec, pp, xx),), (p, x))
+    )
+
+    # Small MLP variant for the fast integration tests (dim 32 task).
+    small = M.MlpSpec((32, 32, 5))
+    sp = jax.ShapeDtypeStruct((small.dim,), f32)
+    sx = jax.ShapeDtypeStruct((MLP_BATCH, 32), f32)
+    sy = jax.ShapeDtypeStruct((MLP_BATCH, 5), f32)
+    suite.append(("mlp_small_grad", M.mlp_grad(small), (sp, sx, sy)))
+    suite.append(
+        ("mlp_small_logits", lambda pp, xx: (M.mlp_logits(small, pp, xx),), (sp, sx))
+    )
+
+    # Tiny transformer LM for the e2e example.
+    tspec = M.TransformerSpec()
+    tp = jax.ShapeDtypeStruct((tspec.dim,), f32)
+    tok = jax.ShapeDtypeStruct((TRANSFORMER_BATCH, tspec.seq), jnp.int32)
+    suite.append(("transformer_grad", M.transformer_grad(tspec), (tp, tok, tok)))
+    suite.append(
+        ("transformer_init", lambda k: (M.transformer_init(tspec, k),), (key,))
+    )
+    suite.append(
+        (
+            "transformer_grad_sparsign_b1",
+            M.transformer_grad_compress(tspec, 1.0),
+            (tp, tok, tok, key),
+        )
+    )
+
+    # Rosenbrock (§6.1), d = 10.
+    rx = jax.ShapeDtypeStruct((10,), f32)
+    suite.append(("rosenbrock_grad", M.rosenbrock_grad, (rx,)))
+    return suite
+
+
+def lower_all(out_dir: str, only: str | None = None) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    # Merge with any existing manifest so `--only` refreshes incrementally.
+    manifest: dict[str, str] = {}
+    man_path = os.path.join(out_dir, "manifest.txt")
+    if os.path.exists(man_path):
+        for line in open(man_path):
+            line = line.strip()
+            if " :: " in line:
+                manifest[line.split(" :: ")[0]] = line
+    written = []
+    for name, fn, args in artifact_suite():
+        if only and only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        ins = ";".join(f"in{i}={_fmt_shape(a)}" for i, a in enumerate(args))
+        manifest[name] = f"{name} :: {ins}"
+        written.append(path)
+        print(f"  {name}: {len(text)} chars, inputs {ins}")
+    with open(man_path, "w") as f:
+        f.write("\n".join(manifest[k] for k in sorted(manifest)) + "\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    print(f"AOT-lowering artifacts to {args.out}")
+    written = lower_all(args.out, args.only)
+    print(f"wrote {len(written)} artifacts + manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

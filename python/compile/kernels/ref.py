@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth
+for the pytest/hypothesis suite (and the reference implementation for
+roofline comparison in §Perf).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparsign_ref(g, u, budget: float):
+    """Definition 1, straight-line jnp: sign(g) with prob min(1, B·|g|)."""
+    p = jnp.minimum(jnp.abs(g) * budget, 1.0)
+    return jnp.where(u < p, jnp.sign(g), jnp.zeros_like(g))
+
+
+def majority_vote_ref(votes):
+    """sign(Σ_m votes_m) with sign(0) = 0."""
+    return jnp.sign(jnp.sum(votes, axis=0))
+
+
+def expected_nnz_ref(g, budget: float):
+    """E[#nonzero] = Σ_i min(1, B·|g_i|) (Definition 1)."""
+    return jnp.sum(jnp.minimum(jnp.abs(g) * budget, 1.0))
+
+
+def scaled_sign_ref(x):
+    """The server-side α-approximate compressor C(x) = (‖x‖₁/d)·sign(x)."""
+    d = x.size
+    return (jnp.sum(jnp.abs(x)) / d) * jnp.sign(x)

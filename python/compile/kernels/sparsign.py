@@ -1,0 +1,129 @@
+"""Layer-1 Pallas kernels: the paper's sparsign compressor (Definition 1)
+and the majority-vote aggregator.
+
+The sparsign compressor is the per-coordinate hot spot of the whole
+system: every selected worker ternarizes its full gradient every round.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel is element-wise
+VPU work. Gradients are viewed as ``(rows, 128)`` — 128 is the TPU lane
+width — and streamed HBM→VMEM in ``(BLOCK_ROWS, 128)`` blocks via
+``BlockSpec`` over a 1-D grid. Randomness enters as a second streamed
+input (uniform draws produced by counter-based threefry *in the L2
+graph*), keeping the kernel deterministic given its inputs.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same program runs
+on the rust CPU client. Real-TPU performance is estimated from the VMEM
+footprint in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# TPU f32 tiling: lane width 128, sublane multiple of 8.
+LANES = 128
+BLOCK_ROWS = 256  # (256, 128) f32 block = 128 KiB; g + u + out ≈ 384 KiB VMEM
+
+
+def _sparsign_block_kernel(g_ref, u_ref, o_ref, *, budget: float):
+    """One (BLOCK_ROWS, LANES) block: keep sign(g) where u < min(1,B·|g|)."""
+    g = g_ref[...]
+    u = u_ref[...]
+    p = jnp.minimum(jnp.abs(g) * budget, 1.0)
+    keep = u < p
+    o_ref[...] = jnp.where(keep, jnp.sign(g), 0.0).astype(o_ref.dtype)
+
+
+def _pad_to_grid(v: jax.Array) -> tuple[jax.Array, int]:
+    """Flatten and zero-pad to a whole number of (BLOCK_ROWS, LANES) blocks."""
+    flat = v.reshape(-1)
+    n = flat.shape[0]
+    block = BLOCK_ROWS * LANES
+    padded = ((n + block - 1) // block) * block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("budget",))
+def sparsign(g: jax.Array, u: jax.Array, budget: float) -> jax.Array:
+    """Apply sparsign with compression budget ``B = budget``.
+
+    Args:
+      g: gradient, any shape/float dtype.
+      u: uniform [0,1) draws, same shape as ``g``.
+      budget: the paper's ``B`` (keep-probability per unit magnitude).
+
+    Returns:
+      Ternary codes in {-1, 0, +1}, same shape/dtype as ``g``.
+      ``E[out] = B·g`` wherever ``B·|g| ≤ 1`` (Remark 7 clipping above).
+    """
+    if g.shape != u.shape:
+        raise ValueError(f"g {g.shape} and u {u.shape} must match")
+    if budget < 0:
+        raise ValueError(f"budget must be >= 0, got {budget}")
+    g2, n = _pad_to_grid(g)
+    u2, _ = _pad_to_grid(u)
+    rows = g2.shape[0]
+    grid = rows // BLOCK_ROWS
+    out = pl.pallas_call(
+        functools.partial(_sparsign_block_kernel, budget=float(budget)),
+        out_shape=jax.ShapeDtypeStruct(g2.shape, g.dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        interpret=True,
+    )(g2, u2)
+    return out.reshape(-1)[:n].reshape(g.shape)
+
+
+def _majority_block_kernel(q_ref, o_ref):
+    """Column-block majority vote: sign of the vote sum over workers."""
+    s = jnp.sum(q_ref[...], axis=0)
+    o_ref[...] = jnp.sign(s).astype(o_ref.dtype)
+
+
+@jax.jit
+def majority_vote(votes: jax.Array) -> jax.Array:
+    """Majority vote over ``votes[M, d]`` ternary messages → ``sign(Σ_m)``.
+
+    Ties (vote sum 0) return 0, matching the ternary aggregation analysis.
+    """
+    if votes.ndim != 2:
+        raise ValueError(f"votes must be (workers, dim), got {votes.shape}")
+    m, d = votes.shape
+    pad = (LANES - d % LANES) % LANES
+    v = jnp.pad(votes, ((0, 0), (0, pad))) if pad else votes
+    cols = v.shape[1]
+    out = pl.pallas_call(
+        _majority_block_kernel,
+        out_shape=jax.ShapeDtypeStruct((cols,), votes.dtype),
+        grid=(cols // LANES,),
+        in_specs=[pl.BlockSpec((m, LANES), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((LANES,), lambda i: (i,)),
+        interpret=True,
+    )(v)
+    return out[:d]
+
+
+def sparsign_vmem_report(budget: float) -> dict:
+    """Static VMEM-footprint estimate for the §Perf TPU analysis."""
+    block_bytes = BLOCK_ROWS * LANES * 4
+    return {
+        "block_shape": (BLOCK_ROWS, LANES),
+        "inputs_bytes": 2 * block_bytes,  # g + u streams
+        "output_bytes": block_bytes,
+        "total_vmem_bytes": 3 * block_bytes,
+        "vmem_budget_bytes": 16 * 1024 * 1024,
+        "utilization": 3 * block_bytes / (16 * 1024 * 1024),
+        "budget": budget,
+        "unit": "VPU (element-wise); MXU idle on this path",
+    }

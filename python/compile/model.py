@@ -1,0 +1,266 @@
+"""Layer-2 JAX models: forward/backward graphs lowered AOT to HLO text and
+executed from the rust coordinator via PJRT.
+
+All models take their parameters as ONE FLAT f32 vector whose memory
+layout matches the rust pure-implementations exactly (per layer: weight
+matrix ``(out, in)`` row-major, then bias ``(out,)``) — so the rust
+compressors, the HLO-backed path and the pure-rust path all see the same
+coordinate indexing, and cross-checking them is an equality test.
+
+The ``*_grad_compress`` variants fuse the Layer-1 Pallas ``sparsign``
+kernel after backprop, so compression lowers into the same HLO module and
+the whole worker step (fwd + bwd + ternarize) is a single PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sparsign import sparsign
+
+
+# --------------------------------------------------------------------- MLP
+@dataclass(frozen=True)
+class MlpSpec:
+    """Widths [inputs, hidden..., classes], matching rust `model::Mlp`."""
+
+    widths: tuple[int, ...]
+
+    @property
+    def dim(self) -> int:
+        d = 0
+        for i in range(len(self.widths) - 1):
+            d += self.widths[i] * self.widths[i + 1] + self.widths[i + 1]
+        return d
+
+    def slices(self):
+        """(offset, (out, in)) per layer weight + (offset, out) per bias."""
+        off = 0
+        out = []
+        for i in range(len(self.widths) - 1):
+            n_in, n_out = self.widths[i], self.widths[i + 1]
+            w_off = off
+            b_off = off + n_in * n_out
+            out.append((w_off, b_off, n_in, n_out))
+            off = b_off + n_out
+        return out
+
+    def unflatten(self, flat):
+        layers = []
+        for w_off, b_off, n_in, n_out in self.slices():
+            w = flat[w_off : w_off + n_in * n_out].reshape(n_out, n_in)
+            b = flat[b_off : b_off + n_out]
+            layers.append((w, b))
+        return layers
+
+
+PAPER_FMNIST = MlpSpec((784, 256, 128, 10))
+
+
+def mlp_logits(spec: MlpSpec, flat_params, x):
+    """Forward pass: ReLU MLP, logits out."""
+    h = x
+    layers = spec.unflatten(flat_params)
+    for i, (w, b) in enumerate(layers):
+        h = h @ w.T + b
+        if i + 1 < len(layers):
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_loss(spec: MlpSpec, flat_params, x, y_onehot):
+    """Mean softmax cross-entropy."""
+    logits = mlp_logits(spec, flat_params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def mlp_grad(spec: MlpSpec):
+    """(flat_params, x, y_onehot) -> (loss, flat_grad)."""
+
+    def fn(flat_params, x, y_onehot):
+        loss, grad = jax.value_and_grad(lambda p: mlp_loss(spec, p, x, y_onehot))(
+            flat_params
+        )
+        return loss, grad
+
+    return fn
+
+
+def mlp_grad_compress(spec: MlpSpec, budget: float):
+    """(flat_params, x, y_onehot, key) -> (loss, ternary codes).
+
+    The full worker step of Algorithm 1 with Q = sparsign: fwd/bwd then the
+    Pallas kernel, fused into one HLO module. ``key`` is a uint32[2]
+    threefry key; the uniforms are generated inside the graph so the rust
+    side only supplies a per-(round, worker) key.
+    """
+
+    def fn(flat_params, x, y_onehot, key):
+        loss, grad = jax.value_and_grad(lambda p: mlp_loss(spec, p, x, y_onehot))(
+            flat_params
+        )
+        u = jax.random.uniform(key, grad.shape, dtype=grad.dtype)
+        codes = sparsign(grad, u, budget)
+        return loss, codes
+
+    return fn
+
+
+# -------------------------------------------------------- tiny transformer
+@dataclass(frozen=True)
+class TransformerSpec:
+    """Decoder-only LM sized for the e2e federated-training example
+    (scaled down from the paper-scale ambition to fit the single-core
+    sandbox; the architecture — pre-LN attention + MLP blocks — is the
+    standard one, so widening it is a config change)."""
+
+    vocab: int = 64
+    seq: int = 32
+    d_model: int = 64
+    heads: int = 2
+    layers: int = 2
+    d_ff: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.heads == 0
+        return self.d_model // self.heads
+
+    def shapes(self):
+        """Ordered (name, shape) parameter list (flat layout contract)."""
+        s = [("embed", (self.vocab, self.d_model)), ("pos", (self.seq, self.d_model))]
+        for l in range(self.layers):
+            s += [
+                (f"l{l}.ln1_g", (self.d_model,)),
+                (f"l{l}.ln1_b", (self.d_model,)),
+                (f"l{l}.wq", (self.d_model, self.d_model)),
+                (f"l{l}.wk", (self.d_model, self.d_model)),
+                (f"l{l}.wv", (self.d_model, self.d_model)),
+                (f"l{l}.wo", (self.d_model, self.d_model)),
+                (f"l{l}.ln2_g", (self.d_model,)),
+                (f"l{l}.ln2_b", (self.d_model,)),
+                (f"l{l}.w1", (self.d_ff, self.d_model)),
+                (f"l{l}.b1", (self.d_ff,)),
+                (f"l{l}.w2", (self.d_model, self.d_ff)),
+                (f"l{l}.b2", (self.d_model,)),
+            ]
+        s += [("lnf_g", (self.d_model,)), ("lnf_b", (self.d_model,))]
+        return s
+
+    @property
+    def dim(self) -> int:
+        return sum(int(jnp.prod(jnp.array(shape))) for _, shape in self.shapes())
+
+    def unflatten(self, flat):
+        params = {}
+        off = 0
+        for name, shape in self.shapes():
+            n = 1
+            for v in shape:
+                n *= v
+            params[name] = flat[off : off + n].reshape(shape)
+            off += n
+        return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def transformer_logits(spec: TransformerSpec, flat_params, tokens):
+    """tokens: int32[batch, seq] -> logits[batch, seq, vocab] (tied embed)."""
+    p = spec.unflatten(flat_params)
+    h = p["embed"][tokens] + p["pos"][None, :, :]
+    mask = jnp.tril(jnp.ones((spec.seq, spec.seq), dtype=bool))
+    for l in range(spec.layers):
+        x = _layernorm(h, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"])
+        b, t, d = x.shape
+        def split(w):
+            y = x @ w.T
+            return y.reshape(b, t, spec.heads, spec.head_dim).transpose(0, 2, 1, 3)
+        q, k, v = split(p[f"l{l}.wq"]), split(p[f"l{l}.wk"]), split(p[f"l{l}.wv"])
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(spec.head_dim)
+        att = jnp.where(mask[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+        h = h + y @ p[f"l{l}.wo"].T
+        x = _layernorm(h, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+        ff = jax.nn.relu(x @ p[f"l{l}.w1"].T + p[f"l{l}.b1"]) @ p[f"l{l}.w2"].T + p[
+            f"l{l}.b2"
+        ]
+        h = h + ff
+    h = _layernorm(h, p["lnf_g"], p["lnf_b"])
+    return h @ p["embed"].T  # weight tying
+
+
+def transformer_loss(spec: TransformerSpec, flat_params, tokens, targets):
+    logits = transformer_logits(spec, flat_params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def transformer_grad(spec: TransformerSpec):
+    """(flat_params, tokens, targets) -> (loss, flat_grad)."""
+
+    def fn(flat_params, tokens, targets):
+        loss, grad = jax.value_and_grad(
+            lambda p: transformer_loss(spec, p, tokens, targets)
+        )(flat_params)
+        return loss, grad
+
+    return fn
+
+
+def transformer_grad_compress(spec: TransformerSpec, budget: float):
+    """Worker step with fused sparsign, as in `mlp_grad_compress`."""
+
+    def fn(flat_params, tokens, targets, key):
+        loss, grad = jax.value_and_grad(
+            lambda p: transformer_loss(spec, p, tokens, targets)
+        )(flat_params)
+        u = jax.random.uniform(key, grad.shape, dtype=grad.dtype)
+        codes = sparsign(grad, u, budget)
+        return loss, codes
+
+    return fn
+
+
+def transformer_init(spec: TransformerSpec, key) -> jnp.ndarray:
+    """He/Xavier-style init, returned flat (matches `shapes()` order)."""
+    parts = []
+    for name, shape in spec.shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            parts.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        elif name.endswith(("_b", ".b1", ".b2")):
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = shape[-1]
+            std = (1.0 / fan_in) ** 0.5
+            parts.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1)
+            )
+    return jnp.concatenate(parts)
+
+
+# -------------------------------------------------------------- rosenbrock
+def rosenbrock_value(x):
+    """Standard Rosenbrock (see rust `model::rosenbrock` for the eq. (10)
+    typo note)."""
+    a = x[1:] - x[:-1] ** 2
+    b = 1.0 - x[:-1]
+    return jnp.sum(100.0 * a * a + b * b)
+
+
+@functools.partial(jax.jit)
+def rosenbrock_grad(x):
+    """x: f32[n] -> (value, grad)."""
+    return jax.value_and_grad(rosenbrock_value)(x)

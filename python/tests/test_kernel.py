@@ -1,0 +1,184 @@
+"""L1 correctness: the Pallas sparsign kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer — hypothesis
+sweeps shapes, dtypes and budgets; statistical tests pin the Definition 1
+semantics (keep-probability ∝ magnitude, unbiasedness below clipping).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    expected_nnz_ref,
+    majority_vote_ref,
+    scaled_sign_ref,
+    sparsign_ref,
+)
+from compile.kernels.sparsign import (
+    BLOCK_ROWS,
+    LANES,
+    majority_vote,
+    sparsign,
+    sparsign_vmem_report,
+)
+
+
+def _gu(shape, seed, scale=1.0, dtype=jnp.float32):
+    kg, ku = jax.random.split(jax.random.PRNGKey(seed))
+    g = (jax.random.normal(kg, shape) * scale).astype(dtype)
+    u = jax.random.uniform(ku, shape, dtype=dtype)
+    return g, u
+
+
+# ------------------------------------------------------ kernel == oracle
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    budget=st.floats(min_value=0.0, max_value=20.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_1d(n, budget, seed):
+    g, u = _gu((n,), seed)
+    got = sparsign(g, u, budget)
+    want = sparsign_ref(g, u, budget)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=70),
+    cols=st.integers(min_value=1, max_value=200),
+    budget=st.floats(min_value=0.01, max_value=5.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_2d(rows, cols, budget, seed):
+    g, u = _gu((rows, cols), seed)
+    got = sparsign(g, u, budget)
+    want = sparsign_ref(g, u, budget)
+    assert got.shape == g.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    g, u = _gu((333,), 7, dtype=dtype)
+    got = sparsign(g, u, 0.7)
+    want = sparsign_ref(g, u, 0.7)
+    assert got.dtype == dtype
+    np.testing.assert_array_equal(
+        np.asarray(got, dtype=np.float32), np.asarray(want, dtype=np.float32)
+    )
+
+
+def test_exact_block_boundary_shapes():
+    # Exactly one block, one block ± 1, many blocks.
+    block = BLOCK_ROWS * LANES
+    for n in [block - 1, block, block + 1, 3 * block]:
+        g, u = _gu((n,), n)
+        np.testing.assert_array_equal(
+            np.asarray(sparsign(g, u, 0.3)), np.asarray(sparsign_ref(g, u, 0.3))
+        )
+
+
+# ---------------------------------------------------- Definition 1 semantics
+def test_output_is_ternary_and_sign_consistent():
+    g, u = _gu((4096,), 1, scale=3.0)
+    out = np.asarray(sparsign(g, u, 0.5))
+    assert set(np.unique(out)).issubset({-1.0, 0.0, 1.0})
+    gnp = np.asarray(g)
+    nz = out != 0
+    assert np.all(np.sign(gnp[nz]) == out[nz])
+
+
+def test_zero_budget_and_zero_gradient():
+    g, u = _gu((512,), 2)
+    assert np.all(np.asarray(sparsign(g, u, 0.0)) == 0)
+    z = jnp.zeros((512,))
+    assert np.all(np.asarray(sparsign(z, u, 100.0)) == 0)
+
+
+def test_clipping_regime_deterministic():
+    # B·|g| ≥ 1 everywhere ⇒ output = sign(g) exactly (Remark 7).
+    g = jnp.array([2.0, -3.0, 1.5, -1.0])
+    u = jnp.array([0.999, 0.999, 0.999, 0.999])
+    out = np.asarray(sparsign(g, u, 1.0))
+    np.testing.assert_array_equal(out, [1.0, -1.0, 1.0, -1.0])
+
+
+def test_expected_nnz_matches_definition():
+    g, _ = _gu((2048,), 3, scale=0.5)
+    budget = 0.8
+    trials = 300
+    total = 0
+    for s in range(trials):
+        u = jax.random.uniform(jax.random.PRNGKey(1000 + s), g.shape)
+        total += int(np.count_nonzero(np.asarray(sparsign(g, u, budget))))
+    got = total / trials
+    want = float(expected_nnz_ref(g, budget))
+    assert abs(got - want) < 0.03 * want, (got, want)
+
+
+def test_unbiased_below_clipping():
+    # E[Q(g)] = B·g for B·|g| ≤ 1.
+    g = jnp.array([0.5, -0.8, 0.1, -0.3])
+    budget = 0.9
+    trials = 20_000
+    keys = jax.random.split(jax.random.PRNGKey(5), trials)
+    u = jax.vmap(lambda k: jax.random.uniform(k, g.shape))(keys)
+    outs = jax.vmap(lambda uu: sparsign_ref(g, uu, budget))(u)
+    mean = np.asarray(jnp.mean(outs, axis=0))
+    np.testing.assert_allclose(mean, budget * np.asarray(g), atol=0.02)
+
+
+def test_invalid_inputs_raise():
+    g, u = _gu((8,), 4)
+    with pytest.raises(ValueError):
+        sparsign(g, u[:4], 1.0)
+    with pytest.raises(ValueError):
+        sparsign(g, u, -1.0)
+
+
+# ------------------------------------------------------------ majority vote
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=33),
+    d=st.integers(min_value=1, max_value=700),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_majority_vote_matches_ref(m, d, seed):
+    votes = jax.random.randint(jax.random.PRNGKey(seed), (m, d), -1, 2).astype(
+        jnp.float32
+    )
+    got = majority_vote(votes)
+    want = majority_vote_ref(votes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_majority_vote_ties_are_zero():
+    votes = jnp.array([[1.0, -1.0, 0.0], [-1.0, 1.0, 0.0]])
+    np.testing.assert_array_equal(np.asarray(majority_vote(votes)), [0.0, 0.0, 0.0])
+
+
+def test_majority_vote_rejects_bad_rank():
+    with pytest.raises(ValueError):
+        majority_vote(jnp.ones((3,)))
+
+
+# ----------------------------------------------------------- scaled sign ref
+def test_scaled_sign_ref_alpha_approximate():
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (256,)))
+    c = np.asarray(scaled_sign_ref(jnp.array(x)))
+    err = float(np.sum((c - x) ** 2))
+    l1, l2sq = float(np.sum(np.abs(x))), float(np.sum(x * x))
+    alpha = l1 * l1 / (x.size * l2sq)
+    assert err <= (1.0 - alpha) * l2sq + 1e-4
+
+
+# ------------------------------------------------------------- VMEM budget
+def test_vmem_report_within_budget():
+    r = sparsign_vmem_report(1.0)
+    assert r["total_vmem_bytes"] < r["vmem_budget_bytes"]
+    assert 0.0 < r["utilization"] < 0.25

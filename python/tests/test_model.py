@@ -1,0 +1,150 @@
+"""L2 correctness: model graphs, the flat-parameter layout contract with
+the rust side, and the fused grad+compress path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+# --------------------------------------------------------------- MLP layout
+def test_mlp_dim_matches_rust_layout():
+    spec = M.PAPER_FMNIST
+    assert spec.dim == 784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10
+
+
+def test_unflatten_roundtrip_layout():
+    spec = M.MlpSpec((3, 4, 2))
+    flat = jnp.arange(spec.dim, dtype=jnp.float32)
+    layers = spec.unflatten(flat)
+    # First weight is (4, 3) row-major from offset 0.
+    np.testing.assert_array_equal(
+        np.asarray(layers[0][0]), np.arange(12, dtype=np.float32).reshape(4, 3)
+    )
+    # First bias follows.
+    np.testing.assert_array_equal(np.asarray(layers[0][1]), [12, 13, 14, 15])
+    # Second layer weight (2, 4) then bias (2,).
+    assert layers[1][0].shape == (2, 4)
+    assert layers[1][1].shape == (2,)
+
+
+def test_mlp_loss_and_grad_shapes():
+    spec = M.MlpSpec((6, 5, 3))
+    key = jax.random.PRNGKey(0)
+    p = jax.random.normal(key, (spec.dim,)) * 0.1
+    x = jax.random.normal(key, (4, 6))
+    y = jax.nn.one_hot(jnp.array([0, 1, 2, 1]), 3)
+    loss, grad = M.mlp_grad(spec)(p, x, y)
+    assert loss.shape == ()
+    assert grad.shape == (spec.dim,)
+    assert float(loss) > 0
+
+
+def test_mlp_grad_is_descent_direction():
+    spec = M.MlpSpec((6, 8, 3))
+    key = jax.random.PRNGKey(1)
+    p = jax.random.normal(key, (spec.dim,)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 6))
+    y = jax.nn.one_hot(jax.random.randint(jax.random.PRNGKey(3), (16,), 0, 3), 3)
+    fn = M.mlp_grad(spec)
+    l0, g = fn(p, x, y)
+    l1, _ = fn(p - 0.1 * g, x, y)
+    assert float(l1) < float(l0)
+
+
+def test_mlp_grad_compress_fuses_kernel():
+    spec = M.MlpSpec((6, 5, 3))
+    key = jax.random.PRNGKey(4)
+    p = jax.random.normal(key, (spec.dim,)) * 0.1
+    x = jax.random.normal(key, (4, 6))
+    y = jax.nn.one_hot(jnp.array([0, 1, 2, 1]), 3)
+    loss, codes = M.mlp_grad_compress(spec, 5.0)(p, x, y, jax.random.PRNGKey(7))
+    c = np.asarray(codes)
+    assert set(np.unique(c)).issubset({-1.0, 0.0, 1.0})
+    # Codes' signs agree with the raw gradient where non-zero.
+    _, grad = M.mlp_grad(spec)(p, x, y)
+    g = np.asarray(grad)
+    nz = c != 0
+    assert np.all(np.sign(g[nz]) == c[nz])
+    # Same key ⇒ same codes (stateless RNG contract with the rust side).
+    _, codes2 = M.mlp_grad_compress(spec, 5.0)(p, x, y, jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(c, np.asarray(codes2))
+
+
+# ------------------------------------------------------------- transformer
+def test_transformer_dim_and_unflatten():
+    spec = M.TransformerSpec()
+    flat = jnp.zeros((spec.dim,), jnp.float32)
+    params = spec.unflatten(flat)
+    assert params["embed"].shape == (spec.vocab, spec.d_model)
+    assert params["l0.w1"].shape == (spec.d_ff, spec.d_model)
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert total == spec.dim
+
+
+def test_transformer_causality():
+    # Changing a future token must not change past logits.
+    spec = M.TransformerSpec(layers=1)
+    p = M.transformer_init(spec, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (1, spec.seq), 0, spec.vocab)
+    base = M.transformer_logits(spec, p, tok)
+    tok2 = tok.at[0, -1].set((tok[0, -1] + 1) % spec.vocab)
+    pert = M.transformer_logits(spec, p, tok2)
+    np.testing.assert_allclose(
+        np.asarray(base[0, : spec.seq - 1]),
+        np.asarray(pert[0, : spec.seq - 1]),
+        atol=1e-5,
+    )
+    assert not np.allclose(np.asarray(base[0, -1]), np.asarray(pert[0, -1]))
+
+
+def test_transformer_loss_decreases_under_sgd():
+    spec = M.TransformerSpec(layers=1, seq=16)
+    p = M.transformer_init(spec, jax.random.PRNGKey(2))
+    # Learnable toy sequence: next token = (token + 1) % vocab.
+    tok = (jnp.arange(16)[None, :] + jnp.arange(4)[:, None]) % spec.vocab
+    tgt = (tok + 1) % spec.vocab
+    fn = jax.jit(M.transformer_grad(spec))
+    l0, _ = fn(p, tok, tgt)
+    for _ in range(30):
+        _, g = fn(p, tok, tgt)
+        p = p - 0.5 * g
+    l1, _ = fn(p, tok, tgt)
+    assert float(l1) < 0.7 * float(l0), (float(l0), float(l1))
+
+
+def test_transformer_grad_compress_is_ternary():
+    spec = M.TransformerSpec(layers=1, seq=8)
+    p = M.transformer_init(spec, jax.random.PRNGKey(3))
+    tok = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, spec.vocab)
+    loss, codes = M.transformer_grad_compress(spec, 10.0)(
+        p, tok, tok, jax.random.PRNGKey(5)
+    )
+    c = np.asarray(codes)
+    assert c.shape == (spec.dim,)
+    assert set(np.unique(c)).issubset({-1.0, 0.0, 1.0})
+    assert float(loss) > 0
+
+
+# -------------------------------------------------------------- rosenbrock
+def test_rosenbrock_matches_closed_form():
+    x = jnp.array([0.5, -1.0, 2.0, 0.1, 1.0, -0.3, 0.0, 0.7, -1.2, 1.0])
+    val, grad = M.rosenbrock_grad(x)
+    xn = np.asarray(x, dtype=np.float64)
+    want = np.sum(100.0 * (xn[1:] - xn[:-1] ** 2) ** 2 + (1.0 - xn[:-1]) ** 2)
+    assert abs(float(val) - want) / want < 1e-5
+    # Closed-form gradient.
+    g = np.zeros_like(xn)
+    t = xn[1:] - xn[:-1] ** 2
+    g[:-1] += -400.0 * xn[:-1] * t - 2.0 * (1.0 - xn[:-1])
+    g[1:] += 200.0 * t
+    np.testing.assert_allclose(np.asarray(grad), g, rtol=1e-4, atol=1e-3)
+
+
+def test_rosenbrock_minimum():
+    ones = jnp.ones((10,))
+    val, grad = M.rosenbrock_grad(ones)
+    assert float(val) < 1e-10
+    np.testing.assert_allclose(np.asarray(grad), 0.0, atol=1e-5)

@@ -1,0 +1,14 @@
+//! Ablation benches for the design choices DESIGN.md §5 calls out:
+//! budget B, server error feedback, position coding, and the
+//! stochastic-sign family. See `experiments::ablations` for details.
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    let rounds = if common::paper_scale() { 300 } else { 100 };
+    let out = common::timed("ablation suite", || {
+        sparsignd::experiments::ablations::render_all(rounds)
+    });
+    println!("{out}");
+}

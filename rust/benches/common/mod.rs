@@ -1,0 +1,46 @@
+//! Shared helpers for the paper-reproduction benches (`cargo bench` runs
+//! each bench's `main`; no criterion in the offline registry, so timing
+//! and reporting are done here).
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// True when `SPARSIGND_PAPER_SCALE=1` — run the paper's full
+/// configuration instead of the sandbox-sized fast preset.
+pub fn paper_scale() -> bool {
+    std::env::var("SPARSIGND_PAPER_SCALE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Run `f`, print elapsed wall-clock, pass the result through.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("[bench] {label}: {:.2}s", t0.elapsed().as_secs_f64());
+    out
+}
+
+/// Print the paper's reported numbers for side-by-side comparison.
+pub fn paper_reference(title: &str, rows: &[(&str, &str)]) {
+    println!("\n### Paper reference — {title}");
+    for (k, v) in rows {
+        println!("  {k:<58} {v}");
+    }
+    println!();
+}
+
+/// Simple ns/op measurement: run `f` `iters` times over `elems` elements
+/// and report throughput.
+pub fn throughput(label: &str, elems: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    // Warmup.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let per_elem_ns = dt / (iters as f64 * elems as f64) * 1e9;
+    let meps = (iters as f64 * elems as f64) / dt / 1e6;
+    println!("  {label:<44} {per_elem_ns:>8.2} ns/elem   {meps:>9.1} M elem/s");
+    meps
+}

@@ -1,0 +1,177 @@
+//! §Perf hot-path microbenchmarks — the numbers recorded in
+//! EXPERIMENTS.md §Perf come from this bench.
+//!
+//! Hot paths (DESIGN.md §8):
+//!   1. compressors (per-coordinate work, every worker every round)
+//!   2. majority-vote / mean aggregation over M ternary messages
+//!   3. Golomb encode/decode of sparse supports
+//!   4. the blocked GEMM behind the pure-rust models
+//!   5. PJRT end-to-end worker step (when artifacts are present)
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sparsignd::compressors::{
+    Compressor, CompressedGrad, NoisySignCompressor, QsgdCompressor, NormKind,
+    ScaledSignCompressor, SignCompressor, SparsignCompressor, TernGradCompressor,
+};
+use sparsignd::coding::golomb;
+use sparsignd::coordinator::AggregationRule;
+use sparsignd::util::linalg::matmul;
+use sparsignd::util::rng::Pcg64;
+
+fn bench_compressors(d: usize) {
+    println!("\n-- compressors (d = {d}) --");
+    let mut rng = Pcg64::seed_from(1);
+    let mut g = vec![0.0f32; d];
+    rng.fill_normal(&mut g, 0.0, 0.1);
+    let iters = 50;
+
+    let run = |label: &str, comp: &mut dyn Compressor| {
+        let mut r = Pcg64::seed_from(2);
+        common::throughput(label, d, iters, || {
+            let msg = comp.compress(&g, &mut r);
+            std::hint::black_box(msg.bits());
+        });
+    };
+    run("sign", &mut SignCompressor);
+    run("scaled-sign", &mut ScaledSignCompressor);
+    run("noisy-sign(0.01)", &mut NoisySignCompressor { noise_std: 0.01 });
+    run("sparsign(B=1)", &mut SparsignCompressor { budget: 1.0 });
+    run("sparsign(B=0.1)", &mut SparsignCompressor { budget: 0.1 });
+    run("terngrad", &mut TernGradCompressor);
+    run("qsgd(s=1,l2)", &mut QsgdCompressor { levels: 1, norm: NormKind::L2 });
+    run("qsgd(s=255,l2)", &mut QsgdCompressor { levels: 255, norm: NormKind::L2 });
+}
+
+fn bench_aggregation(d: usize, m: usize) {
+    println!("\n-- aggregation over M = {m} ternary messages (d = {d}) --");
+    let mut rng = Pcg64::seed_from(3);
+    let msgs: Vec<CompressedGrad> = (0..m)
+        .map(|_| {
+            let q: Vec<i8> = (0..d)
+                .map(|_| match rng.index(4) {
+                    0 => 1i8,
+                    1 => -1i8,
+                    _ => 0i8,
+                })
+                .collect();
+            CompressedGrad::Ternary { q, scale: 1.0, bits: 0.0 }
+        })
+        .collect();
+    for rule in [AggregationRule::MajorityVote, AggregationRule::ScaledSign, AggregationRule::Mean]
+    {
+        common::throughput(&format!("{rule:?}"), d * m, 20, || {
+            std::hint::black_box(rule.aggregate(&msgs, None));
+        });
+    }
+}
+
+fn bench_golomb(d: usize) {
+    println!("\n-- Golomb position coding (d = {d}) --");
+    let mut rng = Pcg64::seed_from(4);
+    for p in [0.01, 0.1] {
+        let idx: Vec<usize> = (0..d).filter(|_| rng.bernoulli(p)).collect();
+        let label = format!("encode p={p} (nnz={})", idx.len());
+        common::throughput(&label, idx.len().max(1), 200, || {
+            std::hint::black_box(golomb::encode_indices(&idx, d));
+        });
+        let (bytes, _) = golomb::encode_indices(&idx, d);
+        let label = format!("decode p={p}");
+        common::throughput(&label, idx.len().max(1), 200, || {
+            std::hint::black_box(golomb::decode_indices(&bytes));
+        });
+    }
+}
+
+fn bench_gemm() {
+    println!("\n-- blocked GEMM (pure-rust model hot path) --");
+    let mut rng = Pcg64::seed_from(5);
+    for (m, k, n) in [(64, 784, 256), (128, 256, 128), (256, 256, 256)] {
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        let mut c = vec![0.0f32; m * n];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let iters = (2e9 / flops).max(3.0) as usize;
+        // warmup
+        matmul(&mut c, &a, &b, m, k, n);
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            matmul(&mut c, &a, &b, m, k, n);
+            std::hint::black_box(&c);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let gflops = flops * iters as f64 / dt / 1e9;
+        println!("  gemm {m}x{k}x{n}: {gflops:>6.2} GFLOP/s ({iters} iters)");
+    }
+}
+
+fn bench_pjrt() {
+    println!("\n-- PJRT worker step (AOT mlp_fmnist_grad, batch 64) --");
+    let Ok(rt) = sparsignd::runtime::Runtime::cpu("artifacts") else {
+        println!("  artifacts/ missing — run `make artifacts` (skipped)");
+        return;
+    };
+    let Ok(spec) = rt.registry().spec("mlp_fmnist_grad") else {
+        println!("  mlp_fmnist_grad unmanifested (skipped)");
+        return;
+    };
+    let dim = spec.inputs[0].dims[0] as usize;
+    let batch = spec.inputs[1].dims[0] as usize;
+    let feat = spec.inputs[1].dims[1] as usize;
+    let classes = spec.inputs[2].dims[1] as usize;
+    let mut rng = Pcg64::seed_from(6);
+    let mut params = vec![0.0f32; dim];
+    rng.fill_normal(&mut params, 0.0, 0.05);
+    let mut x = vec![0.0f32; batch * feat];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let mut y = vec![0.0f32; batch * classes];
+    for i in 0..batch {
+        y[i * classes + rng.index(classes)] = 1.0;
+    }
+    let inputs = [
+        sparsignd::runtime::literal_f32(&params, &[dim as i64]).unwrap(),
+        sparsignd::runtime::literal_f32(&x, &[batch as i64, feat as i64]).unwrap(),
+        sparsignd::runtime::literal_f32(&y, &[batch as i64, classes as i64]).unwrap(),
+    ];
+    // Warmup (includes compile).
+    rt.execute("mlp_fmnist_grad", &inputs).unwrap();
+    let iters = 30;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(rt.execute("mlp_fmnist_grad", &inputs).unwrap());
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
+    let flops = 6.0 * batch as f64 * dim as f64; // fwd+bwd ≈ 3 GEMM passes
+    println!(
+        "  grad step: {per:>7.2} ms  (~{:.2} GFLOP/s effective)",
+        flops / (per / 1e3) / 1e9
+    );
+    // Fused grad+sparsign variant (L1 kernel in the same module).
+    if rt.registry().spec("mlp_fmnist_grad_sparsign_b1").is_ok() {
+        let mut fused_inputs = inputs.to_vec();
+        fused_inputs.push(sparsignd::runtime::literal_u32(&[1, 2], &[2]).unwrap());
+        rt.execute("mlp_fmnist_grad_sparsign_b1", &fused_inputs).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(rt.execute("mlp_fmnist_grad_sparsign_b1", &fused_inputs).unwrap());
+        }
+        let fused = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
+        println!(
+            "  grad+sparsign (fused): {fused:>7.2} ms  (overhead {:+.1}% vs grad alone)",
+            (fused / per - 1.0) * 100.0
+        );
+    }
+}
+
+fn main() {
+    println!("## §Perf hot paths (single core)");
+    let d = 1 << 20; // ~1M coords ≈ VGG-9-scale gradient
+    bench_compressors(d);
+    bench_aggregation(1 << 16, 100);
+    bench_golomb(1 << 20);
+    bench_gemm();
+    bench_pjrt();
+}

@@ -1,0 +1,58 @@
+//! Regenerates Table 2: CIFAR-10(-like), α = 0.5, 20% worker
+//! participation — the partial-participation stress test where worker-
+//! state-free compression matters.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sparsignd::experiments::{run_classification, table2_config};
+
+fn main() {
+    let cfg = table2_config(common::paper_scale());
+    let report = common::timed("table2 sweep", || run_classification(&cfg));
+    println!("{}", report.table());
+    common::paper_reference(
+        "Table 2 (CIFAR-10, α = 0.5, 20% participation; rounds/bits to 55%/74%)",
+        &[
+            ("signSGD", "55.35±0.71%   3000/N.A.    1.15e10/N.A."),
+            ("Scaled signSGD", "46.86±2.72%   N.A./N.A."),
+            ("Noisy signSGD", "74.41±0.61%   625/2600     2.31e9/9.89e9"),
+            ("1-bit L2 norm QSGD", "54.58±0.35%   N.A./N.A."),
+            ("1-bit Linf norm QSGD", "74.52±0.58%   750/2950     1.64e8/1.05e9"),
+            ("TernGrad", "74.92±0.42%   800/2800     9.61e7/5.38e8"),
+            ("sparsignSGD (B=1)", "62.34±0.58%   1550/N.A.    1.44e8/N.A."),
+            ("EF-sparsignSGD (Bl=10,Bg=1,τ=1)", "78.51±0.51%   300/1025     7.42e7/4.24e8"),
+        ],
+    );
+    // Shape checks that are scale-stable (the fast task saturates around
+    // the second target, so "who collapses" is the robust signal — the
+    // deterministic-sign non-convergence itself is demonstrated by the
+    // adversarial Fig. 1/heterogeneity-sweep workloads):
+    // 1. EF-sparsign reaches BOTH targets (the paper's headline row).
+    let ef = &report.summaries[7];
+    assert!(
+        ef.rounds_to_target.iter().all(|r| r.is_some()),
+        "EF-sparsign must reach all targets"
+    );
+    // 2. 1-bit L2 QSGD fails to reach the final target under partial
+    //    participation (exactly the paper's N.A./N.A. row: the L2 norm of
+    //    a high-dim gradient crushes the keep-probabilities).
+    let qsgd_l2 = &report.summaries[3];
+    assert!(
+        qsgd_l2.rounds_to_target.last().unwrap().is_none(),
+        "1-bit L2 QSGD should miss the final target (paper: N.A.)"
+    );
+    // 3. EF-sparsign lands in the top half by final accuracy.
+    let mut accs: Vec<f64> = report.summaries.iter().map(|s| s.final_acc_mean).collect();
+    accs.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    assert!(
+        ef.final_acc_mean >= accs[3] - 1e-9,
+        "EF-sparsign {:.3} should be top-half (4th best = {:.3})",
+        ef.final_acc_mean,
+        accs[3]
+    );
+    println!(
+        "shape check PASSED: EF-sparsign reaches all targets, top-half accuracy; \
+         1-bit L2 QSGD fails (paper: N.A./N.A.)"
+    );
+}

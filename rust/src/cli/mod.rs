@@ -1,0 +1,128 @@
+//! Minimal dependency-free CLI argument parser (the launcher's substrate;
+//! no `clap` in the offline registry).
+//!
+//! Grammar: `binary <subcommand> [positional…] [--flag value | --switch]`.
+//! A `--flag` followed by another `--…` token (or end of argv) is treated
+//! as a boolean switch.
+
+use std::collections::HashMap;
+
+/// Parsed argument bag.
+#[derive(Clone, Debug, Default)]
+pub struct ArgMap {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl ArgMap {
+    /// Parse from an argv iterator (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = ArgMap::default();
+        let argv: Vec<String> = args.into_iter().collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let has_value = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if has_value {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.subcommand.is_none() && out.positional.is_empty() {
+                    out.subcommand = Some(a.clone());
+                } else {
+                    out.positional.push(a.clone());
+                }
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Parse the real process argv.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Typed flag lookup with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Required typed flag.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        let v = self
+            .flags
+            .get(name)
+            .ok_or_else(|| format!("missing required flag --{name}"))?;
+        v.parse()
+            .map_err(|_| format!("flag --{name}: invalid value '{v}'"))
+    }
+
+    /// Raw string flag.
+    pub fn get_str(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Boolean switch presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    /// All `--key value` pairs (for config override forwarding).
+    pub fn flag_pairs(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.flags.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> ArgMap {
+        ArgMap::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --rounds 100 --fast --alpha 0.1 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get::<usize>("rounds", 0), 100);
+        assert_eq!(a.get::<f64>("alpha", 1.0), 0.1);
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("bench");
+        assert_eq!(a.get::<usize>("rounds", 7), 7);
+        assert!(a.require::<usize>("rounds").is_err());
+        let b = parse("bench --rounds nope");
+        assert!(b.require::<usize>("rounds").is_err());
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("run --verbose --lr 0.5");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get::<f64>("lr", 0.0), 0.5);
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+        assert!(a.positional.is_empty());
+    }
+}

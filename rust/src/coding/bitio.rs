@@ -1,0 +1,209 @@
+//! MSB-first bit-level writer/reader over a byte buffer.
+
+/// Append-only bit writer, MSB-first within each byte.
+///
+/// §Perf: bits accumulate in a 64-bit register and flush to the byte
+/// buffer a byte at a time — `push_bits` is O(bytes), not O(bits), which
+/// is the Golomb encoder's hot path (see EXPERIMENTS.md §Perf).
+#[derive(Default, Clone, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Pending bits, right-aligned (the low `nacc` bits are valid).
+    acc: u64,
+    nacc: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total bits written so far.
+    pub fn len_bits(&self) -> usize {
+        self.buf.len() * 8 + self.nacc as usize
+    }
+
+    #[inline]
+    fn flush_full_bytes(&mut self) {
+        while self.nacc >= 8 {
+            self.nacc -= 8;
+            self.buf.push((self.acc >> self.nacc) as u8);
+        }
+    }
+
+    /// Push a single bit.
+    #[inline]
+    pub fn push_bit(&mut self, bit: bool) {
+        self.acc = (self.acc << 1) | bit as u64;
+        self.nacc += 1;
+        if self.nacc >= 8 {
+            self.flush_full_bytes();
+        }
+    }
+
+    /// Push the low `n` bits of `value`, MSB-first (n ≤ 64).
+    #[inline]
+    pub fn push_bits(&mut self, value: u64, n: u8) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        // Keep headroom: with nacc ≤ 7 after a flush, chunks of ≤ 56 bits
+        // always fit the accumulator; wider pushes split into two halves.
+        if n > 56 {
+            self.push_bits_small(value >> 32, n - 32);
+            self.push_bits_small(value & 0xFFFF_FFFF, 32);
+        } else {
+            self.push_bits_small(value, n);
+        }
+    }
+
+    #[inline]
+    fn push_bits_small(&mut self, value: u64, n: u8) {
+        debug_assert!(n <= 56);
+        let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+        self.acc = (self.acc << n) | (value & mask);
+        self.nacc += n;
+        self.flush_full_bytes();
+    }
+
+    /// Push `n` one-bits followed by a zero (unary coding of n).
+    pub fn push_unary(&mut self, n: u64) {
+        let mut rem = n;
+        while rem >= 32 {
+            self.push_bits(0xFFFF_FFFF, 32);
+            rem -= 32;
+        }
+        // `rem` ones + the terminating zero in one call.
+        self.push_bits(((1u64 << rem) - 1) << 1, rem as u8 + 1);
+    }
+
+    /// Finish and return the byte buffer (final byte zero-padded).
+    pub fn into_bytes(mut self) -> Vec<u8> {
+        if self.nacc > 0 {
+            let pad = 8 - self.nacc;
+            self.acc <<= pad;
+            self.nacc = 8;
+            self.flush_full_bytes();
+        }
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Bit reader matching [`BitWriter`]'s layout.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bits remaining (counting zero padding in the final byte).
+    pub fn remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
+    /// Read one bit; `None` at end of buffer.
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        if self.pos >= self.buf.len() * 8 {
+            return None;
+        }
+        let byte = self.buf[self.pos / 8];
+        let bit = (byte >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Read `n` bits MSB-first into a u64.
+    pub fn read_bits(&mut self, n: u8) -> Option<u64> {
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.read_bit()? as u64;
+        }
+        Some(v)
+    }
+
+    /// Read a unary-coded count (ones terminated by a zero).
+    pub fn read_unary(&mut self) -> Option<u64> {
+        let mut n = 0;
+        loop {
+            match self.read_bit()? {
+                true => n += 1,
+                false => return Some(n),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_bits() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b1011, 4);
+        w.push_bits(0xdead_beef, 32);
+        w.push_unary(5);
+        assert_eq!(w.len_bits(), 4 + 32 + 6);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(4), Some(0b1011));
+        assert_eq!(r.read_bits(32), Some(0xdead_beef));
+        assert_eq!(r.read_unary(), Some(5));
+    }
+
+    #[test]
+    fn roundtrip_random_streams() {
+        let mut rng = Pcg64::seed_from(77);
+        for _ in 0..20 {
+            let items: Vec<(u64, u8)> = (0..100)
+                .map(|_| {
+                    let n = 1 + rng.index(32) as u8;
+                    let v = rng.next_u64() & ((1u64 << n) - 1);
+                    (v, n)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, n) in &items {
+                w.push_bits(v, n);
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for &(v, n) in &items {
+                assert_eq!(r.read_bits(n), Some(v));
+            }
+        }
+    }
+
+    #[test]
+    fn read_past_end() {
+        let mut w = BitWriter::new();
+        w.push_bit(true);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bit(), Some(true));
+        // 7 padding bits then None.
+        for _ in 0..7 {
+            assert_eq!(r.read_bit(), Some(false));
+        }
+        assert_eq!(r.read_bit(), None);
+        assert_eq!(r.read_bits(3), None);
+    }
+
+    #[test]
+    fn empty_writer() {
+        let w = BitWriter::new();
+        assert_eq!(w.len_bits(), 0);
+        assert!(w.into_bytes().is_empty());
+    }
+}

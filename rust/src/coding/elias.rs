@@ -1,0 +1,125 @@
+//! Elias gamma / delta universal codes.
+//!
+//! Used for QSGD's level encoding: Alistarh et al. (2017, Thm 3.4) bound the
+//! QSGD message size via Elias-coded integer magnitudes; our FedCom
+//! baseline (8-bit QSGD) accounts bits with the same scheme.
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Elias-gamma encode `n ≥ 1`: ⌊log2 n⌋ zeros, then `n`'s binary digits.
+pub fn gamma_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1, "Elias gamma is defined for n >= 1");
+    let bits = 64 - n.leading_zeros() as u8; // position of MSB, 1-based
+    for _ in 0..bits - 1 {
+        w.push_bit(false);
+    }
+    w.push_bits(n, bits);
+}
+
+/// Decode an Elias-gamma value.
+pub fn gamma_decode(r: &mut BitReader) -> Option<u64> {
+    let mut zeros = 0u8;
+    loop {
+        match r.read_bit()? {
+            false => zeros += 1,
+            true => break,
+        }
+        if zeros > 63 {
+            return None;
+        }
+    }
+    let rest = if zeros > 0 { r.read_bits(zeros)? } else { 0 };
+    Some((1u64 << zeros) | rest)
+}
+
+/// Elias-delta encode `n ≥ 1`: gamma-code the bit length, then the digits
+/// of `n` below the MSB.
+pub fn delta_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1);
+    let bits = 64 - n.leading_zeros() as u8;
+    gamma_encode(w, bits as u64);
+    if bits > 1 {
+        w.push_bits(n & ((1u64 << (bits - 1)) - 1), bits - 1);
+    }
+}
+
+/// Decode an Elias-delta value.
+pub fn delta_decode(r: &mut BitReader) -> Option<u64> {
+    let bits = gamma_decode(r)? as u8;
+    if bits == 0 || bits > 64 {
+        return None;
+    }
+    let rest = if bits > 1 { r.read_bits(bits - 1)? } else { 0 };
+    Some(if bits == 64 {
+        (1u64 << 63) | rest
+    } else {
+        (1u64 << (bits - 1)) | rest
+    })
+}
+
+/// Bit length of the Elias-gamma code for `n`.
+pub fn gamma_len(n: u64) -> usize {
+    let bits = 64 - n.leading_zeros() as usize;
+    2 * bits - 1
+}
+
+/// Bit length of the Elias-delta code for `n`.
+pub fn delta_len(n: u64) -> usize {
+    let bits = 64 - n.leading_zeros() as usize;
+    gamma_len(bits as u64) + bits - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn gamma_roundtrip() {
+        let mut w = BitWriter::new();
+        let vals = [1u64, 2, 3, 4, 7, 8, 100, 1_000_000];
+        for &v in &vals {
+            gamma_encode(&mut w, v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(gamma_decode(&mut r), Some(v));
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip_random() {
+        let mut rng = Pcg64::seed_from(5);
+        let vals: Vec<u64> = (0..500).map(|_| 1 + rng.below(1 << 40)).collect();
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            delta_encode(&mut w, v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &v in &vals {
+            assert_eq!(delta_decode(&mut r), Some(v));
+        }
+    }
+
+    #[test]
+    fn lengths_match_streams() {
+        for &v in &[1u64, 2, 5, 31, 32, 1_000_003] {
+            let mut w = BitWriter::new();
+            gamma_encode(&mut w, v);
+            assert_eq!(w.len_bits(), gamma_len(v), "gamma {v}");
+            let mut w = BitWriter::new();
+            delta_encode(&mut w, v);
+            assert_eq!(w.len_bits(), delta_len(v), "delta {v}");
+        }
+    }
+
+    #[test]
+    fn known_codewords() {
+        // gamma(1) = "1", gamma(2) = "010", gamma(4) = "00100".
+        assert_eq!(gamma_len(1), 1);
+        assert_eq!(gamma_len(2), 3);
+        assert_eq!(gamma_len(4), 5);
+    }
+}

@@ -1,0 +1,21 @@
+//! Entropy coding of compressed gradients and the communication-cost
+//! models used by the paper's tables.
+//!
+//! The ternary compressors (sparsign, TernGrad, 1-bit QSGD) transmit a
+//! sparse set of ±1 coordinates. Following the paper (§6, eq. (12)) and
+//! Sattler et al. (2019a), the positions of the non-zero coordinates are
+//! Golomb-coded as index gaps and each non-zero costs one extra sign bit.
+//!
+//! This module provides both:
+//! * the *closed-form cost model* ([`cost`]) the tables use, and
+//! * *working encoders/decoders* ([`golomb`], [`elias`], [`bitio`]) whose
+//!   measured output validates the model in tests (the real encoder must
+//!   stay within a few percent of eq. (12) on Bernoulli-sparse inputs).
+
+pub mod bitio;
+pub mod cost;
+pub mod elias;
+pub mod golomb;
+
+pub use bitio::{BitReader, BitWriter};
+pub use cost::{golomb_bits_per_index, CostModel};

@@ -1,0 +1,159 @@
+//! Worker-side error feedback (EF-signSGD; Karimireddy et al. 2019, Zheng
+//! et al. 2019): compress `g + e`, then update the residual
+//! `e ← g + e − decode(Q(g + e))`.
+//!
+//! This is the mechanism the paper argues is *incompatible with worker
+//! sampling* — the residual lives on the worker across rounds, so a worker
+//! that skips rounds replays stale error. We implement it (a) as a baseline
+//! and (b) so the integration tests can demonstrate exactly that failure
+//! mode; the coordinator refuses to pair it with partial participation
+//! unless explicitly overridden.
+
+use super::{CompressedGrad, Compressor};
+use crate::coding::cost::CostModel;
+use crate::util::rng::Pcg64;
+
+/// Error-feedback wrapper around any inner compressor.
+pub struct WorkerEfCompressor {
+    inner: Box<dyn Compressor>,
+    /// Per-worker residual `e^{(t)}`.
+    residual: Vec<f32>,
+    /// Scratch buffer for `g + e` (avoids an allocation per round).
+    corrected: Vec<f32>,
+}
+
+impl WorkerEfCompressor {
+    pub fn new(inner: Box<dyn Compressor>, dim: usize) -> Self {
+        Self { inner, residual: vec![0.0; dim], corrected: vec![0.0; dim] }
+    }
+
+    /// Current residual (for tests / diagnostics).
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+}
+
+impl Compressor for WorkerEfCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        assert_eq!(
+            g.len(),
+            self.residual.len(),
+            "EF residual dim {} != gradient dim {}",
+            self.residual.len(),
+            g.len()
+        );
+        self.corrected.clear();
+        self.corrected.extend(g.iter().zip(&self.residual).map(|(a, b)| a + b));
+        let msg = self.inner.compress(&self.corrected, rng);
+        // e ← (g + e) − decoded(msg)
+        match &msg {
+            CompressedGrad::Ternary { q, scale, .. } => {
+                for ((e, &c), &qi) in
+                    self.residual.iter_mut().zip(&self.corrected).zip(q.iter())
+                {
+                    *e = c - scale * qi as f32;
+                }
+            }
+            CompressedGrad::Dense { v, .. } => {
+                for ((e, &c), &vi) in
+                    self.residual.iter_mut().zip(&self.corrected).zip(v.iter())
+                {
+                    *e = c - vi;
+                }
+            }
+        }
+        msg
+    }
+
+    fn name(&self) -> String {
+        format!("ef-{}", self.inner.name())
+    }
+
+    fn requires_worker_state(&self) -> bool {
+        true
+    }
+
+    fn cost_model(&self) -> CostModel {
+        self.inner.cost_model()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{ScaledSignCompressor, SignCompressor, TopKCompressor};
+
+    #[test]
+    fn residual_identity_holds() {
+        // After each step: e' = g + e − decode(msg), exactly.
+        let mut ef = WorkerEfCompressor::new(Box::new(ScaledSignCompressor), 4);
+        let mut rng = Pcg64::seed_from(1);
+        let g1 = vec![1.0, -2.0, 0.5, 0.0];
+        let m1 = ef.compress(&g1, &mut rng);
+        let d1 = m1.to_dense();
+        for i in 0..4 {
+            assert!((ef.residual()[i] - (g1[i] - d1[i])).abs() < 1e-6);
+        }
+        let g2 = vec![0.3, 0.3, -0.3, 1.0];
+        let e_before: Vec<f32> = ef.residual().to_vec();
+        let m2 = ef.compress(&g2, &mut rng);
+        let d2 = m2.to_dense();
+        for i in 0..4 {
+            let want = g2[i] + e_before[i] - d2[i];
+            assert!((ef.residual()[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ef_scaled_sign_residual_stays_bounded() {
+        // The contraction property of the α-approximate compressor keeps
+        // the residual norm bounded on a stationary gradient stream.
+        let dim = 128;
+        let mut ef = WorkerEfCompressor::new(Box::new(ScaledSignCompressor), dim);
+        let mut rng = Pcg64::seed_from(2);
+        let mut data_rng = Pcg64::seed_from(3);
+        let mut max_norm = 0.0f32;
+        for _ in 0..200 {
+            let mut g = vec![0.0; dim];
+            data_rng.fill_normal(&mut g, 0.0, 1.0);
+            ef.compress(&g, &mut rng);
+            let n = crate::util::l2_norm(ef.residual());
+            max_norm = max_norm.max(n);
+        }
+        // ‖e‖ should stay well below the cumulative gradient norm (~200·√d).
+        assert!(max_norm < 60.0, "residual blew up: {max_norm}");
+    }
+
+    #[test]
+    fn ef_topk_transmits_stale_mass_eventually() {
+        // A coordinate that is always small-but-nonzero accumulates in the
+        // residual until Top-1 selects it — the defining EF behaviour.
+        let mut ef = WorkerEfCompressor::new(Box::new(TopKCompressor { k: 1 }), 2);
+        let mut rng = Pcg64::seed_from(4);
+        let g = vec![1.0f32, 0.3];
+        let mut coord1_sent = false;
+        for _ in 0..10 {
+            let d = ef.compress(&g, &mut rng).to_dense();
+            if d[1] != 0.0 {
+                coord1_sent = true;
+                break;
+            }
+        }
+        assert!(coord1_sent, "EF never flushed the small coordinate");
+    }
+
+    #[test]
+    fn marks_stateful() {
+        let ef = WorkerEfCompressor::new(Box::new(SignCompressor), 3);
+        assert!(ef.requires_worker_state());
+        assert_eq!(ef.name(), "ef-sign");
+    }
+
+    #[test]
+    #[should_panic(expected = "EF residual dim")]
+    fn dim_mismatch_rejected() {
+        let mut ef = WorkerEfCompressor::new(Box::new(SignCompressor), 3);
+        let mut rng = Pcg64::seed_from(5);
+        ef.compress(&[1.0; 4], &mut rng);
+    }
+}

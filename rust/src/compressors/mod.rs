@@ -1,0 +1,312 @@
+//! Gradient compressors: the paper's `sparsign` (Definition 1) and every
+//! baseline from §6 / Appendix B, with exact per-message bit accounting.
+//!
+//! All compressors map a dense gradient `g ∈ ℝᵈ` to a [`CompressedGrad`]
+//! message. Ternary-valued messages carry `{-1,0,+1}` codes plus an
+//! optional scale; their uplink cost follows the paper's Golomb accounting
+//! (eq. (12), implemented in [`crate::coding`]). Stateless compressors are
+//! the point of the paper — only the explicitly-marked error-feedback
+//! wrapper keeps worker-side state, and the coordinator refuses to combine
+//! it with worker sampling (the exact failure mode the paper fixes).
+
+mod ef;
+mod qsgd;
+mod sign;
+mod sparse;
+mod sparsign;
+mod ssdm;
+mod terngrad;
+
+pub use ef::WorkerEfCompressor;
+pub use qsgd::{NormKind, QsgdCompressor};
+pub use sign::{NoisySignCompressor, ScaledSignCompressor, SignCompressor};
+pub use sparse::{RandKCompressor, StcCompressor, ThresholdVCompressor, TopKCompressor};
+pub use sparsign::{SparsignAutoCompressor, SparsignCompressor};
+pub use ssdm::{SsdmCompressor, StoSignCompressor};
+pub use terngrad::TernGradCompressor;
+
+use crate::coding::cost::CostModel;
+use crate::util::rng::Pcg64;
+
+/// A compressed gradient message plus its exact uplink cost in bits.
+#[derive(Clone, Debug)]
+pub enum CompressedGrad {
+    /// Ternary codes `q[i] ∈ {-1,0,+1}`; decoded value is `scale * q[i]`.
+    /// `bits` is the Golomb-accounted message size.
+    Ternary { q: Vec<i8>, scale: f32, bits: f64 },
+    /// Dense float message (identity / multi-level QSGD decode).
+    Dense { v: Vec<f32>, bits: f64 },
+}
+
+impl CompressedGrad {
+    /// Dimension of the underlying gradient.
+    pub fn dim(&self) -> usize {
+        match self {
+            CompressedGrad::Ternary { q, .. } => q.len(),
+            CompressedGrad::Dense { v, .. } => v.len(),
+        }
+    }
+
+    /// Message size in bits.
+    pub fn bits(&self) -> f64 {
+        match self {
+            CompressedGrad::Ternary { bits, .. } | CompressedGrad::Dense { bits, .. } => *bits,
+        }
+    }
+
+    /// Number of non-zero coordinates.
+    pub fn nnz(&self) -> usize {
+        match self {
+            CompressedGrad::Ternary { q, .. } => q.iter().filter(|&&x| x != 0).count(),
+            CompressedGrad::Dense { v, .. } => v.iter().filter(|&&x| x != 0.0).count(),
+        }
+    }
+
+    /// Accumulate the decoded message into `acc` (server-side aggregation
+    /// hot path; the ternary arm is branch-light on purpose — see §Perf).
+    pub fn add_into(&self, acc: &mut [f32]) {
+        match self {
+            CompressedGrad::Ternary { q, scale, .. } => {
+                debug_assert_eq!(acc.len(), q.len());
+                let s = *scale;
+                for (a, &qi) in acc.iter_mut().zip(q.iter()) {
+                    *a += s * qi as f32;
+                }
+            }
+            CompressedGrad::Dense { v, .. } => {
+                debug_assert_eq!(acc.len(), v.len());
+                for (a, &vi) in acc.iter_mut().zip(v.iter()) {
+                    *a += vi;
+                }
+            }
+        }
+    }
+
+    /// Decode to a dense vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim()];
+        self.add_into(&mut out);
+        out
+    }
+}
+
+/// Worker-side gradient compressor. Takes `&mut self` so the (explicitly
+/// stateful) error-feedback baseline fits the same interface; all paper
+/// algorithms keep the implementation stateless.
+pub trait Compressor: Send {
+    /// Compress `g`, drawing any stochasticity from `rng`.
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad;
+
+    /// Display name used in tables.
+    fn name(&self) -> String;
+
+    /// True iff the compressor keeps per-worker state across rounds
+    /// (incompatible with worker sampling — Algorithm 1's engine asserts
+    /// this is false when `participation < 1`).
+    fn requires_worker_state(&self) -> bool {
+        false
+    }
+
+    /// Cost model used for the compressor's messages (for documentation /
+    /// cross-checks; the per-message `bits` field is authoritative).
+    fn cost_model(&self) -> CostModel;
+}
+
+/// Config-level compressor selection; `build()` instantiates a fresh
+/// (per-worker) compressor object.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompressorKind {
+    /// signSGD (Bernstein et al. 2018): dense ±1.
+    Sign,
+    /// Scaled signSGD (Karimireddy et al. 2019): (‖g‖₁/d)·sign(g).
+    ScaledSign,
+    /// Noisy signSGD (Chen et al. 2020a): sign(g + N(0, σ²)).
+    NoisySign { noise_std: f32 },
+    /// QSGD (Alistarh et al. 2017) with `levels` = s and a norm choice.
+    Qsgd { levels: u32, norm: NormKind },
+    /// TernGrad (Wen et al. 2017).
+    TernGrad,
+    /// The paper's sparsign (Definition 1) with budget B.
+    Sparsign { budget: f32 },
+    /// Auto-density sparsign (Remark 7 budget protocol): B chosen per
+    /// message so the expected density equals `target_density`.
+    SparsignAuto { target_density: f32 },
+    /// sto-SIGN (Jin et al. 2020): stochastic sign with scale b.
+    StoSign { b: f32 },
+    /// SSDM (Safaryan & Richtárik 2021): worker momentum + stochastic
+    /// sign. Stateful — incompatible with worker sampling.
+    Ssdm { beta: f32 },
+    /// Top-k sparsification (Alistarh et al. 2018).
+    TopK { k: usize },
+    /// Random-k sparsification (Stich et al. 2018).
+    RandK { k: usize },
+    /// Threshold-v sparsification (Lin et al. 2018; Sahu et al. 2021).
+    ThresholdV { v: f32 },
+    /// Sparse ternary compression (Sattler et al. 2019a).
+    Stc { k: usize },
+    /// Worker-side error feedback around an inner compressor
+    /// (EF-signSGD, Karimireddy et al. 2019 / Zheng et al. 2019).
+    WorkerEf(Box<CompressorKind>),
+    /// No compression (32-bit floats) — D-SGD reference.
+    Identity,
+}
+
+impl CompressorKind {
+    /// Instantiate a per-worker compressor.
+    pub fn build(&self, dim: usize) -> Box<dyn Compressor> {
+        match self {
+            CompressorKind::Sign => Box::new(SignCompressor),
+            CompressorKind::ScaledSign => Box::new(ScaledSignCompressor),
+            CompressorKind::NoisySign { noise_std } => {
+                Box::new(NoisySignCompressor { noise_std: *noise_std })
+            }
+            CompressorKind::Qsgd { levels, norm } => {
+                Box::new(QsgdCompressor { levels: *levels, norm: *norm })
+            }
+            CompressorKind::TernGrad => Box::new(TernGradCompressor),
+            CompressorKind::Sparsign { budget } => {
+                Box::new(SparsignCompressor { budget: *budget })
+            }
+            CompressorKind::SparsignAuto { target_density } => {
+                Box::new(SparsignAutoCompressor { target_density: *target_density })
+            }
+            CompressorKind::StoSign { b } => Box::new(StoSignCompressor { b: *b }),
+            CompressorKind::Ssdm { beta } => Box::new(SsdmCompressor::new(*beta, dim)),
+            CompressorKind::TopK { k } => Box::new(TopKCompressor { k: *k }),
+            CompressorKind::RandK { k } => Box::new(RandKCompressor { k: *k }),
+            CompressorKind::ThresholdV { v } => Box::new(ThresholdVCompressor { v: *v }),
+            CompressorKind::Stc { k } => Box::new(StcCompressor { k: *k }),
+            CompressorKind::WorkerEf(inner) => {
+                Box::new(WorkerEfCompressor::new(inner.build(dim), dim))
+            }
+            CompressorKind::Identity => Box::new(IdentityCompressor),
+        }
+    }
+
+    /// Table-row label.
+    pub fn label(&self) -> String {
+        match self {
+            CompressorKind::Sign => "signSGD".into(),
+            CompressorKind::ScaledSign => "Scaled signSGD".into(),
+            CompressorKind::NoisySign { .. } => "Noisy signSGD".into(),
+            CompressorKind::Qsgd { levels: 1, norm: NormKind::L2 } => {
+                "1-bit L2 norm QSGD".into()
+            }
+            CompressorKind::Qsgd { levels: 1, norm: NormKind::Linf } => {
+                "1-bit Linf norm QSGD".into()
+            }
+            CompressorKind::Qsgd { levels, .. } => format!("QSGD(s={levels})"),
+            CompressorKind::TernGrad => "TernGrad".into(),
+            CompressorKind::Sparsign { budget } => format!("sparsignSGD(B={budget})"),
+            CompressorKind::SparsignAuto { target_density } => {
+                format!("sparsignSGD-auto(p={target_density})")
+            }
+            CompressorKind::StoSign { b } => format!("sto-SIGNSGD(b={b})"),
+            CompressorKind::Ssdm { beta } => format!("SSDM(beta={beta})"),
+            CompressorKind::TopK { k } => format!("Top-{k}"),
+            CompressorKind::RandK { k } => format!("Random-{k}"),
+            CompressorKind::ThresholdV { v } => format!("Threshold-{v}"),
+            CompressorKind::Stc { k } => format!("STC(k={k})"),
+            CompressorKind::WorkerEf(inner) => format!("EF-{}", inner.label()),
+            CompressorKind::Identity => "D-SGD (fp32)".into(),
+        }
+    }
+}
+
+/// No-op compressor: transmits raw f32 coordinates.
+pub struct IdentityCompressor;
+
+impl Compressor for IdentityCompressor {
+    fn compress(&mut self, g: &[f32], _rng: &mut Pcg64) -> CompressedGrad {
+        CompressedGrad::Dense { v: g.to_vec(), bits: 32.0 * g.len() as f64 }
+    }
+
+    fn name(&self) -> String {
+        "identity".into()
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::Dense { bits_per_coord: 32.0, overhead_bits: 0.0 }
+    }
+}
+
+/// Shared helper: Golomb-accounted bits for a ternary vector with `nnz`
+/// non-zeros (+32 bits when a float scale accompanies the message).
+pub(crate) fn ternary_bits(d: usize, nnz: usize, with_scale: bool) -> f64 {
+    let base = CostModel::SparseTernary.bits(d, nnz);
+    if with_scale {
+        base + 32.0
+    } else {
+        base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_build_and_label() {
+        let kinds = vec![
+            CompressorKind::Sign,
+            CompressorKind::ScaledSign,
+            CompressorKind::NoisySign { noise_std: 0.1 },
+            CompressorKind::Qsgd { levels: 1, norm: NormKind::L2 },
+            CompressorKind::Qsgd { levels: 1, norm: NormKind::Linf },
+            CompressorKind::Qsgd { levels: 255, norm: NormKind::L2 },
+            CompressorKind::TernGrad,
+            CompressorKind::Sparsign { budget: 1.0 },
+            CompressorKind::TopK { k: 4 },
+            CompressorKind::RandK { k: 4 },
+            CompressorKind::ThresholdV { v: 0.1 },
+            CompressorKind::Stc { k: 4 },
+            CompressorKind::WorkerEf(Box::new(CompressorKind::Sign)),
+            CompressorKind::Identity,
+        ];
+        let g: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 64.0).collect();
+        for kind in kinds {
+            let mut c = kind.build(g.len());
+            let mut rng = Pcg64::seed_from(1);
+            let msg = c.compress(&g, &mut rng);
+            assert_eq!(msg.dim(), g.len(), "{}", kind.label());
+            assert!(msg.bits() >= 0.0);
+            assert!(!kind.label().is_empty());
+        }
+    }
+
+    #[test]
+    fn identity_roundtrips_exactly() {
+        let g = vec![1.5, -2.25, 0.0, 3.0];
+        let mut c = IdentityCompressor;
+        let mut rng = Pcg64::seed_from(2);
+        let msg = c.compress(&g, &mut rng);
+        assert_eq!(msg.to_dense(), g);
+        assert_eq!(msg.bits(), 128.0);
+        assert_eq!(msg.nnz(), 3);
+    }
+
+    #[test]
+    fn add_into_accumulates() {
+        let msg = CompressedGrad::Ternary { q: vec![1, -1, 0, 1], scale: 2.0, bits: 0.0 };
+        let mut acc = vec![1.0; 4];
+        msg.add_into(&mut acc);
+        assert_eq!(acc, vec![3.0, -1.0, 1.0, 3.0]);
+        assert_eq!(msg.nnz(), 3);
+    }
+
+    #[test]
+    fn only_ef_requires_state() {
+        let g_dim = 8;
+        let stateless = [
+            CompressorKind::Sign,
+            CompressorKind::Sparsign { budget: 1.0 },
+            CompressorKind::TernGrad,
+            CompressorKind::Qsgd { levels: 1, norm: NormKind::L2 },
+        ];
+        for k in stateless {
+            assert!(!k.build(g_dim).requires_worker_state(), "{}", k.label());
+        }
+        let ef = CompressorKind::WorkerEf(Box::new(CompressorKind::Sign)).build(g_dim);
+        assert!(ef.requires_worker_state());
+    }
+}

@@ -1,0 +1,188 @@
+//! QSGD (Alistarh et al. 2017) and its 1-bit variants, exactly as the
+//! paper's Appendix B describes them:
+//!
+//! `Q_s(g, s) = ‖g‖ · sign(g) · ξ(g, s)` where `ξ` stochastically rounds
+//! `|g_i|/‖g‖ · s` to a neighbouring integer level `l ∈ {0..s}`.
+//!
+//! * `s = 1, ‖·‖ = ℓ2`  → "1-bit L2 norm QSGD" (ternary message).
+//! * `s = 1, ‖·‖ = ℓ∞` → "1-bit L∞ norm QSGD" (ternary, denser).
+//! * `s = 255`          → the 8-bit QSGD used inside FedCom.
+
+use super::{CompressedGrad, Compressor};
+use crate::coding::cost::CostModel;
+use crate::util::rng::{bernoulli_threshold, Pcg64, U32Stream};
+use crate::util::{l2_norm, linf_norm};
+
+/// Which norm scales the quantization grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NormKind {
+    L2,
+    Linf,
+}
+
+/// Stochastic `s`-level quantizer.
+#[derive(Clone, Copy, Debug)]
+pub struct QsgdCompressor {
+    /// Number of quantization levels `s ≥ 1`.
+    pub levels: u32,
+    /// Norm used for the scale.
+    pub norm: NormKind,
+}
+
+impl QsgdCompressor {
+    fn norm_of(&self, g: &[f32]) -> f32 {
+        match self.norm {
+            NormKind::L2 => l2_norm(g),
+            NormKind::Linf => linf_norm(g),
+        }
+    }
+}
+
+impl Compressor for QsgdCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        assert!(self.levels >= 1, "QSGD needs at least one level");
+        let s = self.levels;
+        let nrm = self.norm_of(g);
+        if nrm == 0.0 || g.is_empty() {
+            // Zero gradient: transmit the (zero) norm only.
+            return if s == 1 {
+                CompressedGrad::Ternary { q: vec![0; g.len()], scale: 0.0, bits: 32.0 }
+            } else {
+                CompressedGrad::Dense { v: vec![0.0; g.len()], bits: 32.0 }
+            };
+        }
+        let sf = s as f32;
+        if s == 1 {
+            // Ternary fast path: keep-probability |g_i|/‖g‖ (level 1 vs 0).
+            let mut q = vec![0i8; g.len()];
+            let mut nnz = 0usize;
+            let mut u = U32Stream::new(rng);
+            for (qi, &gi) in q.iter_mut().zip(g.iter()) {
+                let thr = bernoulli_threshold(gi.abs() / nrm);
+                if u.bernoulli(thr) {
+                    *qi = if gi > 0.0 { 1 } else { -1 };
+                    nnz += 1;
+                }
+            }
+            let bits = CostModel::Qsgd { levels: 1 }.bits(g.len(), nnz);
+            return CompressedGrad::Ternary { q, scale: nrm, bits };
+        }
+        // General s-level path: value = ‖g‖·sign·(l or l+1)/s.
+        let mut v = vec![0.0f32; g.len()];
+        let mut nnz = 0usize;
+        for (vi, &gi) in v.iter_mut().zip(g.iter()) {
+            let a = (gi.abs() / nrm * sf).min(sf);
+            let l = a.floor();
+            let frac = a - l;
+            let level = if rng.f32() < frac { l + 1.0 } else { l };
+            if level > 0.0 {
+                *vi = nrm * gi.signum() * level / sf;
+                nnz += 1;
+            }
+        }
+        let bits = CostModel::Qsgd { levels: s }.bits(g.len(), nnz);
+        CompressedGrad::Dense { v, bits }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "qsgd(s={}, {})",
+            self.levels,
+            match self.norm {
+                NormKind::L2 => "l2",
+                NormKind::Linf => "linf",
+            }
+        )
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::Qsgd { levels: self.levels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_bit_l2_is_unbiased() {
+        // E[Q(g)] = g for QSGD (unbiased by construction).
+        let g = vec![0.6f32, -0.8]; // ‖g‖₂ = 1
+        let mut c = QsgdCompressor { levels: 1, norm: NormKind::L2 };
+        let mut rng = Pcg64::seed_from(1);
+        let trials = 50_000;
+        let mut sums = [0.0f64; 2];
+        for _ in 0..trials {
+            let d = c.compress(&g, &mut rng).to_dense();
+            sums[0] += d[0] as f64;
+            sums[1] += d[1] as f64;
+        }
+        assert!((sums[0] / trials as f64 - 0.6).abs() < 0.01);
+        assert!((sums[1] / trials as f64 + 0.8).abs() < 0.01);
+    }
+
+    #[test]
+    fn linf_variant_is_denser_than_l2() {
+        let mut rng_data = Pcg64::seed_from(2);
+        let mut g = vec![0.0; 4096];
+        rng_data.fill_normal(&mut g, 0.0, 1.0);
+        let mut c2 = QsgdCompressor { levels: 1, norm: NormKind::L2 };
+        let mut ci = QsgdCompressor { levels: 1, norm: NormKind::Linf };
+        let mut r1 = Pcg64::seed_from(3);
+        let mut r2 = Pcg64::seed_from(3);
+        // L∞ norm is much smaller than L2 on a long vector, so the
+        // keep-probabilities |g|/‖g‖ are higher ⇒ denser message.
+        let n2 = c2.compress(&g, &mut r1).nnz();
+        let ni = ci.compress(&g, &mut r2).nnz();
+        assert!(ni > 4 * n2, "linf nnz {ni} vs l2 nnz {n2}");
+    }
+
+    #[test]
+    fn multi_level_reconstruction_error_shrinks_with_s() {
+        let mut rng_data = Pcg64::seed_from(4);
+        let mut g = vec![0.0; 512];
+        rng_data.fill_normal(&mut g, 0.0, 1.0);
+        let mut err_prev = f64::INFINITY;
+        for &s in &[1u32, 4, 16, 255] {
+            let mut c = QsgdCompressor { levels: s, norm: NormKind::L2 };
+            let mut rng = Pcg64::seed_from(5);
+            let mut err = 0.0f64;
+            let trials = 32;
+            for _ in 0..trials {
+                let d = c.compress(&g, &mut rng).to_dense();
+                err += d
+                    .iter()
+                    .zip(&g)
+                    .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                    .sum::<f64>();
+            }
+            err /= trials as f64;
+            assert!(err < err_prev * 1.05, "s={s}: err {err} prev {err_prev}");
+            err_prev = err;
+        }
+    }
+
+    #[test]
+    fn zero_gradient_costs_norm_only() {
+        let mut c = QsgdCompressor { levels: 1, norm: NormKind::L2 };
+        let mut rng = Pcg64::seed_from(6);
+        let msg = c.compress(&[0.0; 32], &mut rng);
+        assert_eq!(msg.bits(), 32.0);
+        assert_eq!(msg.nnz(), 0);
+    }
+
+    #[test]
+    fn levels_bounded_by_s() {
+        let g = vec![10.0f32, -0.1, 0.5, 0.0];
+        let mut c = QsgdCompressor { levels: 4, norm: NormKind::Linf };
+        let mut rng = Pcg64::seed_from(7);
+        for _ in 0..100 {
+            let d = c.compress(&g, &mut rng).to_dense();
+            let nrm = 10.0;
+            for (i, &v) in d.iter().enumerate() {
+                let lvl = (v.abs() / nrm * 4.0).round();
+                assert!(lvl <= 4.0, "coord {i} level {lvl}");
+            }
+        }
+    }
+}

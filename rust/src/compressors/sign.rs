@@ -1,0 +1,183 @@
+//! Sign-based baselines: signSGD, scaled signSGD, noisy signSGD.
+
+use super::{CompressedGrad, Compressor};
+use crate::coding::cost::CostModel;
+use crate::util::l1_norm;
+use crate::util::rng::Pcg64;
+
+/// signSGD (Bernstein et al. 2018): transmit `sign(g)` — one bit per
+/// coordinate. Uses the `sign(0)=+1` convention so the message is always
+/// exactly `d` bits (a dense bitmap, no positions needed).
+#[derive(Clone, Copy, Debug)]
+pub struct SignCompressor;
+
+impl Compressor for SignCompressor {
+    fn compress(&mut self, g: &[f32], _rng: &mut Pcg64) -> CompressedGrad {
+        let q: Vec<i8> = g.iter().map(|&x| if x < 0.0 { -1 } else { 1 }).collect();
+        CompressedGrad::Ternary { q, scale: 1.0, bits: g.len() as f64 }
+    }
+
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::Dense { bits_per_coord: 1.0, overhead_bits: 0.0 }
+    }
+}
+
+/// Scaled signSGD (Karimireddy et al. 2019): transmit
+/// `(‖g‖₁/d) · sign(g)` — the α-approximate compressor the paper also uses
+/// server-side in Algorithm 2. One bit per coordinate + one f32 scale.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaledSignCompressor;
+
+/// Compute the scaled-sign transform into a ternary message (shared with
+/// the server-side aggregation rule in [`crate::coordinator`]).
+pub fn scaled_sign_message(g: &[f32]) -> CompressedGrad {
+    let d = g.len().max(1);
+    let scale = l1_norm(g) / d as f32;
+    let q: Vec<i8> = g.iter().map(|&x| if x < 0.0 { -1 } else { 1 }).collect();
+    CompressedGrad::Ternary { q, scale, bits: g.len() as f64 + 32.0 }
+}
+
+impl Compressor for ScaledSignCompressor {
+    fn compress(&mut self, g: &[f32], _rng: &mut Pcg64) -> CompressedGrad {
+        scaled_sign_message(g)
+    }
+
+    fn name(&self) -> String {
+        "scaled-sign".into()
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::Dense { bits_per_coord: 1.0, overhead_bits: 32.0 }
+    }
+}
+
+/// Noisy signSGD (Chen et al. 2020a): `sign(g + n)`, `n ~ N(0, σ²)` —
+/// the unimodal-noise fix for the non-convergence of plain sign.
+#[derive(Clone, Copy, Debug)]
+pub struct NoisySignCompressor {
+    /// Standard deviation of the added Gaussian noise (the paper tunes
+    /// σ ∈ {0.001, 0.01, 0.1, 1.0}).
+    pub noise_std: f32,
+}
+
+impl Compressor for NoisySignCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        let std = self.noise_std;
+        // §Perf: Box–Muller yields two variates per ln/sqrt; consume both.
+        let mut q = vec![1i8; g.len()];
+        let pairs = g.len() / 2;
+        for idx in 0..pairs {
+            let (n0, n1) = rng.normal_pair();
+            let i = 2 * idx;
+            if g[i] + std * (n0 as f32) < 0.0 {
+                q[i] = -1;
+            }
+            if g[i + 1] + std * (n1 as f32) < 0.0 {
+                q[i + 1] = -1;
+            }
+        }
+        if g.len() % 2 == 1 {
+            let i = g.len() - 1;
+            if g[i] + rng.normal_f32(0.0, std) < 0.0 {
+                q[i] = -1;
+            }
+        }
+        CompressedGrad::Ternary { q, scale: 1.0, bits: g.len() as f64 }
+    }
+
+    fn name(&self) -> String {
+        format!("noisy-sign(std={})", self.noise_std)
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::Dense { bits_per_coord: 1.0, overhead_bits: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_is_dense_one_bit() {
+        let g = vec![0.5, -0.5, 0.0, -0.0];
+        let mut c = SignCompressor;
+        let mut rng = Pcg64::seed_from(1);
+        let msg = c.compress(&g, &mut rng);
+        match &msg {
+            CompressedGrad::Ternary { q, scale, bits } => {
+                assert_eq!(q, &vec![1, -1, 1, 1]);
+                assert_eq!(*scale, 1.0);
+                assert_eq!(*bits, 4.0);
+            }
+            _ => panic!("wrong payload"),
+        }
+    }
+
+    #[test]
+    fn scaled_sign_scale_is_l1_over_d() {
+        let g = vec![1.0, -3.0, 0.0, 4.0];
+        let mut c = ScaledSignCompressor;
+        let mut rng = Pcg64::seed_from(2);
+        match c.compress(&g, &mut rng) {
+            CompressedGrad::Ternary { scale, bits, q } => {
+                assert_eq!(scale, 2.0);
+                assert_eq!(bits, 36.0);
+                assert_eq!(q, vec![1, -1, 1, 1]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn scaled_sign_is_alpha_approximate() {
+        // ‖C(x) - x‖² ≤ (1-α)‖x‖² with α = ‖x‖₁²/(d‖x‖₂²) for scaled sign.
+        let mut rng = Pcg64::seed_from(3);
+        for _ in 0..50 {
+            let mut g = vec![0.0; 64];
+            rng.fill_normal(&mut g, 0.0, 1.0);
+            let c = scaled_sign_message(&g).to_dense();
+            let err: f32 = c.iter().zip(&g).map(|(a, b)| (a - b) * (a - b)).sum();
+            let x2: f32 = g.iter().map(|x| x * x).sum();
+            let l1: f32 = g.iter().map(|x| x.abs()).sum();
+            let alpha = l1 * l1 / (64.0 * x2);
+            assert!(err <= (1.0 - alpha) * x2 + 1e-3, "err {err} bound {}", (1.0 - alpha) * x2);
+        }
+    }
+
+    #[test]
+    fn noisy_sign_flips_small_coords_sometimes() {
+        let g = vec![0.01f32; 1000];
+        let mut c = NoisySignCompressor { noise_std: 1.0 };
+        let mut rng = Pcg64::seed_from(4);
+        let msg = c.compress(&g, &mut rng);
+        let neg = match &msg {
+            CompressedGrad::Ternary { q, .. } => q.iter().filter(|&&x| x == -1).count(),
+            _ => panic!(),
+        };
+        // sign flips with prob Φ(-0.01) ≈ 0.496.
+        assert!(neg > 400 && neg < 600, "neg={neg}");
+    }
+
+    #[test]
+    fn noisy_sign_zero_noise_equals_sign() {
+        let g = vec![0.5, -0.25, 3.0];
+        let mut a = NoisySignCompressor { noise_std: 0.0 };
+        let mut b = SignCompressor;
+        let mut r1 = Pcg64::seed_from(5);
+        let mut r2 = Pcg64::seed_from(5);
+        assert_eq!(a.compress(&g, &mut r1).to_dense(), b.compress(&g, &mut r2).to_dense());
+    }
+
+    #[test]
+    fn empty_gradient_ok() {
+        let mut c = ScaledSignCompressor;
+        let mut rng = Pcg64::seed_from(6);
+        let msg = c.compress(&[], &mut rng);
+        assert_eq!(msg.dim(), 0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Magnitude- and position-based sparsifiers from the related-work
+//! baselines: Top-k, Random-k, Threshold-v (full-precision values) and STC
+//! (Sattler et al. 2019a: Top-k + mean-magnitude binarization).
+
+use super::{ternary_bits, CompressedGrad, Compressor};
+use crate::coding::cost::CostModel;
+use crate::util::rng::Pcg64;
+
+/// Indices of the `k` largest-|·| coordinates (ties broken by index).
+fn topk_indices(g: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(g.len());
+    let mut idx: Vec<usize> = (0..g.len()).collect();
+    // Partial selection: full sort is fine at substrate scale, but use
+    // select_nth for O(d) average.
+    if k < g.len() {
+        idx.select_nth_unstable_by(k, |&a, &b| {
+            g[b].abs().partial_cmp(&g[a].abs()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    idx
+}
+
+/// Top-k sparsification (Alistarh et al. 2018): keep the k
+/// largest-magnitude coordinates at full precision.
+#[derive(Clone, Copy, Debug)]
+pub struct TopKCompressor {
+    pub k: usize,
+}
+
+impl Compressor for TopKCompressor {
+    fn compress(&mut self, g: &[f32], _rng: &mut Pcg64) -> CompressedGrad {
+        let idx = topk_indices(g, self.k);
+        let mut v = vec![0.0f32; g.len()];
+        let mut nnz = 0;
+        for &i in &idx {
+            if g[i] != 0.0 {
+                v[i] = g[i];
+                nnz += 1;
+            }
+        }
+        let bits = CostModel::SparseFloat.bits(g.len(), nnz);
+        CompressedGrad::Dense { v, bits }
+    }
+
+    fn name(&self) -> String {
+        format!("top{}", self.k)
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::SparseFloat
+    }
+}
+
+/// Random-k sparsification (Stich et al. 2018): keep k uniformly random
+/// coordinates, rescaled by d/k for unbiasedness.
+#[derive(Clone, Copy, Debug)]
+pub struct RandKCompressor {
+    pub k: usize,
+}
+
+impl Compressor for RandKCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        let k = self.k.min(g.len());
+        let idx = rng.sample_indices(g.len(), k);
+        let scale = if k == 0 { 0.0 } else { g.len() as f32 / k as f32 };
+        let mut v = vec![0.0f32; g.len()];
+        let mut nnz = 0;
+        for &i in &idx {
+            if g[i] != 0.0 {
+                v[i] = g[i] * scale;
+                nnz += 1;
+            }
+        }
+        let bits = CostModel::SparseFloat.bits(g.len(), nnz);
+        CompressedGrad::Dense { v, bits }
+    }
+
+    fn name(&self) -> String {
+        format!("rand{}", self.k)
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::SparseFloat
+    }
+}
+
+/// Threshold-v sparsification (Lin et al. 2018; Sahu et al. 2021): keep
+/// coordinates with |g_i| > v at full precision.
+#[derive(Clone, Copy, Debug)]
+pub struct ThresholdVCompressor {
+    pub v: f32,
+}
+
+impl Compressor for ThresholdVCompressor {
+    fn compress(&mut self, g: &[f32], _rng: &mut Pcg64) -> CompressedGrad {
+        let mut v = vec![0.0f32; g.len()];
+        let mut nnz = 0;
+        for (vi, &gi) in v.iter_mut().zip(g.iter()) {
+            if gi.abs() > self.v {
+                *vi = gi;
+                nnz += 1;
+            }
+        }
+        let bits = CostModel::SparseFloat.bits(g.len(), nnz);
+        CompressedGrad::Dense { v, bits }
+    }
+
+    fn name(&self) -> String {
+        format!("threshold{}", self.v)
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::SparseFloat
+    }
+}
+
+/// Sparse ternary compression (Sattler et al. 2019a): Top-k followed by
+/// binarization to `μ · sign`, μ = mean |g_i| over the kept set — ternary
+/// message + one f32 scale.
+#[derive(Clone, Copy, Debug)]
+pub struct StcCompressor {
+    pub k: usize,
+}
+
+impl Compressor for StcCompressor {
+    fn compress(&mut self, g: &[f32], _rng: &mut Pcg64) -> CompressedGrad {
+        let idx = topk_indices(g, self.k);
+        let kept: Vec<f32> = idx.iter().map(|&i| g[i]).filter(|x| *x != 0.0).collect();
+        if kept.is_empty() {
+            return CompressedGrad::Ternary { q: vec![0; g.len()], scale: 0.0, bits: 32.0 };
+        }
+        let mu = kept.iter().map(|x| x.abs()).sum::<f32>() / kept.len() as f32;
+        let mut q = vec![0i8; g.len()];
+        let mut nnz = 0;
+        for &i in &idx {
+            if g[i] != 0.0 {
+                q[i] = if g[i] > 0.0 { 1 } else { -1 };
+                nnz += 1;
+            }
+        }
+        let bits = ternary_bits(g.len(), nnz, true);
+        CompressedGrad::Ternary { q, scale: mu, bits }
+    }
+
+    fn name(&self) -> String {
+        format!("stc(k={})", self.k)
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::SparseTernary
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_keeps_largest() {
+        let g = vec![0.1, -5.0, 0.3, 2.0, -0.2];
+        let mut c = TopKCompressor { k: 2 };
+        let mut rng = Pcg64::seed_from(1);
+        let d = c.compress(&g, &mut rng).to_dense();
+        assert_eq!(d, vec![0.0, -5.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_k_larger_than_d() {
+        let g = vec![1.0, 2.0];
+        let mut c = TopKCompressor { k: 10 };
+        let mut rng = Pcg64::seed_from(2);
+        assert_eq!(c.compress(&g, &mut rng).to_dense(), g);
+    }
+
+    #[test]
+    fn randk_is_unbiased() {
+        let g = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut c = RandKCompressor { k: 2 };
+        let mut rng = Pcg64::seed_from(3);
+        let trials = 40_000;
+        let mut sums = vec![0.0f64; 4];
+        for _ in 0..trials {
+            for (s, v) in sums.iter_mut().zip(c.compress(&g, &mut rng).to_dense()) {
+                *s += v as f64;
+            }
+        }
+        for (i, &s) in sums.iter().enumerate() {
+            let mean = s / trials as f64;
+            assert!((mean - g[i] as f64).abs() < 0.06, "coord {i}: {mean}");
+        }
+    }
+
+    #[test]
+    fn randk_zero_k() {
+        let mut c = RandKCompressor { k: 0 };
+        let mut rng = Pcg64::seed_from(4);
+        let msg = c.compress(&[1.0, 2.0], &mut rng);
+        assert_eq!(msg.nnz(), 0);
+        assert_eq!(msg.bits(), 0.0);
+    }
+
+    #[test]
+    fn threshold_exact_boundary_excluded() {
+        let g = vec![0.1, 0.100001, -0.3];
+        let mut c = ThresholdVCompressor { v: 0.1 };
+        let mut rng = Pcg64::seed_from(5);
+        let d = c.compress(&g, &mut rng).to_dense();
+        assert_eq!(d[0], 0.0); // strictly greater-than
+        assert!(d[1] != 0.0 && d[2] != 0.0);
+    }
+
+    #[test]
+    fn stc_binarizes_to_mean_magnitude() {
+        let g = vec![4.0, -2.0, 0.1, 0.0];
+        let mut c = StcCompressor { k: 2 };
+        let mut rng = Pcg64::seed_from(6);
+        match c.compress(&g, &mut rng) {
+            CompressedGrad::Ternary { q, scale, .. } => {
+                assert_eq!(q, vec![1, -1, 0, 0]);
+                assert_eq!(scale, 3.0); // (4+2)/2
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn stc_all_zero_gradient() {
+        let mut c = StcCompressor { k: 3 };
+        let mut rng = Pcg64::seed_from(7);
+        let msg = c.compress(&[0.0; 5], &mut rng);
+        assert_eq!(msg.nnz(), 0);
+    }
+
+    #[test]
+    fn cost_ordering_topk_vs_stc() {
+        // Same support size: STC (1 sign bit/coord) must be cheaper than
+        // Top-k (32 value bits/coord).
+        let g: Vec<f32> = (0..1024).map(|i| ((i % 61) as f32 - 30.0) / 30.0).collect();
+        let mut tk = TopKCompressor { k: 64 };
+        let mut st = StcCompressor { k: 64 };
+        let mut r = Pcg64::seed_from(8);
+        assert!(st.compress(&g, &mut r).bits() < tk.compress(&g, &mut r).bits());
+    }
+}

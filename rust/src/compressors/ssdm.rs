@@ -1,0 +1,215 @@
+//! Stochastic-sign baselines from the related work:
+//!
+//! * [`StoSignCompressor`] — the *stochastic sign* operator used by
+//!   sto-SIGNSGD (Jin et al. 2020) and as the building block of SSDM:
+//!   `Q(g_i) = +1 w.p. (b + g_i)/(2b), −1 otherwise` (clamped), which is
+//!   unbiased up to the known scale `1/b`. One bit per coordinate.
+//! * [`SsdmCompressor`] — SSDM (Safaryan & Richtárik 2021): worker-side
+//!   momentum `v ← (1−β)·v + β·g` followed by the stochastic sign of the
+//!   momentum, normalized by its ℓ∞ norm. **Stateful on the worker** —
+//!   exactly the property the paper argues breaks under worker sampling,
+//!   so the engine guards it the same way as worker-EF.
+
+use super::{CompressedGrad, Compressor};
+use crate::coding::cost::CostModel;
+use crate::util::linf_norm;
+use crate::util::rng::Pcg64;
+
+/// Stochastic sign with magnitude parameter `b` (must dominate `|g_i|`;
+/// values beyond `b` are clamped — the same clipping semantics as
+/// sparsign's Remark 7).
+#[derive(Clone, Copy, Debug)]
+pub struct StoSignCompressor {
+    /// Scale parameter `b > 0`.
+    pub b: f32,
+}
+
+impl Compressor for StoSignCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        assert!(self.b > 0.0, "sto-sign scale must be positive");
+        let inv = 1.0 / (2.0 * self.b);
+        let q: Vec<i8> = g
+            .iter()
+            .map(|&gi| {
+                let p_plus = ((self.b + gi) * inv).clamp(0.0, 1.0);
+                if rng.f32() < p_plus {
+                    1
+                } else {
+                    -1
+                }
+            })
+            .collect();
+        CompressedGrad::Ternary { q, scale: 1.0, bits: g.len() as f64 }
+    }
+
+    fn name(&self) -> String {
+        format!("sto-sign(b={})", self.b)
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::Dense { bits_per_coord: 1.0, overhead_bits: 0.0 }
+    }
+}
+
+/// SSDM: momentum + normalized stochastic sign.
+pub struct SsdmCompressor {
+    /// Momentum coefficient β ∈ (0, 1].
+    pub beta: f32,
+    momentum: Vec<f32>,
+}
+
+impl SsdmCompressor {
+    pub fn new(beta: f32, dim: usize) -> Self {
+        assert!(beta > 0.0 && beta <= 1.0, "β must be in (0,1], got {beta}");
+        Self { beta, momentum: vec![0.0; dim] }
+    }
+
+    /// Current momentum (diagnostics).
+    pub fn momentum(&self) -> &[f32] {
+        &self.momentum
+    }
+}
+
+impl Compressor for SsdmCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        assert_eq!(
+            g.len(),
+            self.momentum.len(),
+            "SSDM momentum dim {} != gradient dim {}",
+            self.momentum.len(),
+            g.len()
+        );
+        let beta = self.beta;
+        for (v, &gi) in self.momentum.iter_mut().zip(g.iter()) {
+            *v = (1.0 - beta) * *v + beta * gi;
+        }
+        let norm = linf_norm(&self.momentum);
+        if norm == 0.0 {
+            return CompressedGrad::Ternary {
+                q: vec![0; g.len()],
+                scale: 1.0,
+                bits: g.len() as f64,
+            };
+        }
+        let inv = 1.0 / (2.0 * norm);
+        let q: Vec<i8> = self
+            .momentum
+            .iter()
+            .map(|&vi| {
+                let p_plus = ((norm + vi) * inv).clamp(0.0, 1.0);
+                if rng.f32() < p_plus {
+                    1
+                } else {
+                    -1
+                }
+            })
+            .collect();
+        CompressedGrad::Ternary { q, scale: 1.0, bits: g.len() as f64 }
+    }
+
+    fn name(&self) -> String {
+        format!("ssdm(beta={})", self.beta)
+    }
+
+    fn requires_worker_state(&self) -> bool {
+        true // momentum lives on the worker across rounds
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::Dense { bits_per_coord: 1.0, overhead_bits: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stosign_is_unbiased_up_to_scale() {
+        // E[Q(g_i)] = g_i / b.
+        let b = 2.0f32;
+        let g = vec![0.5f32, -1.0, 0.0, 1.5];
+        let mut c = StoSignCompressor { b };
+        let mut rng = Pcg64::seed_from(1);
+        let trials = 60_000;
+        let mut sums = vec![0.0f64; 4];
+        for _ in 0..trials {
+            for (s, v) in sums.iter_mut().zip(c.compress(&g, &mut rng).to_dense()) {
+                *s += v as f64;
+            }
+        }
+        for (i, &s) in sums.iter().enumerate() {
+            let mean = s / trials as f64;
+            let want = (g[i] / b) as f64;
+            assert!((mean - want).abs() < 0.015, "coord {i}: {mean} vs {want}");
+        }
+    }
+
+    #[test]
+    fn stosign_clamps_out_of_range() {
+        let mut c = StoSignCompressor { b: 1.0 };
+        let mut rng = Pcg64::seed_from(2);
+        let g = vec![10.0f32, -10.0];
+        for _ in 0..100 {
+            let d = c.compress(&g, &mut rng).to_dense();
+            assert_eq!(d, vec![1.0, -1.0]); // saturated probabilities
+        }
+    }
+
+    #[test]
+    fn ssdm_momentum_accumulates_and_is_stateful() {
+        let mut c = SsdmCompressor::new(0.5, 3);
+        let mut rng = Pcg64::seed_from(3);
+        let g = vec![1.0f32, -1.0, 0.5];
+        c.compress(&g, &mut rng);
+        // v = 0.5·g after one step.
+        for (v, &gi) in c.momentum().iter().zip(&g) {
+            assert!((v - 0.5 * gi).abs() < 1e-6);
+        }
+        c.compress(&g, &mut rng);
+        // v = 0.75·g after two identical steps.
+        for (v, &gi) in c.momentum().iter().zip(&g) {
+            assert!((v - 0.75 * gi).abs() < 1e-6);
+        }
+        assert!(c.requires_worker_state());
+    }
+
+    #[test]
+    fn ssdm_sign_statistics_follow_momentum() {
+        // With a stationary gradient the +1 frequency on a coordinate
+        // approaches (‖v‖∞ + v_i)/(2‖v‖∞).
+        let mut c = SsdmCompressor::new(1.0, 2); // β=1 ⇒ v = g
+        let mut rng = Pcg64::seed_from(4);
+        let g = vec![1.0f32, -0.5];
+        let trials = 40_000;
+        let mut plus = [0usize; 2];
+        for _ in 0..trials {
+            let d = c.compress(&g, &mut rng).to_dense();
+            for (p, &v) in plus.iter_mut().zip(&d) {
+                if v > 0.0 {
+                    *p += 1;
+                }
+            }
+        }
+        let f0 = plus[0] as f64 / trials as f64; // (1+1)/2 = 1.0
+        let f1 = plus[1] as f64 / trials as f64; // (1-0.5)/2 = 0.25
+        assert!(f0 > 0.99, "{f0}");
+        assert!((f1 - 0.25).abs() < 0.01, "{f1}");
+    }
+
+    #[test]
+    fn ssdm_zero_gradient_stream() {
+        let mut c = SsdmCompressor::new(0.9, 4);
+        let mut rng = Pcg64::seed_from(5);
+        let msg = c.compress(&[0.0; 4], &mut rng);
+        assert_eq!(msg.nnz(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "momentum dim")]
+    fn ssdm_dim_mismatch_rejected() {
+        let mut c = SsdmCompressor::new(0.9, 4);
+        let mut rng = Pcg64::seed_from(6);
+        c.compress(&[0.0; 5], &mut rng);
+    }
+}

@@ -1,0 +1,113 @@
+//! TernGrad (Wen et al. 2017):
+//! `ternarize(g) = s_t · sign(g) · ξ(g, s_t)` with `s_t = ‖g‖∞` and
+//! `P(ξ_i = 1) = |g_i| / s_t` — an unbiased ternary quantizer.
+//!
+//! The paper's Remark 2 reads TernGrad as a *scaled* sparsign with
+//! `B_i = 1/maxₘ‖g_m‖∞`: the keep-probability is magnitude-proportional,
+//! but the transmitted values are rescaled by `s_t` to preserve
+//! unbiasedness (which requires sharing the norm — the re-scaling-attack
+//! surface sparsign avoids). We implement the per-worker scale
+//! `s_t = ‖g_m‖∞`; the cross-worker-max "magnitude sharing protocol"
+//! variant only changes the scalar and is covered by the aggregation tests.
+
+use super::{ternary_bits, CompressedGrad, Compressor};
+use crate::coding::cost::CostModel;
+use crate::util::linf_norm;
+use crate::util::rng::{bernoulli_threshold, Pcg64, U32Stream};
+
+/// TernGrad compressor.
+#[derive(Clone, Copy, Debug)]
+pub struct TernGradCompressor;
+
+impl Compressor for TernGradCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        let st = linf_norm(g);
+        if st == 0.0 || g.is_empty() {
+            return CompressedGrad::Ternary { q: vec![0; g.len()], scale: 0.0, bits: 32.0 };
+        }
+        let inv = 1.0 / st;
+        let mut q = vec![0i8; g.len()];
+        let mut nnz = 0usize;
+        let mut u = U32Stream::new(rng);
+        for (qi, &gi) in q.iter_mut().zip(g.iter()) {
+            let thr = bernoulli_threshold(gi.abs() * inv); // p ≤ 1 by construction
+            if u.bernoulli(thr) {
+                *qi = if gi > 0.0 { 1 } else { -1 };
+                nnz += 1;
+            }
+        }
+        let bits = ternary_bits(g.len(), nnz, true);
+        CompressedGrad::Ternary { q, scale: st, bits }
+    }
+
+    fn name(&self) -> String {
+        "terngrad".into()
+    }
+
+    fn cost_model(&self) -> CostModel {
+        CostModel::SparseTernary
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased() {
+        let g = vec![0.5f32, -1.0, 0.25, 0.0];
+        let mut c = TernGradCompressor;
+        let mut rng = Pcg64::seed_from(1);
+        let trials = 60_000;
+        let mut sums = vec![0.0f64; 4];
+        for _ in 0..trials {
+            for (s, v) in sums.iter_mut().zip(c.compress(&g, &mut rng).to_dense()) {
+                *s += v as f64;
+            }
+        }
+        for (i, &s) in sums.iter().enumerate() {
+            let mean = s / trials as f64;
+            assert!((mean - g[i] as f64).abs() < 0.015, "coord {i}: {mean} vs {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn max_coordinate_always_kept() {
+        let g = vec![0.1f32, -2.0, 0.3];
+        let mut c = TernGradCompressor;
+        let mut rng = Pcg64::seed_from(2);
+        for _ in 0..200 {
+            let d = c.compress(&g, &mut rng).to_dense();
+            assert_eq!(d[1], -2.0); // p = |g|/‖g‖∞ = 1 for the max coord
+        }
+    }
+
+    #[test]
+    fn zero_gradient() {
+        let mut c = TernGradCompressor;
+        let mut rng = Pcg64::seed_from(3);
+        let msg = c.compress(&[0.0; 8], &mut rng);
+        assert_eq!(msg.nnz(), 0);
+        assert_eq!(msg.bits(), 32.0);
+    }
+
+    #[test]
+    fn relation_to_sparsign_remark2() {
+        // TernGrad keep-probabilities equal sparsign's with B = 1/‖g‖∞
+        // (Remark 2). Compare empirical densities.
+        use crate::compressors::SparsignCompressor;
+        let mut data_rng = Pcg64::seed_from(4);
+        let mut g = vec![0.0; 2048];
+        data_rng.fill_normal(&mut g, 0.0, 0.3);
+        let b = 1.0 / linf_norm(&g);
+        let mut tern = TernGradCompressor;
+        let mut spar = SparsignCompressor { budget: b };
+        let mut r1 = Pcg64::seed_from(5);
+        let mut r2 = Pcg64::seed_from(6);
+        let reps = 64;
+        let nt: usize = (0..reps).map(|_| tern.compress(&g, &mut r1).nnz()).sum();
+        let ns: usize = (0..reps).map(|_| spar.compress(&g, &mut r2).nnz()).sum();
+        let (nt, ns) = (nt as f64 / reps as f64, ns as f64 / reps as f64);
+        assert!((nt - ns).abs() < 0.05 * nt.max(ns), "terngrad {nt} sparsign {ns}");
+    }
+}

@@ -1,0 +1,297 @@
+//! Layered experiment configuration: presets → config file → CLI flags.
+//!
+//! The config system is deliberately plain-text (simple `key = value`
+//! lines; the sandbox registry has no serde) but covers the full
+//! experiment space: task preset, Dirichlet α, worker count and
+//! participation, model, algorithm roster, rounds, schedules, seeds and
+//! scale knobs. Every experiment harness consumes an [`ExperimentConfig`].
+
+use crate::coordinator::Algorithm;
+pub use crate::coordinator::Algorithm as AlgorithmSpec;
+use crate::data::SyntheticSpec;
+use crate::model::ModelKind;
+use crate::optim::LrSchedule;
+
+/// Which benchmark task to generate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TaskSpec {
+    FmnistLike,
+    Cifar10Like,
+    Cifar100Like,
+    /// Fully custom synthetic task.
+    Custom { dim: usize, classes: usize, train: usize, test: usize },
+}
+
+impl TaskSpec {
+    pub fn synthetic_spec(&self) -> SyntheticSpec {
+        match self {
+            TaskSpec::FmnistLike => SyntheticSpec::fmnist_like(),
+            TaskSpec::Cifar10Like => SyntheticSpec::cifar10_like(),
+            TaskSpec::Cifar100Like => SyntheticSpec::cifar100_like(),
+            TaskSpec::Custom { dim, classes, train, test } => SyntheticSpec {
+                dim: *dim,
+                classes: *classes,
+                modes: 2,
+                separation: 1.2,
+                noise: 0.4,
+                label_noise: 0.02,
+                train: *train,
+                test: *test,
+            },
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaskSpec::FmnistLike => "fmnist-like",
+            TaskSpec::Cifar10Like => "cifar10-like",
+            TaskSpec::Cifar100Like => "cifar100-like",
+            TaskSpec::Custom { .. } => "custom",
+        }
+    }
+}
+
+/// Learning-rate schedule selection (resolved against `lr`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleKind {
+    Const,
+    PaperCifar10,
+    PaperCifar100,
+}
+
+impl ScheduleKind {
+    pub fn build(&self, lr: f64) -> LrSchedule {
+        match self {
+            ScheduleKind::Const => LrSchedule::Const { lr },
+            ScheduleKind::PaperCifar10 => LrSchedule::paper_cifar10(lr),
+            ScheduleKind::PaperCifar100 => LrSchedule::paper_cifar100(lr),
+        }
+    }
+}
+
+/// A complete experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub task: TaskSpec,
+    /// Dirichlet concentration α (heterogeneity).
+    pub alpha: f64,
+    pub workers: usize,
+    pub participation: f64,
+    pub model: ModelKind,
+    pub algorithms: Vec<Algorithm>,
+    /// Optional per-algorithm learning-rate overrides (the paper tunes η
+    /// per algorithm; empty = use `lr` for all, otherwise must match
+    /// `algorithms` in length).
+    pub lr_overrides: Vec<Option<f64>>,
+    pub rounds: usize,
+    pub batch: usize,
+    pub eval_every: usize,
+    pub seeds: Vec<u64>,
+    pub lr: f64,
+    pub schedule: ScheduleKind,
+    /// Accuracy targets for the rounds/bits-to-target columns.
+    pub targets: Vec<f64>,
+    /// Dataset size multiplier (1.0 = preset size).
+    pub data_scale: f64,
+    /// Optional feature-dimension override (fast presets shrink the model).
+    pub dim_override: Option<usize>,
+}
+
+impl ExperimentConfig {
+    /// A fast smoke-scale preset: small task, linear model, three core
+    /// algorithms — used by `examples/quickstart.rs` and CI.
+    pub fn fast_preset() -> Self {
+        use crate::compressors::CompressorKind;
+        use crate::coordinator::AggregationRule;
+        ExperimentConfig {
+            name: "fast".into(),
+            task: TaskSpec::Custom { dim: 32, classes: 5, train: 1_500, test: 400 },
+            alpha: 0.3,
+            workers: 20,
+            participation: 1.0,
+            model: ModelKind::Mlp { inputs: 32, hidden: vec![32], classes: 5 },
+            algorithms: vec![
+                Algorithm::CompressedGd {
+                    compressor: CompressorKind::Sign,
+                    aggregation: AggregationRule::MajorityVote,
+                },
+                Algorithm::CompressedGd {
+                    compressor: CompressorKind::Sparsign { budget: 1.0 },
+                    aggregation: AggregationRule::MajorityVote,
+                },
+                Algorithm::EfSparsign {
+                    b_local: 10.0,
+                    b_global: 1.0,
+                    tau: 1,
+                    server_lr_scale: None,
+                    server_ef: true,
+                },
+            ],
+            lr_overrides: Vec::new(),
+            rounds: 100,
+            batch: 32,
+            eval_every: 10,
+            seeds: vec![0, 1],
+            lr: 0.02,
+            schedule: ScheduleKind::Const,
+            targets: vec![0.5, 0.7],
+            data_scale: 1.0,
+            dim_override: None,
+        }
+    }
+
+    /// Apply a `key=value` override (from a config file line or CLI).
+    /// Returns an error string for unknown keys / malformed values.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn parse<T: std::str::FromStr>(v: &str, key: &str) -> Result<T, String> {
+            v.parse::<T>()
+                .map_err(|_| format!("invalid value '{v}' for key '{key}'"))
+        }
+        match key {
+            "name" => self.name = value.to_string(),
+            "alpha" => self.alpha = parse(value, key)?,
+            "workers" => self.workers = parse(value, key)?,
+            "participation" => self.participation = parse(value, key)?,
+            "rounds" => self.rounds = parse(value, key)?,
+            "batch" => self.batch = parse(value, key)?,
+            "eval_every" => self.eval_every = parse(value, key)?,
+            "lr" => self.lr = parse(value, key)?,
+            "data_scale" => self.data_scale = parse(value, key)?,
+            "seeds" => {
+                self.seeds = value
+                    .split(',')
+                    .map(|s| parse::<u64>(s.trim(), key))
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            "targets" => {
+                self.targets = value
+                    .split(',')
+                    .map(|s| parse::<f64>(s.trim(), key))
+                    .collect::<Result<Vec<_>, _>>()?;
+            }
+            "task" => {
+                self.task = match value {
+                    "fmnist" | "fmnist-like" => TaskSpec::FmnistLike,
+                    "cifar10" | "cifar10-like" => TaskSpec::Cifar10Like,
+                    "cifar100" | "cifar100-like" => TaskSpec::Cifar100Like,
+                    other => return Err(format!("unknown task '{other}'")),
+                };
+            }
+            "schedule" => {
+                self.schedule = match value {
+                    "const" => ScheduleKind::Const,
+                    "cifar10" => ScheduleKind::PaperCifar10,
+                    "cifar100" => ScheduleKind::PaperCifar100,
+                    other => return Err(format!("unknown schedule '{other}'")),
+                };
+            }
+            other => return Err(format!("unknown config key '{other}'")),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file body: `key = value` per line, `#` comments.
+    pub fn apply_file(&mut self, body: &str) -> Result<(), String> {
+        for (ln, raw) in body.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            self.apply_override(k.trim(), v.trim())
+                .map_err(|e| format!("line {}: {e}", ln + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("workers must be > 0".into());
+        }
+        if !(self.participation > 0.0 && self.participation <= 1.0) {
+            return Err(format!("participation {} out of (0,1]", self.participation));
+        }
+        if self.rounds == 0 || self.batch == 0 {
+            return Err("rounds and batch must be > 0".into());
+        }
+        if self.seeds.is_empty() {
+            return Err("need at least one seed".into());
+        }
+        if self.algorithms.is_empty() {
+            return Err("need at least one algorithm".into());
+        }
+        if !self.lr_overrides.is_empty() && self.lr_overrides.len() != self.algorithms.len() {
+            return Err(format!(
+                "lr_overrides has {} entries but there are {} algorithms",
+                self.lr_overrides.len(),
+                self.algorithms.len()
+            ));
+        }
+        if !(self.data_scale > 0.0) {
+            return Err("data_scale must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_preset_is_valid() {
+        let c = ExperimentConfig::fast_preset();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.task.label(), "custom");
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = ExperimentConfig::fast_preset();
+        c.apply_override("alpha", "0.7").unwrap();
+        c.apply_override("rounds", "42").unwrap();
+        c.apply_override("seeds", "3, 4, 5").unwrap();
+        c.apply_override("task", "cifar100").unwrap();
+        c.apply_override("schedule", "cifar100").unwrap();
+        assert_eq!(c.alpha, 0.7);
+        assert_eq!(c.rounds, 42);
+        assert_eq!(c.seeds, vec![3, 4, 5]);
+        assert_eq!(c.task, TaskSpec::Cifar100Like);
+        assert_eq!(c.schedule, ScheduleKind::PaperCifar100);
+    }
+
+    #[test]
+    fn unknown_key_and_bad_value_rejected() {
+        let mut c = ExperimentConfig::fast_preset();
+        assert!(c.apply_override("nope", "1").is_err());
+        assert!(c.apply_override("rounds", "abc").is_err());
+        assert!(c.apply_override("task", "imagenet").is_err());
+    }
+
+    #[test]
+    fn file_parsing_with_comments() {
+        let mut c = ExperimentConfig::fast_preset();
+        c.apply_file("# comment\nalpha = 0.1\n\nrounds = 7 # trailing\n").unwrap();
+        assert_eq!(c.alpha, 0.1);
+        assert_eq!(c.rounds, 7);
+        let err = c.apply_file("garbage line").unwrap_err();
+        assert!(err.contains("line 1"));
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = ExperimentConfig::fast_preset();
+        c.participation = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::fast_preset();
+        c.seeds.clear();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::fast_preset();
+        c.algorithms.clear();
+        assert!(c.validate().is_err());
+    }
+}

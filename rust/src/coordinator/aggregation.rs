@@ -1,0 +1,153 @@
+//! Server-side aggregation rules `C(·)` from Algorithm 1 / Algorithm 2.
+
+use crate::compressors::CompressedGrad;
+use crate::util::l1_norm;
+
+/// The aggregation rule applied to the averaged worker messages before
+/// broadcast.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregationRule {
+    /// Majority vote: `C(x) = sign(x)` coordinate-wise (signSGD /
+    /// SPARSIGNSGD; downlink is `d` bits). `sign(0) = 0` — a tied
+    /// coordinate moves nothing, matching the ternary analysis.
+    MajorityVote,
+    /// Scaled sign: `C(x) = (‖x‖₁/d)·sign(x)` — the α-approximate
+    /// compressor used by EF-SPARSIGNSGD's server (downlink `d + 32` bits).
+    ScaledSign,
+    /// Plain mean (no server compression; downlink `32·d` bits) — used by
+    /// the unbiased baselines (QSGD, TernGrad, FedAvg, FedCom).
+    Mean,
+}
+
+/// Result of server aggregation.
+#[derive(Clone, Debug)]
+pub struct Aggregate {
+    /// The broadcast update `g̃` (dense, decoded).
+    pub update: Vec<f32>,
+    /// The pre-compression quantity `avg(Δ) + ẽ` — Algorithm 2's error
+    /// feedback needs it to form `ẽ^{(t+1)} = raw − g̃` (eq. 8).
+    pub raw: Vec<f32>,
+    /// Downlink message size in bits.
+    pub downlink_bits: f64,
+}
+
+impl AggregationRule {
+    /// Average the worker messages and apply the rule.
+    ///
+    /// `pre_add` (the server error-feedback residual in Algorithm 2) is
+    /// added to the average *before* compression; pass `None` for
+    /// Algorithm 1.
+    pub fn aggregate(&self, msgs: &[CompressedGrad], pre_add: Option<&[f32]>) -> Aggregate {
+        assert!(!msgs.is_empty(), "aggregation over zero messages");
+        let d = msgs[0].dim();
+        assert!(
+            msgs.iter().all(|m| m.dim() == d),
+            "mismatched message dimensions"
+        );
+        let mut avg = vec![0.0f32; d];
+        for m in msgs {
+            m.add_into(&mut avg);
+        }
+        let inv = 1.0 / msgs.len() as f32;
+        for v in avg.iter_mut() {
+            *v *= inv;
+        }
+        if let Some(e) = pre_add {
+            assert_eq!(e.len(), d, "error-feedback dim mismatch");
+            for (a, &ei) in avg.iter_mut().zip(e) {
+                *a += ei;
+            }
+        }
+        let raw = avg.clone();
+        match self {
+            AggregationRule::MajorityVote => {
+                for v in avg.iter_mut() {
+                    *v = crate::util::sign0(*v);
+                }
+                Aggregate { update: avg, raw, downlink_bits: d as f64 }
+            }
+            AggregationRule::ScaledSign => {
+                let scale = l1_norm(&avg) / d.max(1) as f32;
+                for v in avg.iter_mut() {
+                    *v = scale * crate::util::sign1(*v);
+                }
+                Aggregate { update: avg, raw, downlink_bits: d as f64 + 32.0 }
+            }
+            AggregationRule::Mean => {
+                Aggregate { update: avg, raw, downlink_bits: 32.0 * d as f64 }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tern(q: Vec<i8>, scale: f32) -> CompressedGrad {
+        CompressedGrad::Ternary { q, scale, bits: 0.0 }
+    }
+
+    #[test]
+    fn majority_vote_basic() {
+        let msgs = vec![
+            tern(vec![1, -1, 0], 1.0),
+            tern(vec![1, 1, 0], 1.0),
+            tern(vec![-1, -1, 0], 1.0),
+        ];
+        let agg = AggregationRule::MajorityVote.aggregate(&msgs, None);
+        assert_eq!(agg.update, vec![1.0, -1.0, 0.0]);
+        assert_eq!(agg.downlink_bits, 3.0);
+    }
+
+    #[test]
+    fn majority_vote_tie_is_zero() {
+        let msgs = vec![tern(vec![1], 1.0), tern(vec![-1], 1.0)];
+        let agg = AggregationRule::MajorityVote.aggregate(&msgs, None);
+        assert_eq!(agg.update, vec![0.0]);
+    }
+
+    #[test]
+    fn scaled_sign_magnitude() {
+        let msgs = vec![tern(vec![1, -1, 1, 1], 2.0)];
+        let agg = AggregationRule::ScaledSign.aggregate(&msgs, None);
+        // avg = [2,-2,2,2]; ‖·‖₁/d = 2 ⇒ update = 2·sign.
+        assert_eq!(agg.update, vec![2.0, -2.0, 2.0, 2.0]);
+        assert_eq!(agg.downlink_bits, 36.0);
+    }
+
+    #[test]
+    fn mean_is_exact_average() {
+        let msgs = vec![
+            CompressedGrad::Dense { v: vec![1.0, 3.0], bits: 0.0 },
+            CompressedGrad::Dense { v: vec![3.0, 5.0], bits: 0.0 },
+        ];
+        let agg = AggregationRule::Mean.aggregate(&msgs, None);
+        assert_eq!(agg.update, vec![2.0, 4.0]);
+        assert_eq!(agg.downlink_bits, 64.0);
+    }
+
+    #[test]
+    fn pre_add_feeds_error_feedback() {
+        let msgs = vec![tern(vec![1, 0], 1.0)];
+        let e = vec![-2.0, 0.5];
+        let agg = AggregationRule::MajorityVote.aggregate(&msgs, Some(&e));
+        // avg + e = [-1, 0.5] ⇒ sign = [-1, 1].
+        assert_eq!(agg.update, vec![-1.0, 1.0]);
+        // `raw` carries the pre-compression average for the EF recursion.
+        assert_eq!(agg.raw, vec![-1.0, 0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero messages")]
+    fn empty_rejected() {
+        AggregationRule::MajorityVote.aggregate(&[], None);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched message dimensions")]
+    fn dim_mismatch_rejected() {
+        let msgs = vec![tern(vec![1], 1.0), tern(vec![1, 1], 1.0)];
+        AggregationRule::MajorityVote.aggregate(&msgs, None);
+    }
+}

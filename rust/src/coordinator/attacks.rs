@@ -1,0 +1,96 @@
+//! Adversarial worker behaviours.
+//!
+//! Remark 2(4) of the paper argues sparsign is "robust against re-scaling
+//! attacks that manipulate the magnitudes" because, unlike TernGrad /
+//! QSGD, no norm is exchanged — a malicious worker can blow up its
+//! gradient magnitude yet still contributes at most ±1 per coordinate.
+//! These attack models let the experiment suite quantify that claim
+//! (`examples/attack_robustness.rs`).
+
+/// Attack applied to a malicious worker's gradient before compression.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Attack {
+    /// Multiply the gradient by `factor` (re-scaling attack; Jin et al.
+    /// 2020). Defeats magnitude-sharing compressors whose decoded values
+    /// scale with ‖g‖.
+    Rescale { factor: f32 },
+    /// Flip the gradient sign (Byzantine sign-flip).
+    SignFlip,
+    /// Replace the gradient with noise of the given magnitude.
+    Garbage { magnitude: f32 },
+}
+
+/// Which workers are malicious: the first `count` worker ids (the engine
+/// shuffles worker identity at partition time, so this is a uniform
+/// random subset of the data distribution).
+#[derive(Clone, Copy, Debug)]
+pub struct AttackPlan {
+    pub attack: Attack,
+    pub malicious: usize,
+}
+
+impl AttackPlan {
+    pub fn is_malicious(&self, worker: usize) -> bool {
+        worker < self.malicious
+    }
+
+    /// Apply the attack in place to a malicious worker's gradient.
+    pub fn apply(&self, worker: usize, g: &mut [f32], rng: &mut crate::util::rng::Pcg64) {
+        if !self.is_malicious(worker) {
+            return;
+        }
+        match self.attack {
+            Attack::Rescale { factor } => {
+                for v in g.iter_mut() {
+                    *v *= factor;
+                }
+            }
+            Attack::SignFlip => {
+                for v in g.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            Attack::Garbage { magnitude } => {
+                for v in g.iter_mut() {
+                    *v = rng.normal_f32(0.0, magnitude);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn rescale_only_hits_malicious() {
+        let plan = AttackPlan { attack: Attack::Rescale { factor: 100.0 }, malicious: 2 };
+        let mut rng = Pcg64::seed_from(1);
+        let mut g = vec![1.0, -2.0];
+        plan.apply(1, &mut g, &mut rng);
+        assert_eq!(g, vec![100.0, -200.0]);
+        let mut g2 = vec![1.0, -2.0];
+        plan.apply(2, &mut g2, &mut rng);
+        assert_eq!(g2, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn sign_flip() {
+        let plan = AttackPlan { attack: Attack::SignFlip, malicious: 1 };
+        let mut rng = Pcg64::seed_from(2);
+        let mut g = vec![1.0, -2.0, 0.0];
+        plan.apply(0, &mut g, &mut rng);
+        assert_eq!(g, vec![-1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn garbage_replaces_gradient() {
+        let plan = AttackPlan { attack: Attack::Garbage { magnitude: 5.0 }, malicious: 1 };
+        let mut rng = Pcg64::seed_from(3);
+        let mut g = vec![1.0; 64];
+        plan.apply(0, &mut g, &mut rng);
+        assert!(g.iter().any(|&v| v != 1.0));
+    }
+}

@@ -1,0 +1,92 @@
+//! Communication accounting: every bit that crosses the (simulated)
+//! network is recorded here, per round and per direction. The paper's
+//! "communication overhead" columns are uplink (worker → server) totals.
+
+/// Per-round communication record.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundComm {
+    /// Worker → server bits this round (summed over selected workers).
+    pub uplink_bits: f64,
+    /// Server → worker bits this round (one broadcast message; the paper
+    /// counts a single copy, not per-recipient fan-out).
+    pub downlink_bits: f64,
+    /// Number of workers that transmitted.
+    pub senders: usize,
+}
+
+/// Cumulative communication ledger.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    rounds: Vec<RoundComm>,
+}
+
+impl CommLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, round: RoundComm) {
+        self.rounds.push(round);
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Total uplink bits so far.
+    pub fn total_uplink(&self) -> f64 {
+        self.rounds.iter().map(|r| r.uplink_bits).sum()
+    }
+
+    /// Total downlink bits so far.
+    pub fn total_downlink(&self) -> f64 {
+        self.rounds.iter().map(|r| r.downlink_bits).sum()
+    }
+
+    /// Cumulative uplink bits after round `t` (inclusive, 0-based).
+    pub fn uplink_through(&self, t: usize) -> f64 {
+        self.rounds[..=t.min(self.rounds.len().saturating_sub(1))]
+            .iter()
+            .map(|r| r.uplink_bits)
+            .sum()
+    }
+
+    pub fn get(&self, t: usize) -> Option<&RoundComm> {
+        self.rounds.get(t)
+    }
+
+    /// Mean uplink bits per round.
+    pub fn mean_uplink_per_round(&self) -> f64 {
+        if self.rounds.is_empty() {
+            0.0
+        } else {
+            self.total_uplink() / self.rounds.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_accumulate() {
+        let mut l = CommLedger::new();
+        l.record(RoundComm { uplink_bits: 100.0, downlink_bits: 10.0, senders: 5 });
+        l.record(RoundComm { uplink_bits: 50.0, downlink_bits: 10.0, senders: 5 });
+        assert_eq!(l.rounds(), 2);
+        assert_eq!(l.total_uplink(), 150.0);
+        assert_eq!(l.total_downlink(), 20.0);
+        assert_eq!(l.uplink_through(0), 100.0);
+        assert_eq!(l.uplink_through(1), 150.0);
+        assert_eq!(l.mean_uplink_per_round(), 75.0);
+    }
+
+    #[test]
+    fn empty_ledger() {
+        let l = CommLedger::new();
+        assert_eq!(l.total_uplink(), 0.0);
+        assert_eq!(l.mean_uplink_per_round(), 0.0);
+        assert!(l.get(0).is_none());
+    }
+}

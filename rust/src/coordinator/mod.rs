@@ -1,0 +1,610 @@
+//! The L3 coordinator: the paper's training protocols.
+//!
+//! * [`Algorithm::CompressedGd`] — Algorithm 1 (one compressed gradient
+//!   per selected worker per round, server aggregation `C(·)`, broadcast).
+//!   With `compressor = sparsign` and `aggregation = MajorityVote` this is
+//!   **SPARSIGNSGD**; with the other compressor kinds it instantiates every
+//!   baseline row of Tables 1–2.
+//! * [`Algorithm::EfSparsign`] — Algorithm 2 (**EF-SPARSIGNSGD**): τ local
+//!   sparsign steps per worker (budget `B_l`), a sparsign-compressed model
+//!   update (budget `B_g`), and *server-side* error feedback (eq. 8) around
+//!   the scaled-sign α-approximate broadcast compressor.
+//! * [`Algorithm::FedAvg`] / [`Algorithm::FedCom`] — the local-update
+//!   baselines of Table 3 / Fig. 3 (FedCom = FedAvg + s-level QSGD on the
+//!   model delta; Haddadpour et al. 2021).
+//!
+//! The engine is fully deterministic given the run seed: worker `m` at
+//! round `t` draws from a stream derived as `root.derive(t‖m)`, so runs
+//! replay bit-exactly regardless of execution order.
+
+pub mod aggregation;
+pub mod attacks;
+pub mod env;
+pub mod ledger;
+pub mod sampling;
+
+pub use aggregation::{Aggregate, AggregationRule};
+pub use attacks::{Attack, AttackPlan};
+pub use env::{ClassifierEnv, GradientSource, RosenbrockEnv};
+pub use ledger::{CommLedger, RoundComm};
+pub use sampling::WorkerSampler;
+
+use crate::compressors::{
+    Compressor, CompressorKind, NormKind, QsgdCompressor, SparsignCompressor,
+};
+use crate::optim::{sgd_step, LrSchedule};
+use crate::util::rng::Pcg64;
+
+/// Federated training algorithm.
+#[derive(Clone, Debug)]
+pub enum Algorithm {
+    /// Algorithm 1: compressed distributed SGD with worker sampling.
+    CompressedGd { compressor: CompressorKind, aggregation: AggregationRule },
+    /// Algorithm 2: EF-SPARSIGNSGD with τ local updates; `server_lr_scale`
+    /// is the η multiplier (Theorem 3 sets η = τ, the default when None).
+    EfSparsign {
+        b_local: f32,
+        b_global: f32,
+        tau: usize,
+        server_lr_scale: Option<f64>,
+        /// Ablation switch: `false` disables the eq. (8) server residual
+        /// (the update becomes plain scaled-sign of the round average).
+        server_ef: bool,
+    },
+    /// FedAvg (McMahan et al. 2017): τ full-precision local steps,
+    /// uncompressed model-delta upload.
+    FedAvg { tau: usize },
+    /// FedCom (Haddadpour et al. 2021): FedAvg + s-level QSGD on the
+    /// uploaded delta (the paper uses s=255, i.e. 8-bit).
+    FedCom { tau: usize, levels: u32 },
+}
+
+impl Algorithm {
+    /// Table-row label matching the paper's naming.
+    pub fn label(&self) -> String {
+        match self {
+            Algorithm::CompressedGd { compressor, .. } => compressor.label(),
+            Algorithm::EfSparsign { b_local, b_global, tau, .. } => {
+                format!("EF-sparsignSGD(Bl={b_local},Bg={b_global},tau={tau})")
+            }
+            Algorithm::FedAvg { tau } => format!("FedAvg-Local{tau}"),
+            Algorithm::FedCom { tau, levels } => {
+                let bits = (*levels as f64 + 1.0).log2().ceil() as u32;
+                format!("FedCom-Local{tau}({bits}bit)")
+            }
+        }
+    }
+
+    /// Local steps per round.
+    pub fn tau(&self) -> usize {
+        match self {
+            Algorithm::CompressedGd { .. } => 1,
+            Algorithm::EfSparsign { tau, .. }
+            | Algorithm::FedAvg { tau }
+            | Algorithm::FedCom { tau, .. } => *tau,
+        }
+    }
+}
+
+/// Per-round metrics.
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub round: usize,
+    pub lr: f64,
+    /// Mean mini-batch loss over participating workers (first local step).
+    pub train_loss: f64,
+    /// `(test_loss, test_accuracy)` when this was an eval round.
+    pub eval: Option<(f64, f64)>,
+    pub uplink_bits: f64,
+    pub downlink_bits: f64,
+    /// Cumulative uplink bits through this round.
+    pub cum_uplink_bits: f64,
+}
+
+/// Full run output.
+#[derive(Clone, Debug)]
+pub struct RunHistory {
+    pub label: String,
+    pub dim: usize,
+    pub reports: Vec<RoundReport>,
+    pub final_params: Vec<f32>,
+}
+
+impl RunHistory {
+    /// Last recorded evaluation `(loss, acc)`.
+    pub fn final_eval(&self) -> Option<(f64, f64)> {
+        self.reports.iter().rev().find_map(|r| r.eval)
+    }
+
+    /// First round (1-based, as the paper reports) whose evaluation
+    /// accuracy reaches `target`.
+    pub fn rounds_to_acc(&self, target: f64) -> Option<usize> {
+        self.reports
+            .iter()
+            .find(|r| r.eval.map(|(_, a)| a >= target).unwrap_or(false))
+            .map(|r| r.round + 1)
+    }
+
+    /// Cumulative uplink bits when accuracy first reaches `target`.
+    pub fn uplink_to_acc(&self, target: f64) -> Option<f64> {
+        self.reports
+            .iter()
+            .find(|r| r.eval.map(|(_, a)| a >= target).unwrap_or(false))
+            .map(|r| r.cum_uplink_bits)
+    }
+
+    /// Evaluation series `(round, acc, cum_uplink_bits)` for the Fig. 3
+    /// style curves.
+    pub fn eval_series(&self) -> Vec<(usize, f64, f64)> {
+        self.reports
+            .iter()
+            .filter_map(|r| r.eval.map(|(_, a)| (r.round + 1, a, r.cum_uplink_bits)))
+            .collect()
+    }
+
+    /// Total uplink bits over the run.
+    pub fn total_uplink(&self) -> f64 {
+        self.reports.last().map(|r| r.cum_uplink_bits).unwrap_or(0.0)
+    }
+}
+
+/// Inspection hook invoked once per round *before* the model update:
+/// `(round, params, aggregated_update)`. Used by the Fig. 1/2 harness to
+/// measure the probability of wrong aggregation.
+pub type RoundProbe<'a> = &'a mut dyn FnMut(usize, &[f32], &[f32]);
+
+/// A configured training run (the `FederatedServer` driver).
+pub struct TrainingRun {
+    pub algorithm: Algorithm,
+    pub schedule: LrSchedule,
+    pub rounds: usize,
+    /// Worker participation fraction `p_s` per round.
+    pub participation: f64,
+    /// Evaluate every k rounds (and always on the final round). 0 ⇒ only
+    /// the final round.
+    pub eval_every: usize,
+    pub seed: u64,
+    pub attack: Option<AttackPlan>,
+    /// Permit stateful (worker-EF) compressors under partial
+    /// participation — off by default because that is exactly the broken
+    /// configuration the paper identifies; enable only to demonstrate it.
+    pub allow_stateful_with_sampling: bool,
+}
+
+/// Alias kept for API symmetry with the docs ("the federated server").
+pub type FederatedServer = TrainingRun;
+
+impl TrainingRun {
+    /// Minimal constructor with the common defaults.
+    pub fn new(algorithm: Algorithm, schedule: LrSchedule, rounds: usize) -> Self {
+        Self {
+            algorithm,
+            schedule,
+            rounds,
+            participation: 1.0,
+            eval_every: 10,
+            seed: 0,
+            attack: None,
+            allow_stateful_with_sampling: false,
+        }
+    }
+
+    /// Execute the run on `env`, starting from `init` parameters,
+    /// evaluating with `eval` (return `(loss, acc)`).
+    pub fn run(
+        &self,
+        env: &dyn GradientSource,
+        init: Vec<f32>,
+        eval: &dyn Fn(&[f32]) -> (f64, f64),
+    ) -> RunHistory {
+        self.run_probed(env, init, eval, None)
+    }
+
+    /// [`TrainingRun::run`] with an optional per-round probe.
+    pub fn run_probed(
+        &self,
+        env: &dyn GradientSource,
+        init: Vec<f32>,
+        eval: &dyn Fn(&[f32]) -> (f64, f64),
+        mut probe: Option<RoundProbe<'_>>,
+    ) -> RunHistory {
+        let d = env.dim();
+        assert_eq!(init.len(), d, "init params dim mismatch");
+        assert!(self.rounds > 0, "need at least one round");
+        let m = env.workers();
+        let sampler = WorkerSampler::new(m, self.participation);
+        let root = Pcg64::new(self.seed, 0xc0_0e_d1);
+        let mut select_rng = root.derive(0xfeed);
+
+        // Per-worker compressor instances (stateful EF baseline keeps its
+        // residual here).
+        let mut worker_comps: Vec<Box<dyn Compressor>> = match &self.algorithm {
+            Algorithm::CompressedGd { compressor, .. } => {
+                (0..m).map(|_| compressor.build(d)).collect()
+            }
+            _ => Vec::new(),
+        };
+        if let Some(c) = worker_comps.first() {
+            if c.requires_worker_state()
+                && self.participation < 1.0
+                && !self.allow_stateful_with_sampling
+            {
+                panic!(
+                    "compressor '{}' keeps worker-side state and participation is {} < 1: \
+                     this is the configuration the paper shows to be broken \
+                     (stale error feedback); set allow_stateful_with_sampling \
+                     to run it anyway",
+                    c.name(),
+                    self.participation
+                );
+            }
+        }
+
+        // Server error-feedback residual (Algorithm 2 only).
+        let mut server_residual = vec![0.0f32; d];
+        let mut params = init;
+        let mut reports = Vec::with_capacity(self.rounds);
+        let mut cum_uplink = 0.0f64;
+        let mut grad_buf = vec![0.0f32; d];
+
+        for t in 0..self.rounds {
+            let lr = self.schedule.at(t);
+            let selected = sampler.select(&mut select_rng);
+            let mut msgs = Vec::with_capacity(selected.len());
+            let mut loss_sum = 0.0f64;
+            let mut uplink = 0.0f64;
+
+            match &self.algorithm {
+                Algorithm::CompressedGd { .. } => {
+                    for &w in &selected {
+                        let mut wrng = root.derive(((t as u64) << 24) | w as u64);
+                        let loss = env.sample_grad(w, &params, &mut wrng, &mut grad_buf);
+                        if let Some(plan) = &self.attack {
+                            plan.apply(w, &mut grad_buf, &mut wrng);
+                        }
+                        let msg = worker_comps[w].compress(&grad_buf, &mut wrng);
+                        uplink += msg.bits();
+                        loss_sum += loss as f64;
+                        msgs.push(msg);
+                    }
+                }
+                Algorithm::EfSparsign { b_local, b_global, tau, .. } => {
+                    for &w in &selected {
+                        let mut wrng = root.derive(((t as u64) << 24) | w as u64);
+                        let mut local = SparsignCompressor { budget: *b_local };
+                        let mut wm = params.clone();
+                        let mut accum = vec![0.0f32; d];
+                        for c in 0..*tau {
+                            let loss =
+                                env.sample_grad(w, &wm, &mut wrng, &mut grad_buf);
+                            if c == 0 {
+                                loss_sum += loss as f64;
+                            }
+                            if let Some(plan) = &self.attack {
+                                plan.apply(w, &mut grad_buf, &mut wrng);
+                            }
+                            let q = local.compress(&grad_buf, &mut wrng);
+                            // wm ← wm − η_L·q ; accum ← accum + q.
+                            if let crate::compressors::CompressedGrad::Ternary {
+                                q: codes,
+                                ..
+                            } = &q
+                            {
+                                let eta_l = lr as f32;
+                                for ((wi, ai), &qi) in
+                                    wm.iter_mut().zip(accum.iter_mut()).zip(codes.iter())
+                                {
+                                    let qf = qi as f32;
+                                    *wi -= eta_l * qf;
+                                    *ai += qf;
+                                }
+                            }
+                        }
+                        let mut global = SparsignCompressor { budget: *b_global };
+                        let delta = global.compress(&accum, &mut wrng);
+                        uplink += delta.bits();
+                        msgs.push(delta);
+                    }
+                }
+                Algorithm::FedAvg { tau } | Algorithm::FedCom { tau, .. } => {
+                    for &w in &selected {
+                        let mut wrng = root.derive(((t as u64) << 24) | w as u64);
+                        let mut wm = params.clone();
+                        for c in 0..*tau {
+                            let loss =
+                                env.sample_grad(w, &wm, &mut wrng, &mut grad_buf);
+                            if c == 0 {
+                                loss_sum += loss as f64;
+                            }
+                            if let Some(plan) = &self.attack {
+                                plan.apply(w, &mut grad_buf, &mut wrng);
+                            }
+                            sgd_step(&mut wm, lr as f32, &grad_buf);
+                        }
+                        // Upload Δ = w − w_m (so the server's mean recovers
+                        // the FedAvg parameter average).
+                        let delta: Vec<f32> =
+                            params.iter().zip(&wm).map(|(a, b)| a - b).collect();
+                        let msg = match &self.algorithm {
+                            Algorithm::FedAvg { .. } => {
+                                crate::compressors::CompressedGrad::Dense {
+                                    bits: 32.0 * d as f64,
+                                    v: delta,
+                                }
+                            }
+                            Algorithm::FedCom { levels, .. } => {
+                                let mut q = QsgdCompressor {
+                                    levels: *levels,
+                                    norm: NormKind::L2,
+                                };
+                                q.compress(&delta, &mut wrng)
+                            }
+                            _ => unreachable!(),
+                        };
+                        uplink += msg.bits();
+                        msgs.push(msg);
+                    }
+                }
+            }
+
+            // ---- Server aggregation + model update -----------------------
+            let (update, scale, downlink) = match &self.algorithm {
+                Algorithm::CompressedGd { aggregation, .. } => {
+                    let agg = aggregation.aggregate(&msgs, None);
+                    (agg.update, lr as f32, agg.downlink_bits)
+                }
+                Algorithm::EfSparsign { tau, server_lr_scale, server_ef, .. } => {
+                    let residual = server_ef.then_some(server_residual.as_slice());
+                    let agg = AggregationRule::ScaledSign.aggregate(&msgs, residual);
+                    if *server_ef {
+                        // ẽ^{(t+1)} = raw − g̃  (eq. 8).
+                        for ((e, &r), &u) in server_residual
+                            .iter_mut()
+                            .zip(&agg.raw)
+                            .zip(&agg.update)
+                        {
+                            *e = r - u;
+                        }
+                    }
+                    let eta = server_lr_scale.unwrap_or(*tau as f64);
+                    ((agg.update), (eta * lr) as f32, agg.downlink_bits)
+                }
+                Algorithm::FedAvg { .. } | Algorithm::FedCom { .. } => {
+                    let agg = AggregationRule::Mean.aggregate(&msgs, None);
+                    // Global step γ = 1: w ← w − mean(Δ) = mean(w_m).
+                    (agg.update, 1.0, 32.0 * d as f64)
+                }
+            };
+            if let Some(p) = probe.as_mut() {
+                p(t, &params, &update);
+            }
+            sgd_step(&mut params, scale, &update);
+
+            cum_uplink += uplink;
+            let do_eval = if self.eval_every == 0 {
+                t + 1 == self.rounds
+            } else {
+                (t + 1) % self.eval_every == 0 || t + 1 == self.rounds
+            };
+            reports.push(RoundReport {
+                round: t,
+                lr,
+                train_loss: loss_sum / selected.len() as f64,
+                eval: if do_eval { Some(eval(&params)) } else { None },
+                uplink_bits: uplink,
+                downlink_bits: downlink,
+                cum_uplink_bits: cum_uplink,
+            });
+        }
+
+        RunHistory {
+            label: self.algorithm.label(),
+            dim: d,
+            reports,
+            final_params: params,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+    use crate::model::ModelKind;
+
+    fn env() -> ClassifierEnv {
+        let task = SyntheticTask::generate(
+            SyntheticSpec {
+                dim: 10,
+                classes: 3,
+                modes: 1,
+                separation: 1.8,
+                noise: 0.25,
+                label_noise: 0.0,
+                train: 600,
+                test: 150,
+            },
+            21,
+        );
+        let mut rng = Pcg64::seed_from(22);
+        let fed =
+            DirichletPartitioner { alpha: 0.5, workers: 10 }.partition(&task.train, &mut rng);
+        ClassifierEnv::new(
+            ModelKind::Linear { inputs: 10, classes: 3 }.build(),
+            task.train,
+            task.test,
+            fed,
+            16,
+        )
+    }
+
+    fn base_run(alg: Algorithm, rounds: usize) -> TrainingRun {
+        TrainingRun {
+            algorithm: alg,
+            schedule: LrSchedule::Const { lr: 0.05 },
+            rounds,
+            participation: 1.0,
+            eval_every: 10,
+            seed: 3,
+            attack: None,
+            allow_stateful_with_sampling: false,
+        }
+    }
+
+    #[test]
+    fn sparsign_majority_vote_learns() {
+        let e = env();
+        let mut rng = Pcg64::seed_from(1);
+        let init = e.init_params(&mut rng);
+        let run = base_run(
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::Sparsign { budget: 1.0 },
+                aggregation: AggregationRule::MajorityVote,
+            },
+            120,
+        );
+        let hist = run.run(&e, init, &|p| e.evaluate(p));
+        let (_, acc) = hist.final_eval().unwrap();
+        assert!(acc > 0.6, "sparsign failed to learn: acc {acc}");
+        assert!(hist.total_uplink() > 0.0);
+    }
+
+    #[test]
+    fn ef_sparsign_learns_with_sampling() {
+        let e = env();
+        let mut rng = Pcg64::seed_from(2);
+        let init = e.init_params(&mut rng);
+        let mut run = base_run(
+            Algorithm::EfSparsign {
+                b_local: 10.0,
+                b_global: 1.0,
+                tau: 3,
+                server_lr_scale: None,
+                server_ef: true,
+            },
+            80,
+        );
+        run.participation = 0.5;
+        run.schedule = LrSchedule::Const { lr: 0.02 };
+        let hist = run.run(&e, init, &|p| e.evaluate(p));
+        let (_, acc) = hist.final_eval().unwrap();
+        assert!(acc > 0.6, "EF-sparsign acc {acc}");
+    }
+
+    #[test]
+    fn fedavg_and_fedcom_learn() {
+        let e = env();
+        let mut rng = Pcg64::seed_from(3);
+        let init = e.init_params(&mut rng);
+        for alg in [
+            Algorithm::FedAvg { tau: 5 },
+            Algorithm::FedCom { tau: 5, levels: 255 },
+        ] {
+            let mut run = base_run(alg, 40);
+            run.schedule = LrSchedule::Const { lr: 0.05 };
+            let hist = run.run(&e, init.clone(), &|p| e.evaluate(p));
+            let (_, acc) = hist.final_eval().unwrap();
+            assert!(acc > 0.7, "{}: acc {acc}", hist.label);
+        }
+    }
+
+    #[test]
+    fn fedcom_uplink_cheaper_than_fedavg() {
+        let e = env();
+        let mut rng = Pcg64::seed_from(4);
+        let init = e.init_params(&mut rng);
+        let h_avg = base_run(Algorithm::FedAvg { tau: 2 }, 10).run(&e, init.clone(), &|p| {
+            e.evaluate(p)
+        });
+        let h_com = base_run(Algorithm::FedCom { tau: 2, levels: 255 }, 10).run(
+            &e,
+            init,
+            &|p| e.evaluate(p),
+        );
+        assert!(h_com.total_uplink() < h_avg.total_uplink());
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let e = env();
+        let mut rng = Pcg64::seed_from(5);
+        let init = e.init_params(&mut rng);
+        let run = base_run(
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::Sparsign { budget: 0.5 },
+                aggregation: AggregationRule::MajorityVote,
+            },
+            20,
+        );
+        let h1 = run.run(&e, init.clone(), &|p| e.evaluate(p));
+        let h2 = run.run(&e, init, &|p| e.evaluate(p));
+        assert_eq!(h1.final_params, h2.final_params);
+        assert_eq!(h1.total_uplink(), h2.total_uplink());
+    }
+
+    #[test]
+    #[should_panic(expected = "worker-side state")]
+    fn stateful_compressor_with_sampling_is_rejected() {
+        let e = env();
+        let mut rng = Pcg64::seed_from(6);
+        let init = e.init_params(&mut rng);
+        let mut run = base_run(
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::WorkerEf(Box::new(CompressorKind::Sign)),
+                aggregation: AggregationRule::ScaledSign,
+            },
+            5,
+        );
+        run.participation = 0.5;
+        run.run(&e, init, &|p| e.evaluate(p));
+    }
+
+    #[test]
+    fn probe_sees_every_round() {
+        let e = env();
+        let mut rng = Pcg64::seed_from(7);
+        let init = e.init_params(&mut rng);
+        let run = base_run(
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::Sign,
+                aggregation: AggregationRule::MajorityVote,
+            },
+            7,
+        );
+        let mut seen = Vec::new();
+        let mut probe = |t: usize, _p: &[f32], u: &[f32]| {
+            assert_eq!(u.len(), e.dim());
+            seen.push(t);
+        };
+        run.run_probed(&e, init, &|p| e.evaluate(p), Some(&mut probe));
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rounds_and_bits_to_target_extraction() {
+        let e = env();
+        let mut rng = Pcg64::seed_from(8);
+        let init = e.init_params(&mut rng);
+        let mut run = base_run(
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::Identity,
+                aggregation: AggregationRule::Mean,
+            },
+            60,
+        );
+        run.eval_every = 5;
+        let hist = run.run(&e, init, &|p| e.evaluate(p));
+        let (_, final_acc) = hist.final_eval().unwrap();
+        assert!(final_acc > 0.7);
+        let r = hist.rounds_to_acc(0.5).expect("should reach 50%");
+        let b = hist.uplink_to_acc(0.5).unwrap();
+        assert!(r <= 60 && b > 0.0);
+        assert!(hist.rounds_to_acc(1.1).is_none());
+        // Eval series is monotone in rounds and bits.
+        let series = hist.eval_series();
+        assert!(!series.is_empty());
+        for w in series.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].2 <= w[1].2);
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Worker sampling — the `S^{(t)}` selection step of Algorithms 1 & 2.
+
+use crate::util::rng::Pcg64;
+
+/// Uniform-without-replacement worker sampler (the paper's protocol: "the
+/// server selects a random set of workers", each with equal probability
+/// `p_s = k/M` per round).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerSampler {
+    /// Total worker population M.
+    pub total: usize,
+    /// Participation fraction `p_s ∈ (0, 1]`.
+    pub participation: f64,
+}
+
+impl WorkerSampler {
+    pub fn new(total: usize, participation: f64) -> Self {
+        assert!(total > 0, "need at least one worker");
+        assert!(
+            participation > 0.0 && participation <= 1.0,
+            "participation must be in (0,1], got {participation}"
+        );
+        Self { total, participation }
+    }
+
+    /// Number of workers selected each round (≥ 1).
+    pub fn per_round(&self) -> usize {
+        ((self.total as f64 * self.participation).round() as usize).clamp(1, self.total)
+    }
+
+    /// Draw this round's selected set (sorted, distinct).
+    pub fn select(&self, rng: &mut Pcg64) -> Vec<usize> {
+        let k = self.per_round();
+        if k == self.total {
+            (0..self.total).collect()
+        } else {
+            rng.sample_indices(self.total, k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_selects_everyone() {
+        let s = WorkerSampler::new(10, 1.0);
+        let mut rng = Pcg64::seed_from(1);
+        assert_eq!(s.select(&mut rng), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partial_selection_size_and_range() {
+        let s = WorkerSampler::new(100, 0.2);
+        assert_eq!(s.per_round(), 20);
+        let mut rng = Pcg64::seed_from(2);
+        for _ in 0..20 {
+            let sel = s.select(&mut rng);
+            assert_eq!(sel.len(), 20);
+            assert!(sel.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn selection_is_uniform_over_workers() {
+        let s = WorkerSampler::new(50, 0.1);
+        let mut rng = Pcg64::seed_from(3);
+        let mut counts = vec![0usize; 50];
+        let rounds = 10_000;
+        for _ in 0..rounds {
+            for i in s.select(&mut rng) {
+                counts[i] += 1;
+            }
+        }
+        let expect = rounds as f64 * 0.1;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < 0.15 * expect,
+                "worker {i} selected {c} times, expected ~{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiny_participation_floors_to_one() {
+        let s = WorkerSampler::new(10, 0.01);
+        assert_eq!(s.per_round(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "participation must be in")]
+    fn zero_participation_rejected() {
+        WorkerSampler::new(10, 0.0);
+    }
+}

@@ -1,0 +1,231 @@
+//! Dirichlet(α) non-IID partitioning — the heterogeneity protocol of
+//! Hsu et al. (2019) that the paper's §6.2 uses:
+//!
+//! > "a vector of length C that follows the Dirichlet distribution Dir(α)
+//! > is generated [per worker] … each element specifies the proportion of
+//! > training examples that belong to the corresponding class."
+//!
+//! Low α ⇒ each worker sees a few classes (severe skew); large α ⇒ IID.
+
+use super::{Dataset, FederatedDataset};
+use crate::util::rng::Pcg64;
+
+/// Dirichlet label-skew partitioner.
+#[derive(Clone, Copy, Debug)]
+pub struct DirichletPartitioner {
+    /// Concentration α > 0 (the paper sweeps {0.1, 0.3, 0.5, 0.6, 1.0}).
+    pub alpha: f64,
+    /// Number of workers M.
+    pub workers: usize,
+}
+
+impl DirichletPartitioner {
+    /// Partition `data` into `self.workers` shards.
+    ///
+    /// Each worker draws class proportions `p ~ Dir(α·1_C)` and receives
+    /// `⌈n/M⌉` examples sampled class-by-class from per-class pools
+    /// (without replacement while a pool lasts, then cycling the pool —
+    /// bounded deviation from the drawn proportions, never an empty
+    /// shard).
+    pub fn partition(&self, data: &Dataset, rng: &mut Pcg64) -> FederatedDataset {
+        assert!(self.alpha > 0.0, "Dirichlet α must be > 0, got {}", self.alpha);
+        assert!(self.workers > 0, "need at least one worker");
+        assert!(!data.is_empty(), "cannot partition an empty dataset");
+        let classes = data.classes;
+        // Per-class index pools, shuffled.
+        let mut pools: Vec<Vec<usize>> = vec![Vec::new(); classes];
+        for (i, &y) in data.y.iter().enumerate() {
+            assert!(y < classes, "label {y} out of range");
+            pools[y].push(i);
+        }
+        for pool in pools.iter_mut() {
+            rng.shuffle(pool);
+        }
+        let mut cursor = vec![0usize; classes];
+        let present: Vec<usize> =
+            (0..classes).filter(|&c| !pools[c].is_empty()).collect();
+        assert!(!present.is_empty());
+
+        let per_worker = data.len().div_ceil(self.workers);
+        let mut shards = Vec::with_capacity(self.workers);
+        for _ in 0..self.workers {
+            let p = rng.dirichlet(self.alpha, classes);
+            // Mask out absent classes, renormalize.
+            let mut probs = vec![0.0f64; classes];
+            let mut z = 0.0;
+            for &c in &present {
+                probs[c] = p[c];
+                z += p[c];
+            }
+            if z <= 0.0 {
+                // Degenerate draw: fall back to uniform over present.
+                for &c in &present {
+                    probs[c] = 1.0 / present.len() as f64;
+                }
+            } else {
+                for v in probs.iter_mut() {
+                    *v /= z;
+                }
+            }
+            let mut shard = Vec::with_capacity(per_worker);
+            for _ in 0..per_worker {
+                let c = rng.categorical(&probs);
+                let c = if pools[c].is_empty() { present[rng.index(present.len())] } else { c };
+                let pool = &pools[c];
+                let idx = pool[cursor[c] % pool.len()];
+                cursor[c] += 1;
+                shard.push(idx);
+            }
+            shards.push(shard);
+        }
+        FederatedDataset { shards }
+    }
+}
+
+/// Heterogeneity diagnostics for a partition.
+#[derive(Clone, Debug)]
+pub struct PartitionReport {
+    /// Per-worker class histograms (fractions).
+    pub class_fractions: Vec<Vec<f64>>,
+    /// Mean across workers of the max class fraction (1.0 ⇒ single-class
+    /// workers; 1/C ⇒ perfectly uniform).
+    pub mean_max_fraction: f64,
+    /// Average total-variation distance from the global class marginal.
+    pub mean_tv_distance: f64,
+}
+
+/// Compute skew diagnostics for `fed` over `data`.
+pub fn partition_report(data: &Dataset, fed: &FederatedDataset) -> PartitionReport {
+    let classes = data.classes;
+    let mut global = vec![0.0f64; classes];
+    for &y in &data.y {
+        global[y] += 1.0;
+    }
+    let n = data.len() as f64;
+    for g in global.iter_mut() {
+        *g /= n;
+    }
+    let mut class_fractions = Vec::with_capacity(fed.workers());
+    let mut max_sum = 0.0;
+    let mut tv_sum = 0.0;
+    for shard in &fed.shards {
+        let mut hist = vec![0.0f64; classes];
+        for &i in shard {
+            hist[data.y[i]] += 1.0;
+        }
+        let total = shard.len().max(1) as f64;
+        for h in hist.iter_mut() {
+            *h /= total;
+        }
+        max_sum += hist.iter().cloned().fold(0.0, f64::max);
+        tv_sum += 0.5
+            * hist
+                .iter()
+                .zip(&global)
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f64>();
+        class_fractions.push(hist);
+    }
+    let m = fed.workers() as f64;
+    PartitionReport {
+        class_fractions,
+        mean_max_fraction: max_sum / m,
+        mean_tv_distance: tv_sum / m,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{SyntheticSpec, SyntheticTask};
+
+    fn task() -> Dataset {
+        SyntheticTask::generate(
+            SyntheticSpec {
+                dim: 8,
+                classes: 10,
+                modes: 1,
+                separation: 1.0,
+                noise: 0.1,
+                label_noise: 0.0,
+                train: 2_000,
+                test: 10,
+            },
+            11,
+        )
+        .train
+    }
+
+    #[test]
+    fn shards_cover_and_are_nonempty() {
+        let data = task();
+        let part = DirichletPartitioner { alpha: 0.5, workers: 20 };
+        let mut rng = Pcg64::seed_from(1);
+        let fed = part.partition(&data, &mut rng);
+        assert_eq!(fed.workers(), 20);
+        assert!(fed.shards.iter().all(|s| !s.is_empty()));
+        assert!(fed.total() >= data.len());
+        for s in &fed.shards {
+            assert!(s.iter().all(|&i| i < data.len()));
+        }
+    }
+
+    #[test]
+    fn low_alpha_is_more_skewed_than_high_alpha() {
+        let data = task();
+        let mut rng = Pcg64::seed_from(2);
+        let skew_low = {
+            let fed = DirichletPartitioner { alpha: 0.1, workers: 50 }.partition(&data, &mut rng);
+            partition_report(&data, &fed).mean_max_fraction
+        };
+        let skew_high = {
+            let fed = DirichletPartitioner { alpha: 100.0, workers: 50 }.partition(&data, &mut rng);
+            partition_report(&data, &fed).mean_max_fraction
+        };
+        assert!(
+            skew_low > skew_high + 0.2,
+            "α=0.1 skew {skew_low} vs α=100 skew {skew_high}"
+        );
+        // α→∞ approaches the global marginal (0.1 per class here).
+        assert!(skew_high < 0.25, "{skew_high}");
+    }
+
+    #[test]
+    fn tv_distance_monotone_in_alpha() {
+        let data = task();
+        let mut rng = Pcg64::seed_from(3);
+        let mut prev = f64::INFINITY;
+        for &alpha in &[0.1, 1.0, 10.0, 100.0] {
+            let fed =
+                DirichletPartitioner { alpha, workers: 50 }.partition(&data, &mut rng);
+            let tv = partition_report(&data, &fed).mean_tv_distance;
+            assert!(tv < prev + 0.05, "α={alpha}: tv {tv} prev {prev}");
+            prev = tv;
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = task();
+        let part = DirichletPartitioner { alpha: 0.3, workers: 10 };
+        let a = part.partition(&data, &mut Pcg64::seed_from(4));
+        let b = part.partition(&data, &mut Pcg64::seed_from(4));
+        assert_eq!(a.shards, b.shards);
+    }
+
+    #[test]
+    #[should_panic(expected = "α must be > 0")]
+    fn rejects_bad_alpha() {
+        let data = task();
+        DirichletPartitioner { alpha: 0.0, workers: 2 }
+            .partition(&data, &mut Pcg64::seed_from(5));
+    }
+
+    #[test]
+    fn single_worker_gets_everything() {
+        let data = task();
+        let fed = DirichletPartitioner { alpha: 1.0, workers: 1 }
+            .partition(&data, &mut Pcg64::seed_from(6));
+        assert_eq!(fed.shards[0].len(), data.len());
+    }
+}

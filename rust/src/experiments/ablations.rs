@@ -1,0 +1,235 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. **Budget sweep** — the accuracy/communication trade-off of
+//!    sparsign's `B` (and the Remark 7 clipping regime at large B).
+//! 2. **Server error feedback** — Algorithm 2 with the eq. (8) residual
+//!    on vs off.
+//! 3. **Position coding** — Golomb (eq. 12) vs dense log2(3) vs raw
+//!    32-bit indices for ternary messages.
+//! 4. **Stochastic-sign family** — sparsign vs sto-SIGN vs SSDM
+//!    (momentum; stateful) under full participation.
+
+use crate::coding::cost::golomb_bits_per_index;
+use crate::compressors::CompressorKind;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{AggregationRule, Algorithm, TrainingRun};
+use crate::experiments::build_env;
+use crate::metrics::TablePrinter;
+use crate::optim::LrSchedule;
+use crate::util::rng::Pcg64;
+
+/// One ablation row: label → (final acc, total uplink bits).
+pub type AblationRow = (String, f64, f64);
+
+fn run_one(
+    cfg: &ExperimentConfig,
+    alg: Algorithm,
+    lr: f64,
+    rounds: usize,
+) -> (f64, f64) {
+    let env = build_env(cfg, 0xab1a);
+    let mut init_rng = Pcg64::new(0, 0x1217);
+    let init = env.init_params(&mut init_rng);
+    let run = TrainingRun {
+        algorithm: alg,
+        schedule: LrSchedule::Const { lr },
+        rounds,
+        participation: 1.0,
+        eval_every: 0,
+        seed: 0,
+        attack: None,
+        allow_stateful_with_sampling: false,
+    };
+    let hist = run.run(&env, init, &|p| env.evaluate(p));
+    (hist.final_eval().unwrap().1, hist.total_uplink())
+}
+
+/// Ablation 1: sparsign budget sweep.
+pub fn budget_sweep(rounds: usize) -> Vec<AblationRow> {
+    let cfg = ExperimentConfig::fast_preset();
+    let mut out = Vec::new();
+    for &b in &[0.01f32, 0.1, 1.0, 10.0, 100.0] {
+        let (acc, bits) = run_one(
+            &cfg,
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::Sparsign { budget: b },
+                aggregation: AggregationRule::MajorityVote,
+            },
+            0.01,
+            rounds,
+        );
+        out.push((format!("B={b}"), acc, bits));
+    }
+    // Auto-density variant for comparison.
+    let (acc, bits) = run_one(
+        &cfg,
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::SparsignAuto { target_density: 0.1 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        0.01,
+        rounds,
+    );
+    out.push(("auto(p=0.1)".into(), acc, bits));
+    out
+}
+
+/// Ablation 2: Algorithm 2 with and without the server residual.
+pub fn server_ef_ablation(rounds: usize) -> Vec<AblationRow> {
+    let cfg = ExperimentConfig::fast_preset();
+    let mut out = Vec::new();
+    for (label, server_ef) in [("with server EF (eq. 8)", true), ("without server EF", false)] {
+        let (acc, bits) = run_one(
+            &cfg,
+            Algorithm::EfSparsign {
+                b_local: 10.0,
+                b_global: 1.0,
+                tau: 2,
+                server_lr_scale: None,
+                server_ef,
+            },
+            0.02,
+            rounds,
+        );
+        out.push((label.to_string(), acc, bits));
+    }
+    out
+}
+
+/// Ablation 3: ternary-position coding schemes — bits per coordinate at
+/// each density (pure accounting, no training).
+pub fn coding_ablation() -> Vec<(f64, f64, f64, f64)> {
+    // (density, golomb bits/coord, dense log2(3), 32-bit indices)
+    [0.001, 0.01, 0.05, 0.1, 0.3, 0.5]
+        .iter()
+        .map(|&p| {
+            let golomb = p * (golomb_bits_per_index(p) + 1.0);
+            let dense = (3.0f64).log2();
+            let raw_idx = p * (32.0 + 1.0);
+            (p, golomb, dense, raw_idx)
+        })
+        .collect()
+}
+
+/// Ablation 4: the stochastic-sign family head-to-head.
+pub fn sign_family_ablation(rounds: usize) -> Vec<AblationRow> {
+    let cfg = ExperimentConfig::fast_preset();
+    let entries: Vec<(CompressorKind, f64)> = vec![
+        (CompressorKind::Sign, 0.01),
+        (CompressorKind::Sparsign { budget: 1.0 }, 0.01),
+        (CompressorKind::StoSign { b: 1.0 }, 0.01),
+        (CompressorKind::Ssdm { beta: 0.3 }, 0.01),
+    ];
+    entries
+        .into_iter()
+        .map(|(kind, lr)| {
+            let label = kind.label();
+            let (acc, bits) = run_one(
+                &cfg,
+                Algorithm::CompressedGd {
+                    compressor: kind,
+                    aggregation: AggregationRule::MajorityVote,
+                },
+                lr,
+                rounds,
+            );
+            (label, acc, bits)
+        })
+        .collect()
+}
+
+/// Render all ablations as tables.
+pub fn render_all(rounds: usize) -> String {
+    let mut out = String::new();
+    let mut t = TablePrinter::new(
+        "Ablation: sparsign budget B (fast task, majority vote)",
+        &["Budget", "Final acc", "Total uplink bits"],
+    );
+    for (label, acc, bits) in budget_sweep(rounds) {
+        t.add_row(vec![label, format!("{:.1}%", 100.0 * acc), format!("{bits:.2e}")]);
+    }
+    out.push_str(&t.render());
+
+    let mut t = TablePrinter::new(
+        "Ablation: Algorithm 2 server error feedback",
+        &["Variant", "Final acc", "Total uplink bits"],
+    );
+    for (label, acc, bits) in server_ef_ablation(rounds) {
+        t.add_row(vec![label, format!("{:.1}%", 100.0 * acc), format!("{bits:.2e}")]);
+    }
+    out.push_str(&t.render());
+
+    let mut t = TablePrinter::new(
+        "Ablation: ternary position coding (bits per coordinate)",
+        &["Density", "Golomb eq.(12)", "Dense log2(3)", "32-bit indices"],
+    );
+    for (p, g, d, r) in coding_ablation() {
+        t.add_row(vec![
+            format!("{p}"),
+            format!("{g:.3}"),
+            format!("{d:.3}"),
+            format!("{r:.3}"),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    let mut t = TablePrinter::new(
+        "Ablation: stochastic-sign family (full participation)",
+        &["Compressor", "Final acc", "Total uplink bits"],
+    );
+    for (label, acc, bits) in sign_family_ablation(rounds) {
+        t.add_row(vec![label, format!("{:.1}%", 100.0 * acc), format!("{bits:.2e}")]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_sweep_bits_monotone() {
+        let rows = budget_sweep(30);
+        // Uplink grows with B until clipping saturates.
+        assert!(rows[0].2 < rows[2].2, "B=0.01 bits {} vs B=1 bits {}", rows[0].2, rows[2].2);
+        assert!(rows[2].2 < rows[4].2 * 1.01);
+        // Everything produced finite, sane numbers.
+        for (label, acc, bits) in &rows {
+            assert!(acc.is_finite() && bits.is_finite(), "{label}");
+        }
+    }
+
+    #[test]
+    fn coding_golomb_beats_dense_when_sparse() {
+        for (p, golomb, dense, raw) in coding_ablation() {
+            if p <= 0.1 {
+                assert!(golomb < dense, "p={p}: golomb {golomb} vs dense {dense}");
+                assert!(golomb < raw, "p={p}: golomb {golomb} vs raw {raw}");
+            }
+        }
+        // At p = 0.5 the two are within a whisker (Golomb b̄ = 2 ⇒
+        // 1.5 bits/coord vs log2(3) ≈ 1.585) — the regime where dense
+        // ternary coding becomes competitive.
+        let (_, g, d, _) = coding_ablation()[5];
+        assert!((g - d).abs() < 0.15, "p=0.5: golomb {g} vs dense {d}");
+    }
+
+    #[test]
+    fn server_ef_helps() {
+        let rows = server_ef_ablation(60);
+        let with = rows[0].1;
+        let without = rows[1].1;
+        assert!(
+            with >= without - 0.02,
+            "server EF should not hurt: with {with:.3} vs without {without:.3}"
+        );
+    }
+
+    #[test]
+    fn sign_family_all_learn() {
+        for (label, acc, _) in sign_family_ablation(100) {
+            assert!(acc > 0.3, "{label}: acc {acc}");
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Shared classification-experiment runner: config → task → partition →
+//! (algorithm × seed) sweep → paper-style table + figure series.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{ClassifierEnv, RunHistory, TrainingRun};
+use crate::data::{partition_report, DirichletPartitioner, SyntheticTask};
+use crate::metrics::{RunSummary, TablePrinter};
+use crate::model::ModelKind;
+use crate::util::rng::Pcg64;
+
+/// Output of one experiment sweep.
+#[derive(Clone, Debug)]
+pub struct ExperimentReport {
+    pub title: String,
+    pub summaries: Vec<RunSummary>,
+    /// Per-algorithm eval curves `(round, acc, cum_uplink_bits)` from the
+    /// first seed (the Fig. 3 series).
+    pub series: Vec<(String, Vec<(usize, f64, f64)>)>,
+    /// Heterogeneity diagnostics of the generated partition.
+    pub mean_max_class_fraction: f64,
+    rendered: String,
+}
+
+impl ExperimentReport {
+    /// The rendered paper-style table.
+    pub fn table(&self) -> &str {
+        &self.rendered
+    }
+}
+
+/// Build the environment a config describes (deterministic in
+/// `cfg` + `seed`).
+pub fn build_env(cfg: &ExperimentConfig, data_seed: u64) -> ClassifierEnv {
+    let mut spec = cfg.task.synthetic_spec().scaled(cfg.data_scale);
+    if let Some(dim) = cfg.dim_override {
+        spec = spec.with_dim(dim);
+    }
+    let task = SyntheticTask::generate(spec, data_seed);
+    let mut prng = Pcg64::new(data_seed, 0x9a27);
+    let fed = DirichletPartitioner { alpha: cfg.alpha, workers: cfg.workers }
+        .partition(&task.train, &mut prng);
+    let model = build_model(&cfg.model);
+    ClassifierEnv::new(model, task.train, task.test, fed, cfg.batch)
+}
+
+/// Build a model from config, loading AOT artifacts when asked.
+pub fn build_model(kind: &ModelKind) -> Box<dyn crate::model::Model> {
+    match kind {
+        ModelKind::Hlo { artifact, inputs, classes } => {
+            let runtime = std::rc::Rc::new(
+                crate::runtime::Runtime::cpu("artifacts")
+                    .expect("artifacts/ missing — run `make artifacts`"),
+            );
+            // Hidden widths for the shipped artifacts (layout contract with
+            // python/compile/aot.py).
+            let hidden = match artifact.as_str() {
+                "mlp_fmnist" => vec![256, 128],
+                "mlp_small" => vec![32],
+                other => panic!("unknown HLO artifact stem '{other}'"),
+            };
+            Box::new(
+                crate::runtime::HloModel::load(
+                    runtime,
+                    artifact,
+                    *inputs,
+                    hidden,
+                    *classes,
+                )
+                .expect("loading HLO model"),
+            )
+        }
+        other => other.build(),
+    }
+}
+
+/// Run the full sweep a config describes.
+pub fn run_classification(cfg: &ExperimentConfig) -> ExperimentReport {
+    cfg.validate().unwrap_or_else(|e| panic!("invalid config '{}': {e}", cfg.name));
+    let mut table = TablePrinter::new(
+        format!(
+            "{} (task={}, α={}, M={}, p_s={}, {} rounds)",
+            cfg.name,
+            cfg.task.label(),
+            cfg.alpha,
+            cfg.workers,
+            cfg.participation,
+            cfg.rounds
+        ),
+        &[
+            "Algorithm",
+            "Final accuracy",
+            &format!(
+                "Rounds to {}",
+                cfg.targets
+                    .iter()
+                    .map(|t| format!("{}%", (t * 100.0) as u32))
+                    .collect::<Vec<_>>()
+                    .join("/")
+            ),
+            "Uplink bits to target",
+        ],
+    );
+    let mut summaries = Vec::new();
+    let mut series = Vec::new();
+    let mut hetero = 0.0;
+    for (ai, alg) in cfg.algorithms.iter().enumerate() {
+        let lr = cfg
+            .lr_overrides
+            .get(ai)
+            .copied()
+            .flatten()
+            .unwrap_or(cfg.lr);
+        let mut runs: Vec<RunHistory> = Vec::with_capacity(cfg.seeds.len());
+        for &seed in &cfg.seeds {
+            let env = build_env(cfg, seed ^ 0xda7a);
+            if runs.is_empty() {
+                let rep = partition_report(&env.train, &env.fed);
+                hetero = rep.mean_max_fraction;
+            }
+            let mut init_rng = Pcg64::new(seed, 0x1217);
+            let init = env.init_params(&mut init_rng);
+            let run = TrainingRun {
+                algorithm: alg.clone(),
+                schedule: cfg.schedule.build(lr),
+                rounds: cfg.rounds,
+                participation: cfg.participation,
+                eval_every: cfg.eval_every,
+                seed,
+                attack: None,
+                allow_stateful_with_sampling: false,
+            };
+            runs.push(run.run(&env, init, &|p| env.evaluate(p)));
+        }
+        let summary = RunSummary::from_runs(&runs, &cfg.targets);
+        table.add_summary(&summary);
+        series.push((summary.label.clone(), runs[0].eval_series()));
+        summaries.push(summary);
+    }
+    let rendered = table.render();
+    ExperimentReport {
+        title: cfg.name.clone(),
+        summaries,
+        series,
+        mean_max_class_fraction: hetero,
+        rendered,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_preset_end_to_end() {
+        let mut cfg = ExperimentConfig::fast_preset();
+        cfg.seeds = vec![0];
+        let report = run_classification(&cfg);
+        assert_eq!(report.summaries.len(), cfg.algorithms.len());
+        assert!(report.table().contains("Algorithm"));
+        assert!(report.mean_max_class_fraction > 0.0);
+        // All three core algorithms learn the fast task.
+        for s in &report.summaries {
+            assert!(s.final_acc_mean > 0.45, "{}: {}", s.label, s.final_acc_mean);
+        }
+        // Series align with summaries.
+        assert_eq!(report.series.len(), report.summaries.len());
+        assert!(!report.series[0].1.is_empty());
+    }
+}

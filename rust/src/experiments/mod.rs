@@ -1,0 +1,25 @@
+//! Experiment harnesses — one per paper table/figure (see DESIGN.md §5 for
+//! the index). Each harness:
+//!
+//! 1. generates the workload (synthetic task + Dirichlet(α) partition, or
+//!    the §6.1 scaled-objective Rosenbrock population),
+//! 2. runs every algorithm row over the configured seeds,
+//! 3. prints the paper-style table / emits the figure series as CSV.
+//!
+//! Sizes default to the `fast` presets tuned for this single-core sandbox;
+//! `--paper-scale` switches to the paper's full configuration (same code
+//! path, more compute). The *shape* of the results — which algorithm wins,
+//! whether signSGD collapses under heterogeneity, the bits-to-target
+//! ordering — is the reproduction target (DESIGN.md §3).
+
+pub mod ablations;
+pub mod classification;
+mod presets;
+mod rosenbrock;
+pub mod theory;
+
+pub use classification::{build_env, run_classification, ExperimentReport};
+pub use presets::{
+    fig3_config, table1_config, table2_config, table3_config, tables4_7_configs,
+};
+pub use rosenbrock::{run_fig1, run_fig2, RosenbrockSeries};

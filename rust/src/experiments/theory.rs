@@ -1,0 +1,176 @@
+//! Theorem 1 / Corollary 1 validation: Monte-Carlo wrong-aggregation
+//! probability vs the closed-form bound `[1 − (√q̄ − √p̄)²]^M`.
+
+use crate::util::rng::Pcg64;
+use crate::util::sign0;
+
+/// Result of one bound check.
+#[derive(Clone, Debug)]
+pub struct BoundCheck {
+    pub m: usize,
+    pub budget: f64,
+    pub p_bar: f64,
+    pub q_bar: f64,
+    pub empirical: f64,
+    pub bound: f64,
+}
+
+/// Closed-form Theorem 1 bound.
+pub fn theorem1_bound(p_bar: f64, q_bar: f64, m: usize) -> f64 {
+    assert!(q_bar > p_bar, "Theorem 1 requires q̄ > p̄");
+    let delta = q_bar.sqrt() - p_bar.sqrt();
+    (1.0 - delta * delta).powi(m as i32)
+}
+
+/// Corollary 1's p̄/q̄ for sparsign with budget B and sampling prob p_s
+/// over fixed scalars `u`.
+pub fn corollary1_rates(u: &[f64], budget: f64, p_s: f64) -> (f64, f64) {
+    let m = u.len() as f64;
+    let true_sign = sign0(u.iter().sum::<f64>() as f32) as f64;
+    let mut p_bar = 0.0;
+    let mut q_bar = 0.0;
+    for &um in u {
+        let keep = (um.abs() * budget).min(1.0) * p_s;
+        if sign0(um as f32) as f64 == true_sign {
+            q_bar += keep;
+        } else if um != 0.0 {
+            p_bar += keep;
+        }
+    }
+    (p_bar / m, q_bar / m)
+}
+
+/// Monte-Carlo estimate of the wrong-aggregation probability for sparsign
+/// over fixed scalars `u` with worker sampling.
+pub fn empirical_wrong_aggregation(
+    u: &[f64],
+    budget: f64,
+    p_s: f64,
+    trials: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    let true_sign = sign0(u.iter().sum::<f64>() as f32);
+    assert!(true_sign != 0.0, "need a non-zero true mean");
+    let mut wrong = 0usize;
+    for _ in 0..trials {
+        let mut total = 0i64;
+        for &um in u {
+            if !rng.bernoulli(p_s) {
+                continue; // worker not sampled this round
+            }
+            let p = (um.abs() * budget).min(1.0);
+            if rng.bernoulli(p) {
+                total += if um > 0.0 { 1 } else { -1 };
+            }
+        }
+        // Wrong aggregation: the aggregated sign opposes the true sign
+        // (Theorem 1 counts sign(Σ q̂) ≠ sign(Σ u); we follow the proof's
+        // event {Σ X_m ≥ 0} which includes ties).
+        let agg_wrong = if true_sign > 0.0 { total <= 0 } else { total >= 0 };
+        if agg_wrong {
+            wrong += 1;
+        }
+    }
+    wrong as f64 / trials as f64
+}
+
+/// Run the bound check across a sweep of (M, B) with the eq. (11)-style
+/// adversarial scalar population (`neg_frac` of workers sign-flipped).
+pub fn sweep(
+    ms: &[usize],
+    budgets: &[f64],
+    neg_frac: f64,
+    trials: usize,
+    seed: u64,
+) -> Vec<BoundCheck> {
+    let mut out = Vec::new();
+    let mut rng = Pcg64::new(seed, 0x7e0);
+    for &m in ms {
+        // Fixed scalars: negatives of magnitude ~1, positives sized so the
+        // sum is positive (the Rosenbrock eq. (11) structure).
+        let negs = (m as f64 * neg_frac) as usize;
+        let mut u = vec![0.0f64; m];
+        let mut neg_sum = 0.0;
+        for v in u.iter_mut().take(negs) {
+            let mag = 0.5 + rng.f64();
+            *v = -mag;
+            neg_sum += mag;
+        }
+        let target = 1.0 + neg_sum;
+        let pos = m - negs;
+        for v in u.iter_mut().skip(negs) {
+            *v = target / pos as f64;
+        }
+        for &b in budgets {
+            let (p_bar, q_bar) = corollary1_rates(&u, b, 1.0);
+            if q_bar <= p_bar {
+                continue;
+            }
+            let emp = empirical_wrong_aggregation(&u, b, 1.0, trials, &mut rng);
+            out.push(BoundCheck {
+                m,
+                budget: b,
+                p_bar,
+                q_bar,
+                empirical: emp,
+                bound: theorem1_bound(p_bar, q_bar, m),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_holds_across_sweep() {
+        let checks = sweep(&[20, 50, 100, 200], &[0.05, 0.2, 0.5], 0.8, 4_000, 3);
+        assert!(!checks.is_empty());
+        for c in &checks {
+            assert!(
+                c.empirical <= c.bound + 0.02,
+                "M={} B={}: empirical {:.4} exceeds bound {:.4}",
+                c.m,
+                c.budget,
+                c.empirical,
+                c.bound
+            );
+        }
+    }
+
+    #[test]
+    fn bound_decreases_with_m() {
+        let b1 = theorem1_bound(0.1, 0.3, 10);
+        let b2 = theorem1_bound(0.1, 0.3, 100);
+        assert!(b2 < b1);
+    }
+
+    #[test]
+    fn corollary_rates_favor_majority_mass() {
+        // 80% sign-flipped workers but positive total mass ⇒ q̄ > p̄ (the
+        // magnitude-weighting at the heart of the paper).
+        let mut u = vec![-0.5f64; 8];
+        u.extend(vec![2.5f64; 2]); // sum = +1
+        let (p, q) = corollary1_rates(&u, 0.2, 1.0);
+        assert!(q > p, "q̄={q} p̄={p}");
+    }
+
+    #[test]
+    fn deterministic_sign_violates_condition() {
+        // With B→∞-style clipping (B huge) every worker transmits, so
+        // p̄ ∝ count of wrong-sign workers — majority wrong ⇒ q̄ < p̄ and
+        // Theorem 1 does not apply (exactly the signSGD failure).
+        let mut u = vec![-0.5f64; 8];
+        u.extend(vec![2.5f64; 2]);
+        let (p, q) = corollary1_rates(&u, 1e9, 1.0);
+        assert!(q < p, "clipped regime should favor the (wrong) majority");
+    }
+
+    #[test]
+    #[should_panic(expected = "q̄ > p̄")]
+    fn bound_requires_condition() {
+        theorem1_bound(0.3, 0.2, 10);
+    }
+}

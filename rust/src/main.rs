@@ -1,0 +1,220 @@
+//! `sparsignd` — the launcher.
+//!
+//! ```text
+//! sparsignd train   [--rounds N] [--alpha A] [--workers M] [--lr X] …
+//! sparsignd tables  [--preset fast|paper] [--only table1[,table2…]]
+//! sparsignd fig1    [--rounds N] [--lr X] [--csv out.csv]
+//! sparsignd fig2    [--rounds N] [--lr X] [--csv out.csv]
+//! sparsignd theory  [--trials N]
+//! sparsignd artifacts
+//! ```
+//!
+//! Everything the launcher does is also available as a library call; the
+//! examples/ binaries show the embedded usage.
+
+use sparsignd::cli::ArgMap;
+use sparsignd::config::ExperimentConfig;
+use sparsignd::experiments;
+use sparsignd::metrics::write_csv;
+
+fn main() {
+    let args = ArgMap::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("tables") => cmd_tables(&args),
+        Some("fig1") => cmd_fig(&args, true),
+        Some("fig2") => cmd_fig(&args, false),
+        Some("theory") => cmd_theory(&args),
+        Some("artifacts") => cmd_artifacts(),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    println!(
+        "sparsignd — magnitude-aware sparsified signSGD (SPARSIGNSGD / EF-SPARSIGNSGD)\n\
+         \n\
+         subcommands:\n\
+         \x20 train      run the fast-preset experiment (override via --rounds/--alpha/…)\n\
+         \x20 tables     regenerate the paper's tables (--preset fast|paper, --only …)\n\
+         \x20 fig1       Rosenbrock wrong-aggregation figure (sign vs sparsign)\n\
+         \x20 fig2       Rosenbrock worker-sampling figure\n\
+         \x20 theory     Theorem 1 Monte-Carlo bound check\n\
+         \x20 artifacts  list AOT artifacts + staleness"
+    );
+}
+
+fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &ArgMap) -> Result<(), String> {
+    for (k, v) in args.flag_pairs() {
+        if matches!(k, "preset" | "only" | "csv" | "trials" | "config") {
+            continue; // launcher-level flags
+        }
+        cfg.apply_override(k, v)?;
+    }
+    cfg.validate()
+}
+
+fn cmd_train(args: &ArgMap) -> i32 {
+    let mut cfg = ExperimentConfig::fast_preset();
+    if let Some(path) = args.get_str("config") {
+        let body = match std::fs::read_to_string(path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("config {path}: {e}");
+                return 2;
+            }
+        };
+        if let Err(e) = cfg.apply_file(&body) {
+            eprintln!("config {path}: {e}");
+            return 2;
+        }
+    }
+    if let Err(e) = apply_cli_overrides(&mut cfg, args) {
+        eprintln!("{e}");
+        return 2;
+    }
+    let report = experiments::run_classification(&cfg);
+    println!("{}", report.table());
+    println!(
+        "partition skew (mean max class fraction): {:.3}",
+        report.mean_max_class_fraction
+    );
+    0
+}
+
+fn cmd_tables(args: &ArgMap) -> i32 {
+    let paper = args.get_str("preset").map(|p| p == "paper").unwrap_or(false);
+    let only: Option<Vec<String>> = args
+        .get_str("only")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect());
+    let want = |name: &str| only.as_ref().map(|o| o.iter().any(|x| x == name)).unwrap_or(true);
+
+    if want("table1") {
+        println!("{}", experiments::run_classification(&experiments::table1_config(paper)).table());
+    }
+    if want("table2") {
+        println!("{}", experiments::run_classification(&experiments::table2_config(paper)).table());
+    }
+    if want("table3") {
+        println!("{}", experiments::run_classification(&experiments::table3_config(paper)).table());
+    }
+    if want("tables4_7") {
+        for cfg in experiments::tables4_7_configs(paper, &[0.1, 0.3, 0.6, 1.0]) {
+            println!("{}", experiments::run_classification(&cfg).table());
+        }
+    }
+    0
+}
+
+fn cmd_fig(args: &ArgMap, fig1: bool) -> i32 {
+    let rounds = args.get::<usize>("rounds", 3_000);
+    let lr = args.get::<f64>("lr", 0.01);
+    let seed = args.get::<u64>("seed", 7);
+    let series = if fig1 {
+        experiments::run_fig1(rounds, lr, seed)
+    } else {
+        experiments::run_fig2(rounds, lr, seed)
+    };
+    println!(
+        "## Fig. {} — Rosenbrock, M=100, 80 sign-flipped workers (eq. 11)",
+        if fig1 { 1 } else { 2 }
+    );
+    for s in &series {
+        println!(
+            "  {:<28} mean wrong-aggregation {:.3}   F(start) {:>8.2} → F(end) {:>10.2}",
+            s.label,
+            s.mean_wrong_agg(),
+            s.fvalue.first().unwrap_or(&f64::NAN),
+            s.final_value()
+        );
+    }
+    if let Some(path) = args.get_str("csv") {
+        let mut rows = Vec::new();
+        for (t, _) in series[0].fvalue.iter().enumerate() {
+            let mut row = vec![t.to_string()];
+            for s in &series {
+                row.push(format!("{:.6}", s.wrong_agg[t]));
+                row.push(format!("{:.6}", s.fvalue[t]));
+            }
+            rows.push(row);
+        }
+        let mut headers = vec!["round".to_string()];
+        for s in &series {
+            headers.push(format!("{} wrong_agg", s.label));
+            headers.push(format!("{} F", s.label));
+        }
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        if let Err(e) = write_csv(path, &h, &rows) {
+            eprintln!("csv {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_theory(args: &ArgMap) -> i32 {
+    let trials = args.get::<usize>("trials", 20_000);
+    let checks = experiments::theory::sweep(
+        &[20, 50, 100, 200, 500],
+        &[0.05, 0.1, 0.2, 0.5],
+        0.8,
+        trials,
+        3,
+    );
+    println!("## Theorem 1 bound check (80% sign-flipped scalars, {trials} trials)");
+    println!("{:>5} {:>6} {:>9} {:>9} {:>11} {:>11}", "M", "B", "p_bar", "q_bar", "empirical", "bound");
+    let mut ok = true;
+    for c in checks {
+        let pass = c.empirical <= c.bound + 0.02;
+        ok &= pass;
+        println!(
+            "{:>5} {:>6} {:>9.4} {:>9.4} {:>11.4} {:>11.4} {}",
+            c.m,
+            c.budget,
+            c.p_bar,
+            c.q_bar,
+            c.empirical,
+            c.bound,
+            if pass { "" } else { "VIOLATED" }
+        );
+    }
+    if ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_artifacts() -> i32 {
+    match sparsignd::runtime::Runtime::cpu("artifacts") {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            for name in rt.registry().names() {
+                let spec = rt
+                    .registry()
+                    .spec(&name)
+                    .map(|s| format!("{} inputs", s.inputs.len()))
+                    .unwrap_or_else(|_| "unmanifested".into());
+                println!("  {name:<36} {spec}");
+            }
+            if rt.registry().is_stale(std::path::Path::new("python/compile")) {
+                println!("WARNING: artifacts older than python/compile sources — run `make artifacts`");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}

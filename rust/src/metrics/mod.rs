@@ -1,0 +1,230 @@
+//! Run aggregation and table/CSV rendering for the experiment harnesses.
+//!
+//! The paper reports, per algorithm: final accuracy `mean±std` over seeds,
+//! median communication rounds to a target accuracy, and the uplink bits
+//! at that point. [`RunSummary`] computes exactly those from a set of
+//! seeded [`RunHistory`]s and [`TablePrinter`] renders the paper-style
+//! table.
+
+use crate::coordinator::RunHistory;
+use crate::util::stats::{self, fmt_bits, fmt_pct};
+
+/// Aggregated results for one algorithm across seeds.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub label: String,
+    pub seeds: usize,
+    pub final_acc_mean: f64,
+    pub final_acc_std: f64,
+    /// Median rounds to each requested target (None = "N.A.": some seed
+    /// never reached it — matching the paper's convention that the
+    /// algorithm does not achieve the accuracy).
+    pub rounds_to_target: Vec<Option<f64>>,
+    /// Median uplink bits to each requested target.
+    pub bits_to_target: Vec<Option<f64>>,
+    pub targets: Vec<f64>,
+    /// Mean total uplink over the whole run.
+    pub total_uplink_mean: f64,
+}
+
+impl RunSummary {
+    /// Summarize `runs` (one per seed) against accuracy `targets`.
+    pub fn from_runs(runs: &[RunHistory], targets: &[f64]) -> Self {
+        assert!(!runs.is_empty());
+        let label = runs[0].label.clone();
+        let accs: Vec<f64> = runs
+            .iter()
+            .map(|r| r.final_eval().map(|(_, a)| a).unwrap_or(0.0))
+            .collect();
+        let mut rounds_to_target = Vec::with_capacity(targets.len());
+        let mut bits_to_target = Vec::with_capacity(targets.len());
+        for &t in targets {
+            let rr: Vec<Option<usize>> = runs.iter().map(|r| r.rounds_to_acc(t)).collect();
+            if rr.iter().any(|x| x.is_none()) {
+                rounds_to_target.push(None);
+                bits_to_target.push(None);
+            } else {
+                let rv: Vec<f64> = rr.iter().map(|x| x.unwrap() as f64).collect();
+                let bv: Vec<f64> =
+                    runs.iter().map(|r| r.uplink_to_acc(t).unwrap()).collect();
+                rounds_to_target.push(Some(stats::median(&rv)));
+                bits_to_target.push(Some(stats::median(&bv)));
+            }
+        }
+        RunSummary {
+            label,
+            seeds: runs.len(),
+            final_acc_mean: stats::mean(&accs),
+            final_acc_std: stats::std_dev(&accs),
+            rounds_to_target,
+            bits_to_target,
+            targets: targets.to_vec(),
+            total_uplink_mean: stats::mean(
+                &runs.iter().map(|r| r.total_uplink()).collect::<Vec<_>>(),
+            ),
+        }
+    }
+
+    /// Row cells: label, final acc, rounds per target, bits per target.
+    pub fn row(&self) -> Vec<String> {
+        let mut cells = vec![
+            self.label.clone(),
+            fmt_pct(self.final_acc_mean, self.final_acc_std),
+        ];
+        let rounds: Vec<String> = self
+            .rounds_to_target
+            .iter()
+            .map(|r| r.map(|v| format!("{v:.0}")).unwrap_or_else(|| "N.A.".into()))
+            .collect();
+        cells.push(rounds.join("/"));
+        let bits: Vec<String> = self
+            .bits_to_target
+            .iter()
+            .map(|b| b.map(fmt_bits).unwrap_or_else(|| "N.A.".into()))
+            .collect();
+        cells.push(bits.join("/"));
+        cells
+    }
+}
+
+/// Fixed-width table renderer (the harnesses print paper-style tables to
+/// stdout and EXPERIMENTS.md records them).
+#[derive(Clone, Debug, Default)]
+pub struct TablePrinter {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TablePrinter {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn add_summary(&mut self, s: &RunSummary) {
+        self.add_row(s.row());
+    }
+
+    /// Render as an aligned markdown-ish table (widths in *chars*, so
+    /// multibyte cells like `±` align correctly).
+    pub fn render(&self) -> String {
+        let clen = |s: &str| s.chars().count();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| clen(h)).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(clen(c));
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let fmt_line = |cells: &[String], widths: &[usize]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}", w = w))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        out.push_str(&fmt_line(&self.headers, &widths));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|", sep.join("-|-")));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Minimal CSV emitter for figure series.
+pub fn write_csv(path: &str, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", headers.join(","))?;
+    for r in rows {
+        writeln!(f, "{}", r.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{RoundReport, RunHistory};
+
+    fn fake_run(accs: &[(usize, f64)], bits_per_round: f64, rounds: usize) -> RunHistory {
+        let mut reports = Vec::new();
+        let mut cum = 0.0;
+        for t in 0..rounds {
+            cum += bits_per_round;
+            let eval = accs
+                .iter()
+                .find(|(r, _)| *r == t)
+                .map(|(_, a)| (0.5, *a));
+            reports.push(RoundReport {
+                round: t,
+                lr: 0.1,
+                train_loss: 1.0,
+                eval,
+                uplink_bits: bits_per_round,
+                downlink_bits: 1.0,
+                cum_uplink_bits: cum,
+            });
+        }
+        RunHistory { label: "fake".into(), dim: 4, reports, final_params: vec![] }
+    }
+
+    #[test]
+    fn summary_extracts_targets() {
+        let r1 = fake_run(&[(4, 0.5), (9, 0.8)], 10.0, 10);
+        let r2 = fake_run(&[(4, 0.6), (9, 0.9)], 10.0, 10);
+        let s = RunSummary::from_runs(&[r1, r2], &[0.55, 0.75, 0.99]);
+        assert_eq!(s.seeds, 2);
+        assert!((s.final_acc_mean - 0.85).abs() < 1e-12);
+        // Target 0.55: run1 reaches at round 10 (acc 0.8@t=9 → 1-based 10),
+        // run2 at round 5. Median = 7.5.
+        assert_eq!(s.rounds_to_target[0], Some(7.5));
+        assert_eq!(s.rounds_to_target[1], Some(10.0));
+        assert_eq!(s.rounds_to_target[2], None);
+        assert!(s.bits_to_target[0].unwrap() > 0.0);
+        let row = s.row();
+        assert!(row[3].contains("N.A."));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TablePrinter::new("Table X", &["Algorithm", "Acc"]);
+        t.add_row(vec!["signSGD".into(), "74.44±0.71%".into()]);
+        t.add_row(vec!["a".into(), "b".into()]);
+        let s = t.render();
+        assert!(s.contains("## Table X"));
+        assert!(s.contains("signSGD"));
+        assert!(s.contains("74.44±0.71%"));
+        // Every table line has the same rendered (char) width.
+        let widths: Vec<usize> = s
+            .lines()
+            .filter(|l| l.starts_with('|'))
+            .map(|l| l.chars().count())
+            .collect();
+        assert!(widths.len() >= 4);
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{widths:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = TablePrinter::new("t", &["a", "b"]);
+        t.add_row(vec!["only-one".into()]);
+    }
+}

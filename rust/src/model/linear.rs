@@ -1,0 +1,148 @@
+//! Linear softmax classifier — the convex substrate used for fast
+//! integration tests and the theory-validation experiments.
+
+use super::{softmax_xent_backward, softmax_xent_eval, Model};
+use crate::util::linalg::{matmul_a_bt, matmul_at_b};
+use crate::util::rng::Pcg64;
+
+/// `logits = x·Wᵀ + b`, cross-entropy loss.
+///
+/// Parameter layout (flat): `W` stored `classes×inputs` row-major, then
+/// `b` (`classes`).
+#[derive(Clone, Debug)]
+pub struct SoftmaxRegression {
+    pub inputs: usize,
+    pub classes: usize,
+}
+
+impl SoftmaxRegression {
+    pub fn new(inputs: usize, classes: usize) -> Self {
+        assert!(inputs > 0 && classes > 1);
+        Self { inputs, classes }
+    }
+
+    fn split<'a>(&self, params: &'a [f32]) -> (&'a [f32], &'a [f32]) {
+        let wlen = self.classes * self.inputs;
+        (&params[..wlen], &params[wlen..wlen + self.classes])
+    }
+
+    fn logits(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<f32> {
+        let (w, b) = self.split(params);
+        let mut logits = vec![0.0f32; batch * self.classes];
+        // x: batch×inputs, w: classes×inputs ⇒ logits = x · wᵀ.
+        matmul_a_bt(&mut logits, x, w, batch, self.inputs, self.classes);
+        for i in 0..batch {
+            for (l, &bi) in logits[i * self.classes..(i + 1) * self.classes]
+                .iter_mut()
+                .zip(b)
+            {
+                *l += bi;
+            }
+        }
+        logits
+    }
+}
+
+impl Model for SoftmaxRegression {
+    fn dim(&self) -> usize {
+        self.classes * self.inputs + self.classes
+    }
+
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[usize], grad: &mut [f32]) -> f32 {
+        assert_eq!(params.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        let batch = y.len();
+        assert_eq!(x.len(), batch * self.inputs, "batch feature shape");
+        let mut dlogits = self.logits(params, x, batch);
+        let loss = softmax_xent_backward(&mut dlogits, y, self.classes);
+        // dW = dlogitsᵀ · x  (classes×inputs); dlogits: batch×classes.
+        grad.fill(0.0);
+        let wlen = self.classes * self.inputs;
+        matmul_at_b(&mut grad[..wlen], &dlogits, x, self.classes, batch, self.inputs);
+        // db = column sums of dlogits.
+        let db = &mut grad[wlen..];
+        for i in 0..batch {
+            for (dbj, &dl) in db.iter_mut().zip(&dlogits[i * self.classes..(i + 1) * self.classes]) {
+                *dbj += dl;
+            }
+        }
+        loss
+    }
+
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[usize]) -> (f64, f64) {
+        let batch = y.len();
+        let mut logits = self.logits(params, x, batch);
+        softmax_xent_eval(&mut logits, y, self.classes)
+    }
+
+    fn init(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.dim()];
+        let std = (1.0 / self.inputs as f32).sqrt();
+        let wlen = self.classes * self.inputs;
+        rng.fill_normal(&mut p[..wlen], 0.0, std);
+        // biases at zero
+        p
+    }
+
+    fn describe(&self) -> String {
+        format!("softmax-regression {}→{}", self.inputs, self.classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::grad_check;
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let m = SoftmaxRegression::new(6, 4);
+        let mut rng = Pcg64::seed_from(1);
+        let batch = 5;
+        let mut x = vec![0.0; batch * 6];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y = vec![0, 1, 2, 3, 1];
+        grad_check(&m, &x, &y, 2);
+    }
+
+    #[test]
+    fn training_reduces_loss_on_separable_data() {
+        let m = SoftmaxRegression::new(2, 2);
+        let mut rng = Pcg64::seed_from(3);
+        let mut params = m.init(&mut rng);
+        // Two separated blobs.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..100 {
+            let c = i % 2;
+            let cx = if c == 0 { -2.0 } else { 2.0 };
+            x.push(cx + rng.normal_f32(0.0, 0.3));
+            x.push(rng.normal_f32(0.0, 0.3));
+            y.push(c);
+        }
+        let mut grad = vec![0.0; m.dim()];
+        let l0 = m.loss_grad(&params, &x, &y, &mut grad);
+        for _ in 0..200 {
+            m.loss_grad(&params, &x, &y, &mut grad);
+            for (p, g) in params.iter_mut().zip(&grad) {
+                *p -= 0.5 * g;
+            }
+        }
+        let (l1, acc) = m.evaluate(&params, &x, &y);
+        assert!(l1 < l0 as f64 * 0.2, "loss {l0} -> {l1}");
+        assert!(acc > 0.95, "acc {acc}");
+    }
+
+    #[test]
+    fn eval_on_random_params_is_chance() {
+        let m = SoftmaxRegression::new(8, 10);
+        let mut rng = Pcg64::seed_from(4);
+        let params = m.init(&mut rng);
+        let n = 500;
+        let mut x = vec![0.0; n * 8];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y: Vec<usize> = (0..n).map(|_| rng.index(10)).collect();
+        let (_, acc) = m.evaluate(&params, &x, &y);
+        assert!(acc < 0.25, "untrained acc {acc}");
+    }
+}

@@ -1,0 +1,229 @@
+//! ReLU multi-layer perceptron — the paper's §C.2 Fashion-MNIST
+//! architecture family (784-256-128-C), with arbitrary hidden widths.
+
+use super::{softmax_xent_backward, softmax_xent_eval, Model};
+use crate::util::linalg::{matmul, matmul_a_bt, matmul_at_b, relu, relu_backward};
+use crate::util::rng::Pcg64;
+
+/// Fully connected ReLU network.
+///
+/// Layer `l` maps width `in_l → out_l`; parameters are stored flat as
+/// `[W_0 (out×in row-major), b_0, W_1, b_1, …]` — one contiguous
+/// `d`-vector so compressors see the whole gradient at once.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// Widths `[inputs, hidden…, classes]`.
+    pub widths: Vec<usize>,
+}
+
+impl Mlp {
+    pub fn new(inputs: usize, hidden: Vec<usize>, classes: usize) -> Self {
+        assert!(inputs > 0 && classes > 1);
+        assert!(hidden.iter().all(|&h| h > 0), "zero-width hidden layer");
+        let mut widths = Vec::with_capacity(hidden.len() + 2);
+        widths.push(inputs);
+        widths.extend(hidden);
+        widths.push(classes);
+        Self { widths }
+    }
+
+    fn layers(&self) -> usize {
+        self.widths.len() - 1
+    }
+
+    fn classes(&self) -> usize {
+        *self.widths.last().unwrap()
+    }
+
+    /// Offset of layer `l`'s weights within the flat parameter vector.
+    fn layer_offset(&self, l: usize) -> usize {
+        let mut off = 0;
+        for i in 0..l {
+            off += self.widths[i] * self.widths[i + 1] + self.widths[i + 1];
+        }
+        off
+    }
+
+    /// Forward pass retaining activations: returns (per-layer outputs,
+    /// final logits). `acts[0]` is the input batch; `acts[l]` the
+    /// post-ReLU activation feeding layer `l`.
+    fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<Vec<f32>> {
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers() + 1);
+        acts.push(x.to_vec());
+        for l in 0..self.layers() {
+            let (in_w, out_w) = (self.widths[l], self.widths[l + 1]);
+            let off = self.layer_offset(l);
+            let w = &params[off..off + out_w * in_w];
+            let b = &params[off + out_w * in_w..off + out_w * in_w + out_w];
+            let mut h = vec![0.0f32; batch * out_w];
+            matmul_a_bt(&mut h, &acts[l], w, batch, in_w, out_w);
+            for i in 0..batch {
+                for (v, &bj) in h[i * out_w..(i + 1) * out_w].iter_mut().zip(b) {
+                    *v += bj;
+                }
+            }
+            if l + 1 < self.layers() {
+                relu(&mut h);
+            }
+            acts.push(h);
+        }
+        acts
+    }
+}
+
+impl Model for Mlp {
+    fn dim(&self) -> usize {
+        self.layer_offset(self.layers())
+    }
+
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[usize], grad: &mut [f32]) -> f32 {
+        assert_eq!(params.len(), self.dim());
+        assert_eq!(grad.len(), self.dim());
+        let batch = y.len();
+        assert_eq!(x.len(), batch * self.widths[0], "batch feature shape");
+        let mut acts = self.forward(params, x, batch);
+        let classes = self.classes();
+        // Softmax-CE backward on the logits (the last activation).
+        let mut delta = acts.pop().unwrap(); // batch×classes
+        let loss = softmax_xent_backward(&mut delta, y, classes);
+        grad.fill(0.0);
+        // Backprop through layers (last to first).
+        for l in (0..self.layers()).rev() {
+            let (in_w, out_w) = (self.widths[l], self.widths[l + 1]);
+            let off = self.layer_offset(l);
+            let a_in = &acts[l]; // batch×in_w (post-ReLU of previous layer)
+            // dW = deltaᵀ · a_in  (out×in).
+            matmul_at_b(
+                &mut grad[off..off + out_w * in_w],
+                &delta,
+                a_in,
+                out_w,
+                batch,
+                in_w,
+            );
+            // db = column sums of delta.
+            let db = &mut grad[off + out_w * in_w..off + out_w * in_w + out_w];
+            for i in 0..batch {
+                for (dbj, &dl) in db.iter_mut().zip(&delta[i * out_w..(i + 1) * out_w]) {
+                    *dbj += dl;
+                }
+            }
+            if l > 0 {
+                // delta_prev = delta · W, masked by ReLU'(a_in).
+                let w = &params[off..off + out_w * in_w];
+                let mut prev = vec![0.0f32; batch * in_w];
+                matmul(&mut prev, &delta, w, batch, out_w, in_w);
+                relu_backward(&mut prev, a_in);
+                delta = prev;
+            }
+        }
+        loss
+    }
+
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[usize]) -> (f64, f64) {
+        let batch = y.len();
+        let acts = self.forward(params, x, batch);
+        let mut logits = acts.last().unwrap().clone();
+        softmax_xent_eval(&mut logits, y, self.classes())
+    }
+
+    fn init(&self, rng: &mut Pcg64) -> Vec<f32> {
+        // He initialization for ReLU layers; final layer Xavier-ish.
+        let mut p = vec![0.0f32; self.dim()];
+        for l in 0..self.layers() {
+            let (in_w, out_w) = (self.widths[l], self.widths[l + 1]);
+            let off = self.layer_offset(l);
+            let std = (2.0 / in_w as f32).sqrt();
+            rng.fill_normal(&mut p[off..off + out_w * in_w], 0.0, std);
+        }
+        p
+    }
+
+    fn describe(&self) -> String {
+        let w: Vec<String> = self.widths.iter().map(|x| x.to_string()).collect();
+        format!("mlp {}", w.join("-"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::grad_check;
+
+    #[test]
+    fn dims_add_up() {
+        let m = Mlp::new(784, vec![256, 128], 10);
+        assert_eq!(m.dim(), 784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10);
+        assert_eq!(m.layers(), 3);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let m = Mlp::new(5, vec![7, 6], 3);
+        let mut rng = Pcg64::seed_from(1);
+        let batch = 4;
+        let mut x = vec![0.0; batch * 5];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y = vec![0, 2, 1, 2];
+        grad_check(&m, &x, &y, 2);
+    }
+
+    #[test]
+    fn single_layer_equals_linear_model() {
+        use crate::model::SoftmaxRegression;
+        let mlp = Mlp::new(4, vec![], 3);
+        let lin = SoftmaxRegression::new(4, 3);
+        assert_eq!(mlp.dim(), lin.dim());
+        let mut rng = Pcg64::seed_from(3);
+        let params = lin.init(&mut rng);
+        let mut x = vec![0.0; 6 * 4];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y = vec![0, 1, 2, 0, 1, 2];
+        let mut g1 = vec![0.0; mlp.dim()];
+        let mut g2 = vec![0.0; lin.dim()];
+        let l1 = mlp.loss_grad(&params, &x, &y, &mut g1);
+        let l2 = lin.loss_grad(&params, &x, &y, &mut g2);
+        assert!((l1 - l2).abs() < 1e-5);
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn learns_xor_style_task() {
+        // Non-linearly-separable data: MLP must beat a linear model.
+        let m = Mlp::new(2, vec![16], 2);
+        let mut rng = Pcg64::seed_from(4);
+        let mut params = m.init(&mut rng);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..256 {
+            let a = rng.range_f32(-1.0, 1.0);
+            let b = rng.range_f32(-1.0, 1.0);
+            x.push(a);
+            x.push(b);
+            y.push(if (a > 0.0) != (b > 0.0) { 1 } else { 0 });
+        }
+        let mut grad = vec![0.0; m.dim()];
+        for _ in 0..800 {
+            m.loss_grad(&params, &x, &y, &mut grad);
+            for (p, g) in params.iter_mut().zip(&grad) {
+                *p -= 0.5 * g;
+            }
+        }
+        let (_, acc) = m.evaluate(&params, &x, &y);
+        assert!(acc > 0.9, "XOR acc {acc}");
+    }
+
+    #[test]
+    fn init_is_deterministic_and_nonzero() {
+        let m = Mlp::new(10, vec![8], 4);
+        let a = m.init(&mut Pcg64::seed_from(5));
+        let b = m.init(&mut Pcg64::seed_from(5));
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&v| v != 0.0));
+        // Biases start at zero.
+        let off = 10 * 8;
+        assert!(a[off..off + 8].iter().all(|&v| v == 0.0));
+    }
+}

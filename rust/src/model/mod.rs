@@ -1,0 +1,215 @@
+//! Model substrate: loss/gradient providers for the federated engine.
+//!
+//! A [`Model`] is a *stateless* description of the architecture; parameters
+//! live in one flat `Vec<f32>` owned by the coordinator (the compressors
+//! operate on the flat gradient vector, exactly as in the paper where the
+//! whole parameter vector `w ∈ ℝᵈ` is compressed coordinate-wise).
+//!
+//! Implementations:
+//! * [`SoftmaxRegression`] — linear classifier (convex sanity substrate).
+//! * [`Mlp`] — the paper's §C.2 architecture family (e.g. 784-256-128-10
+//!   with ReLU for Fashion-MNIST).
+//! * [`rosenbrock`] — the §6.1 deterministic objective with the eq. (11)
+//!   scaled-objective heterogeneity.
+//! * `runtime::HloModel` — the same trait backed by an AOT-compiled
+//!   JAX/Pallas artifact executed via PJRT.
+
+mod linear;
+mod mlp;
+pub mod rosenbrock;
+
+pub use linear::SoftmaxRegression;
+pub use mlp::Mlp;
+
+use crate::util::rng::Pcg64;
+
+/// A differentiable supervised model over flat parameters.
+pub trait Model: Send + Sync {
+    /// Total number of parameters `d`.
+    fn dim(&self) -> usize;
+
+    /// Compute mean loss over the batch and write the gradient into
+    /// `grad` (overwritten, not accumulated). `x` is `batch×in_dim`
+    /// row-major, `y` the labels.
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[usize], grad: &mut [f32]) -> f32;
+
+    /// Mean loss + accuracy on a dataset slice (no gradient).
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[usize]) -> (f64, f64);
+
+    /// Initialize parameters.
+    fn init(&self, rng: &mut Pcg64) -> Vec<f32>;
+
+    /// Human-readable description.
+    fn describe(&self) -> String;
+}
+
+/// Config-level model selection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelKind {
+    /// Linear softmax classifier.
+    Linear { inputs: usize, classes: usize },
+    /// ReLU MLP with the given hidden widths.
+    Mlp { inputs: usize, hidden: Vec<usize>, classes: usize },
+    /// AOT-compiled JAX artifact (loaded by `runtime`); the string names
+    /// the artifact stem, e.g. `"mlp_fmnist"` → `artifacts/mlp_fmnist.hlo.txt`.
+    Hlo { artifact: String, inputs: usize, classes: usize },
+}
+
+impl ModelKind {
+    /// Paper §C.2 Fashion-MNIST network: 784-256-128-C MLP.
+    pub fn paper_fmnist_mlp(classes: usize) -> Self {
+        ModelKind::Mlp { inputs: 784, hidden: vec![256, 128], classes }
+    }
+
+    /// Build the pure-rust models; `Hlo` is constructed via
+    /// [`crate::runtime::HloModel::load`] instead (needs a PJRT client).
+    pub fn build(&self) -> Box<dyn Model> {
+        match self {
+            ModelKind::Linear { inputs, classes } => {
+                Box::new(SoftmaxRegression::new(*inputs, *classes))
+            }
+            ModelKind::Mlp { inputs, hidden, classes } => {
+                Box::new(Mlp::new(*inputs, hidden.clone(), *classes))
+            }
+            ModelKind::Hlo { .. } => {
+                panic!("HLO-backed models are built through runtime::HloModel::load")
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ModelKind::Linear { inputs, classes } => format!("linear({inputs}->{classes})"),
+            ModelKind::Mlp { inputs, hidden, classes } => {
+                let h: Vec<String> = hidden.iter().map(|x| x.to_string()).collect();
+                format!("mlp({inputs}-{}-{classes})", h.join("-"))
+            }
+            ModelKind::Hlo { artifact, .. } => format!("hlo({artifact})"),
+        }
+    }
+}
+
+/// Softmax cross-entropy forward+backward shared by the classifiers.
+///
+/// `logits` is `batch×classes` and is replaced in-place by
+/// `∂loss/∂logits = (softmax - onehot)/batch`; returns the mean CE loss.
+pub(crate) fn softmax_xent_backward(logits: &mut [f32], y: &[usize], classes: usize) -> f32 {
+    let batch = y.len();
+    debug_assert_eq!(logits.len(), batch * classes);
+    crate::util::linalg::softmax_rows(logits, batch, classes);
+    let mut loss = 0.0f64;
+    let inv_b = 1.0 / batch as f32;
+    for (i, &yi) in y.iter().enumerate() {
+        debug_assert!(yi < classes);
+        let p = logits[i * classes + yi].max(1e-12);
+        loss -= (p as f64).ln();
+        // dlogits = (softmax - onehot)/batch
+        let row = &mut logits[i * classes..(i + 1) * classes];
+        for v in row.iter_mut() {
+            *v *= inv_b;
+        }
+        row[yi] -= inv_b;
+    }
+    (loss / batch as f64) as f32
+}
+
+/// Accuracy + mean loss given logits (used by `evaluate` impls).
+///
+/// NaN-robust on purpose: a diverged model (e.g. under a re-scaling
+/// attack) produces non-finite logits; those rows count as wrong with a
+/// capped loss instead of panicking, so the attack experiments can report
+/// the collapse.
+pub(crate) fn softmax_xent_eval(logits: &mut [f32], y: &[usize], classes: usize) -> (f64, f64) {
+    let batch = y.len();
+    crate::util::linalg::softmax_rows(logits, batch, classes);
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for (i, &yi) in y.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let p = row[yi];
+        loss -= if p.is_finite() { (p.max(1e-12) as f64).ln() } else { (1e-12f64).ln() };
+        let mut argmax = usize::MAX;
+        let mut best = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v.is_finite() && v > best {
+                best = v;
+                argmax = j;
+            }
+        }
+        if argmax == yi {
+            correct += 1;
+        }
+    }
+    (loss / batch as f64, correct as f64 / batch as f64)
+}
+
+/// Finite-difference gradient check used by the test suites of every
+/// model implementation.
+#[cfg(test)]
+pub(crate) fn grad_check(model: &dyn Model, x: &[f32], y: &[usize], seed: u64) {
+    let mut rng = Pcg64::seed_from(seed);
+    let params = model.init(&mut rng);
+    let mut grad = vec![0.0; model.dim()];
+    model.loss_grad(&params, x, y, &mut grad);
+    let eps = 1e-3f32;
+    let mut scratch = vec![0.0; model.dim()];
+    // Check a deterministic subsample of coordinates.
+    let step = (model.dim() / 25).max(1);
+    for i in (0..model.dim()).step_by(step) {
+        let mut pp = params.clone();
+        pp[i] += eps;
+        let lp = model.loss_grad(&pp, x, y, &mut scratch);
+        pp[i] -= 2.0 * eps;
+        let lm = model.loss_grad(&pp, x, y, &mut scratch);
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = grad[i];
+        let denom = fd.abs().max(an.abs()).max(1e-2);
+        assert!(
+            (fd - an).abs() / denom < 0.08,
+            "coord {i}: finite-diff {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xent_backward_matches_softmax_identity() {
+        // For a single example, dlogit_j = softmax_j - 1[j=y].
+        let mut logits = vec![1.0f32, 2.0, 3.0];
+        let mut probs = logits.clone();
+        crate::util::linalg::softmax_rows(&mut probs, 1, 3);
+        let loss = softmax_xent_backward(&mut logits, &[2], 3);
+        assert!((loss + probs[2].max(1e-12).ln()).abs() < 1e-6);
+        for j in 0..3 {
+            let want = probs[j] - if j == 2 { 1.0 } else { 0.0 };
+            assert!((logits[j] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn eval_perfect_prediction() {
+        let mut logits = vec![10.0f32, -10.0, -10.0, 10.0]; // 2 examples, 2 classes
+        let (loss, acc) = softmax_xent_eval(&mut logits, &[0, 1], 2);
+        assert!(acc == 1.0);
+        assert!(loss < 1e-6);
+    }
+
+    #[test]
+    fn model_kind_builds_and_labels() {
+        let k = ModelKind::paper_fmnist_mlp(10);
+        let m = k.build();
+        assert_eq!(m.dim(), 784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10);
+        assert_eq!(k.label(), "mlp(784-256-128-10)");
+        let lin = ModelKind::Linear { inputs: 4, classes: 3 }.build();
+        assert_eq!(lin.dim(), 4 * 3 + 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "runtime::HloModel")]
+    fn hlo_kind_needs_runtime() {
+        ModelKind::Hlo { artifact: "x".into(), inputs: 1, classes: 2 }.build();
+    }
+}

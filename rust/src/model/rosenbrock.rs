@@ -1,0 +1,241 @@
+//! The §6.1 Rosenbrock experiment substrate.
+//!
+//! The paper minimizes the d=10 Rosenbrock function
+//! `F(x) = Σ_i 100(x_{i+1} − x_i²)² + (1 − x_i)²` across M=100 workers,
+//! where worker `m` sees a *scaled objective* `v_m·F(·)` with
+//!
+//! `Σ_m v_m = 1` and `Σ_m 1[v_m < 0] = 80`            (eq. 11)
+//!
+//! — i.e. 80 of 100 workers see sign-flipped gradients, so deterministic
+//! sign majority-vote aggregates the *wrong* sign on every coordinate
+//! while the magnitude-weighted average still points the right way. This
+//! is the cleanest demonstration of why magnitudes matter.
+//!
+//! (The paper's eq. (10) prints `100(x_{i+1} − x_i²) + (1 − x_i)²`,
+//! dropping the square on the first term — that expression is unbounded
+//! below and cannot be "minimized" as §6.1 describes; we implement the
+//! standard Rosenbrock the cited source (Safaryan & Richtárik 2021) uses.)
+
+use crate::util::rng::Pcg64;
+
+/// Rosenbrock objective over `n ≥ 2` variables.
+#[derive(Clone, Copy, Debug)]
+pub struct Rosenbrock {
+    pub n: usize,
+}
+
+impl Rosenbrock {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2, "Rosenbrock needs at least 2 variables");
+        Self { n }
+    }
+
+    /// Function value.
+    pub fn value(&self, x: &[f32]) -> f64 {
+        assert_eq!(x.len(), self.n);
+        let mut f = 0.0f64;
+        for i in 0..self.n - 1 {
+            let a = (x[i + 1] - x[i] * x[i]) as f64;
+            let b = (1.0 - x[i]) as f64;
+            f += 100.0 * a * a + b * b;
+        }
+        f
+    }
+
+    /// Analytic gradient into `g`.
+    pub fn grad(&self, x: &[f32], g: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(g.len(), self.n);
+        g.fill(0.0);
+        for i in 0..self.n - 1 {
+            let t = x[i + 1] - x[i] * x[i];
+            g[i] += -400.0 * x[i] * t - 2.0 * (1.0 - x[i]);
+            g[i + 1] += 200.0 * t;
+        }
+    }
+
+    /// Standard starting point used in the literature.
+    pub fn start(&self) -> Vec<f32> {
+        let mut x = vec![-1.2f32; self.n];
+        for (i, v) in x.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                *v = 1.0;
+            }
+        }
+        x
+    }
+}
+
+/// The eq. (11) heterogeneous worker population: worker `m` observes
+/// `v_m · ∇F(x)`.
+#[derive(Clone, Debug)]
+pub struct ScaledObjectiveWorkers {
+    /// Per-worker scale `v_m`, Σ v_m = 1, with `negatives` of them < 0.
+    pub scales: Vec<f64>,
+}
+
+impl ScaledObjectiveWorkers {
+    /// Draw scales satisfying eq. (11): `negatives` workers get `v_m < 0`,
+    /// the rest `v_m > 0`, then the vector is shifted/normalized so
+    /// `Σ v_m = 1` while preserving the sign pattern.
+    pub fn generate(workers: usize, negatives: usize, rng: &mut Pcg64) -> Self {
+        Self::generate_scaled(workers, negatives, 1.0, rng)
+    }
+
+    /// [`Self::generate`] with an explicit magnitude scale for the
+    /// sign-flipped workers. Eq. (11) fixes only the sign pattern and
+    /// `Σ v_m = 1`; `neg_scale` controls how much *magnitude mass* the
+    /// wrong-sign majority carries. Small values (the Fig. 1/2 setting,
+    /// 0.01) are the regime the paper illustrates: 80% of workers report
+    /// the wrong sign but carry little magnitude — exactly the information
+    /// deterministic sign discards and sparsign preserves.
+    pub fn generate_scaled(
+        workers: usize,
+        negatives: usize,
+        neg_scale: f64,
+        rng: &mut Pcg64,
+    ) -> Self {
+        assert!(negatives < workers, "need at least one positive worker");
+        assert!(neg_scale > 0.0);
+        // |v| magnitudes: uniform in neg_scale·(0.5, 1.5) for negatives,
+        // and the positive mass is set to balance the sum to exactly 1.
+        let mut scales = vec![0.0f64; workers];
+        let mut neg_sum = 0.0;
+        for s in scales.iter_mut().take(negatives) {
+            let mag = (0.5 + rng.f64()) * neg_scale;
+            *s = -mag;
+            neg_sum += mag;
+        }
+        let positives = workers - negatives;
+        // Positive magnitudes: proportional to random weights, scaled so
+        // total sum = 1 ⇒ pos_sum = 1 + neg_sum.
+        let weights: Vec<f64> = (0..positives).map(|_| 0.5 + rng.f64()).collect();
+        let wsum: f64 = weights.iter().sum();
+        let target = 1.0 + neg_sum;
+        for (s, w) in scales.iter_mut().skip(negatives).zip(weights) {
+            *s = w / wsum * target;
+        }
+        rng.shuffle(&mut scales);
+        Self { scales }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Worker `m`'s gradient: `v_m · ∇F(x)` (+ optional Gaussian noise,
+    /// the paper's SGD-vs-GD distinction in Remark 5).
+    pub fn worker_grad(
+        &self,
+        f: &Rosenbrock,
+        m: usize,
+        x: &[f32],
+        noise_std: f32,
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) {
+        f.grad(x, out);
+        let v = self.scales[m] as f32;
+        for o in out.iter_mut() {
+            *o *= v;
+            if noise_std > 0.0 {
+                *o += rng.normal_f32(0.0, noise_std);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let f = Rosenbrock::new(10);
+        let mut rng = Pcg64::seed_from(1);
+        let mut x = vec![0.0f32; 10];
+        rng.fill_normal(&mut x, 0.0, 0.5);
+        let mut g = vec![0.0f32; 10];
+        f.grad(&x, &mut g);
+        let eps = 1e-3f32;
+        for i in 0..10 {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let fp = f.value(&xp);
+            xp[i] -= 2.0 * eps;
+            let fm = f.value(&xp);
+            let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - g[i]).abs() / fd.abs().max(g[i].abs()).max(1.0) < 0.02,
+                "coord {i}: fd {fd} analytic {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn minimum_at_ones() {
+        let f = Rosenbrock::new(10);
+        let ones = vec![1.0f32; 10];
+        assert!(f.value(&ones) < 1e-10);
+        let mut g = vec![0.0f32; 10];
+        f.grad(&ones, &mut g);
+        assert!(g.iter().all(|&v| v.abs() < 1e-5));
+    }
+
+    #[test]
+    fn gd_descends() {
+        let f = Rosenbrock::new(10);
+        let mut x = f.start();
+        let mut g = vec![0.0f32; 10];
+        let f0 = f.value(&x);
+        for _ in 0..5_000 {
+            f.grad(&x, &mut g);
+            for (xi, gi) in x.iter_mut().zip(&g) {
+                *xi -= 1e-4 * gi;
+            }
+        }
+        let f1 = f.value(&x);
+        assert!(f1 < f0 * 0.1, "{f0} -> {f1}");
+    }
+
+    #[test]
+    fn eq11_constraints_hold() {
+        let mut rng = Pcg64::seed_from(2);
+        let w = ScaledObjectiveWorkers::generate(100, 80, &mut rng);
+        assert_eq!(w.workers(), 100);
+        let sum: f64 = w.scales.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "Σv = {sum}");
+        let negs = w.scales.iter().filter(|&&v| v < 0.0).count();
+        assert_eq!(negs, 80);
+        assert!(w.scales.iter().all(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn majority_of_worker_grads_point_wrong_way() {
+        // The defining pathology: per-coordinate, 80% of worker gradient
+        // signs disagree with the true gradient sign.
+        let f = Rosenbrock::new(10);
+        let mut rng = Pcg64::seed_from(3);
+        let w = ScaledObjectiveWorkers::generate(100, 80, &mut rng);
+        let x = f.start();
+        let mut true_g = vec![0.0f32; 10];
+        f.grad(&x, &mut true_g);
+        let mut buf = vec![0.0f32; 10];
+        let mut wrong = 0;
+        let mut total = 0;
+        for m in 0..100 {
+            w.worker_grad(&f, m, &x, 0.0, &mut rng, &mut buf);
+            for i in 0..10 {
+                if true_g[i] != 0.0 {
+                    total += 1;
+                    if (buf[i] > 0.0) != (true_g[i] > 0.0) {
+                        wrong += 1;
+                    }
+                }
+            }
+        }
+        let frac = wrong as f64 / total as f64;
+        assert!((frac - 0.8).abs() < 1e-9, "wrong-sign fraction {frac}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Optimizer substrate: learning-rate schedules and the SGD step used by
+//! workers and the server.
+//!
+//! The federated algorithms themselves (Alg. 1, Alg. 2, FedAvg, FedCom)
+//! live in [`crate::coordinator`]; this module provides the pieces they
+//! share.
+
+use crate::util::linalg::axpy;
+
+/// Learning-rate schedule over communication rounds, matching the paper's
+/// experimental setups (§6.2, Appendix D).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// Fixed η (Fashion-MNIST).
+    Const { lr: f64 },
+    /// η halved at round `at` (CIFAR-10: ÷2 at round 1500).
+    StepDecay { lr: f64, at: usize, factor: f64 },
+    /// η divided by `factors[i]` from `milestones[i]` on
+    /// (CIFAR-100: ÷2, ÷5, ÷10 at rounds 1000/3000/4500).
+    MultiStep { lr: f64, milestones: Vec<usize>, factors: Vec<f64> },
+    /// Theory-mode schedule η = 1/√(T·d) from Theorem 2.
+    TheoryRate { total_rounds: usize, dim: usize },
+}
+
+impl LrSchedule {
+    /// Learning rate at communication round `t` (0-based).
+    pub fn at(&self, t: usize) -> f64 {
+        match self {
+            LrSchedule::Const { lr } => *lr,
+            LrSchedule::StepDecay { lr, at, factor } => {
+                if t >= *at {
+                    lr / factor
+                } else {
+                    *lr
+                }
+            }
+            LrSchedule::MultiStep { lr, milestones, factors } => {
+                assert_eq!(milestones.len(), factors.len());
+                let mut cur = *lr;
+                for (m, f) in milestones.iter().zip(factors) {
+                    if t >= *m {
+                        cur = lr / f;
+                    }
+                }
+                cur
+            }
+            LrSchedule::TheoryRate { total_rounds, dim } => {
+                1.0 / ((*total_rounds as f64) * (*dim as f64)).sqrt()
+            }
+        }
+    }
+
+    /// The paper's CIFAR-10 schedule.
+    pub fn paper_cifar10(lr: f64) -> Self {
+        LrSchedule::StepDecay { lr, at: 1_500, factor: 2.0 }
+    }
+
+    /// The paper's CIFAR-100 schedule.
+    pub fn paper_cifar100(lr: f64) -> Self {
+        LrSchedule::MultiStep {
+            lr,
+            milestones: vec![1_000, 3_000, 4_500],
+            factors: vec![2.0, 5.0, 10.0],
+        }
+    }
+}
+
+/// In-place SGD step `params ← params − lr·update`.
+#[inline]
+pub fn sgd_step(params: &mut [f32], lr: f32, update: &[f32]) {
+    axpy(params, -lr, update);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_schedule() {
+        let s = LrSchedule::Const { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(10_000), 0.1);
+    }
+
+    #[test]
+    fn step_decay_boundary() {
+        let s = LrSchedule::paper_cifar10(0.2);
+        assert_eq!(s.at(1_499), 0.2);
+        assert_eq!(s.at(1_500), 0.1);
+        assert_eq!(s.at(3_000), 0.1);
+    }
+
+    #[test]
+    fn multistep_cifar100() {
+        let s = LrSchedule::paper_cifar100(1.0);
+        assert_eq!(s.at(999), 1.0);
+        assert_eq!(s.at(1_000), 0.5);
+        assert_eq!(s.at(2_999), 0.5);
+        assert_eq!(s.at(3_000), 0.2);
+        assert_eq!(s.at(4_500), 0.1);
+    }
+
+    #[test]
+    fn theory_rate() {
+        let s = LrSchedule::TheoryRate { total_rounds: 100, dim: 4 };
+        assert!((s.at(0) - 0.05).abs() < 1e-12);
+        assert_eq!(s.at(0), s.at(99));
+    }
+
+    #[test]
+    fn sgd_step_moves_against_gradient() {
+        let mut p = vec![1.0f32, -1.0];
+        sgd_step(&mut p, 0.5, &[2.0, -2.0]);
+        assert_eq!(p, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Artifact registry: discovery, manifest parsing, shape validation and
+//! staleness checks for the `artifacts/` directory produced by
+//! `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed dtype + dims of one artifact input, e.g. `f32[64,784]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeSpec {
+    pub dtype: String,
+    pub dims: Vec<i64>,
+}
+
+impl ShapeSpec {
+    /// Parse `"float32[64,784]"` / `"uint32[2]"` / `"f32[]"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .ok_or_else(|| format!("shape '{s}': missing '['"))?;
+        let dims_str = rest
+            .strip_suffix(']')
+            .ok_or_else(|| format!("shape '{s}': missing ']'"))?;
+        let dims = if dims_str.is_empty() {
+            Vec::new()
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.trim().parse::<i64>().map_err(|_| format!("bad dim '{d}'")))
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        Ok(ShapeSpec { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn element_count(&self) -> i64 {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<ShapeSpec>,
+}
+
+/// Registry over an artifacts directory.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+}
+
+impl ArtifactRegistry {
+    /// Open a directory; parses `manifest.txt` if present (artifacts
+    /// without a manifest are still loadable, just not shape-validated).
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            dir.is_dir(),
+            "artifact directory {} does not exist — run `make artifacts`",
+            dir.display()
+        );
+        let mut specs = HashMap::new();
+        let manifest = dir.join("manifest.txt");
+        if manifest.is_file() {
+            let body = std::fs::read_to_string(&manifest)?;
+            for (ln, line) in body.lines().enumerate() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                let spec = Self::parse_line(line)
+                    .map_err(|e| anyhow::anyhow!("manifest line {}: {e}", ln + 1))?;
+                specs.insert(spec.name.clone(), spec);
+            }
+        }
+        Ok(Self { dir: dir.to_path_buf(), specs })
+    }
+
+    fn parse_line(line: &str) -> Result<ArtifactSpec, String> {
+        let (name, ins) = line
+            .split_once(" :: ")
+            .ok_or_else(|| format!("expected 'name :: inputs', got '{line}'"))?;
+        let mut inputs = Vec::new();
+        for part in ins.split(';') {
+            let (_, shape) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad input spec '{part}'"))?;
+            inputs.push(ShapeSpec::parse(shape)?);
+        }
+        Ok(ArtifactSpec { name: name.trim().to_string(), inputs })
+    }
+
+    /// Names of all artifacts present on disk.
+    pub fn names(&self) -> Vec<String> {
+        let mut out: Vec<String> = std::fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name().to_string_lossy().to_string();
+                name.strip_suffix(".hlo.txt").map(|s| s.to_string())
+            })
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Path to an artifact's HLO text.
+    pub fn hlo_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(
+            path.is_file(),
+            "artifact '{name}' not found at {} — run `make artifacts`",
+            path.display()
+        );
+        Ok(path)
+    }
+
+    /// Manifest spec for an artifact.
+    pub fn spec(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' missing from manifest.txt"))
+    }
+
+    /// Validate literal inputs against the manifest (element counts; the
+    /// PJRT layer enforces dtypes).
+    pub fn validate_inputs(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<()> {
+        let Some(spec) = self.specs.get(name) else {
+            return Ok(()); // unmanifested artifacts skip validation
+        };
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        for (i, (lit, want)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let got = lit.element_count() as i64;
+            anyhow::ensure!(
+                got == want.element_count(),
+                "{name} input {i}: {got} elements, manifest says {} ({:?})",
+                want.element_count(),
+                want.dims
+            );
+        }
+        Ok(())
+    }
+
+    /// True when any artifact is older than any compile-path source file —
+    /// the freshness check the launcher prints a warning for.
+    pub fn is_stale(&self, python_src_dir: &Path) -> bool {
+        let newest_src = walk_mtime(python_src_dir);
+        let oldest_artifact = std::fs::read_dir(&self.dir)
+            .into_iter()
+            .flatten()
+            .flatten()
+            .filter(|e| e.path().extension().map(|x| x == "txt").unwrap_or(false))
+            .filter_map(|e| e.metadata().ok().and_then(|m| m.modified().ok()))
+            .min();
+        match (newest_src, oldest_artifact) {
+            (Some(src), Some(art)) => src > art,
+            _ => false,
+        }
+    }
+}
+
+fn walk_mtime(dir: &Path) -> Option<std::time::SystemTime> {
+    let mut newest = None;
+    let entries = std::fs::read_dir(dir).ok()?;
+    for e in entries.flatten() {
+        let p = e.path();
+        let t = if p.is_dir() {
+            walk_mtime(&p)
+        } else if p.extension().map(|x| x == "py").unwrap_or(false) {
+            e.metadata().ok().and_then(|m| m.modified().ok())
+        } else {
+            None
+        };
+        if let Some(t) = t {
+            newest = Some(match newest {
+                None => t,
+                Some(n) if t > n => t,
+                Some(n) => n,
+            });
+        }
+    }
+    newest
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_parsing() {
+        let s = ShapeSpec::parse("float32[64,784]").unwrap();
+        assert_eq!(s.dtype, "float32");
+        assert_eq!(s.dims, vec![64, 784]);
+        assert_eq!(s.element_count(), 64 * 784);
+        let scalar = ShapeSpec::parse("f32[]").unwrap();
+        assert_eq!(scalar.dims, Vec::<i64>::new());
+        assert_eq!(scalar.element_count(), 1);
+        assert!(ShapeSpec::parse("f32").is_err());
+        assert!(ShapeSpec::parse("f32[a]").is_err());
+    }
+
+    #[test]
+    fn manifest_line_parsing() {
+        let spec = ArtifactRegistry::parse_line(
+            "mlp_grad :: in0=float32[235146];in1=float32[64,784];in2=float32[64,10]",
+        )
+        .unwrap();
+        assert_eq!(spec.name, "mlp_grad");
+        assert_eq!(spec.inputs.len(), 3);
+        assert_eq!(spec.inputs[1].dims, vec![64, 784]);
+        assert!(ArtifactRegistry::parse_line("garbage").is_err());
+    }
+
+    #[test]
+    fn registry_over_temp_dir() {
+        let dir = std::env::temp_dir().join(format!("sparsignd-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("foo.hlo.txt"), "HloModule foo").unwrap();
+        std::fs::write(dir.join("manifest.txt"), "foo :: in0=float32[4]\n").unwrap();
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["foo"]);
+        assert!(reg.hlo_path("foo").is_ok());
+        assert!(reg.hlo_path("bar").is_err());
+        assert_eq!(reg.spec("foo").unwrap().inputs[0].dims, vec![4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(ArtifactRegistry::open(Path::new("/nonexistent-sparsignd")).is_err());
+    }
+}

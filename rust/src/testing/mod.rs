@@ -1,0 +1,178 @@
+//! A minimal property-based testing framework (the sandbox has no
+//! `proptest`), used by unit tests across the crate and by
+//! `rust/tests/property_suite.rs`.
+//!
+//! Design: generators are plain closures `FnMut(&mut Pcg64) -> T`; the
+//! runner executes `cases` seeded deterministically from a base seed and,
+//! on failure, retries with a simple halving shrink for `Vec`-valued
+//! inputs before reporting the failing seed + minimal counterexample.
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0x5eed }
+    }
+}
+
+/// Run `prop` on `cfg.cases` generated inputs; panics with the failing
+/// case index + seed on the first violation.
+pub fn check<T, G, P>(cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {:#x}): {msg}\ninput: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Like [`check`], but for `Vec<f32>` inputs: on failure, shrink by
+/// repeatedly halving the vector (keeping whichever half still fails) to
+/// report a smaller counterexample.
+pub fn check_vec<P>(cfg: PropConfig, len_range: (usize, usize), mut gen_elem: impl FnMut(&mut Pcg64) -> f32, mut prop: P)
+where
+    P: FnMut(&[f32]) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed, case as u64);
+        let len = len_range.0 + rng.index(len_range.1 - len_range.0 + 1);
+        let input: Vec<f32> = (0..len).map(|_| gen_elem(&mut rng)).collect();
+        if let Err(first_msg) = prop(&input) {
+            // Shrink: binary-halve while the failure persists.
+            let mut cur = input.clone();
+            let mut msg = first_msg;
+            loop {
+                if cur.len() <= 1 {
+                    break;
+                }
+                let half = cur.len() / 2;
+                let left = &cur[..half];
+                let right = &cur[half..];
+                if let Err(m) = prop(left) {
+                    cur = left.to_vec();
+                    msg = m;
+                } else if let Err(m) = prop(right) {
+                    cur = right.to_vec();
+                    msg = m;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "vec property failed at case {case} (seed {:#x}): {msg}\nshrunk input ({} elems): {:?}",
+                cfg.seed,
+                cur.len(),
+                &cur[..cur.len().min(32)]
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::rng::Pcg64;
+
+    /// Uniform float in [lo, hi).
+    pub fn f32_in(lo: f32, hi: f32) -> impl FnMut(&mut Pcg64) -> f32 {
+        move |rng| rng.range_f32(lo, hi)
+    }
+
+    /// Standard normal floats.
+    pub fn f32_normal(std: f32) -> impl FnMut(&mut Pcg64) -> f32 {
+        move |rng| rng.normal_f32(0.0, std)
+    }
+
+    /// "Gradient-like" floats: mixture of small dense noise and occasional
+    /// large-magnitude coordinates — stresses the clipping path of
+    /// sparsign (Remark 7) and the scale-free invariants.
+    pub fn f32_gradient_like() -> impl FnMut(&mut Pcg64) -> f32 {
+        move |rng| {
+            if rng.bernoulli(0.05) {
+                rng.normal_f32(0.0, 10.0)
+            } else if rng.bernoulli(0.1) {
+                0.0
+            } else {
+                rng.normal_f32(0.0, 0.1)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            PropConfig::default(),
+            |rng| rng.f32(),
+            |x| {
+                if (0.0..1.0).contains(x) {
+                    Ok(())
+                } else {
+                    Err(format!("out of range: {x}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            PropConfig { cases: 16, seed: 1 },
+            |rng| rng.f32(),
+            |x| if *x < 0.5 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    fn vec_property_runs() {
+        check_vec(
+            PropConfig { cases: 32, seed: 2 },
+            (1, 64),
+            gen::f32_normal(1.0),
+            |v| {
+                if v.iter().all(|x| x.is_finite()) {
+                    Ok(())
+                } else {
+                    Err("non-finite".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn vec_property_shrinks() {
+        check_vec(
+            PropConfig { cases: 8, seed: 3 },
+            (8, 64),
+            gen::f32_in(0.0, 2.0),
+            |v| {
+                if v.iter().all(|x| *x < 1.9) {
+                    Ok(())
+                } else {
+                    Err("contains large".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,332 @@
+//! Dense linear algebra for the pure-rust model substrate.
+//!
+//! The federated simulation runs every selected worker's forward/backward
+//! pass on the CPU each round, so the GEMMs here are the single hottest
+//! code path outside the compressors. The implementation is a
+//! cache-blocked, 4×4-register-tiled kernel over row-major `f32` — see
+//! EXPERIMENTS.md §Perf for the measured before/after of each optimization
+//! step.
+
+/// Row-major matrix view helpers operate on plain `&[f32]` so model
+/// parameters can live in one flat vector (required by the compressors,
+/// which treat the gradient as a single `d`-dimensional vector).
+
+/// `c[m×n] += a[m×k] · b[k×n]`, all row-major.
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    assert_eq!(c.len(), m * n, "c shape");
+    // Cache blocking parameters tuned on the target core (see §Perf).
+    const MC: usize = 64;
+    const KC: usize = 256;
+    const NC: usize = 256;
+    let mut i0 = 0;
+    while i0 < m {
+        let ib = MC.min(m - i0);
+        let mut p0 = 0;
+        while p0 < k {
+            let pb = KC.min(k - p0);
+            let mut j0 = 0;
+            while j0 < n {
+                let jb = NC.min(n - j0);
+                block_kernel(c, a, b, m, k, n, i0, p0, j0, ib, pb, jb);
+                j0 += NC;
+            }
+            p0 += KC;
+        }
+        i0 += MC;
+    }
+}
+
+/// `c = a · b` (overwrites `c`).
+pub fn matmul(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    matmul_acc(c, a, b, m, k, n);
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn block_kernel(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    _m: usize,
+    k: usize,
+    n: usize,
+    i0: usize,
+    p0: usize,
+    j0: usize,
+    ib: usize,
+    pb: usize,
+    jb: usize,
+) {
+    // §Perf: 4-row register tile so the inner p-loop keeps 4 independent
+    // FMA chains per vector lane; the rows are provably disjoint slices of
+    // `c`, materialized via raw pointers to avoid per-p split_at_mut
+    // shuffling (see EXPERIMENTS.md §Perf for the measured deltas).
+    let mut i = 0;
+    let cptr = c.as_mut_ptr();
+    while i + 4 <= ib {
+        let r0 = (i0 + i) * k + p0;
+        let r1 = r0 + k;
+        let r2 = r1 + k;
+        let r3 = r2 + k;
+        // SAFETY: the four row ranges [(i0+i+r)·n + j0, +jb) are disjoint
+        // (distinct rows of an m×n matrix, jb ≤ n) and in-bounds.
+        let (t0, t1, t2, t3) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(cptr.add((i0 + i) * n + j0), jb),
+                std::slice::from_raw_parts_mut(cptr.add((i0 + i + 1) * n + j0), jb),
+                std::slice::from_raw_parts_mut(cptr.add((i0 + i + 2) * n + j0), jb),
+                std::slice::from_raw_parts_mut(cptr.add((i0 + i + 3) * n + j0), jb),
+            )
+        };
+        for p in 0..pb {
+            let a0 = a[r0 + p];
+            let a1 = a[r1 + p];
+            let a2 = a[r2 + p];
+            let a3 = a[r3 + p];
+            let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jb];
+            for j in 0..jb {
+                let bv = brow[j];
+                t0[j] += a0 * bv;
+                t1[j] += a1 * bv;
+                t2[j] += a2 * bv;
+                t3[j] += a3 * bv;
+            }
+        }
+        i += 4;
+    }
+    while i < ib {
+        let ra = (i0 + i) * k + p0;
+        let rc = (i0 + i) * n + j0;
+        for p in 0..pb {
+            let a0 = a[ra + p];
+            let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jb];
+            let crow = &mut c[rc..rc + jb];
+            for j in 0..jb {
+                crow[j] += a0 * brow[j];
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `c[m×n] += aᵀ[m×k] · b[k×n]` where `a` is stored `k×m` row-major
+/// (i.e. we multiply by the transpose of `a` without materializing it).
+pub fn matmul_at_b(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), k * m, "aᵀ shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    assert_eq!(c.len(), m * n, "c shape");
+    // aᵀ·b: iterate p over k in the outer loop so both a and b stream
+    // row-major; accumulates into c.
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..i * n + n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// `c[m×n] += a[m×k] · bᵀ[k×n]` where `b` is stored `n×k` row-major.
+pub fn matmul_a_bt(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), n * k, "bᵀ shape");
+    assert_eq!(c.len(), m * n, "c shape");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            crow[j] += acc;
+        }
+    }
+}
+
+/// `y += alpha * x`.
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = alpha * x` elementwise scale into place.
+pub fn scale(y: &mut [f32], alpha: f32) {
+    for yi in y.iter_mut() {
+        *yi *= alpha;
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Row-wise softmax in place over an `m×n` row-major matrix
+/// (numerically stabilized).
+pub fn softmax_rows(x: &mut [f32], m: usize, n: usize) {
+    assert_eq!(x.len(), m * n);
+    for i in 0..m {
+        let row = &mut x[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// ReLU forward in place; returns nothing (mask recomputed in backward from
+/// the activations, which is exact for ReLU).
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Backward through ReLU: `dx = dy ⊙ 1[act > 0]`, in place on `dy`.
+pub fn relu_backward(dy: &mut [f32], act: &[f32]) {
+    assert_eq!(dy.len(), act.len());
+    for (d, a) in dy.iter_mut().zip(act) {
+        if *a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_various_shapes() {
+        let mut rng = Pcg64::seed_from(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 64, 64), (70, 130, 65)] {
+            let mut a = vec![0.0; m * k];
+            let mut b = vec![0.0; k * n];
+            rng.fill_normal(&mut a, 0.0, 1.0);
+            rng.fill_normal(&mut b, 0.0, 1.0);
+            let mut c = vec![0.0; m * n];
+            matmul(&mut c, &a, &b, m, k, n);
+            let want = naive_matmul(&a, &b, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let mut rng = Pcg64::seed_from(2);
+        let (m, k, n) = (13, 21, 8);
+        let mut at = vec![0.0; k * m]; // stores a as k×m (i.e. aᵀ view)
+        let mut b = vec![0.0; k * n];
+        rng.fill_normal(&mut at, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        // Materialize a = (aᵀ)ᵀ, m×k.
+        let mut a = vec![0.0; m * k];
+        for p in 0..k {
+            for i in 0..m {
+                a[i * k + p] = at[p * m + i];
+            }
+        }
+        let mut c1 = vec![0.0; m * n];
+        matmul_at_b(&mut c1, &at, &b, m, k, n);
+        let c2 = naive_matmul(&a, &b, m, k, n);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        let mut rng = Pcg64::seed_from(3);
+        let (m, k, n) = (9, 14, 11);
+        let mut a = vec![0.0; m * k];
+        let mut bt = vec![0.0; n * k]; // b stored n×k (i.e. bᵀ view)
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut bt, 0.0, 1.0);
+        let mut b = vec![0.0; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                b[p * n + j] = bt[j * k + p];
+            }
+        }
+        let mut c1 = vec![0.0; m * n];
+        matmul_a_bt(&mut c1, &a, &bt, m, k, n);
+        let c2 = naive_matmul(&a, &b, m, k, n);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1000.0];
+        softmax_rows(&mut x, 2, 3);
+        for i in 0..2 {
+            let s: f32 = x[i * 3..(i + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // Large logit dominates without NaN.
+        assert!(x[5] > 0.999 && x[5].is_finite());
+    }
+
+    #[test]
+    fn relu_and_backward() {
+        let mut x = vec![-1.0, 0.0, 2.0];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+        let mut dy = vec![5.0, 5.0, 5.0];
+        relu_backward(&mut dy, &x);
+        assert_eq!(dy, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn axpy_dot_scale() {
+        let mut y = vec![1.0, 2.0];
+        axpy(&mut y, 2.0, &[3.0, 4.0]);
+        assert_eq!(y, vec![7.0, 10.0]);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![3.5, 5.0]);
+    }
+}

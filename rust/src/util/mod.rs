@@ -1,0 +1,91 @@
+//! Foundational substrates: deterministic RNG + distributions, dense linear
+//! algebra helpers, and summary statistics.
+//!
+//! Everything here is built from scratch (the sandbox registry only carries
+//! the `xla` crate tree), deterministic given a seed, and exercised by unit
+//! and property tests.
+
+pub mod linalg;
+pub mod rng;
+pub mod stats;
+
+/// Clamp `x` into `[lo, hi]`.
+#[inline]
+pub fn clamp(x: f32, lo: f32, hi: f32) -> f32 {
+    x.max(lo).min(hi)
+}
+
+/// `sign(x)` with the deterministic convention `sign(0) = 0`, matching the
+/// paper's ternary codomain (a zero coordinate transmits nothing).
+#[inline]
+pub fn sign0(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// `sign(x)` with the `sign(0) = +1` convention used by signSGD majority
+/// vote implementations that must always transmit a bit.
+#[inline]
+pub fn sign1(x: f32) -> f32 {
+    if x < 0.0 {
+        -1.0
+    } else {
+        1.0
+    }
+}
+
+/// ℓ1 norm.
+pub fn l1_norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| x.abs()).sum()
+}
+
+/// ℓ2 norm.
+pub fn l2_norm(v: &[f32]) -> f32 {
+    v.iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+/// ℓ∞ norm.
+pub fn linf_norm(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+}
+
+/// Number of exactly-zero entries.
+pub fn count_zeros(v: &[f32]) -> usize {
+    v.iter().filter(|x| **x == 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_conventions() {
+        assert_eq!(sign0(3.2), 1.0);
+        assert_eq!(sign0(-0.1), -1.0);
+        assert_eq!(sign0(0.0), 0.0);
+        assert_eq!(sign1(0.0), 1.0);
+        assert_eq!(sign1(-0.0), 1.0);
+        assert_eq!(sign1(-2.0), -1.0);
+    }
+
+    #[test]
+    fn norms() {
+        let v = [3.0, -4.0];
+        assert_eq!(l1_norm(&v), 7.0);
+        assert_eq!(l2_norm(&v), 5.0);
+        assert_eq!(linf_norm(&v), 4.0);
+        assert_eq!(count_zeros(&[0.0, 1.0, 0.0]), 2);
+    }
+
+    #[test]
+    fn clamp_bounds() {
+        assert_eq!(clamp(2.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-2.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+}

@@ -1,0 +1,463 @@
+//! Deterministic pseudo-random number generation and the distributions the
+//! paper's experiments need.
+//!
+//! The core generator is PCG-XSL-RR 128/64 (O'Neill 2014) — a small, fast,
+//! statistically strong PRNG with cheap jump-ahead via stream selection.
+//! On top of it we provide the distributions used across the stack:
+//!
+//! * `Uniform`  — worker sampling, sparsign Bernoulli draws, QSGD levels.
+//! * `Normal`   — Gaussian-mixture synthetic data, noisy signSGD, init.
+//! * `Gamma`    — Marsaglia–Tsang, the building block for `Dirichlet`.
+//! * `Dirichlet`— the Hsu et al. (2019) non-IID label-skew partitioner.
+//!
+//! Determinism contract: every component of the system derives its RNG from
+//! an experiment seed via [`Pcg64::derive`], so entire federated runs replay
+//! bit-exactly — the property-test suite depends on this.
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id. Distinct streams are
+    /// statistically independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        // Extra scrambling so nearby seeds decorrelate quickly.
+        for _ in 0..4 {
+            rng.step();
+        }
+        rng
+    }
+
+    /// Seed-only constructor on the default stream.
+    pub fn seed_from(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Derive an independent child generator, labelled by `tag`. Used to
+    /// hand every worker / round / module its own stream from one
+    /// experiment seed.
+    pub fn derive(&self, tag: u64) -> Pcg64 {
+        // Mix the tag through splitmix64 so sequential tags give unrelated
+        // streams.
+        let mixed = splitmix64(tag ^ 0x9e37_79b9_7f4a_7c15);
+        Pcg64::new(self.state as u64 ^ mixed, (self.state >> 64) as u64 ^ tag)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        let rot = (self.state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Next u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1) with 53 random bits.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1) with 24 random bits.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's nearly-divisionless method).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize index in `[0, bound)`.
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Bernoulli draw with probability `p` (clamped to [0,1]).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        if p >= 1.0 {
+            return true;
+        }
+        if p <= 0.0 {
+            return false;
+        }
+        self.f64() < p
+    }
+
+    /// Both Box–Muller variates at once — §Perf fast path for bulk
+    /// Gaussian noise (one ln/sqrt pair per two outputs).
+    pub fn normal_pair(&mut self) -> (f64, f64) {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+                return (r * c, r * s);
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (cos branch).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with the given mean / standard deviation, as f32.
+    #[inline]
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Fill `out` with N(mean, std²) samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32(mean, std);
+        }
+    }
+
+    /// Fill `out` with U[0,1) samples.
+    pub fn fill_uniform(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.f32();
+        }
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (2000); the shape<1 case uses the
+    /// standard boosting identity Gamma(a) = Gamma(a+1) * U^{1/a}.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be positive, got {shape}");
+        if shape < 1.0 {
+            let boost = self.f64().max(1e-300).powf(1.0 / shape);
+            return self.gamma(shape + 1.0) * boost;
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v3;
+            }
+            if u.max(1e-300).ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+                return d * v3;
+            }
+        }
+    }
+
+    /// Dirichlet(α·1) sample of length `k`: normalized Gamma(α,1) draws.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        assert!(k > 0);
+        let mut draws: Vec<f64> = (0..k).map(|_| self.gamma(alpha).max(1e-300)).collect();
+        let sum: f64 = draws.iter().sum();
+        for d in draws.iter_mut() {
+            *d /= sum;
+        }
+        draws
+    }
+
+    /// Draw an index from the categorical distribution given by `probs`
+    /// (assumed to sum to ≈1; remainder mass lands on the last index).
+    pub fn categorical(&mut self, probs: &[f64]) -> usize {
+        let u = self.f64();
+        let mut cum = 0.0;
+        for (i, p) in probs.iter().enumerate() {
+            cum += p;
+            if u < cum {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices uniformly from `[0, n)` (partial
+    /// Fisher–Yates; O(n) memory, O(k) swaps). Sorted output for
+    /// reproducible iteration order.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} of {n}");
+        let mut pool: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            pool.swap(i, j);
+        }
+        let mut out = pool[..k].to_vec();
+        out.sort_unstable();
+        out
+    }
+}
+
+/// A buffered stream of u32s over a [`Pcg64`]: one `next_u64` feeds two
+/// draws. This is the §Perf fast path for the per-coordinate Bernoulli
+/// tests in the ternary compressors — `value < threshold` against a
+/// precomputed 2³²-scaled threshold replaces an f32 conversion + compare,
+/// and halves the RNG work.
+pub struct U32Stream<'a> {
+    rng: &'a mut Pcg64,
+    buf: u64,
+    have: bool,
+}
+
+impl<'a> U32Stream<'a> {
+    pub fn new(rng: &'a mut Pcg64) -> Self {
+        Self { rng, buf: 0, have: false }
+    }
+
+    /// Next uniform u32.
+    #[inline]
+    pub fn next(&mut self) -> u32 {
+        if self.have {
+            self.have = false;
+            (self.buf >> 32) as u32
+        } else {
+            self.buf = self.rng.next_u64();
+            self.have = true;
+            self.buf as u32
+        }
+    }
+
+    /// Bernoulli draw against an f32 threshold scaled by 2³² (use
+    /// [`bernoulli_threshold`] to build it): compares the raw u32 draw in
+    /// float domain — one convert + one compare, no division. `thr ≤ 0`
+    /// never fires; `thr ≥ 2³²` always fires (every u32 < 2³²), which is
+    /// exactly the Remark 7 clipping behaviour.
+    #[inline]
+    pub fn bernoulli(&mut self, thr: f32) -> bool {
+        (self.next() as f32) < thr
+    }
+}
+
+/// Convert a probability to a `U32Stream::bernoulli` threshold
+/// (`p · 2³²` in f32; the ~2⁻²⁴ relative rounding is far below the
+/// statistical noise of any Bernoulli use).
+#[inline]
+pub fn bernoulli_threshold(p: f32) -> f32 {
+    p * 4_294_967_296.0
+}
+
+/// splitmix64 — used for seed mixing only.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::seed_from(42);
+        let mut b = Pcg64::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let mut a = Pcg64::seed_from(1);
+        let mut b = Pcg64::seed_from(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn derive_is_independent() {
+        let root = Pcg64::seed_from(7);
+        let mut c1 = root.derive(0);
+        let mut c2 = root.derive(1);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg64::seed_from(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut rng = Pcg64::seed_from(4);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed_from(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut rng = Pcg64::seed_from(6);
+        for &shape in &[0.3, 1.0, 2.5, 10.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| rng.gamma(shape)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - shape).abs() < 0.15 * shape.max(1.0),
+                "shape {shape} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_concentrates() {
+        let mut rng = Pcg64::seed_from(7);
+        let p = rng.dirichlet(0.1, 10);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // Low α ⇒ skewed: the max component dominates.
+        let mx = p.iter().cloned().fold(0.0, f64::max);
+        assert!(mx > 0.3, "α=0.1 should be skewed, max={mx}");
+        // High α ⇒ near uniform on average.
+        let mut acc = vec![0.0; 10];
+        for _ in 0..200 {
+            for (a, v) in acc.iter_mut().zip(rng.dirichlet(100.0, 10)) {
+                *a += v;
+            }
+        }
+        for a in acc {
+            assert!((a / 200.0 - 0.1).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut rng = Pcg64::seed_from(8);
+        for _ in 0..50 {
+            let s = rng.sample_indices(100, 20);
+            assert_eq!(s.len(), 20);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(s.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn sample_indices_full_and_empty() {
+        let mut rng = Pcg64::seed_from(9);
+        assert_eq!(rng.sample_indices(5, 5), vec![0, 1, 2, 3, 4]);
+        assert!(rng.sample_indices(5, 0).is_empty());
+    }
+
+    #[test]
+    fn bernoulli_extremes() {
+        let mut rng = Pcg64::seed_from(10);
+        assert!(rng.bernoulli(1.5));
+        assert!(!rng.bernoulli(-0.1));
+        let hits = (0..10_000).filter(|_| rng.bernoulli(0.25)).count();
+        assert!((hits as f64 - 2_500.0).abs() < 300.0);
+    }
+
+    #[test]
+    fn categorical_hits_support() {
+        let mut rng = Pcg64::seed_from(11);
+        let probs = [0.0, 0.7, 0.3];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[rng.categorical(&probs)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!((counts[1] as f64 - 7_000.0).abs() < 350.0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed_from(12);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

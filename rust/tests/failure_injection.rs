@@ -1,0 +1,203 @@
+//! Failure injection: the engine and its substrates must fail loudly and
+//! precisely on invalid configurations, and stay numerically sane on
+//! degenerate-but-legal inputs.
+
+use sparsignd::compressors::{CompressorKind, NormKind};
+use sparsignd::config::ExperimentConfig;
+use sparsignd::coordinator::{AggregationRule, Algorithm, ClassifierEnv, TrainingRun};
+use sparsignd::data::{Dataset, DirichletPartitioner, FederatedDataset};
+use sparsignd::model::ModelKind;
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
+
+fn tiny_dataset(n: usize) -> Dataset {
+    let mut rng = Pcg64::seed_from(1);
+    let dim = 4;
+    let mut x = vec![0.0f32; n * dim];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let y: Vec<usize> = (0..n).map(|i| i % 2).collect();
+    Dataset { x, y, dim, classes: 2 }
+}
+
+fn tiny_env() -> ClassifierEnv {
+    let data = tiny_dataset(64);
+    let mut rng = Pcg64::seed_from(2);
+    let fed = DirichletPartitioner { alpha: 1.0, workers: 4 }.partition(&data, &mut rng);
+    ClassifierEnv::new(
+        ModelKind::Linear { inputs: 4, classes: 2 }.build(),
+        data.clone(),
+        data,
+        fed,
+        8,
+    )
+}
+
+fn base_run(alg: Algorithm) -> TrainingRun {
+    TrainingRun {
+        algorithm: alg,
+        schedule: LrSchedule::Const { lr: 0.1 },
+        rounds: 5,
+        participation: 1.0,
+        eval_every: 0,
+        seed: 0,
+        attack: None,
+        allow_stateful_with_sampling: false,
+    }
+}
+
+#[test]
+#[should_panic(expected = "init params dim mismatch")]
+fn wrong_init_dim_rejected() {
+    let env = tiny_env();
+    let run = base_run(Algorithm::CompressedGd {
+        compressor: CompressorKind::Sign,
+        aggregation: AggregationRule::MajorityVote,
+    });
+    run.run(&env, vec![0.0; 3], &|p| env.evaluate(p));
+}
+
+#[test]
+#[should_panic(expected = "at least one round")]
+fn zero_rounds_rejected() {
+    let env = tiny_env();
+    let mut run = base_run(Algorithm::FedAvg { tau: 1 });
+    run.rounds = 0;
+    let mut rng = Pcg64::seed_from(3);
+    let init = env.init_params(&mut rng);
+    run.run(&env, init, &|p| env.evaluate(p));
+}
+
+#[test]
+#[should_panic(expected = "participation must be in")]
+fn bad_participation_rejected() {
+    let env = tiny_env();
+    let mut run = base_run(Algorithm::FedAvg { tau: 1 });
+    run.participation = 1.5;
+    let mut rng = Pcg64::seed_from(4);
+    let init = env.init_params(&mut rng);
+    run.run(&env, init, &|p| env.evaluate(p));
+}
+
+#[test]
+#[should_panic(expected = "worker-side state")]
+fn stale_ef_configuration_rejected_by_default() {
+    let env = tiny_env();
+    let mut run = base_run(Algorithm::CompressedGd {
+        compressor: CompressorKind::WorkerEf(Box::new(CompressorKind::Sign)),
+        aggregation: AggregationRule::MajorityVote,
+    });
+    run.participation = 0.5;
+    let mut rng = Pcg64::seed_from(5);
+    let init = env.init_params(&mut rng);
+    run.run(&env, init, &|p| env.evaluate(p));
+}
+
+#[test]
+fn stale_ef_override_runs_but_is_explicit() {
+    let env = tiny_env();
+    let mut run = base_run(Algorithm::CompressedGd {
+        compressor: CompressorKind::WorkerEf(Box::new(CompressorKind::ScaledSign)),
+        aggregation: AggregationRule::Mean,
+    });
+    run.participation = 0.5;
+    run.allow_stateful_with_sampling = true; // the documented escape hatch
+    let mut rng = Pcg64::seed_from(6);
+    let init = env.init_params(&mut rng);
+    let hist = run.run(&env, init, &|p| env.evaluate(p));
+    assert_eq!(hist.reports.len(), 5);
+}
+
+#[test]
+fn zero_gradient_rounds_are_stable() {
+    // A dataset of identical points with identical labels yields zero
+    // gradients quickly; nothing should NaN or panic.
+    let n = 32;
+    let x = vec![0.0f32; n * 4];
+    let y = vec![0usize; n];
+    let data = Dataset { x, y, dim: 4, classes: 2 };
+    let fed = FederatedDataset { shards: vec![(0..n).collect(); 2] };
+    let env = ClassifierEnv::new(
+        ModelKind::Linear { inputs: 4, classes: 2 }.build(),
+        data.clone(),
+        data,
+        fed,
+        8,
+    );
+    for kind in [
+        CompressorKind::Sparsign { budget: 1.0 },
+        CompressorKind::TernGrad,
+        CompressorKind::Qsgd { levels: 1, norm: NormKind::L2 },
+    ] {
+        let run = base_run(Algorithm::CompressedGd {
+            compressor: kind,
+            aggregation: AggregationRule::MajorityVote,
+        });
+        let mut rng = Pcg64::seed_from(7);
+        let init = env.init_params(&mut rng);
+        let hist = run.run(&env, init, &|p| env.evaluate(p));
+        assert!(hist.final_params.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn single_worker_single_example_trains() {
+    let data = tiny_dataset(1);
+    let fed = FederatedDataset { shards: vec![vec![0]] };
+    let env = ClassifierEnv::new(
+        ModelKind::Linear { inputs: 4, classes: 2 }.build(),
+        data.clone(),
+        data,
+        fed,
+        2,
+    );
+    let run = base_run(Algorithm::EfSparsign {
+        b_local: 10.0,
+        b_global: 1.0,
+        tau: 2,
+        server_lr_scale: None,
+        server_ef: true,
+    });
+    let mut rng = Pcg64::seed_from(8);
+    let init = env.init_params(&mut rng);
+    let hist = run.run(&env, init, &|p| env.evaluate(p));
+    assert!(hist.final_params.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn config_validation_rejects_garbage() {
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 0;
+    assert!(cfg.validate().is_err());
+
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.lr_overrides = vec![Some(0.1)]; // wrong arity
+    assert!(cfg.validate().is_err());
+
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.data_scale = 0.0;
+    assert!(cfg.validate().is_err());
+
+    let mut cfg = ExperimentConfig::fast_preset();
+    assert!(cfg.apply_override("participation", "0.9").is_ok());
+    assert!(cfg.apply_override("participation", "a lot").is_err());
+}
+
+#[test]
+fn huge_gradients_do_not_break_bit_accounting() {
+    let env = tiny_env();
+    let mut run = base_run(Algorithm::CompressedGd {
+        compressor: CompressorKind::Sparsign { budget: 1e6 }, // extreme clipping
+        aggregation: AggregationRule::MajorityVote,
+    });
+    run.schedule = LrSchedule::Const { lr: 1e-6 };
+    let mut rng = Pcg64::seed_from(9);
+    let init = env.init_params(&mut rng);
+    let hist = run.run(&env, init, &|p| env.evaluate(p));
+    assert!(hist.total_uplink().is_finite());
+    // Fully clipped sparsign = dense sign ⇒ uplink ≈ Golomb cost of a
+    // (nearly) full support, still finite and bounded by ~2 bits/coord + d.
+    use sparsignd::coordinator::GradientSource;
+    let d = env.dim() as f64;
+    let per_round = hist.total_uplink() / 5.0 / 4.0; // rounds, workers
+    assert!(per_round <= 34.0 * d, "per-message bits {per_round} vs d {d}");
+}

@@ -1,0 +1,235 @@
+//! Algorithm-level integration: the paper's headline behaviours on
+//! adversarial and heterogeneous workloads, exercised through the full
+//! coordinator stack.
+
+use sparsignd::compressors::CompressorKind;
+use sparsignd::config::ExperimentConfig;
+use sparsignd::coordinator::{
+    AggregationRule, Algorithm, Attack, AttackPlan, RosenbrockEnv, TrainingRun,
+};
+use sparsignd::experiments::build_env;
+use sparsignd::model::rosenbrock::{Rosenbrock, ScaledObjectiveWorkers};
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
+
+fn rosen_env(seed: u64) -> RosenbrockEnv {
+    let mut rng = Pcg64::seed_from(seed);
+    RosenbrockEnv {
+        f: Rosenbrock::new(10),
+        scales: ScaledObjectiveWorkers::generate_scaled(100, 80, 0.01, &mut rng),
+        noise_std: 0.0,
+    }
+}
+
+fn run_rosen(alg: Algorithm, rounds: usize, participation: f64, seed: u64) -> f64 {
+    let env = rosen_env(seed);
+    let run = TrainingRun {
+        algorithm: alg,
+        schedule: LrSchedule::Const { lr: 0.01 },
+        rounds,
+        participation,
+        eval_every: 0,
+        seed,
+        attack: None,
+        allow_stateful_with_sampling: false,
+    };
+    let hist = run.run(&env, vec![0.0; 10], &|p| (env.f.value(p), 0.0));
+    env.f.value(&hist.final_params)
+}
+
+/// The paper's core claim end-to-end: under eq. (11) heterogeneity,
+/// signSGD majority vote diverges while SPARSIGNSGD converges.
+#[test]
+fn signsgd_diverges_sparsign_converges() {
+    let sign = run_rosen(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        1_500,
+        1.0,
+        9,
+    );
+    let sparsign = run_rosen(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 0.1 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        1_500,
+        1.0,
+        9,
+    );
+    let f0 = 9.0;
+    assert!(sign > 100.0 * f0, "signSGD should diverge hard, got F = {sign}");
+    assert!(sparsign < f0, "sparsign should descend, got F = {sparsign}");
+}
+
+/// Worker-EF signSGD actually *works* under full participation (it is a
+/// valid fix) — and the engine is what forbids the stale-state
+/// configuration; with the override, sampled EF keeps stale residuals.
+#[test]
+fn worker_ef_fixes_sign_under_full_participation() {
+    let ef_sign = run_rosen(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::WorkerEf(Box::new(CompressorKind::ScaledSign)),
+            aggregation: AggregationRule::Mean,
+        },
+        1_500,
+        1.0,
+        10,
+    );
+    assert!(
+        ef_sign < 9.0,
+        "EF-scaled-sign with full participation should converge, got {ef_sign}"
+    );
+}
+
+/// Re-scaling attack (Remark 2): sparsign's accuracy degrades gracefully
+/// while the magnitude-scaled compressor collapses.
+#[test]
+fn rescale_attack_hurts_norm_scaled_compressors_more() {
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 100;
+    let attack = Some(AttackPlan { attack: Attack::Rescale { factor: 1e4 }, malicious: 4 });
+
+    let final_acc = |kind: CompressorKind, agg: AggregationRule, lr: f64, attack: Option<AttackPlan>| {
+        let env = build_env(&cfg, 0xda7a);
+        let mut init_rng = Pcg64::new(0, 0x1217);
+        let init = env.init_params(&mut init_rng);
+        let run = TrainingRun {
+            algorithm: Algorithm::CompressedGd { compressor: kind, aggregation: agg },
+            schedule: LrSchedule::Const { lr },
+            rounds: cfg.rounds,
+            participation: 1.0,
+            eval_every: 0,
+            seed: 0,
+            attack,
+            allow_stateful_with_sampling: false,
+        };
+        let hist = run.run(&env, init, &|p| env.evaluate(p));
+        hist.final_eval().unwrap().1
+    };
+
+    let sparsign_clean =
+        final_acc(CompressorKind::Sparsign { budget: 1.0 }, AggregationRule::MajorityVote, 0.005, None);
+    let sparsign_attacked = final_acc(
+        CompressorKind::Sparsign { budget: 1.0 },
+        AggregationRule::MajorityVote,
+        0.005,
+        attack,
+    );
+    let terngrad_clean =
+        final_acc(CompressorKind::TernGrad, AggregationRule::Mean, 0.05, None);
+    let terngrad_attacked =
+        final_acc(CompressorKind::TernGrad, AggregationRule::Mean, 0.05, attack);
+
+    let sparsign_drop = sparsign_clean - sparsign_attacked;
+    let terngrad_drop = terngrad_clean - terngrad_attacked;
+    println!(
+        "sparsign {sparsign_clean:.3}→{sparsign_attacked:.3} (drop {sparsign_drop:.3}); \
+         terngrad {terngrad_clean:.3}→{terngrad_attacked:.3} (drop {terngrad_drop:.3})"
+    );
+    assert!(
+        terngrad_drop > sparsign_drop + 0.1,
+        "norm-scaled compressor should suffer much more from re-scaling"
+    );
+    assert!(sparsign_drop < 0.15, "sparsign should be nearly unaffected");
+}
+
+/// Partial participation + heterogeneity: EF-SPARSIGNSGD (server-side EF
+/// only) trains fine with 25% sampling — the configuration worker-EF
+/// methods cannot support.
+#[test]
+fn ef_sparsign_trains_under_low_participation() {
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 150;
+    cfg.alpha = 0.1;
+    let env = build_env(&cfg, 0xda7a);
+    let mut init_rng = Pcg64::new(0, 0x1217);
+    let init = env.init_params(&mut init_rng);
+    let run = TrainingRun {
+        algorithm: Algorithm::EfSparsign {
+            b_local: 10.0,
+            b_global: 1.0,
+            tau: 2,
+            server_lr_scale: None,
+            server_ef: true,
+        },
+        schedule: LrSchedule::Const { lr: 0.02 },
+        rounds: cfg.rounds,
+        participation: 0.25,
+        eval_every: 0,
+        seed: 1,
+        attack: None,
+        allow_stateful_with_sampling: false,
+    };
+    let hist = run.run(&env, init, &|p| env.evaluate(p));
+    let (_, acc) = hist.final_eval().unwrap();
+    assert!(acc > 0.5, "EF-sparsign @25% participation acc {acc}");
+}
+
+/// Local steps improve round efficiency (Theorem 3 / Table 3 direction):
+/// τ=8 reaches a fixed loss level in fewer rounds than τ=1 for FedCom.
+#[test]
+fn local_steps_reduce_rounds_to_target() {
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 80;
+    let env = build_env(&cfg, 0xda7a);
+    let mut init_rng = Pcg64::new(0, 0x1217);
+    let init = env.init_params(&mut init_rng);
+    let rounds_to = |tau: usize| {
+        let run = TrainingRun {
+            algorithm: Algorithm::FedCom { tau, levels: 255 },
+            schedule: LrSchedule::Const { lr: 0.05 },
+            rounds: cfg.rounds,
+            participation: 1.0,
+            eval_every: 2,
+            seed: 2,
+            attack: None,
+            allow_stateful_with_sampling: false,
+        };
+        let hist = run.run(&env, init.clone(), &|p| env.evaluate(p));
+        hist.rounds_to_acc(0.6)
+    };
+    let r1 = rounds_to(1);
+    let r8 = rounds_to(8);
+    println!("rounds to 60%: τ=1 {r1:?} vs τ=8 {r8:?}");
+    match (r1, r8) {
+        (Some(a), Some(b)) => assert!(b < a, "τ=8 ({b}) should beat τ=1 ({a})"),
+        (None, Some(_)) => {} // τ=8 reached it, τ=1 didn't — even stronger
+        other => panic!("unexpected: {other:?}"),
+    }
+}
+
+/// Golomb-accounted ternary uplink beats dense 1-bit as soon as the
+/// message is sparse — verified through the full engine's ledger.
+#[test]
+fn sparsign_uplink_beats_dense_sign_when_sparse() {
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 20;
+    let env = build_env(&cfg, 0xda7a);
+    let mut init_rng = Pcg64::new(0, 0x1217);
+    let init = env.init_params(&mut init_rng);
+    let uplink = |kind: CompressorKind| {
+        let run = TrainingRun {
+            algorithm: Algorithm::CompressedGd {
+                compressor: kind,
+                aggregation: AggregationRule::MajorityVote,
+            },
+            schedule: LrSchedule::Const { lr: 0.01 },
+            rounds: cfg.rounds,
+            participation: 1.0,
+            eval_every: 0,
+            seed: 3,
+            attack: None,
+            allow_stateful_with_sampling: false,
+        };
+        run.run(&env, init.clone(), &|p| env.evaluate(p)).total_uplink()
+    };
+    let dense = uplink(CompressorKind::Sign);
+    let sparse = uplink(CompressorKind::Sparsign { budget: 0.1 });
+    assert!(
+        sparse < dense / 2.0,
+        "sparsign(B=0.1) uplink {sparse:.0} should be ≪ sign {dense:.0}"
+    );
+}

@@ -1,0 +1,194 @@
+//! Cross-language integration: the AOT-compiled JAX artifacts executed
+//! through PJRT must agree with the pure-rust implementations — the same
+//! model, same flat parameter layout, two independent stacks.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! works on a fresh checkout).
+
+use sparsignd::model::{Mlp, Model};
+use sparsignd::runtime::{literal_f32, literal_u32, scalar_f32, vec_f32, HloModel, Runtime};
+use sparsignd::util::rng::Pcg64;
+
+fn runtime() -> Option<std::rc::Rc<Runtime>> {
+    match Runtime::cpu("artifacts") {
+        Ok(rt) => Some(std::rc::Rc::new(rt)),
+        Err(e) => {
+            eprintln!("skipping runtime integration test: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn hlo_mlp_grad_matches_pure_rust() {
+    let Some(rt) = runtime() else { return };
+    let hlo = HloModel::load(rt, "mlp_small", 32, vec![32], 5).expect("load mlp_small");
+    let rust = Mlp::new(32, vec![32], 5);
+    assert_eq!(hlo.dim(), rust.dim());
+    let batch = hlo.batch();
+
+    let mut rng = Pcg64::seed_from(1);
+    let params = rust.init(&mut rng);
+    let mut x = vec![0.0f32; batch * 32];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let y: Vec<usize> = (0..batch).map(|_| rng.index(5)).collect();
+
+    let mut g_hlo = vec![0.0f32; hlo.dim()];
+    let mut g_rust = vec![0.0f32; rust.dim()];
+    let l_hlo = hlo.loss_grad(&params, &x, &y, &mut g_hlo);
+    let l_rust = rust.loss_grad(&params, &x, &y, &mut g_rust);
+
+    assert!(
+        (l_hlo - l_rust).abs() < 1e-4,
+        "loss mismatch: hlo {l_hlo} vs rust {l_rust}"
+    );
+    let mut max_rel = 0.0f32;
+    for (i, (a, b)) in g_hlo.iter().zip(&g_rust).enumerate() {
+        let rel = (a - b).abs() / a.abs().max(b.abs()).max(1e-3);
+        if rel > max_rel {
+            max_rel = rel;
+        }
+        assert!(rel < 5e-3, "grad coord {i}: hlo {a} vs rust {b}");
+    }
+    println!("max relative grad deviation: {max_rel:.2e}");
+}
+
+#[test]
+fn hlo_mlp_evaluate_matches_pure_rust() {
+    let Some(rt) = runtime() else { return };
+    let hlo = HloModel::load(rt, "mlp_small", 32, vec![32], 5).expect("load");
+    let rust = Mlp::new(32, vec![32], 5);
+    let mut rng = Pcg64::seed_from(2);
+    let params = rust.init(&mut rng);
+    // Odd-sized eval set exercises the padded-chunk path.
+    let n = 150;
+    let mut x = vec![0.0f32; n * 32];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let y: Vec<usize> = (0..n).map(|_| rng.index(5)).collect();
+    let (l1, a1) = hlo.evaluate(&params, &x, &y);
+    let (l2, a2) = rust.evaluate(&params, &x, &y);
+    assert!((l1 - l2).abs() < 1e-4, "{l1} vs {l2}");
+    assert!((a1 - a2).abs() < 1e-9, "{a1} vs {a2}");
+}
+
+#[test]
+fn fused_sparsign_artifact_produces_valid_ternary_codes() {
+    let Some(rt) = runtime() else { return };
+    let spec = match rt.registry().spec("mlp_fmnist_grad_sparsign_b1") {
+        Ok(s) => s.inputs.clone(),
+        Err(_) => return,
+    };
+    let dim = spec[0].dims[0] as usize;
+    let batch = spec[1].dims[0] as usize;
+    let feat = spec[1].dims[1] as usize;
+    let classes = spec[2].dims[1] as usize;
+    let mut rng = Pcg64::seed_from(3);
+    let mut params = vec![0.0f32; dim];
+    rng.fill_normal(&mut params, 0.0, 0.05);
+    let mut x = vec![0.0f32; batch * feat];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let mut y = vec![0.0f32; batch * classes];
+    for i in 0..batch {
+        y[i * classes + rng.index(classes)] = 1.0;
+    }
+    let inputs = vec![
+        literal_f32(&params, &[dim as i64]).unwrap(),
+        literal_f32(&x, &[batch as i64, feat as i64]).unwrap(),
+        literal_f32(&y, &[batch as i64, classes as i64]).unwrap(),
+        literal_u32(&[7, 11], &[2]).unwrap(),
+    ];
+    let out = rt.execute("mlp_fmnist_grad_sparsign_b1", &inputs).unwrap();
+    let loss = scalar_f32(&out[0]).unwrap();
+    let codes = vec_f32(&out[1]).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(codes.len(), dim);
+    // L1 Pallas output contract: ternary, sign-consistent with the raw
+    // gradient from the unfused artifact.
+    let raw = rt.execute("mlp_fmnist_grad", &inputs[..3]).unwrap();
+    let grad = vec_f32(&raw[1]).unwrap();
+    let mut nnz = 0usize;
+    for (i, (&c, &g)) in codes.iter().zip(&grad).enumerate() {
+        assert!(c == 0.0 || c == 1.0 || c == -1.0, "coord {i}: code {c}");
+        if c != 0.0 {
+            nnz += 1;
+            assert!(c * g > 0.0, "coord {i}: code {c} vs grad {g}");
+        }
+    }
+    // Same key ⇒ identical codes (stateless threefry contract).
+    let out2 = rt.execute("mlp_fmnist_grad_sparsign_b1", &inputs).unwrap();
+    assert_eq!(vec_f32(&out2[1]).unwrap(), codes);
+    // Density sanity: E[nnz] = Σ min(1, |g|) for B = 1.
+    let expect: f64 = grad.iter().map(|g| (g.abs() as f64).min(1.0)).sum();
+    let got = nnz as f64;
+    assert!(
+        (got - expect).abs() < 6.0 * expect.sqrt().max(10.0),
+        "nnz {got} vs E[nnz] {expect:.1}"
+    );
+}
+
+#[test]
+fn rosenbrock_artifact_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    if rt.registry().spec("rosenbrock_grad").is_err() {
+        return;
+    }
+    let f = sparsignd::model::rosenbrock::Rosenbrock::new(10);
+    let mut rng = Pcg64::seed_from(4);
+    let mut x = vec![0.0f32; 10];
+    rng.fill_normal(&mut x, 0.0, 0.5);
+    let out = rt
+        .execute("rosenbrock_grad", &[literal_f32(&x, &[10]).unwrap()])
+        .unwrap();
+    let val = scalar_f32(&out[0]).unwrap() as f64;
+    let grad = vec_f32(&out[1]).unwrap();
+    assert!((val - f.value(&x)).abs() / f.value(&x).max(1.0) < 1e-4);
+    let mut g = vec![0.0f32; 10];
+    f.grad(&x, &mut g);
+    for (a, b) in grad.iter().zip(&g) {
+        assert!((a - b).abs() / b.abs().max(1.0) < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn transformer_artifacts_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    if rt.registry().spec("transformer_init").is_err() {
+        return;
+    }
+    let init = rt
+        .execute("transformer_init", &[literal_u32(&[1, 2], &[2]).unwrap()])
+        .unwrap();
+    let params = vec_f32(&init[0]).unwrap();
+    assert!(params.iter().all(|v| v.is_finite()));
+    // LayerNorm gains initialized to 1 somewhere in the vector.
+    assert!(params.iter().filter(|&&v| v == 1.0).count() > 100);
+    let tok: Vec<i32> = (0..8 * 32).map(|i| (i % 64) as i32).collect();
+    let out = rt
+        .execute(
+            "transformer_grad",
+            &[
+                literal_f32(&params, &[params.len() as i64]).unwrap(),
+                sparsignd::runtime::literal_i32(&tok, &[8, 32]).unwrap(),
+                sparsignd::runtime::literal_i32(&tok, &[8, 32]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let loss = scalar_f32(&out[0]).unwrap();
+    assert!(loss.is_finite() && loss > 0.0 && loss < 10.0);
+    assert_eq!(vec_f32(&out[1]).unwrap().len(), params.len());
+}
+
+#[test]
+fn registry_rejects_wrong_shapes() {
+    let Some(rt) = runtime() else { return };
+    if rt.registry().spec("rosenbrock_grad").is_err() {
+        return;
+    }
+    // Wrong input count.
+    assert!(rt.execute("rosenbrock_grad", &[]).is_err());
+    // Wrong element count.
+    let bad = literal_f32(&[1.0; 4], &[4]).unwrap();
+    assert!(rt.execute("rosenbrock_grad", &[bad]).is_err());
+    // Unknown artifact.
+    assert!(rt.executable("nonexistent_model").is_err());
+}

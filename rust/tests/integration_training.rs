@@ -1,0 +1,200 @@
+//! Full-pipeline training integration: config → data → partition → train →
+//! metrics, for every algorithm family, including the theory-rate
+//! schedules and the paper-scale config *validation* (not execution).
+
+use sparsignd::compressors::{CompressorKind, NormKind};
+use sparsignd::config::ExperimentConfig;
+use sparsignd::coordinator::{AggregationRule, Algorithm, TrainingRun};
+use sparsignd::experiments::{
+    build_env, run_classification, table1_config, table2_config, table3_config,
+    tables4_7_configs,
+};
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
+
+#[test]
+fn every_algorithm_family_trains_and_accounts_bits() {
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 25;
+    let env = build_env(&cfg, 0xda7a);
+    let mut init_rng = Pcg64::new(0, 0x1217);
+    let init = env.init_params(&mut init_rng);
+    let algorithms = vec![
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::ScaledSign,
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::NoisySign { noise_std: 0.01 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Qsgd { levels: 1, norm: NormKind::L2 },
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Qsgd { levels: 255, norm: NormKind::Linf },
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::TernGrad,
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 1.0 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::TopK { k: 100 },
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::RandK { k: 100 },
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::ThresholdV { v: 0.001 },
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Stc { k: 100 },
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Identity,
+            aggregation: AggregationRule::Mean,
+        },
+        Algorithm::EfSparsign { b_local: 10.0, b_global: 1.0, tau: 3, server_lr_scale: None, server_ef: true },
+        Algorithm::FedAvg { tau: 3 },
+        Algorithm::FedCom { tau: 3, levels: 255 },
+    ];
+    for alg in algorithms {
+        let label = alg.label();
+        let run = TrainingRun {
+            algorithm: alg,
+            schedule: LrSchedule::Const { lr: 0.01 },
+            rounds: cfg.rounds,
+            participation: 1.0,
+            eval_every: 0,
+            seed: 0,
+            attack: None,
+            allow_stateful_with_sampling: false,
+        };
+        let hist = run.run(&env, init.clone(), &|p| env.evaluate(p));
+        assert_eq!(hist.reports.len(), cfg.rounds, "{label}");
+        assert!(hist.total_uplink() > 0.0, "{label}: no uplink recorded");
+        assert!(
+            hist.reports.iter().all(|r| r.train_loss.is_finite()),
+            "{label}: non-finite loss"
+        );
+        let (_, acc) = hist.final_eval().unwrap();
+        assert!(acc.is_finite() && acc >= 0.0, "{label}");
+        // Every round's downlink is accounted too.
+        assert!(hist.reports.iter().all(|r| r.downlink_bits > 0.0), "{label}");
+    }
+}
+
+#[test]
+fn theory_rate_schedule_trains() {
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 200;
+    let env = build_env(&cfg, 0xda7a);
+    let mut init_rng = Pcg64::new(0, 0x1217);
+    let init = env.init_params(&mut init_rng);
+    let run = TrainingRun {
+        algorithm: Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 1.0 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        // Theorem 2 rate: η = 1/√(T·d).
+        schedule: LrSchedule::TheoryRate { total_rounds: 200, dim: env_dim(&env) },
+        rounds: cfg.rounds,
+        participation: 1.0,
+        eval_every: 0,
+        seed: 5,
+        attack: None,
+        allow_stateful_with_sampling: false,
+    };
+    let first_loss_run = run.run(&env, init, &|p| env.evaluate(p));
+    let first = first_loss_run.reports.first().unwrap().train_loss;
+    let last = first_loss_run.reports.last().unwrap().train_loss;
+    assert!(last < first, "theory-rate run should reduce loss: {first} → {last}");
+}
+
+fn env_dim(env: &sparsignd::coordinator::ClassifierEnv) -> usize {
+    use sparsignd::coordinator::GradientSource;
+    env.dim()
+}
+
+#[test]
+fn seeds_reproduce_and_differ() {
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 30;
+    cfg.seeds = vec![0];
+    cfg.algorithms = vec![Algorithm::CompressedGd {
+        compressor: CompressorKind::Sparsign { budget: 1.0 },
+        aggregation: AggregationRule::MajorityVote,
+    }];
+    cfg.lr_overrides.clear();
+    let r1 = run_classification(&cfg);
+    let r2 = run_classification(&cfg);
+    assert_eq!(
+        r1.summaries[0].final_acc_mean,
+        r2.summaries[0].final_acc_mean,
+        "same config+seed must reproduce exactly"
+    );
+    cfg.seeds = vec![1];
+    let r3 = run_classification(&cfg);
+    assert_ne!(
+        r1.summaries[0].final_acc_mean, r3.summaries[0].final_acc_mean,
+        "different seed should differ"
+    );
+}
+
+#[test]
+fn paper_scale_configs_validate_and_build_envs() {
+    // We don't *run* the paper-scale configs in CI (hours of compute),
+    // but they must validate and their (scaled-down) environments build.
+    for cfg in [table1_config(true), table2_config(true), table3_config(true)] {
+        cfg.validate().unwrap();
+    }
+    for cfg in tables4_7_configs(true, &[0.1, 1.0]) {
+        cfg.validate().unwrap();
+    }
+    // Env construction sanity on a scaled-down copy of the paper config.
+    let mut cfg = table1_config(true);
+    cfg.data_scale = 0.02;
+    let env = build_env(&cfg, 1);
+    use sparsignd::coordinator::GradientSource;
+    assert_eq!(env.workers(), 100);
+    assert_eq!(env.dim(), 784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10);
+}
+
+#[test]
+fn run_classification_emits_consistent_report() {
+    let mut cfg = ExperimentConfig::fast_preset();
+    cfg.rounds = 40;
+    cfg.seeds = vec![0, 1];
+    let report = run_classification(&cfg);
+    // Table contains every algorithm label.
+    for alg in &cfg.algorithms {
+        assert!(
+            report.table().contains(alg.label().split('(').next().unwrap()),
+            "table missing {}",
+            alg.label()
+        );
+    }
+    // Bits-to-target ≤ total uplink; rounds ≤ configured rounds.
+    for s in &report.summaries {
+        for (r, b) in s.rounds_to_target.iter().zip(&s.bits_to_target) {
+            if let (Some(r), Some(b)) = (r, b) {
+                assert!(*r <= cfg.rounds as f64);
+                assert!(*b <= s.total_uplink_mean * 1.01);
+            }
+        }
+    }
+}

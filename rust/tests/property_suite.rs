@@ -1,0 +1,284 @@
+//! Property-based suite over the crate's core invariants (DESIGN.md §7),
+//! using the in-tree `testing` mini-framework.
+
+use sparsignd::coding::golomb;
+use sparsignd::compressors::{
+    CompressedGrad, Compressor, CompressorKind, NormKind,
+};
+use sparsignd::coordinator::AggregationRule;
+use sparsignd::experiments::theory;
+use sparsignd::testing::{check, check_vec, gen, PropConfig};
+use sparsignd::util::rng::Pcg64;
+
+fn cfg(cases: usize, seed: u64) -> PropConfig {
+    PropConfig { cases, seed }
+}
+
+/// Every compressor: ternary payloads really are ternary, nnz counts are
+/// consistent, and bit accounting is non-negative and finite.
+#[test]
+fn prop_all_compressors_well_formed() {
+    let kinds = [
+        CompressorKind::Sign,
+        CompressorKind::ScaledSign,
+        CompressorKind::NoisySign { noise_std: 0.05 },
+        CompressorKind::Qsgd { levels: 1, norm: NormKind::L2 },
+        CompressorKind::Qsgd { levels: 4, norm: NormKind::Linf },
+        CompressorKind::TernGrad,
+        CompressorKind::Sparsign { budget: 0.5 },
+        CompressorKind::TopK { k: 7 },
+        CompressorKind::RandK { k: 7 },
+        CompressorKind::ThresholdV { v: 0.05 },
+        CompressorKind::Stc { k: 7 },
+        CompressorKind::Identity,
+    ];
+    for kind in kinds {
+        let label = kind.label();
+        check_vec(
+            cfg(48, 0x11),
+            (1, 300),
+            gen::f32_gradient_like(),
+            |g| {
+                let mut comp = kind.build(g.len());
+                let mut rng = Pcg64::seed_from(1);
+                let msg = comp.compress(g, &mut rng);
+                if msg.dim() != g.len() {
+                    return Err(format!("{label}: dim {} != {}", msg.dim(), g.len()));
+                }
+                if !(msg.bits() >= 0.0 && msg.bits().is_finite()) {
+                    return Err(format!("{label}: bad bits {}", msg.bits()));
+                }
+                if let CompressedGrad::Ternary { q, scale, .. } = &msg {
+                    if !q.iter().all(|&x| (-1..=1).contains(&x)) {
+                        return Err(format!("{label}: non-ternary code"));
+                    }
+                    if !scale.is_finite() {
+                        return Err(format!("{label}: bad scale {scale}"));
+                    }
+                }
+                if msg.nnz() > g.len() {
+                    return Err(format!("{label}: nnz > d"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// sparsign expected density: |nnz − E[nnz]| stays within 6σ across
+/// random gradients and budgets.
+#[test]
+fn prop_sparsign_density_matches_definition() {
+    check(
+        cfg(40, 0x22),
+        |rng| {
+            let n = 200 + rng.index(2_000);
+            let budget = rng.range_f32(0.01, 3.0);
+            let mut g = vec![0.0f32; n];
+            rng.fill_normal(&mut g, 0.0, 0.5);
+            (g, budget)
+        },
+        |(g, budget)| {
+            let comp = sparsignd::compressors::SparsignCompressor { budget: *budget };
+            let expect = comp.expected_nnz(g);
+            // Average over 32 draws.
+            let mut c = comp;
+            let mut rng = Pcg64::seed_from(7);
+            let reps = 32;
+            let total: usize = (0..reps).map(|_| c.compress(g, &mut rng).nnz()).sum();
+            let got = total as f64 / reps as f64;
+            let sigma = (expect.max(1.0) / reps as f64).sqrt() * 2.0;
+            if (got - expect).abs() <= 6.0 * sigma + 1.0 {
+                Ok(())
+            } else {
+                Err(format!("nnz {got:.1} vs E {expect:.1} (σ≈{sigma:.2})"))
+            }
+        },
+    );
+}
+
+/// Golomb: decode ∘ encode = identity for arbitrary sparse supports.
+#[test]
+fn prop_golomb_roundtrip() {
+    check(
+        cfg(128, 0x33),
+        |rng| {
+            let d = 1 + rng.index(50_000);
+            let p = rng.f64() * 0.6;
+            let idx: Vec<usize> = (0..d).filter(|_| rng.bernoulli(p)).collect();
+            (idx, d)
+        },
+        |(idx, d)| {
+            let (bytes, bits) = golomb::encode_indices(idx, *d);
+            if bits > bytes.len() * 8 {
+                return Err("bit count exceeds buffer".into());
+            }
+            match golomb::decode_indices(&bytes) {
+                Some(out) if &out == idx => Ok(()),
+                Some(_) => Err("roundtrip mismatch".into()),
+                None => Err("decode failed".into()),
+            }
+        },
+    );
+}
+
+/// Aggregation is permutation-invariant in the worker order.
+#[test]
+fn prop_aggregation_permutation_invariant() {
+    check(
+        cfg(64, 0x44),
+        |rng| {
+            let d = 1 + rng.index(64);
+            let m = 2 + rng.index(12);
+            let msgs: Vec<CompressedGrad> = (0..m)
+                .map(|_| {
+                    let q: Vec<i8> =
+                        (0..d).map(|_| [-1i8, 0, 1][rng.index(3)]).collect();
+                    CompressedGrad::Ternary {
+                        q,
+                        scale: rng.range_f32(0.1, 2.0),
+                        bits: 0.0,
+                    }
+                })
+                .collect();
+            let mut shuffled = msgs.clone();
+            rng.shuffle(&mut shuffled);
+            (msgs, shuffled)
+        },
+        |(a, b)| {
+            for rule in [
+                AggregationRule::MajorityVote,
+                AggregationRule::ScaledSign,
+                AggregationRule::Mean,
+            ] {
+                let ua = rule.aggregate(a, None).update;
+                let ub = rule.aggregate(b, None).update;
+                for (x, y) in ua.iter().zip(&ub) {
+                    if (x - y).abs() > 1e-5 {
+                        return Err(format!("{rule:?} not permutation-invariant"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Theorem 1: the closed-form bound dominates Monte-Carlo estimates for
+/// random adversarial scalar populations (not just the eq. (11) one).
+#[test]
+fn prop_theorem1_bound_dominates() {
+    check(
+        cfg(20, 0x55),
+        |rng| {
+            let m = 20 + rng.index(100);
+            let negs = rng.index(m * 8 / 10);
+            let budget = 0.05 + rng.f64() * 0.4;
+            (m, negs, budget, rng.next_u64())
+        },
+        |&(m, negs, budget, seed)| {
+            let mut rng = Pcg64::seed_from(seed);
+            // Positive-sum population with `negs` sign-flipped members.
+            let mut u = vec![0.0f64; m];
+            let mut neg_sum = 0.0;
+            for v in u.iter_mut().take(negs) {
+                let mag = 0.2 + 0.3 * rng.f64();
+                *v = -mag;
+                neg_sum += mag;
+            }
+            let pos = m - negs;
+            for v in u.iter_mut().skip(negs) {
+                *v = (1.0 + neg_sum) / pos as f64;
+            }
+            let (p_bar, q_bar) = theory::corollary1_rates(&u, budget, 1.0);
+            if q_bar <= p_bar {
+                return Ok(()); // Theorem 1 precondition not met; skip
+            }
+            let emp = theory::empirical_wrong_aggregation(&u, budget, 1.0, 3_000, &mut rng);
+            let bound = theory::theorem1_bound(p_bar, q_bar, m);
+            if emp <= bound + 0.03 {
+                Ok(())
+            } else {
+                Err(format!("empirical {emp:.4} > bound {bound:.4} (M={m}, B={budget:.2})"))
+            }
+        },
+    );
+}
+
+/// Scaled-sign aggregation is α-approximate: ‖C(x) − x‖² ≤ (1−α)‖x‖² with
+/// α = ‖x‖₁²/(d‖x‖₂²) — the Algorithm 2 server-compressor contract.
+#[test]
+fn prop_scaled_sign_alpha_approximate() {
+    check_vec(
+        cfg(96, 0x66),
+        (1, 512),
+        gen::f32_normal(2.0),
+        |x| {
+            let msgs = [CompressedGrad::Dense { v: x.to_vec(), bits: 0.0 }];
+            let c = AggregationRule::ScaledSign.aggregate(&msgs, None).update;
+            let err: f64 = c
+                .iter()
+                .zip(x)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum();
+            let l1: f64 = x.iter().map(|v| v.abs() as f64).sum();
+            let l2sq: f64 = x.iter().map(|v| (v * v) as f64).sum();
+            if l2sq == 0.0 {
+                return Ok(());
+            }
+            let alpha = l1 * l1 / (x.len() as f64 * l2sq);
+            if err <= (1.0 - alpha) * l2sq + 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("err {err} > (1-α)‖x‖² = {}", (1.0 - alpha) * l2sq))
+            }
+        },
+    );
+}
+
+/// Unbiased compressors (TernGrad, 1-bit QSGD, Random-k): empirical mean
+/// of the decoded message approaches the gradient.
+#[test]
+fn prop_unbiased_compressors_are_unbiased() {
+    for kind in [
+        CompressorKind::TernGrad,
+        CompressorKind::Qsgd { levels: 1, norm: NormKind::L2 },
+        CompressorKind::RandK { k: 8 },
+    ] {
+        let label = kind.label();
+        check(
+            cfg(12, 0x77),
+            |rng| {
+                let n = 16 + rng.index(48);
+                let mut g = vec![0.0f32; n];
+                rng.fill_normal(&mut g, 0.0, 1.0);
+                g
+            },
+            |g| {
+                let mut comp = kind.build(g.len());
+                let mut rng = Pcg64::seed_from(11);
+                let reps = 3_000;
+                let mut mean = vec![0.0f64; g.len()];
+                for _ in 0..reps {
+                    for (m, v) in mean.iter_mut().zip(comp.compress(g, &mut rng).to_dense()) {
+                        *m += v as f64;
+                    }
+                }
+                let scale = 1.0 / reps as f64;
+                for (i, (m, &gi)) in mean.iter().zip(g.iter()).enumerate() {
+                    let est = m * scale;
+                    // 6σ-ish tolerance: variance per draw is O(‖g‖·d) for
+                    // these compressors; use a generous absolute band.
+                    let tol = 0.3 + 0.1 * gi.abs() as f64
+                        + 6.0 * (g.len() as f64).sqrt() / (reps as f64).sqrt();
+                    if (est - gi as f64).abs() > tol {
+                        return Err(format!(
+                            "{label} coord {i}: E[Q] {est:.3} vs g {gi:.3}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
