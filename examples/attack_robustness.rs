@@ -72,6 +72,7 @@ fn main() {
                 seed: 0,
                 attack: *plan,
                 allow_stateful_with_sampling: false,
+                threads: None,
             };
             let hist = run.run(&env, init, &|p| env.evaluate(p));
             let (_, acc) = hist.final_eval().unwrap();

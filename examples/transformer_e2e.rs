@@ -34,8 +34,9 @@ struct TransformerEnv {
     strides: Vec<i32>,
 }
 
-// SAFETY: the engine is single-threaded (see runtime::HloModel docs);
-// the executable cache is warmed before training starts.
+// SAFETY: this example pins the round engine to `threads: Some(1)` (the
+// Rc/RefCell PJRT cache is single-threaded by contract), and the
+// executable cache is warmed before training starts.
 unsafe impl Send for TransformerEnv {}
 unsafe impl Sync for TransformerEnv {}
 
@@ -82,6 +83,10 @@ impl GradientSource for TransformerEnv {
         self.workers
     }
 
+    fn serial_only(&self) -> bool {
+        true // Rc/RefCell PJRT cache — the engine pins fan-out to 1 thread
+    }
+
     fn sample_grad(&self, worker: usize, params: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f32 {
         let (tok, tgt) = self.sample_tokens(worker, rng);
         let res = self
@@ -100,7 +105,7 @@ impl GradientSource for TransformerEnv {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let rounds: usize = std::env::args()
         .nth(1)
         .and_then(|a| a.parse().ok())
@@ -113,7 +118,9 @@ fn main() -> anyhow::Result<()> {
     // init logic lives in L2, rust only supplies the key).
     let init_out = runtime.execute("transformer_init", &[literal_u32(&[1, 2], &[2])?])?;
     let init = vec_f32(&init_out[0])?;
-    anyhow::ensure!(init.len() == DIM);
+    if init.len() != DIM {
+        return Err(format!("init len {} != DIM {}", init.len(), DIM).into());
+    }
 
     let workers = 8;
     let env = TransformerEnv {
@@ -135,6 +142,8 @@ fn main() -> anyhow::Result<()> {
         seed: 3,
         attack: None,
         allow_stateful_with_sampling: false,
+        // See the TransformerEnv SAFETY note: PJRT cache is Rc/RefCell.
+        threads: Some(1),
     };
 
     println!(
@@ -186,6 +195,8 @@ fn main() -> anyhow::Result<()> {
         hist.total_uplink()
     );
     println!("loss curve → transformer_e2e_curve.csv");
-    anyhow::ensure!(final_loss < first, "loss did not decrease");
+    if final_loss >= first {
+        return Err("loss did not decrease".into());
+    }
     Ok(())
 }

@@ -3,20 +3,27 @@
 //!
 //! Hot paths (DESIGN.md §8):
 //!   1. compressors (per-coordinate work, every worker every round)
-//!   2. majority-vote / mean aggregation over M ternary messages
-//!   3. Golomb encode/decode of sparse supports
-//!   4. the blocked GEMM behind the pure-rust models
-//!   5. PJRT end-to-end worker step (when artifacts are present)
+//!   2. majority-vote / mean aggregation over M ternary messages —
+//!      word-parallel packed vote counting vs the seed's dense-i8 decode
+//!   3. the threaded round engine vs the serial reference (bit-identical)
+//!   4. Golomb encode/decode of sparse supports
+//!   5. the blocked GEMM behind the pure-rust models
+//!   6. PJRT end-to-end worker step (when artifacts are present)
+//!
+//! `cargo bench --bench perf_hotpaths` runs the full configuration;
+//! `-- --smoke` (or `PERF_SMOKE=1`) shrinks every section for CI.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use sparsignd::compressors::{
-    Compressor, CompressedGrad, NoisySignCompressor, QsgdCompressor, NormKind,
-    ScaledSignCompressor, SignCompressor, SparsignCompressor, TernGradCompressor,
+    CompressedGrad, Compressor, CompressorKind, NoisySignCompressor, NormKind,
+    QsgdCompressor, ScaledSignCompressor, SignCompressor, SparsignCompressor,
+    TernGradCompressor,
 };
 use sparsignd::coding::golomb;
-use sparsignd::coordinator::AggregationRule;
+use sparsignd::coordinator::{Algorithm, AggregationRule, GradientSource, TrainingRun};
+use sparsignd::optim::LrSchedule;
 use sparsignd::util::linalg::matmul;
 use sparsignd::util::rng::Pcg64;
 
@@ -44,27 +51,151 @@ fn bench_compressors(d: usize) {
     run("qsgd(s=255,l2)", &mut QsgdCompressor { levels: 255, norm: NormKind::L2 });
 }
 
+/// The seed's aggregation hot path, kept verbatim as the before/after
+/// baseline: every message is a dense `Vec<i8>` widened to f32 per
+/// coordinate, then averaged and sign-compressed.
+fn seed_dense_i8_majority_vote(msgs: &[Vec<i8>]) -> Vec<f32> {
+    let d = msgs[0].len();
+    let mut avg = vec![0.0f32; d];
+    for q in msgs {
+        for (a, &qi) in avg.iter_mut().zip(q.iter()) {
+            *a += qi as f32;
+        }
+    }
+    let inv = 1.0 / msgs.len() as f32;
+    for v in avg.iter_mut() {
+        let x = *v * inv;
+        *v = if x > 0.0 {
+            1.0
+        } else if x < 0.0 {
+            -1.0
+        } else {
+            0.0
+        };
+    }
+    avg
+}
+
 fn bench_aggregation(d: usize, m: usize) {
     println!("\n-- aggregation over M = {m} ternary messages (d = {d}) --");
     let mut rng = Pcg64::seed_from(3);
-    let msgs: Vec<CompressedGrad> = (0..m)
+    // ~50% density, matching a mid-training sparsign(B≈1) round.
+    let codes: Vec<Vec<i8>> = (0..m)
         .map(|_| {
-            let q: Vec<i8> = (0..d)
+            (0..d)
                 .map(|_| match rng.index(4) {
                     0 => 1i8,
                     1 => -1i8,
                     _ => 0i8,
                 })
-                .collect();
-            CompressedGrad::Ternary { q, scale: 1.0, bits: 0.0 }
+                .collect()
         })
         .collect();
+    let iters = 20;
+    let base = common::throughput("MajorityVote (seed dense-i8 baseline)", d * m, iters, || {
+        std::hint::black_box(seed_dense_i8_majority_vote(&codes));
+    });
+    let msgs: Vec<CompressedGrad> = codes
+        .iter()
+        .map(|q| CompressedGrad::ternary_from_codes(q, 1.0, 0.0))
+        .collect();
+    let i8_bytes = d * m;
+    let packed_bytes = 2 * 8 * ((d + 63) / 64) * m;
+    println!(
+        "  message memory: dense-i8 {:.1} MiB → packed {:.1} MiB ({}x)",
+        i8_bytes as f64 / (1 << 20) as f64,
+        packed_bytes as f64 / (1 << 20) as f64,
+        i8_bytes / packed_bytes.max(1)
+    );
     for rule in [AggregationRule::MajorityVote, AggregationRule::ScaledSign, AggregationRule::Mean]
     {
-        common::throughput(&format!("{rule:?}"), d * m, 20, || {
+        let meps = common::throughput(&format!("{rule:?} (packed word-parallel)"), d * m, iters, || {
             std::hint::black_box(rule.aggregate(&msgs, None));
         });
+        if rule == AggregationRule::MajorityVote {
+            println!("  => MajorityVote speedup vs seed baseline: {:.2}x", meps / base);
+        }
     }
+}
+
+/// Synthetic gradient source for the engine bench: deterministic per
+/// `(worker, round)` RNG stream, O(d) fill, no model evaluation — isolates
+/// engine + compression + aggregation wall-clock.
+struct SynthEnv {
+    d: usize,
+    m: usize,
+}
+
+impl GradientSource for SynthEnv {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn sample_grad(
+        &self,
+        _worker: usize,
+        _params: &[f32],
+        rng: &mut Pcg64,
+        out: &mut [f32],
+    ) -> f32 {
+        // Two uniform f32s in [-0.5, 0.5) per raw u64.
+        let pairs = out.len() / 2;
+        const INV: f32 = 1.0 / 4_294_967_296.0;
+        for i in 0..pairs {
+            let r = rng.next_u64();
+            out[2 * i] = (r as u32) as f32 * INV - 0.5;
+            out[2 * i + 1] = (r >> 32) as f32 * INV - 0.5;
+        }
+        if out.len() % 2 == 1 {
+            let n = out.len();
+            out[n - 1] = rng.f32() - 0.5;
+        }
+        1.0
+    }
+
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+fn bench_engine(d: usize, m: usize, rounds: usize) {
+    println!("\n-- round engine: {m}-worker CompressedGd, d = {d}, {rounds} rounds --");
+    let env = SynthEnv { d, m };
+    let mk_run = |threads: Option<usize>| TrainingRun {
+        algorithm: Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 1.0 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        schedule: LrSchedule::Const { lr: 0.01 },
+        rounds,
+        participation: 1.0,
+        eval_every: 0,
+        seed: 9,
+        attack: None,
+        allow_stateful_with_sampling: false,
+        threads,
+    };
+    let eval = |_p: &[f32]| (0.0, 0.0);
+    let init = vec![0.0f32; d];
+
+    let t0 = std::time::Instant::now();
+    let serial = mk_run(Some(1)).run(&env, init.clone(), &eval);
+    let t_serial = t0.elapsed().as_secs_f64();
+
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let t0 = std::time::Instant::now();
+    let threaded = mk_run(None).run(&env, init, &eval);
+    let t_par = t0.elapsed().as_secs_f64();
+
+    assert_eq!(
+        serial.final_params, threaded.final_params,
+        "threaded engine diverged from serial reference"
+    );
+    assert_eq!(serial.total_uplink(), threaded.total_uplink());
+    println!(
+        "  serial {t_serial:.3}s | threaded({hw}) {t_par:.3}s | speedup {:.2}x (RunHistory bit-identical)",
+        t_serial / t_par
+    );
 }
 
 fn bench_golomb(d: usize) {
@@ -111,7 +242,7 @@ fn bench_gemm() {
 fn bench_pjrt() {
     println!("\n-- PJRT worker step (AOT mlp_fmnist_grad, batch 64) --");
     let Ok(rt) = sparsignd::runtime::Runtime::cpu("artifacts") else {
-        println!("  artifacts/ missing — run `make artifacts` (skipped)");
+        println!("  artifacts/ or pjrt feature missing (skipped)");
         return;
     };
     let Ok(spec) = rt.registry().spec("mlp_fmnist_grad") else {
@@ -167,10 +298,21 @@ fn bench_pjrt() {
 }
 
 fn main() {
-    println!("## §Perf hot paths (single core)");
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if smoke {
+        println!("## §Perf hot paths (smoke configuration)");
+        bench_compressors(1 << 14);
+        bench_aggregation(1 << 13, 32);
+        bench_engine(1 << 15, 16, 2);
+        bench_golomb(1 << 14);
+        return;
+    }
+    println!("## §Perf hot paths (single core unless noted)");
     let d = 1 << 20; // ~1M coords ≈ VGG-9-scale gradient
     bench_compressors(d);
     bench_aggregation(1 << 16, 100);
+    bench_engine(1 << 20, 100, 2);
     bench_golomb(1 << 20);
     bench_gemm();
     bench_pjrt();

@@ -47,12 +47,13 @@ impl Compressor for WorkerEfCompressor {
         let msg = self.inner.compress(&self.corrected, rng);
         // e ← (g + e) − decoded(msg)
         match &msg {
-            CompressedGrad::Ternary { q, scale, .. } => {
-                for ((e, &c), &qi) in
-                    self.residual.iter_mut().zip(&self.corrected).zip(q.iter())
-                {
-                    *e = c - scale * qi as f32;
-                }
+            CompressedGrad::Ternary { pack, .. } => {
+                // Start from e = (g + e), then subtract the decoded value at
+                // each transmitted coordinate — O(nnz) instead of O(d).
+                self.residual.copy_from_slice(&self.corrected);
+                let s = pack.scale();
+                let residual = &mut self.residual;
+                pack.for_each_nonzero(|i, q| residual[i] -= s * q as f32);
             }
             CompressedGrad::Dense { v, .. } => {
                 for ((e, &c), &vi) in

@@ -8,6 +8,13 @@
 //! the point of the paper — only the explicitly-marked error-feedback
 //! wrapper keeps worker-side state, and the coordinator refuses to combine
 //! it with worker sampling (the exact failure mode the paper fixes).
+//!
+//! Ternary payloads are stored as [`PackedTernary`] — two `u64` bitplanes
+//! (support mask + sign) instead of a `Vec<i8>` — 2 bits/coordinate, a 4×
+//! memory reduction over i8 codes (16× over the f32 each message was
+//! widened to server-side) that lets the server aggregate with
+//! word-parallel vote counting (DESIGN.md §8) instead of per-coordinate
+//! i8→f32 widening.
 
 mod ef;
 mod qsgd;
@@ -28,21 +35,264 @@ pub use terngrad::TernGradCompressor;
 use crate::coding::cost::CostModel;
 use crate::util::rng::Pcg64;
 
+/// A ternary vector `q ∈ {-1,0,+1}ᵈ` packed into two bitplanes of 64
+/// coordinates per word:
+///
+/// * `mask` — bit `i` set ⇔ `q[i] ≠ 0` (the sparse support);
+/// * `sign` — bit `i` set ⇔ `q[i] = −1` (only meaningful under `mask`).
+///
+/// The non-zero count and the decode scale are cached at construction so
+/// the per-message bit accounting (`nnz` is consulted for every message)
+/// never rescans the payload. Invariant: `sign ⊆ mask`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTernary {
+    dim: usize,
+    nnz: usize,
+    scale: f32,
+    mask: Vec<u64>,
+    sign: Vec<u64>,
+}
+
+impl PackedTernary {
+    /// Coordinates per bitplane word.
+    pub const LANES: usize = 64;
+
+    /// Number of `u64` words needed per bitplane for a `dim`-vector.
+    #[inline]
+    pub fn words(dim: usize) -> usize {
+        (dim + 63) >> 6
+    }
+
+    /// The all-zero message (empty support).
+    pub fn zeros(dim: usize, scale: f32) -> Self {
+        let words = Self::words(dim);
+        Self { dim, nnz: 0, scale, mask: vec![0; words], sign: vec![0; words] }
+    }
+
+    /// Pack an explicit code vector (`q[i] ∈ {-1,0,+1}`).
+    pub fn from_codes(q: &[i8], scale: f32) -> Self {
+        let mut b = PackedBuilder::new(q.len());
+        for &c in q {
+            b.push(c);
+        }
+        b.finish(scale)
+    }
+
+    /// Dense sign message with the `sign(0) = +1` convention: every
+    /// coordinate is non-zero (`mask` all-ones), `sign` bit set where
+    /// `g[i] < 0`. One word of output per 64 input floats — the signSGD
+    /// and scaled-sign fast path.
+    pub fn dense_signs(g: &[f32], scale: f32) -> Self {
+        let dim = g.len();
+        let words = Self::words(dim);
+        let mut mask = vec![0u64; words];
+        let mut sign = vec![0u64; words];
+        for (w, chunk) in g.chunks(Self::LANES).enumerate() {
+            let mut m = 0u64;
+            let mut s = 0u64;
+            for (j, &x) in chunk.iter().enumerate() {
+                m |= 1u64 << j;
+                if x < 0.0 {
+                    s |= 1u64 << j;
+                }
+            }
+            mask[w] = m;
+            sign[w] = s;
+        }
+        Self { dim, nnz: dim, scale, mask, sign }
+    }
+
+    /// Dimension `d`.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Cached non-zero count.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Decode scale: the transmitted value at a non-zero coordinate is
+    /// `scale * q[i]`.
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// The support bitplane.
+    #[inline]
+    pub fn mask_words(&self) -> &[u64] {
+        &self.mask
+    }
+
+    /// The sign bitplane (`1` ⇒ negative).
+    #[inline]
+    pub fn sign_words(&self) -> &[u64] {
+        &self.sign
+    }
+
+    /// Ternary code at coordinate `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> i8 {
+        debug_assert!(i < self.dim);
+        let w = i >> 6;
+        let b = i & 63;
+        if (self.mask[w] >> b) & 1 == 0 {
+            0
+        } else if (self.sign[w] >> b) & 1 == 1 {
+            -1
+        } else {
+            1
+        }
+    }
+
+    /// Overwrite coordinate `i` with `code` (maintains `nnz`). Used by the
+    /// index-addressed compressors (STC); streaming emitters should prefer
+    /// [`PackedBuilder::push`].
+    pub fn set(&mut self, i: usize, code: i8) {
+        debug_assert!(i < self.dim);
+        debug_assert!((-1..=1).contains(&code));
+        let w = i >> 6;
+        let bit = 1u64 << (i & 63);
+        if self.mask[w] & bit != 0 {
+            self.nnz -= 1;
+        }
+        self.mask[w] &= !bit;
+        self.sign[w] &= !bit;
+        if code != 0 {
+            self.mask[w] |= bit;
+            if code < 0 {
+                self.sign[w] |= bit;
+            }
+            self.nnz += 1;
+        }
+    }
+
+    /// Unpack to an explicit code vector.
+    pub fn to_codes(&self) -> Vec<i8> {
+        let mut out = vec![0i8; self.dim];
+        self.for_each_nonzero(|i, s| out[i] = s);
+        out
+    }
+
+    /// Visit every non-zero coordinate as `(index, ±1)` in ascending index
+    /// order, skipping empty words (the sparse-message fast path).
+    #[inline]
+    pub fn for_each_nonzero(&self, mut f: impl FnMut(usize, i8)) {
+        for (w, (&m, &s)) in self.mask.iter().zip(&self.sign).enumerate() {
+            let mut bits = m;
+            let base = w << 6;
+            while bits != 0 {
+                let j = bits.trailing_zeros() as usize;
+                f(base + j, if (s >> j) & 1 == 1 { -1 } else { 1 });
+                bits &= bits - 1;
+            }
+        }
+    }
+
+    /// Accumulate the decoded message into `acc`: `acc[i] += scale·q[i]`.
+    pub fn add_into(&self, acc: &mut [f32]) {
+        debug_assert_eq!(acc.len(), self.dim);
+        let s = self.scale;
+        self.for_each_nonzero(|i, q| acc[i] += s * q as f32);
+    }
+}
+
+/// Streaming constructor for [`PackedTernary`]: compressors emit one code
+/// per coordinate in order and never materialize a `Vec<i8>`.
+pub struct PackedBuilder {
+    dim: usize,
+    len: usize,
+    nnz: usize,
+    mask: Vec<u64>,
+    sign: Vec<u64>,
+}
+
+impl PackedBuilder {
+    pub fn new(dim: usize) -> Self {
+        let words = PackedTernary::words(dim);
+        Self { dim, len: 0, nnz: 0, mask: vec![0; words], sign: vec![0; words] }
+    }
+
+    /// Append the next coordinate's code (`-1`, `0`, or `+1`).
+    #[inline]
+    pub fn push(&mut self, code: i8) {
+        debug_assert!(self.len < self.dim, "push past dim {}", self.dim);
+        debug_assert!((-1..=1).contains(&code));
+        if code != 0 {
+            let w = self.len >> 6;
+            let bit = 1u64 << (self.len & 63);
+            self.mask[w] |= bit;
+            if code < 0 {
+                self.sign[w] |= bit;
+            }
+            self.nnz += 1;
+        }
+        self.len += 1;
+    }
+
+    /// Non-zeros emitted so far.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn finish(self, scale: f32) -> PackedTernary {
+        assert_eq!(
+            self.len, self.dim,
+            "PackedBuilder finished after {} of {} coordinates",
+            self.len, self.dim
+        );
+        PackedTernary {
+            dim: self.dim,
+            nnz: self.nnz,
+            scale,
+            mask: self.mask,
+            sign: self.sign,
+        }
+    }
+}
+
 /// A compressed gradient message plus its exact uplink cost in bits.
 #[derive(Clone, Debug)]
 pub enum CompressedGrad {
-    /// Ternary codes `q[i] ∈ {-1,0,+1}`; decoded value is `scale * q[i]`.
-    /// `bits` is the Golomb-accounted message size.
-    Ternary { q: Vec<i8>, scale: f32, bits: f64 },
-    /// Dense float message (identity / multi-level QSGD decode).
-    Dense { v: Vec<f32>, bits: f64 },
+    /// Ternary codes in packed bitplanes; decoded value is
+    /// `pack.scale() * q[i]`. `bits` is the Golomb-accounted message size.
+    Ternary { pack: PackedTernary, bits: f64 },
+    /// Dense float message (identity / multi-level QSGD decode) with the
+    /// non-zero count cached at construction.
+    Dense { v: Vec<f32>, nnz: usize, bits: f64 },
 }
 
 impl CompressedGrad {
+    /// Ternary message from packed bitplanes.
+    pub fn ternary(pack: PackedTernary, bits: f64) -> Self {
+        CompressedGrad::Ternary { pack, bits }
+    }
+
+    /// Ternary message from an explicit code vector (tests / interop).
+    pub fn ternary_from_codes(q: &[i8], scale: f32, bits: f64) -> Self {
+        CompressedGrad::Ternary { pack: PackedTernary::from_codes(q, scale), bits }
+    }
+
+    /// Dense message; counts (and caches) the non-zeros once here.
+    pub fn dense(v: Vec<f32>, bits: f64) -> Self {
+        let nnz = v.iter().filter(|&&x| x != 0.0).count();
+        CompressedGrad::Dense { v, nnz, bits }
+    }
+
+    /// Dense message with the non-zero count already known to the caller.
+    pub fn dense_with_nnz(v: Vec<f32>, nnz: usize, bits: f64) -> Self {
+        debug_assert_eq!(nnz, v.iter().filter(|&&x| x != 0.0).count());
+        CompressedGrad::Dense { v, nnz, bits }
+    }
+
     /// Dimension of the underlying gradient.
     pub fn dim(&self) -> usize {
         match self {
-            CompressedGrad::Ternary { q, .. } => q.len(),
+            CompressedGrad::Ternary { pack, .. } => pack.dim(),
             CompressedGrad::Dense { v, .. } => v.len(),
         }
     }
@@ -54,24 +304,23 @@ impl CompressedGrad {
         }
     }
 
-    /// Number of non-zero coordinates.
+    /// Number of non-zero coordinates (cached at construction — consulted
+    /// per message by the bit-accounting ledger).
     pub fn nnz(&self) -> usize {
         match self {
-            CompressedGrad::Ternary { q, .. } => q.iter().filter(|&&x| x != 0).count(),
-            CompressedGrad::Dense { v, .. } => v.iter().filter(|&&x| x != 0.0).count(),
+            CompressedGrad::Ternary { pack, .. } => pack.nnz(),
+            CompressedGrad::Dense { nnz, .. } => *nnz,
         }
     }
 
     /// Accumulate the decoded message into `acc` (server-side aggregation
-    /// hot path; the ternary arm is branch-light on purpose — see §Perf).
+    /// fallback path; the packed ternary arm skips empty words — see
+    /// DESIGN.md §8).
     pub fn add_into(&self, acc: &mut [f32]) {
         match self {
-            CompressedGrad::Ternary { q, scale, .. } => {
-                debug_assert_eq!(acc.len(), q.len());
-                let s = *scale;
-                for (a, &qi) in acc.iter_mut().zip(q.iter()) {
-                    *a += s * qi as f32;
-                }
+            CompressedGrad::Ternary { pack, .. } => {
+                debug_assert_eq!(acc.len(), pack.dim());
+                pack.add_into(acc);
             }
             CompressedGrad::Dense { v, .. } => {
                 debug_assert_eq!(acc.len(), v.len());
@@ -218,7 +467,7 @@ pub struct IdentityCompressor;
 
 impl Compressor for IdentityCompressor {
     fn compress(&mut self, g: &[f32], _rng: &mut Pcg64) -> CompressedGrad {
-        CompressedGrad::Dense { v: g.to_vec(), bits: 32.0 * g.len() as f64 }
+        CompressedGrad::dense(g.to_vec(), 32.0 * g.len() as f64)
     }
 
     fn name(&self) -> String {
@@ -287,11 +536,74 @@ mod tests {
 
     #[test]
     fn add_into_accumulates() {
-        let msg = CompressedGrad::Ternary { q: vec![1, -1, 0, 1], scale: 2.0, bits: 0.0 };
+        let msg = CompressedGrad::ternary_from_codes(&[1, -1, 0, 1], 2.0, 0.0);
         let mut acc = vec![1.0; 4];
         msg.add_into(&mut acc);
         assert_eq!(acc, vec![3.0, -1.0, 1.0, 3.0]);
         assert_eq!(msg.nnz(), 3);
+    }
+
+    #[test]
+    fn packed_roundtrip_and_accessors() {
+        // 130 coords crosses two word boundaries (64, 128).
+        let mut codes = vec![0i8; 130];
+        codes[0] = 1;
+        codes[1] = -1;
+        codes[63] = -1;
+        codes[64] = 1;
+        codes[127] = 1;
+        codes[129] = -1;
+        let pack = PackedTernary::from_codes(&codes, 0.5);
+        assert_eq!(pack.dim(), 130);
+        assert_eq!(pack.nnz(), 6);
+        assert_eq!(pack.scale(), 0.5);
+        assert_eq!(pack.to_codes(), codes);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(pack.get(i), c, "coord {i}");
+        }
+        let mut collected = Vec::new();
+        pack.for_each_nonzero(|i, s| collected.push((i, s)));
+        assert_eq!(
+            collected,
+            vec![(0, 1), (1, -1), (63, -1), (64, 1), (127, 1), (129, -1)]
+        );
+        let mut acc = vec![0.0f32; 130];
+        pack.add_into(&mut acc);
+        for (i, &c) in codes.iter().enumerate() {
+            assert_eq!(acc[i], 0.5 * c as f32, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn packed_set_maintains_nnz() {
+        let mut pack = PackedTernary::zeros(70, 1.0);
+        pack.set(3, 1);
+        pack.set(65, -1);
+        assert_eq!(pack.nnz(), 2);
+        pack.set(3, -1); // overwrite keeps count
+        assert_eq!(pack.nnz(), 2);
+        assert_eq!(pack.get(3), -1);
+        pack.set(3, 0); // clear decrements
+        assert_eq!(pack.nnz(), 1);
+        assert_eq!(pack.get(3), 0);
+        assert_eq!(pack.get(65), -1);
+    }
+
+    #[test]
+    fn packed_dense_signs_matches_convention() {
+        let g = vec![0.5, -0.5, 0.0, -0.0, -3.0];
+        let pack = PackedTernary::dense_signs(&g, 1.0);
+        assert_eq!(pack.to_codes(), vec![1, -1, 1, 1, -1]);
+        assert_eq!(pack.nnz(), 5);
+    }
+
+    #[test]
+    fn packed_empty_dim() {
+        let pack = PackedTernary::zeros(0, 1.0);
+        assert_eq!(pack.dim(), 0);
+        assert_eq!(pack.to_codes(), Vec::<i8>::new());
+        let pack2 = PackedTernary::dense_signs(&[], 1.0);
+        assert_eq!(pack2.nnz(), 0);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! * `s = 1, ‖·‖ = ℓ∞` → "1-bit L∞ norm QSGD" (ternary, denser).
 //! * `s = 255`          → the 8-bit QSGD used inside FedCom.
 
-use super::{CompressedGrad, Compressor};
+use super::{CompressedGrad, Compressor, PackedBuilder, PackedTernary};
 use crate::coding::cost::CostModel;
 use crate::util::rng::{bernoulli_threshold, Pcg64, U32Stream};
 use crate::util::{l2_norm, linf_norm};
@@ -46,26 +46,31 @@ impl Compressor for QsgdCompressor {
         if nrm == 0.0 || g.is_empty() {
             // Zero gradient: transmit the (zero) norm only.
             return if s == 1 {
-                CompressedGrad::Ternary { q: vec![0; g.len()], scale: 0.0, bits: 32.0 }
+                CompressedGrad::ternary(PackedTernary::zeros(g.len(), 0.0), 32.0)
             } else {
-                CompressedGrad::Dense { v: vec![0.0; g.len()], bits: 32.0 }
+                CompressedGrad::dense_with_nnz(vec![0.0; g.len()], 0, 32.0)
             };
         }
         let sf = s as f32;
         if s == 1 {
             // Ternary fast path: keep-probability |g_i|/‖g‖ (level 1 vs 0).
-            let mut q = vec![0i8; g.len()];
-            let mut nnz = 0usize;
+            let mut pk = PackedBuilder::new(g.len());
             let mut u = U32Stream::new(rng);
-            for (qi, &gi) in q.iter_mut().zip(g.iter()) {
+            for &gi in g.iter() {
                 let thr = bernoulli_threshold(gi.abs() / nrm);
-                if u.bernoulli(thr) {
-                    *qi = if gi > 0.0 { 1 } else { -1 };
-                    nnz += 1;
-                }
+                pk.push(if u.bernoulli(thr) {
+                    if gi > 0.0 {
+                        1
+                    } else {
+                        -1
+                    }
+                } else {
+                    0
+                });
             }
-            let bits = CostModel::Qsgd { levels: 1 }.bits(g.len(), nnz);
-            return CompressedGrad::Ternary { q, scale: nrm, bits };
+            let pack = pk.finish(nrm);
+            let bits = CostModel::Qsgd { levels: 1 }.bits(g.len(), pack.nnz());
+            return CompressedGrad::ternary(pack, bits);
         }
         // General s-level path: value = ‖g‖·sign·(l or l+1)/s.
         let mut v = vec![0.0f32; g.len()];
@@ -81,7 +86,7 @@ impl Compressor for QsgdCompressor {
             }
         }
         let bits = CostModel::Qsgd { levels: s }.bits(g.len(), nnz);
-        CompressedGrad::Dense { v, bits }
+        CompressedGrad::dense_with_nnz(v, nnz, bits)
     }
 
     fn name(&self) -> String {

@@ -1,20 +1,21 @@
 //! Sign-based baselines: signSGD, scaled signSGD, noisy signSGD.
 
-use super::{CompressedGrad, Compressor};
+use super::{CompressedGrad, Compressor, PackedBuilder, PackedTernary};
 use crate::coding::cost::CostModel;
 use crate::util::l1_norm;
 use crate::util::rng::Pcg64;
 
 /// signSGD (Bernstein et al. 2018): transmit `sign(g)` — one bit per
 /// coordinate. Uses the `sign(0)=+1` convention so the message is always
-/// exactly `d` bits (a dense bitmap, no positions needed).
+/// exactly `d` bits (a dense bitmap, no positions needed). The packed
+/// representation IS that bitmap: one output word per 64 gradients.
 #[derive(Clone, Copy, Debug)]
 pub struct SignCompressor;
 
 impl Compressor for SignCompressor {
     fn compress(&mut self, g: &[f32], _rng: &mut Pcg64) -> CompressedGrad {
-        let q: Vec<i8> = g.iter().map(|&x| if x < 0.0 { -1 } else { 1 }).collect();
-        CompressedGrad::Ternary { q, scale: 1.0, bits: g.len() as f64 }
+        let pack = PackedTernary::dense_signs(g, 1.0);
+        CompressedGrad::ternary(pack, g.len() as f64)
     }
 
     fn name(&self) -> String {
@@ -37,8 +38,8 @@ pub struct ScaledSignCompressor;
 pub fn scaled_sign_message(g: &[f32]) -> CompressedGrad {
     let d = g.len().max(1);
     let scale = l1_norm(g) / d as f32;
-    let q: Vec<i8> = g.iter().map(|&x| if x < 0.0 { -1 } else { 1 }).collect();
-    CompressedGrad::Ternary { q, scale, bits: g.len() as f64 + 32.0 }
+    let pack = PackedTernary::dense_signs(g, scale);
+    CompressedGrad::ternary(pack, g.len() as f64 + 32.0)
 }
 
 impl Compressor for ScaledSignCompressor {
@@ -68,25 +69,19 @@ impl Compressor for NoisySignCompressor {
     fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
         let std = self.noise_std;
         // §Perf: Box–Muller yields two variates per ln/sqrt; consume both.
-        let mut q = vec![1i8; g.len()];
+        let mut pk = PackedBuilder::new(g.len());
         let pairs = g.len() / 2;
         for idx in 0..pairs {
             let (n0, n1) = rng.normal_pair();
             let i = 2 * idx;
-            if g[i] + std * (n0 as f32) < 0.0 {
-                q[i] = -1;
-            }
-            if g[i + 1] + std * (n1 as f32) < 0.0 {
-                q[i + 1] = -1;
-            }
+            pk.push(if g[i] + std * (n0 as f32) < 0.0 { -1 } else { 1 });
+            pk.push(if g[i + 1] + std * (n1 as f32) < 0.0 { -1 } else { 1 });
         }
         if g.len() % 2 == 1 {
             let i = g.len() - 1;
-            if g[i] + rng.normal_f32(0.0, std) < 0.0 {
-                q[i] = -1;
-            }
+            pk.push(if g[i] + rng.normal_f32(0.0, std) < 0.0 { -1 } else { 1 });
         }
-        CompressedGrad::Ternary { q, scale: 1.0, bits: g.len() as f64 }
+        CompressedGrad::ternary(pk.finish(1.0), g.len() as f64)
     }
 
     fn name(&self) -> String {
@@ -109,9 +104,9 @@ mod tests {
         let mut rng = Pcg64::seed_from(1);
         let msg = c.compress(&g, &mut rng);
         match &msg {
-            CompressedGrad::Ternary { q, scale, bits } => {
-                assert_eq!(q, &vec![1, -1, 1, 1]);
-                assert_eq!(*scale, 1.0);
+            CompressedGrad::Ternary { pack, bits } => {
+                assert_eq!(pack.to_codes(), vec![1, -1, 1, 1]);
+                assert_eq!(pack.scale(), 1.0);
                 assert_eq!(*bits, 4.0);
             }
             _ => panic!("wrong payload"),
@@ -124,10 +119,10 @@ mod tests {
         let mut c = ScaledSignCompressor;
         let mut rng = Pcg64::seed_from(2);
         match c.compress(&g, &mut rng) {
-            CompressedGrad::Ternary { scale, bits, q } => {
-                assert_eq!(scale, 2.0);
+            CompressedGrad::Ternary { pack, bits } => {
+                assert_eq!(pack.scale(), 2.0);
                 assert_eq!(bits, 36.0);
-                assert_eq!(q, vec![1, -1, 1, 1]);
+                assert_eq!(pack.to_codes(), vec![1, -1, 1, 1]);
             }
             _ => panic!(),
         }
@@ -156,7 +151,9 @@ mod tests {
         let mut rng = Pcg64::seed_from(4);
         let msg = c.compress(&g, &mut rng);
         let neg = match &msg {
-            CompressedGrad::Ternary { q, .. } => q.iter().filter(|&&x| x == -1).count(),
+            CompressedGrad::Ternary { pack, .. } => {
+                pack.to_codes().iter().filter(|&&x| x == -1).count()
+            }
             _ => panic!(),
         };
         // sign flips with prob Φ(-0.01) ≈ 0.496.

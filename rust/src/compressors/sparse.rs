@@ -2,7 +2,7 @@
 //! baselines: Top-k, Random-k, Threshold-v (full-precision values) and STC
 //! (Sattler et al. 2019a: Top-k + mean-magnitude binarization).
 
-use super::{ternary_bits, CompressedGrad, Compressor};
+use super::{ternary_bits, CompressedGrad, Compressor, PackedTernary};
 use crate::coding::cost::CostModel;
 use crate::util::rng::Pcg64;
 
@@ -41,7 +41,7 @@ impl Compressor for TopKCompressor {
             }
         }
         let bits = CostModel::SparseFloat.bits(g.len(), nnz);
-        CompressedGrad::Dense { v, bits }
+        CompressedGrad::dense_with_nnz(v, nnz, bits)
     }
 
     fn name(&self) -> String {
@@ -74,7 +74,7 @@ impl Compressor for RandKCompressor {
             }
         }
         let bits = CostModel::SparseFloat.bits(g.len(), nnz);
-        CompressedGrad::Dense { v, bits }
+        CompressedGrad::dense_with_nnz(v, nnz, bits)
     }
 
     fn name(&self) -> String {
@@ -104,7 +104,7 @@ impl Compressor for ThresholdVCompressor {
             }
         }
         let bits = CostModel::SparseFloat.bits(g.len(), nnz);
-        CompressedGrad::Dense { v, bits }
+        CompressedGrad::dense_with_nnz(v, nnz, bits)
     }
 
     fn name(&self) -> String {
@@ -129,19 +129,17 @@ impl Compressor for StcCompressor {
         let idx = topk_indices(g, self.k);
         let kept: Vec<f32> = idx.iter().map(|&i| g[i]).filter(|x| *x != 0.0).collect();
         if kept.is_empty() {
-            return CompressedGrad::Ternary { q: vec![0; g.len()], scale: 0.0, bits: 32.0 };
+            return CompressedGrad::ternary(PackedTernary::zeros(g.len(), 0.0), 32.0);
         }
         let mu = kept.iter().map(|x| x.abs()).sum::<f32>() / kept.len() as f32;
-        let mut q = vec![0i8; g.len()];
-        let mut nnz = 0;
+        let mut pack = PackedTernary::zeros(g.len(), mu);
         for &i in &idx {
             if g[i] != 0.0 {
-                q[i] = if g[i] > 0.0 { 1 } else { -1 };
-                nnz += 1;
+                pack.set(i, if g[i] > 0.0 { 1 } else { -1 });
             }
         }
-        let bits = ternary_bits(g.len(), nnz, true);
-        CompressedGrad::Ternary { q, scale: mu, bits }
+        let bits = ternary_bits(g.len(), pack.nnz(), true);
+        CompressedGrad::ternary(pack, bits)
     }
 
     fn name(&self) -> String {
@@ -217,9 +215,9 @@ mod tests {
         let mut c = StcCompressor { k: 2 };
         let mut rng = Pcg64::seed_from(6);
         match c.compress(&g, &mut rng) {
-            CompressedGrad::Ternary { q, scale, .. } => {
-                assert_eq!(q, vec![1, -1, 0, 0]);
-                assert_eq!(scale, 3.0); // (4+2)/2
+            CompressedGrad::Ternary { pack, .. } => {
+                assert_eq!(pack.to_codes(), vec![1, -1, 0, 0]);
+                assert_eq!(pack.scale(), 3.0); // (4+2)/2
             }
             _ => panic!(),
         }

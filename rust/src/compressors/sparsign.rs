@@ -15,7 +15,7 @@
 //! Per Remark 7, probabilities `|g_i|·B` that exceed 1 are clamped —
 //! equivalent to gradient clipping at `1/B`.
 
-use super::{ternary_bits, CompressedGrad, Compressor};
+use super::{ternary_bits, CompressedGrad, Compressor, PackedBuilder, PackedTernary};
 use crate::coding::cost::CostModel;
 use crate::util::rng::{bernoulli_threshold, Pcg64, U32Stream};
 
@@ -48,13 +48,13 @@ impl Compressor for SparsignCompressor {
             "sparsign budget must be finite and non-negative, got {}",
             self.budget
         );
-        let mut q = vec![0i8; g.len()];
+        let mut pk = PackedBuilder::new(g.len());
         let b = self.budget;
-        let mut nnz = 0usize;
         // §Perf fast path: one raw u64 feeds two branch-free f32-domain
         // Bernoulli comparisons (`u < p·2³²`); p ≥ 1 always fires because
         // every u32 < 2³², so the Remark 7 clipping behaviour falls out of
-        // the comparison. See EXPERIMENTS.md §Perf.
+        // the comparison. Codes go straight into the packed bitplanes —
+        // no `Vec<i8>` is ever materialized. See EXPERIMENTS.md §Perf.
         let pairs = g.len() / 2;
         for idx in 0..pairs {
             let r = rng.next_u64();
@@ -63,26 +63,41 @@ impl Compressor for SparsignCompressor {
             let g1 = g[i + 1];
             let keep0 = ((r as u32) as f32) < bernoulli_threshold(b * g0.abs());
             let keep1 = (((r >> 32) as u32) as f32) < bernoulli_threshold(b * g1.abs());
-            if keep0 {
-                q[i] = if g0 > 0.0 { 1 } else { -1 };
-                nnz += 1;
-            }
-            if keep1 {
-                q[i + 1] = if g1 > 0.0 { 1 } else { -1 };
-                nnz += 1;
-            }
+            pk.push(if keep0 {
+                if g0 > 0.0 {
+                    1
+                } else {
+                    -1
+                }
+            } else {
+                0
+            });
+            pk.push(if keep1 {
+                if g1 > 0.0 {
+                    1
+                } else {
+                    -1
+                }
+            } else {
+                0
+            });
         }
         if g.len() % 2 == 1 {
-            let i = g.len() - 1;
-            let gi = g[i];
+            let gi = g[g.len() - 1];
             let mut u = U32Stream::new(rng);
-            if u.bernoulli(bernoulli_threshold(b * gi.abs())) {
-                q[i] = if gi > 0.0 { 1 } else { -1 };
-                nnz += 1;
-            }
+            pk.push(if u.bernoulli(bernoulli_threshold(b * gi.abs())) {
+                if gi > 0.0 {
+                    1
+                } else {
+                    -1
+                }
+            } else {
+                0
+            });
         }
-        let bits = ternary_bits(g.len(), nnz, false);
-        CompressedGrad::Ternary { q, scale: 1.0, bits }
+        let pack = pk.finish(1.0);
+        let bits = ternary_bits(g.len(), pack.nnz(), false);
+        CompressedGrad::ternary(pack, bits)
     }
 
     fn name(&self) -> String {
@@ -114,7 +129,7 @@ impl Compressor for SparsignAutoCompressor {
         );
         let l1: f32 = g.iter().map(|x| x.abs()).sum();
         if l1 == 0.0 {
-            return CompressedGrad::Ternary { q: vec![0; g.len()], scale: 1.0, bits: 0.0 };
+            return CompressedGrad::ternary(PackedTernary::zeros(g.len(), 1.0), 0.0);
         }
         let budget = self.target_density * g.len() as f32 / l1;
         SparsignCompressor { budget }.compress(g, rng)
@@ -176,7 +191,7 @@ mod tests {
         let mut c = SparsignCompressor { budget: b };
         let mut rng = Pcg64::seed_from(seed);
         match c.compress(g, &mut rng) {
-            CompressedGrad::Ternary { q, .. } => q,
+            CompressedGrad::Ternary { pack, .. } => pack.to_codes(),
             _ => unreachable!(),
         }
     }
@@ -238,12 +253,8 @@ mod tests {
         let mut c = SparsignCompressor { budget: b };
         let mut rng = Pcg64::seed_from(4);
         for _ in 0..trials {
-            if let CompressedGrad::Ternary { q, .. } = c.compress(&g, &mut rng) {
-                for (k, &qi) in keeps.iter_mut().zip(&q) {
-                    if qi != 0 {
-                        *k += 1;
-                    }
-                }
+            if let CompressedGrad::Ternary { pack, .. } = c.compress(&g, &mut rng) {
+                pack.for_each_nonzero(|i, _| keeps[i] += 1);
             }
         }
         for (i, &k) in keeps.iter().enumerate() {
@@ -266,10 +277,8 @@ mod tests {
         let mut c = SparsignCompressor { budget: b };
         let mut rng = Pcg64::seed_from(5);
         for _ in 0..trials {
-            if let CompressedGrad::Ternary { q, .. } = c.compress(&g, &mut rng) {
-                for (s, &qi) in sums.iter_mut().zip(&q) {
-                    *s += qi as f64;
-                }
+            if let CompressedGrad::Ternary { pack, .. } = c.compress(&g, &mut rng) {
+                pack.for_each_nonzero(|i, q| sums[i] += q as f64);
             }
         }
         for (i, &s) in sums.iter().enumerate() {

@@ -10,7 +10,7 @@
 //!   exactly the property the paper argues breaks under worker sampling,
 //!   so the engine guards it the same way as worker-EF.
 
-use super::{CompressedGrad, Compressor};
+use super::{CompressedGrad, Compressor, PackedBuilder, PackedTernary};
 use crate::coding::cost::CostModel;
 use crate::util::linf_norm;
 use crate::util::rng::Pcg64;
@@ -28,18 +28,12 @@ impl Compressor for StoSignCompressor {
     fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
         assert!(self.b > 0.0, "sto-sign scale must be positive");
         let inv = 1.0 / (2.0 * self.b);
-        let q: Vec<i8> = g
-            .iter()
-            .map(|&gi| {
-                let p_plus = ((self.b + gi) * inv).clamp(0.0, 1.0);
-                if rng.f32() < p_plus {
-                    1
-                } else {
-                    -1
-                }
-            })
-            .collect();
-        CompressedGrad::Ternary { q, scale: 1.0, bits: g.len() as f64 }
+        let mut pk = PackedBuilder::new(g.len());
+        for &gi in g.iter() {
+            let p_plus = ((self.b + gi) * inv).clamp(0.0, 1.0);
+            pk.push(if rng.f32() < p_plus { 1 } else { -1 });
+        }
+        CompressedGrad::ternary(pk.finish(1.0), g.len() as f64)
     }
 
     fn name(&self) -> String {
@@ -85,26 +79,18 @@ impl Compressor for SsdmCompressor {
         }
         let norm = linf_norm(&self.momentum);
         if norm == 0.0 {
-            return CompressedGrad::Ternary {
-                q: vec![0; g.len()],
-                scale: 1.0,
-                bits: g.len() as f64,
-            };
+            return CompressedGrad::ternary(
+                PackedTernary::zeros(g.len(), 1.0),
+                g.len() as f64,
+            );
         }
         let inv = 1.0 / (2.0 * norm);
-        let q: Vec<i8> = self
-            .momentum
-            .iter()
-            .map(|&vi| {
-                let p_plus = ((norm + vi) * inv).clamp(0.0, 1.0);
-                if rng.f32() < p_plus {
-                    1
-                } else {
-                    -1
-                }
-            })
-            .collect();
-        CompressedGrad::Ternary { q, scale: 1.0, bits: g.len() as f64 }
+        let mut pk = PackedBuilder::new(g.len());
+        for &vi in self.momentum.iter() {
+            let p_plus = ((norm + vi) * inv).clamp(0.0, 1.0);
+            pk.push(if rng.f32() < p_plus { 1 } else { -1 });
+        }
+        CompressedGrad::ternary(pk.finish(1.0), g.len() as f64)
     }
 
     fn name(&self) -> String {

@@ -10,7 +10,7 @@
 //! `s_t = ‖g_m‖∞`; the cross-worker-max "magnitude sharing protocol"
 //! variant only changes the scalar and is covered by the aggregation tests.
 
-use super::{ternary_bits, CompressedGrad, Compressor};
+use super::{ternary_bits, CompressedGrad, Compressor, PackedBuilder, PackedTernary};
 use crate::coding::cost::CostModel;
 use crate::util::linf_norm;
 use crate::util::rng::{bernoulli_threshold, Pcg64, U32Stream};
@@ -23,21 +23,26 @@ impl Compressor for TernGradCompressor {
     fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
         let st = linf_norm(g);
         if st == 0.0 || g.is_empty() {
-            return CompressedGrad::Ternary { q: vec![0; g.len()], scale: 0.0, bits: 32.0 };
+            return CompressedGrad::ternary(PackedTernary::zeros(g.len(), 0.0), 32.0);
         }
         let inv = 1.0 / st;
-        let mut q = vec![0i8; g.len()];
-        let mut nnz = 0usize;
+        let mut pk = PackedBuilder::new(g.len());
         let mut u = U32Stream::new(rng);
-        for (qi, &gi) in q.iter_mut().zip(g.iter()) {
+        for &gi in g.iter() {
             let thr = bernoulli_threshold(gi.abs() * inv); // p ≤ 1 by construction
-            if u.bernoulli(thr) {
-                *qi = if gi > 0.0 { 1 } else { -1 };
-                nnz += 1;
-            }
+            pk.push(if u.bernoulli(thr) {
+                if gi > 0.0 {
+                    1
+                } else {
+                    -1
+                }
+            } else {
+                0
+            });
         }
-        let bits = ternary_bits(g.len(), nnz, true);
-        CompressedGrad::Ternary { q, scale: st, bits }
+        let pack = pk.finish(st);
+        let bits = ternary_bits(g.len(), pack.nnz(), true);
+        CompressedGrad::ternary(pack, bits)
     }
 
     fn name(&self) -> String {

@@ -1,6 +1,15 @@
 //! Server-side aggregation rules `C(·)` from Algorithm 1 / Algorithm 2.
+//!
+//! Hot path (DESIGN.md §8): when every worker message is packed ternary
+//! with one shared positive scale — signSGD, noisy/sto-sign, SSDM and
+//! sparsign all transmit `scale = 1` — the per-coordinate votes are
+//! counted **word-parallel** over the `u64` bitplanes with carry-save
+//! vertical counters, and the only per-coordinate f32 work left is the
+//! single final pass that materializes the broadcast update. Messages with
+//! heterogeneous scales (TernGrad, QSGD, STC) or dense payloads fall back
+//! to the reference f32 accumulation.
 
-use crate::compressors::CompressedGrad;
+use crate::compressors::{CompressedGrad, PackedTernary};
 use crate::util::l1_norm;
 
 /// The aggregation rule applied to the averaged worker messages before
@@ -31,6 +40,105 @@ pub struct Aggregate {
     pub downlink_bits: f64,
 }
 
+/// Word-parallel per-coordinate vote counting over packed ternary
+/// messages: `counts[i] = Σ_m q_m[i]` with `q ∈ {-1,0,+1}`.
+///
+/// Positive and negative votes are accumulated into *vertical* (bit-sliced)
+/// counters: plane `b` of the counter holds bit `b` of all 64 lane counts
+/// of one word, so adding a message's 64-coordinate word is a ripple-carry
+/// over at most `⌈log₂(M+1)⌉` planes — and the carry chain terminates after
+/// ~2 planes on average, independent of message density. Empty support
+/// words are skipped entirely, so sparse sparsign messages cost ~nothing.
+///
+/// Requires `msgs.len() ≤ i16::MAX`; the per-lane counts are exact.
+pub fn vote_counts(packs: &[&PackedTernary], dim: usize) -> Vec<i16> {
+    assert!(
+        packs.len() <= i16::MAX as usize,
+        "vote_counts supports at most {} messages, got {}",
+        i16::MAX,
+        packs.len()
+    );
+    let words = PackedTernary::words(dim);
+    // Planes needed to hold counts up to M = packs.len().
+    let planes = (usize::BITS - packs.len().leading_zeros()).max(1) as usize;
+    let mut pos = vec![0u64; words * planes];
+    let mut neg = vec![0u64; words * planes];
+    for pack in packs {
+        debug_assert_eq!(pack.dim(), dim);
+        let mask = pack.mask_words();
+        let sign = pack.sign_words();
+        for w in 0..words {
+            let m = mask[w];
+            if m == 0 {
+                continue;
+            }
+            let s = sign[w];
+            vc_add(&mut pos[w * planes..(w + 1) * planes], m & !s);
+            vc_add(&mut neg[w * planes..(w + 1) * planes], m & s);
+        }
+    }
+    // Horizontal extraction: rebuild each lane's count from its bit-slices.
+    let mut counts = vec![0i16; dim];
+    for w in 0..words {
+        let pw = &pos[w * planes..(w + 1) * planes];
+        let nw = &neg[w * planes..(w + 1) * planes];
+        if pw.iter().chain(nw.iter()).all(|&x| x == 0) {
+            continue;
+        }
+        let base = w << 6;
+        let lanes = (dim - base).min(PackedTernary::LANES);
+        for j in 0..lanes {
+            let mut cp = 0i16;
+            let mut cn = 0i16;
+            for (b, (&pb, &nb)) in pw.iter().zip(nw.iter()).enumerate() {
+                cp |= (((pb >> j) & 1) as i16) << b;
+                cn |= (((nb >> j) & 1) as i16) << b;
+            }
+            counts[base + j] = cp - cn;
+        }
+    }
+    counts
+}
+
+/// Ripple-carry add of a 64-lane bit vector into a vertical counter.
+#[inline]
+fn vc_add(planes: &mut [u64], mut addend: u64) {
+    for p in planes.iter_mut() {
+        if addend == 0 {
+            return;
+        }
+        let carry = *p & addend;
+        *p ^= addend;
+        addend = carry;
+    }
+    debug_assert_eq!(addend, 0, "vertical counter overflow");
+}
+
+/// When every message is packed ternary with the same positive scale,
+/// return the packs and that scale — the vote-count fast-path predicate.
+fn uniform_packed_ternary(msgs: &[CompressedGrad]) -> Option<(Vec<&PackedTernary>, f32)> {
+    let mut packs = Vec::with_capacity(msgs.len());
+    let mut scale: Option<f32> = None;
+    for m in msgs {
+        match m {
+            CompressedGrad::Ternary { pack, .. } => {
+                let s = pack.scale();
+                if !(s > 0.0) || !s.is_finite() {
+                    return None;
+                }
+                match scale {
+                    None => scale = Some(s),
+                    Some(prev) if prev == s => {}
+                    _ => return None,
+                }
+                packs.push(pack);
+            }
+            CompressedGrad::Dense { .. } => return None,
+        }
+    }
+    scale.map(|s| (packs, s))
+}
+
 impl AggregationRule {
     /// Average the worker messages and apply the rule.
     ///
@@ -44,13 +152,24 @@ impl AggregationRule {
             msgs.iter().all(|m| m.dim() == d),
             "mismatched message dimensions"
         );
-        let mut avg = vec![0.0f32; d];
-        for m in msgs {
-            m.add_into(&mut avg);
-        }
         let inv = 1.0 / msgs.len() as f32;
-        for v in avg.iter_mut() {
-            *v *= inv;
+        let mut avg: Vec<f32>;
+        if let Some((packs, scale)) =
+            uniform_packed_ternary(msgs).filter(|_| msgs.len() <= i16::MAX as usize)
+        {
+            // Word-parallel path: integer votes, one f32 pass at the end.
+            let counts = vote_counts(&packs, d);
+            let k = scale * inv;
+            avg = counts.iter().map(|&c| k * c as f32).collect();
+        } else {
+            // Reference path: dense f32 accumulation per message.
+            avg = vec![0.0f32; d];
+            for m in msgs {
+                m.add_into(&mut avg);
+            }
+            for v in avg.iter_mut() {
+                *v *= inv;
+            }
         }
         if let Some(e) = pre_add {
             assert_eq!(e.len(), d, "error-feedback dim mismatch");
@@ -83,9 +202,10 @@ impl AggregationRule {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg64;
 
     fn tern(q: Vec<i8>, scale: f32) -> CompressedGrad {
-        CompressedGrad::Ternary { q, scale, bits: 0.0 }
+        CompressedGrad::ternary_from_codes(&q, scale, 0.0)
     }
 
     #[test]
@@ -119,8 +239,8 @@ mod tests {
     #[test]
     fn mean_is_exact_average() {
         let msgs = vec![
-            CompressedGrad::Dense { v: vec![1.0, 3.0], bits: 0.0 },
-            CompressedGrad::Dense { v: vec![3.0, 5.0], bits: 0.0 },
+            CompressedGrad::dense(vec![1.0, 3.0], 0.0),
+            CompressedGrad::dense(vec![3.0, 5.0], 0.0),
         ];
         let agg = AggregationRule::Mean.aggregate(&msgs, None);
         assert_eq!(agg.update, vec![2.0, 4.0]);
@@ -136,6 +256,63 @@ mod tests {
         assert_eq!(agg.update, vec![-1.0, 1.0]);
         // `raw` carries the pre-compression average for the EF recursion.
         assert_eq!(agg.raw, vec![-1.0, 0.5]);
+    }
+
+    #[test]
+    fn vote_counts_matches_naive_sum() {
+        let mut rng = Pcg64::seed_from(11);
+        for _ in 0..50 {
+            let d = 1 + rng.index(300);
+            let m = 1 + rng.index(40);
+            let codes: Vec<Vec<i8>> = (0..m)
+                .map(|_| (0..d).map(|_| [-1i8, 0, 1][rng.index(3)]).collect())
+                .collect();
+            let packs: Vec<PackedTernary> =
+                codes.iter().map(|q| PackedTernary::from_codes(q, 1.0)).collect();
+            let refs: Vec<&PackedTernary> = packs.iter().collect();
+            let counts = vote_counts(&refs, d);
+            for i in 0..d {
+                let want: i32 = codes.iter().map(|q| q[i] as i32).sum();
+                assert_eq!(counts[i] as i32, want, "coord {i} (d={d}, m={m})");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_fast_path_matches_dense_fallback() {
+        // Same ternary payloads, once with uniform scale (fast path) and
+        // once via the f32 reference accumulation — identical votes.
+        let mut rng = Pcg64::seed_from(12);
+        for _ in 0..20 {
+            let d = 1 + rng.index(200);
+            let m = 2 + rng.index(15);
+            let msgs: Vec<CompressedGrad> = (0..m)
+                .map(|_| {
+                    let q: Vec<i8> = (0..d).map(|_| [-1i8, 0, 1][rng.index(3)]).collect();
+                    tern(q, 1.0)
+                })
+                .collect();
+            // Reference: decode every message and average in f32.
+            let mut avg = vec![0.0f32; d];
+            for msg in &msgs {
+                msg.add_into(&mut avg);
+            }
+            for v in avg.iter_mut() {
+                *v /= m as f32;
+            }
+            let agg = AggregationRule::MajorityVote.aggregate(&msgs, None);
+            for i in 0..d {
+                assert_eq!(agg.update[i], crate::util::sign0(avg[i]), "coord {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_scales_fall_back_to_reference_average() {
+        // TernGrad-style per-worker scales must average exactly.
+        let msgs = vec![tern(vec![1, -1], 2.0), tern(vec![1, 1], 4.0)];
+        let agg = AggregationRule::Mean.aggregate(&msgs, None);
+        assert_eq!(agg.update, vec![3.0, 1.0]);
     }
 
     #[test]

@@ -18,6 +18,15 @@ pub trait GradientSource: Send + Sync {
 
     /// Number of workers.
     fn workers(&self) -> usize;
+
+    /// True when `sample_grad` must never be called from more than one
+    /// thread at a time (e.g. the PJRT-backed models, whose compile cache
+    /// is `Rc`/`RefCell` by contract). The round engine clamps its worker
+    /// fan-out to one thread when this is set — callers cannot opt out by
+    /// forgetting a `threads` override.
+    fn serial_only(&self) -> bool {
+        false
+    }
 }
 
 /// Classification environment: a shared [`Model`], a Dirichlet-partitioned
@@ -85,6 +94,10 @@ impl GradientSource for ClassifierEnv {
 
     fn workers(&self) -> usize {
         self.fed.workers()
+    }
+
+    fn serial_only(&self) -> bool {
+        self.model.serial_only()
     }
 }
 

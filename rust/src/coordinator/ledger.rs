@@ -2,6 +2,8 @@
 //! network is recorded here, per round and per direction. The paper's
 //! "communication overhead" columns are uplink (worker → server) totals.
 
+use crate::compressors::CompressedGrad;
+
 /// Per-round communication record.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RoundComm {
@@ -12,6 +14,22 @@ pub struct RoundComm {
     pub downlink_bits: f64,
     /// Number of workers that transmitted.
     pub senders: usize,
+    /// Total non-zero coordinates across the round's uplink messages
+    /// (reads the count cached at message construction — no payload
+    /// rescan).
+    pub uplink_nnz: usize,
+}
+
+impl RoundComm {
+    /// Build a round record from the uplink message set.
+    pub fn from_msgs(msgs: &[CompressedGrad], downlink_bits: f64) -> Self {
+        RoundComm {
+            uplink_bits: msgs.iter().map(|m| m.bits()).sum(),
+            downlink_bits,
+            senders: msgs.len(),
+            uplink_nnz: msgs.iter().map(|m| m.nnz()).sum(),
+        }
+    }
 }
 
 /// Cumulative communication ledger.
@@ -63,6 +81,11 @@ impl CommLedger {
             self.total_uplink() / self.rounds.len() as f64
         }
     }
+
+    /// Total non-zero coordinates transmitted uplink so far.
+    pub fn total_uplink_nnz(&self) -> usize {
+        self.rounds.iter().map(|r| r.uplink_nnz).sum()
+    }
 }
 
 #[cfg(test)]
@@ -72,14 +95,25 @@ mod tests {
     #[test]
     fn totals_accumulate() {
         let mut l = CommLedger::new();
-        l.record(RoundComm { uplink_bits: 100.0, downlink_bits: 10.0, senders: 5 });
-        l.record(RoundComm { uplink_bits: 50.0, downlink_bits: 10.0, senders: 5 });
+        l.record(RoundComm {
+            uplink_bits: 100.0,
+            downlink_bits: 10.0,
+            senders: 5,
+            uplink_nnz: 40,
+        });
+        l.record(RoundComm {
+            uplink_bits: 50.0,
+            downlink_bits: 10.0,
+            senders: 5,
+            uplink_nnz: 20,
+        });
         assert_eq!(l.rounds(), 2);
         assert_eq!(l.total_uplink(), 150.0);
         assert_eq!(l.total_downlink(), 20.0);
         assert_eq!(l.uplink_through(0), 100.0);
         assert_eq!(l.uplink_through(1), 150.0);
         assert_eq!(l.mean_uplink_per_round(), 75.0);
+        assert_eq!(l.total_uplink_nnz(), 60);
     }
 
     #[test]
@@ -88,5 +122,19 @@ mod tests {
         assert_eq!(l.total_uplink(), 0.0);
         assert_eq!(l.mean_uplink_per_round(), 0.0);
         assert!(l.get(0).is_none());
+        assert_eq!(l.total_uplink_nnz(), 0);
+    }
+
+    #[test]
+    fn from_msgs_uses_cached_counts() {
+        let msgs = vec![
+            CompressedGrad::ternary_from_codes(&[1, 0, -1, 0], 1.0, 12.0),
+            CompressedGrad::dense(vec![0.0, 2.0, 0.0, 3.0], 64.0),
+        ];
+        let rc = RoundComm::from_msgs(&msgs, 4.0);
+        assert_eq!(rc.uplink_bits, 76.0);
+        assert_eq!(rc.downlink_bits, 4.0);
+        assert_eq!(rc.senders, 2);
+        assert_eq!(rc.uplink_nnz, 4);
     }
 }

@@ -15,7 +15,13 @@
 //!
 //! The engine is fully deterministic given the run seed: worker `m` at
 //! round `t` draws from a stream derived as `root.derive(t‖m)`, so runs
-//! replay bit-exactly regardless of execution order.
+//! replay bit-exactly **regardless of execution order** — which is what
+//! makes the round engine's worker fan-out safe. Each round the selected
+//! workers are sharded across `TrainingRun::threads` scoped threads
+//! (default: `available_parallelism`); per-worker results land in
+//! index-addressed slots and are reduced on the coordinator thread in
+//! selection order, so `RunHistory` is bit-identical to a serial
+//! (`threads = Some(1)`) run.
 
 pub mod aggregation;
 pub mod attacks;
@@ -23,17 +29,19 @@ pub mod env;
 pub mod ledger;
 pub mod sampling;
 
-pub use aggregation::{Aggregate, AggregationRule};
+pub use aggregation::{vote_counts, Aggregate, AggregationRule};
 pub use attacks::{Attack, AttackPlan};
 pub use env::{ClassifierEnv, GradientSource, RosenbrockEnv};
 pub use ledger::{CommLedger, RoundComm};
 pub use sampling::WorkerSampler;
 
 use crate::compressors::{
-    Compressor, CompressorKind, NormKind, QsgdCompressor, SparsignCompressor,
+    CompressedGrad, Compressor, CompressorKind, NormKind, QsgdCompressor,
+    SparsignCompressor,
 };
 use crate::optim::{sgd_step, LrSchedule};
 use crate::util::rng::Pcg64;
+use std::sync::Mutex;
 
 /// Federated training algorithm.
 #[derive(Clone, Debug)]
@@ -108,6 +116,9 @@ pub struct RunHistory {
     pub dim: usize,
     pub reports: Vec<RoundReport>,
     pub final_params: Vec<f32>,
+    /// Per-round communication ledger (bits + non-zero counts, built from
+    /// the per-message caches — no payload rescans).
+    pub ledger: CommLedger,
 }
 
 impl RunHistory {
@@ -169,10 +180,28 @@ pub struct TrainingRun {
     /// participation — off by default because that is exactly the broken
     /// configuration the paper identifies; enable only to demonstrate it.
     pub allow_stateful_with_sampling: bool,
+    /// Worker fan-out threads per round; `None` ⇒ `available_parallelism`.
+    /// `Some(1)` forces the serial reference engine. Any value yields a
+    /// bit-identical `RunHistory` (see the module docs).
+    pub threads: Option<usize>,
 }
 
 /// Alias kept for API symmetry with the docs ("the federated server").
 pub type FederatedServer = TrainingRun;
+
+/// Per-thread scratch reused across rounds — the seed engine allocated
+/// `params.clone()`, `accum` and the gradient buffer per worker per round.
+struct WorkerScratch {
+    grad: Vec<f32>,
+    wm: Vec<f32>,
+    accum: Vec<f32>,
+}
+
+impl WorkerScratch {
+    fn new(d: usize) -> Self {
+        Self { grad: vec![0.0; d], wm: vec![0.0; d], accum: vec![0.0; d] }
+    }
+}
 
 impl TrainingRun {
     /// Minimal constructor with the common defaults.
@@ -186,6 +215,7 @@ impl TrainingRun {
             seed: 0,
             attack: None,
             allow_stateful_with_sampling: false,
+            threads: None,
         }
     }
 
@@ -198,6 +228,124 @@ impl TrainingRun {
         eval: &dyn Fn(&[f32]) -> (f64, f64),
     ) -> RunHistory {
         self.run_probed(env, init, eval, None)
+    }
+
+    /// Effective worker fan-out width for this run. Environments that are
+    /// single-threaded by contract (PJRT-backed models) force 1 regardless
+    /// of the requested width.
+    fn engine_threads(&self, env: &dyn GradientSource, workers_per_round: usize) -> usize {
+        if env.serial_only() {
+            return 1;
+        }
+        let hw = self
+            .threads
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+            .max(1);
+        hw.min(workers_per_round.max(1))
+    }
+
+    /// One worker's round: derive its RNG stream, sample the gradient(s),
+    /// apply the attack, compress — returns the uplink message and the
+    /// first-local-step loss. Pure in `(t, w, params)` given the run seed,
+    /// so it can execute on any thread in any order.
+    fn worker_round(
+        &self,
+        env: &dyn GradientSource,
+        t: usize,
+        w: usize,
+        lr: f64,
+        params: &[f32],
+        root: &Pcg64,
+        comps: &[Mutex<Box<dyn Compressor>>],
+        scratch: &mut WorkerScratch,
+    ) -> (CompressedGrad, f64) {
+        let d = params.len();
+        let mut wrng = root.derive(((t as u64) << 24) | w as u64);
+        match &self.algorithm {
+            Algorithm::CompressedGd { .. } => {
+                let loss = env.sample_grad(w, params, &mut wrng, &mut scratch.grad);
+                if let Some(plan) = &self.attack {
+                    plan.apply(w, &mut scratch.grad, &mut wrng);
+                }
+                let msg = comps[w]
+                    .lock()
+                    .expect("worker compressor lock poisoned")
+                    .compress(&scratch.grad, &mut wrng);
+                (msg, loss as f64)
+            }
+            Algorithm::EfSparsign { b_local, b_global, tau, .. } => {
+                let mut local = SparsignCompressor { budget: *b_local };
+                scratch.wm.copy_from_slice(params);
+                scratch.accum.fill(0.0);
+                let mut first_loss = 0.0f64;
+                for c in 0..*tau {
+                    let loss =
+                        env.sample_grad(w, &scratch.wm, &mut wrng, &mut scratch.grad);
+                    if c == 0 {
+                        first_loss = loss as f64;
+                    }
+                    if let Some(plan) = &self.attack {
+                        plan.apply(w, &mut scratch.grad, &mut wrng);
+                    }
+                    let q = local.compress(&scratch.grad, &mut wrng);
+                    // wm ← wm − η_L·q ; accum ← accum + q.
+                    if let CompressedGrad::Ternary { pack, .. } = &q {
+                        let eta_l = lr as f32;
+                        let s = pack.scale();
+                        let wm = &mut scratch.wm;
+                        let accum = &mut scratch.accum;
+                        pack.for_each_nonzero(|i, sgn| {
+                            let qf = s * sgn as f32;
+                            wm[i] -= eta_l * qf;
+                            accum[i] += qf;
+                        });
+                    }
+                }
+                let mut global = SparsignCompressor { budget: *b_global };
+                let delta = global.compress(&scratch.accum, &mut wrng);
+                (delta, first_loss)
+            }
+            Algorithm::FedAvg { tau } | Algorithm::FedCom { tau, .. } => {
+                scratch.wm.copy_from_slice(params);
+                let mut first_loss = 0.0f64;
+                for c in 0..*tau {
+                    let loss =
+                        env.sample_grad(w, &scratch.wm, &mut wrng, &mut scratch.grad);
+                    if c == 0 {
+                        first_loss = loss as f64;
+                    }
+                    if let Some(plan) = &self.attack {
+                        plan.apply(w, &mut scratch.grad, &mut wrng);
+                    }
+                    sgd_step(&mut scratch.wm, lr as f32, &scratch.grad);
+                }
+                // Upload Δ = w − w_m (so the server's mean recovers the
+                // FedAvg parameter average). FedAvg's Δ IS the message
+                // payload, so it owns a fresh Vec; FedCom's Δ is consumed
+                // by the quantizer and reuses the per-thread scratch.
+                let msg = match &self.algorithm {
+                    Algorithm::FedAvg { .. } => {
+                        let delta: Vec<f32> =
+                            params.iter().zip(&scratch.wm).map(|(a, b)| a - b).collect();
+                        CompressedGrad::dense(delta, 32.0 * d as f64)
+                    }
+                    Algorithm::FedCom { levels, .. } => {
+                        for ((dst, &p), &wi) in
+                            scratch.accum.iter_mut().zip(params).zip(&scratch.wm)
+                        {
+                            *dst = p - wi;
+                        }
+                        let mut q =
+                            QsgdCompressor { levels: *levels, norm: NormKind::L2 };
+                        q.compress(&scratch.accum, &mut wrng)
+                    }
+                    _ => unreachable!(),
+                };
+                (msg, first_loss)
+            }
+        }
     }
 
     /// [`TrainingRun::run`] with an optional per-round probe.
@@ -216,15 +364,19 @@ impl TrainingRun {
         let root = Pcg64::new(self.seed, 0xc0_0e_d1);
         let mut select_rng = root.derive(0xfeed);
 
-        // Per-worker compressor instances (stateful EF baseline keeps its
-        // residual here).
-        let mut worker_comps: Vec<Box<dyn Compressor>> = match &self.algorithm {
+        // Per-worker compressor instances (the stateful EF/SSDM baselines
+        // keep their residual/momentum here). Each worker is visited by
+        // exactly one thread per round, so the per-slot mutexes are
+        // uncontended; state still evolves per-worker-sequentially across
+        // rounds, keeping threaded runs bit-exact.
+        let worker_comps: Vec<Mutex<Box<dyn Compressor>>> = match &self.algorithm {
             Algorithm::CompressedGd { compressor, .. } => {
-                (0..m).map(|_| compressor.build(d)).collect()
+                (0..m).map(|_| Mutex::new(compressor.build(d))).collect()
             }
             _ => Vec::new(),
         };
         if let Some(c) = worker_comps.first() {
+            let c = c.lock().expect("compressor lock");
             if c.requires_worker_state()
                 && self.participation < 1.0
                 && !self.allow_stateful_with_sampling
@@ -240,111 +392,75 @@ impl TrainingRun {
             }
         }
 
+        let threads = self.engine_threads(env, sampler.per_round());
+        let mut scratches: Vec<WorkerScratch> =
+            (0..threads).map(|_| WorkerScratch::new(d)).collect();
+
         // Server error-feedback residual (Algorithm 2 only).
         let mut server_residual = vec![0.0f32; d];
         let mut params = init;
         let mut reports = Vec::with_capacity(self.rounds);
         let mut cum_uplink = 0.0f64;
-        let mut grad_buf = vec![0.0f32; d];
+        let mut comm_ledger = CommLedger::new();
 
         for t in 0..self.rounds {
             let lr = self.schedule.at(t);
             let selected = sampler.select(&mut select_rng);
-            let mut msgs = Vec::with_capacity(selected.len());
+            let n = selected.len();
+            let mut slots: Vec<Option<(CompressedGrad, f64)>> =
+                (0..n).map(|_| None).collect();
+
+            if threads <= 1 || n <= 1 {
+                // Serial reference engine.
+                let scratch = &mut scratches[0];
+                for (slot, &w) in slots.iter_mut().zip(&selected) {
+                    *slot = Some(self.worker_round(
+                        env,
+                        t,
+                        w,
+                        lr,
+                        &params,
+                        &root,
+                        &worker_comps,
+                        scratch,
+                    ));
+                }
+            } else {
+                // Shard the selected workers across scoped threads; each
+                // thread writes its contiguous slot chunk, so no result
+                // ever moves between threads out of order.
+                let chunk = (n + threads - 1) / threads;
+                let params_ref: &[f32] = &params;
+                let comps_ref: &[Mutex<Box<dyn Compressor>>] = &worker_comps;
+                let root_ref = &root;
+                std::thread::scope(|s| {
+                    for (scratch, (sel_chunk, slot_chunk)) in scratches
+                        .iter_mut()
+                        .zip(selected.chunks(chunk).zip(slots.chunks_mut(chunk)))
+                    {
+                        s.spawn(move || {
+                            for (slot, &w) in slot_chunk.iter_mut().zip(sel_chunk) {
+                                *slot = Some(self.worker_round(
+                                    env, t, w, lr, params_ref, root_ref, comps_ref,
+                                    scratch,
+                                ));
+                            }
+                        });
+                    }
+                });
+            }
+
+            // Deterministic reduction in selection order (f64 sums are
+            // order-sensitive; this keeps them independent of the thread
+            // count).
+            let mut msgs = Vec::with_capacity(n);
             let mut loss_sum = 0.0f64;
             let mut uplink = 0.0f64;
-
-            match &self.algorithm {
-                Algorithm::CompressedGd { .. } => {
-                    for &w in &selected {
-                        let mut wrng = root.derive(((t as u64) << 24) | w as u64);
-                        let loss = env.sample_grad(w, &params, &mut wrng, &mut grad_buf);
-                        if let Some(plan) = &self.attack {
-                            plan.apply(w, &mut grad_buf, &mut wrng);
-                        }
-                        let msg = worker_comps[w].compress(&grad_buf, &mut wrng);
-                        uplink += msg.bits();
-                        loss_sum += loss as f64;
-                        msgs.push(msg);
-                    }
-                }
-                Algorithm::EfSparsign { b_local, b_global, tau, .. } => {
-                    for &w in &selected {
-                        let mut wrng = root.derive(((t as u64) << 24) | w as u64);
-                        let mut local = SparsignCompressor { budget: *b_local };
-                        let mut wm = params.clone();
-                        let mut accum = vec![0.0f32; d];
-                        for c in 0..*tau {
-                            let loss =
-                                env.sample_grad(w, &wm, &mut wrng, &mut grad_buf);
-                            if c == 0 {
-                                loss_sum += loss as f64;
-                            }
-                            if let Some(plan) = &self.attack {
-                                plan.apply(w, &mut grad_buf, &mut wrng);
-                            }
-                            let q = local.compress(&grad_buf, &mut wrng);
-                            // wm ← wm − η_L·q ; accum ← accum + q.
-                            if let crate::compressors::CompressedGrad::Ternary {
-                                q: codes,
-                                ..
-                            } = &q
-                            {
-                                let eta_l = lr as f32;
-                                for ((wi, ai), &qi) in
-                                    wm.iter_mut().zip(accum.iter_mut()).zip(codes.iter())
-                                {
-                                    let qf = qi as f32;
-                                    *wi -= eta_l * qf;
-                                    *ai += qf;
-                                }
-                            }
-                        }
-                        let mut global = SparsignCompressor { budget: *b_global };
-                        let delta = global.compress(&accum, &mut wrng);
-                        uplink += delta.bits();
-                        msgs.push(delta);
-                    }
-                }
-                Algorithm::FedAvg { tau } | Algorithm::FedCom { tau, .. } => {
-                    for &w in &selected {
-                        let mut wrng = root.derive(((t as u64) << 24) | w as u64);
-                        let mut wm = params.clone();
-                        for c in 0..*tau {
-                            let loss =
-                                env.sample_grad(w, &wm, &mut wrng, &mut grad_buf);
-                            if c == 0 {
-                                loss_sum += loss as f64;
-                            }
-                            if let Some(plan) = &self.attack {
-                                plan.apply(w, &mut grad_buf, &mut wrng);
-                            }
-                            sgd_step(&mut wm, lr as f32, &grad_buf);
-                        }
-                        // Upload Δ = w − w_m (so the server's mean recovers
-                        // the FedAvg parameter average).
-                        let delta: Vec<f32> =
-                            params.iter().zip(&wm).map(|(a, b)| a - b).collect();
-                        let msg = match &self.algorithm {
-                            Algorithm::FedAvg { .. } => {
-                                crate::compressors::CompressedGrad::Dense {
-                                    bits: 32.0 * d as f64,
-                                    v: delta,
-                                }
-                            }
-                            Algorithm::FedCom { levels, .. } => {
-                                let mut q = QsgdCompressor {
-                                    levels: *levels,
-                                    norm: NormKind::L2,
-                                };
-                                q.compress(&delta, &mut wrng)
-                            }
-                            _ => unreachable!(),
-                        };
-                        uplink += msg.bits();
-                        msgs.push(msg);
-                    }
-                }
+            for slot in slots {
+                let (msg, loss) = slot.expect("worker slot not filled");
+                uplink += msg.bits();
+                loss_sum += loss;
+                msgs.push(msg);
             }
 
             // ---- Server aggregation + model update -----------------------
@@ -375,6 +491,7 @@ impl TrainingRun {
                     (agg.update, 1.0, 32.0 * d as f64)
                 }
             };
+            comm_ledger.record(RoundComm::from_msgs(&msgs, downlink));
             if let Some(p) = probe.as_mut() {
                 p(t, &params, &update);
             }
@@ -389,7 +506,7 @@ impl TrainingRun {
             reports.push(RoundReport {
                 round: t,
                 lr,
-                train_loss: loss_sum / selected.len() as f64,
+                train_loss: loss_sum / n as f64,
                 eval: if do_eval { Some(eval(&params)) } else { None },
                 uplink_bits: uplink,
                 downlink_bits: downlink,
@@ -402,6 +519,7 @@ impl TrainingRun {
             dim: d,
             reports,
             final_params: params,
+            ledger: comm_ledger,
         }
     }
 }
@@ -448,6 +566,7 @@ mod tests {
             seed: 3,
             attack: None,
             allow_stateful_with_sampling: false,
+            threads: None,
         }
     }
 
@@ -467,6 +586,10 @@ mod tests {
         let (_, acc) = hist.final_eval().unwrap();
         assert!(acc > 0.6, "sparsign failed to learn: acc {acc}");
         assert!(hist.total_uplink() > 0.0);
+        // Ledger agrees with the per-round reports and records nnz.
+        assert_eq!(hist.ledger.rounds(), 120);
+        assert_eq!(hist.ledger.total_uplink(), hist.total_uplink());
+        assert!(hist.ledger.total_uplink_nnz() > 0);
     }
 
     #[test]
@@ -540,6 +663,36 @@ mod tests {
         let h2 = run.run(&e, init, &|p| e.evaluate(p));
         assert_eq!(h1.final_params, h2.final_params);
         assert_eq!(h1.total_uplink(), h2.total_uplink());
+    }
+
+    #[test]
+    fn threaded_engine_matches_serial_reference() {
+        let e = env();
+        let mut rng = Pcg64::seed_from(9);
+        let init = e.init_params(&mut rng);
+        let mut serial = base_run(
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::Sparsign { budget: 0.5 },
+                aggregation: AggregationRule::MajorityVote,
+            },
+            25,
+        );
+        serial.threads = Some(1);
+        let mut threaded = base_run(
+            Algorithm::CompressedGd {
+                compressor: CompressorKind::Sparsign { budget: 0.5 },
+                aggregation: AggregationRule::MajorityVote,
+            },
+            25,
+        );
+        threaded.threads = Some(4);
+        let h1 = serial.run(&e, init.clone(), &|p| e.evaluate(p));
+        let h2 = threaded.run(&e, init, &|p| e.evaluate(p));
+        assert_eq!(h1.final_params, h2.final_params);
+        for (a, b) in h1.reports.iter().zip(&h2.reports) {
+            assert_eq!(a.train_loss, b.train_loss);
+            assert_eq!(a.uplink_bits, b.uplink_bits);
+        }
     }
 
     #[test]

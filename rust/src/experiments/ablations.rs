@@ -39,6 +39,7 @@ fn run_one(
         seed: 0,
         attack: None,
         allow_stateful_with_sampling: false,
+        threads: None,
     };
     let hist = run.run(&env, init, &|p| env.evaluate(p));
     (hist.final_eval().unwrap().1, hist.total_uplink())

@@ -128,6 +128,14 @@ pub fn run_classification(cfg: &ExperimentConfig) -> ExperimentReport {
                 seed,
                 attack: None,
                 allow_stateful_with_sampling: false,
+                // HLO-backed models run on the Rc/RefCell PJRT cache,
+                // which is single-threaded by contract; pure-rust models
+                // get the full parallel round engine.
+                threads: if matches!(cfg.model, crate::model::ModelKind::Hlo { .. }) {
+                    Some(1)
+                } else {
+                    None
+                },
             };
             runs.push(run.run(&env, init, &|p| env.evaluate(p)));
         }

@@ -63,6 +63,7 @@ pub fn run_series(
         seed,
         attack: None,
         allow_stateful_with_sampling: false,
+        threads: None,
     };
     let mut wrong_agg = Vec::with_capacity(rounds);
     let mut fvalue = Vec::with_capacity(rounds);

@@ -182,7 +182,13 @@ mod tests {
                 cum_uplink_bits: cum,
             });
         }
-        RunHistory { label: "fake".into(), dim: 4, reports, final_params: vec![] }
+        RunHistory {
+            label: "fake".into(),
+            dim: 4,
+            reports,
+            final_params: vec![],
+            ledger: crate::coordinator::CommLedger::new(),
+        }
     }
 
     #[test]

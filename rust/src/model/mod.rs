@@ -41,6 +41,15 @@ pub trait Model: Send + Sync {
 
     /// Human-readable description.
     fn describe(&self) -> String;
+
+    /// True when `loss_grad`/`evaluate` must only ever run on one thread
+    /// at a time (the PJRT-backed `HloModel` — its compile cache is
+    /// `Rc`/`RefCell`). The round engine consults this through
+    /// [`crate::coordinator::GradientSource::serial_only`] and pins its
+    /// fan-out to a single thread. Pure-rust models are thread-safe.
+    fn serial_only(&self) -> bool {
+        false
+    }
 }
 
 /// Config-level model selection.

@@ -1,0 +1,75 @@
+//! Runtime error type — a dependency-free replacement for `anyhow` so the
+//! default build carries zero external crates (the `pjrt` feature is the
+//! only thing that links against the XLA tree).
+
+use std::fmt;
+
+/// A boxed-string runtime error (artifact discovery, shape validation,
+/// PJRT client/compile/execute failures).
+#[derive(Debug)]
+pub struct RtError(pub String);
+
+impl RtError {
+    pub fn msg(s: impl Into<String>) -> Self {
+        RtError(s.into())
+    }
+}
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+impl From<std::io::Error> for RtError {
+    fn from(e: std::io::Error) -> Self {
+        RtError(format!("io: {e}"))
+    }
+}
+
+impl From<String> for RtError {
+    fn from(s: String) -> Self {
+        RtError(s)
+    }
+}
+
+/// Result alias used across the runtime layer.
+pub type RtResult<T> = Result<T, RtError>;
+
+/// `ensure!`-style helper: error out with a formatted message unless the
+/// condition holds.
+macro_rules! rt_ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::runtime::RtError(format!($($arg)+)));
+        }
+    };
+}
+
+/// `anyhow!`-style helper: build an [`RtError`] from a format string.
+macro_rules! rt_err {
+    ($($arg:tt)+) => {
+        $crate::runtime::RtError(format!($($arg)+))
+    };
+}
+
+pub(crate) use rt_ensure;
+pub(crate) use rt_err;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_conversions() {
+        let e = RtError::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: RtError = io.into();
+        assert!(format!("{e}").contains("nope"));
+        let boxed: Box<dyn std::error::Error> = Box::new(RtError::msg("x"));
+        assert_eq!(boxed.to_string(), "x");
+    }
+}

@@ -2,6 +2,7 @@
 //! staleness checks for the `artifacts/` directory produced by
 //! `python/compile/aot.py`.
 
+use super::error::{rt_ensure, rt_err, RtResult};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -53,8 +54,8 @@ pub struct ArtifactRegistry {
 impl ArtifactRegistry {
     /// Open a directory; parses `manifest.txt` if present (artifacts
     /// without a manifest are still loadable, just not shape-validated).
-    pub fn open(dir: &Path) -> anyhow::Result<Self> {
-        anyhow::ensure!(
+    pub fn open(dir: &Path) -> RtResult<Self> {
+        rt_ensure!(
             dir.is_dir(),
             "artifact directory {} does not exist — run `make artifacts`",
             dir.display()
@@ -69,7 +70,7 @@ impl ArtifactRegistry {
                     continue;
                 }
                 let spec = Self::parse_line(line)
-                    .map_err(|e| anyhow::anyhow!("manifest line {}: {e}", ln + 1))?;
+                    .map_err(|e| rt_err!("manifest line {}: {e}", ln + 1))?;
                 specs.insert(spec.name.clone(), spec);
             }
         }
@@ -106,9 +107,9 @@ impl ArtifactRegistry {
     }
 
     /// Path to an artifact's HLO text.
-    pub fn hlo_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+    pub fn hlo_path(&self, name: &str) -> RtResult<PathBuf> {
         let path = self.dir.join(format!("{name}.hlo.txt"));
-        anyhow::ensure!(
+        rt_ensure!(
             path.is_file(),
             "artifact '{name}' not found at {} — run `make artifacts`",
             path.display()
@@ -117,27 +118,27 @@ impl ArtifactRegistry {
     }
 
     /// Manifest spec for an artifact.
-    pub fn spec(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+    pub fn spec(&self, name: &str) -> RtResult<&ArtifactSpec> {
         self.specs
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' missing from manifest.txt"))
+            .ok_or_else(|| rt_err!("artifact '{name}' missing from manifest.txt"))
     }
 
-    /// Validate literal inputs against the manifest (element counts; the
-    /// PJRT layer enforces dtypes).
-    pub fn validate_inputs(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<()> {
+    /// Validate input element counts against the manifest (the PJRT layer
+    /// enforces dtypes; callers map their literal type to counts so this
+    /// module stays dependency-free).
+    pub fn validate_element_counts(&self, name: &str, counts: &[i64]) -> RtResult<()> {
         let Some(spec) = self.specs.get(name) else {
             return Ok(()); // unmanifested artifacts skip validation
         };
-        anyhow::ensure!(
-            inputs.len() == spec.inputs.len(),
+        rt_ensure!(
+            counts.len() == spec.inputs.len(),
             "{name}: expected {} inputs, got {}",
             spec.inputs.len(),
-            inputs.len()
+            counts.len()
         );
-        for (i, (lit, want)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            let got = lit.element_count() as i64;
-            anyhow::ensure!(
+        for (i, (&got, want)) in counts.iter().zip(&spec.inputs).enumerate() {
+            rt_ensure!(
                 got == want.element_count(),
                 "{name} input {i}: {got} elements, manifest says {} ({:?})",
                 want.element_count(),

@@ -1,0 +1,284 @@
+//! The real PJRT-backed runtime (feature `pjrt`): load the JAX/Pallas
+//! models AOT-lowered to HLO text by `python/compile/aot.py`, compile them
+//! once on the PJRT CPU client, and execute them from the coordinator's
+//! hot path. Requires the `xla` crate from the internal registry — see the
+//! crate manifest; the default build compiles the API-identical stub in
+//! `stub.rs` instead.
+
+use super::error::{rt_ensure, rt_err, RtResult};
+use super::manifest::ArtifactRegistry;
+use crate::model::Model;
+use crate::util::rng::Pcg64;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Literal tensor type (re-exported so callers are mode-agnostic).
+pub type Literal = xla::Literal;
+
+/// A loaded PJRT CPU runtime with a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over the given artifacts directory
+    /// (typically `"artifacts"`).
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> RtResult<Self> {
+        let registry = ArtifactRegistry::open(artifacts_dir.as_ref())?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| rt_err!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, registry, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> RtResult<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.registry.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| rt_err!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| rt_err!("compile {name}: {e:?}"))?;
+        let exe = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs, returning the decomposed
+    /// output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[Literal]) -> RtResult<Vec<Literal>> {
+        let counts: Vec<i64> =
+            inputs.iter().map(|l| l.element_count() as i64).collect();
+        self.registry.validate_element_counts(name, &counts)?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| rt_err!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| rt_err!("fetch {name} result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| rt_err!("untuple {name} result: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> RtResult<Literal> {
+    let n: i64 = dims.iter().product();
+    rt_ensure!(n as usize == data.len(), "shape {dims:?} vs len {}", data.len());
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| rt_err!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> RtResult<Literal> {
+    let n: i64 = dims.iter().product();
+    rt_ensure!(n as usize == data.len(), "shape {dims:?} vs len {}", data.len());
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| rt_err!("reshape: {e:?}"))
+}
+
+/// Build a u32 literal (threefry keys for the fused sparsign artifacts).
+pub fn literal_u32(data: &[u32], dims: &[i64]) -> RtResult<Literal> {
+    let n: i64 = dims.iter().product();
+    rt_ensure!(n as usize == data.len(), "shape {dims:?} vs len {}", data.len());
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| rt_err!("reshape: {e:?}"))
+}
+
+/// Extract a scalar f32 from a literal (shape `[]` or `[1]`).
+pub fn scalar_f32(lit: &Literal) -> RtResult<f32> {
+    lit.get_first_element::<f32>().map_err(|e| rt_err!("scalar: {e:?}"))
+}
+
+/// Extract a Vec<f32>.
+pub fn vec_f32(lit: &Literal) -> RtResult<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| rt_err!("to_vec: {e:?}"))
+}
+
+/// A [`Model`] backed by AOT-compiled JAX artifacts.
+///
+/// Uses the `<stem>_grad` artifact for `loss_grad` (fixed batch — the
+/// engine must be configured with the artifact's batch size) and
+/// `<stem>_logits` for `evaluate` (arbitrary size via padded chunks).
+///
+/// `Send + Sync`: the compile cache is `Rc`/`RefCell`, so this type is
+/// only sound while at most one thread touches it at a time. That
+/// invariant is enforced structurally: `Model::serial_only()` returns
+/// `true`, which makes the round engine clamp its worker fan-out to a
+/// single thread for any `GradientSource` backed by this model — no call
+/// site has to remember a `threads` override.
+pub struct HloModel {
+    runtime: std::rc::Rc<Runtime>,
+    stem: String,
+    inputs: usize,
+    classes: usize,
+    dim: usize,
+    batch: usize,
+    /// Rust twin used only for `init` (identical flat layout — see
+    /// `python/tests/test_model.py::test_mlp_dim_matches_rust_layout`).
+    init_twin: crate::model::Mlp,
+}
+
+// SAFETY: see struct docs — `serial_only()` pins the engine to one
+// thread, so the Rc/RefCell cache is never accessed concurrently.
+unsafe impl Send for HloModel {}
+unsafe impl Sync for HloModel {}
+
+impl HloModel {
+    /// Load `<stem>_grad` / `<stem>_logits` from `runtime`'s registry.
+    /// `hidden` must match the JAX `MlpSpec` so the parameter layout and
+    /// `dim` agree (checked against the manifest).
+    pub fn load(
+        runtime: std::rc::Rc<Runtime>,
+        stem: &str,
+        inputs: usize,
+        hidden: Vec<usize>,
+        classes: usize,
+    ) -> RtResult<Self> {
+        let grad_name = format!("{stem}_grad");
+        let spec = runtime.registry.spec(&grad_name)?;
+        rt_ensure!(spec.inputs.len() >= 3, "{grad_name}: expected ≥3 inputs");
+        let batch = spec.inputs[1].dims[0] as usize;
+        let twin = crate::model::Mlp::new(inputs, hidden, classes);
+        let dim = spec.inputs[0].dims[0] as usize;
+        rt_ensure!(
+            dim == twin.dim(),
+            "artifact {grad_name} has {dim} params but the rust spec implies {}",
+            twin.dim()
+        );
+        // Force-compile both executables up front (fail fast, warm cache).
+        runtime.executable(&grad_name)?;
+        runtime.executable(&format!("{stem}_logits"))?;
+        Ok(Self {
+            runtime,
+            stem: stem.to_string(),
+            inputs,
+            classes,
+            dim,
+            batch,
+            init_twin: twin,
+        })
+    }
+
+    /// The batch size baked into the grad artifact.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn onehot(&self, y: &[usize]) -> Vec<f32> {
+        let mut out = vec![0.0f32; y.len() * self.classes];
+        for (i, &yi) in y.iter().enumerate() {
+            assert!(yi < self.classes, "label {yi} out of range");
+            out[i * self.classes + yi] = 1.0;
+        }
+        out
+    }
+}
+
+impl Model for HloModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[usize], grad: &mut [f32]) -> f32 {
+        assert_eq!(params.len(), self.dim);
+        assert_eq!(
+            y.len(),
+            self.batch,
+            "HLO grad artifact {} requires batch {} (got {}) — configure the \
+             engine batch to match",
+            self.stem,
+            self.batch,
+            y.len()
+        );
+        let name = format!("{}_grad", self.stem);
+        let inputs = [
+            literal_f32(params, &[self.dim as i64]).unwrap(),
+            literal_f32(x, &[self.batch as i64, self.inputs as i64]).unwrap(),
+            literal_f32(&self.onehot(y), &[self.batch as i64, self.classes as i64])
+                .unwrap(),
+        ];
+        let out = self
+            .runtime
+            .execute(&name, &inputs)
+            .unwrap_or_else(|e| panic!("HLO execute failed: {e}"));
+        let loss = scalar_f32(&out[0]).expect("loss scalar");
+        let g = vec_f32(&out[1]).expect("grad vector");
+        grad.copy_from_slice(&g);
+        loss
+    }
+
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[usize]) -> (f64, f64) {
+        let n = y.len();
+        assert!(n > 0);
+        let name = format!("{}_logits", self.stem);
+        let p_lit = literal_f32(params, &[self.dim as i64]).unwrap();
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let take = (n - start).min(self.batch);
+            // Pad the chunk to the artifact batch.
+            let mut bx = vec![0.0f32; self.batch * self.inputs];
+            bx[..take * self.inputs]
+                .copy_from_slice(&x[start * self.inputs..(start + take) * self.inputs]);
+            let x_lit =
+                literal_f32(&bx, &[self.batch as i64, self.inputs as i64]).unwrap();
+            let out = self
+                .runtime
+                .execute(&name, &[p_lit.clone(), x_lit])
+                .unwrap_or_else(|e| panic!("HLO eval failed: {e}"));
+            let mut logits = vec_f32(&out[0]).expect("logits");
+            crate::util::linalg::softmax_rows(&mut logits, self.batch, self.classes);
+            for i in 0..take {
+                let yi = y[start + i];
+                let row = &logits[i * self.classes..(i + 1) * self.classes];
+                loss -= (row[yi].max(1e-12) as f64).ln();
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap();
+                if argmax == yi {
+                    correct += 1;
+                }
+            }
+            start += take;
+        }
+        (loss / n as f64, correct as f64 / n as f64)
+    }
+
+    fn init(&self, rng: &mut Pcg64) -> Vec<f32> {
+        self.init_twin.init(rng)
+    }
+
+    fn describe(&self) -> String {
+        format!("hlo({}, batch={})", self.stem, self.batch)
+    }
+
+    fn serial_only(&self) -> bool {
+        true // Rc/RefCell compile cache — see the struct SAFETY note
+    }
+}

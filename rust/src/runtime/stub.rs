@@ -1,0 +1,203 @@
+//! Dependency-free stand-in for the PJRT runtime, compiled when the `pjrt`
+//! feature is off (the default — this sandbox registry carries no `xla`
+//! crate). The API is signature-identical to `pjrt.rs`:
+//!
+//! * the literal helpers are fully functional (plain in-memory tensors
+//!   with shape validation), so pure-helper call sites and unit tests
+//!   behave the same in both modes;
+//! * [`Runtime::cpu`] always returns an error, so every artifact-dependent
+//!   path (examples, integration tests, the `artifacts` CLI command, the
+//!   PJRT bench section) skips gracefully at runtime instead of failing to
+//!   build.
+
+use super::error::{rt_ensure, rt_err, RtResult};
+use super::manifest::ArtifactRegistry;
+use crate::model::Model;
+use crate::util::rng::Pcg64;
+use std::path::Path;
+
+/// In-memory literal tensor: data + shape, no backing device buffer.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+#[derive(Clone, Debug)]
+enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Literal {
+    /// Total number of elements.
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::U32(v) => v.len(),
+        }
+    }
+
+    /// Declared shape.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+const DISABLED: &str = "built without the `pjrt` feature — the PJRT/XLA runtime is \
+                        unavailable; rebuild with `--features pjrt` (requires the \
+                        vendored `xla` crate) to execute AOT artifacts";
+
+/// Stub runtime: construction always fails with a clear message.
+pub struct Runtime {
+    registry: ArtifactRegistry,
+}
+
+impl Runtime {
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> RtResult<Self> {
+        // Validate the directory anyway so error messages stay useful.
+        let _registry = ArtifactRegistry::open(artifacts_dir.as_ref())?;
+        Err(rt_err!("{DISABLED}"))
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (pjrt feature disabled)".into()
+    }
+
+    pub fn execute(&self, _name: &str, _inputs: &[Literal]) -> RtResult<Vec<Literal>> {
+        Err(rt_err!("{DISABLED}"))
+    }
+
+    /// Compile-cache lookup; always unavailable in the stub.
+    pub fn executable(&self, _name: &str) -> RtResult<()> {
+        Err(rt_err!("{DISABLED}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> RtResult<Literal> {
+    let n: i64 = dims.iter().product();
+    rt_ensure!(n as usize == data.len(), "shape {dims:?} vs len {}", data.len());
+    Ok(Literal { data: LiteralData::F32(data.to_vec()), dims: dims.to_vec() })
+}
+
+/// Build an i32 literal.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> RtResult<Literal> {
+    let n: i64 = dims.iter().product();
+    rt_ensure!(n as usize == data.len(), "shape {dims:?} vs len {}", data.len());
+    Ok(Literal { data: LiteralData::I32(data.to_vec()), dims: dims.to_vec() })
+}
+
+/// Build a u32 literal.
+pub fn literal_u32(data: &[u32], dims: &[i64]) -> RtResult<Literal> {
+    let n: i64 = dims.iter().product();
+    rt_ensure!(n as usize == data.len(), "shape {dims:?} vs len {}", data.len());
+    Ok(Literal { data: LiteralData::U32(data.to_vec()), dims: dims.to_vec() })
+}
+
+/// Extract a scalar f32 from a literal (shape `[]` or `[1]`; the stub
+/// returns the first element, matching the PJRT helper).
+pub fn scalar_f32(lit: &Literal) -> RtResult<f32> {
+    match &lit.data {
+        LiteralData::F32(v) if !v.is_empty() => Ok(v[0]),
+        LiteralData::F32(_) => Err(rt_err!("scalar: empty literal")),
+        _ => Err(rt_err!("scalar: literal is not f32")),
+    }
+}
+
+/// Extract a Vec<f32>.
+pub fn vec_f32(lit: &Literal) -> RtResult<Vec<f32>> {
+    match &lit.data {
+        LiteralData::F32(v) => Ok(v.clone()),
+        _ => Err(rt_err!("to_vec: literal is not f32")),
+    }
+}
+
+/// Stub HLO-backed model: [`HloModel::load`] always errors (there is no
+/// executor), so instances cannot exist; the trait impl keeps call sites
+/// compiling unchanged.
+pub struct HloModel {
+    never: std::convert::Infallible,
+}
+
+impl HloModel {
+    pub fn load(
+        _runtime: std::rc::Rc<Runtime>,
+        _stem: &str,
+        _inputs: usize,
+        _hidden: Vec<usize>,
+        _classes: usize,
+    ) -> RtResult<Self> {
+        Err(rt_err!("{DISABLED}"))
+    }
+
+    pub fn batch(&self) -> usize {
+        match self.never {}
+    }
+}
+
+impl Model for HloModel {
+    fn dim(&self) -> usize {
+        match self.never {}
+    }
+
+    fn loss_grad(&self, _p: &[f32], _x: &[f32], _y: &[usize], _g: &mut [f32]) -> f32 {
+        match self.never {}
+    }
+
+    fn evaluate(&self, _p: &[f32], _x: &[f32], _y: &[usize]) -> (f64, f64) {
+        match self.never {}
+    }
+
+    fn init(&self, _rng: &mut Pcg64) -> Vec<f32> {
+        match self.never {}
+    }
+
+    fn describe(&self) -> String {
+        match self.never {}
+    }
+
+    fn serial_only(&self) -> bool {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_helpers_validate_shape() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(literal_i32(&[1, 2], &[2]).is_ok());
+        assert!(literal_u32(&[1, 2], &[1]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_vec_roundtrip() {
+        let lit = literal_f32(&[3.5, 4.5], &[2]).unwrap();
+        assert_eq!(vec_f32(&lit).unwrap(), vec![3.5, 4.5]);
+        assert_eq!(scalar_f32(&lit).unwrap(), 3.5);
+        assert_eq!(lit.element_count(), 2);
+        assert_eq!(lit.dims(), &[2]);
+    }
+
+    #[test]
+    fn runtime_construction_reports_disabled() {
+        // Any directory (existing or not) must fail without panicking.
+        let err = Runtime::cpu("/nonexistent-sparsignd").unwrap_err();
+        assert!(!format!("{err}").is_empty());
+        let dir = std::env::temp_dir().join(format!("sparsignd-stub-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Runtime::cpu(&dir).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,176 @@
+//! Parallel round-engine equivalence: for every `Algorithm` variant, a run
+//! sharded across scoped threads must produce a `RunHistory` that is
+//! **bit-identical** to the serial reference (`threads = Some(1)`) —
+//! losses, per-round uplink/downlink bits, and final parameters. This is
+//! the determinism contract the engine's worker fan-out is built on:
+//! worker `m` at round `t` draws from `root.derive(t‖m)` regardless of
+//! which thread executes it, and the coordinator reduces the slot array in
+//! selection order.
+
+use sparsignd::compressors::CompressorKind;
+use sparsignd::coordinator::{
+    AggregationRule, Algorithm, Attack, AttackPlan, ClassifierEnv, RunHistory,
+    TrainingRun,
+};
+use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+use sparsignd::model::ModelKind;
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
+
+fn env(workers: usize) -> ClassifierEnv {
+    let task = SyntheticTask::generate(
+        SyntheticSpec {
+            dim: 12,
+            classes: 3,
+            modes: 1,
+            separation: 1.6,
+            noise: 0.25,
+            label_noise: 0.0,
+            train: 480,
+            test: 120,
+        },
+        31,
+    );
+    let mut rng = Pcg64::seed_from(32);
+    let fed = DirichletPartitioner { alpha: 0.3, workers }.partition(&task.train, &mut rng);
+    ClassifierEnv::new(
+        ModelKind::Linear { inputs: 12, classes: 3 }.build(),
+        task.train,
+        task.test,
+        fed,
+        16,
+    )
+}
+
+fn run_with_threads(
+    e: &ClassifierEnv,
+    alg: Algorithm,
+    participation: f64,
+    attack: Option<AttackPlan>,
+    threads: Option<usize>,
+) -> RunHistory {
+    let run = TrainingRun {
+        algorithm: alg,
+        schedule: LrSchedule::Const { lr: 0.03 },
+        rounds: 15,
+        participation,
+        eval_every: 4,
+        seed: 77,
+        attack,
+        allow_stateful_with_sampling: false,
+        threads,
+    };
+    let mut init_rng = Pcg64::seed_from(78);
+    let init = e.init_params(&mut init_rng);
+    run.run(e, init, &|p| e.evaluate(p))
+}
+
+/// Field-by-field bit equality of two run histories.
+fn assert_identical(a: &RunHistory, b: &RunHistory, label: &str) {
+    assert_eq!(a.final_params, b.final_params, "{label}: final params differ");
+    assert_eq!(a.reports.len(), b.reports.len(), "{label}");
+    assert_eq!(
+        a.ledger.total_uplink_nnz(),
+        b.ledger.total_uplink_nnz(),
+        "{label}: ledger nnz differ"
+    );
+    assert_eq!(a.ledger.total_uplink(), b.ledger.total_uplink(), "{label}");
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(ra.round, rb.round, "{label}");
+        assert_eq!(ra.lr, rb.lr, "{label} round {}", ra.round);
+        assert_eq!(ra.train_loss, rb.train_loss, "{label} round {}", ra.round);
+        assert_eq!(ra.eval, rb.eval, "{label} round {}", ra.round);
+        assert_eq!(ra.uplink_bits, rb.uplink_bits, "{label} round {}", ra.round);
+        assert_eq!(ra.downlink_bits, rb.downlink_bits, "{label} round {}", ra.round);
+        assert_eq!(
+            ra.cum_uplink_bits, rb.cum_uplink_bits,
+            "{label} round {}",
+            ra.round
+        );
+    }
+}
+
+fn all_algorithms() -> Vec<Algorithm> {
+    vec![
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 0.5 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        Algorithm::EfSparsign {
+            b_local: 10.0,
+            b_global: 1.0,
+            tau: 2,
+            server_lr_scale: None,
+            server_ef: true,
+        },
+        Algorithm::FedAvg { tau: 2 },
+        Algorithm::FedCom { tau: 2, levels: 255 },
+    ]
+}
+
+#[test]
+fn threaded_runs_are_bit_identical_to_serial() {
+    let e = env(12);
+    for alg in all_algorithms() {
+        let label = alg.label();
+        let serial = run_with_threads(&e, alg.clone(), 1.0, None, Some(1));
+        for threads in [2, 4, 7] {
+            let par = run_with_threads(&e, alg.clone(), 1.0, None, Some(threads));
+            assert_identical(&serial, &par, &format!("{label} (threads={threads})"));
+        }
+        // Auto width (available_parallelism) must match too.
+        let auto = run_with_threads(&e, alg.clone(), 1.0, None, None);
+        assert_identical(&serial, &auto, &format!("{label} (threads=auto)"));
+    }
+}
+
+#[test]
+fn equivalence_holds_under_partial_participation() {
+    let e = env(12);
+    for alg in all_algorithms() {
+        let label = alg.label();
+        let serial = run_with_threads(&e, alg.clone(), 0.5, None, Some(1));
+        let par = run_with_threads(&e, alg.clone(), 0.5, None, Some(3));
+        assert_identical(&serial, &par, &format!("{label} @ p_s=0.5"));
+    }
+}
+
+#[test]
+fn equivalence_holds_under_attack() {
+    let e = env(12);
+    let attack = Some(AttackPlan { attack: Attack::Rescale { factor: 100.0 }, malicious: 3 });
+    let alg = Algorithm::CompressedGd {
+        compressor: CompressorKind::Sparsign { budget: 1.0 },
+        aggregation: AggregationRule::MajorityVote,
+    };
+    let serial = run_with_threads(&e, alg.clone(), 1.0, attack, Some(1));
+    let par = run_with_threads(&e, alg, 1.0, attack, Some(4));
+    assert_identical(&serial, &par, "sparsign under rescale attack");
+}
+
+#[test]
+fn equivalence_holds_for_stateful_compressor_at_full_participation() {
+    // Worker-EF keeps per-worker residuals; with full participation each
+    // worker's state advances once per round on whichever thread owns it,
+    // so threading must not change the trajectory.
+    let e = env(8);
+    let alg = Algorithm::CompressedGd {
+        compressor: CompressorKind::WorkerEf(Box::new(CompressorKind::ScaledSign)),
+        aggregation: AggregationRule::ScaledSign,
+    };
+    let serial = run_with_threads(&e, alg.clone(), 1.0, None, Some(1));
+    let par = run_with_threads(&e, alg, 1.0, None, Some(3));
+    assert_identical(&serial, &par, "worker-EF scaled-sign");
+}
+
+#[test]
+fn thread_count_larger_than_worker_pool_is_safe() {
+    let e = env(3);
+    let alg = Algorithm::CompressedGd {
+        compressor: CompressorKind::Sign,
+        aggregation: AggregationRule::MajorityVote,
+    };
+    let serial = run_with_threads(&e, alg.clone(), 1.0, None, Some(1));
+    let par = run_with_threads(&e, alg, 1.0, None, Some(64));
+    assert_identical(&serial, &par, "threads > workers");
+}

@@ -42,6 +42,7 @@ fn base_run(alg: Algorithm) -> TrainingRun {
         seed: 0,
         attack: None,
         allow_stateful_with_sampling: false,
+        threads: None,
     }
 }
 

@@ -32,6 +32,7 @@ fn run_rosen(alg: Algorithm, rounds: usize, participation: f64, seed: u64) -> f6
         seed,
         attack: None,
         allow_stateful_with_sampling: false,
+        threads: None,
     };
     let hist = run.run(&env, vec![0.0; 10], &|p| (env.f.value(p), 0.0));
     env.f.value(&hist.final_params)
@@ -105,6 +106,7 @@ fn rescale_attack_hurts_norm_scaled_compressors_more() {
             seed: 0,
             attack,
             allow_stateful_with_sampling: false,
+            threads: None,
         };
         let hist = run.run(&env, init, &|p| env.evaluate(p));
         hist.final_eval().unwrap().1
@@ -162,6 +164,7 @@ fn ef_sparsign_trains_under_low_participation() {
         seed: 1,
         attack: None,
         allow_stateful_with_sampling: false,
+        threads: None,
     };
     let hist = run.run(&env, init, &|p| env.evaluate(p));
     let (_, acc) = hist.final_eval().unwrap();
@@ -187,6 +190,7 @@ fn local_steps_reduce_rounds_to_target() {
             seed: 2,
             attack: None,
             allow_stateful_with_sampling: false,
+            threads: None,
         };
         let hist = run.run(&env, init.clone(), &|p| env.evaluate(p));
         hist.rounds_to_acc(0.6)
@@ -223,6 +227,7 @@ fn sparsign_uplink_beats_dense_sign_when_sparse() {
             seed: 3,
             attack: None,
             allow_stateful_with_sampling: false,
+            threads: None,
         };
         run.run(&env, init.clone(), &|p| env.evaluate(p)).total_uplink()
     };

@@ -83,6 +83,7 @@ fn every_algorithm_family_trains_and_accounts_bits() {
             seed: 0,
             attack: None,
             allow_stateful_with_sampling: false,
+            threads: None,
         };
         let hist = run.run(&env, init.clone(), &|p| env.evaluate(p));
         assert_eq!(hist.reports.len(), cfg.rounds, "{label}");
@@ -118,6 +119,7 @@ fn theory_rate_schedule_trains() {
         seed: 5,
         attack: None,
         allow_stateful_with_sampling: false,
+        threads: None,
     };
     let first_loss_run = run.run(&env, init, &|p| env.evaluate(p));
     let first = first_loss_run.reports.first().unwrap().train_loss;

@@ -3,9 +3,9 @@
 
 use sparsignd::coding::golomb;
 use sparsignd::compressors::{
-    CompressedGrad, Compressor, CompressorKind, NormKind,
+    CompressedGrad, Compressor, CompressorKind, NormKind, PackedTernary,
 };
-use sparsignd::coordinator::AggregationRule;
+use sparsignd::coordinator::{vote_counts, AggregationRule};
 use sparsignd::experiments::theory;
 use sparsignd::testing::{check, check_vec, gen, PropConfig};
 use sparsignd::util::rng::Pcg64;
@@ -48,12 +48,20 @@ fn prop_all_compressors_well_formed() {
                 if !(msg.bits() >= 0.0 && msg.bits().is_finite()) {
                     return Err(format!("{label}: bad bits {}", msg.bits()));
                 }
-                if let CompressedGrad::Ternary { q, scale, .. } = &msg {
-                    if !q.iter().all(|&x| (-1..=1).contains(&x)) {
+                if let CompressedGrad::Ternary { pack, .. } = &msg {
+                    let codes = pack.to_codes();
+                    if !codes.iter().all(|&x| (-1..=1).contains(&x)) {
                         return Err(format!("{label}: non-ternary code"));
                     }
-                    if !scale.is_finite() {
-                        return Err(format!("{label}: bad scale {scale}"));
+                    if !pack.scale().is_finite() {
+                        return Err(format!("{label}: bad scale {}", pack.scale()));
+                    }
+                    let counted = codes.iter().filter(|&&x| x != 0).count();
+                    if counted != pack.nnz() {
+                        return Err(format!(
+                            "{label}: cached nnz {} != recount {counted}",
+                            pack.nnz()
+                        ));
                     }
                 }
                 if msg.nnz() > g.len() {
@@ -134,11 +142,7 @@ fn prop_aggregation_permutation_invariant() {
                 .map(|_| {
                     let q: Vec<i8> =
                         (0..d).map(|_| [-1i8, 0, 1][rng.index(3)]).collect();
-                    CompressedGrad::Ternary {
-                        q,
-                        scale: rng.range_f32(0.1, 2.0),
-                        bits: 0.0,
-                    }
+                    CompressedGrad::ternary_from_codes(&q, rng.range_f32(0.1, 2.0), 0.0)
                 })
                 .collect();
             let mut shuffled = msgs.clone();
@@ -214,7 +218,7 @@ fn prop_scaled_sign_alpha_approximate() {
         (1, 512),
         gen::f32_normal(2.0),
         |x| {
-            let msgs = [CompressedGrad::Dense { v: x.to_vec(), bits: 0.0 }];
+            let msgs = [CompressedGrad::dense(x.to_vec(), 0.0)];
             let c = AggregationRule::ScaledSign.aggregate(&msgs, None).update;
             let err: f64 = c
                 .iter()
@@ -281,4 +285,126 @@ fn prop_unbiased_compressors_are_unbiased() {
             },
         );
     }
+}
+
+/// Packed ternary bitplanes: `from_codes ∘ to_codes = id`, cached nnz is
+/// exact, random access agrees, and `add_into` matches the scalar decode —
+/// across dimensions that straddle word boundaries.
+#[test]
+fn prop_packed_ternary_roundtrip() {
+    check(
+        cfg(128, 0x88),
+        |rng| {
+            let d = rng.index(520); // covers 0, sub-word, and multi-word dims
+            let scale = rng.range_f32(0.1, 4.0);
+            let q: Vec<i8> = (0..d).map(|_| [-1i8, 0, 1][rng.index(3)]).collect();
+            (q, scale)
+        },
+        |(q, scale)| {
+            let pack = PackedTernary::from_codes(q, *scale);
+            if pack.to_codes() != *q {
+                return Err("to_codes roundtrip mismatch".into());
+            }
+            let want_nnz = q.iter().filter(|&&x| x != 0).count();
+            if pack.nnz() != want_nnz {
+                return Err(format!("nnz {} vs {}", pack.nnz(), want_nnz));
+            }
+            for (i, &c) in q.iter().enumerate() {
+                if pack.get(i) != c {
+                    return Err(format!("get({i}) = {} vs {c}", pack.get(i)));
+                }
+            }
+            let mut fast = vec![0.0f32; q.len()];
+            pack.add_into(&mut fast);
+            for (i, (&f, &c)) in fast.iter().zip(q.iter()).enumerate() {
+                if f != scale * c as f32 {
+                    return Err(format!("add_into coord {i}: {f} vs {}", scale * c as f32));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The word-parallel vote kernel equals the naive per-coordinate sum for
+/// arbitrary message sets, including message counts that cross the
+/// vertical-counter plane boundaries (1, 2, 3, 4, … planes).
+#[test]
+fn prop_vote_counts_equal_naive() {
+    check(
+        cfg(64, 0x99),
+        |rng| {
+            let d = 1 + rng.index(400);
+            let m = 1 + rng.index(70);
+            let codes: Vec<Vec<i8>> = (0..m)
+                .map(|_| (0..d).map(|_| [-1i8, -1, 0, 0, 0, 1][rng.index(6)]).collect())
+                .collect();
+            codes
+        },
+        |codes| {
+            let d = codes[0].len();
+            let packs: Vec<PackedTernary> =
+                codes.iter().map(|q| PackedTernary::from_codes(q, 1.0)).collect();
+            let refs: Vec<&PackedTernary> = packs.iter().collect();
+            let counts = vote_counts(&refs, d);
+            for i in 0..d {
+                let want: i32 = codes.iter().map(|q| q[i] as i32).sum();
+                if counts[i] as i32 != want {
+                    return Err(format!("coord {i}: {} vs {want}", counts[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Aggregating uniform-scale packed messages (the word-parallel fast path)
+/// must agree exactly with a message set decoded to dense f32 first (the
+/// fallback path) for every rule.
+#[test]
+fn prop_packed_aggregation_matches_dense_decode() {
+    check(
+        cfg(48, 0xaa),
+        |rng| {
+            let d = 1 + rng.index(300);
+            let m = 1 + rng.index(20);
+            let codes: Vec<Vec<i8>> = (0..m)
+                .map(|_| (0..d).map(|_| [-1i8, 0, 1][rng.index(3)]).collect())
+                .collect();
+            codes
+        },
+        |codes| {
+            let d = codes[0].len();
+            let m = codes.len();
+            let packed: Vec<CompressedGrad> = codes
+                .iter()
+                .map(|q| CompressedGrad::ternary_from_codes(q, 1.0, 0.0))
+                .collect();
+            // Dense f32 decode forces the fallback path.
+            let dense: Vec<CompressedGrad> = codes
+                .iter()
+                .map(|q| {
+                    let v: Vec<f32> = q.iter().map(|&c| c as f32).collect();
+                    CompressedGrad::dense(v, 0.0)
+                })
+                .collect();
+            for rule in [
+                AggregationRule::MajorityVote,
+                AggregationRule::ScaledSign,
+                AggregationRule::Mean,
+            ] {
+                let a = rule.aggregate(&packed, None).update;
+                let b = rule.aggregate(&dense, None).update;
+                for i in 0..d {
+                    if (a[i] - b[i]).abs() > 1e-6 {
+                        return Err(format!(
+                            "{rule:?} coord {i} (d={d}, m={m}): packed {} vs dense {}",
+                            a[i], b[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
