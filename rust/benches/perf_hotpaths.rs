@@ -1,17 +1,22 @@
 //! §Perf hot-path microbenchmarks — the numbers recorded in
 //! EXPERIMENTS.md §Perf come from this bench.
 //!
-//! Hot paths (DESIGN.md §8):
+//! Hot paths (DESIGN.md §8–§9):
 //!   1. compressors (per-coordinate work, every worker every round)
 //!   2. majority-vote / mean aggregation over M ternary messages —
 //!      word-parallel packed vote counting vs the seed's dense-i8 decode
 //!   3. the threaded round engine vs the serial reference (bit-identical)
 //!   4. Golomb encode/decode of sparse supports
-//!   5. the blocked GEMM behind the pure-rust models
+//!   5. the packed SIMD-dispatched GEMM + the zero-allocation
+//!      `Mlp::loss_grad_ws` vs the pre-PR scalar path (kept verbatim in
+//!      `scalar_baseline` below)
 //!   6. PJRT end-to-end worker step (when artifacts are present)
 //!
 //! `cargo bench --bench perf_hotpaths` runs the full configuration;
 //! `-- --smoke` (or `PERF_SMOKE=1`) shrinks every section for CI.
+//! `-- --json <path>` additionally emits a machine-readable
+//! `BENCH_hotpaths.json` (gemm GF/s, loss_grad µs, round throughput) so
+//! successive PRs accumulate a measured trajectory.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -23,9 +28,263 @@ use sparsignd::compressors::{
 };
 use sparsignd::coding::golomb;
 use sparsignd::coordinator::{Algorithm, AggregationRule, GradientSource, TrainingRun};
+use sparsignd::model::{Mlp, Model, ModelWorkspace};
 use sparsignd::optim::LrSchedule;
-use sparsignd::util::linalg::matmul;
+use sparsignd::util::linalg::{
+    self, gemm_with_portable, matmul, Epilogue, GemmScratch, MatLayout,
+};
 use sparsignd::util::rng::Pcg64;
+
+/// Flat key→value collector behind `--json`: every section records its
+/// headline numbers here so future PRs can diff a measured trajectory.
+struct Report {
+    entries: Vec<(String, String)>,
+}
+
+impl Report {
+    fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    fn num(&mut self, key: &str, v: f64) {
+        self.entries.push((key.to_string(), format!("{v:.6}")));
+    }
+
+    fn text(&mut self, key: &str, v: &str) {
+        self.entries.push((key.to_string(), format!("\"{v}\"")));
+    }
+
+    fn write(&self, path: &str) {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            let sep = if i + 1 < self.entries.len() { "," } else { "" };
+            s.push_str(&format!("  \"{k}\": {v}{sep}\n"));
+        }
+        s.push_str("}\n");
+        std::fs::write(path, &s).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}
+
+/// The seed's scalar kernels and per-call-allocating MLP loss/grad, kept
+/// verbatim as the pre-PR baseline for the §Perf before/after rows.
+mod scalar_baseline {
+    pub fn matmul(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        c.fill(0.0);
+        const MC: usize = 64;
+        const KC: usize = 256;
+        const NC: usize = 256;
+        let mut i0 = 0;
+        while i0 < m {
+            let ib = MC.min(m - i0);
+            let mut p0 = 0;
+            while p0 < k {
+                let pb = KC.min(k - p0);
+                let mut j0 = 0;
+                while j0 < n {
+                    let jb = NC.min(n - j0);
+                    block_kernel(c, a, b, k, n, i0, p0, j0, ib, pb, jb);
+                    j0 += NC;
+                }
+                p0 += KC;
+            }
+            i0 += MC;
+        }
+    }
+
+    fn block_kernel(
+        c: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        k: usize,
+        n: usize,
+        i0: usize,
+        p0: usize,
+        j0: usize,
+        ib: usize,
+        pb: usize,
+        jb: usize,
+    ) {
+        let mut i = 0;
+        let cptr = c.as_mut_ptr();
+        while i + 4 <= ib {
+            let r0 = (i0 + i) * k + p0;
+            let r1 = r0 + k;
+            let r2 = r1 + k;
+            let r3 = r2 + k;
+            // SAFETY: four distinct rows of c, in-bounds (as in the seed).
+            let (t0, t1, t2, t3) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut(cptr.add((i0 + i) * n + j0), jb),
+                    std::slice::from_raw_parts_mut(cptr.add((i0 + i + 1) * n + j0), jb),
+                    std::slice::from_raw_parts_mut(cptr.add((i0 + i + 2) * n + j0), jb),
+                    std::slice::from_raw_parts_mut(cptr.add((i0 + i + 3) * n + j0), jb),
+                )
+            };
+            for p in 0..pb {
+                let a0 = a[r0 + p];
+                let a1 = a[r1 + p];
+                let a2 = a[r2 + p];
+                let a3 = a[r3 + p];
+                let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jb];
+                for j in 0..jb {
+                    let bv = brow[j];
+                    t0[j] += a0 * bv;
+                    t1[j] += a1 * bv;
+                    t2[j] += a2 * bv;
+                    t3[j] += a3 * bv;
+                }
+            }
+            i += 4;
+        }
+        while i < ib {
+            let ra = (i0 + i) * k + p0;
+            let rc = (i0 + i) * n + j0;
+            for p in 0..pb {
+                let a0 = a[ra + p];
+                let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jb];
+                let crow = &mut c[rc..rc + jb];
+                for j in 0..jb {
+                    crow[j] += a0 * brow[j];
+                }
+            }
+            i += 1;
+        }
+    }
+
+    fn matmul_at_b(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        for p in 0..k {
+            let arow = &a[p * m..(p + 1) * m];
+            let brow = &b[p * n..(p + 1) * n];
+            for i in 0..m {
+                let av = arow[i];
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[i * n..i * n + n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+
+    fn matmul_a_bt(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                crow[j] += acc;
+            }
+        }
+    }
+
+    fn softmax_xent_backward(logits: &mut [f32], y: &[usize], classes: usize) -> f32 {
+        let batch = y.len();
+        for i in 0..batch {
+            let row = &mut logits[i * classes..(i + 1) * classes];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+        let mut loss = 0.0f64;
+        let inv_b = 1.0 / batch as f32;
+        for (i, &yi) in y.iter().enumerate() {
+            let p = logits[i * classes + yi].max(1e-12);
+            loss -= (p as f64).ln();
+            let row = &mut logits[i * classes..(i + 1) * classes];
+            for v in row.iter_mut() {
+                *v *= inv_b;
+            }
+            row[yi] -= inv_b;
+        }
+        (loss / batch as f64) as f32
+    }
+
+    fn layer_offset(widths: &[usize], l: usize) -> usize {
+        let mut off = 0;
+        for i in 0..l {
+            off += widths[i] * widths[i + 1] + widths[i + 1];
+        }
+        off
+    }
+
+    /// The pre-PR `Mlp::loss_grad`: fresh `Vec` per activation/delta and
+    /// an input copy, scalar kernels throughout.
+    pub fn mlp_loss_grad(
+        widths: &[usize],
+        params: &[f32],
+        x: &[f32],
+        y: &[usize],
+        grad: &mut [f32],
+    ) -> f32 {
+        let layers = widths.len() - 1;
+        let classes = *widths.last().unwrap();
+        let batch = y.len();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(layers + 1);
+        acts.push(x.to_vec());
+        for l in 0..layers {
+            let (in_w, out_w) = (widths[l], widths[l + 1]);
+            let off = layer_offset(widths, l);
+            let w = &params[off..off + out_w * in_w];
+            let b = &params[off + out_w * in_w..off + out_w * in_w + out_w];
+            let mut h = vec![0.0f32; batch * out_w];
+            matmul_a_bt(&mut h, &acts[l], w, batch, in_w, out_w);
+            for i in 0..batch {
+                for (v, &bj) in h[i * out_w..(i + 1) * out_w].iter_mut().zip(b) {
+                    *v += bj;
+                }
+            }
+            if l + 1 < layers {
+                for v in h.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(h);
+        }
+        let mut delta = acts.pop().unwrap();
+        let loss = softmax_xent_backward(&mut delta, y, classes);
+        grad.fill(0.0);
+        for l in (0..layers).rev() {
+            let (in_w, out_w) = (widths[l], widths[l + 1]);
+            let off = layer_offset(widths, l);
+            let a_in = &acts[l];
+            matmul_at_b(&mut grad[off..off + out_w * in_w], &delta, a_in, out_w, batch, in_w);
+            let db = &mut grad[off + out_w * in_w..off + out_w * in_w + out_w];
+            for i in 0..batch {
+                for (dbj, &dl) in db.iter_mut().zip(&delta[i * out_w..(i + 1) * out_w]) {
+                    *dbj += dl;
+                }
+            }
+            if l > 0 {
+                let w = &params[off..off + out_w * in_w];
+                let mut prev = vec![0.0f32; batch * in_w];
+                matmul(&mut prev, &delta, w, batch, out_w, in_w);
+                for (d, a) in prev.iter_mut().zip(a_in) {
+                    if *a <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                delta = prev;
+            }
+        }
+        loss
+    }
+}
 
 fn bench_compressors(d: usize) {
     println!("\n-- compressors (d = {d}) --");
@@ -100,7 +359,7 @@ fn bench_aggregation(d: usize, m: usize) {
         .map(|q| CompressedGrad::ternary_from_codes(q, 1.0, 0.0))
         .collect();
     let i8_bytes = d * m;
-    let packed_bytes = 2 * 8 * ((d + 63) / 64) * m;
+    let packed_bytes = 2 * 8 * d.div_ceil(64) * m;
     println!(
         "  message memory: dense-i8 {:.1} MiB → packed {:.1} MiB ({}x)",
         i8_bytes as f64 / (1 << 20) as f64,
@@ -158,7 +417,7 @@ impl GradientSource for SynthEnv {
     }
 }
 
-fn bench_engine(d: usize, m: usize, rounds: usize) {
+fn bench_engine(rep: &mut Report, d: usize, m: usize, rounds: usize) {
     println!("\n-- round engine: {m}-worker CompressedGd, d = {d}, {rounds} rounds --");
     let env = SynthEnv { d, m };
     let mk_run = |threads: Option<usize>| TrainingRun {
@@ -196,6 +455,8 @@ fn bench_engine(d: usize, m: usize, rounds: usize) {
         "  serial {t_serial:.3}s | threaded({hw}) {t_par:.3}s | speedup {:.2}x (RunHistory bit-identical)",
         t_serial / t_par
     );
+    rep.num("round_throughput_rps", rounds as f64 / t_par);
+    rep.num("round_engine_thread_speedup", t_serial / t_par);
 }
 
 fn bench_golomb(d: usize) {
@@ -215,9 +476,14 @@ fn bench_golomb(d: usize) {
     }
 }
 
-fn bench_gemm() {
-    println!("\n-- blocked GEMM (pure-rust model hot path) --");
+fn bench_gemm(rep: &mut Report, smoke: bool) {
+    println!(
+        "\n-- packed GEMM (kernel: {}) vs portable vs pre-PR scalar --",
+        linalg::kernel_name()
+    );
     let mut rng = Pcg64::seed_from(5);
+    let mut scratch = GemmScratch::new();
+    let flop_budget = if smoke { 3e8 } else { 2e9 };
     for (m, k, n) in [(64, 784, 256), (128, 256, 128), (256, 256, 256)] {
         let mut a = vec![0.0f32; m * k];
         let mut b = vec![0.0f32; k * n];
@@ -225,18 +491,102 @@ fn bench_gemm() {
         rng.fill_normal(&mut a, 0.0, 1.0);
         rng.fill_normal(&mut b, 0.0, 1.0);
         let flops = 2.0 * m as f64 * k as f64 * n as f64;
-        let iters = (2e9 / flops).max(3.0) as usize;
-        // warmup
-        matmul(&mut c, &a, &b, m, k, n);
-        let t0 = std::time::Instant::now();
-        for _ in 0..iters {
+        let iters = (flop_budget / flops).max(3.0) as usize;
+        let time = |f: &mut dyn FnMut()| {
+            f(); // warmup
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            flops * iters as f64 / t0.elapsed().as_secs_f64() / 1e9
+        };
+        let packed = time(&mut || {
             matmul(&mut c, &a, &b, m, k, n);
             std::hint::black_box(&c);
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        let gflops = flops * iters as f64 / dt / 1e9;
-        println!("  gemm {m}x{k}x{n}: {gflops:>6.2} GFLOP/s ({iters} iters)");
+        });
+        let portable = time(&mut || {
+            gemm_with_portable(
+                &mut scratch,
+                &mut c,
+                &a,
+                MatLayout::Normal,
+                &b,
+                MatLayout::Normal,
+                m,
+                k,
+                n,
+                false,
+                Epilogue::None,
+            );
+            std::hint::black_box(&c);
+        });
+        let scalar = time(&mut || {
+            scalar_baseline::matmul(&mut c, &a, &b, m, k, n);
+            std::hint::black_box(&c);
+        });
+        println!(
+            "  gemm {m}x{k}x{n}: packed {packed:>6.2} | portable {portable:>6.2} | \
+             pre-PR scalar {scalar:>6.2} GFLOP/s  ({:.2}x vs scalar, {iters} iters)",
+            packed / scalar
+        );
+        rep.num(&format!("gemm_{m}x{k}x{n}_gflops"), packed);
+        rep.num(&format!("gemm_{m}x{k}x{n}_portable_gflops"), portable);
+        rep.num(&format!("gemm_{m}x{k}x{n}_scalar_gflops"), scalar);
     }
+}
+
+fn bench_loss_grad(rep: &mut Report, smoke: bool) {
+    println!("\n-- Mlp::loss_grad — paper §C.2 784-256-128-10, batch 64 --");
+    let widths = [784usize, 256, 128, 10];
+    let model = Mlp::new(784, vec![256, 128], 10);
+    let mut rng = Pcg64::seed_from(6);
+    let params = model.init(&mut rng);
+    let batch = 64;
+    let mut x = vec![0.0f32; batch * 784];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let y: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+    let mut g_base = vec![0.0f32; model.dim()];
+    let mut g_ws = vec![0.0f32; model.dim()];
+    let mut ws = ModelWorkspace::new();
+    let iters = if smoke { 30 } else { 300 };
+
+    // Cross-check the baseline copy before timing anything.
+    let l_base = scalar_baseline::mlp_loss_grad(&widths, &params, &x, &y, &mut g_base);
+    let l_ws = model.loss_grad_ws(&params, &x, &y, &mut g_ws, &mut ws);
+    assert!(
+        (l_base - l_ws).abs() < 1e-4,
+        "baseline loss {l_base} vs workspace loss {l_ws}"
+    );
+    for (i, (a, b)) in g_base.iter().zip(&g_ws).enumerate() {
+        let denom = a.abs().max(b.abs()).max(1e-3);
+        assert!(
+            (a - b).abs() / denom < 1e-2,
+            "grad[{i}]: baseline {a} vs workspace {b}"
+        );
+    }
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(scalar_baseline::mlp_loss_grad(
+            &widths, &params, &x, &y, &mut g_base,
+        ));
+    }
+    let us_base = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(model.loss_grad_ws(&params, &x, &y, &mut g_ws, &mut ws));
+    }
+    let us_ws = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+
+    let speedup = us_base / us_ws;
+    println!(
+        "  pre-PR scalar {us_base:>8.1} µs | packed+workspace {us_ws:>8.1} µs | \
+         speedup {speedup:.2}x (target ≥2x, {iters} iters)"
+    );
+    rep.num("loss_grad_scalar_us", us_base);
+    rep.num("loss_grad_ws_us", us_ws);
+    rep.num("loss_grad_speedup", speedup);
 }
 
 fn bench_pjrt() {
@@ -298,22 +648,37 @@ fn bench_pjrt() {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke")
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke")
         || std::env::var("PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let mut rep = Report::new();
+    rep.text("kernel", linalg::kernel_name());
+    rep.text("mode", if smoke { "smoke" } else { "full" });
     if smoke {
         println!("## §Perf hot paths (smoke configuration)");
         bench_compressors(1 << 14);
         bench_aggregation(1 << 13, 32);
-        bench_engine(1 << 15, 16, 2);
+        bench_engine(&mut rep, 1 << 15, 16, 2);
         bench_golomb(1 << 14);
-        return;
+        bench_gemm(&mut rep, true);
+        bench_loss_grad(&mut rep, true);
+    } else {
+        println!("## §Perf hot paths (single core unless noted)");
+        let d = 1 << 20; // ~1M coords ≈ VGG-9-scale gradient
+        bench_compressors(d);
+        bench_aggregation(1 << 16, 100);
+        bench_engine(&mut rep, 1 << 20, 100, 2);
+        bench_golomb(1 << 20);
+        bench_gemm(&mut rep, false);
+        bench_loss_grad(&mut rep, false);
+        bench_pjrt();
     }
-    println!("## §Perf hot paths (single core unless noted)");
-    let d = 1 << 20; // ~1M coords ≈ VGG-9-scale gradient
-    bench_compressors(d);
-    bench_aggregation(1 << 16, 100);
-    bench_engine(1 << 20, 100, 2);
-    bench_golomb(1 << 20);
-    bench_gemm();
-    bench_pjrt();
+    if let Some(path) = json_path {
+        rep.write(&path);
+    }
 }

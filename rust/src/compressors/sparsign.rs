@@ -120,19 +120,34 @@ pub struct SparsignAutoCompressor {
     pub target_density: f32,
 }
 
-impl Compressor for SparsignAutoCompressor {
-    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+impl SparsignAutoCompressor {
+    /// The per-message budget `B = target·d / ‖g‖₁`, or `None` for an
+    /// all-zero gradient. The ℓ1 norm accumulates in `f64`: a plain `f32`
+    /// running sum loses low-order mass once the partial sum dwarfs the
+    /// addends (for `d ≳ 10⁶` small-magnitude gradients the drift reaches
+    /// percents), which would silently skew the derived budget — and with
+    /// it the expected uplink density — as models grow.
+    pub fn derived_budget(&self, g: &[f32]) -> Option<f32> {
         assert!(
             self.target_density > 0.0 && self.target_density <= 1.0,
             "target density must be in (0,1], got {}",
             self.target_density
         );
-        let l1: f32 = g.iter().map(|x| x.abs()).sum();
+        let l1: f64 = g.iter().map(|x| x.abs() as f64).sum();
         if l1 == 0.0 {
-            return CompressedGrad::ternary(PackedTernary::zeros(g.len(), 1.0), 0.0);
+            None
+        } else {
+            Some((self.target_density as f64 * g.len() as f64 / l1) as f32)
         }
-        let budget = self.target_density * g.len() as f32 / l1;
-        SparsignCompressor { budget }.compress(g, rng)
+    }
+}
+
+impl Compressor for SparsignAutoCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        match self.derived_budget(g) {
+            None => CompressedGrad::ternary(PackedTernary::zeros(g.len(), 1.0), 0.0),
+            Some(budget) => SparsignCompressor { budget }.compress(g, rng),
+        }
     }
 
     fn name(&self) -> String {
@@ -168,6 +183,29 @@ mod tests {
                 "scale {scale}: density {density:.4}"
             );
         }
+    }
+
+    #[test]
+    fn auto_budget_accumulates_l1_in_f64() {
+        // Adversarial mass distribution: one 16.0 head followed by 2²¹
+        // coordinates of 5e-7. In a sequential f32 sum every tiny addend
+        // rounds away (5e-7 < ulp(16)/2), stalling ‖g‖₁ at 16 and
+        // inflating the derived budget by ~6.5%; the f64 accumulator
+        // captures the full 16 + 2²¹·5e-7 ≈ 17.049.
+        let tiny = 5e-7f32;
+        let d_tail = 1usize << 21;
+        let mut g = vec![tiny; d_tail + 1];
+        g[0] = 16.0;
+        let l1_exact = 16.0f64 + d_tail as f64 * tiny as f64;
+        let c = SparsignAutoCompressor { target_density: 0.05 };
+        let budget = c.derived_budget(&g).expect("nonzero gradient") as f64;
+        let want = 0.05 * g.len() as f64 / l1_exact;
+        let rel = (budget - want).abs() / want;
+        assert!(rel < 1e-4, "budget {budget} vs exact {want} (rel {rel:.2e})");
+        // The f32-accumulated value would be ≥6% off — make sure we are
+        // nowhere near it.
+        let stalled = 0.05 * g.len() as f64 / 16.0;
+        assert!((budget - stalled).abs() / stalled > 0.05, "budget tracks the stalled f32 sum");
     }
 
     #[test]

@@ -2,12 +2,12 @@
 //! stochastic gradient, and how the server evaluates the global model.
 
 use crate::data::{Dataset, FederatedDataset};
-use crate::model::Model;
+use crate::model::{Model, ModelWorkspace};
 use crate::util::rng::Pcg64;
 
 /// A source of per-worker stochastic gradients. `&self` so the engine can
-/// fan workers out across threads; implementations allocate their scratch
-/// locally.
+/// fan workers out across threads; per-thread scratch (batch gather +
+/// model workspace) is threaded in via [`Self::sample_grad_ws`].
 pub trait GradientSource: Send + Sync {
     /// Gradient dimension `d`.
     fn dim(&self) -> usize;
@@ -15,6 +15,23 @@ pub trait GradientSource: Send + Sync {
     /// Write worker `m`'s stochastic gradient at `params` into `out`;
     /// returns the mini-batch loss.
     fn sample_grad(&self, worker: usize, params: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f32;
+
+    /// [`Self::sample_grad`] with caller-owned scratch, the round engine's
+    /// hot path: environments that assemble batches / run a model override
+    /// this to reuse `ws` (zero steady-state allocations); sources with no
+    /// intermediate state (Rosenbrock, synthetic benches) inherit the
+    /// default, which ignores `ws`.
+    fn sample_grad_ws(
+        &self,
+        worker: usize,
+        params: &[f32],
+        rng: &mut Pcg64,
+        out: &mut [f32],
+        ws: &mut ModelWorkspace,
+    ) -> f32 {
+        let _ = ws;
+        self.sample_grad(worker, params, rng, out)
+    }
 
     /// Number of workers.
     fn workers(&self) -> usize;
@@ -48,12 +65,19 @@ impl ClassifierEnv {
         batch: usize,
     ) -> Self {
         assert!(batch > 0);
-        assert_eq!(fed.workers() > 0, true);
+        assert!(fed.workers() > 0);
         Self { model, train, test, fed, batch }
     }
 
     /// Evaluate (loss, accuracy) on the test split, in chunks.
     pub fn evaluate(&self, params: &[f32]) -> (f64, f64) {
+        self.evaluate_ws(params, &mut ModelWorkspace::new())
+    }
+
+    /// [`Self::evaluate`] with caller-owned scratch: one workspace serves
+    /// every chunk (batch gather + model intermediates), so the whole
+    /// eval pass allocates nothing after warm-up.
+    pub fn evaluate_ws(&self, params: &[f32], ws: &mut ModelWorkspace) -> (f64, f64) {
         let n = self.test.len();
         assert!(n > 0, "empty test set");
         let chunk = 512usize;
@@ -61,17 +85,22 @@ impl ClassifierEnv {
         let mut acc = 0.0;
         let mut seen = 0usize;
         let mut start = 0;
+        // Move the gather scratch out so the model can borrow `ws` whole;
+        // `BatchScratch::default()` is allocation-free.
+        let mut batch = std::mem::take(&mut ws.batch);
         while start < n {
             let end = (start + chunk).min(n);
-            let idx: Vec<usize> = (start..end).collect();
-            let (bx, by) = self.test.gather(&idx);
-            let (l, a) = self.model.evaluate(params, &bx, &by);
+            batch.idx.clear();
+            batch.idx.extend(start..end);
+            self.test.gather_into(&batch.idx, &mut batch.x, &mut batch.y);
+            let (l, a) = self.model.evaluate_ws(params, &batch.x, &batch.y, ws);
             let w = end - start;
             loss += l * w as f64;
             acc += a * w as f64;
             seen += w;
             start = end;
         }
+        ws.batch = batch;
         (loss / seen as f64, acc / seen as f64)
     }
 
@@ -87,9 +116,24 @@ impl GradientSource for ClassifierEnv {
     }
 
     fn sample_grad(&self, worker: usize, params: &[f32], rng: &mut Pcg64, out: &mut [f32]) -> f32 {
-        let idx = self.fed.sample_batch(worker, self.batch, rng);
-        let (bx, by) = self.train.gather(&idx);
-        self.model.loss_grad(params, &bx, &by, out)
+        self.sample_grad_ws(worker, params, rng, out, &mut ModelWorkspace::new())
+    }
+
+    fn sample_grad_ws(
+        &self,
+        worker: usize,
+        params: &[f32],
+        rng: &mut Pcg64,
+        out: &mut [f32],
+        ws: &mut ModelWorkspace,
+    ) -> f32 {
+        let mut batch = std::mem::take(&mut ws.batch);
+        self.fed
+            .sample_batch_into(worker, self.batch, rng, &mut batch.idx);
+        self.train.gather_into(&batch.idx, &mut batch.x, &mut batch.y);
+        let loss = self.model.loss_grad_ws(params, &batch.x, &batch.y, out, ws);
+        ws.batch = batch;
+        loss
     }
 
     fn workers(&self) -> usize {
@@ -166,6 +210,30 @@ mod tests {
         assert!(loss.is_finite() && loss > 0.0);
         assert!(g.iter().any(|&v| v != 0.0));
         assert_eq!(env.workers(), 8);
+    }
+
+    #[test]
+    fn workspace_grad_path_matches_allocating_path() {
+        let env = tiny_env();
+        let mut rng = Pcg64::seed_from(9);
+        let params = env.init_params(&mut rng);
+        let mut ws = ModelWorkspace::new();
+        for w in 0..env.workers() {
+            let mut g1 = vec![0.0; env.dim()];
+            let mut g2 = vec![0.0; env.dim()];
+            let l1 = env.sample_grad(w, &params, &mut Pcg64::seed_from(100 + w as u64), &mut g1);
+            let l2 = env.sample_grad_ws(
+                w,
+                &params,
+                &mut Pcg64::seed_from(100 + w as u64),
+                &mut g2,
+                &mut ws,
+            );
+            assert_eq!(l1, l2, "worker {w}");
+            assert_eq!(g1, g2, "worker {w}");
+        }
+        // Workspace eval matches the throwaway-workspace eval bitwise.
+        assert_eq!(env.evaluate(&params), env.evaluate_ws(&params, &mut ws));
     }
 
     #[test]

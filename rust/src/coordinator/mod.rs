@@ -191,15 +191,24 @@ pub type FederatedServer = TrainingRun;
 
 /// Per-thread scratch reused across rounds — the seed engine allocated
 /// `params.clone()`, `accum` and the gradient buffer per worker per round.
+/// `model` extends this to the full worker-side hot path: batch gather,
+/// activations, deltas and GEMM packing buffers, so a steady-state
+/// `loss_grad` performs zero heap allocations (`tests/zero_alloc.rs`).
 struct WorkerScratch {
     grad: Vec<f32>,
     wm: Vec<f32>,
     accum: Vec<f32>,
+    model: crate::model::ModelWorkspace,
 }
 
 impl WorkerScratch {
     fn new(d: usize) -> Self {
-        Self { grad: vec![0.0; d], wm: vec![0.0; d], accum: vec![0.0; d] }
+        Self {
+            grad: vec![0.0; d],
+            wm: vec![0.0; d],
+            accum: vec![0.0; d],
+            model: crate::model::ModelWorkspace::new(),
+        }
     }
 }
 
@@ -265,7 +274,8 @@ impl TrainingRun {
         let mut wrng = root.derive(((t as u64) << 24) | w as u64);
         match &self.algorithm {
             Algorithm::CompressedGd { .. } => {
-                let loss = env.sample_grad(w, params, &mut wrng, &mut scratch.grad);
+                let loss =
+                    env.sample_grad_ws(w, params, &mut wrng, &mut scratch.grad, &mut scratch.model);
                 if let Some(plan) = &self.attack {
                     plan.apply(w, &mut scratch.grad, &mut wrng);
                 }
@@ -281,8 +291,13 @@ impl TrainingRun {
                 scratch.accum.fill(0.0);
                 let mut first_loss = 0.0f64;
                 for c in 0..*tau {
-                    let loss =
-                        env.sample_grad(w, &scratch.wm, &mut wrng, &mut scratch.grad);
+                    let loss = env.sample_grad_ws(
+                        w,
+                        &scratch.wm,
+                        &mut wrng,
+                        &mut scratch.grad,
+                        &mut scratch.model,
+                    );
                     if c == 0 {
                         first_loss = loss as f64;
                     }
@@ -311,8 +326,13 @@ impl TrainingRun {
                 scratch.wm.copy_from_slice(params);
                 let mut first_loss = 0.0f64;
                 for c in 0..*tau {
-                    let loss =
-                        env.sample_grad(w, &scratch.wm, &mut wrng, &mut scratch.grad);
+                    let loss = env.sample_grad_ws(
+                        w,
+                        &scratch.wm,
+                        &mut wrng,
+                        &mut scratch.grad,
+                        &mut scratch.model,
+                    );
                     if c == 0 {
                         first_loss = loss as f64;
                     }
@@ -429,7 +449,7 @@ impl TrainingRun {
                 // Shard the selected workers across scoped threads; each
                 // thread writes its contiguous slot chunk, so no result
                 // ever moves between threads out of order.
-                let chunk = (n + threads - 1) / threads;
+                let chunk = n.div_ceil(threads);
                 let params_ref: &[f32] = &params;
                 let comps_ref: &[Mutex<Box<dyn Compressor>>] = &worker_comps;
                 let root_ref = &root;

@@ -41,16 +41,43 @@ impl Dataset {
         &self.x[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Gather rows `idx` into a dense batch `(x, y)`.
-    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<usize>) {
-        let mut bx = Vec::with_capacity(idx.len() * self.dim);
-        let mut by = Vec::with_capacity(idx.len());
+    /// Gather rows `idx` into caller-provided scratch buffers (cleared,
+    /// then filled) — the allocation-free hot path behind [`Self::gather`].
+    /// Capacity is retained across calls, so steady-state batch assembly
+    /// performs zero heap allocations.
+    pub fn gather_into(&self, idx: &[usize], bx: &mut Vec<f32>, by: &mut Vec<usize>) {
+        bx.clear();
+        by.clear();
+        bx.reserve(idx.len() * self.dim);
+        by.reserve(idx.len());
         for &i in idx {
             bx.extend_from_slice(self.row(i));
             by.push(self.y[i]);
         }
+    }
+
+    /// Gather rows `idx` into a dense batch `(x, y)` (allocating
+    /// convenience wrapper over [`Self::gather_into`]).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<usize>) {
+        let mut bx = Vec::new();
+        let mut by = Vec::new();
+        self.gather_into(idx, &mut bx, &mut by);
         (bx, by)
     }
+}
+
+/// Reusable mini-batch assembly buffers (sampled indices + gathered
+/// features/labels), owned per engine thread via
+/// [`crate::model::ModelWorkspace`] so the per-round batch gather never
+/// allocates in steady state.
+#[derive(Default)]
+pub struct BatchScratch {
+    /// Sampled example indices.
+    pub idx: Vec<usize>,
+    /// Gathered `batch×dim` features.
+    pub x: Vec<f32>,
+    /// Gathered labels.
+    pub y: Vec<usize>,
 }
 
 /// A dataset split across `M` workers: shard `m` holds indices into the
@@ -68,11 +95,30 @@ impl FederatedDataset {
     }
 
     /// Sample a mini-batch (with replacement, matching the paper's
-    /// stochastic-gradient model) of `batch` indices from worker `m`.
-    pub fn sample_batch(&self, m: usize, batch: usize, rng: &mut Pcg64) -> Vec<usize> {
+    /// stochastic-gradient model) of `batch` indices from worker `m` into
+    /// a caller-provided scratch buffer (cleared, then filled). The RNG
+    /// draw sequence is identical to [`Self::sample_batch`].
+    pub fn sample_batch_into(
+        &self,
+        m: usize,
+        batch: usize,
+        rng: &mut Pcg64,
+        out: &mut Vec<usize>,
+    ) {
         let shard = &self.shards[m];
         assert!(!shard.is_empty(), "worker {m} has an empty shard");
-        (0..batch).map(|_| shard[rng.index(shard.len())]).collect()
+        out.clear();
+        out.reserve(batch);
+        for _ in 0..batch {
+            out.push(shard[rng.index(shard.len())]);
+        }
+    }
+
+    /// Allocating convenience wrapper over [`Self::sample_batch_into`].
+    pub fn sample_batch(&self, m: usize, batch: usize, rng: &mut Pcg64) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.sample_batch_into(m, batch, rng, &mut out);
+        out
     }
 
     /// Total examples across shards.
@@ -112,6 +158,22 @@ mod tests {
         assert_eq!(b.len(), 16);
         assert!(b.iter().all(|i| [0usize, 2].contains(i)));
         assert_eq!(fed.total(), 3);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_wrappers() {
+        let d = tiny();
+        let mut bx = vec![9.0f32; 1];
+        let mut by = vec![7usize; 5];
+        d.gather_into(&[2, 0], &mut bx, &mut by);
+        assert_eq!(bx, vec![4.0, 5.0, 0.0, 1.0]);
+        assert_eq!(by, vec![0, 0]);
+        // Identical RNG draw sequence: same seed ⇒ same indices.
+        let fed = FederatedDataset { shards: vec![vec![0, 1, 2]] };
+        let a = fed.sample_batch(0, 8, &mut Pcg64::seed_from(9));
+        let mut b = vec![42usize; 3];
+        fed.sample_batch_into(0, 8, &mut Pcg64::seed_from(9), &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! Linear softmax classifier — the convex substrate used for fast
 //! integration tests and the theory-validation experiments.
 
-use super::{softmax_xent_backward, softmax_xent_eval, Model};
-use crate::util::linalg::{matmul_a_bt, matmul_at_b};
+use super::{ensure_len, softmax_xent_backward, softmax_xent_eval, Model, ModelWorkspace};
+use crate::util::linalg::{gemm_with, Epilogue, MatLayout};
 use crate::util::rng::Pcg64;
 
 /// `logits = x·Wᵀ + b`, cross-entropy loss.
@@ -26,20 +26,25 @@ impl SoftmaxRegression {
         (&params[..wlen], &params[wlen..wlen + self.classes])
     }
 
-    fn logits(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<f32> {
+    /// Compute `logits = x·Wᵀ + b` into the workspace delta buffer
+    /// (bias-add fused into the GEMM store loop; zero allocations in
+    /// steady state).
+    fn logits_into(&self, params: &[f32], x: &[f32], batch: usize, ws: &mut ModelWorkspace) {
         let (w, b) = self.split(params);
-        let mut logits = vec![0.0f32; batch * self.classes];
-        // x: batch×inputs, w: classes×inputs ⇒ logits = x · wᵀ.
-        matmul_a_bt(&mut logits, x, w, batch, self.inputs, self.classes);
-        for i in 0..batch {
-            for (l, &bi) in logits[i * self.classes..(i + 1) * self.classes]
-                .iter_mut()
-                .zip(b)
-            {
-                *l += bi;
-            }
-        }
-        logits
+        ensure_len(&mut ws.delta, batch * self.classes);
+        gemm_with(
+            &mut ws.gemm,
+            &mut ws.delta,
+            x,
+            MatLayout::Normal,
+            w,
+            MatLayout::Transpose,
+            batch,
+            self.inputs,
+            self.classes,
+            false,
+            Epilogue::Bias(b),
+        );
     }
 }
 
@@ -48,31 +53,59 @@ impl Model for SoftmaxRegression {
         self.classes * self.inputs + self.classes
     }
 
-    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[usize], grad: &mut [f32]) -> f32 {
+    fn loss_grad_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[usize],
+        grad: &mut [f32],
+        ws: &mut ModelWorkspace,
+    ) -> f32 {
         assert_eq!(params.len(), self.dim());
         assert_eq!(grad.len(), self.dim());
         let batch = y.len();
         assert_eq!(x.len(), batch * self.inputs, "batch feature shape");
-        let mut dlogits = self.logits(params, x, batch);
-        let loss = softmax_xent_backward(&mut dlogits, y, self.classes);
+        self.logits_into(params, x, batch, ws);
+        let dlogits = &mut ws.delta;
+        let loss = softmax_xent_backward(dlogits, y, self.classes);
         // dW = dlogitsᵀ · x  (classes×inputs); dlogits: batch×classes.
-        grad.fill(0.0);
+        // The GEMM overwrites the weight block; only db needs clearing.
         let wlen = self.classes * self.inputs;
-        matmul_at_b(&mut grad[..wlen], &dlogits, x, self.classes, batch, self.inputs);
+        gemm_with(
+            &mut ws.gemm,
+            &mut grad[..wlen],
+            &ws.delta,
+            MatLayout::Transpose,
+            x,
+            MatLayout::Normal,
+            self.classes,
+            batch,
+            self.inputs,
+            false,
+            Epilogue::None,
+        );
         // db = column sums of dlogits.
         let db = &mut grad[wlen..];
-        for i in 0..batch {
-            for (dbj, &dl) in db.iter_mut().zip(&dlogits[i * self.classes..(i + 1) * self.classes]) {
+        db.fill(0.0);
+        for drow in ws.delta.chunks_exact(self.classes) {
+            for (dbj, &dl) in db.iter_mut().zip(drow) {
                 *dbj += dl;
             }
         }
         loss
     }
 
-    fn evaluate(&self, params: &[f32], x: &[f32], y: &[usize]) -> (f64, f64) {
+    fn evaluate_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[usize],
+        ws: &mut ModelWorkspace,
+    ) -> (f64, f64) {
         let batch = y.len();
-        let mut logits = self.logits(params, x, batch);
-        softmax_xent_eval(&mut logits, y, self.classes)
+        assert_eq!(x.len(), batch * self.inputs, "batch feature shape");
+        self.logits_into(params, x, batch, ws);
+        softmax_xent_eval(&mut ws.delta, y, self.classes)
     }
 
     fn init(&self, rng: &mut Pcg64) -> Vec<f32> {

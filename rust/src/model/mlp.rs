@@ -1,8 +1,15 @@
 //! ReLU multi-layer perceptron — the paper's §C.2 Fashion-MNIST
 //! architecture family (784-256-128-C), with arbitrary hidden widths.
+//!
+//! The forward/backward pass is built on the packed GEMM in
+//! [`crate::util::linalg`]: every layer is a single [`gemm_with`] call
+//! with the bias-add (+ ReLU) fused into the store loop, and every
+//! intermediate lives in the caller's [`ModelWorkspace`] — steady-state
+//! `loss_grad_ws` performs **zero** heap allocations (DESIGN.md §9,
+//! pinned by `tests/zero_alloc.rs`).
 
-use super::{softmax_xent_backward, softmax_xent_eval, Model};
-use crate::util::linalg::{matmul, matmul_a_bt, matmul_at_b, relu, relu_backward};
+use super::{ensure_len, softmax_xent_backward, softmax_xent_eval, Model, ModelWorkspace};
+use crate::util::linalg::{gemm_with, relu_backward, Epilogue, MatLayout};
 use crate::util::rng::Pcg64;
 
 /// Fully connected ReLU network.
@@ -44,30 +51,44 @@ impl Mlp {
         off
     }
 
-    /// Forward pass retaining activations: returns (per-layer outputs,
-    /// final logits). `acts[0]` is the input batch; `acts[l]` the
-    /// post-ReLU activation feeding layer `l`.
-    fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<Vec<f32>> {
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers() + 1);
-        acts.push(x.to_vec());
-        for l in 0..self.layers() {
+    /// Forward pass into the workspace: after the call `ws.acts[l]` holds
+    /// layer `l`'s output (`batch × widths[l+1]`, post-ReLU for hidden
+    /// layers, raw logits for the last). The input batch `x` is read in
+    /// place — no copy. Bias-add and ReLU are fused into the GEMM store.
+    fn forward_ws(&self, params: &[f32], x: &[f32], batch: usize, ws: &mut ModelWorkspace) {
+        let layers = self.layers();
+        ws.acts_for(layers);
+        let ModelWorkspace { acts, gemm, .. } = ws;
+        for l in 0..layers {
             let (in_w, out_w) = (self.widths[l], self.widths[l + 1]);
             let off = self.layer_offset(l);
             let w = &params[off..off + out_w * in_w];
             let b = &params[off + out_w * in_w..off + out_w * in_w + out_w];
-            let mut h = vec![0.0f32; batch * out_w];
-            matmul_a_bt(&mut h, &acts[l], w, batch, in_w, out_w);
-            for i in 0..batch {
-                for (v, &bj) in h[i * out_w..(i + 1) * out_w].iter_mut().zip(b) {
-                    *v += bj;
-                }
-            }
-            if l + 1 < self.layers() {
-                relu(&mut h);
-            }
-            acts.push(h);
+            let (done, rest) = acts.split_at_mut(l);
+            let h = &mut rest[0];
+            ensure_len(h, batch * out_w);
+            let input: &[f32] = if l == 0 { x } else { &done[l - 1] };
+            let epilogue = if l + 1 < layers {
+                Epilogue::BiasRelu(b)
+            } else {
+                Epilogue::Bias(b)
+            };
+            // h = input · Wᵀ (+ b, ReLU): W is stored out×in row-major,
+            // i.e. the transpose of the logical in×out operand.
+            gemm_with(
+                gemm,
+                h,
+                input,
+                MatLayout::Normal,
+                w,
+                MatLayout::Transpose,
+                batch,
+                in_w,
+                out_w,
+                false,
+                epilogue,
+            );
         }
-        acts
     }
 }
 
@@ -76,55 +97,92 @@ impl Model for Mlp {
         self.layer_offset(self.layers())
     }
 
-    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[usize], grad: &mut [f32]) -> f32 {
+    fn loss_grad_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[usize],
+        grad: &mut [f32],
+        ws: &mut ModelWorkspace,
+    ) -> f32 {
         assert_eq!(params.len(), self.dim());
         assert_eq!(grad.len(), self.dim());
         let batch = y.len();
         assert_eq!(x.len(), batch * self.widths[0], "batch feature shape");
-        let mut acts = self.forward(params, x, batch);
+        self.forward_ws(params, x, batch, ws);
         let classes = self.classes();
-        // Softmax-CE backward on the logits (the last activation).
-        let mut delta = acts.pop().unwrap(); // batch×classes
-        let loss = softmax_xent_backward(&mut delta, y, classes);
-        grad.fill(0.0);
-        // Backprop through layers (last to first).
-        for l in (0..self.layers()).rev() {
+        let layers = self.layers();
+        // Softmax-CE backward on a copy of the logits (the activations
+        // stay intact for the ReLU masks below).
+        ws.delta.clear();
+        ws.delta.extend_from_slice(&ws.acts[layers - 1]);
+        let loss = softmax_xent_backward(&mut ws.delta, y, classes);
+        let ModelWorkspace { acts, delta, delta2, gemm, .. } = ws;
+        // Backprop through layers (last to first). Weight blocks are
+        // overwritten by the GEMM (no full-`d` grad zeroing needed);
+        // only the small bias blocks are cleared explicitly.
+        for l in (0..layers).rev() {
             let (in_w, out_w) = (self.widths[l], self.widths[l + 1]);
             let off = self.layer_offset(l);
-            let a_in = &acts[l]; // batch×in_w (post-ReLU of previous layer)
-            // dW = deltaᵀ · a_in  (out×in).
-            matmul_at_b(
+            let a_in: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            // dW = deltaᵀ · a_in (out×in); delta is stored batch×out.
+            gemm_with(
+                gemm,
                 &mut grad[off..off + out_w * in_w],
-                &delta,
+                delta,
+                MatLayout::Transpose,
                 a_in,
+                MatLayout::Normal,
                 out_w,
                 batch,
                 in_w,
+                false,
+                Epilogue::None,
             );
             // db = column sums of delta.
             let db = &mut grad[off + out_w * in_w..off + out_w * in_w + out_w];
-            for i in 0..batch {
-                for (dbj, &dl) in db.iter_mut().zip(&delta[i * out_w..(i + 1) * out_w]) {
+            db.fill(0.0);
+            for drow in delta.chunks_exact(out_w) {
+                for (dbj, &dl) in db.iter_mut().zip(drow) {
                     *dbj += dl;
                 }
             }
             if l > 0 {
                 // delta_prev = delta · W, masked by ReLU'(a_in).
                 let w = &params[off..off + out_w * in_w];
-                let mut prev = vec![0.0f32; batch * in_w];
-                matmul(&mut prev, &delta, w, batch, out_w, in_w);
-                relu_backward(&mut prev, a_in);
-                delta = prev;
+                ensure_len(delta2, batch * in_w);
+                gemm_with(
+                    gemm,
+                    delta2,
+                    delta,
+                    MatLayout::Normal,
+                    w,
+                    MatLayout::Normal,
+                    batch,
+                    out_w,
+                    in_w,
+                    false,
+                    Epilogue::None,
+                );
+                relu_backward(delta2, a_in);
+                std::mem::swap(delta, delta2);
             }
         }
         loss
     }
 
-    fn evaluate(&self, params: &[f32], x: &[f32], y: &[usize]) -> (f64, f64) {
+    fn evaluate_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[usize],
+        ws: &mut ModelWorkspace,
+    ) -> (f64, f64) {
         let batch = y.len();
-        let acts = self.forward(params, x, batch);
-        let mut logits = acts.last().unwrap().clone();
-        softmax_xent_eval(&mut logits, y, self.classes())
+        assert_eq!(x.len(), batch * self.widths[0], "batch feature shape");
+        self.forward_ws(params, x, batch, ws);
+        let logits = &mut ws.acts[self.layers() - 1];
+        softmax_xent_eval(logits, y, self.classes())
     }
 
     fn init(&self, rng: &mut Pcg64) -> Vec<f32> {
@@ -190,6 +248,48 @@ mod tests {
     }
 
     #[test]
+    fn workspace_reuse_is_consistent_across_batch_shapes() {
+        // One workspace serving alternating batch sizes and repeated calls
+        // must agree bitwise with throwaway-workspace calls.
+        let m = Mlp::new(9, vec![11, 5], 4);
+        let mut rng = Pcg64::seed_from(17);
+        let params = m.init(&mut rng);
+        let mut ws = ModelWorkspace::new();
+        for &batch in &[6usize, 2, 6, 13, 1, 6] {
+            let mut x = vec![0.0; batch * 9];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let y: Vec<usize> = (0..batch).map(|i| i % 4).collect();
+            let mut g_ws = vec![0.0; m.dim()];
+            let mut g_fresh = vec![0.0; m.dim()];
+            let l_ws = m.loss_grad_ws(&params, &x, &y, &mut g_ws, &mut ws);
+            let l_fresh = m.loss_grad(&params, &x, &y, &mut g_fresh);
+            assert_eq!(l_ws, l_fresh, "batch {batch}");
+            assert_eq!(g_ws, g_fresh, "batch {batch}");
+            let e_ws = m.evaluate_ws(&params, &x, &y, &mut ws);
+            let e_fresh = m.evaluate(&params, &x, &y);
+            assert_eq!(e_ws, e_fresh, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn stale_grad_buffer_is_fully_overwritten() {
+        // loss_grad no longer zeroes the whole grad vector up front; every
+        // coordinate must still be written (weights via overwriting GEMM,
+        // biases via the explicit clear).
+        let m = Mlp::new(5, vec![7], 3);
+        let mut rng = Pcg64::seed_from(18);
+        let params = m.init(&mut rng);
+        let mut x = vec![0.0; 4 * 5];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let y = vec![0, 1, 2, 0];
+        let mut g_clean = vec![0.0; m.dim()];
+        m.loss_grad(&params, &x, &y, &mut g_clean);
+        let mut g_dirty = vec![1e9f32; m.dim()];
+        m.loss_grad(&params, &x, &y, &mut g_dirty);
+        assert_eq!(g_clean, g_dirty);
+    }
+
+    #[test]
     fn learns_xor_style_task() {
         // Non-linearly-separable data: MLP must beat a linear model.
         let m = Mlp::new(2, vec![16], 2);
@@ -205,8 +305,9 @@ mod tests {
             y.push(if (a > 0.0) != (b > 0.0) { 1 } else { 0 });
         }
         let mut grad = vec![0.0; m.dim()];
+        let mut ws = ModelWorkspace::new();
         for _ in 0..800 {
-            m.loss_grad(&params, &x, &y, &mut grad);
+            m.loss_grad_ws(&params, &x, &y, &mut grad, &mut ws);
             for (p, g) in params.iter_mut().zip(&grad) {
                 *p -= 0.5 * g;
             }

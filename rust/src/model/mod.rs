@@ -21,7 +21,59 @@ pub mod rosenbrock;
 pub use linear::SoftmaxRegression;
 pub use mlp::Mlp;
 
+use crate::data::BatchScratch;
+use crate::util::linalg::GemmScratch;
 use crate::util::rng::Pcg64;
+
+/// Reusable buffers for a model's forward/backward pass, owned per engine
+/// thread (embedded in the coordinator's `WorkerScratch`) so the
+/// steady-state training hot path performs **zero heap allocations**: all
+/// buffers grow to their high-water mark on the first call and are reused
+/// verbatim afterwards (`tests/zero_alloc.rs` pins this with a counting
+/// allocator).
+///
+/// Fields are public so `Model` impls can split-borrow them (activations
+/// immutably while the GEMM scratch is borrowed mutably); none of the
+/// model methods touch `batch`, which belongs to the environment layer's
+/// mini-batch gather (`ClassifierEnv::sample_grad_ws`).
+#[derive(Default)]
+pub struct ModelWorkspace {
+    /// Per-layer forward activations: `acts[l]` is layer `l`'s output
+    /// (`batch × widths[l+1]`); the input batch is borrowed, never copied.
+    pub acts: Vec<Vec<f32>>,
+    /// Backprop delta for the current layer.
+    pub delta: Vec<f32>,
+    /// Backprop delta for the next-lower layer (swapped with `delta`).
+    pub delta2: Vec<f32>,
+    /// GEMM packing buffers (see [`crate::util::linalg::gemm_with`]).
+    pub gemm: GemmScratch,
+    /// Mini-batch sampling/gather scratch for the environment layer.
+    pub batch: BatchScratch,
+}
+
+impl ModelWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure `acts` holds at least `layers` buffers and return them.
+    pub fn acts_for(&mut self, layers: usize) -> &mut Vec<Vec<f32>> {
+        while self.acts.len() < layers {
+            self.acts.push(Vec::new());
+        }
+        &mut self.acts
+    }
+}
+
+/// Resize a workspace buffer to `len` without shrinking capacity (and
+/// without the redundant zero-fill when the length already matches — the
+/// caller overwrites every element).
+#[inline]
+pub(crate) fn ensure_len(v: &mut Vec<f32>, len: usize) {
+    if v.len() != len {
+        v.resize(len, 0.0);
+    }
+}
 
 /// A differentiable supervised model over flat parameters.
 pub trait Model: Send + Sync {
@@ -30,11 +82,37 @@ pub trait Model: Send + Sync {
 
     /// Compute mean loss over the batch and write the gradient into
     /// `grad` (overwritten, not accumulated). `x` is `batch×in_dim`
-    /// row-major, `y` the labels.
-    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[usize], grad: &mut [f32]) -> f32;
+    /// row-major, `y` the labels. All intermediate buffers come from
+    /// `ws`; after warm-up the call performs no heap allocation.
+    fn loss_grad_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[usize],
+        grad: &mut [f32],
+        ws: &mut ModelWorkspace,
+    ) -> f32;
 
-    /// Mean loss + accuracy on a dataset slice (no gradient).
-    fn evaluate(&self, params: &[f32], x: &[f32], y: &[usize]) -> (f64, f64);
+    /// Mean loss + accuracy on a dataset slice (no gradient), using `ws`
+    /// for intermediates.
+    fn evaluate_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[usize],
+        ws: &mut ModelWorkspace,
+    ) -> (f64, f64);
+
+    /// [`Self::loss_grad_ws`] with a throwaway workspace — convenience
+    /// wrapper for tests/examples off the hot path.
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[usize], grad: &mut [f32]) -> f32 {
+        self.loss_grad_ws(params, x, y, grad, &mut ModelWorkspace::new())
+    }
+
+    /// [`Self::evaluate_ws`] with a throwaway workspace.
+    fn evaluate(&self, params: &[f32], x: &[f32], y: &[usize]) -> (f64, f64) {
+        self.evaluate_ws(params, x, y, &mut ModelWorkspace::new())
+    }
 
     /// Initialize parameters.
     fn init(&self, rng: &mut Pcg64) -> Vec<f32>;
@@ -102,20 +180,31 @@ impl ModelKind {
 ///
 /// `logits` is `batch×classes` and is replaced in-place by
 /// `∂loss/∂logits = (softmax - onehot)/batch`; returns the mean CE loss.
+///
+/// Fused per row: stabilized max, exp+sum, then a single normalize pass
+/// that folds the softmax `1/Σ` and the `1/batch` gradient scale together
+/// — three passes over the logits instead of the former five.
 pub(crate) fn softmax_xent_backward(logits: &mut [f32], y: &[usize], classes: usize) -> f32 {
     let batch = y.len();
     debug_assert_eq!(logits.len(), batch * classes);
-    crate::util::linalg::softmax_rows(logits, batch, classes);
     let mut loss = 0.0f64;
     let inv_b = 1.0 / batch as f32;
     for (i, &yi) in y.iter().enumerate() {
         debug_assert!(yi < classes);
-        let p = logits[i * classes + yi].max(1e-12);
-        loss -= (p as f64).ln();
-        // dlogits = (softmax - onehot)/batch
         let row = &mut logits[i * classes..(i + 1) * classes];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
         for v in row.iter_mut() {
-            *v *= inv_b;
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        let p = (row[yi] * inv).max(1e-12);
+        loss -= (p as f64).ln();
+        // dlogits = (softmax - onehot)/batch, normalization fused in.
+        let s = inv * inv_b;
+        for v in row.iter_mut() {
+            *v *= s;
         }
         row[yi] -= inv_b;
     }

@@ -7,7 +7,7 @@
 
 use super::error::{rt_ensure, rt_err, RtResult};
 use super::manifest::ArtifactRegistry;
-use crate::model::Model;
+use crate::model::{Model, ModelWorkspace};
 use crate::util::rng::Pcg64;
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -201,7 +201,17 @@ impl Model for HloModel {
         self.dim
     }
 
-    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[usize], grad: &mut [f32]) -> f32 {
+    // The workspace is unused here: PJRT owns its device buffers, and the
+    // literal round-trips below allocate by necessity (the zero-allocation
+    // contract applies to the pure-rust models only).
+    fn loss_grad_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[usize],
+        grad: &mut [f32],
+        _ws: &mut ModelWorkspace,
+    ) -> f32 {
         assert_eq!(params.len(), self.dim);
         assert_eq!(
             y.len(),
@@ -229,7 +239,13 @@ impl Model for HloModel {
         loss
     }
 
-    fn evaluate(&self, params: &[f32], x: &[f32], y: &[usize]) -> (f64, f64) {
+    fn evaluate_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[usize],
+        _ws: &mut ModelWorkspace,
+    ) -> (f64, f64) {
         let n = y.len();
         assert!(n > 0);
         let name = format!("{}_logits", self.stem);

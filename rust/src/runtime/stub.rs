@@ -12,7 +12,7 @@
 
 use super::error::{rt_ensure, rt_err, RtResult};
 use super::manifest::ArtifactRegistry;
-use crate::model::Model;
+use crate::model::{Model, ModelWorkspace};
 use crate::util::rng::Pcg64;
 use std::path::Path;
 
@@ -147,11 +147,24 @@ impl Model for HloModel {
         match self.never {}
     }
 
-    fn loss_grad(&self, _p: &[f32], _x: &[f32], _y: &[usize], _g: &mut [f32]) -> f32 {
+    fn loss_grad_ws(
+        &self,
+        _p: &[f32],
+        _x: &[f32],
+        _y: &[usize],
+        _g: &mut [f32],
+        _ws: &mut ModelWorkspace,
+    ) -> f32 {
         match self.never {}
     }
 
-    fn evaluate(&self, _p: &[f32], _x: &[f32], _y: &[usize]) -> (f64, f64) {
+    fn evaluate_ws(
+        &self,
+        _p: &[f32],
+        _x: &[f32],
+        _y: &[usize],
+        _ws: &mut ModelWorkspace,
+    ) -> (f64, f64) {
         match self.never {}
     }
 

@@ -2,163 +2,536 @@
 //!
 //! The federated simulation runs every selected worker's forward/backward
 //! pass on the CPU each round, so the GEMMs here are the single hottest
-//! code path outside the compressors. The implementation is a
-//! cache-blocked, 4×4-register-tiled kernel over row-major `f32` — see
-//! EXPERIMENTS.md §Perf for the measured before/after of each optimization
-//! step.
+//! code path outside the compressors. The implementation is a BLIS-style
+//! packed, register-tiled kernel over row-major `f32`:
+//!
+//! * operands are packed into contiguous `KC×MR` / `KC×NR` panels
+//!   (zero-padded at the edges, so the microkernel never branches on
+//!   remainders), which also absorbs transposed layouts — the same
+//!   microkernel serves `A·B`, `Aᵀ·B` and `A·Bᵀ`;
+//! * the 6×16 microkernel keeps twelve 8-wide FMA accumulator chains live;
+//!   an explicit AVX2+FMA path is selected once per process via
+//!   `is_x86_feature_detected!` with a portable autovectorizable fallback
+//!   (see [`kernel_name`]);
+//! * the store loop optionally fuses a bias-add (+ ReLU) epilogue on the
+//!   final k-block, so an MLP layer makes a single pass over its output.
+//!
+//! Determinism contract (DESIGN.md §9): results are a pure function of the
+//! inputs and the selected microkernel. The kernel choice is fixed for the
+//! life of the process, so training runs are bit-identical across thread
+//! counts and replays on the same machine/build; AVX2 (fused
+//! multiply-add) and the portable path may differ by normal fp tolerance.
 
-/// Row-major matrix view helpers operate on plain `&[f32]` so model
-/// parameters can live in one flat vector (required by the compressors,
-/// which treat the gradient as a single `d`-dimensional vector).
+use std::cell::RefCell;
+use std::sync::OnceLock;
 
-/// `c[m×n] += a[m×k] · b[k×n]`, all row-major.
-pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+/// Microkernel rows: independent FMA accumulator chains per vector lane.
+const MR: usize = 6;
+/// Microkernel columns: two 8-wide f32 vectors.
+const NR: usize = 16;
+/// Rows of A packed per block (multiple of MR).
+const MC: usize = 96;
+/// Depth (k) packed per block.
+const KC: usize = 256;
+/// Columns of B packed per block (multiple of NR).
+const NC: usize = 256;
+
+/// How an operand's logical matrix is stored.
+///
+/// `Normal`: the logical `r×c` matrix is stored row-major as given.
+/// `Transpose`: the buffer holds the *transpose* (`c×r` row-major), i.e.
+/// logical element `(i, j)` lives at `buf[j * r + i]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatLayout {
+    Normal,
+    Transpose,
+}
+
+/// Optional operation fused into the GEMM store loop on the final
+/// k-block, saving a separate pass over the `m×n` output.
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue<'a> {
+    /// Plain store.
+    None,
+    /// `c[i, j] += bias[j]`.
+    Bias(&'a [f32]),
+    /// `c[i, j] = max(0, c[i, j] + bias[j])`.
+    BiasRelu(&'a [f32]),
+}
+
+/// Reusable packing buffers for [`gemm_with`]. Sized lazily to the fixed
+/// `MC×KC` / `KC×NC` block maxima, so steady-state calls allocate nothing.
+#[derive(Default)]
+pub struct GemmScratch {
+    packed_a: Vec<f32>,
+    packed_b: Vec<f32>,
+}
+
+impl GemmScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// `acc[i*NR + j] = Σ_p a_panel[p*MR + i] · b_panel[p*NR + j]` — panels
+/// are the packed (zero-padded) strips, `acc` is an `MR×NR` scratch tile.
+type Microkernel = unsafe fn(usize, *const f32, *const f32, *mut f32);
+
+/// Portable microkernel: fixed-trip inner loops over `[f32; NR]` lanes
+/// that LLVM autovectorizes on every target.
+///
+/// # Safety
+/// `a` must point at `kc*MR` floats, `b` at `kc*NR`, `acc` at `MR*NR`.
+unsafe fn microkernel_portable(kc: usize, a: *const f32, b: *const f32, acc: *mut f32) {
+    let (a, b, acc) = unsafe {
+        (
+            std::slice::from_raw_parts(a, kc * MR),
+            std::slice::from_raw_parts(b, kc * NR),
+            std::slice::from_raw_parts_mut(acc, MR * NR),
+        )
+    };
+    let mut c = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let ar = &a[p * MR..p * MR + MR];
+        let br = &b[p * NR..p * NR + NR];
+        for (ci, &ai) in c.iter_mut().zip(ar) {
+            for (cj, &bj) in ci.iter_mut().zip(br) {
+                *cj += ai * bj;
+            }
+        }
+    }
+    for (i, ci) in c.iter().enumerate() {
+        acc[i * NR..(i + 1) * NR].copy_from_slice(ci);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// AVX2+FMA 6×16 microkernel: 12 ymm accumulators, 2 B loads and one
+    /// A broadcast per k step.
+    ///
+    /// # Safety
+    /// Caller must have verified `avx2` + `fma` at runtime; pointer
+    /// contracts as in `microkernel_portable`.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn microkernel_avx2(kc: usize, a: *const f32, b: *const f32, acc: *mut f32) {
+        unsafe {
+            let mut c: [[__m256; 2]; MR] = [[_mm256_setzero_ps(); 2]; MR];
+            let mut ap = a;
+            let mut bp = b;
+            for _ in 0..kc {
+                let b0 = _mm256_loadu_ps(bp);
+                let b1 = _mm256_loadu_ps(bp.add(8));
+                for (i, ci) in c.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(*ap.add(i));
+                    ci[0] = _mm256_fmadd_ps(av, b0, ci[0]);
+                    ci[1] = _mm256_fmadd_ps(av, b1, ci[1]);
+                }
+                ap = ap.add(MR);
+                bp = bp.add(NR);
+            }
+            for (i, ci) in c.iter().enumerate() {
+                _mm256_storeu_ps(acc.add(i * NR), ci[0]);
+                _mm256_storeu_ps(acc.add(i * NR + 8), ci[1]);
+            }
+        }
+    }
+}
+
+fn detect_kernel() -> (Microkernel, &'static str) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return (x86::microkernel_avx2 as Microkernel, "avx2+fma 6x16");
+        }
+    }
+    (microkernel_portable as Microkernel, "portable 6x16")
+}
+
+fn active_kernel() -> (Microkernel, &'static str) {
+    static KERNEL: OnceLock<(Microkernel, &'static str)> = OnceLock::new();
+    *KERNEL.get_or_init(detect_kernel)
+}
+
+/// Name of the microkernel selected for this process (for bench logs).
+pub fn kernel_name() -> &'static str {
+    active_kernel().1
+}
+
+/// Pack the `ib×pb` block of logical `A` starting at `(i0, p0)` into
+/// MR-row strips `[p*MR + i]`, zero-padded to full strips.
+fn pack_a(
+    dst: &mut Vec<f32>,
+    a: &[f32],
+    la: MatLayout,
+    m: usize,
+    k: usize,
+    i0: usize,
+    p0: usize,
+    ib: usize,
+    pb: usize,
+) {
+    let strips = ib.div_ceil(MR);
+    dst.clear();
+    dst.resize(strips * MR * pb, 0.0);
+    for s in 0..strips {
+        let base = s * MR * pb;
+        let rows = MR.min(ib - s * MR);
+        match la {
+            MatLayout::Normal => {
+                for i in 0..rows {
+                    let src = &a[(i0 + s * MR + i) * k + p0..][..pb];
+                    for (p, &v) in src.iter().enumerate() {
+                        dst[base + p * MR + i] = v;
+                    }
+                }
+            }
+            MatLayout::Transpose => {
+                for p in 0..pb {
+                    let src = &a[(p0 + p) * m + i0 + s * MR..][..rows];
+                    dst[base + p * MR..base + p * MR + rows].copy_from_slice(src);
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `pb×jb` block of logical `B` starting at `(p0, j0)` into
+/// NR-column strips `[p*NR + j]`, zero-padded to full strips.
+fn pack_b(
+    dst: &mut Vec<f32>,
+    b: &[f32],
+    lb: MatLayout,
+    k: usize,
+    n: usize,
+    p0: usize,
+    j0: usize,
+    pb: usize,
+    jb: usize,
+) {
+    let strips = jb.div_ceil(NR);
+    dst.clear();
+    dst.resize(strips * NR * pb, 0.0);
+    for s in 0..strips {
+        let base = s * NR * pb;
+        let cols = NR.min(jb - s * NR);
+        match lb {
+            MatLayout::Normal => {
+                for p in 0..pb {
+                    let src = &b[(p0 + p) * n + j0 + s * NR..][..cols];
+                    dst[base + p * NR..base + p * NR + cols].copy_from_slice(src);
+                }
+            }
+            MatLayout::Transpose => {
+                for j in 0..cols {
+                    let src = &b[(j0 + s * NR + j) * k + p0..][..pb];
+                    for (p, &v) in src.iter().enumerate() {
+                        dst[base + p * NR + j] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Write one `rows×cols` microtile into `c`, optionally accumulating the
+/// previous contents and applying the epilogue on the final k-block.
+#[inline]
+fn store_tile(
+    c: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    rows: usize,
+    cols: usize,
+    acc: &[f32; MR * NR],
+    add_prev: bool,
+    finalize: bool,
+    epilogue: Epilogue<'_>,
+) {
+    for i in 0..rows {
+        let off = (row0 + i) * n + col0;
+        let crow = &mut c[off..off + cols];
+        let arow = &acc[i * NR..i * NR + cols];
+        if add_prev {
+            for (cv, &av) in crow.iter_mut().zip(arow) {
+                *cv += av;
+            }
+        } else {
+            crow.copy_from_slice(arow);
+        }
+        if finalize {
+            match epilogue {
+                Epilogue::None => {}
+                Epilogue::Bias(bias) => {
+                    for (cv, &bv) in crow.iter_mut().zip(&bias[col0..col0 + cols]) {
+                        *cv += bv;
+                    }
+                }
+                Epilogue::BiasRelu(bias) => {
+                    for (cv, &bv) in crow.iter_mut().zip(&bias[col0..col0 + cols]) {
+                        let v = *cv + bv;
+                        *cv = if v > 0.0 { v } else { 0.0 };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Apply `epilogue` to all of `c` — the degenerate `k == 0` path where no
+/// microtile is ever stored.
+fn epilogue_only(c: &mut [f32], n: usize, epilogue: Epilogue<'_>) {
+    match epilogue {
+        Epilogue::None => {}
+        Epilogue::Bias(bias) => {
+            for crow in c.chunks_exact_mut(n) {
+                for (cv, &bv) in crow.iter_mut().zip(bias) {
+                    *cv += bv;
+                }
+            }
+        }
+        Epilogue::BiasRelu(bias) => {
+            for crow in c.chunks_exact_mut(n) {
+                for (cv, &bv) in crow.iter_mut().zip(bias) {
+                    let v = *cv + bv;
+                    *cv = if v > 0.0 { v } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+fn gemm_dispatch(
+    scratch: &mut GemmScratch,
+    c: &mut [f32],
+    a: &[f32],
+    la: MatLayout,
+    b: &[f32],
+    lb: MatLayout,
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+    epilogue: Epilogue<'_>,
+    kernel: Microkernel,
+) {
     assert_eq!(a.len(), m * k, "a shape");
     assert_eq!(b.len(), k * n, "b shape");
     assert_eq!(c.len(), m * n, "c shape");
-    // Cache blocking parameters tuned on the target core (see §Perf).
-    const MC: usize = 64;
-    const KC: usize = 256;
-    const NC: usize = 256;
-    let mut i0 = 0;
-    while i0 < m {
-        let ib = MC.min(m - i0);
+    if let Epilogue::Bias(bias) | Epilogue::BiasRelu(bias) = epilogue {
+        assert_eq!(bias.len(), n, "bias shape");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            c.fill(0.0);
+        }
+        epilogue_only(c, n, epilogue);
+        return;
+    }
+    let mut acc = [0.0f32; MR * NR];
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = NC.min(n - j0);
+        let jstrips = jb.div_ceil(NR);
         let mut p0 = 0;
         while p0 < k {
             let pb = KC.min(k - p0);
-            let mut j0 = 0;
-            while j0 < n {
-                let jb = NC.min(n - j0);
-                block_kernel(c, a, b, m, k, n, i0, p0, j0, ib, pb, jb);
-                j0 += NC;
+            pack_b(&mut scratch.packed_b, b, lb, k, n, p0, j0, pb, jb);
+            let add_prev = accumulate || p0 > 0;
+            let finalize = p0 + pb == k;
+            let mut i0 = 0;
+            while i0 < m {
+                let ib = MC.min(m - i0);
+                let istrips = ib.div_ceil(MR);
+                pack_a(&mut scratch.packed_a, a, la, m, k, i0, p0, ib, pb);
+                for js in 0..jstrips {
+                    let jr = j0 + js * NR;
+                    let cols = NR.min(jb - js * NR);
+                    let bpan = &scratch.packed_b[js * NR * pb..][..NR * pb];
+                    for is in 0..istrips {
+                        let ir = i0 + is * MR;
+                        let rows = MR.min(ib - is * MR);
+                        let apan = &scratch.packed_a[is * MR * pb..][..MR * pb];
+                        // SAFETY: panels hold pb*MR / pb*NR packed floats
+                        // (asserted by the slice bounds above) and `acc`
+                        // is an MR×NR tile; the kernel was selected by
+                        // `active_kernel` (CPU features verified) or is
+                        // the portable fallback.
+                        unsafe {
+                            kernel(pb, apan.as_ptr(), bpan.as_ptr(), acc.as_mut_ptr());
+                        }
+                        store_tile(c, n, ir, jr, rows, cols, &acc, add_prev, finalize, epilogue);
+                    }
+                }
+                i0 += MC;
             }
             p0 += KC;
         }
-        i0 += MC;
+        j0 += NC;
     }
+}
+
+/// General packed GEMM: `c[m×n] (+)= op(a) · op(b)` with an optional
+/// fused epilogue, using caller-owned packing scratch (zero steady-state
+/// allocations). `la`/`lb` select the logical layout of each operand —
+/// `a` is logically `m×k`, `b` logically `k×n` regardless of layout.
+pub fn gemm_with(
+    scratch: &mut GemmScratch,
+    c: &mut [f32],
+    a: &[f32],
+    la: MatLayout,
+    b: &[f32],
+    lb: MatLayout,
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+    epilogue: Epilogue<'_>,
+) {
+    let (kernel, _) = active_kernel();
+    gemm_dispatch(scratch, c, a, la, b, lb, m, k, n, accumulate, epilogue, kernel);
+}
+
+/// [`gemm_with`] pinned to the portable (non-SIMD) microkernel — used by
+/// the property tests and the perf bench to compare dispatch paths.
+#[doc(hidden)]
+pub fn gemm_with_portable(
+    scratch: &mut GemmScratch,
+    c: &mut [f32],
+    a: &[f32],
+    la: MatLayout,
+    b: &[f32],
+    lb: MatLayout,
+    m: usize,
+    k: usize,
+    n: usize,
+    accumulate: bool,
+    epilogue: Epilogue<'_>,
+) {
+    gemm_dispatch(
+        scratch,
+        c,
+        a,
+        la,
+        b,
+        lb,
+        m,
+        k,
+        n,
+        accumulate,
+        epilogue,
+        microkernel_portable as Microkernel,
+    );
+}
+
+thread_local! {
+    /// Packing scratch for the legacy fixed-signature wrappers below, so
+    /// call sites that do not thread a [`GemmScratch`] stay allocation-free
+    /// in steady state too.
+    static TLS_SCRATCH: RefCell<GemmScratch> = RefCell::new(GemmScratch::new());
+}
+
+fn with_tls_scratch(f: impl FnOnce(&mut GemmScratch)) {
+    TLS_SCRATCH.with(|s| f(&mut s.borrow_mut()));
+}
+
+/// `c[m×n] += a[m×k] · b[k×n]`, all row-major.
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    with_tls_scratch(|s| {
+        gemm_with(
+            s,
+            c,
+            a,
+            MatLayout::Normal,
+            b,
+            MatLayout::Normal,
+            m,
+            k,
+            n,
+            true,
+            Epilogue::None,
+        )
+    });
 }
 
 /// `c = a · b` (overwrites `c`).
 pub fn matmul(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    c.fill(0.0);
-    matmul_acc(c, a, b, m, k, n);
-}
-
-#[allow(clippy::too_many_arguments)]
-#[inline]
-fn block_kernel(
-    c: &mut [f32],
-    a: &[f32],
-    b: &[f32],
-    _m: usize,
-    k: usize,
-    n: usize,
-    i0: usize,
-    p0: usize,
-    j0: usize,
-    ib: usize,
-    pb: usize,
-    jb: usize,
-) {
-    // §Perf: 4-row register tile so the inner p-loop keeps 4 independent
-    // FMA chains per vector lane; the rows are provably disjoint slices of
-    // `c`, materialized via raw pointers to avoid per-p split_at_mut
-    // shuffling (see EXPERIMENTS.md §Perf for the measured deltas).
-    let mut i = 0;
-    let cptr = c.as_mut_ptr();
-    while i + 4 <= ib {
-        let r0 = (i0 + i) * k + p0;
-        let r1 = r0 + k;
-        let r2 = r1 + k;
-        let r3 = r2 + k;
-        // SAFETY: the four row ranges [(i0+i+r)·n + j0, +jb) are disjoint
-        // (distinct rows of an m×n matrix, jb ≤ n) and in-bounds.
-        let (t0, t1, t2, t3) = unsafe {
-            (
-                std::slice::from_raw_parts_mut(cptr.add((i0 + i) * n + j0), jb),
-                std::slice::from_raw_parts_mut(cptr.add((i0 + i + 1) * n + j0), jb),
-                std::slice::from_raw_parts_mut(cptr.add((i0 + i + 2) * n + j0), jb),
-                std::slice::from_raw_parts_mut(cptr.add((i0 + i + 3) * n + j0), jb),
-            )
-        };
-        for p in 0..pb {
-            let a0 = a[r0 + p];
-            let a1 = a[r1 + p];
-            let a2 = a[r2 + p];
-            let a3 = a[r3 + p];
-            let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jb];
-            for j in 0..jb {
-                let bv = brow[j];
-                t0[j] += a0 * bv;
-                t1[j] += a1 * bv;
-                t2[j] += a2 * bv;
-                t3[j] += a3 * bv;
-            }
-        }
-        i += 4;
-    }
-    while i < ib {
-        let ra = (i0 + i) * k + p0;
-        let rc = (i0 + i) * n + j0;
-        for p in 0..pb {
-            let a0 = a[ra + p];
-            let brow = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jb];
-            let crow = &mut c[rc..rc + jb];
-            for j in 0..jb {
-                crow[j] += a0 * brow[j];
-            }
-        }
-        i += 1;
-    }
+    with_tls_scratch(|s| {
+        gemm_with(
+            s,
+            c,
+            a,
+            MatLayout::Normal,
+            b,
+            MatLayout::Normal,
+            m,
+            k,
+            n,
+            false,
+            Epilogue::None,
+        )
+    });
 }
 
 /// `c[m×n] += aᵀ[m×k] · b[k×n]` where `a` is stored `k×m` row-major
 /// (i.e. we multiply by the transpose of `a` without materializing it).
 pub fn matmul_at_b(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), k * m, "aᵀ shape");
-    assert_eq!(b.len(), k * n, "b shape");
-    assert_eq!(c.len(), m * n, "c shape");
-    // aᵀ·b: iterate p over k in the outer loop so both a and b stream
-    // row-major; accumulates into c.
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for i in 0..m {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..i * n + n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
+    with_tls_scratch(|s| {
+        gemm_with(
+            s,
+            c,
+            a,
+            MatLayout::Transpose,
+            b,
+            MatLayout::Normal,
+            m,
+            k,
+            n,
+            true,
+            Epilogue::None,
+        )
+    });
 }
 
 /// `c[m×n] += a[m×k] · bᵀ[k×n]` where `b` is stored `n×k` row-major.
 pub fn matmul_a_bt(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k, "a shape");
-    assert_eq!(b.len(), n * k, "bᵀ shape");
-    assert_eq!(c.len(), m * n, "c shape");
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
-            }
-            crow[j] += acc;
-        }
-    }
+    with_tls_scratch(|s| {
+        gemm_with(
+            s,
+            c,
+            a,
+            MatLayout::Normal,
+            b,
+            MatLayout::Transpose,
+            m,
+            k,
+            n,
+            true,
+            Epilogue::None,
+        )
+    });
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x`, 8-lane unrolled so the fallback autovectorizes.
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
     assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let chunks = y.len() / 8;
+    let (yh, yt) = y.split_at_mut(chunks * 8);
+    let (xh, xt) = x.split_at(chunks * 8);
+    for (yc, xc) in yh.chunks_exact_mut(8).zip(xh.chunks_exact(8)) {
+        for (yi, &xi) in yc.iter_mut().zip(xc) {
+            *yi += alpha * xi;
+        }
+    }
+    for (yi, &xi) in yt.iter_mut().zip(xt) {
         *yi += alpha * xi;
     }
 }
@@ -170,25 +543,56 @@ pub fn scale(y: &mut [f32], alpha: f32) {
     }
 }
 
-/// Dot product.
+/// Dot product with eight independent accumulator chains (the scalar
+/// single-chain loop serializes on the add latency; eight chains keep the
+/// FMA pipes full and autovectorize).
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
-    let mut acc = 0.0;
-    for (x, y) in a.iter().zip(b) {
-        acc += x * y;
+    let mut lanes = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for (ac, bc) in a[..chunks * 8]
+        .chunks_exact(8)
+        .zip(b[..chunks * 8].chunks_exact(8))
+    {
+        for (l, (&x, &y)) in lanes.iter_mut().zip(ac.iter().zip(bc)) {
+            *l += x * y;
+        }
     }
-    acc
+    let mut tail = 0.0f32;
+    for (&x, &y) in a[chunks * 8..].iter().zip(&b[chunks * 8..]) {
+        tail += x * y;
+    }
+    let s01 = (lanes[0] + lanes[4]) + (lanes[1] + lanes[5]);
+    let s23 = (lanes[2] + lanes[6]) + (lanes[3] + lanes[7]);
+    (s01 + s23) + tail
 }
 
-/// Row-wise softmax in place over an `m×n` row-major matrix
-/// (numerically stabilized).
+/// Row-wise softmax in place over an `m×n` row-major matrix (numerically
+/// stabilized; max and exp-sum reductions run four accumulator lanes).
 pub fn softmax_rows(x: &mut [f32], m: usize, n: usize) {
     assert_eq!(x.len(), m * n);
     for i in 0..m {
         let row = &mut x[i * n..(i + 1) * n];
-        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0;
-        for v in row.iter_mut() {
+        let chunks = row.len() / 4;
+        let mut mx4 = [f32::NEG_INFINITY; 4];
+        for r in row[..chunks * 4].chunks_exact(4) {
+            for (mj, &v) in mx4.iter_mut().zip(r) {
+                *mj = mj.max(v);
+            }
+        }
+        let mut mx = mx4[0].max(mx4[1]).max(mx4[2]).max(mx4[3]);
+        for &v in &row[chunks * 4..] {
+            mx = mx.max(v);
+        }
+        let mut s4 = [0.0f32; 4];
+        for r in row[..chunks * 4].chunks_exact_mut(4) {
+            for (sj, v) in s4.iter_mut().zip(r) {
+                *v = (*v - mx).exp();
+                *sj += *v;
+            }
+        }
+        let mut sum = (s4[0] + s4[2]) + (s4[1] + s4[3]);
+        for v in &mut row[chunks * 4..] {
             *v = (*v - mx).exp();
             sum += *v;
         }
@@ -234,6 +638,267 @@ mod tests {
             }
         }
         c
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, label: &str) {
+        assert_eq!(got.len(), want.len(), "{label}: length");
+        for (i, (x, y)) in got.iter().zip(want).enumerate() {
+            let denom = x.abs().max(y.abs()).max(1.0);
+            assert!(
+                (x - y).abs() / denom < tol,
+                "{label}: elem {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    /// Logical-layout materializers so every variant can be checked
+    /// against the one naive row-major reference.
+    fn store_a(logical: &[f32], m: usize, k: usize, la: MatLayout) -> Vec<f32> {
+        match la {
+            MatLayout::Normal => logical.to_vec(),
+            MatLayout::Transpose => {
+                let mut t = vec![0.0; m * k];
+                for i in 0..m {
+                    for p in 0..k {
+                        t[p * m + i] = logical[i * k + p];
+                    }
+                }
+                t
+            }
+        }
+    }
+
+    fn store_b(logical: &[f32], k: usize, n: usize, lb: MatLayout) -> Vec<f32> {
+        match lb {
+            MatLayout::Normal => logical.to_vec(),
+            MatLayout::Transpose => {
+                let mut t = vec![0.0; k * n];
+                for p in 0..k {
+                    for j in 0..n {
+                        t[j * k + p] = logical[p * n + j];
+                    }
+                }
+                t
+            }
+        }
+    }
+
+    /// Adversarial shapes: not multiples of the 6×16 tile, tiny rows,
+    /// k=1/k=0, exact-tile shapes, and block-boundary straddles.
+    fn adversarial_shapes() -> Vec<(usize, usize, usize)> {
+        vec![
+            (1, 1, 1),
+            (1, 1, 17),
+            (3, 5, 7),
+            (2, 1, 1),
+            (5, 0, 3),
+            (4, 1, 9),
+            (6, 16, 16),
+            (7, 17, 33),
+            (5, 3, 16),
+            (6, 8, 15),
+            (12, 64, 32),
+            (13, 259, 40),
+            (97, 7, 17),
+            (64, 64, 64),
+            (70, 130, 65),
+            (96, 256, 256),
+            (98, 257, 258),
+        ]
+    }
+
+    #[test]
+    fn gemm_all_layouts_match_naive_on_adversarial_shapes() {
+        let mut rng = Pcg64::seed_from(11);
+        let mut scratch = GemmScratch::new();
+        for (m, k, n) in adversarial_shapes() {
+            let mut la_buf = vec![0.0; m * k];
+            let mut lb_buf = vec![0.0; k * n];
+            rng.fill_normal(&mut la_buf, 0.0, 1.0);
+            rng.fill_normal(&mut lb_buf, 0.0, 1.0);
+            let want = naive_matmul(&la_buf, &lb_buf, m, k, n);
+            for la in [MatLayout::Normal, MatLayout::Transpose] {
+                for lb in [MatLayout::Normal, MatLayout::Transpose] {
+                    let a = store_a(&la_buf, m, k, la);
+                    let b = store_b(&lb_buf, k, n, lb);
+                    let mut c = vec![7.5f32; m * n];
+                    gemm_with(
+                        &mut scratch,
+                        &mut c,
+                        &a,
+                        la,
+                        &b,
+                        lb,
+                        m,
+                        k,
+                        n,
+                        false,
+                        Epilogue::None,
+                    );
+                    assert_close(&c, &want, 1e-4, &format!("{m}x{k}x{n} {la:?}/{lb:?}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn portable_kernel_matches_active_kernel() {
+        let mut rng = Pcg64::seed_from(12);
+        let mut scratch = GemmScratch::new();
+        for (m, k, n) in adversarial_shapes() {
+            let mut a = vec![0.0; m * k];
+            let mut b = vec![0.0; k * n];
+            rng.fill_normal(&mut a, 0.0, 1.0);
+            rng.fill_normal(&mut b, 0.0, 1.0);
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![0.0f32; m * n];
+            gemm_with(
+                &mut scratch,
+                &mut c1,
+                &a,
+                MatLayout::Normal,
+                &b,
+                MatLayout::Normal,
+                m,
+                k,
+                n,
+                false,
+                Epilogue::None,
+            );
+            gemm_with_portable(
+                &mut scratch,
+                &mut c2,
+                &a,
+                MatLayout::Normal,
+                &b,
+                MatLayout::Normal,
+                m,
+                k,
+                n,
+                false,
+                Epilogue::None,
+            );
+            assert_close(&c1, &c2, 1e-4, &format!("{m}x{k}x{n} simd-vs-portable"));
+        }
+    }
+
+    #[test]
+    fn gemm_accumulate_adds_to_existing_contents() {
+        let mut rng = Pcg64::seed_from(13);
+        let mut scratch = GemmScratch::new();
+        let (m, k, n) = (7, 300, 19); // two k-blocks
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        let mut c = vec![1.0f32; m * n];
+        gemm_with(
+            &mut scratch,
+            &mut c,
+            &a,
+            MatLayout::Normal,
+            &b,
+            MatLayout::Normal,
+            m,
+            k,
+            n,
+            true,
+            Epilogue::None,
+        );
+        let mut want = naive_matmul(&a, &b, m, k, n);
+        for w in want.iter_mut() {
+            *w += 1.0;
+        }
+        assert_close(&c, &want, 1e-4, "accumulate");
+    }
+
+    #[test]
+    fn fused_bias_and_relu_epilogues_match_reference() {
+        let mut rng = Pcg64::seed_from(14);
+        let mut scratch = GemmScratch::new();
+        for (m, k, n) in [(4, 5, 9), (7, 300, 19), (64, 784, 256)] {
+            let mut a = vec![0.0; m * k];
+            let mut b = vec![0.0; k * n];
+            let mut bias = vec![0.0; n];
+            rng.fill_normal(&mut a, 0.0, 1.0);
+            rng.fill_normal(&mut b, 0.0, 1.0);
+            rng.fill_normal(&mut bias, 0.0, 1.0);
+            let raw = naive_matmul(&a, &b, m, k, n);
+
+            let mut c = vec![0.0f32; m * n];
+            gemm_with(
+                &mut scratch,
+                &mut c,
+                &a,
+                MatLayout::Normal,
+                &b,
+                MatLayout::Normal,
+                m,
+                k,
+                n,
+                false,
+                Epilogue::Bias(&bias),
+            );
+            let want: Vec<f32> = raw
+                .iter()
+                .enumerate()
+                .map(|(i, v)| v + bias[i % n])
+                .collect();
+            assert_close(&c, &want, 1e-4, &format!("{m}x{k}x{n} bias"));
+
+            let mut c = vec![0.0f32; m * n];
+            gemm_with(
+                &mut scratch,
+                &mut c,
+                &a,
+                MatLayout::Normal,
+                &b,
+                MatLayout::Normal,
+                m,
+                k,
+                n,
+                false,
+                Epilogue::BiasRelu(&bias),
+            );
+            let want: Vec<f32> = want.iter().map(|&v| v.max(0.0)).collect();
+            assert_close(&c, &want, 1e-4, &format!("{m}x{k}x{n} bias+relu"));
+        }
+    }
+
+    #[test]
+    fn k_zero_respects_accumulate_and_epilogue() {
+        let mut scratch = GemmScratch::new();
+        let bias = [1.0f32, -2.0];
+        let mut c = vec![5.0f32; 4]; // 2×2
+        gemm_with(
+            &mut scratch,
+            &mut c,
+            &[],
+            MatLayout::Normal,
+            &[],
+            MatLayout::Normal,
+            2,
+            0,
+            2,
+            false,
+            Epilogue::BiasRelu(&bias),
+        );
+        assert_eq!(c, vec![1.0, 0.0, 1.0, 0.0]);
+        let mut c = vec![5.0f32; 4];
+        gemm_with(
+            &mut scratch,
+            &mut c,
+            &[],
+            MatLayout::Normal,
+            &[],
+            MatLayout::Normal,
+            2,
+            0,
+            2,
+            true,
+            Epilogue::None,
+        );
+        assert_eq!(c, vec![5.0; 4]);
     }
 
     #[test]
@@ -311,6 +976,31 @@ mod tests {
     }
 
     #[test]
+    fn softmax_rows_wide_row_matches_naive() {
+        let mut rng = Pcg64::seed_from(15);
+        let (m, n) = (3, 37); // exercises the 4-lane chunks + tail
+        let mut x = vec![0.0; m * n];
+        rng.fill_normal(&mut x, 0.0, 3.0);
+        let mut want = x.clone();
+        for i in 0..m {
+            let row = &mut want[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        softmax_rows(&mut x, m, n);
+        for (a, b) in x.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
     fn relu_and_backward() {
         let mut x = vec![-1.0, 0.0, 2.0];
         relu(&mut x);
@@ -328,5 +1018,29 @@ mod tests {
         assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
         scale(&mut y, 0.5);
         assert_eq!(y, vec![3.5, 5.0]);
+    }
+
+    #[test]
+    fn dot_and_axpy_long_inputs_match_naive() {
+        let mut rng = Pcg64::seed_from(16);
+        let n = 1013; // not a multiple of 8
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let got = dot(&a, &b) as f64;
+        assert!((got - want).abs() < 1e-2, "{got} vs {want}");
+        let mut y1 = a.clone();
+        axpy(&mut y1, 0.37, &b);
+        for ((y, &x), &bb) in y1.iter().zip(&a).zip(&b) {
+            assert!((y - (x + 0.37 * bb)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn kernel_name_is_reported() {
+        let name = kernel_name();
+        assert!(name.contains("6x16"), "{name}");
     }
 }

@@ -164,6 +164,57 @@ fn equivalence_holds_for_stateful_compressor_at_full_participation() {
 }
 
 #[test]
+fn mlp_workspace_path_is_bit_identical_across_threads() {
+    // The per-thread `ModelWorkspace` (activations, deltas, GEMM packing
+    // buffers, batch gather scratch) must not leak any state between the
+    // workers that share a thread: an MLP-backed run — the configuration
+    // that actually exercises the packed-GEMM workspace hot path — has to
+    // replay bit-identically at every fan-out width.
+    let task = SyntheticTask::generate(
+        SyntheticSpec {
+            dim: 12,
+            classes: 3,
+            modes: 1,
+            separation: 1.6,
+            noise: 0.25,
+            label_noise: 0.0,
+            train: 480,
+            test: 120,
+        },
+        33,
+    );
+    let mut rng = Pcg64::seed_from(34);
+    let fed = DirichletPartitioner { alpha: 0.3, workers: 10 }.partition(&task.train, &mut rng);
+    let e = ClassifierEnv::new(
+        ModelKind::Mlp { inputs: 12, hidden: vec![17, 9], classes: 3 }.build(),
+        task.train,
+        task.test,
+        fed,
+        16,
+    );
+    for alg in [
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 0.5 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        Algorithm::EfSparsign {
+            b_local: 10.0,
+            b_global: 1.0,
+            tau: 2,
+            server_lr_scale: None,
+            server_ef: true,
+        },
+    ] {
+        let label = format!("mlp-workspace {}", alg.label());
+        let serial = run_with_threads(&e, alg.clone(), 0.8, None, Some(1));
+        for threads in [2, 5] {
+            let par = run_with_threads(&e, alg.clone(), 0.8, None, Some(threads));
+            assert_identical(&serial, &par, &format!("{label} (threads={threads})"));
+        }
+    }
+}
+
+#[test]
 fn thread_count_larger_than_worker_pool_is_safe() {
     let e = env(3);
     let alg = Algorithm::CompressedGd {

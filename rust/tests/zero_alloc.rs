@@ -1,0 +1,122 @@
+//! Zero-allocation contract for the per-round training hot path
+//! (DESIGN.md §9): once a `ModelWorkspace` is warmed up, `loss_grad_ws`,
+//! `evaluate_ws` and the full environment-level `sample_grad_ws` (batch
+//! sampling + gather + forward/backward) must not touch the heap.
+//!
+//! Enforced with a counting global allocator. The counter is
+//! **thread-local**, so concurrently running tests in this binary cannot
+//! perturb the measurement taken on this thread.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use sparsignd::coordinator::{ClassifierEnv, GradientSource};
+use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+use sparsignd::model::{Mlp, Model, ModelKind, ModelWorkspace};
+use sparsignd::util::rng::Pcg64;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: defers all allocation to `System`; the thread-local counter is
+// const-initialized (no lazy init, so no recursive allocation).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Run `f` after two warm-up invocations and return how many heap
+/// allocations the third performs on this thread.
+fn steady_state_allocs(mut f: impl FnMut()) -> u64 {
+    f();
+    f();
+    let before = allocs_on_this_thread();
+    f();
+    allocs_on_this_thread() - before
+}
+
+#[test]
+fn mlp_loss_grad_steady_state_is_allocation_free() {
+    // The paper's §C.2 architecture at the Table 1 batch size.
+    let m = Mlp::new(784, vec![256, 128], 10);
+    let mut rng = Pcg64::seed_from(1);
+    let params = m.init(&mut rng);
+    let batch = 64;
+    let mut x = vec![0.0f32; batch * 784];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let y: Vec<usize> = (0..batch).map(|i| i % 10).collect();
+    let mut grad = vec![0.0f32; m.dim()];
+    let mut ws = ModelWorkspace::new();
+
+    let n = steady_state_allocs(|| {
+        std::hint::black_box(m.loss_grad_ws(&params, &x, &y, &mut grad, &mut ws));
+    });
+    assert_eq!(n, 0, "loss_grad_ws allocated {n} times in steady state");
+
+    let n = steady_state_allocs(|| {
+        std::hint::black_box(m.evaluate_ws(&params, &x, &y, &mut ws));
+    });
+    assert_eq!(n, 0, "evaluate_ws allocated {n} times in steady state");
+}
+
+#[test]
+fn env_sample_grad_steady_state_is_allocation_free() {
+    // Full worker-side path: batch sampling + gather + forward/backward.
+    let task = SyntheticTask::generate(
+        SyntheticSpec {
+            dim: 20,
+            classes: 4,
+            modes: 1,
+            separation: 1.5,
+            noise: 0.2,
+            label_noise: 0.0,
+            train: 400,
+            test: 80,
+        },
+        7,
+    );
+    let mut rng = Pcg64::seed_from(8);
+    let fed = DirichletPartitioner { alpha: 0.5, workers: 6 }.partition(&task.train, &mut rng);
+    let env = ClassifierEnv::new(
+        ModelKind::Mlp { inputs: 20, hidden: vec![16], classes: 4 }.build(),
+        task.train,
+        task.test,
+        fed,
+        16,
+    );
+    let params = env.init_params(&mut rng);
+    let mut grad = vec![0.0f32; env.dim()];
+    let mut ws = ModelWorkspace::new();
+    let mut grng = Pcg64::seed_from(9);
+
+    let n = steady_state_allocs(|| {
+        std::hint::black_box(env.sample_grad_ws(2, &params, &mut grng, &mut grad, &mut ws));
+    });
+    assert_eq!(n, 0, "sample_grad_ws allocated {n} times in steady state");
+
+    let n = steady_state_allocs(|| {
+        std::hint::black_box(env.evaluate_ws(&params, &mut ws));
+    });
+    assert_eq!(n, 0, "ClassifierEnv::evaluate_ws allocated {n} times in steady state");
+}
