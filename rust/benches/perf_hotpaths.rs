@@ -1,16 +1,18 @@
 //! §Perf hot-path microbenchmarks — the numbers recorded in
 //! EXPERIMENTS.md §Perf come from this bench.
 //!
-//! Hot paths (DESIGN.md §8–§9):
+//! Hot paths (DESIGN.md §8–§10):
 //!   1. compressors (per-coordinate work, every worker every round)
 //!   2. majority-vote / mean aggregation over M ternary messages —
 //!      word-parallel packed vote counting vs the seed's dense-i8 decode
-//!   3. the threaded round engine vs the serial reference (bit-identical)
-//!   4. Golomb encode/decode of sparse supports
-//!   5. the packed SIMD-dispatched GEMM + the zero-allocation
+//!   3. the pool round engine vs the serial reference (bit-identical)
+//!   4. the 10,000-worker streaming cohort: rounds/sec + peak-RSS proxy
+//!      with O(threads·d) aggregation memory (no message buffering)
+//!   5. Golomb encode/decode of sparse supports
+//!   6. the packed SIMD-dispatched GEMM + the zero-allocation
 //!      `Mlp::loss_grad_ws` vs the pre-PR scalar path (kept verbatim in
 //!      `scalar_baseline` below)
-//!   6. PJRT end-to-end worker step (when artifacts are present)
+//!   7. PJRT end-to-end worker step (when artifacts are present)
 //!
 //! `cargo bench --bench perf_hotpaths` runs the full configuration;
 //! `-- --smoke` (or `PERF_SMOKE=1`) shrinks every section for CI.
@@ -459,6 +461,75 @@ fn bench_engine(rep: &mut Report, d: usize, m: usize, rounds: usize) {
     rep.num("round_engine_thread_speedup", t_serial / t_par);
 }
 
+/// Peak resident set (VmHWM, Linux) as a cheap RSS proxy for the
+/// large-cohort leg. `None` off-Linux or when /proc is unreadable.
+fn vm_hwm_mib() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
+/// The DESIGN.md §10 target workload: a 10,000-worker packed-ternary
+/// cohort over the persistent pool engine. The streaming fast path holds
+/// `threads + 1` vote accumulators (O(threads·d) words) instead of a
+/// 10,000-message buffer (O(n·d) bits), and spawns zero threads after
+/// pool construction — this leg times rounds/sec at that scale and
+/// records a peak-RSS proxy.
+fn bench_engine_10k(rep: &mut Report, smoke: bool) {
+    let m = 10_000;
+    let d = if smoke { 1 << 12 } else { 1 << 14 };
+    let rounds = if smoke { 2 } else { 5 };
+    println!("\n-- streaming engine: {m}-worker sparsign cohort, d = {d}, {rounds} rounds --");
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let words = d.div_ceil(64);
+    let planes = (usize::BITS - m.leading_zeros()) as usize;
+    // pos+neg planes, u64 words, per accumulator (threads local + 1 merged).
+    let stream_bytes = (threads + 1) * 2 * 8 * words * planes;
+    let buffered_bytes = m * 2 * 8 * words;
+    println!(
+        "  aggregation memory: streaming {:.1} KiB ({} accumulators) vs buffered {:.1} MiB \
+         ({m} packed messages)",
+        stream_bytes as f64 / 1024.0,
+        threads + 1,
+        buffered_bytes as f64 / (1 << 20) as f64
+    );
+    let env = SynthEnv { d, m };
+    let run = TrainingRun {
+        algorithm: Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 1.0 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        schedule: LrSchedule::Const { lr: 0.01 },
+        rounds,
+        participation: 1.0,
+        eval_every: 0,
+        seed: 10,
+        attack: None,
+        allow_stateful_with_sampling: false,
+        threads: None,
+    };
+    let t0 = std::time::Instant::now();
+    let hist = run.run(&env, vec![0.0f32; d], &|_p| (0.0, 0.0));
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(hist.ledger.rounds(), rounds);
+    assert!(hist.total_uplink() > 0.0);
+    let rps = rounds as f64 / dt;
+    println!(
+        "  {rounds} rounds in {dt:.2}s → {rps:.2} rounds/s \
+         ({:.1}M worker-messages/s, {threads} threads)",
+        rps * m as f64 / 1e6
+    );
+    rep.num("engine10k_workers", m as f64);
+    rep.num("engine10k_dim", d as f64);
+    rep.num("engine10k_rounds_per_sec", rps);
+    rep.num("engine10k_stream_agg_mib", stream_bytes as f64 / (1 << 20) as f64);
+    if let Some(mib) = vm_hwm_mib() {
+        println!("  peak RSS (VmHWM proxy): {mib:.1} MiB");
+        rep.num("engine10k_peak_rss_mib", mib);
+    }
+}
+
 fn bench_golomb(d: usize) {
     println!("\n-- Golomb position coding (d = {d}) --");
     let mut rng = Pcg64::seed_from(4);
@@ -664,6 +735,7 @@ fn main() {
         bench_compressors(1 << 14);
         bench_aggregation(1 << 13, 32);
         bench_engine(&mut rep, 1 << 15, 16, 2);
+        bench_engine_10k(&mut rep, true);
         bench_golomb(1 << 14);
         bench_gemm(&mut rep, true);
         bench_loss_grad(&mut rep, true);
@@ -673,6 +745,7 @@ fn main() {
         bench_compressors(d);
         bench_aggregation(1 << 16, 100);
         bench_engine(&mut rep, 1 << 20, 100, 2);
+        bench_engine_10k(&mut rep, false);
         bench_golomb(1 << 20);
         bench_gemm(&mut rep, false);
         bench_loss_grad(&mut rep, false);

@@ -69,6 +69,30 @@ impl PackedTernary {
         Self { dim, nnz: 0, scale, mask: vec![0; words], sign: vec![0; words] }
     }
 
+    /// Reset to an all-zero `dim`-message with `scale`, reusing the word
+    /// storage. Capacity grows monotonically and never shrinks, so a
+    /// message buffer cycled through same-shape rounds stops touching the
+    /// heap after its first use — the streaming engine's per-thread
+    /// message scratch relies on this (`tests/zero_alloc_round.rs`).
+    pub fn reset(&mut self, dim: usize, scale: f32) {
+        let words = Self::words(dim);
+        self.mask.clear();
+        self.mask.resize(words, 0);
+        self.sign.clear();
+        self.sign.resize(words, 0);
+        self.dim = dim;
+        self.nnz = 0;
+        self.scale = scale;
+    }
+
+    /// Reset to a fresh `dim`-message and return a streaming writer over
+    /// it — the zero-allocation twin of [`PackedBuilder`]. The writer's
+    /// `finish` stamps the decode scale.
+    pub fn start(&mut self, dim: usize) -> PackedWriter<'_> {
+        self.reset(dim, 1.0);
+        PackedWriter { pack: self, len: 0 }
+    }
+
     /// Pack an explicit code vector (`q[i] ∈ {-1,0,+1}`).
     pub fn from_codes(q: &[i8], scale: f32) -> Self {
         let mut b = PackedBuilder::new(q.len());
@@ -83,10 +107,19 @@ impl PackedTernary {
     /// `g[i] < 0`. One word of output per 64 input floats — the signSGD
     /// and scaled-sign fast path.
     pub fn dense_signs(g: &[f32], scale: f32) -> Self {
-        let dim = g.len();
-        let words = Self::words(dim);
-        let mut mask = vec![0u64; words];
-        let mut sign = vec![0u64; words];
+        let mut pack = Self::zeros(0, scale);
+        pack.fill_dense_signs(g, scale);
+        pack
+    }
+
+    /// In-place [`Self::dense_signs`] over a reusable message buffer.
+    /// Unlike [`Self::reset`] this never pre-zeroes retained storage —
+    /// the sign loop overwrites every live word — so the dense-sign hot
+    /// path does a single pass over the planes.
+    pub fn fill_dense_signs(&mut self, g: &[f32], scale: f32) {
+        let words = Self::words(g.len());
+        self.mask.resize(words, 0);
+        self.sign.resize(words, 0);
         for (w, chunk) in g.chunks(Self::LANES).enumerate() {
             let mut m = 0u64;
             let mut s = 0u64;
@@ -96,10 +129,12 @@ impl PackedTernary {
                     s |= 1u64 << j;
                 }
             }
-            mask[w] = m;
-            sign[w] = s;
+            self.mask[w] = m;
+            self.sign[w] = s;
         }
-        Self { dim, nnz: dim, scale, mask, sign }
+        self.dim = g.len();
+        self.nnz = g.len();
+        self.scale = scale;
     }
 
     /// Dimension `d`.
@@ -200,58 +235,90 @@ impl PackedTernary {
     }
 }
 
+/// Append the next coordinate's code (`-1`, `0`, or `+1`) to a packed
+/// message under construction — the single emission primitive shared by
+/// [`PackedBuilder`] (owning) and [`PackedWriter`] (borrowing).
+#[inline]
+fn push_code(pack: &mut PackedTernary, len: &mut usize, code: i8) {
+    debug_assert!(*len < pack.dim, "push past dim {}", pack.dim);
+    debug_assert!((-1..=1).contains(&code));
+    if code != 0 {
+        let w = *len >> 6;
+        let bit = 1u64 << (*len & 63);
+        pack.mask[w] |= bit;
+        if code < 0 {
+            pack.sign[w] |= bit;
+        }
+        pack.nnz += 1;
+    }
+    *len += 1;
+}
+
 /// Streaming constructor for [`PackedTernary`]: compressors emit one code
 /// per coordinate in order and never materialize a `Vec<i8>`.
 pub struct PackedBuilder {
-    dim: usize,
+    pack: PackedTernary,
     len: usize,
-    nnz: usize,
-    mask: Vec<u64>,
-    sign: Vec<u64>,
 }
 
 impl PackedBuilder {
     pub fn new(dim: usize) -> Self {
-        let words = PackedTernary::words(dim);
-        Self { dim, len: 0, nnz: 0, mask: vec![0; words], sign: vec![0; words] }
+        Self { pack: PackedTernary::zeros(dim, 1.0), len: 0 }
     }
 
     /// Append the next coordinate's code (`-1`, `0`, or `+1`).
     #[inline]
     pub fn push(&mut self, code: i8) {
-        debug_assert!(self.len < self.dim, "push past dim {}", self.dim);
-        debug_assert!((-1..=1).contains(&code));
-        if code != 0 {
-            let w = self.len >> 6;
-            let bit = 1u64 << (self.len & 63);
-            self.mask[w] |= bit;
-            if code < 0 {
-                self.sign[w] |= bit;
-            }
-            self.nnz += 1;
-        }
-        self.len += 1;
+        push_code(&mut self.pack, &mut self.len, code);
     }
 
     /// Non-zeros emitted so far.
     #[inline]
     pub fn nnz(&self) -> usize {
-        self.nnz
+        self.pack.nnz
     }
 
-    pub fn finish(self, scale: f32) -> PackedTernary {
+    pub fn finish(mut self, scale: f32) -> PackedTernary {
         assert_eq!(
-            self.len, self.dim,
+            self.len, self.pack.dim,
             "PackedBuilder finished after {} of {} coordinates",
-            self.len, self.dim
+            self.len, self.pack.dim
         );
-        PackedTernary {
-            dim: self.dim,
-            nnz: self.nnz,
-            scale,
-            mask: self.mask,
-            sign: self.sign,
-        }
+        self.pack.scale = scale;
+        self.pack
+    }
+}
+
+/// [`PackedBuilder`]'s zero-allocation twin: streams codes into a
+/// caller-owned [`PackedTernary`] (obtained via [`PackedTernary::start`]),
+/// so steady-state compression reuses one message buffer per thread.
+pub struct PackedWriter<'a> {
+    pack: &'a mut PackedTernary,
+    len: usize,
+}
+
+impl PackedWriter<'_> {
+    /// Append the next coordinate's code (`-1`, `0`, or `+1`).
+    #[inline]
+    pub fn push(&mut self, code: i8) {
+        push_code(self.pack, &mut self.len, code);
+    }
+
+    /// Non-zeros emitted so far.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.pack.nnz
+    }
+
+    /// Seal the message: asserts every coordinate was emitted and stamps
+    /// the decode scale.
+    pub fn finish(self, scale: f32) {
+        assert_eq!(
+            self.len, self.pack.dim,
+            "PackedWriter finished after {} of {} coordinates",
+            self.len, self.pack.dim
+        );
+        self.pack.scale = scale;
     }
 }
 
@@ -346,6 +413,25 @@ pub trait Compressor: Send {
     /// Compress `g`, drawing any stochasticity from `rng`.
     fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad;
 
+    /// Compress `g` into a reusable packed-ternary message buffer — the
+    /// accumulator-facing view the streaming round engine folds without
+    /// ever materializing a [`CompressedGrad`]. Returns the message's bit
+    /// cost when this compressor's messages are *always* packed ternary
+    /// with decode scale exactly `1.0` (the streaming-aggregation
+    /// predicate, see [`CompressorKind::streams_unit_ternary`]); the
+    /// default returns `None` and callers fall back to
+    /// [`Self::compress`]. Implementations must consume the same RNG
+    /// stream as `compress` so the two paths replay bit-identically.
+    fn compress_ternary_into(
+        &mut self,
+        g: &[f32],
+        rng: &mut Pcg64,
+        out: &mut PackedTernary,
+    ) -> Option<f64> {
+        let _ = (g, rng, out);
+        None
+    }
+
     /// Display name used in tables.
     fn name(&self) -> String;
 
@@ -430,6 +516,24 @@ impl CompressorKind {
             }
             CompressorKind::Identity => Box::new(IdentityCompressor),
         }
+    }
+
+    /// True when every message this compressor emits is packed ternary
+    /// with decode scale exactly `1.0` — the static predicate under which
+    /// the round engine streams votes into per-thread
+    /// [`crate::coordinator::VoteAccumulator`]s instead of buffering the
+    /// full message set (DESIGN.md §10). Kinds listed here must override
+    /// [`Compressor::compress_ternary_into`].
+    pub fn streams_unit_ternary(&self) -> bool {
+        matches!(
+            self,
+            CompressorKind::Sign
+                | CompressorKind::NoisySign { .. }
+                | CompressorKind::Sparsign { .. }
+                | CompressorKind::SparsignAuto { .. }
+                | CompressorKind::StoSign { .. }
+                | CompressorKind::Ssdm { .. }
+        )
     }
 
     /// Table-row label.
@@ -604,6 +708,78 @@ mod tests {
         assert_eq!(pack.to_codes(), Vec::<i8>::new());
         let pack2 = PackedTernary::dense_signs(&[], 1.0);
         assert_eq!(pack2.nnz(), 0);
+    }
+
+    #[test]
+    fn packed_reset_reuses_storage() {
+        let mut pack = PackedTernary::from_codes(&[1, -1, 0, 1], 2.0);
+        pack.reset(4, 1.0);
+        assert_eq!(pack.nnz(), 0);
+        assert_eq!(pack.to_codes(), vec![0, 0, 0, 0]);
+        assert_eq!(pack.scale(), 1.0);
+        // Shrinking and re-growing across word boundaries stays clean.
+        pack.reset(130, 0.5);
+        assert_eq!(pack.dim(), 130);
+        assert!(pack.to_codes().iter().all(|&c| c == 0));
+        pack.set(129, -1);
+        pack.reset(3, 1.0);
+        assert_eq!(pack.to_codes(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn writer_matches_builder() {
+        let codes: Vec<i8> = (0..200).map(|i| [(1i8), -1, 0, 0, 1][i % 5]).collect();
+        let mut built = PackedBuilder::new(codes.len());
+        let mut reused = PackedTernary::zeros(0, 1.0);
+        let mut writer = reused.start(codes.len());
+        for &c in &codes {
+            built.push(c);
+            writer.push(c);
+        }
+        assert_eq!(writer.nnz(), built.nnz());
+        writer.finish(0.25);
+        let built = built.finish(0.25);
+        assert_eq!(built, reused);
+    }
+
+    #[test]
+    fn streaming_kinds_emit_into_scratch_identically() {
+        // Every kind the streaming predicate admits must (a) implement
+        // compress_ternary_into and (b) produce the same message and bit
+        // cost as compress from the same RNG state, at scale 1.0.
+        let kinds = [
+            CompressorKind::Sign,
+            CompressorKind::NoisySign { noise_std: 0.05 },
+            CompressorKind::Sparsign { budget: 0.7 },
+            CompressorKind::SparsignAuto { target_density: 0.2 },
+            CompressorKind::StoSign { b: 2.0 },
+            CompressorKind::Ssdm { beta: 0.5 },
+        ];
+        let g: Vec<f32> = (0..150).map(|i| ((i % 13) as f32 - 6.0) / 8.0).collect();
+        let mut scratch = PackedTernary::zeros(0, 1.0);
+        for kind in kinds {
+            assert!(kind.streams_unit_ternary(), "{}", kind.label());
+            let mut c1 = kind.build(g.len());
+            let mut c2 = kind.build(g.len());
+            for seed in [1u64, 2] {
+                let msg = c1.compress(&g, &mut Pcg64::seed_from(seed));
+                let bits = c2
+                    .compress_ternary_into(&g, &mut Pcg64::seed_from(seed), &mut scratch)
+                    .unwrap_or_else(|| panic!("{} must stream", kind.label()));
+                let CompressedGrad::Ternary { pack, bits: msg_bits } = &msg else {
+                    panic!("{} emitted a dense message", kind.label());
+                };
+                assert_eq!(pack, &scratch, "{}", kind.label());
+                assert_eq!(*msg_bits, bits, "{}", kind.label());
+                assert_eq!(scratch.scale(), 1.0, "{}", kind.label());
+            }
+        }
+        // And kinds outside the predicate must decline.
+        let mut scaled = CompressorKind::ScaledSign.build(g.len());
+        assert!(!CompressorKind::ScaledSign.streams_unit_ternary());
+        assert!(scaled
+            .compress_ternary_into(&g, &mut Pcg64::seed_from(3), &mut scratch)
+            .is_none());
     }
 
     #[test]

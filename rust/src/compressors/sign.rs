@@ -1,8 +1,8 @@
 //! Sign-based baselines: signSGD, scaled signSGD, noisy signSGD.
 
-use super::{CompressedGrad, Compressor, PackedBuilder, PackedTernary};
+use super::{CompressedGrad, Compressor, PackedTernary};
 use crate::coding::cost::CostModel;
-use crate::util::l1_norm;
+use crate::util::l1_norm_f64;
 use crate::util::rng::Pcg64;
 
 /// signSGD (Bernstein et al. 2018): transmit `sign(g)` — one bit per
@@ -16,6 +16,16 @@ impl Compressor for SignCompressor {
     fn compress(&mut self, g: &[f32], _rng: &mut Pcg64) -> CompressedGrad {
         let pack = PackedTernary::dense_signs(g, 1.0);
         CompressedGrad::ternary(pack, g.len() as f64)
+    }
+
+    fn compress_ternary_into(
+        &mut self,
+        g: &[f32],
+        _rng: &mut Pcg64,
+        out: &mut PackedTernary,
+    ) -> Option<f64> {
+        out.fill_dense_signs(g, 1.0);
+        Some(g.len() as f64)
     }
 
     fn name(&self) -> String {
@@ -34,10 +44,12 @@ impl Compressor for SignCompressor {
 pub struct ScaledSignCompressor;
 
 /// Compute the scaled-sign transform into a ternary message (shared with
-/// the server-side aggregation rule in [`crate::coordinator`]).
+/// the server-side aggregation rule in [`crate::coordinator`], which uses
+/// the same f64 ℓ1 accumulation — an f32 running sum drifts for large
+/// `d`, see `util::l1_norm_f64`).
 pub fn scaled_sign_message(g: &[f32]) -> CompressedGrad {
     let d = g.len().max(1);
-    let scale = l1_norm(g) / d as f32;
+    let scale = (l1_norm_f64(g) / d as f64) as f32;
     let pack = PackedTernary::dense_signs(g, scale);
     CompressedGrad::ternary(pack, g.len() as f64 + 32.0)
 }
@@ -65,11 +77,14 @@ pub struct NoisySignCompressor {
     pub noise_std: f32,
 }
 
-impl Compressor for NoisySignCompressor {
-    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+impl NoisySignCompressor {
+    /// Streaming emission into a reusable packed message (shared by
+    /// `compress` and the engine's zero-allocation path, so both consume
+    /// the same RNG stream); returns the message bit cost.
+    fn emit_into(&self, g: &[f32], rng: &mut Pcg64, out: &mut PackedTernary) -> f64 {
         let std = self.noise_std;
         // §Perf: Box–Muller yields two variates per ln/sqrt; consume both.
-        let mut pk = PackedBuilder::new(g.len());
+        let mut pk = out.start(g.len());
         let pairs = g.len() / 2;
         for idx in 0..pairs {
             let (n0, n1) = rng.normal_pair();
@@ -81,7 +96,25 @@ impl Compressor for NoisySignCompressor {
             let i = g.len() - 1;
             pk.push(if g[i] + rng.normal_f32(0.0, std) < 0.0 { -1 } else { 1 });
         }
-        CompressedGrad::ternary(pk.finish(1.0), g.len() as f64)
+        pk.finish(1.0);
+        g.len() as f64
+    }
+}
+
+impl Compressor for NoisySignCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        let mut pack = PackedTernary::zeros(0, 1.0);
+        let bits = self.emit_into(g, rng, &mut pack);
+        CompressedGrad::ternary(pack, bits)
+    }
+
+    fn compress_ternary_into(
+        &mut self,
+        g: &[f32],
+        rng: &mut Pcg64,
+        out: &mut PackedTernary,
+    ) -> Option<f64> {
+        Some(self.emit_into(g, rng, out))
     }
 
     fn name(&self) -> String {

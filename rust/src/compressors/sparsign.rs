@@ -15,7 +15,7 @@
 //! Per Remark 7, probabilities `|g_i|·B` that exceed 1 are clamped —
 //! equivalent to gradient clipping at `1/B`.
 
-use super::{ternary_bits, CompressedGrad, Compressor, PackedBuilder, PackedTernary};
+use super::{ternary_bits, CompressedGrad, Compressor, PackedTernary};
 use crate::coding::cost::CostModel;
 use crate::util::rng::{bernoulli_threshold, Pcg64, U32Stream};
 
@@ -39,16 +39,17 @@ impl SparsignCompressor {
             .map(|x| (self.budget as f64 * x.abs() as f64).min(1.0))
             .sum()
     }
-}
 
-impl Compressor for SparsignCompressor {
-    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+    /// Streaming emission into a reusable packed message — the engine's
+    /// zero-allocation path; `compress` wraps it, so both consume the
+    /// same RNG stream. Returns the Golomb-accounted bit cost.
+    fn emit_into(&self, g: &[f32], rng: &mut Pcg64, out: &mut PackedTernary) -> f64 {
         assert!(
             self.budget >= 0.0 && self.budget.is_finite(),
             "sparsign budget must be finite and non-negative, got {}",
             self.budget
         );
-        let mut pk = PackedBuilder::new(g.len());
+        let mut pk = out.start(g.len());
         let b = self.budget;
         // §Perf fast path: one raw u64 feeds two branch-free f32-domain
         // Bernoulli comparisons (`u < p·2³²`); p ≥ 1 always fires because
@@ -95,9 +96,26 @@ impl Compressor for SparsignCompressor {
                 0
             });
         }
-        let pack = pk.finish(1.0);
-        let bits = ternary_bits(g.len(), pack.nnz(), false);
+        let nnz = pk.nnz();
+        pk.finish(1.0);
+        ternary_bits(g.len(), nnz, false)
+    }
+}
+
+impl Compressor for SparsignCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        let mut pack = PackedTernary::zeros(0, 1.0);
+        let bits = self.emit_into(g, rng, &mut pack);
         CompressedGrad::ternary(pack, bits)
+    }
+
+    fn compress_ternary_into(
+        &mut self,
+        g: &[f32],
+        rng: &mut Pcg64,
+        out: &mut PackedTernary,
+    ) -> Option<f64> {
+        Some(self.emit_into(g, rng, out))
     }
 
     fn name(&self) -> String {
@@ -122,18 +140,19 @@ pub struct SparsignAutoCompressor {
 
 impl SparsignAutoCompressor {
     /// The per-message budget `B = target·d / ‖g‖₁`, or `None` for an
-    /// all-zero gradient. The ℓ1 norm accumulates in `f64`: a plain `f32`
-    /// running sum loses low-order mass once the partial sum dwarfs the
-    /// addends (for `d ≳ 10⁶` small-magnitude gradients the drift reaches
-    /// percents), which would silently skew the derived budget — and with
-    /// it the expected uplink density — as models grow.
+    /// all-zero gradient. The ℓ1 norm accumulates in `f64`
+    /// (`util::l1_norm_f64`): a plain `f32` running sum loses low-order
+    /// mass once the partial sum dwarfs the addends (for `d ≳ 10⁶`
+    /// small-magnitude gradients the drift reaches percents), which would
+    /// silently skew the derived budget — and with it the expected uplink
+    /// density — as models grow.
     pub fn derived_budget(&self, g: &[f32]) -> Option<f32> {
         assert!(
             self.target_density > 0.0 && self.target_density <= 1.0,
             "target density must be in (0,1], got {}",
             self.target_density
         );
-        let l1: f64 = g.iter().map(|x| x.abs() as f64).sum();
+        let l1 = crate::util::l1_norm_f64(g);
         if l1 == 0.0 {
             None
         } else {
@@ -147,6 +166,21 @@ impl Compressor for SparsignAutoCompressor {
         match self.derived_budget(g) {
             None => CompressedGrad::ternary(PackedTernary::zeros(g.len(), 1.0), 0.0),
             Some(budget) => SparsignCompressor { budget }.compress(g, rng),
+        }
+    }
+
+    fn compress_ternary_into(
+        &mut self,
+        g: &[f32],
+        rng: &mut Pcg64,
+        out: &mut PackedTernary,
+    ) -> Option<f64> {
+        match self.derived_budget(g) {
+            None => {
+                out.reset(g.len(), 1.0);
+                Some(0.0)
+            }
+            Some(budget) => Some(SparsignCompressor { budget }.emit_into(g, rng, out)),
         }
     }
 

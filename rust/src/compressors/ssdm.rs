@@ -10,7 +10,7 @@
 //!   exactly the property the paper argues breaks under worker sampling,
 //!   so the engine guards it the same way as worker-EF.
 
-use super::{CompressedGrad, Compressor, PackedBuilder, PackedTernary};
+use super::{CompressedGrad, Compressor, PackedTernary};
 use crate::coding::cost::CostModel;
 use crate::util::linf_norm;
 use crate::util::rng::Pcg64;
@@ -24,16 +24,36 @@ pub struct StoSignCompressor {
     pub b: f32,
 }
 
-impl Compressor for StoSignCompressor {
-    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+impl StoSignCompressor {
+    /// Streaming emission into a reusable packed message (same RNG stream
+    /// as `compress`); returns the message bit cost.
+    fn emit_into(&self, g: &[f32], rng: &mut Pcg64, out: &mut PackedTernary) -> f64 {
         assert!(self.b > 0.0, "sto-sign scale must be positive");
         let inv = 1.0 / (2.0 * self.b);
-        let mut pk = PackedBuilder::new(g.len());
+        let mut pk = out.start(g.len());
         for &gi in g.iter() {
             let p_plus = ((self.b + gi) * inv).clamp(0.0, 1.0);
             pk.push(if rng.f32() < p_plus { 1 } else { -1 });
         }
-        CompressedGrad::ternary(pk.finish(1.0), g.len() as f64)
+        pk.finish(1.0);
+        g.len() as f64
+    }
+}
+
+impl Compressor for StoSignCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        let mut pack = PackedTernary::zeros(0, 1.0);
+        let bits = self.emit_into(g, rng, &mut pack);
+        CompressedGrad::ternary(pack, bits)
+    }
+
+    fn compress_ternary_into(
+        &mut self,
+        g: &[f32],
+        rng: &mut Pcg64,
+        out: &mut PackedTernary,
+    ) -> Option<f64> {
+        Some(self.emit_into(g, rng, out))
     }
 
     fn name(&self) -> String {
@@ -64,8 +84,10 @@ impl SsdmCompressor {
     }
 }
 
-impl Compressor for SsdmCompressor {
-    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+impl SsdmCompressor {
+    /// Momentum update + streaming emission into a reusable packed
+    /// message (same RNG stream as `compress`); returns the bit cost.
+    fn emit_into(&mut self, g: &[f32], rng: &mut Pcg64, out: &mut PackedTernary) -> f64 {
         assert_eq!(
             g.len(),
             self.momentum.len(),
@@ -79,18 +101,34 @@ impl Compressor for SsdmCompressor {
         }
         let norm = linf_norm(&self.momentum);
         if norm == 0.0 {
-            return CompressedGrad::ternary(
-                PackedTernary::zeros(g.len(), 1.0),
-                g.len() as f64,
-            );
+            out.reset(g.len(), 1.0);
+            return g.len() as f64;
         }
         let inv = 1.0 / (2.0 * norm);
-        let mut pk = PackedBuilder::new(g.len());
+        let mut pk = out.start(g.len());
         for &vi in self.momentum.iter() {
             let p_plus = ((norm + vi) * inv).clamp(0.0, 1.0);
             pk.push(if rng.f32() < p_plus { 1 } else { -1 });
         }
-        CompressedGrad::ternary(pk.finish(1.0), g.len() as f64)
+        pk.finish(1.0);
+        g.len() as f64
+    }
+}
+
+impl Compressor for SsdmCompressor {
+    fn compress(&mut self, g: &[f32], rng: &mut Pcg64) -> CompressedGrad {
+        let mut pack = PackedTernary::zeros(0, 1.0);
+        let bits = self.emit_into(g, rng, &mut pack);
+        CompressedGrad::ternary(pack, bits)
+    }
+
+    fn compress_ternary_into(
+        &mut self,
+        g: &[f32],
+        rng: &mut Pcg64,
+        out: &mut PackedTernary,
+    ) -> Option<f64> {
+        Some(self.emit_into(g, rng, out))
     }
 
     fn name(&self) -> String {

@@ -1,16 +1,19 @@
 //! Server-side aggregation rules `C(·)` from Algorithm 1 / Algorithm 2.
 //!
-//! Hot path (DESIGN.md §8): when every worker message is packed ternary
-//! with one shared positive scale — signSGD, noisy/sto-sign, SSDM and
-//! sparsign all transmit `scale = 1` — the per-coordinate votes are
+//! Hot path (DESIGN.md §8, §10): when every worker message is packed
+//! ternary with one shared positive scale — signSGD, noisy/sto-sign, SSDM
+//! and sparsign all transmit `scale = 1` — the per-coordinate votes are
 //! counted **word-parallel** over the `u64` bitplanes with carry-save
-//! vertical counters, and the only per-coordinate f32 work left is the
-//! single final pass that materializes the broadcast update. Messages with
-//! heterogeneous scales (TernGrad, QSGD, STC) or dense payloads fall back
-//! to the reference f32 accumulation.
+//! vertical counters ([`VoteAccumulator`]), and the only per-coordinate
+//! f32 work left is the single final pass that materializes the broadcast
+//! update. The accumulator is *mergeable*, so the streaming round engine
+//! folds messages thread-locally as they are produced and merges
+//! `threads` accumulators instead of buffering `n` messages. Messages
+//! with heterogeneous scales (TernGrad, QSGD, STC) or dense payloads fall
+//! back to the reference f32 accumulation.
 
 use crate::compressors::{CompressedGrad, PackedTernary};
-use crate::util::l1_norm;
+use crate::util::l1_norm_f64;
 
 /// The aggregation rule applied to the averaged worker messages before
 /// broadcast.
@@ -33,24 +36,150 @@ pub enum AggregationRule {
 pub struct Aggregate {
     /// The broadcast update `g̃` (dense, decoded).
     pub update: Vec<f32>,
-    /// The pre-compression quantity `avg(Δ) + ẽ` — Algorithm 2's error
-    /// feedback needs it to form `ẽ^{(t+1)} = raw − g̃` (eq. 8).
-    pub raw: Vec<f32>,
+    /// The pre-compression quantity `avg(Δ) + ẽ` — materialized only when
+    /// `pre_add` was supplied, because only Algorithm 2's server error
+    /// feedback reads it (to form `ẽ^{(t+1)} = raw − g̃`, eq. 8).
+    pub raw: Option<Vec<f32>>,
     /// Downlink message size in bits.
     pub downlink_bits: f64,
 }
 
+/// Mergeable word-parallel vote counter — the streaming half of the
+/// DESIGN.md §8.2 kernel (§10). Positive and negative votes are held in
+/// *vertical* (bit-sliced) carry-save counters: plane `b` holds bit `b`
+/// of all 64 lane counts of one word, so folding a message's word is a
+/// ripple-carry over at most `⌈log₂(cap+1)⌉` planes (terminating after ~2
+/// planes on average), and two accumulators merge with word-parallel
+/// carry-save addition — O(words·planes) word ops, no per-coordinate
+/// work. Votes are exact integers, so fold/merge order cannot change the
+/// result: any sharding of a message multiset over any number of
+/// accumulators yields counts bit-identical to single-shot
+/// [`vote_counts`] (`tests/property_suite.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct VoteAccumulator {
+    dim: usize,
+    planes: usize,
+    msgs: usize,
+    cap: usize,
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+}
+
+impl VoteAccumulator {
+    /// An empty accumulator; call [`Self::reset`] before folding.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn words(&self) -> usize {
+        PackedTernary::words(self.dim)
+    }
+
+    /// Clear and size for up to `cap` messages over `dim` coordinates.
+    /// Storage grows monotonically, so resetting to the same shape every
+    /// round never reallocates (`tests/zero_alloc_round.rs`).
+    pub fn reset(&mut self, dim: usize, cap: usize) {
+        assert!(
+            cap >= 1 && cap <= i16::MAX as usize,
+            "vote accumulator supports 1..={} messages, got {cap}",
+            i16::MAX
+        );
+        self.dim = dim;
+        self.cap = cap;
+        self.planes = (usize::BITS - cap.leading_zeros()) as usize;
+        self.msgs = 0;
+        let len = self.words() * self.planes;
+        self.pos.clear();
+        self.pos.resize(len, 0);
+        self.neg.clear();
+        self.neg.resize(len, 0);
+    }
+
+    /// Messages folded in (directly or via [`Self::merge`]) so far.
+    pub fn msgs(&self) -> usize {
+        self.msgs
+    }
+
+    /// Fold one message's votes: `counts[i] += q[i]`. Empty support words
+    /// are skipped, so sparse sparsign messages cost ~nothing.
+    pub fn fold(&mut self, pack: &PackedTernary) {
+        assert_eq!(pack.dim(), self.dim, "vote accumulator dim mismatch");
+        assert!(self.msgs < self.cap, "vote accumulator capacity {} exceeded", self.cap);
+        self.msgs += 1;
+        let planes = self.planes;
+        let mask = pack.mask_words();
+        let sign = pack.sign_words();
+        for w in 0..self.words() {
+            let m = mask[w];
+            if m == 0 {
+                continue;
+            }
+            let s = sign[w];
+            vc_add(&mut self.pos[w * planes..(w + 1) * planes], m & !s);
+            vc_add(&mut self.neg[w * planes..(w + 1) * planes], m & s);
+        }
+    }
+
+    /// Word-parallel merge of another accumulator over the same `reset`
+    /// shape: each of `other`'s planes carry-save-ripples into `self`
+    /// starting at its own weight.
+    pub fn merge(&mut self, other: &VoteAccumulator) {
+        assert_eq!(
+            (self.dim, self.planes),
+            (other.dim, other.planes),
+            "vote accumulator shape mismatch"
+        );
+        assert!(
+            self.msgs + other.msgs <= self.cap,
+            "vote accumulator capacity {} exceeded by merge",
+            self.cap
+        );
+        self.msgs += other.msgs;
+        let planes = self.planes;
+        for w in 0..self.words() {
+            let base = w * planes;
+            for b in 0..planes {
+                let pa = other.pos[base + b];
+                if pa != 0 {
+                    vc_add(&mut self.pos[base + b..base + planes], pa);
+                }
+                let na = other.neg[base + b];
+                if na != 0 {
+                    vc_add(&mut self.neg[base + b..base + planes], na);
+                }
+            }
+        }
+    }
+
+    /// Horizontal extraction: rebuild every lane's exact count into
+    /// `counts` (length `dim`). Per 64-lane word this runs an unrolled
+    /// 8×8 word-transpose per 8-plane group ([`transpose8`]) instead of
+    /// the per-bit shift loop — ~3 word ops per 8 lanes per group rather
+    /// than `planes` shift+mask ops per lane.
+    pub fn counts_into(&self, counts: &mut [i16]) {
+        assert_eq!(counts.len(), self.dim, "counts buffer dim mismatch");
+        let planes = self.planes;
+        for w in 0..self.words() {
+            let base = w << 6;
+            let lanes = (self.dim - base).min(PackedTernary::LANES);
+            let out = &mut counts[base..base + lanes];
+            let pw = &self.pos[w * planes..(w + 1) * planes];
+            let nw = &self.neg[w * planes..(w + 1) * planes];
+            if pw.iter().chain(nw.iter()).all(|&x| x == 0) {
+                out.fill(0);
+                continue;
+            }
+            extract_word_counts(pw, nw, out);
+        }
+    }
+}
+
 /// Word-parallel per-coordinate vote counting over packed ternary
-/// messages: `counts[i] = Σ_m q_m[i]` with `q ∈ {-1,0,+1}`.
+/// messages: `counts[i] = Σ_m q_m[i]` with `q ∈ {-1,0,+1}` — the
+/// single-shot (buffered) entry point over [`VoteAccumulator`].
 ///
-/// Positive and negative votes are accumulated into *vertical* (bit-sliced)
-/// counters: plane `b` of the counter holds bit `b` of all 64 lane counts
-/// of one word, so adding a message's 64-coordinate word is a ripple-carry
-/// over at most `⌈log₂(M+1)⌉` planes — and the carry chain terminates after
-/// ~2 planes on average, independent of message density. Empty support
-/// words are skipped entirely, so sparse sparsign messages cost ~nothing.
-///
-/// Requires `msgs.len() ≤ i16::MAX`; the per-lane counts are exact.
+/// Requires `packs.len() ≤ i16::MAX`; the per-lane counts are exact.
 pub fn vote_counts(packs: &[&PackedTernary], dim: usize) -> Vec<i16> {
     assert!(
         packs.len() <= i16::MAX as usize,
@@ -58,45 +187,14 @@ pub fn vote_counts(packs: &[&PackedTernary], dim: usize) -> Vec<i16> {
         i16::MAX,
         packs.len()
     );
-    let words = PackedTernary::words(dim);
-    // Planes needed to hold counts up to M = packs.len().
-    let planes = (usize::BITS - packs.len().leading_zeros()).max(1) as usize;
-    let mut pos = vec![0u64; words * planes];
-    let mut neg = vec![0u64; words * planes];
+    let mut acc = VoteAccumulator::new();
+    acc.reset(dim, packs.len().max(1));
     for pack in packs {
         debug_assert_eq!(pack.dim(), dim);
-        let mask = pack.mask_words();
-        let sign = pack.sign_words();
-        for w in 0..words {
-            let m = mask[w];
-            if m == 0 {
-                continue;
-            }
-            let s = sign[w];
-            vc_add(&mut pos[w * planes..(w + 1) * planes], m & !s);
-            vc_add(&mut neg[w * planes..(w + 1) * planes], m & s);
-        }
+        acc.fold(pack);
     }
-    // Horizontal extraction: rebuild each lane's count from its bit-slices.
     let mut counts = vec![0i16; dim];
-    for w in 0..words {
-        let pw = &pos[w * planes..(w + 1) * planes];
-        let nw = &neg[w * planes..(w + 1) * planes];
-        if pw.iter().chain(nw.iter()).all(|&x| x == 0) {
-            continue;
-        }
-        let base = w << 6;
-        let lanes = (dim - base).min(PackedTernary::LANES);
-        for j in 0..lanes {
-            let mut cp = 0i16;
-            let mut cn = 0i16;
-            for (b, (&pb, &nb)) in pw.iter().zip(nw.iter()).enumerate() {
-                cp |= (((pb >> j) & 1) as i16) << b;
-                cn |= (((nb >> j) & 1) as i16) << b;
-            }
-            counts[base + j] = cp - cn;
-        }
-    }
+    acc.counts_into(&mut counts);
     counts
 }
 
@@ -112,6 +210,56 @@ fn vc_add(planes: &mut [u64], mut addend: u64) {
         addend = carry;
     }
     debug_assert_eq!(addend, 0, "vertical counter overflow");
+}
+
+/// 8×8 bit-matrix transpose (Hacker's Delight delta swaps): input byte
+/// `r` holds row `r`; output byte `c` holds column `c`, i.e. output bit
+/// `8c + r` = input bit `8r + c`.
+#[inline]
+fn transpose8(mut x: u64) -> u64 {
+    let mut t = (x ^ (x >> 7)) & 0x00AA_00AA_00AA_00AA;
+    x ^= t ^ (t << 7);
+    t = (x ^ (x >> 14)) & 0x0000_CCCC_0000_CCCC;
+    x ^= t ^ (t << 14);
+    t = (x ^ (x >> 28)) & 0x0000_0000_F0F0_F0F0;
+    x ^= t ^ (t << 28);
+    x
+}
+
+/// Rebuild up to 64 lane counts from one word's vertical pos/neg planes.
+/// For each 8-lane group and 8-plane group, one [`transpose8`] turns the
+/// plane bytes into per-lane count bytes (bit `b` of output byte `j` =
+/// plane `b`'s vote for lane `j`), which accumulate shifted by the plane
+/// group's weight.
+fn extract_word_counts(pw: &[u64], nw: &[u64], out: &mut [i16]) {
+    let planes = pw.len();
+    for (cg, chunk) in out.chunks_mut(8).enumerate() {
+        let shift = (8 * cg) as u32;
+        let mut cp = [0i16; 8];
+        let mut cn = [0i16; 8];
+        for (pg, lo) in (0..planes).step_by(8).enumerate() {
+            let hi = (lo + 8).min(planes);
+            let mut xp = 0u64;
+            let mut xn = 0u64;
+            for (row, p) in (lo..hi).enumerate() {
+                xp |= ((pw[p] >> shift) & 0xff) << (8 * row);
+                xn |= ((nw[p] >> shift) & 0xff) << (8 * row);
+            }
+            if xp == 0 && xn == 0 {
+                continue;
+            }
+            let tp = transpose8(xp);
+            let tn = transpose8(xn);
+            let weight = (8 * pg) as u32;
+            for j in 0..8 {
+                cp[j] += (((tp >> (8 * j)) & 0xff) as i16) << weight;
+                cn[j] += (((tn >> (8 * j)) & 0xff) as i16) << weight;
+            }
+        }
+        for (o, (p, n)) in chunk.iter_mut().zip(cp.iter().zip(&cn)) {
+            *o = p - n;
+        }
+    }
 }
 
 /// When every message is packed ternary with the same positive scale,
@@ -177,24 +325,65 @@ impl AggregationRule {
                 *a += ei;
             }
         }
-        let raw = avg.clone();
+        // Only the Algorithm 2 server EF recursion (the caller that
+        // supplies `pre_add`) reads the pre-compression average; skip the
+        // clone for everyone else.
+        let raw = pre_add.map(|_| avg.clone());
+        let downlink_bits = self.finalize_in_place(&mut avg);
+        Aggregate { update: avg, raw, downlink_bits }
+    }
+
+    /// Build the broadcast update from exact integer vote counts — the
+    /// streaming engine's server half, performing no heap allocation.
+    /// `counts` must be the vote totals of `msgs` packed-ternary messages
+    /// sharing decode scale `scale`; the update lands in `update` and the
+    /// downlink bit cost is returned. Because votes are integers and the
+    /// f32 finalize below is the exact code `aggregate` runs on its
+    /// uniform packed-ternary fast path, the result is bit-identical to
+    /// buffering the same message multiset.
+    pub fn finalize_votes(
+        &self,
+        counts: &[i16],
+        msgs: usize,
+        scale: f32,
+        update: &mut [f32],
+    ) -> f64 {
+        assert!(msgs > 0, "aggregation over zero messages");
+        assert_eq!(counts.len(), update.len(), "counts/update dim mismatch");
+        let inv = 1.0 / msgs as f32;
+        let k = scale * inv;
+        for (u, &c) in update.iter_mut().zip(counts) {
+            *u = k * c as f32;
+        }
+        self.finalize_in_place(update)
+    }
+
+    /// Apply the rule to the dense pre-compression average in place and
+    /// return the downlink bit cost — shared by [`Self::aggregate`] and
+    /// [`Self::finalize_votes`] so the buffered and streaming engines
+    /// produce bit-identical broadcasts.
+    fn finalize_in_place(&self, avg: &mut [f32]) -> f64 {
+        let d = avg.len();
         match self {
             AggregationRule::MajorityVote => {
                 for v in avg.iter_mut() {
                     *v = crate::util::sign0(*v);
                 }
-                Aggregate { update: avg, raw, downlink_bits: d as f64 }
+                d as f64
             }
             AggregationRule::ScaledSign => {
-                let scale = l1_norm(&avg) / d.max(1) as f32;
+                // ‖avg‖₁ accumulates in f64: an f32 running sum loses
+                // low-order mass once the partial sum dwarfs the addends,
+                // silently skewing the broadcast magnitude for large `d`
+                // (same drift class PR 2 fixed in
+                // `SparsignAutoCompressor::derived_budget`).
+                let scale = (l1_norm_f64(avg) / d.max(1) as f64) as f32;
                 for v in avg.iter_mut() {
                     *v = scale * crate::util::sign1(*v);
                 }
-                Aggregate { update: avg, raw, downlink_bits: d as f64 + 32.0 }
+                d as f64 + 32.0
             }
-            AggregationRule::Mean => {
-                Aggregate { update: avg, raw, downlink_bits: 32.0 * d as f64 }
-            }
+            AggregationRule::Mean => 32.0 * d as f64,
         }
     }
 }
@@ -255,7 +444,118 @@ mod tests {
         // avg + e = [-1, 0.5] ⇒ sign = [-1, 1].
         assert_eq!(agg.update, vec![-1.0, 1.0]);
         // `raw` carries the pre-compression average for the EF recursion.
-        assert_eq!(agg.raw, vec![-1.0, 0.5]);
+        assert_eq!(agg.raw.as_deref(), Some(&[-1.0, 0.5][..]));
+    }
+
+    #[test]
+    fn raw_is_materialized_only_for_error_feedback() {
+        let msgs = vec![tern(vec![1, -1, 0], 1.0)];
+        for rule in [
+            AggregationRule::MajorityVote,
+            AggregationRule::ScaledSign,
+            AggregationRule::Mean,
+        ] {
+            assert!(rule.aggregate(&msgs, None).raw.is_none(), "{rule:?}");
+            // The EF caller always sees the exact pre-compression average.
+            let e = vec![0.25, 0.0, -3.0];
+            let agg = rule.aggregate(&msgs, Some(&e));
+            assert_eq!(agg.raw.as_deref(), Some(&[1.25, -1.0, -3.0][..]), "{rule:?}");
+        }
+    }
+
+    #[test]
+    fn scaled_sign_l1_accumulates_in_f64() {
+        // Adversarial mass distribution (same shape as the PR 2
+        // SparsignAuto regression): one 16.0 head followed by 2²¹ entries
+        // of 5e-7. A sequential f32 sum stalls at 16 (5e-7 < ulp(16)/2),
+        // shrinking the broadcast magnitude by ~6%; the f64 accumulator
+        // keeps the full ‖avg‖₁ = 16 + 2²¹·5e-7 ≈ 17.049.
+        let tiny = 5e-7f32;
+        let d_tail = 1usize << 21;
+        let mut v = vec![tiny; d_tail + 1];
+        v[0] = 16.0;
+        let d = v.len();
+        let msgs = vec![CompressedGrad::dense(v, 0.0)];
+        let agg = AggregationRule::ScaledSign.aggregate(&msgs, None);
+        let want = ((16.0f64 + d_tail as f64 * tiny as f64) / d as f64) as f32;
+        let got = agg.update[0];
+        let rel = ((got - want) / want).abs();
+        assert!(rel < 1e-4, "scale {got} vs f64-exact {want} (rel {rel:.2e})");
+        let stalled = (16.0 / d as f32).abs();
+        assert!(
+            ((got - stalled) / stalled).abs() > 0.05,
+            "scale {got} tracks the stalled f32 sum {stalled}"
+        );
+    }
+
+    #[test]
+    fn finalize_votes_matches_buffered_fast_path() {
+        let mut rng = Pcg64::seed_from(21);
+        for _ in 0..20 {
+            let d = 1 + rng.index(300);
+            let m = 1 + rng.index(40);
+            let codes: Vec<Vec<i8>> = (0..m)
+                .map(|_| (0..d).map(|_| [-1i8, 0, 1][rng.index(3)]).collect())
+                .collect();
+            let msgs: Vec<CompressedGrad> = codes.iter().map(|q| tern(q.clone(), 1.0)).collect();
+            let packs: Vec<&PackedTernary> = msgs
+                .iter()
+                .map(|msg| match msg {
+                    CompressedGrad::Ternary { pack, .. } => pack,
+                    _ => unreachable!(),
+                })
+                .collect();
+            let counts = vote_counts(&packs, d);
+            let mut update = vec![0.0f32; d];
+            for rule in [
+                AggregationRule::MajorityVote,
+                AggregationRule::ScaledSign,
+                AggregationRule::Mean,
+            ] {
+                let agg = rule.aggregate(&msgs, None);
+                let downlink = rule.finalize_votes(&counts, m, 1.0, &mut update);
+                assert_eq!(update, agg.update, "{rule:?} (d={d}, m={m})");
+                assert_eq!(downlink, agg.downlink_bits, "{rule:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_merge_equals_single_shot_across_plane_groups() {
+        // m > 255 forces a 9-plane accumulator, crossing the 8-plane
+        // word-transpose group boundary in the extraction.
+        let mut rng = Pcg64::seed_from(22);
+        let d = 100;
+        let m = 300;
+        let codes: Vec<Vec<i8>> = (0..m)
+            .map(|_| (0..d).map(|_| [-1i8, -1, 0, 1, 1, 1][rng.index(6)]).collect())
+            .collect();
+        let packs: Vec<PackedTernary> =
+            codes.iter().map(|q| PackedTernary::from_codes(q, 1.0)).collect();
+        let refs: Vec<&PackedTernary> = packs.iter().collect();
+        let want = vote_counts(&refs, d);
+        let mut global = VoteAccumulator::new();
+        global.reset(d, m);
+        for shard in packs.chunks(37) {
+            let mut local = VoteAccumulator::new();
+            local.reset(d, m);
+            for p in shard {
+                local.fold(p);
+            }
+            global.merge(&local);
+        }
+        // Merging an empty accumulator is a no-op.
+        let mut empty = VoteAccumulator::new();
+        empty.reset(d, m);
+        global.merge(&empty);
+        assert_eq!(global.msgs(), m);
+        let mut got = vec![0i16; d];
+        global.counts_into(&mut got);
+        assert_eq!(got, want);
+        // A stale counts buffer is fully overwritten.
+        let mut dirty = vec![i16::MAX; d];
+        global.counts_into(&mut dirty);
+        assert_eq!(dirty, want);
     }
 
     #[test]

@@ -43,6 +43,13 @@ impl CommLedger {
         Self::default()
     }
 
+    /// Ledger with room for `rounds` records — the run loop preallocates
+    /// so steady-state rounds never reallocate the record vector
+    /// (`tests/zero_alloc_round.rs`).
+    pub fn with_capacity(rounds: usize) -> Self {
+        Self { rounds: Vec::with_capacity(rounds) }
+    }
+
     pub fn record(&mut self, round: RoundComm) {
         self.rounds.push(round);
     }

@@ -16,28 +16,39 @@
 //! The engine is fully deterministic given the run seed: worker `m` at
 //! round `t` draws from a stream derived as `root.derive(t‖m)`, so runs
 //! replay bit-exactly **regardless of execution order** — which is what
-//! makes the round engine's worker fan-out safe. Each round the selected
-//! workers are sharded across `TrainingRun::threads` scoped threads
-//! (default: `available_parallelism`); per-worker results land in
-//! index-addressed slots and are reduced on the coordinator thread in
-//! selection order, so `RunHistory` is bit-identical to a serial
-//! (`threads = Some(1)`) run.
+//! makes the round engine's worker fan-out safe. `TrainingRun::run`
+//! builds a **persistent pool** of `TrainingRun::threads` workers
+//! (default: `available_parallelism`) once per run; each round the
+//! selected workers are sharded across the parked pool threads
+//! ([`pool`], DESIGN.md §10). On the unit-scale packed-ternary fast path
+//! each pool thread folds its messages into a thread-local
+//! [`VoteAccumulator`] as they are produced and the accumulators merge —
+//! votes are exact integers, so the counts are independent of fold and
+//! merge order — while the order-sensitive f64 scalars (losses, bits)
+//! land in index-addressed slots and are reduced on the coordinator
+//! thread in selection order. `RunHistory` is therefore bit-identical to
+//! a serial (`threads = Some(1)`) run for every algorithm
+//! (`tests/engine_equivalence.rs`), and a steady-state fast-path round at
+//! full participation performs zero heap allocations and zero thread
+//! spawns (`tests/zero_alloc_round.rs`; partial participation draws a
+//! fresh selection per round in `WorkerSampler::select_into`).
 
 pub mod aggregation;
 pub mod attacks;
 pub mod env;
 pub mod ledger;
+pub(crate) mod pool;
 pub mod sampling;
 
-pub use aggregation::{vote_counts, Aggregate, AggregationRule};
+pub use aggregation::{vote_counts, Aggregate, AggregationRule, VoteAccumulator};
 pub use attacks::{Attack, AttackPlan};
 pub use env::{ClassifierEnv, GradientSource, RosenbrockEnv};
 pub use ledger::{CommLedger, RoundComm};
 pub use sampling::WorkerSampler;
 
 use crate::compressors::{
-    CompressedGrad, Compressor, CompressorKind, NormKind, QsgdCompressor,
-    SparsignCompressor,
+    CompressedGrad, Compressor, CompressorKind, NormKind, PackedTernary,
+    QsgdCompressor, SparsignCompressor,
 };
 use crate::optim::{sgd_step, LrSchedule};
 use crate::util::rng::Pcg64;
@@ -90,6 +101,20 @@ impl Algorithm {
             Algorithm::EfSparsign { tau, .. }
             | Algorithm::FedAvg { tau }
             | Algorithm::FedCom { tau, .. } => *tau,
+        }
+    }
+
+    /// True when every uplink message is packed ternary with decode scale
+    /// exactly 1.0 — the buffered-fallback predicate (DESIGN.md §10):
+    /// when it holds, the pool engine streams votes into per-thread
+    /// accumulators instead of buffering `n` messages. Mixed-scale/dense
+    /// compressors, the FedAvg/FedCom delta uploads, and Algorithm 2
+    /// (whose server EF recursion consumes the buffered pre-compression
+    /// average) all keep the buffered reference route.
+    fn streams_unit_ternary(&self) -> bool {
+        match self {
+            Algorithm::CompressedGd { compressor, .. } => compressor.streams_unit_ternary(),
+            _ => false,
         }
     }
 }
@@ -208,6 +233,177 @@ impl WorkerScratch {
             wm: vec![0.0; d],
             accum: vec![0.0; d],
             model: crate::model::ModelWorkspace::new(),
+        }
+    }
+}
+
+/// Server-side round state, allocated once per run (DESIGN.md §10): the
+/// selection buffer, the vote-count/update buffers, the per-slot
+/// order-sensitive scalar arrays, and the buffered-route message slots.
+/// On the streaming fast path a steady-state round touches none of the
+/// heap (`tests/zero_alloc_round.rs`).
+struct ServerScratch {
+    /// This round's selected worker ids (`WorkerSampler::select_into`).
+    selected: Vec<usize>,
+    /// Merged per-coordinate vote counts (streaming route).
+    counts: Vec<i16>,
+    /// The broadcast update `g̃`.
+    update: Vec<f32>,
+    /// Per-slot first-local-step losses (reduced in selection order).
+    losses: Vec<f64>,
+    /// Per-slot uplink bit costs (streaming route; buffered messages
+    /// carry their own).
+    bits: Vec<f64>,
+    /// Per-slot uplink non-zero counts (streaming route).
+    nnz: Vec<usize>,
+    /// Message slots for the buffered reference route; stay `None` on the
+    /// streaming route.
+    msgs: Vec<Option<CompressedGrad>>,
+}
+
+impl ServerScratch {
+    fn new(d: usize, n_max: usize) -> Self {
+        Self {
+            selected: Vec::with_capacity(n_max),
+            counts: vec![0; d],
+            update: vec![0.0; d],
+            losses: vec![0.0; n_max],
+            bits: vec![0.0; n_max],
+            nnz: vec![0; n_max],
+            msgs: vec![None; n_max],
+        }
+    }
+}
+
+/// The coordinator's per-round tail, shared by the serial reference
+/// engine and the pool engine: ordered scalar reduction, aggregation
+/// dispatch (streaming finalize vs buffered reference), the Algorithm 2
+/// EF recursion, the probe, the model step, and the round report.
+struct RoundLoop<'a> {
+    run: &'a TrainingRun,
+    d: usize,
+    /// Unit-scale packed-ternary fast path active (pool engine only).
+    streaming: bool,
+    sampler: WorkerSampler,
+    select_rng: Pcg64,
+    server: ServerScratch,
+    /// Algorithm 2's server error-feedback residual `ẽ`.
+    server_residual: Vec<f32>,
+    params: Vec<f32>,
+    reports: Vec<RoundReport>,
+    cum_uplink: f64,
+    ledger: CommLedger,
+}
+
+impl RoundLoop<'_> {
+    /// Draw this round's worker selection; returns the slot count.
+    fn select(&mut self) -> usize {
+        self.sampler.select_into(&mut self.select_rng, &mut self.server.selected);
+        self.server.selected.len()
+    }
+
+    /// Everything after the round's worker fan-out filled the slots.
+    fn finish_round(
+        &mut self,
+        t: usize,
+        lr: f64,
+        n: usize,
+        eval: &dyn Fn(&[f32]) -> (f64, f64),
+        probe: &mut Option<RoundProbe<'_>>,
+    ) {
+        let run = self.run;
+        // Deterministic reduction in selection order (f64 sums are
+        // order-sensitive; this keeps them independent of thread count).
+        let loss_sum: f64 = self.server.losses[..n].iter().sum();
+        let mut uplink = 0.0f64;
+        let mut round_nnz = 0usize;
+
+        // ---- Server aggregation --------------------------------------
+        let (scale, downlink) = if self.streaming {
+            for (&b, &z) in self.server.bits[..n].iter().zip(&self.server.nnz[..n]) {
+                uplink += b;
+                round_nnz += z;
+            }
+            let Algorithm::CompressedGd { aggregation, .. } = &run.algorithm else {
+                unreachable!("streaming engine requires CompressedGd");
+            };
+            let downlink =
+                aggregation.finalize_votes(&self.server.counts, n, 1.0, &mut self.server.update);
+            (lr as f32, downlink)
+        } else {
+            let msgs: Vec<CompressedGrad> = self.server.msgs[..n]
+                .iter_mut()
+                .map(|slot| slot.take().expect("worker slot not filled"))
+                .collect();
+            for msg in &msgs {
+                uplink += msg.bits();
+                round_nnz += msg.nnz();
+            }
+            let (update, scale, downlink) = match &run.algorithm {
+                Algorithm::CompressedGd { aggregation, .. } => {
+                    let agg = aggregation.aggregate(&msgs, None);
+                    (agg.update, lr as f32, agg.downlink_bits)
+                }
+                Algorithm::EfSparsign { tau, server_lr_scale, server_ef, .. } => {
+                    let residual = server_ef.then_some(self.server_residual.as_slice());
+                    let agg = AggregationRule::ScaledSign.aggregate(&msgs, residual);
+                    if *server_ef {
+                        // ẽ^{(t+1)} = raw − g̃  (eq. 8).
+                        let raw = agg.raw.as_ref().expect("EF aggregation must materialize raw");
+                        for ((e, &r), &u) in
+                            self.server_residual.iter_mut().zip(raw).zip(&agg.update)
+                        {
+                            *e = r - u;
+                        }
+                    }
+                    let eta = server_lr_scale.unwrap_or(*tau as f64);
+                    (agg.update, (eta * lr) as f32, agg.downlink_bits)
+                }
+                Algorithm::FedAvg { .. } | Algorithm::FedCom { .. } => {
+                    let agg = AggregationRule::Mean.aggregate(&msgs, None);
+                    // Global step γ = 1: w ← w − mean(Δ) = mean(w_m).
+                    (agg.update, 1.0, 32.0 * self.d as f64)
+                }
+            };
+            self.server.update = update;
+            (scale, downlink)
+        };
+
+        self.ledger.record(RoundComm {
+            uplink_bits: uplink,
+            downlink_bits: downlink,
+            senders: n,
+            uplink_nnz: round_nnz,
+        });
+        if let Some(p) = probe.as_mut() {
+            p(t, &self.params, &self.server.update);
+        }
+        sgd_step(&mut self.params, scale, &self.server.update);
+
+        self.cum_uplink += uplink;
+        let do_eval = if run.eval_every == 0 {
+            t + 1 == run.rounds
+        } else {
+            (t + 1) % run.eval_every == 0 || t + 1 == run.rounds
+        };
+        self.reports.push(RoundReport {
+            round: t,
+            lr,
+            train_loss: loss_sum / n as f64,
+            eval: if do_eval { Some(eval(&self.params)) } else { None },
+            uplink_bits: uplink,
+            downlink_bits: downlink,
+            cum_uplink_bits: self.cum_uplink,
+        });
+    }
+
+    fn into_history(self, label: String, dim: usize) -> RunHistory {
+        RunHistory {
+            label,
+            dim,
+            reports: self.reports,
+            final_params: self.params,
+            ledger: self.ledger,
         }
     }
 }
@@ -368,6 +564,37 @@ impl TrainingRun {
         }
     }
 
+    /// Streaming variant of [`Self::worker_round`] for the unit-scale
+    /// packed-ternary fast path (`Algorithm::CompressedGd` only): emits
+    /// into the caller's reusable `pack` — no message allocation — and
+    /// returns `(loss, uplink_bits)`. Consumes the exact RNG stream
+    /// `worker_round` would, so the two routes replay bit-identically.
+    fn worker_round_streaming(
+        &self,
+        env: &dyn GradientSource,
+        t: usize,
+        w: usize,
+        params: &[f32],
+        root: &Pcg64,
+        comps: &[Mutex<Box<dyn Compressor>>],
+        scratch: &mut WorkerScratch,
+        pack: &mut PackedTernary,
+    ) -> (f64, f64) {
+        debug_assert!(matches!(self.algorithm, Algorithm::CompressedGd { .. }));
+        let mut wrng = root.derive(((t as u64) << 24) | w as u64);
+        let loss = env.sample_grad_ws(w, params, &mut wrng, &mut scratch.grad, &mut scratch.model);
+        if let Some(plan) = &self.attack {
+            plan.apply(w, &mut scratch.grad, &mut wrng);
+        }
+        let bits = comps[w]
+            .lock()
+            .expect("worker compressor lock poisoned")
+            .compress_ternary_into(&scratch.grad, &mut wrng, pack)
+            .expect("streaming round engine requires a unit-scale ternary compressor");
+        debug_assert_eq!(pack.scale(), 1.0);
+        (loss as f64, bits)
+    }
+
     /// [`TrainingRun::run`] with an optional per-round probe.
     pub fn run_probed(
         &self,
@@ -382,7 +609,7 @@ impl TrainingRun {
         let m = env.workers();
         let sampler = WorkerSampler::new(m, self.participation);
         let root = Pcg64::new(self.seed, 0xc0_0e_d1);
-        let mut select_rng = root.derive(0xfeed);
+        let select_rng = root.derive(0xfeed);
 
         // Per-worker compressor instances (the stateful EF/SSDM baselines
         // keep their residual/momentum here). Each worker is visited by
@@ -412,135 +639,169 @@ impl TrainingRun {
             }
         }
 
-        let threads = self.engine_threads(env, sampler.per_round());
-        let mut scratches: Vec<WorkerScratch> =
-            (0..threads).map(|_| WorkerScratch::new(d)).collect();
+        let n_max = sampler.per_round();
+        let threads = self.engine_threads(env, n_max);
+        // The streaming fast path needs the pool's per-thread
+        // accumulators; the serial reference engine stays buffered by
+        // definition (it IS the reference the fast path is pinned to).
+        // Cohorts beyond the accumulator's exact-count capacity keep the
+        // buffered route too, mirroring `aggregate`'s own fast-path gate.
+        let streaming = threads > 1
+            && n_max <= i16::MAX as usize
+            && self.algorithm.streams_unit_ternary();
+        let mut lp = RoundLoop {
+            run: self,
+            d,
+            streaming,
+            sampler,
+            select_rng,
+            server: ServerScratch::new(d, n_max),
+            server_residual: vec![0.0; d],
+            params: init,
+            reports: Vec::with_capacity(self.rounds),
+            cum_uplink: 0.0,
+            ledger: CommLedger::with_capacity(self.rounds),
+        };
 
-        // Server error-feedback residual (Algorithm 2 only).
-        let mut server_residual = vec![0.0f32; d];
-        let mut params = init;
-        let mut reports = Vec::with_capacity(self.rounds);
-        let mut cum_uplink = 0.0f64;
-        let mut comm_ledger = CommLedger::new();
-
-        for t in 0..self.rounds {
-            let lr = self.schedule.at(t);
-            let selected = sampler.select(&mut select_rng);
-            let n = selected.len();
-            let mut slots: Vec<Option<(CompressedGrad, f64)>> =
-                (0..n).map(|_| None).collect();
-
-            if threads <= 1 || n <= 1 {
-                // Serial reference engine.
-                let scratch = &mut scratches[0];
-                for (slot, &w) in slots.iter_mut().zip(&selected) {
-                    *slot = Some(self.worker_round(
+        if threads <= 1 {
+            // Serial reference engine: one scratch, buffered aggregation.
+            let mut scratch = WorkerScratch::new(d);
+            for t in 0..self.rounds {
+                let lr = self.schedule.at(t);
+                let n = lp.select();
+                for k in 0..n {
+                    let w = lp.server.selected[k];
+                    let (msg, loss) = self.worker_round(
                         env,
                         t,
                         w,
                         lr,
-                        &params,
+                        &lp.params,
                         &root,
                         &worker_comps,
-                        scratch,
-                    ));
+                        &mut scratch,
+                    );
+                    lp.server.losses[k] = loss;
+                    lp.server.msgs[k] = Some(msg);
                 }
-            } else {
-                // Shard the selected workers across scoped threads; each
-                // thread writes its contiguous slot chunk, so no result
-                // ever moves between threads out of order.
-                let chunk = n.div_ceil(threads);
-                let params_ref: &[f32] = &params;
-                let comps_ref: &[Mutex<Box<dyn Compressor>>] = &worker_comps;
-                let root_ref = &root;
-                std::thread::scope(|s| {
-                    for (scratch, (sel_chunk, slot_chunk)) in scratches
-                        .iter_mut()
-                        .zip(selected.chunks(chunk).zip(slots.chunks_mut(chunk)))
-                    {
-                        s.spawn(move || {
-                            for (slot, &w) in slot_chunk.iter_mut().zip(sel_chunk) {
-                                *slot = Some(self.worker_round(
-                                    env, t, w, lr, params_ref, root_ref, comps_ref,
-                                    scratch,
-                                ));
+                lp.finish_round(t, lr, n, eval, &mut probe);
+            }
+        } else {
+            // Persistent pool engine (DESIGN.md §10): `threads` workers
+            // spawned once for the whole run, parked on the gate between
+            // rounds. Each keeps its WorkerScratch, vote accumulator and
+            // message scratch across rounds, so steady-state fast-path
+            // rounds allocate nothing and spawn nothing.
+            let gate = pool::PoolGate::new();
+            let cell = pool::JobCell::new();
+            let votes = Mutex::new(VoteAccumulator::new());
+            std::thread::scope(|s| {
+                // Wakes parked workers even if a coordinator-side panic
+                // (eval, probe, a poisoned gate) unwinds this closure —
+                // otherwise the scope would join them forever.
+                let _shutdown = pool::ShutdownGuard(&gate);
+                for ti in 0..threads {
+                    let gate = &gate;
+                    let cell = &cell;
+                    let votes = &votes;
+                    let comps = &worker_comps;
+                    let root = &root;
+                    s.spawn(move || {
+                        let _abort = gate.abort_guard();
+                        let mut scratch = WorkerScratch::new(d);
+                        let mut local = VoteAccumulator::new();
+                        let mut pack = PackedTernary::zeros(0, 1.0);
+                        let mut seen = 0u64;
+                        while let Some(epoch) = gate.await_round(seen) {
+                            seen = epoch;
+                            let job = cell.read();
+                            let (lo, hi) = pool::chunk_bounds(job.n, threads, ti);
+                            let sel = &job.selected()[lo..hi];
+                            let params = job.params();
+                            // SAFETY: this thread exclusively owns slots
+                            // lo..hi for this epoch, and the coordinator
+                            // stays parked in `wait_done` until `finish`.
+                            let out = unsafe { job.outputs(lo, hi) };
+                            if job.streaming {
+                                local.reset(d, job.n);
+                                for (i, &w) in sel.iter().enumerate() {
+                                    let (loss, bits) = self.worker_round_streaming(
+                                        env,
+                                        job.t,
+                                        w,
+                                        params,
+                                        root,
+                                        comps,
+                                        &mut scratch,
+                                        &mut pack,
+                                    );
+                                    local.fold(&pack);
+                                    out.losses[i] = loss;
+                                    out.bits[i] = bits;
+                                    out.nnz[i] = pack.nnz();
+                                }
+                                // Merge order across threads is arbitrary;
+                                // integer votes make it irrelevant.
+                                if !sel.is_empty() {
+                                    votes
+                                        .lock()
+                                        .expect("vote accumulator lock poisoned")
+                                        .merge(&local);
+                                }
+                            } else {
+                                for (i, &w) in sel.iter().enumerate() {
+                                    let (msg, loss) = self.worker_round(
+                                        env,
+                                        job.t,
+                                        w,
+                                        job.lr,
+                                        params,
+                                        root,
+                                        comps,
+                                        &mut scratch,
+                                    );
+                                    out.losses[i] = loss;
+                                    out.msgs[i] = Some(msg);
+                                }
                             }
-                        });
-                    }
-                });
-            }
-
-            // Deterministic reduction in selection order (f64 sums are
-            // order-sensitive; this keeps them independent of the thread
-            // count).
-            let mut msgs = Vec::with_capacity(n);
-            let mut loss_sum = 0.0f64;
-            let mut uplink = 0.0f64;
-            for slot in slots {
-                let (msg, loss) = slot.expect("worker slot not filled");
-                uplink += msg.bits();
-                loss_sum += loss;
-                msgs.push(msg);
-            }
-
-            // ---- Server aggregation + model update -----------------------
-            let (update, scale, downlink) = match &self.algorithm {
-                Algorithm::CompressedGd { aggregation, .. } => {
-                    let agg = aggregation.aggregate(&msgs, None);
-                    (agg.update, lr as f32, agg.downlink_bits)
-                }
-                Algorithm::EfSparsign { tau, server_lr_scale, server_ef, .. } => {
-                    let residual = server_ef.then_some(server_residual.as_slice());
-                    let agg = AggregationRule::ScaledSign.aggregate(&msgs, residual);
-                    if *server_ef {
-                        // ẽ^{(t+1)} = raw − g̃  (eq. 8).
-                        for ((e, &r), &u) in server_residual
-                            .iter_mut()
-                            .zip(&agg.raw)
-                            .zip(&agg.update)
-                        {
-                            *e = r - u;
+                            gate.finish();
                         }
+                    });
+                }
+                for t in 0..self.rounds {
+                    let lr = self.schedule.at(t);
+                    let n = lp.select();
+                    if streaming {
+                        votes.lock().expect("vote accumulator lock poisoned").reset(d, n);
                     }
-                    let eta = server_lr_scale.unwrap_or(*tau as f64);
-                    ((agg.update), (eta * lr) as f32, agg.downlink_bits)
+                    {
+                        let sv = &mut lp.server;
+                        cell.publish(pool::RoundJob::new(
+                            t,
+                            lr,
+                            streaming,
+                            &sv.selected,
+                            &lp.params,
+                            &mut sv.losses[..n],
+                            &mut sv.bits[..n],
+                            &mut sv.nnz[..n],
+                            &mut sv.msgs[..n],
+                        ));
+                    }
+                    gate.open(threads);
+                    gate.wait_done();
+                    if streaming {
+                        votes
+                            .lock()
+                            .expect("vote accumulator lock poisoned")
+                            .counts_into(&mut lp.server.counts);
+                    }
+                    lp.finish_round(t, lr, n, eval, &mut probe);
                 }
-                Algorithm::FedAvg { .. } | Algorithm::FedCom { .. } => {
-                    let agg = AggregationRule::Mean.aggregate(&msgs, None);
-                    // Global step γ = 1: w ← w − mean(Δ) = mean(w_m).
-                    (agg.update, 1.0, 32.0 * d as f64)
-                }
-            };
-            comm_ledger.record(RoundComm::from_msgs(&msgs, downlink));
-            if let Some(p) = probe.as_mut() {
-                p(t, &params, &update);
-            }
-            sgd_step(&mut params, scale, &update);
-
-            cum_uplink += uplink;
-            let do_eval = if self.eval_every == 0 {
-                t + 1 == self.rounds
-            } else {
-                (t + 1) % self.eval_every == 0 || t + 1 == self.rounds
-            };
-            reports.push(RoundReport {
-                round: t,
-                lr,
-                train_loss: loss_sum / n as f64,
-                eval: if do_eval { Some(eval(&params)) } else { None },
-                uplink_bits: uplink,
-                downlink_bits: downlink,
-                cum_uplink_bits: cum_uplink,
             });
         }
 
-        RunHistory {
-            label: self.algorithm.label(),
-            dim: d,
-            reports,
-            final_params: params,
-            ledger: comm_ledger,
-        }
+        lp.into_history(self.algorithm.label(), d)
     }
 }
 

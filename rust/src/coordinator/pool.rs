@@ -1,0 +1,427 @@
+//! The persistent worker pool behind the round engine (DESIGN.md §10).
+//!
+//! Before this module, `TrainingRun::run_probed` spawned and joined a
+//! fresh `std::thread::scope` every round — at 10k-worker scale that is
+//! `threads × rounds` thread spawns plus a `Vec<CompressedGrad>`
+//! buffering every message. The pool replaces it with `threads`
+//! long-lived workers created once per run and parked on a condvar
+//! between rounds:
+//!
+//! 1. the coordinator publishes a [`RoundJob`] (raw views of the round's
+//!    coordinator-owned buffers) through the [`JobCell`],
+//! 2. [`PoolGate::open`] bumps the epoch and wakes every worker,
+//! 3. each worker processes its disjoint slot chunk ([`chunk_bounds`])
+//!    and calls [`PoolGate::finish`],
+//! 4. [`PoolGate::wait_done`] returns to the coordinator once every chunk
+//!    is in; only then does the coordinator touch the round buffers
+//!    again.
+//!
+//! The gate's mutex/condvar pair is the only synchronization: job
+//! publication happens-before `open`'s epoch bump and workers' slot
+//! writes happen-before `wait_done`'s return, because both sides go
+//! through the gate mutex. Steady-state rounds allocate nothing and
+//! spawn nothing (`tests/zero_alloc_round.rs`). If a worker panics, its
+//! [`AbortGuard`] poisons the gate so the coordinator panics out of
+//! `wait_done` instead of deadlocking.
+
+use crate::compressors::CompressedGrad;
+use std::cell::UnsafeCell;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Contiguous slot range owned by pool thread `ti` of `threads` for an
+/// `n`-slot round — the same chunking the pre-pool scoped engine used,
+/// so per-thread work sets are unchanged. Threads past the last chunk
+/// receive an empty range.
+pub fn chunk_bounds(n: usize, threads: usize, ti: usize) -> (usize, usize) {
+    let chunk = n.div_ceil(threads.max(1));
+    ((ti * chunk).min(n), ((ti + 1) * chunk).min(n))
+}
+
+struct GateState {
+    /// Round generation counter; bumped by [`PoolGate::open`].
+    epoch: u64,
+    /// Workers still running the current epoch.
+    remaining: usize,
+    /// Set by [`PoolGate::shutdown`] (and by poisoning): workers exit.
+    shutdown: bool,
+    /// A worker panicked mid-round; the coordinator must abort.
+    poisoned: bool,
+}
+
+/// Coordinator ⇄ worker handoff: an epoch counter workers park on and a
+/// completion latch the coordinator waits on.
+pub struct PoolGate {
+    state: Mutex<GateState>,
+    /// Coordinator → workers: a new round was published (or shutdown).
+    start: Condvar,
+    /// Workers → coordinator: a chunk finished (or the gate poisoned).
+    done: Condvar,
+}
+
+impl Default for PoolGate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PoolGate {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(GateState {
+                epoch: 0,
+                remaining: 0,
+                shutdown: false,
+                poisoned: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        }
+    }
+
+    /// Acquire the gate state, ignoring std mutex poisoning: the gate has
+    /// its own `poisoned` flag with abort semantics, every critical
+    /// section leaves `GateState` consistent, and several callers run
+    /// during unwinding ([`AbortGuard`], [`ShutdownGuard`]) where a
+    /// `PoisonError` panic would be a process-aborting double panic.
+    fn lock(&self) -> MutexGuard<'_, GateState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Coordinator: publish the round to `threads` workers and wake them.
+    /// Must follow a `wait_done` (no worker may still be running).
+    pub fn open(&self, threads: usize) {
+        let mut st = self.lock();
+        debug_assert_eq!(st.remaining, 0, "open() with workers still running");
+        st.epoch += 1;
+        st.remaining = threads;
+        drop(st);
+        self.start.notify_all();
+    }
+
+    /// Coordinator: block until every worker finished the current round.
+    /// Panics if a worker panicked (see [`AbortGuard`]).
+    pub fn wait_done(&self) {
+        let mut st = self.lock();
+        while st.remaining != 0 && !st.poisoned {
+            st = self.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        let poisoned = st.poisoned;
+        // Release the gate before unwinding so the cleanup guards (which
+        // re-lock it) never double-panic.
+        drop(st);
+        if poisoned {
+            panic!("pool worker thread panicked");
+        }
+    }
+
+    /// Coordinator: wake every parked worker for exit. Idempotent.
+    pub fn shutdown(&self) {
+        let mut st = self.lock();
+        st.shutdown = true;
+        drop(st);
+        self.start.notify_all();
+    }
+
+    /// Worker: park until the epoch advances past `seen` (returning the
+    /// new epoch) or the pool shuts down (returning `None`).
+    pub fn await_round(&self, seen: u64) -> Option<u64> {
+        let mut st = self.lock();
+        loop {
+            if st.shutdown {
+                return None;
+            }
+            if st.epoch > seen {
+                return Some(st.epoch);
+            }
+            st = self.start.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Worker: mark this thread's chunk of the current epoch complete.
+    pub fn finish(&self) {
+        let mut st = self.lock();
+        debug_assert!(st.remaining > 0, "finish() without a matching open()");
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            drop(st);
+            self.done.notify_one();
+        }
+    }
+
+    /// Abort the run from a panicking worker: wake the coordinator (which
+    /// re-panics out of `wait_done`) and every parked sibling (which
+    /// exits via `shutdown`), so the enclosing `thread::scope` can join.
+    fn poison(&self) {
+        let mut st = self.lock();
+        st.poisoned = true;
+        st.shutdown = true;
+        drop(st);
+        self.done.notify_all();
+        self.start.notify_all();
+    }
+
+    /// RAII guard for a worker's round loop: if the worker unwinds, the
+    /// guard poisons the gate on drop.
+    pub fn abort_guard(&self) -> AbortGuard<'_> {
+        AbortGuard(self)
+    }
+}
+
+/// See [`PoolGate::abort_guard`].
+pub struct AbortGuard<'a>(&'a PoolGate);
+
+impl Drop for AbortGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
+    }
+}
+
+/// RAII for the coordinator side: shuts the gate down when the round
+/// loop exits — normally or by unwinding. A panicking coordinator must
+/// still wake parked workers, or the enclosing `thread::scope` would
+/// join them forever.
+pub struct ShutdownGuard<'a>(pub &'a PoolGate);
+
+impl Drop for ShutdownGuard<'_> {
+    fn drop(&mut self) {
+        self.0.shutdown();
+    }
+}
+
+/// One round's work order: the round inputs plus raw views of the
+/// coordinator-owned slot buffers. Copied into each worker; the accessors
+/// rebuild slices. Raw pointers rather than borrows because the buffers
+/// are re-borrowed mutably by the coordinator between rounds — validity
+/// is guaranteed by the gate protocol, not by lifetimes.
+#[derive(Clone, Copy)]
+pub struct RoundJob {
+    /// Round index `t`.
+    pub t: usize,
+    /// This round's learning rate.
+    pub lr: f64,
+    /// Fold votes into per-thread accumulators instead of buffering
+    /// messages (the unit-scale packed-ternary fast path).
+    pub streaming: bool,
+    /// Selected worker count (the slot count).
+    pub n: usize,
+    selected: *const usize,
+    params: *const f32,
+    params_len: usize,
+    losses: *mut f64,
+    bits: *mut f64,
+    nnz: *mut usize,
+    msgs: *mut Option<CompressedGrad>,
+}
+
+// SAFETY: the raw views are only dereferenced by pool workers between
+// `open` and their `finish`, on disjoint slot ranges (`outputs`), while
+// the coordinator is parked in `wait_done` — see the module docs.
+unsafe impl Send for RoundJob {}
+
+impl RoundJob {
+    /// Capture raw views of the round's buffers. Every slot array must
+    /// cover exactly the `selected.len()` slots of this round.
+    pub fn new(
+        t: usize,
+        lr: f64,
+        streaming: bool,
+        selected: &[usize],
+        params: &[f32],
+        losses: &mut [f64],
+        bits: &mut [f64],
+        nnz: &mut [usize],
+        msgs: &mut [Option<CompressedGrad>],
+    ) -> Self {
+        let n = selected.len();
+        assert_eq!(losses.len(), n, "losses slot count");
+        assert_eq!(bits.len(), n, "bits slot count");
+        assert_eq!(nnz.len(), n, "nnz slot count");
+        assert_eq!(msgs.len(), n, "msgs slot count");
+        Self {
+            t,
+            lr,
+            streaming,
+            n,
+            selected: selected.as_ptr(),
+            params: params.as_ptr(),
+            params_len: params.len(),
+            losses: losses.as_mut_ptr(),
+            bits: bits.as_mut_ptr(),
+            nnz: nnz.as_mut_ptr(),
+            msgs: msgs.as_mut_ptr(),
+        }
+    }
+
+    /// This round's selected worker ids.
+    pub fn selected(&self) -> &[usize] {
+        // SAFETY: valid for the round per the module protocol.
+        unsafe { std::slice::from_raw_parts(self.selected, self.n) }
+    }
+
+    /// The broadcast model parameters.
+    pub fn params(&self) -> &[f32] {
+        // SAFETY: valid for the round per the module protocol.
+        unsafe { std::slice::from_raw_parts(self.params, self.params_len) }
+    }
+
+    /// Mutable slot outputs for `lo..hi`.
+    ///
+    /// # Safety
+    /// The caller must be the only thread touching slots `lo..hi` for the
+    /// current epoch (the engine hands each pool thread the disjoint
+    /// [`chunk_bounds`] range), and the coordinator must not access the
+    /// buffers until it has observed this thread's [`PoolGate::finish`].
+    pub unsafe fn outputs(&self, lo: usize, hi: usize) -> SlotOutputs<'_> {
+        assert!(lo <= hi && hi <= self.n, "slot range {lo}..{hi} out of {}", self.n);
+        // SAFETY: disjointness and quiescence per the contract above.
+        unsafe {
+            SlotOutputs {
+                losses: std::slice::from_raw_parts_mut(self.losses.add(lo), hi - lo),
+                bits: std::slice::from_raw_parts_mut(self.bits.add(lo), hi - lo),
+                nnz: std::slice::from_raw_parts_mut(self.nnz.add(lo), hi - lo),
+                msgs: std::slice::from_raw_parts_mut(self.msgs.add(lo), hi - lo),
+            }
+        }
+    }
+}
+
+/// The per-slot output views a pool worker fills for its chunk: the
+/// order-sensitive scalars (reduced by the coordinator in selection
+/// order) and, on the buffered route, the message slots themselves.
+pub struct SlotOutputs<'a> {
+    pub losses: &'a mut [f64],
+    pub bits: &'a mut [f64],
+    pub nnz: &'a mut [usize],
+    pub msgs: &'a mut [Option<CompressedGrad>],
+}
+
+/// Single-slot mailbox for the current round's [`RoundJob`].
+///
+/// Protocol: the coordinator publishes strictly between `wait_done` and
+/// `open` (no worker running), and workers read only after `await_round`
+/// observed the epoch bump — both sides pass through the gate mutex, so
+/// the unsynchronized cell never races.
+pub struct JobCell {
+    job: UnsafeCell<Option<RoundJob>>,
+}
+
+// SAFETY: accesses are serialized by the PoolGate protocol above.
+unsafe impl Sync for JobCell {}
+
+impl Default for JobCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobCell {
+    pub fn new() -> Self {
+        Self { job: UnsafeCell::new(None) }
+    }
+
+    /// Coordinator side; must not be called while any worker is running.
+    pub fn publish(&self, job: RoundJob) {
+        // SAFETY: no worker reads between `wait_done` and `open`.
+        unsafe { *self.job.get() = Some(job) }
+    }
+
+    /// Worker side; call only after `await_round` returned a new epoch.
+    pub fn read(&self) -> RoundJob {
+        // SAFETY: the coordinator only writes while workers are parked.
+        unsafe { (*self.job.get()).expect("no round job published") }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunking_covers_all_slots_disjointly() {
+        for n in [0usize, 1, 2, 5, 7, 64, 101] {
+            for threads in [1usize, 2, 3, 4, 7, 16] {
+                let mut covered = 0usize;
+                let mut prev_hi = 0usize;
+                for ti in 0..threads {
+                    let (lo, hi) = chunk_bounds(n, threads, ti);
+                    assert!(lo <= hi && hi <= n, "n={n} threads={threads} ti={ti}");
+                    assert_eq!(lo, prev_hi, "chunks must be contiguous (ti={ti})");
+                    covered += hi - lo;
+                    prev_hi = hi;
+                }
+                assert_eq!(covered, n, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn gate_runs_epochs_and_shuts_down() {
+        let gate = PoolGate::new();
+        let threads = 3;
+        let rounds = 5;
+        let hits: Vec<AtomicUsize> = (0..threads).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|s| {
+            for hit in &hits {
+                let gate = &gate;
+                s.spawn(move || {
+                    let mut seen = 0u64;
+                    while let Some(epoch) = gate.await_round(seen) {
+                        seen = epoch;
+                        hit.fetch_add(1, Ordering::SeqCst);
+                        gate.finish();
+                    }
+                });
+            }
+            for _ in 0..rounds {
+                gate.open(threads);
+                gate.wait_done();
+            }
+            gate.shutdown();
+        });
+        for hit in &hits {
+            assert_eq!(hit.load(Ordering::SeqCst), rounds);
+        }
+    }
+
+    #[test]
+    fn job_roundtrips_slot_views() {
+        let selected = vec![4usize, 7, 9];
+        let params = vec![1.0f32, 2.0];
+        let mut losses = vec![0.0f64; 3];
+        let mut bits = vec![0.0f64; 3];
+        let mut nnz = vec![0usize; 3];
+        let mut msgs: Vec<Option<CompressedGrad>> = vec![None, None, None];
+        let cell = JobCell::new();
+        cell.publish(RoundJob::new(
+            2,
+            0.5,
+            true,
+            &selected,
+            &params,
+            &mut losses,
+            &mut bits,
+            &mut nnz,
+            &mut msgs,
+        ));
+        let job = cell.read();
+        assert_eq!(job.t, 2);
+        assert_eq!(job.n, 3);
+        assert!(job.streaming);
+        assert_eq!(job.selected(), &[4, 7, 9]);
+        assert_eq!(job.params(), &[1.0, 2.0]);
+        // SAFETY: single-threaded test, disjoint ranges.
+        let out = unsafe { job.outputs(1, 3) };
+        out.losses[0] = 1.5;
+        out.nnz[1] = 8;
+        drop(out);
+        let out = unsafe { job.outputs(0, 1) };
+        out.bits[0] = 64.0;
+        drop(out);
+        assert_eq!(losses, vec![0.0, 1.5, 0.0]);
+        assert_eq!(nnz, vec![0, 0, 8]);
+        assert_eq!(bits, vec![64.0, 0.0, 0.0]);
+    }
+}

@@ -30,11 +30,22 @@ impl WorkerSampler {
 
     /// Draw this round's selected set (sorted, distinct).
     pub fn select(&self, rng: &mut Pcg64) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.select_into(rng, &mut out);
+        out
+    }
+
+    /// [`Self::select`] into a reusable buffer (cleared first) — the run
+    /// loop's path; at full participation it draws nothing from `rng` and
+    /// allocates nothing in steady state. Consumes the same RNG stream as
+    /// `select`, so the two are interchangeable mid-run.
+    pub fn select_into(&self, rng: &mut Pcg64, out: &mut Vec<usize>) {
+        out.clear();
         let k = self.per_round();
         if k == self.total {
-            (0..self.total).collect()
+            out.extend(0..self.total);
         } else {
-            rng.sample_indices(self.total, k)
+            out.extend_from_slice(&rng.sample_indices(self.total, k));
         }
     }
 }
@@ -79,6 +90,19 @@ mod tests {
                 (c as f64 - expect).abs() < 0.15 * expect,
                 "worker {i} selected {c} times, expected ~{expect}"
             );
+        }
+    }
+
+    #[test]
+    fn select_into_matches_select() {
+        let s = WorkerSampler::new(40, 0.3);
+        let mut r1 = Pcg64::seed_from(7);
+        let mut r2 = Pcg64::seed_from(7);
+        let mut buf = vec![999usize; 5]; // stale contents must be cleared
+        for _ in 0..10 {
+            let a = s.select(&mut r1);
+            s.select_into(&mut r2, &mut buf);
+            assert_eq!(a, buf);
         }
     }
 

@@ -44,6 +44,13 @@ pub fn l1_norm(v: &[f32]) -> f32 {
     v.iter().map(|x| x.abs()).sum()
 }
 
+/// ℓ1 norm accumulated in f64 — drift-free for large `d`: an f32 running
+/// sum silently drops addends below half an ulp of the partial sum (the
+/// server-side aggregation rules use this; see DESIGN.md §10).
+pub fn l1_norm_f64(v: &[f32]) -> f64 {
+    v.iter().map(|x| x.abs() as f64).sum()
+}
+
 /// ℓ2 norm.
 pub fn l2_norm(v: &[f32]) -> f32 {
     v.iter().map(|x| x * x).sum::<f32>().sqrt()
@@ -77,9 +84,22 @@ mod tests {
     fn norms() {
         let v = [3.0, -4.0];
         assert_eq!(l1_norm(&v), 7.0);
+        assert_eq!(l1_norm_f64(&v), 7.0);
         assert_eq!(l2_norm(&v), 5.0);
         assert_eq!(linf_norm(&v), 4.0);
         assert_eq!(count_zeros(&[0.0, 1.0, 0.0]), 2);
+    }
+
+    #[test]
+    fn l1_f64_keeps_low_order_mass() {
+        // 16.0 head + 2²⁰ tail entries of 5e-7: every tail addend rounds
+        // away in a sequential f32 sum but survives in f64.
+        let mut v = vec![5e-7f32; (1 << 20) + 1];
+        v[0] = 16.0;
+        let exact = 16.0f64 + (1u64 << 20) as f64 * 5e-7f32 as f64;
+        let got = l1_norm_f64(&v);
+        assert!((got - exact).abs() / exact < 1e-9, "{got} vs {exact}");
+        assert!((l1_norm(&v) as f64) < exact - 0.4, "f32 sum unexpectedly exact");
     }
 
     #[test]

@@ -27,12 +27,19 @@ pub fn sem(xs: &[f64]) -> f64 {
 }
 
 /// Median (averages the middle pair for even n; 0.0 for empty).
+///
+/// Sorts with `total_cmp`, so a NaN in a metric series (a diverged run's
+/// loss, a 0/0 accuracy) can no longer panic the reporting path the way
+/// `partial_cmp().unwrap()` did. Under the IEEE total order NaNs sort to
+/// the *extremes* — sign-bit-set NaNs (e.g. x86's 0.0/0.0) before
+/// `-inf`, positive NaNs after `+inf` — so a NaN minority skews which
+/// finite element is picked rather than crashing.
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -117,6 +124,21 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std_dev(&[1.0]), 0.0);
         assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn median_survives_nan_inputs() {
+        // A NaN in the series must not panic. total_cmp sends positive
+        // NaNs past +inf…
+        assert_eq!(median(&[3.0, f64::NAN, 1.0, 2.0, f64::NAN]), 3.0);
+        assert_eq!(median(&[f64::NAN, 1.0, 5.0]), 5.0);
+        // …and sign-bit-set NaNs (what 0.0/0.0 produces on x86) below
+        // -inf, shifting the pick the other way — still no panic.
+        assert_eq!(median(&[-f64::NAN, 1.0, 5.0]), 1.0);
+        // All-NaN input degrades to NaN rather than panicking.
+        assert!(median(&[f64::NAN, f64::NAN]).is_nan());
+        // Mixed infinities keep their total order.
+        assert_eq!(median(&[f64::INFINITY, 0.0, f64::NEG_INFINITY]), 0.0);
     }
 
     #[test]

@@ -1,11 +1,17 @@
 //! Parallel round-engine equivalence: for every `Algorithm` variant, a run
-//! sharded across scoped threads must produce a `RunHistory` that is
-//! **bit-identical** to the serial reference (`threads = Some(1)`) —
-//! losses, per-round uplink/downlink bits, and final parameters. This is
+//! fanned out over the persistent pool engine must produce a `RunHistory`
+//! that is **bit-identical** to the serial reference (`threads = Some(1)`)
+//! — losses, per-round uplink/downlink bits, and final parameters. This is
 //! the determinism contract the engine's worker fan-out is built on:
 //! worker `m` at round `t` draws from `root.derive(t‖m)` regardless of
-//! which thread executes it, and the coordinator reduces the slot array in
-//! selection order.
+//! which thread executes it, order-sensitive scalars are reduced from
+//! index-addressed slots in selection order, and on the streaming fast
+//! path the per-thread vote accumulators hold exact integers, so their
+//! merge order cannot change the counts (DESIGN.md §10). The algorithm
+//! list covers both pool routes: streaming (unit-scale packed ternary,
+//! with MajorityVote and ScaledSign finalizes) and buffered
+//! (EF-sparsign's server residual, FedAvg/FedCom deltas, and TernGrad's
+//! per-message scales).
 
 use sparsignd::compressors::CompressorKind;
 use sparsignd::coordinator::{
@@ -95,6 +101,17 @@ fn all_algorithms() -> Vec<Algorithm> {
         Algorithm::CompressedGd {
             compressor: CompressorKind::Sparsign { budget: 0.5 },
             aggregation: AggregationRule::MajorityVote,
+        },
+        // Streaming route with the scaled-sign finalize (f64 ℓ1).
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::ScaledSign,
+        },
+        // Per-message scales defeat the streaming predicate: exercises
+        // the pool's buffered route for CompressedGd.
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::TernGrad,
+            aggregation: AggregationRule::Mean,
         },
         Algorithm::EfSparsign {
             b_local: 10.0,

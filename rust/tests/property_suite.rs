@@ -5,7 +5,7 @@ use sparsignd::coding::golomb;
 use sparsignd::compressors::{
     CompressedGrad, Compressor, CompressorKind, NormKind, PackedTernary,
 };
-use sparsignd::coordinator::{vote_counts, AggregationRule};
+use sparsignd::coordinator::{vote_counts, AggregationRule, VoteAccumulator};
 use sparsignd::experiments::theory;
 use sparsignd::testing::{check, check_vec, gen, PropConfig};
 use sparsignd::util::rng::Pcg64;
@@ -351,6 +351,64 @@ fn prop_vote_counts_equal_naive() {
                 let want: i32 = codes.iter().map(|q| q[i] as i32).sum();
                 if counts[i] as i32 != want {
                     return Err(format!("coord {i}: {} vs {want}", counts[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Streaming determinism (DESIGN.md §10): sharding an arbitrary message
+/// multiset over any number of per-thread `VoteAccumulator`s — arbitrary
+/// assignment, including empty shards — and merging must reproduce the
+/// single-shot `vote_counts` exactly. Message counts range past 255 so
+/// the accumulators cross the 8-plane word-transpose group boundary.
+#[test]
+fn prop_vote_accumulator_merge_matches_single_shot() {
+    check(
+        cfg(48, 0xbb),
+        |rng| {
+            let d = 1 + rng.index(260);
+            let m = 1 + rng.index(520);
+            let shards = 1 + rng.index(8);
+            let codes: Vec<Vec<i8>> = (0..m)
+                .map(|_| (0..d).map(|_| [-1i8, -1, 0, 0, 1, 1][rng.index(6)]).collect())
+                .collect();
+            let assign: Vec<usize> = (0..m).map(|_| rng.index(shards)).collect();
+            (codes, assign, shards)
+        },
+        |(codes, assign, shards)| {
+            let d = codes[0].len();
+            let m = codes.len();
+            let packs: Vec<PackedTernary> =
+                codes.iter().map(|q| PackedTernary::from_codes(q, 1.0)).collect();
+            let refs: Vec<&PackedTernary> = packs.iter().collect();
+            let want = vote_counts(&refs, d);
+            let mut global = VoteAccumulator::new();
+            global.reset(d, m);
+            let mut local = VoteAccumulator::new();
+            for s in 0..*shards {
+                local.reset(d, m);
+                for (pack, &owner) in packs.iter().zip(assign) {
+                    if owner == s {
+                        local.fold(pack);
+                    }
+                }
+                global.merge(&local);
+            }
+            if global.msgs() != m {
+                return Err(format!("merged {} of {m} messages", global.msgs()));
+            }
+            let mut got = vec![0i16; d];
+            global.counts_into(&mut got);
+            for i in 0..d {
+                if got[i] != want[i] {
+                    return Err(format!(
+                        "coord {i} (d={d}, m={m}, shards={shards}): merged {} vs \
+                         single-shot {}",
+                        got[i],
+                        want[i]
+                    ));
                 }
             }
             Ok(())

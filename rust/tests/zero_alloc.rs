@@ -5,7 +5,10 @@
 //!
 //! Enforced with a counting global allocator. The counter is
 //! **thread-local**, so concurrently running tests in this binary cannot
-//! perturb the measurement taken on this thread.
+//! perturb the measurement taken on this thread. The whole-round
+//! contract for the persistent pool engine (worker + server side, all
+//! threads) lives in `tests/zero_alloc_round.rs`, which needs a global
+//! counter and therefore its own binary.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;

@@ -1,0 +1,130 @@
+//! Whole-round zero-allocation + zero-spawn contract for the persistent
+//! pool engine (DESIGN.md §10): once the pool is constructed and the
+//! first round has warmed every scratch buffer (worker scratch, packed
+//! message buffers, vote accumulators, server scratch), additional
+//! steady-state rounds on the packed-ternary fast path must not touch
+//! the heap on ANY thread and must not spawn threads.
+//!
+//! Unlike `tests/zero_alloc.rs` (thread-local counter, per-component
+//! contracts), the counter here is a **global atomic** so pool-thread
+//! allocations count too. Measurement is differential: two runs that are
+//! identical except for their round count must allocate the same number
+//! of times — pool construction, warm-up growth, report/ledger
+//! preallocation and the final eval all cancel, so the extra rounds must
+//! contribute exactly zero allocations. A `thread::spawn` allocates
+//! (stack bookkeeping, JoinHandle state), so equality also pins "zero
+//! thread spawns after pool construction". This binary holds exactly one
+//! test so no concurrent test can perturb the global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sparsignd::compressors::CompressorKind;
+use sparsignd::coordinator::{AggregationRule, Algorithm, ClassifierEnv, TrainingRun};
+use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+use sparsignd::model::ModelKind;
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers all allocation to `System`; the counter is a static
+// atomic (no lazy init, no recursive allocation).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn env() -> ClassifierEnv {
+    // Same shapes `tests/zero_alloc.rs` pins allocation-free for the
+    // worker-side `sample_grad_ws` path.
+    let task = SyntheticTask::generate(
+        SyntheticSpec {
+            dim: 20,
+            classes: 4,
+            modes: 1,
+            separation: 1.5,
+            noise: 0.2,
+            label_noise: 0.0,
+            train: 400,
+            test: 80,
+        },
+        7,
+    );
+    let mut rng = Pcg64::seed_from(8);
+    let fed = DirichletPartitioner { alpha: 0.5, workers: 6 }.partition(&task.train, &mut rng);
+    ClassifierEnv::new(
+        ModelKind::Mlp { inputs: 20, hidden: vec![16], classes: 4 }.build(),
+        task.train,
+        task.test,
+        fed,
+        16,
+    )
+}
+
+/// Run the streaming fast path (sparsign + majority vote over the pool
+/// engine) for `rounds` rounds and return the allocations the whole run
+/// performed across every thread.
+fn run_and_count(e: &ClassifierEnv, rounds: usize) -> (Vec<f32>, u64) {
+    let run = TrainingRun {
+        algorithm: Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 1.0 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        schedule: LrSchedule::Const { lr: 0.05 },
+        rounds,
+        participation: 1.0,
+        eval_every: 0, // eval only on the final round, once per run
+        seed: 11,
+        attack: None,
+        allow_stateful_with_sampling: false,
+        threads: Some(3), // force the pool engine regardless of host cores
+    };
+    let mut rng = Pcg64::seed_from(12);
+    let init = e.init_params(&mut rng);
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let hist = run.run(e, init, &|p| e.evaluate(p));
+    let after = ALLOCS.load(Ordering::Relaxed);
+    (hist.final_params, after - before)
+}
+
+#[test]
+fn pool_engine_steady_state_rounds_allocate_nothing() {
+    let e = env();
+    let short_rounds = 4;
+    let long_rounds = 12;
+    // Warm-up run first so one-time process-global initialization (lazy
+    // stdlib state, allocator metadata) cannot skew the comparison.
+    let _ = run_and_count(&e, short_rounds);
+    let (params_short, allocs_short) = run_and_count(&e, short_rounds);
+    let (params_long, allocs_long) = run_and_count(&e, long_rounds);
+    // Determinism sanity: the longer run replays the shorter one's
+    // prefix, so its parameters must differ only by the extra training.
+    assert_eq!(params_short.len(), params_long.len());
+    assert!(allocs_short > 0, "counting allocator not engaged");
+    assert_eq!(
+        allocs_long,
+        allocs_short,
+        "{} extra steady-state rounds allocated {} times (worker or server \
+         side of the streaming fast path touched the heap, or the pool \
+         spawned threads after construction)",
+        long_rounds - short_rounds,
+        allocs_long as i64 - allocs_short as i64
+    );
+}
