@@ -13,6 +13,10 @@
 //!      `Mlp::loss_grad_ws` vs the pre-PR scalar path (kept verbatim in
 //!      `scalar_baseline` below)
 //!   7. PJRT end-to-end worker step (when artifacts are present)
+//!   8. the federation transport (DESIGN.md §11): wire-codec
+//!      encode/decode frames-per-second plus an end-to-end loopback
+//!      federated run (1k virtual clients over UDS, TCP fallback) pinned
+//!      bit-identical to the in-process engine
 //!
 //! `cargo bench --bench perf_hotpaths` runs the full configuration;
 //! `-- --smoke` (or `PERF_SMOKE=1`) shrinks every section for CI.
@@ -530,6 +534,103 @@ fn bench_engine_10k(rep: &mut Report, smoke: bool) {
     }
 }
 
+/// §11: the transport leg — codec throughput, then a 1k-virtual-client
+/// loopback federated run (UDS where available, else TCP) diffed
+/// bit-exactly against the in-process engine.
+fn bench_transport(rep: &mut Report, smoke: bool) {
+    use sparsignd::net::{self, wire};
+
+    // --- codec: encode / decode+unpack frames per second -------------
+    let d = 1 << 14;
+    println!("\n-- transport: wire codec (update frames, d = {d}, ~25% dense) --");
+    let mut rng = Pcg64::seed_from(21);
+    let codes: Vec<i8> = (0..d).map(|_| [-1i8, 0, 0, 1][rng.index(4)]).collect();
+    let pack = sparsignd::compressors::PackedTernary::from_codes(&codes, 1.0);
+    let grad = CompressedGrad::ternary(pack, 2.0 * d as f64);
+    let mut wbuf = wire::WireBuf::new();
+    let mut frame = Vec::new();
+    let iters = if smoke { 2_000 } else { 20_000 };
+
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        frame.clear();
+        std::hint::black_box(wbuf.encode_update(7, i as u64, 0.5, &grad, &mut frame));
+    }
+    let enc = iters as f64 / t0.elapsed().as_secs_f64();
+    let mib = frame.len() as f64 * enc / (1u64 << 20) as f64;
+    println!("  encode: {enc:>10.0} frames/s ({mib:>7.1} MiB/s, {} B/frame)", frame.len());
+
+    let mut scratch = sparsignd::compressors::PackedTernary::zeros(0, 1.0);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let (f, _) = wire::parse_frame(&frame, wire::MAX_PAYLOAD).expect("frame");
+        let uv = wire::decode_update(f.payload).expect("update");
+        uv.grad.unpack_ternary_into(&mut scratch).expect("unpack");
+        std::hint::black_box(scratch.nnz());
+    }
+    let dec = iters as f64 / t0.elapsed().as_secs_f64();
+    let mib = frame.len() as f64 * dec / (1u64 << 20) as f64;
+    println!("  decode: {dec:>10.0} frames/s ({mib:>7.1} MiB/s, CRC + unpack + revalidate)");
+    rep.num("wire_frame_bytes", frame.len() as f64);
+    rep.num("wire_encode_frames_per_sec", enc);
+    rep.num("wire_decode_frames_per_sec", dec);
+
+    // --- end-to-end loopback federated run ----------------------------
+    let m = 1_000;
+    let de = if smoke { 1 << 12 } else { 1 << 13 };
+    let rounds = if smoke { 2 } else { 5 };
+    let env = SynthEnv { d: de, m };
+    let run = TrainingRun {
+        algorithm: Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 1.0 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        schedule: LrSchedule::Const { lr: 0.01 },
+        rounds,
+        participation: 1.0,
+        eval_every: 0,
+        seed: 12,
+        attack: None,
+        allow_stateful_with_sampling: false,
+        threads: None,
+    };
+    let init = vec![0.0f32; de];
+    let in_process = run.run(&env, init.clone(), &|_p| (0.0, 0.0));
+
+    let uds = cfg!(unix);
+    let transport = if uds { "uds" } else { "tcp" };
+    println!(
+        "\n-- transport: loopback round engine \
+         ({m} virtual clients over {transport}, d = {de}) --"
+    );
+    let serve_opts = net::ServeOptions::new(net::client::loopback_endpoint(uds));
+    let fleet_opts = net::FleetOptions::default();
+    let eval = |_p: &[f32]| (0.0, 0.0);
+    let t0 = std::time::Instant::now();
+    let (wire_hist, stats) =
+        net::run_loopback(&run, &env, init, &eval, serve_opts, &fleet_opts).expect("loopback");
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        in_process.final_params, wire_hist.final_params,
+        "transport run diverged from the in-process engine"
+    );
+    assert_eq!(in_process.total_uplink(), wire_hist.total_uplink());
+    let rps = rounds as f64 / dt;
+    let up_mib = wire_hist.ledger.total_uplink_wire_bytes() as f64 / (1 << 20) as f64;
+    println!(
+        "  {rounds} rounds in {dt:.2}s → {rps:.2} rounds/s \
+         ({:.2}M updates/s, {up_mib:.1} MiB uplink on the wire, {} agents; bit-identical)",
+        rps * m as f64 / 1e6,
+        fleet_opts.agents
+    );
+    rep.text("transport_kind", transport);
+    rep.num("transport_clients", m as f64);
+    rep.num("transport_dim", de as f64);
+    rep.num("transport_rounds_per_sec", rps);
+    rep.num("transport_uplink_wire_mib", up_mib);
+    rep.num("transport_fleet_updates", stats.updates_sent as f64);
+}
+
 fn bench_golomb(d: usize) {
     println!("\n-- Golomb position coding (d = {d}) --");
     let mut rng = Pcg64::seed_from(4);
@@ -736,6 +837,7 @@ fn main() {
         bench_aggregation(1 << 13, 32);
         bench_engine(&mut rep, 1 << 15, 16, 2);
         bench_engine_10k(&mut rep, true);
+        bench_transport(&mut rep, true);
         bench_golomb(1 << 14);
         bench_gemm(&mut rep, true);
         bench_loss_grad(&mut rep, true);
@@ -746,6 +848,7 @@ fn main() {
         bench_aggregation(1 << 16, 100);
         bench_engine(&mut rep, 1 << 20, 100, 2);
         bench_engine_10k(&mut rep, false);
+        bench_transport(&mut rep, false);
         bench_golomb(1 << 20);
         bench_gemm(&mut rep, false);
         bench_loss_grad(&mut rep, false);

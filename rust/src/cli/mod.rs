@@ -73,6 +73,12 @@ impl ArgMap {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// Raw string flag with a default (the `serve`/`fleet` launchers'
+    /// endpoint and transport flags are string-typed).
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get_str(name).unwrap_or(default)
+    }
+
     /// Boolean switch presence.
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
@@ -110,6 +116,13 @@ mod tests {
         assert!(a.require::<usize>("rounds").is_err());
         let b = parse("bench --rounds nope");
         assert!(b.require::<usize>("rounds").is_err());
+    }
+
+    #[test]
+    fn str_or_defaults() {
+        let a = parse("fleet --transport uds");
+        assert_eq!(a.str_or("transport", "tcp"), "uds");
+        assert_eq!(a.str_or("addr", "127.0.0.1:0"), "127.0.0.1:0");
     }
 
     #[test]

@@ -233,6 +233,55 @@ impl PackedTernary {
         let s = self.scale;
         self.for_each_nonzero(|i, q| acc[i] += s * q as f32);
     }
+
+    /// Rebuild this message from decoded bitplane words — the wire-codec
+    /// ingest path (`net/wire.rs`). The iterator yields `(mask, sign)`
+    /// word pairs in plane order. Every construction invariant is
+    /// re-validated against untrusted input: the word count must match
+    /// `dim`, mask bits past `dim` must be clear, `sign ⊆ mask` must
+    /// hold, and the cached `nnz` is recomputed from the planes rather
+    /// than trusted from the peer. Storage is reused, so decoding a
+    /// same-shape stream into one scratch message allocates nothing
+    /// after warm-up.
+    pub fn load_words<I>(&mut self, dim: usize, scale: f32, words: I) -> Result<(), &'static str>
+    where
+        I: ExactSizeIterator<Item = (u64, u64)>,
+    {
+        let need = Self::words(dim);
+        if words.len() != need {
+            return Err("bitplane word count does not match dim");
+        }
+        if !scale.is_finite() {
+            return Err("non-finite decode scale");
+        }
+        self.mask.clear();
+        self.sign.clear();
+        self.mask.reserve(need);
+        self.sign.reserve(need);
+        let mut nnz = 0usize;
+        for (i, (m, s)) in words.enumerate() {
+            let valid = if i + 1 == need && dim & 63 != 0 {
+                (1u64 << (dim & 63)) - 1
+            } else {
+                !0u64
+            };
+            if m & !valid != 0 {
+                self.reset(0, 1.0);
+                return Err("mask bits beyond dim");
+            }
+            if s & !m != 0 {
+                self.reset(0, 1.0);
+                return Err("sign bit outside the support mask");
+            }
+            nnz += m.count_ones() as usize;
+            self.mask.push(m);
+            self.sign.push(s);
+        }
+        self.dim = dim;
+        self.nnz = nnz;
+        self.scale = scale;
+        Ok(())
+    }
 }
 
 /// Append the next coordinate's code (`-1`, `0`, or `+1`) to a packed
@@ -323,7 +372,9 @@ impl PackedWriter<'_> {
 }
 
 /// A compressed gradient message plus its exact uplink cost in bits.
-#[derive(Clone, Debug)]
+/// `PartialEq` compares payload, cached counts and bit cost exactly —
+/// the wire codec's round-trip tests rely on it.
+#[derive(Clone, Debug, PartialEq)]
 pub enum CompressedGrad {
     /// Ternary codes in packed bitplanes; decoded value is
     /// `pack.scale() * q[i]`. `bits` is the Golomb-accounted message size.
@@ -724,6 +775,43 @@ mod tests {
         pack.set(129, -1);
         pack.reset(3, 1.0);
         assert_eq!(pack.to_codes(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn load_words_roundtrips_and_validates() {
+        // Round-trip: planes out of one message rebuild an equal message.
+        let codes: Vec<i8> = (0..130).map(|i| [(0i8), 1, -1, 0, 1][i % 5]).collect();
+        let src = PackedTernary::from_codes(&codes, 0.75);
+        let mut dst = PackedTernary::zeros(0, 1.0);
+        dst.load_words(
+            src.dim(),
+            src.scale(),
+            src.mask_words().iter().copied().zip(src.sign_words().iter().copied()),
+        )
+        .unwrap();
+        assert_eq!(src, dst);
+        assert_eq!(dst.nnz(), src.nnz());
+
+        // Word count mismatch.
+        let words = [(0u64, 0u64)];
+        assert!(dst.load_words(130, 1.0, words.iter().copied()).is_err());
+        // Mask bit beyond dim (dim = 3, bit 5 set).
+        let words = [(1u64 << 5, 0u64)];
+        assert!(dst.load_words(3, 1.0, words.iter().copied()).is_err());
+        // Sign outside support.
+        let words = [(0b01u64, 0b10u64)];
+        assert!(dst.load_words(3, 1.0, words.iter().copied()).is_err());
+        // Non-finite scale.
+        let words = [(0b01u64, 0b01u64)];
+        assert!(dst.load_words(3, f32::NAN, words.iter().copied()).is_err());
+        // A failed load leaves the scratch in a consistent empty state.
+        assert_eq!(dst.nnz(), 0);
+        // nnz is recomputed, not trusted: a valid load reports popcount.
+        let words = [(0b101u64, 0b100u64)];
+        dst.load_words(3, 2.0, words.iter().copied()).unwrap();
+        assert_eq!(dst.to_codes(), vec![1, 0, -1]);
+        assert_eq!(dst.nnz(), 2);
+        assert_eq!(dst.scale(), 2.0);
     }
 
     #[test]

@@ -15,6 +15,13 @@
 use crate::compressors::{CompressedGrad, PackedTernary};
 use crate::util::l1_norm_f64;
 
+/// Exact-count capacity of the vote path: per-coordinate counts are
+/// `i16`, so at most this many ternary messages can be folded into one
+/// [`VoteAccumulator`] (or passed to [`vote_counts`]). Cohorts beyond it
+/// keep the buffered f32 reference route — the round engine and the
+/// `net` coordinator service both gate their streaming fast path on it.
+pub const MAX_STREAM_MSGS: usize = i16::MAX as usize;
+
 /// The aggregation rule applied to the averaged worker messages before
 /// broadcast.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,9 +88,8 @@ impl VoteAccumulator {
     /// round never reallocates (`tests/zero_alloc_round.rs`).
     pub fn reset(&mut self, dim: usize, cap: usize) {
         assert!(
-            cap >= 1 && cap <= i16::MAX as usize,
-            "vote accumulator supports 1..={} messages, got {cap}",
-            i16::MAX
+            cap >= 1 && cap <= MAX_STREAM_MSGS,
+            "vote accumulator supports 1..={MAX_STREAM_MSGS} messages, got {cap}"
         );
         self.dim = dim;
         self.cap = cap;
@@ -182,9 +188,8 @@ impl VoteAccumulator {
 /// Requires `packs.len() ≤ i16::MAX`; the per-lane counts are exact.
 pub fn vote_counts(packs: &[&PackedTernary], dim: usize) -> Vec<i16> {
     assert!(
-        packs.len() <= i16::MAX as usize,
-        "vote_counts supports at most {} messages, got {}",
-        i16::MAX,
+        packs.len() <= MAX_STREAM_MSGS,
+        "vote_counts supports at most {MAX_STREAM_MSGS} messages, got {}",
         packs.len()
     );
     let mut acc = VoteAccumulator::new();
@@ -303,7 +308,7 @@ impl AggregationRule {
         let inv = 1.0 / msgs.len() as f32;
         let mut avg: Vec<f32>;
         if let Some((packs, scale)) =
-            uniform_packed_ternary(msgs).filter(|_| msgs.len() <= i16::MAX as usize)
+            uniform_packed_ternary(msgs).filter(|_| msgs.len() <= MAX_STREAM_MSGS)
         {
             // Word-parallel path: integer votes, one f32 pass at the end.
             let counts = vote_counts(&packs, d);

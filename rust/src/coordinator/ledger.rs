@@ -1,6 +1,23 @@
 //! Communication accounting: every bit that crosses the (simulated)
 //! network is recorded here, per round and per direction. The paper's
 //! "communication overhead" columns are uplink (worker → server) totals.
+//!
+//! Two layers of accounting coexist per round:
+//!
+//! * **payload-bit estimates** (`uplink_bits` / `downlink_bits`) — the
+//!   paper's eq. (12) cost model, attached to every message at
+//!   compression time. These are what the tables/figures report, and
+//!   they are identical between the in-process engine and a `net`
+//!   transport run (the equivalence tests compare them).
+//! * **wire bytes** (`uplink_wire_bytes` / `downlink_wire_bytes`) —
+//!   actual framed bytes (header + varints + CRC included) observed by
+//!   the `net` coordinator service. Zero for in-process runs. Downlink
+//!   wire bytes count the real per-connection fan-out, unlike the
+//!   single-copy `downlink_bits` convention.
+//!
+//! `stragglers` counts selected workers whose update missed the round
+//! deadline (or whose client died mid-round) in a transport run; the
+//! in-process engine never records any.
 
 use crate::compressors::CompressedGrad;
 
@@ -18,6 +35,14 @@ pub struct RoundComm {
     /// (reads the count cached at message construction — no payload
     /// rescan).
     pub uplink_nnz: usize,
+    /// Actual framed bytes received uplink (accepted update frames,
+    /// including frame header + CRC overhead). Zero in-process.
+    pub uplink_wire_bytes: u64,
+    /// Actual framed bytes broadcast downlink (per-connection fan-out of
+    /// the round-open frame). Zero in-process.
+    pub downlink_wire_bytes: u64,
+    /// Selected workers that failed to deliver before the round closed.
+    pub stragglers: usize,
 }
 
 impl RoundComm {
@@ -28,6 +53,7 @@ impl RoundComm {
             downlink_bits,
             senders: msgs.len(),
             uplink_nnz: msgs.iter().map(|m| m.nnz()).sum(),
+            ..RoundComm::default()
         }
     }
 }
@@ -54,6 +80,26 @@ impl CommLedger {
         self.rounds.push(round);
     }
 
+    /// Attach wire-level observations to an already-recorded round — the
+    /// `net` coordinator calls this right after the shared round tail
+    /// (`RoundLoop::finish_round`) records the payload-bit estimates, so
+    /// the estimate and wire layers never diverge on round indices.
+    pub fn annotate_wire(
+        &mut self,
+        t: usize,
+        uplink_wire_bytes: u64,
+        downlink_wire_bytes: u64,
+        stragglers: usize,
+    ) {
+        let r = self
+            .rounds
+            .get_mut(t)
+            .unwrap_or_else(|| panic!("annotate_wire: round {t} not recorded yet"));
+        r.uplink_wire_bytes = uplink_wire_bytes;
+        r.downlink_wire_bytes = downlink_wire_bytes;
+        r.stragglers = stragglers;
+    }
+
     pub fn rounds(&self) -> usize {
         self.rounds.len()
     }
@@ -66,6 +112,21 @@ impl CommLedger {
     /// Total downlink bits so far.
     pub fn total_downlink(&self) -> f64 {
         self.rounds.iter().map(|r| r.downlink_bits).sum()
+    }
+
+    /// Total framed uplink bytes so far (zero for in-process runs).
+    pub fn total_uplink_wire_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.uplink_wire_bytes).sum()
+    }
+
+    /// Total framed downlink bytes so far (zero for in-process runs).
+    pub fn total_downlink_wire_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.downlink_wire_bytes).sum()
+    }
+
+    /// Total deadline-missed (or mid-round-dropped) selected workers.
+    pub fn total_stragglers(&self) -> usize {
+        self.rounds.iter().map(|r| r.stragglers).sum()
     }
 
     /// Cumulative uplink bits after round `t` (inclusive, 0-based).
@@ -107,12 +168,14 @@ mod tests {
             downlink_bits: 10.0,
             senders: 5,
             uplink_nnz: 40,
+            ..RoundComm::default()
         });
         l.record(RoundComm {
             uplink_bits: 50.0,
             downlink_bits: 10.0,
             senders: 5,
             uplink_nnz: 20,
+            ..RoundComm::default()
         });
         assert_eq!(l.rounds(), 2);
         assert_eq!(l.total_uplink(), 150.0);
@@ -121,6 +184,10 @@ mod tests {
         assert_eq!(l.uplink_through(1), 150.0);
         assert_eq!(l.mean_uplink_per_round(), 75.0);
         assert_eq!(l.total_uplink_nnz(), 60);
+        // No wire layer recorded: totals stay zero.
+        assert_eq!(l.total_uplink_wire_bytes(), 0);
+        assert_eq!(l.total_downlink_wire_bytes(), 0);
+        assert_eq!(l.total_stragglers(), 0);
     }
 
     #[test]
@@ -143,5 +210,28 @@ mod tests {
         assert_eq!(rc.downlink_bits, 4.0);
         assert_eq!(rc.senders, 2);
         assert_eq!(rc.uplink_nnz, 4);
+        assert_eq!(rc.uplink_wire_bytes, 0);
+        assert_eq!(rc.stragglers, 0);
+    }
+
+    #[test]
+    fn annotate_wire_amends_recorded_rounds() {
+        let mut l = CommLedger::new();
+        l.record(RoundComm { uplink_bits: 10.0, senders: 2, ..RoundComm::default() });
+        l.record(RoundComm { uplink_bits: 20.0, senders: 2, ..RoundComm::default() });
+        l.annotate_wire(0, 128, 64, 0);
+        l.annotate_wire(1, 100, 64, 1);
+        assert_eq!(l.total_uplink_wire_bytes(), 228);
+        assert_eq!(l.total_downlink_wire_bytes(), 128);
+        assert_eq!(l.total_stragglers(), 1);
+        // Payload-bit estimates are untouched by the wire layer.
+        assert_eq!(l.total_uplink(), 30.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not recorded yet")]
+    fn annotate_wire_requires_recorded_round() {
+        let mut l = CommLedger::new();
+        l.annotate_wire(0, 1, 1, 0);
     }
 }

@@ -40,7 +40,7 @@ pub mod ledger;
 pub(crate) mod pool;
 pub mod sampling;
 
-pub use aggregation::{vote_counts, Aggregate, AggregationRule, VoteAccumulator};
+pub use aggregation::{vote_counts, Aggregate, AggregationRule, VoteAccumulator, MAX_STREAM_MSGS};
 pub use attacks::{Attack, AttackPlan};
 pub use env::{ClassifierEnv, GradientSource, RosenbrockEnv};
 pub use ledger::{CommLedger, RoundComm};
@@ -214,12 +214,19 @@ pub struct TrainingRun {
 /// Alias kept for API symmetry with the docs ("the federated server").
 pub type FederatedServer = TrainingRun;
 
+/// Per-worker compressor bank: the stateful EF/SSDM baselines keep their
+/// residual/momentum behind the per-slot mutexes (uncontended — each
+/// worker is visited by exactly one thread per round).
+pub(crate) type WorkerComps = Vec<Mutex<Box<dyn Compressor>>>;
+
 /// Per-thread scratch reused across rounds — the seed engine allocated
 /// `params.clone()`, `accum` and the gradient buffer per worker per round.
 /// `model` extends this to the full worker-side hot path: batch gather,
 /// activations, deltas and GEMM packing buffers, so a steady-state
 /// `loss_grad` performs zero heap allocations (`tests/zero_alloc.rs`).
-struct WorkerScratch {
+/// Crate-visible because the `net` client fleet runs the same worker
+/// loop remotely.
+pub(crate) struct WorkerScratch {
     grad: Vec<f32>,
     wm: Vec<f32>,
     accum: Vec<f32>,
@@ -227,7 +234,7 @@ struct WorkerScratch {
 }
 
 impl WorkerScratch {
-    fn new(d: usize) -> Self {
+    pub(crate) fn new(d: usize) -> Self {
         Self {
             grad: vec![0.0; d],
             wm: vec![0.0; d],
@@ -241,24 +248,25 @@ impl WorkerScratch {
 /// selection buffer, the vote-count/update buffers, the per-slot
 /// order-sensitive scalar arrays, and the buffered-route message slots.
 /// On the streaming fast path a steady-state round touches none of the
-/// heap (`tests/zero_alloc_round.rs`).
-struct ServerScratch {
+/// heap (`tests/zero_alloc_round.rs`). Crate-visible because the `net`
+/// coordinator service fills the same slots from decoded frames.
+pub(crate) struct ServerScratch {
     /// This round's selected worker ids (`WorkerSampler::select_into`).
-    selected: Vec<usize>,
+    pub(crate) selected: Vec<usize>,
     /// Merged per-coordinate vote counts (streaming route).
-    counts: Vec<i16>,
+    pub(crate) counts: Vec<i16>,
     /// The broadcast update `g̃`.
-    update: Vec<f32>,
+    pub(crate) update: Vec<f32>,
     /// Per-slot first-local-step losses (reduced in selection order).
-    losses: Vec<f64>,
+    pub(crate) losses: Vec<f64>,
     /// Per-slot uplink bit costs (streaming route; buffered messages
     /// carry their own).
-    bits: Vec<f64>,
+    pub(crate) bits: Vec<f64>,
     /// Per-slot uplink non-zero counts (streaming route).
-    nnz: Vec<usize>,
+    pub(crate) nnz: Vec<usize>,
     /// Message slots for the buffered reference route; stay `None` on the
     /// streaming route.
-    msgs: Vec<Option<CompressedGrad>>,
+    pub(crate) msgs: Vec<Option<CompressedGrad>>,
 }
 
 impl ServerScratch {
@@ -276,34 +284,67 @@ impl ServerScratch {
 }
 
 /// The coordinator's per-round tail, shared by the serial reference
-/// engine and the pool engine: ordered scalar reduction, aggregation
-/// dispatch (streaming finalize vs buffered reference), the Algorithm 2
-/// EF recursion, the probe, the model step, and the round report.
-struct RoundLoop<'a> {
+/// engine, the pool engine and the `net` coordinator service: ordered
+/// scalar reduction, aggregation dispatch (streaming finalize vs
+/// buffered reference), the Algorithm 2 EF recursion, the probe, the
+/// model step, and the round report. The transport server reuses this
+/// struct verbatim, which is what makes a wire run's `RunHistory`
+/// bit-identical to the in-process engine by construction.
+pub(crate) struct RoundLoop<'a> {
     run: &'a TrainingRun,
     d: usize,
-    /// Unit-scale packed-ternary fast path active (pool engine only).
+    /// Unit-scale packed-ternary fast path active (pool engine / net
+    /// coordinator).
     streaming: bool,
     sampler: WorkerSampler,
     select_rng: Pcg64,
-    server: ServerScratch,
+    pub(crate) server: ServerScratch,
     /// Algorithm 2's server error-feedback residual `ẽ`.
     server_residual: Vec<f32>,
-    params: Vec<f32>,
+    pub(crate) params: Vec<f32>,
     reports: Vec<RoundReport>,
     cum_uplink: f64,
-    ledger: CommLedger,
+    pub(crate) ledger: CommLedger,
 }
 
-impl RoundLoop<'_> {
+impl<'a> RoundLoop<'a> {
+    /// Build the per-run server state: worker sampler + selection RNG
+    /// (derived from the run seed exactly as every engine does), slot
+    /// buffers sized for the per-round cohort, and the initial model.
+    pub(crate) fn new(
+        run: &'a TrainingRun,
+        d: usize,
+        m: usize,
+        streaming: bool,
+        init: Vec<f32>,
+    ) -> Self {
+        assert_eq!(init.len(), d, "init params dim mismatch");
+        assert!(run.rounds > 0, "need at least one round");
+        let sampler = WorkerSampler::new(m, run.participation);
+        let n_max = sampler.per_round();
+        RoundLoop {
+            run,
+            d,
+            streaming,
+            sampler,
+            select_rng: run.root_rng().derive(0xfeed),
+            server: ServerScratch::new(d, n_max),
+            server_residual: vec![0.0; d],
+            params: init,
+            reports: Vec::with_capacity(run.rounds),
+            cum_uplink: 0.0,
+            ledger: CommLedger::with_capacity(run.rounds),
+        }
+    }
+
     /// Draw this round's worker selection; returns the slot count.
-    fn select(&mut self) -> usize {
+    pub(crate) fn select(&mut self) -> usize {
         self.sampler.select_into(&mut self.select_rng, &mut self.server.selected);
         self.server.selected.len()
     }
 
     /// Everything after the round's worker fan-out filled the slots.
-    fn finish_round(
+    pub(crate) fn finish_round(
         &mut self,
         t: usize,
         lr: f64,
@@ -374,6 +415,7 @@ impl RoundLoop<'_> {
             downlink_bits: downlink,
             senders: n,
             uplink_nnz: round_nnz,
+            ..RoundComm::default()
         });
         if let Some(p) = probe.as_mut() {
             p(t, &self.params, &self.server.update);
@@ -397,7 +439,7 @@ impl RoundLoop<'_> {
         });
     }
 
-    fn into_history(self, label: String, dim: usize) -> RunHistory {
+    pub(crate) fn into_history(self, label: String, dim: usize) -> RunHistory {
         RunHistory {
             label,
             dim,
@@ -451,11 +493,64 @@ impl TrainingRun {
         hw.min(workers_per_round.max(1))
     }
 
+    /// The run's root RNG stream — every engine (serial, pool, and the
+    /// `net` client fleet) derives worker/selection streams from this
+    /// exact constant, which is what keeps them replay-identical.
+    pub(crate) fn root_rng(&self) -> Pcg64 {
+        Pcg64::new(self.seed, 0xc0_0e_d1)
+    }
+
+    /// Instantiate `count` per-worker compressor objects (empty for the
+    /// local-update algorithms, which compress inline). The `net` client
+    /// fleet builds one bank per hosted worker range.
+    pub(crate) fn build_worker_comps(&self, d: usize, count: usize) -> WorkerComps {
+        match &self.algorithm {
+            Algorithm::CompressedGd { compressor, .. } => {
+                (0..count).map(|_| Mutex::new(compressor.build(d))).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Refuse the stateful-compressor × worker-sampling configuration the
+    /// paper identifies as broken, unless explicitly overridden. Shared
+    /// by the in-process engines and the `net` client fleet.
+    pub(crate) fn reject_stateful_sampling(&self, comps: &WorkerComps) {
+        if let Some(c) = comps.first() {
+            let c = c.lock().expect("compressor lock");
+            if c.requires_worker_state()
+                && self.participation < 1.0
+                && !self.allow_stateful_with_sampling
+            {
+                panic!(
+                    "compressor '{}' keeps worker-side state and participation is {} < 1: \
+                     this is the configuration the paper shows to be broken \
+                     (stale error feedback); set allow_stateful_with_sampling \
+                     to run it anyway",
+                    c.name(),
+                    self.participation
+                );
+            }
+        }
+    }
+
+    /// True when the coordinator should stream votes into a
+    /// [`VoteAccumulator`] for an `n_max`-worker cohort instead of
+    /// buffering messages — the DESIGN.md §10 predicate, reused verbatim
+    /// by the `net` coordinator service (both routes are pinned
+    /// bit-identical, so the transport server streams whenever legal).
+    pub(crate) fn streams_votes(&self, n_max: usize) -> bool {
+        n_max <= MAX_STREAM_MSGS && self.algorithm.streams_unit_ternary()
+    }
+
     /// One worker's round: derive its RNG stream, sample the gradient(s),
     /// apply the attack, compress — returns the uplink message and the
     /// first-local-step loss. Pure in `(t, w, params)` given the run seed,
-    /// so it can execute on any thread in any order.
-    fn worker_round(
+    /// so it can execute on any thread in any order — or, via the `net`
+    /// client fleet, in any process. `comp` is the worker's own
+    /// compressor slot (required for [`Algorithm::CompressedGd`], unused
+    /// by the local-update algorithms).
+    pub(crate) fn worker_round(
         &self,
         env: &dyn GradientSource,
         t: usize,
@@ -463,7 +558,7 @@ impl TrainingRun {
         lr: f64,
         params: &[f32],
         root: &Pcg64,
-        comps: &[Mutex<Box<dyn Compressor>>],
+        comp: Option<&Mutex<Box<dyn Compressor>>>,
         scratch: &mut WorkerScratch,
     ) -> (CompressedGrad, f64) {
         let d = params.len();
@@ -475,7 +570,8 @@ impl TrainingRun {
                 if let Some(plan) = &self.attack {
                     plan.apply(w, &mut scratch.grad, &mut wrng);
                 }
-                let msg = comps[w]
+                let msg = comp
+                    .expect("CompressedGd worker requires its compressor slot")
                     .lock()
                     .expect("worker compressor lock poisoned")
                     .compress(&scratch.grad, &mut wrng);
@@ -576,7 +672,7 @@ impl TrainingRun {
         w: usize,
         params: &[f32],
         root: &Pcg64,
-        comps: &[Mutex<Box<dyn Compressor>>],
+        comp: &Mutex<Box<dyn Compressor>>,
         scratch: &mut WorkerScratch,
         pack: &mut PackedTernary,
     ) -> (f64, f64) {
@@ -586,7 +682,7 @@ impl TrainingRun {
         if let Some(plan) = &self.attack {
             plan.apply(w, &mut scratch.grad, &mut wrng);
         }
-        let bits = comps[w]
+        let bits = comp
             .lock()
             .expect("worker compressor lock poisoned")
             .compress_ternary_into(&scratch.grad, &mut wrng, pack)
@@ -607,61 +703,25 @@ impl TrainingRun {
         assert_eq!(init.len(), d, "init params dim mismatch");
         assert!(self.rounds > 0, "need at least one round");
         let m = env.workers();
-        let sampler = WorkerSampler::new(m, self.participation);
-        let root = Pcg64::new(self.seed, 0xc0_0e_d1);
-        let select_rng = root.derive(0xfeed);
+        let root = self.root_rng();
 
         // Per-worker compressor instances (the stateful EF/SSDM baselines
         // keep their residual/momentum here). Each worker is visited by
         // exactly one thread per round, so the per-slot mutexes are
         // uncontended; state still evolves per-worker-sequentially across
         // rounds, keeping threaded runs bit-exact.
-        let worker_comps: Vec<Mutex<Box<dyn Compressor>>> = match &self.algorithm {
-            Algorithm::CompressedGd { compressor, .. } => {
-                (0..m).map(|_| Mutex::new(compressor.build(d))).collect()
-            }
-            _ => Vec::new(),
-        };
-        if let Some(c) = worker_comps.first() {
-            let c = c.lock().expect("compressor lock");
-            if c.requires_worker_state()
-                && self.participation < 1.0
-                && !self.allow_stateful_with_sampling
-            {
-                panic!(
-                    "compressor '{}' keeps worker-side state and participation is {} < 1: \
-                     this is the configuration the paper shows to be broken \
-                     (stale error feedback); set allow_stateful_with_sampling \
-                     to run it anyway",
-                    c.name(),
-                    self.participation
-                );
-            }
-        }
+        let worker_comps = self.build_worker_comps(d, m);
+        self.reject_stateful_sampling(&worker_comps);
 
-        let n_max = sampler.per_round();
-        let threads = self.engine_threads(env, n_max);
         // The streaming fast path needs the pool's per-thread
         // accumulators; the serial reference engine stays buffered by
         // definition (it IS the reference the fast path is pinned to).
         // Cohorts beyond the accumulator's exact-count capacity keep the
         // buffered route too, mirroring `aggregate`'s own fast-path gate.
-        let streaming = threads > 1
-            && n_max <= i16::MAX as usize
-            && self.algorithm.streams_unit_ternary();
-        let mut lp = RoundLoop {
-            run: self,
-            d,
-            streaming,
-            sampler,
-            select_rng,
-            server: ServerScratch::new(d, n_max),
-            server_residual: vec![0.0; d],
-            params: init,
-            reports: Vec::with_capacity(self.rounds),
-            cum_uplink: 0.0,
-            ledger: CommLedger::with_capacity(self.rounds),
-        };
+        let n_max = WorkerSampler::new(m, self.participation).per_round();
+        let threads = self.engine_threads(env, n_max);
+        let streaming = threads > 1 && self.streams_votes(n_max);
+        let mut lp = RoundLoop::new(self, d, m, streaming, init);
 
         if threads <= 1 {
             // Serial reference engine: one scratch, buffered aggregation.
@@ -678,7 +738,7 @@ impl TrainingRun {
                         lr,
                         &lp.params,
                         &root,
-                        &worker_comps,
+                        worker_comps.get(w),
                         &mut scratch,
                     );
                     lp.server.losses[k] = loss;
@@ -731,7 +791,7 @@ impl TrainingRun {
                                         w,
                                         params,
                                         root,
-                                        comps,
+                                        &comps[w],
                                         &mut scratch,
                                         &mut pack,
                                     );
@@ -757,7 +817,7 @@ impl TrainingRun {
                                         job.lr,
                                         params,
                                         root,
-                                        comps,
+                                        comps.get(w),
                                         &mut scratch,
                                     );
                                     out.losses[i] = loss;

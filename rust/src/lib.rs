@@ -27,6 +27,11 @@
 //!   rust hot path (Python is never on the request path).
 //! * **[`coding`]** — bit-level Golomb/Elias entropy coders implementing
 //!   the paper's eq. (12) cost model for ternary gradient positions.
+//! * **[`net`]** — the federation transport layer: a versioned wire
+//!   codec (packed-ternary bitplanes as raw `u64` words, CRC-checked
+//!   frames), a coordinator service over TCP/UDS feeding the streaming
+//!   vote path, and a client-fleet driver whose loopback runs are
+//!   bit-identical to the in-process engine.
 //! * **[`experiments`]** — one harness per paper table/figure (Fig. 1–3,
 //!   Tables 1–7) that regenerates the reported rows/series.
 //!
@@ -52,6 +57,7 @@ pub mod data;
 pub mod experiments;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod optim;
 pub mod runtime;
 pub mod testing;

@@ -6,6 +6,8 @@
 //! sparsignd fig1    [--rounds N] [--lr X] [--csv out.csv]
 //! sparsignd fig2    [--rounds N] [--lr X] [--csv out.csv]
 //! sparsignd theory  [--trials N]
+//! sparsignd serve   [--addr EP] [--clients M] [--rounds N] [--deadline-ms D] …
+//! sparsignd fleet   [--clients M] [--rounds N] [--transport tcp|uds] [--connect EP] …
 //! sparsignd artifacts
 //! ```
 //!
@@ -13,9 +15,16 @@
 //! examples/ binaries show the embedded usage.
 
 use sparsignd::cli::ArgMap;
+use sparsignd::compressors::{CompressorKind, NormKind};
 use sparsignd::config::ExperimentConfig;
+use sparsignd::coordinator::{Algorithm, AggregationRule, ClassifierEnv, RunHistory, TrainingRun};
+use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
 use sparsignd::experiments;
 use sparsignd::metrics::write_csv;
+use sparsignd::model::ModelKind;
+use sparsignd::net;
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
 
 fn main() {
     let args = ArgMap::from_env();
@@ -25,6 +34,8 @@ fn main() {
         Some("fig1") => cmd_fig(&args, true),
         Some("fig2") => cmd_fig(&args, false),
         Some("theory") => cmd_theory(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("artifacts") => cmd_artifacts(),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
@@ -49,6 +60,9 @@ fn usage() {
          \x20 fig1       Rosenbrock wrong-aggregation figure (sign vs sparsign)\n\
          \x20 fig2       Rosenbrock worker-sampling figure\n\
          \x20 theory     Theorem 1 Monte-Carlo bound check\n\
+         \x20 serve      run the federation coordinator on a TCP/UDS endpoint\n\
+         \x20 fleet      drive a client fleet; default: loopback run diffed\n\
+         \x20            against the in-process engine (exit 1 on mismatch)\n\
          \x20 artifacts  list AOT artifacts + staleness"
     );
 }
@@ -193,6 +207,239 @@ fn cmd_theory(args: &ArgMap) -> i32 {
     } else {
         1
     }
+}
+
+/// Shared `serve`/`fleet` run shape: both sides of a distributed run
+/// must build it from the same flags (the dataset, partition and init
+/// are all derived from `--seed`).
+struct NetSetup {
+    env: ClassifierEnv,
+    run: TrainingRun,
+    init: Vec<f32>,
+}
+
+fn net_setup(args: &ArgMap) -> Result<NetSetup, String> {
+    let clients = args.get::<usize>("clients", 64);
+    let rounds = args.get::<usize>("rounds", 3);
+    let dim = args.get::<usize>("dim", 16);
+    let classes = args.get::<usize>("classes", 3);
+    let batch = args.get::<usize>("batch", 16);
+    let alpha = args.get::<f64>("alpha", 0.5);
+    let seed = args.get::<u64>("seed", 7);
+    let lr = args.get::<f64>("lr", 0.05);
+    let participation = args.get::<f64>("participation", 1.0);
+    if clients == 0 || rounds == 0 {
+        return Err("--clients and --rounds must be positive".into());
+    }
+
+    let compressor = match args.str_or("compressor", "sign") {
+        "sign" => CompressorKind::Sign,
+        "scaledsign" => CompressorKind::ScaledSign,
+        "sparsign" => CompressorKind::Sparsign { budget: args.get::<f32>("budget", 1.0) },
+        "stosign" => CompressorKind::StoSign { b: args.get::<f32>("b", 2.0) },
+        "terngrad" => CompressorKind::TernGrad,
+        "qsgd" => {
+            CompressorKind::Qsgd { levels: args.get::<u32>("levels", 255), norm: NormKind::L2 }
+        }
+        "identity" => CompressorKind::Identity,
+        other => return Err(format!("unknown --compressor '{other}'")),
+    };
+    let aggregation = match args.str_or("aggregation", "vote") {
+        "vote" => AggregationRule::MajorityVote,
+        "scaledsign" => AggregationRule::ScaledSign,
+        "mean" => AggregationRule::Mean,
+        other => return Err(format!("unknown --aggregation '{other}'")),
+    };
+
+    let task = SyntheticTask::generate(
+        SyntheticSpec {
+            dim,
+            classes,
+            modes: 1,
+            separation: 1.8,
+            noise: 0.25,
+            label_noise: 0.0,
+            train: (clients * batch * 4).max(512),
+            test: (clients * batch).max(256),
+        },
+        seed ^ 0x5e7,
+    );
+    let mut rng = Pcg64::seed_from(seed ^ 0x9a57);
+    let fed = DirichletPartitioner { alpha, workers: clients }.partition(&task.train, &mut rng);
+    let env = ClassifierEnv::new(
+        ModelKind::Linear { inputs: dim, classes }.build(),
+        task.train,
+        task.test,
+        fed,
+        batch,
+    );
+    let mut init_rng = Pcg64::seed_from(seed ^ 0x1417);
+    let init = env.init_params(&mut init_rng);
+
+    let mut run = TrainingRun::new(
+        Algorithm::CompressedGd { compressor, aggregation },
+        LrSchedule::Const { lr },
+        rounds,
+    );
+    run.participation = participation;
+    run.eval_every = args.get::<usize>("eval-every", 0);
+    run.seed = seed;
+    Ok(NetSetup { env, run, init })
+}
+
+/// Field-exact `RunHistory` comparison (the loopback acceptance gate).
+fn diff_histories(a: &RunHistory, b: &RunHistory) -> Result<(), String> {
+    if a.final_params != b.final_params {
+        return Err("final params differ".into());
+    }
+    if a.reports.len() != b.reports.len() {
+        return Err(format!("round counts differ: {} vs {}", a.reports.len(), b.reports.len()));
+    }
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        let same = ra.train_loss == rb.train_loss
+            && ra.uplink_bits == rb.uplink_bits
+            && ra.downlink_bits == rb.downlink_bits
+            && ra.cum_uplink_bits == rb.cum_uplink_bits
+            && ra.eval == rb.eval
+            && ra.lr == rb.lr;
+        if !same {
+            return Err(format!("round {} reports differ", ra.round));
+        }
+    }
+    if a.ledger.total_uplink() != b.ledger.total_uplink() {
+        return Err("ledger uplink totals differ".into());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &ArgMap) -> i32 {
+    let setup = match net_setup(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let ep = match net::Endpoint::parse(args.str_or("addr", "tcp://127.0.0.1:7070")) {
+        Ok(ep) => ep,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut opts = net::ServeOptions::new(ep);
+    let deadline_ms = args.get::<u64>("deadline-ms", 0);
+    if deadline_ms > 0 {
+        opts.round_deadline = Some(std::time::Duration::from_millis(deadline_ms));
+    }
+    let secs = args.get::<u64>("rendezvous-secs", 120);
+    opts.rendezvous_timeout = std::time::Duration::from_secs(secs);
+    let coordinator = match net::NetCoordinator::bind(opts) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bind: {e}");
+            return 1;
+        }
+    };
+    let NetSetup { env, run, init } = setup;
+    println!("coordinator listening on {}", coordinator.local_endpoint());
+    let eval = |p: &[f32]| env.evaluate(p);
+    match coordinator.serve(&run, env.fed.workers(), init, &eval) {
+        Ok(hist) => {
+            print_net_history("serve", &hist);
+            0
+        }
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_fleet(args: &ArgMap) -> i32 {
+    let setup = match net_setup(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let NetSetup { env, run, init } = setup;
+    let mut fleet_opts = net::FleetOptions::default();
+    if args.has("agents") {
+        fleet_opts.agents = args.get::<usize>("agents", fleet_opts.agents).max(1);
+    }
+
+    // Join an external coordinator when asked; default is the
+    // self-contained loopback diff against the in-process engine.
+    if let Some(addr) = args.get_str("connect") {
+        let ep = match net::Endpoint::parse(addr) {
+            Ok(ep) => ep,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        return match net::run_fleet(&ep, &run, &env, &fleet_opts) {
+            Ok(stats) => {
+                print_fleet_stats(&stats);
+                0
+            }
+            Err(e) => {
+                eprintln!("fleet: {e}");
+                1
+            }
+        };
+    }
+
+    let in_process = run.run(&env, init.clone(), &|p| env.evaluate(p));
+    let uds = args.str_or("transport", "tcp") == "uds";
+    let serve_opts = net::ServeOptions::new(net::client::loopback_endpoint(uds));
+    let eval = |p: &[f32]| env.evaluate(p);
+    let (wire_hist, stats) =
+        match net::run_loopback(&run, &env, init, &eval, serve_opts, &fleet_opts) {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!("loopback: {e}");
+                return 1;
+            }
+        };
+    print_net_history("loopback", &wire_hist);
+    print_fleet_stats(&stats);
+    match diff_histories(&in_process, &wire_hist) {
+        Ok(()) => {
+            println!("RunHistory identical to the in-process engine (same seed): PASS");
+            0
+        }
+        Err(e) => {
+            eprintln!("RunHistory DIVERGED from the in-process engine: {e}");
+            1
+        }
+    }
+}
+
+fn print_net_history(tag: &str, hist: &RunHistory) {
+    let eval = hist.final_eval().map(|(l, a)| format!("loss {l:.4}, acc {a:.3}"));
+    println!(
+        "[{tag}] {} | {} rounds | uplink {:.1} KiB-est / {:.1} KiB-wire | stragglers {} | {}",
+        hist.label,
+        hist.ledger.rounds(),
+        hist.total_uplink() / 8192.0,
+        hist.ledger.total_uplink_wire_bytes() as f64 / 1024.0,
+        hist.ledger.total_stragglers(),
+        eval.unwrap_or_else(|| "no eval".into())
+    );
+}
+
+fn print_fleet_stats(stats: &net::FleetStats) {
+    println!(
+        "[fleet] {} updates sent, {} rejected, {} round-opens, {:.1} KiB up / {:.1} KiB down",
+        stats.updates_sent,
+        stats.rejected,
+        stats.rounds_seen,
+        stats.bytes_up as f64 / 1024.0,
+        stats.bytes_down as f64 / 1024.0
+    );
 }
 
 fn cmd_artifacts() -> i32 {

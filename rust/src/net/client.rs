@@ -1,0 +1,271 @@
+//! The client fleet driver: N agent threads, each multiplexing a
+//! contiguous range of virtual clients (workers) through the full
+//! protocol — rendezvous, round-open, compute, compress, frame, submit,
+//! repeat until `Fin`.
+//!
+//! Each virtual worker's round is computed by the **same**
+//! `TrainingRun::worker_round` the in-process engines run, from the same
+//! seed-derived RNG stream, so the update frames a fleet sends are
+//! bit-identical to the messages the pool engine folds locally — the
+//! transport moves bytes, it does not perturb the math
+//! (`tests/net_loopback.rs` pins this end to end).
+
+use std::io::Write as _;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::{pool, GradientSource, RunHistory, TrainingRun, WorkerScratch};
+
+use super::server::{NetCoordinator, ServeOptions};
+use super::wire::{self, Msg, WireBuf};
+use super::{read_frame_bytes, Endpoint, NetError, Stream};
+
+/// Fleet configuration.
+#[derive(Clone, Debug)]
+pub struct FleetOptions {
+    /// Agent threads; each hosts a contiguous share of the workers.
+    pub agents: usize,
+    /// Frame payload cap.
+    pub max_payload: usize,
+    /// Socket read timeout (a dead coordinator should not hang the
+    /// fleet forever).
+    pub read_timeout: Duration,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self {
+            agents: hw.min(8),
+            max_payload: wire::MAX_PAYLOAD,
+            read_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// What the fleet observed, summed over agents.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetStats {
+    /// Update frames sent (one per selected worker per round).
+    pub updates_sent: u64,
+    /// Typed rejects received.
+    pub rejected: u64,
+    /// Round-open frames received (per agent, so `rounds × agents` for a
+    /// full run).
+    pub rounds_seen: u64,
+    /// Bytes written (frames, client → server).
+    pub bytes_up: u64,
+    /// Bytes read (frames, server → client).
+    pub bytes_down: u64,
+}
+
+impl FleetStats {
+    fn absorb(&mut self, o: FleetStats) {
+        self.updates_sent += o.updates_sent;
+        self.rejected += o.rejected;
+        self.rounds_seen += o.rounds_seen;
+        self.bytes_up += o.bytes_up;
+        self.bytes_down += o.bytes_down;
+    }
+}
+
+/// Drive `env.workers()` virtual clients against the coordinator at
+/// `ep`, partitioned over `opts.agents` threads. Returns once the
+/// coordinator sends `Fin` (or any agent fails).
+pub fn run_fleet(
+    ep: &Endpoint,
+    run: &TrainingRun,
+    env: &dyn GradientSource,
+    opts: &FleetOptions,
+) -> Result<FleetStats, NetError> {
+    let m = env.workers();
+    let d = env.dim();
+    // The stateful-compressor × sampling refusal applies to remote
+    // workers exactly as it does in-process.
+    run.reject_stateful_sampling(&run.build_worker_comps(d, 1));
+    // Serial-only environments (PJRT-backed models) must not be sampled
+    // from concurrent agent threads — same clamp as the round engine.
+    let agents = if env.serial_only() { 1 } else { opts.agents.clamp(1, m) };
+    let results: Mutex<Vec<Result<FleetStats, NetError>>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for a in 0..agents {
+            let (lo, hi) = pool::chunk_bounds(m, agents, a);
+            if lo >= hi {
+                continue;
+            }
+            let results = &results;
+            s.spawn(move || {
+                let out = agent_loop(ep, run, env, lo, hi, opts);
+                results.lock().unwrap_or_else(|e| e.into_inner()).push(out);
+            });
+        }
+    });
+    let mut stats = FleetStats::default();
+    for r in results.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        stats.absorb(r?);
+    }
+    Ok(stats)
+}
+
+/// One agent: hosts workers `[lo, hi)` over a single connection.
+fn agent_loop(
+    ep: &Endpoint,
+    run: &TrainingRun,
+    env: &dyn GradientSource,
+    lo: usize,
+    hi: usize,
+    opts: &FleetOptions,
+) -> Result<FleetStats, NetError> {
+    let d = env.dim();
+    let m = env.workers();
+    let mut conn = Stream::connect(ep)?;
+    conn.set_read_timeout(Some(opts.read_timeout))?;
+    let mut stats = FleetStats::default();
+    let mut wbuf = WireBuf::new();
+    let mut out = Vec::new();
+    let mut buf = Vec::new();
+
+    let hello = Msg::Hello { lo: lo as u64, hi: hi as u64 };
+    stats.bytes_up += wbuf.encode(&hello, &mut out) as u64;
+    conn.write_all(&out)?;
+
+    // Rendezvous reply must echo the run shape this fleet was built for.
+    let msg = read_msg(&mut conn, opts.max_payload, &mut buf, &mut stats)?;
+    match msg {
+        Msg::Welcome { workers, dim, rounds, .. } => {
+            if workers != m as u64 || dim != d as u64 || rounds != run.rounds as u64 {
+                return Err(NetError::Protocol(format!(
+                    "welcome shape mismatch: server says {workers}w/{dim}d/{rounds}r, \
+                     fleet built for {m}w/{d}d/{}r",
+                    run.rounds
+                )));
+            }
+        }
+        other => {
+            return Err(NetError::Protocol(format!("expected Welcome, got {:?}", other.msg_type())))
+        }
+    }
+
+    // Exercise the liveness path once per agent (server replies Ack).
+    let beat = Msg::Heartbeat { client_id: lo as u64 };
+    out.clear();
+    stats.bytes_up += wbuf.encode(&beat, &mut out) as u64;
+    conn.write_all(&out)?;
+
+    // Per-hosted-worker compressor bank (index `w - lo`) + the same
+    // worker-side scratch and root RNG stream the in-process engines use.
+    let comps = run.build_worker_comps(d, hi - lo);
+    let mut scratch = WorkerScratch::new(d);
+    let root = run.root_rng();
+    let mut params = vec![0.0f32; d];
+
+    loop {
+        let msg = read_msg(&mut conn, opts.max_payload, &mut buf, &mut stats)?;
+        match msg {
+            Msg::RoundOpen { t, lr, selected, params: bcast, .. } => {
+                stats.rounds_seen += 1;
+                if bcast.len() != d {
+                    return Err(NetError::Protocol("broadcast dim mismatch".into()));
+                }
+                params.copy_from_slice(&bcast);
+                let t_us = usize::try_from(t)
+                    .map_err(|_| NetError::Protocol("round index overflow".into()))?;
+                for &w64 in &selected {
+                    let w = w64 as usize;
+                    if w < lo || w >= hi {
+                        return Err(NetError::Protocol(format!(
+                            "selected worker {w} outside hosted range {lo}..{hi}"
+                        )));
+                    }
+                    let (grad, loss) = run.worker_round(
+                        env,
+                        t_us,
+                        w,
+                        lr,
+                        &params,
+                        &root,
+                        comps.get(w - lo),
+                        &mut scratch,
+                    );
+                    out.clear();
+                    stats.bytes_up += wbuf.encode_update(t, w64, loss, &grad, &mut out) as u64;
+                    conn.write_all(&out)?;
+                    stats.updates_sent += 1;
+                }
+            }
+            Msg::Ack { .. } => {}
+            Msg::Reject { .. } => stats.rejected += 1,
+            Msg::Fin { .. } => break,
+            other => {
+                return Err(NetError::Protocol(format!(
+                    "unexpected {:?} from coordinator",
+                    other.msg_type()
+                )))
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Read + fully decode the next frame (agents are control-plane readers;
+/// the zero-copy update path is server-side).
+fn read_msg(
+    conn: &mut Stream,
+    max_payload: usize,
+    buf: &mut Vec<u8>,
+    stats: &mut FleetStats,
+) -> Result<Msg, NetError> {
+    let len = read_frame_bytes(conn, max_payload, buf)?;
+    stats.bytes_down += len as u64;
+    let (frame, _) = wire::parse_frame(&buf[..len], max_payload)?;
+    Ok(wire::decode_msg(frame)?)
+}
+
+/// Bind a coordinator on a loopback endpoint, serve `run` from one
+/// thread and drive the full fleet from this one — the end-to-end
+/// federated path (compress → frame → send → decode → vote → broadcast)
+/// in a single process. Returns the server's `RunHistory` plus the
+/// fleet's transport stats.
+///
+/// `eval` needs `Sync` because the serving thread borrows it across the
+/// spawn; `TrainingRun::run`'s plain `&dyn Fn` contract is unchanged.
+pub fn run_loopback(
+    run: &TrainingRun,
+    env: &dyn GradientSource,
+    init: Vec<f32>,
+    eval: &(dyn Fn(&[f32]) -> (f64, f64) + Sync),
+    serve_opts: ServeOptions,
+    fleet_opts: &FleetOptions,
+) -> Result<(RunHistory, FleetStats), NetError> {
+    let coordinator = NetCoordinator::bind(serve_opts)?;
+    let ep = coordinator.local_endpoint().clone();
+    let m = env.workers();
+    let mut server_out: Option<Result<RunHistory, NetError>> = None;
+    let fleet_out = std::thread::scope(|s| {
+        let handle = s.spawn(|| coordinator.serve(run, m, init, eval));
+        let fleet = run_fleet(&ep, run, env, fleet_opts);
+        server_out = Some(match handle.join() {
+            Ok(r) => r,
+            Err(_) => Err(NetError::Protocol("coordinator thread panicked".into())),
+        });
+        fleet
+    });
+    let hist = server_out.expect("server result recorded")?;
+    Ok((hist, fleet_out?))
+}
+
+/// A fresh loopback endpoint for tests/benches: UDS under the temp dir
+/// on unix (tagged by pid + a counter), TCP on an ephemeral port
+/// elsewhere.
+pub fn loopback_endpoint(uds: bool) -> Endpoint {
+    #[cfg(unix)]
+    if uds {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        return Endpoint::Uds(std::env::temp_dir().join(format!("sparsignd-{pid}-{n}.sock")));
+    }
+    let _ = uds;
+    Endpoint::Tcp("127.0.0.1:0".into())
+}

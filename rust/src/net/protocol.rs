@@ -1,0 +1,399 @@
+//! The coordinator's protocol state machine, transport-free (DESIGN.md
+//! §11): phase transitions, the rendezvous roster, and the per-round
+//! submission table. `net/server.rs` drives these under its locks; the
+//! unit tests below exercise every transition and rejection without a
+//! socket in sight.
+//!
+//! ```text
+//!            rendezvous complete            broadcast sent
+//!  Standby ────────────────────▶ RoundOpen ───────────────▶ Aggregating
+//!     ▲                              ▲                           │
+//!     │ final round                  │ next round                │ all live slots filled
+//!     │                              │                           │ or deadline expired
+//!  Finished ◀──────────────────── Broadcast ◀───────────────────┘
+//! ```
+//!
+//! (The paper's Algorithm 1 loop: the server opens a round, workers
+//! submit compressed gradients, aggregation closes the round, and the
+//! model broadcast opens the next. xaynet's coordinator uses the same
+//! explicit-phase shape for its PET rounds.)
+
+use super::wire::RejectReason;
+
+/// Coordinator lifecycle phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Accepting rendezvous claims; no round open.
+    Standby,
+    /// Round `t` announced: broadcast in flight.
+    RoundOpen(usize),
+    /// Round `t` collecting submissions.
+    Aggregating(usize),
+    /// Round `t` aggregated; result applied / being broadcast.
+    Broadcast(usize),
+    /// Run complete; `Fin` sent.
+    Finished,
+}
+
+/// Phase tracker with checked transitions — a wrong transition is a
+/// coordinator bug, so it panics rather than limping on.
+#[derive(Clone, Debug)]
+pub struct PhaseTracker {
+    phase: Phase,
+}
+
+impl Default for PhaseTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseTracker {
+    pub fn new() -> Self {
+        Self { phase: Phase::Standby }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// Standby/Broadcast → RoundOpen(t).
+    pub fn open_round(&mut self, t: usize) {
+        match self.phase {
+            Phase::Standby => assert_eq!(t, 0, "first round must be 0"),
+            Phase::Broadcast(prev) => {
+                assert_eq!(t, prev + 1, "round {t} after broadcast of {prev}")
+            }
+            p => panic!("open_round({t}) from {p:?}"),
+        }
+        self.phase = Phase::RoundOpen(t);
+    }
+
+    /// RoundOpen(t) → Aggregating(t).
+    pub fn aggregate(&mut self, t: usize) {
+        assert_eq!(self.phase, Phase::RoundOpen(t), "aggregate({t})");
+        self.phase = Phase::Aggregating(t);
+    }
+
+    /// Aggregating(t) → Broadcast(t).
+    pub fn broadcast(&mut self, t: usize) {
+        assert_eq!(self.phase, Phase::Aggregating(t), "broadcast({t})");
+        self.phase = Phase::Broadcast(t);
+    }
+
+    /// Broadcast(_) → Finished.
+    pub fn finish(&mut self) {
+        assert!(matches!(self.phase, Phase::Broadcast(_)), "finish from {:?}", self.phase);
+        self.phase = Phase::Finished;
+    }
+}
+
+/// Why a rendezvous claim was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClaimError {
+    /// `lo >= hi` — an empty range claims nothing.
+    EmptyRange,
+    /// Range extends past the announced worker population.
+    OutOfRange,
+    /// Range intersects one already claimed.
+    Overlap,
+    /// This connection already holds a claim.
+    AlreadyClaimed,
+}
+
+/// Rendezvous roster: which connection hosts which worker range. The
+/// fleet partitions `0..total` among its agents; the coordinator starts
+/// the run once the union of claims covers the population exactly.
+#[derive(Clone, Debug)]
+pub struct Roster {
+    total: usize,
+    /// `(lo, hi, conn)` claims, disjoint by construction.
+    claims: Vec<(usize, usize, usize)>,
+}
+
+impl Roster {
+    pub fn new(total: usize) -> Self {
+        assert!(total > 0, "roster needs at least one worker");
+        Self { total, claims: Vec::new() }
+    }
+
+    /// Register `conn` as host of workers `[lo, hi)`.
+    pub fn claim(&mut self, conn: usize, lo: usize, hi: usize) -> Result<(), ClaimError> {
+        if lo >= hi {
+            return Err(ClaimError::EmptyRange);
+        }
+        if hi > self.total {
+            return Err(ClaimError::OutOfRange);
+        }
+        for &(clo, chi, cconn) in &self.claims {
+            if cconn == conn {
+                return Err(ClaimError::AlreadyClaimed);
+            }
+            if lo < chi && clo < hi {
+                return Err(ClaimError::Overlap);
+            }
+        }
+        self.claims.push((lo, hi, conn));
+        Ok(())
+    }
+
+    /// True once the claims cover `0..total` exactly.
+    pub fn covered(&self) -> bool {
+        let mut spans: Vec<(usize, usize)> = self.claims.iter().map(|&(l, h, _)| (l, h)).collect();
+        spans.sort_unstable();
+        let mut at = 0;
+        for (lo, hi) in spans {
+            if lo != at {
+                return false;
+            }
+            at = hi;
+        }
+        at == self.total
+    }
+
+    /// Connection hosting worker `w`, if claimed.
+    pub fn owner_of(&self, w: usize) -> Option<usize> {
+        self.claims.iter().find(|&&(lo, hi, _)| lo <= w && w < hi).map(|&(_, _, c)| c)
+    }
+
+    /// Worker range claimed by `conn`, if any.
+    pub fn range_of(&self, conn: usize) -> Option<(usize, usize)> {
+        self.claims.iter().find(|&&(_, _, c)| c == conn).map(|&(lo, hi, _)| (lo, hi))
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}
+
+/// Per-round submission table: slot assignment in selection order,
+/// idempotent-duplicate and deadline rejection, and partial-participation
+/// bookkeeping. The payload side (losses/bits/messages/votes) lives with
+/// the server; this table is the pure validation core.
+#[derive(Clone, Debug, Default)]
+pub struct RoundTable {
+    t: usize,
+    open: bool,
+    /// Worker id → slot (`u32::MAX` = not selected). Length = population.
+    slot_of: Vec<u32>,
+    /// Slot → owning connection.
+    owners: Vec<usize>,
+    /// Slot → submission landed.
+    filled: Vec<bool>,
+    received: usize,
+    /// Live slots the round still waits for (dead-connection slots are
+    /// excluded up front and when a connection drops mid-round).
+    expected: usize,
+}
+
+impl RoundTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open round `t` over `selected` (slot order = selection order).
+    /// `owners[k]` is the connection hosting slot `k`'s worker and
+    /// `alive[conn]` its liveness — dead connections' slots are not
+    /// awaited.
+    pub fn open(
+        &mut self,
+        t: usize,
+        m: usize,
+        selected: &[usize],
+        owners: &[usize],
+        alive: &[bool],
+    ) {
+        assert_eq!(selected.len(), owners.len(), "one owner per slot");
+        self.t = t;
+        self.open = true;
+        self.slot_of.clear();
+        self.slot_of.resize(m, u32::MAX);
+        for (k, &w) in selected.iter().enumerate() {
+            assert!(w < m, "selected worker {w} out of population {m}");
+            assert_eq!(self.slot_of[w], u32::MAX, "worker {w} selected twice");
+            self.slot_of[w] = k as u32;
+        }
+        self.owners.clear();
+        self.owners.extend_from_slice(owners);
+        self.filled.clear();
+        self.filled.resize(selected.len(), false);
+        self.received = 0;
+        self.expected = owners.iter().filter(|&&c| alive[c]).count();
+    }
+
+    /// Validate a submission for `(t, worker)` from `conn`; on success
+    /// marks the slot filled and returns its index.
+    pub fn submit(&mut self, t: usize, worker: usize, conn: usize) -> Result<usize, RejectReason> {
+        if !self.open || t != self.t {
+            // A stale round index on a closed table is the classic
+            // straggler shape: the round it aimed for is gone.
+            return Err(if t == self.t { RejectReason::Late } else { RejectReason::BadRound });
+        }
+        if worker >= self.slot_of.len() {
+            return Err(RejectReason::UnknownWorker);
+        }
+        let slot = self.slot_of[worker];
+        if slot == u32::MAX {
+            return Err(RejectReason::NotSelected);
+        }
+        let slot = slot as usize;
+        if self.owners[slot] != conn {
+            return Err(RejectReason::WrongClient);
+        }
+        if self.filled[slot] {
+            return Err(RejectReason::Duplicate);
+        }
+        self.filled[slot] = true;
+        self.received += 1;
+        Ok(slot)
+    }
+
+    /// A connection died mid-round: stop waiting for its unfilled slots.
+    pub fn drop_conn(&mut self, conn: usize) {
+        if !self.open {
+            return;
+        }
+        for (k, &owner) in self.owners.iter().enumerate() {
+            if owner == conn && !self.filled[k] {
+                self.expected -= 1;
+            }
+        }
+    }
+
+    /// Close the round (subsequent submissions are `Late`).
+    pub fn close(&mut self) {
+        self.open = false;
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.open
+    }
+
+    pub fn round(&self) -> usize {
+        self.t
+    }
+
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
+    /// True once every live slot has its submission.
+    pub fn complete(&self) -> bool {
+        self.received >= self.expected
+    }
+
+    /// Slot-filled flags (ascending slot order) for compaction.
+    pub fn filled(&self) -> &[bool] {
+        &self.filled
+    }
+
+    /// Selected slots (live or dead) this round.
+    pub fn slots(&self) -> usize {
+        self.filled.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_walk_the_machine() {
+        let mut p = PhaseTracker::new();
+        assert_eq!(p.phase(), Phase::Standby);
+        p.open_round(0);
+        p.aggregate(0);
+        p.broadcast(0);
+        p.open_round(1);
+        p.aggregate(1);
+        p.broadcast(1);
+        p.finish();
+        assert_eq!(p.phase(), Phase::Finished);
+    }
+
+    #[test]
+    #[should_panic(expected = "open_round")]
+    fn cannot_open_round_while_aggregating() {
+        let mut p = PhaseTracker::new();
+        p.open_round(0);
+        p.aggregate(0);
+        p.open_round(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "first round must be 0")]
+    fn first_round_must_be_zero() {
+        let mut p = PhaseTracker::new();
+        p.open_round(3);
+    }
+
+    #[test]
+    fn roster_coverage_and_rejections() {
+        let mut r = Roster::new(10);
+        assert!(!r.covered());
+        r.claim(0, 0, 4).unwrap();
+        assert_eq!(r.claim(1, 3, 6), Err(ClaimError::Overlap));
+        assert_eq!(r.claim(1, 5, 5), Err(ClaimError::EmptyRange));
+        assert_eq!(r.claim(1, 8, 11), Err(ClaimError::OutOfRange));
+        assert_eq!(r.claim(0, 4, 6), Err(ClaimError::AlreadyClaimed));
+        r.claim(1, 4, 10).unwrap();
+        assert!(r.covered());
+        assert_eq!(r.owner_of(3), Some(0));
+        assert_eq!(r.owner_of(4), Some(1));
+        assert_eq!(r.owner_of(10), None);
+        assert_eq!(r.range_of(1), Some((4, 10)));
+        assert_eq!(r.range_of(9), None);
+    }
+
+    #[test]
+    fn roster_gap_is_not_covered() {
+        let mut r = Roster::new(6);
+        r.claim(0, 0, 2).unwrap();
+        r.claim(1, 3, 6).unwrap();
+        assert!(!r.covered(), "gap at worker 2");
+    }
+
+    #[test]
+    fn round_table_validates_submissions() {
+        let mut tb = RoundTable::new();
+        // Population 6, selection [4, 1, 5], conns: 0 hosts 0..3, 1 hosts 3..6.
+        let alive = vec![true, true];
+        tb.open(2, 6, &[4, 1, 5], &[1, 0, 1], &alive);
+        assert!(tb.is_open() && !tb.complete());
+        assert_eq!(tb.submit(1, 4, 1), Err(RejectReason::BadRound));
+        assert_eq!(tb.submit(2, 0, 0), Err(RejectReason::NotSelected));
+        assert_eq!(tb.submit(2, 9, 0), Err(RejectReason::UnknownWorker));
+        assert_eq!(tb.submit(2, 4, 0), Err(RejectReason::WrongClient));
+        assert_eq!(tb.submit(2, 4, 1), Ok(0));
+        assert_eq!(tb.submit(2, 4, 1), Err(RejectReason::Duplicate));
+        assert_eq!(tb.submit(2, 1, 0), Ok(1));
+        assert_eq!(tb.submit(2, 5, 1), Ok(2));
+        assert!(tb.complete());
+        assert_eq!(tb.received(), 3);
+        tb.close();
+        assert_eq!(tb.submit(2, 5, 1), Err(RejectReason::Late));
+        assert_eq!(tb.filled(), &[true, true, true]);
+    }
+
+    #[test]
+    fn dead_connections_shrink_expectations() {
+        let mut tb = RoundTable::new();
+        let alive = vec![true, false];
+        tb.open(0, 4, &[0, 1, 3], &[0, 0, 1], &alive);
+        // Conn 1 was dead at open: only 2 live slots expected.
+        assert_eq!(tb.submit(0, 0, 0), Ok(0));
+        assert!(!tb.complete());
+        assert_eq!(tb.submit(0, 1, 0), Ok(1));
+        assert!(tb.complete());
+        assert_eq!(tb.received(), 2);
+
+        // Mid-round drop: conn 0 dies after filling one of its two slots.
+        let alive = vec![true, true];
+        tb.open(1, 4, &[0, 1, 3], &[0, 0, 1], &alive);
+        assert_eq!(tb.submit(1, 0, 0), Ok(0));
+        tb.drop_conn(0);
+        assert!(!tb.complete());
+        assert_eq!(tb.submit(1, 3, 1), Ok(2));
+        assert!(tb.complete(), "slot 1 no longer awaited");
+    }
+}

@@ -1,0 +1,596 @@
+//! The coordinator service (DESIGN.md §11): Algorithm 1's parameter
+//! server behind a real socket.
+//!
+//! An accept loop (TCP or UDS) hands each connection to a reader thread.
+//! Readers decode update frames **directly into the streaming
+//! aggregation path**: the ternary bitplanes land in a per-reader
+//! scratch [`PackedTernary`] and fold into the shared
+//! [`VoteAccumulator`] under the round gate's mutex — the server never
+//! buffers the round's `n` messages on the unit-scale fast path, exactly
+//! like the PR 3 pool engine. Per-slot scalars (loss, bit cost, nnz) are
+//! recorded in selection-slot order, so the shared
+//! [`RoundLoop::finish_round`] tail reduces them in the same order as
+//! the in-process engine and the resulting `RunHistory` is
+//! bit-identical on the same seed (`tests/net_loopback.rs`).
+//!
+//! Fault handling: duplicate submissions are rejected idempotently,
+//! frames for a closed round are rejected as `Late`, a dead connection's
+//! pending slots stop being awaited, and a round closes at its deadline
+//! with partial participation — stragglers are counted in the ledger
+//! (`CommLedger::annotate_wire`), alongside the actual framed byte
+//! traffic.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::compressors::{CompressedGrad, PackedTernary};
+use crate::coordinator::{RoundLoop, RunHistory, TrainingRun, VoteAccumulator, WorkerSampler};
+
+use super::protocol::{PhaseTracker, Roster, RoundTable};
+use super::wire::{self, Msg, MsgType, RejectReason, WireBuf};
+use super::{read_frame_bytes, Endpoint, Listener, NetError, Stream};
+
+/// Coordinator service configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address.
+    pub endpoint: Endpoint,
+    /// Per-round submission deadline; `None` waits for every live
+    /// selected worker (the loopback-equivalence configuration).
+    pub round_deadline: Option<Duration>,
+    /// How long to wait for the fleet to cover the worker population.
+    pub rendezvous_timeout: Duration,
+    /// Frame payload cap handed to the decoder.
+    pub max_payload: usize,
+}
+
+impl ServeOptions {
+    pub fn new(endpoint: Endpoint) -> Self {
+        Self {
+            endpoint,
+            round_deadline: None,
+            rendezvous_timeout: Duration::from_secs(30),
+            max_payload: wire::MAX_PAYLOAD,
+        }
+    }
+}
+
+/// One registered connection: the writer half plus its identity. The
+/// reader half lives in the connection's reader thread.
+struct ConnHandle {
+    id: usize,
+    writer: Mutex<Stream>,
+}
+
+/// Shared round state behind one mutex: the pure submission table plus
+/// the payload slots and the streaming vote accumulator. Readers mutate
+/// it frame-by-frame; the coordinator opens/closes rounds and extracts.
+struct Gate {
+    d: usize,
+    streaming: bool,
+    table: RoundTable,
+    losses: Vec<f64>,
+    bits: Vec<f64>,
+    nnz: Vec<usize>,
+    msgs: Vec<Option<CompressedGrad>>,
+    votes: VoteAccumulator,
+    up_bytes: u64,
+}
+
+/// Reader/accept → coordinator notifications.
+enum Ev {
+    /// A connection was accepted and its reader thread started.
+    Conn(Arc<ConnHandle>),
+    /// Rendezvous claim for workers `[lo, hi)`.
+    Hello { conn: usize, lo: u64, hi: u64 },
+    /// Liveness ping.
+    Beat { conn: usize },
+    /// A submission was accepted into the gate.
+    Progress,
+    /// Connection closed (EOF, IO error, or protocol violation).
+    Gone { conn: usize },
+}
+
+/// A bound-but-not-yet-serving coordinator; binding first lets callers
+/// learn the resolved endpoint (`:0` TCP picks a free port) before the
+/// fleet dials in.
+pub struct NetCoordinator {
+    listener: Listener,
+    local: Endpoint,
+    opts: ServeOptions,
+}
+
+impl NetCoordinator {
+    /// Bind the accept socket.
+    pub fn bind(opts: ServeOptions) -> Result<Self, NetError> {
+        let listener = Listener::bind(&opts.endpoint)?;
+        let local = listener.local_endpoint(&opts.endpoint);
+        Ok(Self { listener, local, opts })
+    }
+
+    /// The resolved bind address (dial this).
+    pub fn local_endpoint(&self) -> &Endpoint {
+        &self.local
+    }
+
+    /// Run `run.rounds` federated rounds over the socket and return the
+    /// run history. `workers` is the population M the fleet must cover;
+    /// `eval` is the server-side test evaluation (exactly as
+    /// `TrainingRun::run` takes it).
+    pub fn serve(
+        self,
+        run: &TrainingRun,
+        workers: usize,
+        init: Vec<f32>,
+        eval: &dyn Fn(&[f32]) -> (f64, f64),
+    ) -> Result<RunHistory, NetError> {
+        let d = init.len();
+        let n_max = WorkerSampler::new(workers, run.participation).per_round();
+        let streaming = run.streams_votes(n_max);
+        let lp = RoundLoop::new(run, d, workers, streaming, init);
+        let opts = &self.opts;
+        let listener = &self.listener;
+        listener.set_nonblocking(true)?;
+        let gate = Mutex::new(Gate {
+            d,
+            streaming,
+            table: RoundTable::new(),
+            losses: Vec::new(),
+            bits: Vec::new(),
+            nnz: Vec::new(),
+            msgs: Vec::new(),
+            votes: VoteAccumulator::new(),
+            up_bytes: 0,
+        });
+        let accepting = AtomicBool::new(true);
+        let (tx, rx) = mpsc::channel::<Ev>();
+        let max_payload = opts.max_payload;
+
+        let result = std::thread::scope(|s| {
+            // Accept loop: registers the writer half, spawns the reader
+            // thread (the scope handle is Sync, so nested spawns are
+            // fine), and tells the coordinator.
+            let gate_ref = &gate;
+            let accepting_ref = &accepting;
+            let acc_tx = tx.clone();
+            let acc_handle = s.spawn(move || {
+                let mut next_id = 0usize;
+                while accepting_ref.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok(Some(stream)) => {
+                            let Ok(reader) = stream.try_clone() else { continue };
+                            let writer = Mutex::new(stream);
+                            let h = Arc::new(ConnHandle { id: next_id, writer });
+                            next_id += 1;
+                            if acc_tx.send(Ev::Conn(h.clone())).is_err() {
+                                return;
+                            }
+                            let rd_tx = acc_tx.clone();
+                            s.spawn(move || {
+                                let shape = (d, streaming);
+                                reader_loop(&h, reader, gate_ref, &rd_tx, max_payload, shape);
+                            });
+                        }
+                        Ok(None) => std::thread::sleep(Duration::from_millis(2)),
+                        Err(_) => return,
+                    }
+                }
+            });
+
+            let drv = Driver {
+                run,
+                m: workers,
+                lp,
+                opts,
+                gate: &gate,
+                rx: &rx,
+                phase: PhaseTracker::new(),
+                roster: Roster::new(workers),
+                conns: Vec::new(),
+                alive: Vec::new(),
+                wbuf: WireBuf::new(),
+                frame: Vec::new(),
+            };
+            let (out, conns) = drv.drive(eval);
+            // Stop accepting and unblock every reader regardless of how
+            // the run ended, or the scope would join forever. Connections
+            // the accept loop registered but the driver never processed
+            // (they sit in the channel) get shut down too — join the
+            // accept thread first so no further ones appear.
+            accepting.store(false, Ordering::SeqCst);
+            let _ = acc_handle.join();
+            while let Ok(ev) = rx.try_recv() {
+                if let Ev::Conn(h) = ev {
+                    h.writer.lock().unwrap_or_else(|e| e.into_inner()).shutdown();
+                }
+            }
+            for c in &conns {
+                c.writer.lock().unwrap_or_else(|e| e.into_inner()).shutdown();
+            }
+            out
+        });
+
+        // A UDS socket file outlives its listener; clean up.
+        #[cfg(unix)]
+        if let Endpoint::Uds(path) = &self.local {
+            let _ = std::fs::remove_file(path);
+        }
+        result
+    }
+}
+
+/// The coordinator proper: rendezvous, then the round loop over the
+/// shared [`RoundLoop`] tail.
+struct Driver<'a> {
+    run: &'a TrainingRun,
+    m: usize,
+    lp: RoundLoop<'a>,
+    opts: &'a ServeOptions,
+    gate: &'a Mutex<Gate>,
+    rx: &'a mpsc::Receiver<Ev>,
+    phase: PhaseTracker,
+    roster: Roster,
+    conns: Vec<Arc<ConnHandle>>,
+    alive: Vec<bool>,
+    wbuf: WireBuf,
+    frame: Vec<u8>,
+}
+
+type DriveOutcome = (Result<RunHistory, NetError>, Vec<Arc<ConnHandle>>);
+
+impl<'a> Driver<'a> {
+    /// Run the whole protocol; consumes the driver so the finished
+    /// `RoundLoop` moves out without a placeholder. Returns the
+    /// connection handles alongside so the caller can shut them down.
+    fn drive(mut self, eval: &dyn Fn(&[f32]) -> (f64, f64)) -> DriveOutcome {
+        let res = self.run_protocol(eval);
+        let out = match res {
+            Ok(()) => {
+                let label = self.run.algorithm.label();
+                let d = self.lp.params.len();
+                Ok(self.lp.into_history(label, d))
+            }
+            Err(e) => Err(e),
+        };
+        (out, self.conns)
+    }
+
+    fn run_protocol(&mut self, eval: &dyn Fn(&[f32]) -> (f64, f64)) -> Result<(), NetError> {
+        self.rendezvous()?;
+        for t in 0..self.run.rounds {
+            self.round(t, eval)?;
+        }
+        // Fin + state machine epilogue.
+        let fin = Msg::Fin { rounds: self.run.rounds as u64 };
+        for id in 0..self.conns.len() {
+            if self.alive[id] {
+                let _ = self.send(id, &fin);
+            }
+        }
+        self.phase.finish();
+        Ok(())
+    }
+
+    /// Wait until the fleet covers the worker population.
+    fn rendezvous(&mut self) -> Result<(), NetError> {
+        let deadline = Instant::now() + self.opts.rendezvous_timeout;
+        while !self.roster.covered() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(NetError::Protocol("rendezvous timeout".into()));
+            }
+            match self.rx.recv_timeout(left.min(Duration::from_millis(200))) {
+                Ok(ev) => self.on_event(ev, None)?,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(NetError::Protocol("accept loop died".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One federated round over the wire.
+    fn round(&mut self, t: usize, eval: &dyn Fn(&[f32]) -> (f64, f64)) -> Result<(), NetError> {
+        let run = self.run;
+        let lr = run.schedule.at(t);
+        let n = self.lp.select();
+        self.phase.open_round(t);
+
+        // Slot owners come from the rendezvous roster; dead connections'
+        // slots are stragglers from the start.
+        let owners: Vec<usize> = self.lp.server.selected[..n]
+            .iter()
+            .map(|&w| self.roster.owner_of(w).expect("roster covered"))
+            .collect();
+        {
+            let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+            g.table.open(t, self.m, &self.lp.server.selected[..n], &owners, &self.alive);
+            if g.streaming {
+                g.votes.reset(g.d, n);
+            }
+            g.losses.clear();
+            g.losses.resize(n, 0.0);
+            g.bits.clear();
+            g.bits.resize(n, 0.0);
+            g.nnz.clear();
+            g.nnz.resize(n, 0);
+            g.msgs.clear();
+            g.msgs.resize(n, None);
+            g.up_bytes = 0;
+        }
+
+        // Broadcast: per-connection selection subset + the model.
+        let deadline_ms = self.opts.round_deadline.map(|d| d.as_millis() as u64).unwrap_or(0);
+        let mut down_bytes = 0u64;
+        let mut sel_ids: Vec<u64> = Vec::new();
+        for id in 0..self.conns.len() {
+            if !self.alive[id] {
+                continue;
+            }
+            let Some((lo, hi)) = self.roster.range_of(id) else { continue };
+            sel_ids.clear();
+            for &w in &self.lp.server.selected[..n] {
+                if lo <= w && w < hi {
+                    sel_ids.push(w as u64);
+                }
+            }
+            self.frame.clear();
+            let len = self.wbuf.encode_round_open(
+                t as u64,
+                lr,
+                deadline_ms,
+                &sel_ids,
+                &self.lp.params,
+                &mut self.frame,
+            );
+            let ok = {
+                let mut w = self.conns[id].writer.lock().unwrap_or_else(|e| e.into_inner());
+                std::io::Write::write_all(&mut *w, &self.frame).is_ok()
+            };
+            if ok {
+                down_bytes += len as u64;
+            } else {
+                self.mark_dead(id);
+            }
+        }
+        self.phase.aggregate(t);
+
+        // Collect until every live slot filled or the deadline expires.
+        let hard_deadline = self.opts.round_deadline.map(|d| Instant::now() + d);
+        loop {
+            {
+                let g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+                if g.table.complete() {
+                    break;
+                }
+            }
+            let wait = match hard_deadline {
+                Some(dl) => {
+                    let left = dl.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        break;
+                    }
+                    left.min(Duration::from_millis(200))
+                }
+                None => Duration::from_millis(200),
+            };
+            match self.rx.recv_timeout(wait) {
+                Ok(ev) => self.on_event(ev, Some(t))?,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(NetError::Protocol("accept loop died".into()));
+                }
+            }
+        }
+
+        // Close the round and compact filled slots into the shared
+        // RoundLoop buffers (ascending slot order = selection order, the
+        // same deterministic reduction order the in-process engine uses).
+        let (n_eff, stragglers, up_bytes) = {
+            let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+            let g = &mut *g;
+            g.table.close();
+            let mut k_new = 0usize;
+            for k in 0..n {
+                if g.table.filled()[k] {
+                    self.lp.server.losses[k_new] = g.losses[k];
+                    self.lp.server.bits[k_new] = g.bits[k];
+                    self.lp.server.nnz[k_new] = g.nnz[k];
+                    self.lp.server.msgs[k_new] = g.msgs[k].take();
+                    k_new += 1;
+                }
+            }
+            if g.streaming && k_new > 0 {
+                g.votes.counts_into(&mut self.lp.server.counts);
+            }
+            (k_new, n - k_new, g.up_bytes)
+        };
+        if n_eff == 0 {
+            return Err(NetError::Protocol(format!("round {t}: no submissions arrived")));
+        }
+        self.lp.finish_round(t, lr, n_eff, eval, &mut None);
+        self.lp.ledger.annotate_wire(t, up_bytes, down_bytes, stragglers);
+        self.phase.broadcast(t);
+        Ok(())
+    }
+
+    /// Handle one notification. `round` is the currently-aggregating
+    /// round (heartbeat acks echo it), `None` during rendezvous.
+    fn on_event(&mut self, ev: Ev, round: Option<usize>) -> Result<(), NetError> {
+        match ev {
+            Ev::Conn(h) => {
+                debug_assert_eq!(h.id, self.conns.len(), "conn ids are arrival-ordered");
+                self.conns.push(h);
+                self.alive.push(true);
+            }
+            Ev::Hello { conn, lo, hi } => {
+                let claim = usize::try_from(lo)
+                    .ok()
+                    .zip(usize::try_from(hi).ok())
+                    .map(|(l, h)| self.roster.claim(conn, l, h));
+                match claim {
+                    Some(Ok(())) if round.is_none() => {
+                        let msg = Msg::Welcome {
+                            client_id: conn as u64,
+                            workers: self.m as u64,
+                            dim: self.lp.params.len() as u64,
+                            rounds: self.run.rounds as u64,
+                        };
+                        if self.send(conn, &msg).is_err() {
+                            self.mark_dead(conn);
+                        }
+                    }
+                    // Late joins and bad claims are hung up on; the
+                    // reader thread turns the shutdown into `Gone`.
+                    _ => self.hangup(conn),
+                }
+            }
+            Ev::Beat { conn } => {
+                let t = round.unwrap_or(0) as u64;
+                let _ = self.send(conn, &Msg::Ack { t, worker: conn as u64 });
+            }
+            Ev::Progress => {}
+            Ev::Gone { conn } => self.mark_dead(conn),
+        }
+        Ok(())
+    }
+
+    fn send(&mut self, conn: usize, msg: &Msg) -> Result<usize, NetError> {
+        self.frame.clear();
+        let len = self.wbuf.encode(msg, &mut self.frame);
+        let mut w = self.conns[conn].writer.lock().unwrap_or_else(|e| e.into_inner());
+        std::io::Write::write_all(&mut *w, &self.frame)?;
+        Ok(len)
+    }
+
+    fn hangup(&mut self, conn: usize) {
+        if let Some(h) = self.conns.get(conn) {
+            h.writer.lock().unwrap_or_else(|e| e.into_inner()).shutdown();
+        }
+    }
+
+    fn mark_dead(&mut self, conn: usize) {
+        if conn < self.alive.len() && self.alive[conn] {
+            self.alive[conn] = false;
+            self.hangup(conn);
+            let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+            g.table.drop_conn(conn);
+        }
+    }
+}
+
+/// Per-connection reader: frames → validated protocol events. Update
+/// payloads are decoded into the per-reader scratch *before* the gate
+/// lock (readers parallelize the O(d) unpack work); the slot claim and
+/// the vote fold then happen under the lock, so a round that closes
+/// never loses a submission it already counted. `shape` is the run's
+/// `(d, streaming)` pair, immutable for the whole serve.
+fn reader_loop(
+    h: &Arc<ConnHandle>,
+    mut reader: Stream,
+    gate: &Mutex<Gate>,
+    tx: &mpsc::Sender<Ev>,
+    max_payload: usize,
+    shape: (usize, bool),
+) {
+    let mut buf = Vec::new();
+    let mut pack = PackedTernary::zeros(0, 1.0);
+    let mut wbuf = WireBuf::new();
+    let mut out = Vec::new();
+    loop {
+        let Ok(len) = read_frame_bytes(&mut reader, max_payload, &mut buf) else { break };
+        let Ok((frame, _)) = wire::parse_frame(&buf[..len], max_payload) else { break };
+        match frame.msg_type {
+            MsgType::Hello => {
+                let Ok(Msg::Hello { lo, hi }) = wire::decode_msg(frame) else { break };
+                if tx.send(Ev::Hello { conn: h.id, lo, hi }).is_err() {
+                    break;
+                }
+            }
+            MsgType::Heartbeat => {
+                if tx.send(Ev::Beat { conn: h.id }).is_err() {
+                    break;
+                }
+            }
+            MsgType::Update => {
+                let Ok(uv) = wire::decode_update(frame.payload) else { break };
+                match submit_update(h.id, &uv, len as u64, shape, gate, &mut pack) {
+                    Ok(()) => {
+                        if tx.send(Ev::Progress).is_err() {
+                            break;
+                        }
+                    }
+                    Err(Some(reason)) => {
+                        out.clear();
+                        let reject = Msg::Reject { t: uv.t, worker: uv.worker, reason };
+                        wbuf.encode(&reject, &mut out);
+                        let mut w = h.writer.lock().unwrap_or_else(|e| e.into_inner());
+                        let _ = std::io::Write::write_all(&mut *w, &out);
+                    }
+                    // Payload broke the streaming contract: corrupt or
+                    // hostile peer — hang up.
+                    Err(None) => break,
+                }
+            }
+            // Client-bound message types on a server-bound stream are a
+            // protocol violation.
+            _ => break,
+        }
+    }
+    let _ = tx.send(Ev::Gone { conn: h.id });
+}
+
+/// Validate + record one update submission. `Err(Some(reason))` asks the
+/// reader to send a typed reject; `Err(None)` is a payload-level
+/// violation that drops the connection.
+fn submit_update(
+    conn: usize,
+    uv: &wire::UpdateView<'_>,
+    wire_len: u64,
+    (d, streaming): (usize, bool),
+    gate: &Mutex<Gate>,
+    pack: &mut PackedTernary,
+) -> Result<(), Option<RejectReason>> {
+    if uv.grad.dim() != d {
+        return Err(None);
+    }
+    let t = usize::try_from(uv.t).unwrap_or(usize::MAX);
+    let worker = usize::try_from(uv.worker).unwrap_or(usize::MAX);
+    // Decode the payload into the per-reader scratch OUTSIDE the gate
+    // lock — the O(d) unpack runs concurrently across readers — and
+    // before claiming the slot: a slot marked filled must always hold a
+    // recorded submission.
+    let msg = if streaming {
+        match uv.grad.unpack_ternary_into(pack) {
+            Ok(Some(())) if pack.scale() == 1.0 => None,
+            // Dense, mis-scaled or invariant-violating payloads cannot
+            // enter the vote accumulator.
+            _ => return Err(None),
+        }
+    } else {
+        match uv.grad.to_msg() {
+            Ok(m) => Some(m),
+            Err(_) => return Err(None),
+        }
+    };
+    let mut g = gate.lock().unwrap_or_else(|e| e.into_inner());
+    let g = &mut *g;
+    let slot = g.table.submit(t, worker, conn).map_err(Some)?;
+    g.losses[slot] = uv.loss;
+    g.bits[slot] = uv.grad.bits();
+    match msg {
+        None => {
+            g.nnz[slot] = pack.nnz();
+            g.votes.fold(pack);
+        }
+        Some(m) => {
+            g.nnz[slot] = m.nnz();
+            g.msgs[slot] = Some(m);
+        }
+    }
+    g.up_bytes += wire_len;
+    Ok(())
+}

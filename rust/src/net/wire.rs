@@ -1,0 +1,910 @@
+//! The versioned wire codec (DESIGN.md §11): length-prefixed binary
+//! frames carrying the federation protocol's messages.
+//!
+//! ## Frame grammar
+//!
+//! ```text
+//! frame   := magic:u32be  version:u8  msg_type:u8  len:varint
+//!            payload[len]  crc:u32le
+//! varint  := LEB128, ≤ 10 bytes, minimal range checks (u64)
+//! crc     := CRC-32 (IEEE 802.3, poly 0xEDB88320) over every frame
+//!            byte before the checksum itself (magic included)
+//! ```
+//!
+//! The fixed header is written/read through [`crate::coding::bitio`]
+//! (MSB-first, so the magic lands big-endian on the wire); payload
+//! scalars are little-endian. Ternary gradients travel as their raw
+//! `u64` bitplanes plus `(dim, nnz, scale, bits)` scalars, so a message
+//! round-trips **bit-identically** — the cached `nnz` is revalidated by
+//! popcount on decode rather than trusted.
+//!
+//! ## Hardening
+//!
+//! Decoding never panics and never allocates from an attacker-declared
+//! length: the frame length is capped by [`MAX_PAYLOAD`] *before* any
+//! allocation, every interior count (`dim`, selection size, plane
+//! bytes) is checked against the bytes actually present, and every
+//! failure is a typed [`WireError`] (`tests/property_suite.rs` fuzzes
+//! truncations and byte mutations against this contract).
+//!
+//! ## Version policy
+//!
+//! `version` is a single byte, bumped on any incompatible layout change;
+//! decoders reject mismatches with [`WireError::BadVersion`] (no
+//! negotiation — the coordinator and fleet ship together). New message
+//! types are additive: unknown `msg_type` values are a typed error, so
+//! an old peer fails loudly rather than misparsing.
+
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::compressors::{CompressedGrad, PackedTernary};
+
+/// Frame magic: `"SGND"` read MSB-first.
+pub const MAGIC: u32 = 0x5347_4E44;
+/// Current wire-format version.
+pub const WIRE_VERSION: u8 = 1;
+/// Hard payload cap: decoders refuse to allocate past this, bounding
+/// memory even against a hostile length prefix.
+pub const MAX_PAYLOAD: usize = 1 << 28;
+/// Fixed header bytes before the length varint (magic + version + type).
+pub const HEADER_FIXED: usize = 6;
+/// Trailing checksum bytes.
+pub const CRC_LEN: usize = 4;
+
+/// Typed decode failure. Never panics, never over-allocates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Fewer bytes than the frame (or field) requires.
+    Truncated { need: usize, have: usize },
+    /// First four bytes are not [`MAGIC`].
+    BadMagic { got: u32 },
+    /// Version byte differs from [`WIRE_VERSION`].
+    BadVersion { got: u8 },
+    /// Unknown message-type byte.
+    BadMsgType { got: u8 },
+    /// Checksum mismatch (corrupt frame).
+    BadCrc { want: u32, got: u32 },
+    /// Declared payload length exceeds the decoder's cap.
+    Oversized { len: u64, max: usize },
+    /// Structurally invalid payload (bad varint, count/byte mismatch,
+    /// violated ternary invariant, trailing garbage, …).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            WireError::BadMagic { got } => write!(f, "bad frame magic {got:#010x}"),
+            WireError::BadVersion { got } => {
+                write!(f, "wire version {got} (this build speaks {WIRE_VERSION})")
+            }
+            WireError::BadMsgType { got } => write!(f, "unknown message type {got}"),
+            WireError::BadCrc { want, got } => {
+                write!(f, "crc mismatch: frame says {want:#010x}, computed {got:#010x}")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "payload length {len} exceeds cap {max}")
+            }
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected).
+// ---------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 over `data` (IEEE polynomial, init/xorout `!0`).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------
+// Varints + little-endian scalar helpers.
+// ---------------------------------------------------------------------
+
+/// Append an LEB128 varint.
+pub fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Cursor over a payload slice; every `take_*` bounds-checks first.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(WireError::Malformed("trailing bytes after payload"))
+        }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { need: self.pos + n, have: self.buf.len() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn varint(&mut self) -> Result<u64, WireError> {
+        let mut v = 0u64;
+        for i in 0..10 {
+            let b = self.u8()?;
+            let low = (b & 0x7f) as u64;
+            if i == 9 && low > 1 {
+                return Err(WireError::Malformed("varint overflows u64"));
+            }
+            v |= low << (7 * i);
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(WireError::Malformed("varint longer than 10 bytes"))
+    }
+
+    /// Varint bounded to `usize` and to a caller cap (count fields).
+    fn count(&mut self, cap: usize, what: &'static str) -> Result<usize, WireError> {
+        let v = self.varint()?;
+        if v > cap as u64 {
+            return Err(WireError::Malformed(what));
+        }
+        Ok(v as usize)
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Message vocabulary.
+// ---------------------------------------------------------------------
+
+/// Frame type byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgType {
+    /// Client → server rendezvous: "I host workers `[lo, hi)`".
+    Hello = 1,
+    /// Server → client rendezvous accept (run shape echo).
+    Welcome = 2,
+    /// Server → client round start: lr, deadline, per-connection
+    /// selection, model broadcast.
+    RoundOpen = 3,
+    /// Client → server update submission (one per selected worker).
+    Update = 4,
+    /// Server → client positive acknowledgement (heartbeat reply).
+    Ack = 5,
+    /// Server → client typed refusal of a submission.
+    Reject = 6,
+    /// Server → client end of run.
+    Fin = 7,
+    /// Client → server liveness signal.
+    Heartbeat = 8,
+}
+
+impl MsgType {
+    fn from_u8(b: u8) -> Option<Self> {
+        Some(match b {
+            1 => MsgType::Hello,
+            2 => MsgType::Welcome,
+            3 => MsgType::RoundOpen,
+            4 => MsgType::Update,
+            5 => MsgType::Ack,
+            6 => MsgType::Reject,
+            7 => MsgType::Fin,
+            8 => MsgType::Heartbeat,
+            _ => return None,
+        })
+    }
+}
+
+/// Why the coordinator refused a submission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RejectReason {
+    /// Round index is not the currently open round.
+    BadRound = 1,
+    /// Worker was not selected this round.
+    NotSelected = 2,
+    /// A submission for this worker already landed (idempotent reject).
+    Duplicate = 3,
+    /// The round closed (deadline or completion) before this frame.
+    Late = 4,
+    /// Worker id outside the announced population.
+    UnknownWorker = 5,
+    /// Submission from a connection that does not own the worker.
+    WrongClient = 6,
+}
+
+impl RejectReason {
+    fn from_u8(b: u8) -> Option<Self> {
+        Some(match b {
+            1 => RejectReason::BadRound,
+            2 => RejectReason::NotSelected,
+            3 => RejectReason::Duplicate,
+            4 => RejectReason::Late,
+            5 => RejectReason::UnknownWorker,
+            6 => RejectReason::WrongClient,
+            _ => return None,
+        })
+    }
+}
+
+/// Owned, fully-validated protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    Hello { lo: u64, hi: u64 },
+    Welcome { client_id: u64, workers: u64, dim: u64, rounds: u64 },
+    RoundOpen { t: u64, lr: f64, deadline_ms: u64, selected: Vec<u64>, params: Vec<f32> },
+    Update { t: u64, worker: u64, loss: f64, grad: CompressedGrad },
+    Ack { t: u64, worker: u64 },
+    Reject { t: u64, worker: u64, reason: RejectReason },
+    Fin { rounds: u64 },
+    Heartbeat { client_id: u64 },
+}
+
+impl Msg {
+    /// This message's frame type byte.
+    pub fn msg_type(&self) -> MsgType {
+        match self {
+            Msg::Hello { .. } => MsgType::Hello,
+            Msg::Welcome { .. } => MsgType::Welcome,
+            Msg::RoundOpen { .. } => MsgType::RoundOpen,
+            Msg::Update { .. } => MsgType::Update,
+            Msg::Ack { .. } => MsgType::Ack,
+            Msg::Reject { .. } => MsgType::Reject,
+            Msg::Fin { .. } => MsgType::Fin,
+            Msg::Heartbeat { .. } => MsgType::Heartbeat,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Zero-copy decode views.
+// ---------------------------------------------------------------------
+
+/// Borrowed view of a parsed frame: type byte + payload slice (the
+/// payload still points into the caller's buffer).
+#[derive(Clone, Copy, Debug)]
+pub struct Frame<'a> {
+    pub msg_type: MsgType,
+    pub payload: &'a [u8],
+}
+
+/// Borrowed view of an update's gradient payload — the coordinator's
+/// hot path decodes ternary bitplanes straight out of the frame buffer
+/// into a reusable [`PackedTernary`] (no per-message allocation) and
+/// folds it into the vote accumulator.
+#[derive(Clone, Copy, Debug)]
+pub enum GradView<'a> {
+    Ternary { dim: usize, nnz: usize, scale: f32, bits: f64, mask: &'a [u8], sign: &'a [u8] },
+    Dense { dim: usize, bits: f64, values: &'a [u8] },
+}
+
+impl GradView<'_> {
+    /// Gradient dimension.
+    pub fn dim(&self) -> usize {
+        match self {
+            GradView::Ternary { dim, .. } | GradView::Dense { dim, .. } => *dim,
+        }
+    }
+
+    /// Declared message bit cost.
+    pub fn bits(&self) -> f64 {
+        match self {
+            GradView::Ternary { bits, .. } | GradView::Dense { bits, .. } => *bits,
+        }
+    }
+
+    /// Decode a ternary payload into a caller-owned pack (revalidating
+    /// every invariant); returns `None` for dense payloads.
+    pub fn unpack_ternary_into(&self, pack: &mut PackedTernary) -> Result<Option<()>, WireError> {
+        let GradView::Ternary { dim, nnz, scale, mask, sign, .. } = *self else {
+            return Ok(None);
+        };
+        let words = mask
+            .chunks_exact(8)
+            .zip(sign.chunks_exact(8))
+            .map(|(m, s)| (le_word(m), le_word(s)));
+        pack.load_words(dim, scale, words).map_err(WireError::Malformed)?;
+        if pack.nnz() != nnz {
+            return Err(WireError::Malformed("declared nnz disagrees with bitplanes"));
+        }
+        Ok(Some(()))
+    }
+
+    /// Materialize an owned [`CompressedGrad`] (bit-identical to the
+    /// encoded message; dense non-zero counts are recounted).
+    pub fn to_msg(&self) -> Result<CompressedGrad, WireError> {
+        match *self {
+            GradView::Ternary { bits, .. } => {
+                let mut pack = PackedTernary::zeros(0, 1.0);
+                self.unpack_ternary_into(&mut pack)?;
+                Ok(CompressedGrad::ternary(pack, bits))
+            }
+            GradView::Dense { bits, values, .. } => {
+                let v: Vec<f32> = values
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                Ok(CompressedGrad::dense(v, bits))
+            }
+        }
+    }
+}
+
+#[inline]
+fn le_word(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Borrowed view of an [`MsgType::Update`] payload.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateView<'a> {
+    pub t: u64,
+    pub worker: u64,
+    pub loss: f64,
+    pub grad: GradView<'a>,
+}
+
+// ---------------------------------------------------------------------
+// Encoding.
+// ---------------------------------------------------------------------
+
+const GRAD_TERNARY: u8 = 0;
+const GRAD_DENSE: u8 = 1;
+
+/// Reusable frame encoder: owns the payload scratch so steady-state
+/// encoding reuses one buffer per connection.
+#[derive(Default)]
+pub struct WireBuf {
+    payload: Vec<u8>,
+}
+
+impl WireBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Encode `msg` as one complete frame appended to `out`; returns the
+    /// frame's byte length.
+    pub fn encode(&mut self, msg: &Msg, out: &mut Vec<u8>) -> usize {
+        self.payload.clear();
+        let p = &mut self.payload;
+        match msg {
+            Msg::Hello { lo, hi } => {
+                push_varint(p, *lo);
+                push_varint(p, *hi);
+            }
+            Msg::Welcome { client_id, workers, dim, rounds } => {
+                push_varint(p, *client_id);
+                push_varint(p, *workers);
+                push_varint(p, *dim);
+                push_varint(p, *rounds);
+            }
+            Msg::RoundOpen { t, lr, deadline_ms, selected, params } => {
+                push_varint(p, *t);
+                p.extend_from_slice(&lr.to_le_bytes());
+                push_varint(p, *deadline_ms);
+                push_varint(p, selected.len() as u64);
+                for &w in selected {
+                    push_varint(p, w);
+                }
+                push_varint(p, params.len() as u64);
+                for &x in params {
+                    p.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Msg::Update { t, worker, loss, grad } => {
+                push_varint(p, *t);
+                push_varint(p, *worker);
+                p.extend_from_slice(&loss.to_le_bytes());
+                encode_grad(p, grad);
+            }
+            Msg::Ack { t, worker } => {
+                push_varint(p, *t);
+                push_varint(p, *worker);
+            }
+            Msg::Reject { t, worker, reason } => {
+                push_varint(p, *t);
+                push_varint(p, *worker);
+                p.push(*reason as u8);
+            }
+            Msg::Fin { rounds } => {
+                push_varint(p, *rounds);
+            }
+            Msg::Heartbeat { client_id } => {
+                push_varint(p, *client_id);
+            }
+        }
+        frame(msg.msg_type(), &self.payload, out)
+    }
+
+    /// Borrow-friendly round-open encoder (the coordinator's per-round
+    /// broadcast: no params clone per connection); returns the frame's
+    /// byte length.
+    pub fn encode_round_open(
+        &mut self,
+        t: u64,
+        lr: f64,
+        deadline_ms: u64,
+        selected: &[u64],
+        params: &[f32],
+        out: &mut Vec<u8>,
+    ) -> usize {
+        self.payload.clear();
+        let p = &mut self.payload;
+        push_varint(p, t);
+        p.extend_from_slice(&lr.to_le_bytes());
+        push_varint(p, deadline_ms);
+        push_varint(p, selected.len() as u64);
+        for &w in selected {
+            push_varint(p, w);
+        }
+        push_varint(p, params.len() as u64);
+        for &x in params {
+            p.extend_from_slice(&x.to_le_bytes());
+        }
+        frame(MsgType::RoundOpen, &self.payload, out)
+    }
+
+    /// Borrow-friendly update encoder (the client fleet's hot path: no
+    /// intermediate [`Msg`]); returns the frame's byte length.
+    pub fn encode_update(
+        &mut self,
+        t: u64,
+        worker: u64,
+        loss: f64,
+        grad: &CompressedGrad,
+        out: &mut Vec<u8>,
+    ) -> usize {
+        self.payload.clear();
+        let p = &mut self.payload;
+        push_varint(p, t);
+        push_varint(p, worker);
+        p.extend_from_slice(&loss.to_le_bytes());
+        encode_grad(p, grad);
+        frame(MsgType::Update, &self.payload, out)
+    }
+}
+
+fn encode_grad(p: &mut Vec<u8>, grad: &CompressedGrad) {
+    match grad {
+        CompressedGrad::Ternary { pack, bits } => {
+            p.push(GRAD_TERNARY);
+            push_varint(p, pack.dim() as u64);
+            push_varint(p, pack.nnz() as u64);
+            p.extend_from_slice(&pack.scale().to_le_bytes());
+            p.extend_from_slice(&bits.to_le_bytes());
+            for &w in pack.mask_words() {
+                p.extend_from_slice(&w.to_le_bytes());
+            }
+            for &w in pack.sign_words() {
+                p.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        CompressedGrad::Dense { v, bits, .. } => {
+            p.push(GRAD_DENSE);
+            push_varint(p, v.len() as u64);
+            p.extend_from_slice(&bits.to_le_bytes());
+            for &x in v {
+                p.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Assemble one frame around a finished payload. The fixed header goes
+/// through [`BitWriter`] (MSB-first), matching the [`BitReader`] parse
+/// on the way in. Panics on payloads beyond [`MAX_PAYLOAD`]: every
+/// decoder in the protocol rejects such frames, so failing loudly at
+/// the encoder (with the actionable size) beats a fleet-wide
+/// `Oversized` reject storm at d > 2²⁶-parameter scale.
+fn frame(ty: MsgType, payload: &[u8], out: &mut Vec<u8>) -> usize {
+    assert!(
+        payload.len() <= MAX_PAYLOAD,
+        "frame payload {} B exceeds MAX_PAYLOAD {} B (shard the broadcast or raise the cap)",
+        payload.len(),
+        MAX_PAYLOAD
+    );
+    let start = out.len();
+    let mut hdr = BitWriter::new();
+    hdr.push_bits(MAGIC as u64, 32);
+    hdr.push_bits(WIRE_VERSION as u64, 8);
+    hdr.push_bits(ty as u64, 8);
+    out.extend_from_slice(hdr.as_bytes());
+    push_varint(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    let crc = crc32(&out[start..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out.len() - start
+}
+
+// ---------------------------------------------------------------------
+// Decoding.
+// ---------------------------------------------------------------------
+
+/// Parse and checksum one frame from the front of `buf`; returns the
+/// borrowed frame and the total bytes consumed. `max_payload` caps the
+/// declared length before anything else happens.
+pub fn parse_frame(buf: &[u8], max_payload: usize) -> Result<(Frame<'_>, usize), WireError> {
+    if buf.len() < HEADER_FIXED {
+        return Err(WireError::Truncated { need: HEADER_FIXED, have: buf.len() });
+    }
+    let mut hdr = BitReader::new(&buf[..HEADER_FIXED]);
+    let magic = hdr.read_bits(32).expect("fixed header") as u32;
+    if magic != MAGIC {
+        return Err(WireError::BadMagic { got: magic });
+    }
+    let version = hdr.read_bits(8).expect("fixed header") as u8;
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion { got: version });
+    }
+    let ty_byte = hdr.read_bits(8).expect("fixed header") as u8;
+    let msg_type = MsgType::from_u8(ty_byte).ok_or(WireError::BadMsgType { got: ty_byte })?;
+
+    let mut cur = Cursor::new(&buf[HEADER_FIXED..]);
+    let len = cur.varint()?;
+    if len > max_payload as u64 {
+        return Err(WireError::Oversized { len, max: max_payload });
+    }
+    let len = len as usize;
+    let payload_at = HEADER_FIXED + cur.pos;
+    let total = payload_at + len + CRC_LEN;
+    if buf.len() < total {
+        return Err(WireError::Truncated { need: total, have: buf.len() });
+    }
+    let mut crc_bytes = [0u8; CRC_LEN];
+    crc_bytes.copy_from_slice(&buf[total - CRC_LEN..total]);
+    let want = u32::from_le_bytes(crc_bytes);
+    let got = crc32(&buf[..total - CRC_LEN]);
+    if want != got {
+        return Err(WireError::BadCrc { want, got });
+    }
+    Ok((Frame { msg_type, payload: &buf[payload_at..payload_at + len] }, total))
+}
+
+/// Decode an update payload as a borrowed view (the coordinator's hot
+/// path). `frame.msg_type` must be [`MsgType::Update`].
+pub fn decode_update(payload: &[u8]) -> Result<UpdateView<'_>, WireError> {
+    let mut cur = Cursor::new(payload);
+    let t = cur.varint()?;
+    let worker = cur.varint()?;
+    let loss = cur.f64()?;
+    let grad = decode_grad(&mut cur)?;
+    cur.done()?;
+    Ok(UpdateView { t, worker, loss, grad })
+}
+
+fn decode_grad<'a>(cur: &mut Cursor<'a>) -> Result<GradView<'a>, WireError> {
+    match cur.u8()? {
+        GRAD_TERNARY => {
+            // Counts are bounded by the bytes that must follow them, so
+            // nothing here can demand an allocation the payload cannot
+            // back: dim is capped so the plane bytes fit the remainder.
+            let dim = cur.count(4 * MAX_PAYLOAD, "ternary dim out of range")?;
+            let nnz = cur.count(dim, "nnz exceeds dim")?;
+            let scale = cur.f32()?;
+            let bits = cur.f64()?;
+            let plane_bytes = PackedTernary::words(dim) * 8;
+            let mask = cur.take(plane_bytes)?;
+            let sign = cur.take(plane_bytes)?;
+            Ok(GradView::Ternary { dim, nnz, scale, bits, mask, sign })
+        }
+        GRAD_DENSE => {
+            let bytes_left = cur.remaining();
+            let dim = cur.count(bytes_left / 4 + 1, "dense dim exceeds payload")?;
+            let bits = cur.f64()?;
+            let nbytes = dim.checked_mul(4).ok_or(WireError::Malformed("dense dim overflow"))?;
+            let values = cur.take(nbytes)?;
+            Ok(GradView::Dense { dim, bits, values })
+        }
+        _ => Err(WireError::Malformed("unknown gradient payload kind")),
+    }
+}
+
+/// Fully decode one parsed frame into an owned [`Msg`], validating every
+/// field (the control-plane path; the coordinator uses
+/// [`decode_update`] + [`GradView::unpack_ternary_into`] for updates).
+pub fn decode_msg(frame: Frame<'_>) -> Result<Msg, WireError> {
+    let mut cur = Cursor::new(frame.payload);
+    let msg = match frame.msg_type {
+        MsgType::Hello => {
+            let lo = cur.varint()?;
+            let hi = cur.varint()?;
+            Msg::Hello { lo, hi }
+        }
+        MsgType::Welcome => {
+            let client_id = cur.varint()?;
+            let workers = cur.varint()?;
+            let dim = cur.varint()?;
+            let rounds = cur.varint()?;
+            Msg::Welcome { client_id, workers, dim, rounds }
+        }
+        MsgType::RoundOpen => {
+            let t = cur.varint()?;
+            let lr = cur.f64()?;
+            let deadline_ms = cur.varint()?;
+            // Each selected id takes ≥ 1 byte, so the count is bounded by
+            // the bytes present. Grow the vec from *parsed* ids rather
+            // than reserving off the declared count — a reservation would
+            // amplify a hostile count 8× (u64 per payload byte) before a
+            // single id was validated.
+            let k = cur.count(cur.remaining(), "selection count exceeds payload")?;
+            let mut selected = Vec::new();
+            for _ in 0..k {
+                selected.push(cur.varint()?);
+            }
+            let d = cur.count(cur.remaining() / 4 + 1, "params dim exceeds payload")?;
+            let bytes = cur.take(4 * d)?;
+            let params = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            Msg::RoundOpen { t, lr, deadline_ms, selected, params }
+        }
+        MsgType::Update => {
+            let uv = decode_update(frame.payload)?;
+            return Ok(Msg::Update {
+                t: uv.t,
+                worker: uv.worker,
+                loss: uv.loss,
+                grad: uv.grad.to_msg()?,
+            });
+        }
+        MsgType::Ack => {
+            let t = cur.varint()?;
+            let worker = cur.varint()?;
+            Msg::Ack { t, worker }
+        }
+        MsgType::Reject => {
+            let t = cur.varint()?;
+            let worker = cur.varint()?;
+            let b = cur.u8()?;
+            let bad = WireError::Malformed("unknown reject reason");
+            let reason = RejectReason::from_u8(b).ok_or(bad)?;
+            Msg::Reject { t, worker, reason }
+        }
+        MsgType::Fin => Msg::Fin { rounds: cur.varint()? },
+        MsgType::Heartbeat => Msg::Heartbeat { client_id: cur.varint()? },
+    };
+    cur.done()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut wbuf = WireBuf::new();
+        let mut out = Vec::new();
+        let n = wbuf.encode(msg, &mut out);
+        assert_eq!(n, out.len());
+        let (frame, consumed) = parse_frame(&out, MAX_PAYLOAD).unwrap();
+        assert_eq!(consumed, out.len());
+        assert_eq!(frame.msg_type, msg.msg_type());
+        decode_msg(frame).unwrap()
+    }
+
+    fn sample_ternary(d: usize, seed: u64) -> CompressedGrad {
+        let mut rng = Pcg64::seed_from(seed);
+        let codes: Vec<i8> = (0..d).map(|_| [-1i8, 0, 0, 1][rng.index(4)]).collect();
+        let pack = PackedTernary::from_codes(&codes, 1.0);
+        let bits = 2.0 * d as f64 + 17.5;
+        CompressedGrad::ternary(pack, bits)
+    }
+
+    #[test]
+    fn every_message_roundtrips_bit_identically() {
+        let msgs = vec![
+            Msg::Hello { lo: 0, hi: 1000 },
+            Msg::Welcome { client_id: 3, workers: 1000, dim: 1 << 20, rounds: 500 },
+            Msg::RoundOpen {
+                t: 41,
+                lr: 0.012345,
+                deadline_ms: 250,
+                selected: vec![0, 7, 63, 64, 999],
+                params: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE, -0.0],
+            },
+            Msg::Update { t: 41, worker: 7, loss: 0.693147, grad: sample_ternary(130, 1) },
+            Msg::Update {
+                t: 2,
+                worker: 0,
+                loss: -1.0,
+                grad: CompressedGrad::dense(vec![0.5, 0.0, -3.25], 96.0),
+            },
+            Msg::Ack { t: 5, worker: 2 },
+            Msg::Reject { t: 5, worker: 2, reason: RejectReason::Duplicate },
+            Msg::Fin { rounds: 120 },
+            Msg::Heartbeat { client_id: 9 },
+        ];
+        for msg in &msgs {
+            assert_eq!(&roundtrip(msg), msg);
+        }
+    }
+
+    #[test]
+    fn ternary_update_roundtrips_through_scratch_pack() {
+        let grad = sample_ternary(777, 3);
+        let CompressedGrad::Ternary { pack: src, bits } = &grad else { unreachable!() };
+        let mut wbuf = WireBuf::new();
+        let mut out = Vec::new();
+        wbuf.encode_update(9, 42, 0.25, &grad, &mut out);
+        let (frame, _) = parse_frame(&out, MAX_PAYLOAD).unwrap();
+        assert_eq!(frame.msg_type, MsgType::Update);
+        let uv = decode_update(frame.payload).unwrap();
+        assert_eq!((uv.t, uv.worker, uv.loss), (9, 42, 0.25));
+        assert_eq!(uv.grad.bits(), *bits);
+        let mut scratch = PackedTernary::zeros(0, 1.0);
+        uv.grad.unpack_ternary_into(&mut scratch).unwrap().unwrap();
+        assert_eq!(&scratch, src);
+    }
+
+    #[test]
+    fn nnz_lie_is_rejected() {
+        let grad = sample_ternary(64, 4);
+        let mut wbuf = WireBuf::new();
+        let mut out = Vec::new();
+        wbuf.encode_update(0, 0, 0.0, &grad, &mut out);
+        // The nnz varint sits right after the frame header + t/worker/
+        // loss fields; easier to corrupt a mask byte and watch the
+        // recount disagree (CRC is recomputed to isolate the check).
+        let (frame, total) = parse_frame(&out, MAX_PAYLOAD).unwrap();
+        let payload_at = total - CRC_LEN - frame.payload.len();
+        let mask_byte = payload_at + frame.payload.len() - 16; // inside planes
+        out[mask_byte] ^= 0x01;
+        let body_len = out.len() - CRC_LEN;
+        let crc = crc32(&out[..body_len]).to_le_bytes();
+        out[body_len..].copy_from_slice(&crc);
+        let (frame, _) = parse_frame(&out, MAX_PAYLOAD).unwrap();
+        let err = decode_msg(frame).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err}");
+    }
+
+    #[test]
+    fn typed_errors_for_bad_magic_version_type_crc_and_caps() {
+        let mut wbuf = WireBuf::new();
+        let mut good = Vec::new();
+        wbuf.encode(&Msg::Fin { rounds: 3 }, &mut good);
+
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(parse_frame(&bad, MAX_PAYLOAD), Err(WireError::BadMagic { .. })));
+
+        let mut bad = good.clone();
+        bad[4] = WIRE_VERSION + 1;
+        assert!(matches!(
+            parse_frame(&bad, MAX_PAYLOAD),
+            Err(WireError::BadVersion { got }) if got == WIRE_VERSION + 1
+        ));
+
+        let mut bad = good.clone();
+        bad[5] = 0xee;
+        assert!(matches!(parse_frame(&bad, MAX_PAYLOAD), Err(WireError::BadMsgType { got: 0xee })));
+
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x10;
+        assert!(matches!(parse_frame(&bad, MAX_PAYLOAD), Err(WireError::BadCrc { .. })));
+
+        // A hostile length prefix is rejected before any allocation.
+        let mut huge = good[..HEADER_FIXED].to_vec();
+        push_varint(&mut huge, u64::MAX / 2);
+        huge.extend_from_slice(&[0u8; 16]);
+        assert!(matches!(parse_frame(&huge, MAX_PAYLOAD), Err(WireError::Oversized { .. })));
+
+        // Every truncation of a valid frame is a typed error.
+        for cut in 0..good.len() {
+            let err = parse_frame(&good[..cut], MAX_PAYLOAD).unwrap_err();
+            assert!(matches!(err, WireError::Truncated { .. }), "cut at {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn frame_overhead_under_one_percent_at_1e5_coords() {
+        // Satellite: wire framing (header + varints + CRC) must cost
+        // < 1% of an update frame at d ≥ 10^5 — the PackedTernary
+        // payload dominates.
+        let d = 100_000;
+        let grad = sample_ternary(d, 5);
+        let mut wbuf = WireBuf::new();
+        let mut out = Vec::new();
+        let frame_len = wbuf.encode_update(3, 17, 0.5, &grad, &mut out);
+        let (frame, _) = parse_frame(&out, MAX_PAYLOAD).unwrap();
+        let overhead = frame_len - frame.payload.len();
+        let share = overhead as f64 / frame_len as f64;
+        assert!(share < 0.01, "framing overhead {overhead}B / {frame_len}B = {share:.4}");
+        // And the plane payload is exactly 2 bits/coordinate plus the
+        // fixed scalars, i.e. the 4x-smaller PR 1 representation really
+        // is what crosses the wire.
+        let plane_bytes = 2 * PackedTernary::words(d) * 8;
+        assert!(frame.payload.len() < plane_bytes + 64);
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC-32 of "123456789" is 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn varint_roundtrip_and_overflow() {
+        let mut buf = Vec::new();
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            buf.clear();
+            push_varint(&mut buf, v);
+            let mut cur = Cursor::new(&buf);
+            assert_eq!(cur.varint().unwrap(), v);
+            assert_eq!(cur.remaining(), 0);
+        }
+        // 10 bytes with a too-large final digit overflows u64.
+        let over = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x02];
+        let mut cur = Cursor::new(&over);
+        assert!(cur.varint().is_err());
+        // 11-byte varints are malformed.
+        let long = [0x80u8; 11];
+        let mut cur = Cursor::new(&long);
+        assert!(cur.varint().is_err());
+    }
+}

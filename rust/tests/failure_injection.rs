@@ -2,13 +2,18 @@
 //! precisely on invalid configurations, and stay numerically sane on
 //! degenerate-but-legal inputs.
 
-use sparsignd::compressors::{CompressorKind, NormKind};
+use sparsignd::compressors::{CompressedGrad, CompressorKind, NormKind, PackedTernary};
 use sparsignd::config::ExperimentConfig;
-use sparsignd::coordinator::{AggregationRule, Algorithm, ClassifierEnv, TrainingRun};
+use sparsignd::coordinator::{AggregationRule, Algorithm, ClassifierEnv, RunHistory, TrainingRun};
 use sparsignd::data::{Dataset, DirichletPartitioner, FederatedDataset};
 use sparsignd::model::ModelKind;
+use sparsignd::net::wire::{self, WireBuf};
+use sparsignd::net::{read_frame_bytes, Endpoint, Msg, NetCoordinator, RejectReason, ServeOptions};
 use sparsignd::optim::LrSchedule;
 use sparsignd::util::rng::Pcg64;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::Duration;
 
 fn tiny_dataset(n: usize) -> Dataset {
     let mut rng = Pcg64::seed_from(1);
@@ -181,6 +186,225 @@ fn config_validation_rejects_garbage() {
     let mut cfg = ExperimentConfig::fast_preset();
     assert!(cfg.apply_override("participation", "0.9").is_ok());
     assert!(cfg.apply_override("participation", "a lot").is_err());
+}
+
+// ---------------------------------------------------------------------
+// Transport faults (DESIGN.md §11): the coordinator service must keep
+// rounds completing under dropped clients, duplicate submissions and
+// deadline-expired stragglers — failing loudly only when a round gets
+// zero submissions.
+// ---------------------------------------------------------------------
+
+/// A hand-driven wire client for fault injection: speaks raw frames
+/// over TCP so tests control exactly what (and when) the server sees.
+struct RawClient {
+    stream: TcpStream,
+    wbuf: WireBuf,
+    out: Vec<u8>,
+    buf: Vec<u8>,
+}
+
+impl RawClient {
+    fn connect(ep: &Endpoint) -> Self {
+        let Endpoint::Tcp(addr) = ep else { panic!("fault tests speak tcp") };
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Self { stream, wbuf: WireBuf::new(), out: Vec::new(), buf: Vec::new() }
+    }
+
+    fn send(&mut self, msg: &Msg) -> usize {
+        self.out.clear();
+        let n = self.wbuf.encode(msg, &mut self.out);
+        self.stream.write_all(&self.out).expect("send frame");
+        n
+    }
+
+    fn send_update(&mut self, t: u64, worker: u64, d: usize) -> usize {
+        // Any unit-scale ternary payload is protocol-valid; the fault
+        // tests assert protocol behavior, not training math.
+        let pack = PackedTernary::dense_signs(&vec![0.5f32; d], 1.0);
+        let grad = CompressedGrad::ternary(pack, 2.0 * d as f64);
+        self.out.clear();
+        let n = self.wbuf.encode_update(t, worker, 0.25, &grad, &mut self.out);
+        self.stream.write_all(&self.out).expect("send update");
+        n
+    }
+
+    fn recv(&mut self) -> Msg {
+        let n = read_frame_bytes(&mut self.stream, wire::MAX_PAYLOAD, &mut self.buf)
+            .expect("read frame");
+        let (frame, _) = wire::parse_frame(&self.buf[..n], wire::MAX_PAYLOAD).unwrap();
+        wire::decode_msg(frame).unwrap()
+    }
+
+    fn join(&mut self, lo: u64, hi: u64) {
+        self.send(&Msg::Hello { lo, hi });
+        let Msg::Welcome { .. } = self.recv() else { panic!("expected Welcome") };
+    }
+
+    /// Receive, asserting a round-open; returns `(t, lr, selected)`.
+    fn expect_round(&mut self) -> (u64, f64, Vec<u64>) {
+        match self.recv() {
+            Msg::RoundOpen { t, lr, selected, .. } => (t, lr, selected),
+            other => panic!("expected RoundOpen, got {other:?}"),
+        }
+    }
+}
+
+fn net_run(rounds: usize) -> TrainingRun {
+    let mut run = base_run(Algorithm::CompressedGd {
+        compressor: CompressorKind::Sign,
+        aggregation: AggregationRule::MajorityVote,
+    });
+    run.rounds = rounds;
+    run
+}
+
+/// Bind a TCP coordinator and serve `run` from a scoped thread while
+/// `fleet` drives hand-rolled clients; returns the server history.
+fn serve_with<F>(
+    run: &TrainingRun,
+    m: usize,
+    d: usize,
+    deadline: Option<Duration>,
+    fleet: F,
+) -> RunHistory
+where
+    F: FnOnce(&Endpoint),
+{
+    let mut opts = ServeOptions::new(Endpoint::Tcp("127.0.0.1:0".into()));
+    opts.round_deadline = deadline;
+    opts.rendezvous_timeout = Duration::from_secs(20);
+    let coordinator = NetCoordinator::bind(opts).expect("bind");
+    let ep = coordinator.local_endpoint().clone();
+    let mut hist = None;
+    std::thread::scope(|s| {
+        let handle = s.spawn(|| coordinator.serve(run, m, vec![0.0f32; d], &|_p| (0.0, 0.0)));
+        fleet(&ep);
+        hist = Some(handle.join().expect("server thread").expect("serve"));
+    });
+    hist.unwrap()
+}
+
+#[test]
+fn transport_dropped_client_mid_round_still_completes() {
+    let d = 8;
+    let run = net_run(2);
+    let hist = serve_with(&run, 3, d, None, |ep| {
+        let mut a = RawClient::connect(ep);
+        let mut b = RawClient::connect(ep);
+        a.join(0, 2);
+        b.join(2, 3);
+        // B sees round 0 open, then dies without submitting.
+        let _ = b.expect_round();
+        drop(b);
+        for _ in 0..2 {
+            let (t, _lr, selected) = a.expect_round();
+            for &w in &selected {
+                a.send_update(t, w, d);
+            }
+        }
+        let Msg::Fin { rounds } = a.recv() else { panic!("expected Fin") };
+        assert_eq!(rounds, 2);
+    });
+    assert_eq!(hist.reports.len(), 2);
+    // B's worker was selected (full participation) but never delivered:
+    // one straggler per round, two senders per round.
+    assert_eq!(hist.ledger.total_stragglers(), 2);
+    for t in 0..2 {
+        let rc = hist.ledger.get(t).unwrap();
+        assert_eq!(rc.senders, 2, "round {t}");
+        assert_eq!(rc.stragglers, 1, "round {t}");
+    }
+    assert!(hist.final_params.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn transport_duplicate_submission_is_idempotently_rejected() {
+    let d = 8;
+    let run = net_run(1);
+    let hist = serve_with(&run, 2, d, None, |ep| {
+        let mut c = RawClient::connect(ep);
+        c.join(0, 2);
+        let (t, _lr, selected) = c.expect_round();
+        assert_eq!(selected, vec![0, 1]);
+        let len0 = c.send_update(t, 0, d);
+        let dup = c.send_update(t, 0, d); // identical resend
+        assert_eq!(dup, len0);
+        let len1 = c.send_update(t, 1, d);
+        match c.recv() {
+            Msg::Reject { t: rt, worker, reason } => {
+                assert_eq!((rt, worker), (0, 0));
+                assert_eq!(reason, RejectReason::Duplicate);
+            }
+            other => panic!("expected duplicate reject, got {other:?}"),
+        }
+        let Msg::Fin { .. } = c.recv() else { panic!("expected Fin") };
+        // The ledger counted the two accepted frames, not the duplicate.
+        assert_eq!(len0, len1);
+    });
+    let rc = hist.ledger.get(0).unwrap();
+    assert_eq!(rc.senders, 2);
+    assert_eq!(rc.stragglers, 0);
+    // The ledger counted exactly the two accepted frames, not the
+    // duplicate: recompute one update frame's length for the sum.
+    let pack = PackedTernary::dense_signs(&vec![0.5f32; 8], 1.0);
+    let grad = CompressedGrad::ternary(pack, 16.0);
+    let mut wbuf = WireBuf::new();
+    let mut out = Vec::new();
+    let one = wbuf.encode_update(0, 0, 0.25, &grad, &mut out) as u64;
+    assert_eq!(rc.uplink_wire_bytes, 2 * one);
+}
+
+#[test]
+fn transport_deadline_expired_straggler_is_counted() {
+    let d = 8;
+    let run = net_run(2);
+    let deadline = Some(Duration::from_millis(2000));
+    let hist = serve_with(&run, 2, d, deadline, |ep| {
+        let mut a = RawClient::connect(ep);
+        let mut b = RawClient::connect(ep);
+        a.join(0, 1);
+        b.join(1, 2);
+        // A is prompt in both rounds.
+        let (t0, _, sel) = a.expect_round();
+        for &w in &sel {
+            a.send_update(t0, w, d);
+        }
+        // B reads round 0 but sleeps through its deadline.
+        let (bt0, _, bsel) = b.expect_round();
+        assert_eq!((bt0, bsel.as_slice()), (0, &[1u64][..]));
+        std::thread::sleep(Duration::from_millis(3000));
+        // Late: round 0 closed long ago (server is in round 1 by now).
+        b.send_update(0, 1, d);
+        // A finishes round 1 as soon as it opens …
+        let (t1, _, sel) = a.expect_round();
+        assert_eq!(t1, 1);
+        for &w in &sel {
+            a.send_update(t1, w, d);
+        }
+        // … while B recovers in round 1 after its stale-round reject.
+        let (bt1, _, bsel) = b.expect_round();
+        assert_eq!(bt1, 1);
+        for &w in &bsel {
+            b.send_update(bt1, w, d);
+        }
+        match b.recv() {
+            Msg::Reject { t, worker, reason } => {
+                assert_eq!((t, worker), (0, 1));
+                assert_eq!(reason, RejectReason::BadRound, "stale round is typed");
+            }
+            other => panic!("expected stale-round reject, got {other:?}"),
+        }
+        let Msg::Fin { .. } = a.recv() else { panic!("A expected Fin") };
+        let Msg::Fin { .. } = b.recv() else { panic!("B expected Fin") };
+    });
+    assert_eq!(hist.reports.len(), 2);
+    let r0 = hist.ledger.get(0).unwrap();
+    assert_eq!((r0.senders, r0.stragglers), (1, 1), "round 0 closed at the deadline");
+    let r1 = hist.ledger.get(1).unwrap();
+    assert_eq!((r1.senders, r1.stragglers), (2, 0), "round 1 recovered");
 }
 
 #[test]

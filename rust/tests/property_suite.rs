@@ -466,3 +466,187 @@ fn prop_packed_aggregation_matches_dense_decode() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// Wire-codec hardening (DESIGN.md §11): random messages round-trip
+// bit-identically, and mutated/truncated/hostile byte streams always
+// come back as typed `WireError`s — never a panic, never an unchecked
+// allocation.
+// ---------------------------------------------------------------------
+
+use sparsignd::net::wire::{self, Msg, RejectReason, WireBuf, WireError};
+use sparsignd::net::NetError;
+
+/// Random protocol message (every variant, random payload shapes).
+fn gen_wire_msg(rng: &mut Pcg64) -> Msg {
+    let grad = |rng: &mut Pcg64| {
+        let d = 1 + rng.index(300);
+        if rng.bernoulli(0.5) {
+            let codes: Vec<i8> = (0..d).map(|_| [-1i8, 0, 0, 1][rng.index(4)]).collect();
+            let scale = if rng.bernoulli(0.5) { 1.0 } else { rng.f32() + 0.25 };
+            CompressedGrad::ternary_from_codes(&codes, scale, rng.f64() * 1e4)
+        } else {
+            let v: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            CompressedGrad::dense(v, rng.f64() * 1e4)
+        }
+    };
+    match rng.index(8) {
+        0 => Msg::Hello { lo: rng.next_u64() >> 40, hi: rng.next_u64() >> 40 },
+        1 => Msg::Welcome {
+            client_id: rng.next_u64() >> 32,
+            workers: rng.next_u64() >> 32,
+            dim: rng.next_u64() >> 32,
+            rounds: rng.next_u64() >> 32,
+        },
+        2 => {
+            let k = rng.index(20);
+            let d = rng.index(200);
+            Msg::RoundOpen {
+                t: rng.next_u64() >> 40,
+                lr: rng.f64(),
+                deadline_ms: rng.next_u64() >> 48,
+                selected: (0..k).map(|_| rng.next_u64() >> 40).collect(),
+                params: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            }
+        }
+        3 => Msg::Update {
+            t: rng.next_u64() >> 40,
+            worker: rng.next_u64() >> 40,
+            loss: rng.f64(),
+            grad: grad(rng),
+        },
+        4 => Msg::Ack { t: rng.next_u64() >> 40, worker: rng.next_u64() >> 40 },
+        5 => Msg::Reject {
+            t: rng.next_u64() >> 40,
+            worker: rng.next_u64() >> 40,
+            reason: [
+                RejectReason::BadRound,
+                RejectReason::NotSelected,
+                RejectReason::Duplicate,
+                RejectReason::Late,
+                RejectReason::UnknownWorker,
+                RejectReason::WrongClient,
+            ][rng.index(6)],
+        },
+        6 => Msg::Fin { rounds: rng.next_u64() >> 40 },
+        _ => Msg::Heartbeat { client_id: rng.next_u64() >> 40 },
+    }
+}
+
+#[test]
+fn prop_wire_roundtrip_bit_identical() {
+    check(cfg(96, 0x171), gen_wire_msg, |msg| {
+        let mut wbuf = WireBuf::new();
+        let mut out = Vec::new();
+        let n = wbuf.encode(msg, &mut out);
+        if n != out.len() {
+            return Err(format!("encode reported {n}, wrote {}", out.len()));
+        }
+        let (frame, used) = wire::parse_frame(&out, wire::MAX_PAYLOAD)
+            .map_err(|e| format!("parse: {e}"))?;
+        if used != n {
+            return Err(format!("consumed {used} of {n}"));
+        }
+        let back = wire::decode_msg(frame).map_err(|e| format!("decode: {e}"))?;
+        if &back != msg {
+            return Err(format!("roundtrip mismatch: {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_single_byte_mutations_yield_typed_errors() {
+    check(
+        cfg(128, 0x172),
+        |rng| {
+            let msg = gen_wire_msg(rng);
+            let mut wbuf = WireBuf::new();
+            let mut out = Vec::new();
+            wbuf.encode(&msg, &mut out);
+            let at = rng.index(out.len());
+            let flip = 1 + rng.index(255) as u8;
+            (out, at, flip)
+        },
+        |case| {
+            let (frame, at, flip) = case;
+            let mut bad = frame.clone();
+            bad[*at] ^= *flip;
+            // Any single-byte corruption must surface as a typed error:
+            // the header checks catch the first six bytes, CRC-32 catches
+            // every ≤32-bit burst in the body, and a corrupted length
+            // varint lands on Truncated/Oversized/BadCrc.
+            match wire::parse_frame(&bad, wire::MAX_PAYLOAD) {
+                Err(_) => Ok(()),
+                Ok((f, _)) => match wire::decode_msg(f) {
+                    Err(_) => Ok(()),
+                    Ok(m) => Err(format!("mutation at {at} (^{flip:#x}) decoded: {m:?}")),
+                },
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_wire_truncations_yield_typed_errors() {
+    check(
+        cfg(64, 0x173),
+        |rng| {
+            let msg = gen_wire_msg(rng);
+            let mut wbuf = WireBuf::new();
+            let mut out = Vec::new();
+            wbuf.encode(&msg, &mut out);
+            let cut = rng.index(out.len());
+            (out, cut)
+        },
+        |case| {
+            let (frame, cut) = case;
+            match wire::parse_frame(&frame[..*cut], wire::MAX_PAYLOAD) {
+                Err(WireError::Truncated { .. }) => Ok(()),
+                Err(other) => Err(format!("cut {cut}: wrong error {other}")),
+                Ok(_) => Err(format!("cut {cut}: parsed a prefix")),
+            }
+        },
+    );
+}
+
+/// Hostile interior lengths: a frame whose payload declares a gigantic
+/// gradient dimension must be refused by bounds checks before any
+/// allocation happens (the decode path only ever allocates what the
+/// payload bytes can back).
+#[test]
+fn wire_hostile_dims_never_allocate() {
+    // Ternary kind with dim = 2^60 and a 16-byte payload.
+    let mut payload = Vec::new();
+    wire::push_varint(&mut payload, 3); // t
+    wire::push_varint(&mut payload, 1); // worker
+    payload.extend_from_slice(&0.5f64.to_le_bytes()); // loss
+    payload.push(0); // ternary kind
+    wire::push_varint(&mut payload, 1u64 << 60); // dim
+    wire::push_varint(&mut payload, 4); // nnz
+    let err = wire::decode_update(&payload).unwrap_err();
+    assert!(matches!(err, WireError::Malformed(_)), "{err}");
+
+    // Dense kind with dim far beyond the remaining bytes.
+    let mut payload = Vec::new();
+    wire::push_varint(&mut payload, 3);
+    wire::push_varint(&mut payload, 1);
+    payload.extend_from_slice(&0.5f64.to_le_bytes());
+    payload.push(1); // dense kind
+    wire::push_varint(&mut payload, u64::MAX); // dim
+    payload.extend_from_slice(&1.0f64.to_le_bytes());
+    let err = wire::decode_update(&payload).unwrap_err();
+    assert!(matches!(err, WireError::Malformed(_)), "{err}");
+
+    // A stream-framed hostile length is capped before buffering.
+    let mut hostile = Vec::new();
+    hostile.extend_from_slice(&wire::MAGIC.to_be_bytes());
+    hostile.push(wire::WIRE_VERSION);
+    hostile.push(4); // Update
+    wire::push_varint(&mut hostile, u64::MAX / 4);
+    let mut cursor = std::io::Cursor::new(hostile);
+    let mut buf = Vec::new();
+    let read = sparsignd::net::read_frame_bytes(&mut cursor, wire::MAX_PAYLOAD, &mut buf);
+    let err = read.unwrap_err();
+    assert!(matches!(err, NetError::Wire(WireError::Oversized { .. })), "{err}");
+}
