@@ -17,6 +17,8 @@
 //!      encode/decode frames-per-second plus an end-to-end loopback
 //!      federated run (1k virtual clients over UDS, TCP fallback) pinned
 //!      bit-identical to the in-process engine
+//!   9. the coordinator snapshot (DESIGN.md §12): atomic write + validated
+//!      load latency at d = 1e5 with a 200-round history
 //!
 //! `cargo bench --bench perf_hotpaths` runs the full configuration;
 //! `-- --smoke` (or `PERF_SMOKE=1`) shrinks every section for CI.
@@ -631,6 +633,88 @@ fn bench_transport(rep: &mut Report, smoke: bool) {
     rep.num("transport_fleet_updates", stats.updates_sent as f64);
 }
 
+/// §12: coordinator snapshot write/load at d = 1e5 — the elastic-resume
+/// overhead a production deployment pays every k rounds. Write includes
+/// the full atomic dance (temp file + fsync + rename); load includes
+/// the hostile-input revalidation pass.
+fn bench_snapshot(rep: &mut Report, smoke: bool) {
+    use sparsignd::coordinator::{CommLedger, RoundComm, RoundReport};
+    use sparsignd::snapshot::{CoordinatorSnapshot, SnapPhase};
+
+    let d = 100_000;
+    let rounds_done = if smoke { 50 } else { 200 };
+    println!("\n-- coordinator snapshot (d = {d}, {rounds_done} rounds of history) --");
+    let mut rng = Pcg64::seed_from(31);
+    let mut params = vec![0.0f32; d];
+    rng.fill_normal(&mut params, 0.0, 0.1);
+    let mut residual = vec![0.0f32; d];
+    rng.fill_normal(&mut residual, 0.0, 0.01);
+    let mut ledger = CommLedger::with_capacity(rounds_done);
+    let reports: Vec<RoundReport> = (0..rounds_done)
+        .map(|t| {
+            ledger.record(RoundComm {
+                uplink_bits: 2.0 * d as f64,
+                downlink_bits: 32.0,
+                senders: 100,
+                uplink_nnz: d / 2,
+                uplink_wire_bytes: (d / 4) as u64,
+                downlink_wire_bytes: 4 * d as u64,
+                stragglers: 0,
+            });
+            RoundReport {
+                round: t,
+                lr: 0.01,
+                train_loss: 1.0 / (t + 1) as f64,
+                eval: (t % 10 == 9).then_some((0.5, 0.8)),
+                uplink_bits: 2.0 * d as f64,
+                downlink_bits: 32.0,
+                cum_uplink_bits: 2.0 * d as f64 * (t + 1) as f64,
+            }
+        })
+        .collect();
+    let snap = CoordinatorSnapshot {
+        fingerprint: 0x5150_5150_5150_5150,
+        dim: d,
+        workers: 100,
+        rounds_total: rounds_done + 1,
+        phase: SnapPhase::Broadcast(rounds_done - 1),
+        select_rng: Pcg64::seed_from(32).to_raw(),
+        params,
+        residual: Some(residual),
+        reports,
+        ledger,
+    };
+    let bytes = snap.encode().len();
+    let path = std::env::temp_dir()
+        .join(format!("sparsignd-bench-snap-{}.bin", std::process::id()));
+    let iters = if smoke { 10 } else { 50 };
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        snap.save(&path).expect("snapshot save");
+    }
+    let write_ms = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(CoordinatorSnapshot::load(&path).expect("snapshot load"));
+    }
+    let load_ms = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
+    let back = CoordinatorSnapshot::load(&path).expect("snapshot load");
+    assert_eq!(back, snap, "snapshot round-trip must be bit-identical");
+    let _ = std::fs::remove_file(&path);
+
+    println!(
+        "  {:.1} KiB/file | write {write_ms:>7.2} ms (atomic: tmp+fsync+rename) | \
+         load {load_ms:>7.2} ms (CRC + revalidate)",
+        bytes as f64 / 1024.0
+    );
+    rep.num("snapshot_dim", d as f64);
+    rep.num("snapshot_bytes", bytes as f64);
+    rep.num("snapshot_write_ms", write_ms);
+    rep.num("snapshot_load_ms", load_ms);
+}
+
 fn bench_golomb(d: usize) {
     println!("\n-- Golomb position coding (d = {d}) --");
     let mut rng = Pcg64::seed_from(4);
@@ -838,6 +922,7 @@ fn main() {
         bench_engine(&mut rep, 1 << 15, 16, 2);
         bench_engine_10k(&mut rep, true);
         bench_transport(&mut rep, true);
+        bench_snapshot(&mut rep, true);
         bench_golomb(1 << 14);
         bench_gemm(&mut rep, true);
         bench_loss_grad(&mut rep, true);
@@ -849,6 +934,7 @@ fn main() {
         bench_engine(&mut rep, 1 << 20, 100, 2);
         bench_engine_10k(&mut rep, false);
         bench_transport(&mut rep, false);
+        bench_snapshot(&mut rep, false);
         bench_golomb(1 << 20);
         bench_gemm(&mut rep, false);
         bench_loss_grad(&mut rep, false);

@@ -160,9 +160,9 @@ impl VoteAccumulator {
 
     /// Horizontal extraction: rebuild every lane's exact count into
     /// `counts` (length `dim`). Per 64-lane word this runs an unrolled
-    /// 8×8 word-transpose per 8-plane group ([`transpose8`]) instead of
-    /// the per-bit shift loop — ~3 word ops per 8 lanes per group rather
-    /// than `planes` shift+mask ops per lane.
+    /// 8×8 word-transpose per 8-plane group (the private `transpose8`)
+    /// instead of the per-bit shift loop — ~3 word ops per 8 lanes per
+    /// group rather than `planes` shift+mask ops per lane.
     pub fn counts_into(&self, counts: &mut [i16]) {
         assert_eq!(counts.len(), self.dim, "counts buffer dim mismatch");
         let planes = self.planes;

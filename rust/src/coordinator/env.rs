@@ -44,6 +44,17 @@ pub trait GradientSource: Send + Sync {
     fn serial_only(&self) -> bool {
         false
     }
+
+    /// Structural fingerprint of the data/environment this source draws
+    /// gradients from, mixed into every coordinator snapshot's config
+    /// fingerprint (DESIGN.md §12) so a resume refuses a rebuilt
+    /// environment whose dataset, partition, or batch shape drifted —
+    /// the `TrainingRun` alone cannot see those. Sources whose gradient
+    /// distribution is fully determined by the run seed and the fields
+    /// already fingerprinted (synthetic benches) may keep the default.
+    fn env_fingerprint(&self) -> u64 {
+        0
+    }
 }
 
 /// Classification environment: a shared [`Model`], a Dirichlet-partitioned
@@ -142,6 +153,38 @@ impl GradientSource for ClassifierEnv {
 
     fn serial_only(&self) -> bool {
         self.model.serial_only()
+    }
+
+    /// Structural hash of the dataset, partition and batch shape: dims,
+    /// split sizes, per-worker shard sizes, every shard's first index,
+    /// a stride-sampled slice of the training features (bit-exact) and
+    /// labels. Cheap (cold path, O(workers + 64) work) yet sensitive to
+    /// the drifts a rebuilt environment can smuggle in — a different
+    /// Dirichlet α reshapes the shards, a different generator seed moves
+    /// the sampled feature bits, a different `--batch` changes the batch
+    /// field directly.
+    fn env_fingerprint(&self) -> u64 {
+        let mut buf: Vec<u8> = Vec::with_capacity(1024);
+        let mut push = |buf: &mut Vec<u8>, v: u64| buf.extend_from_slice(&v.to_le_bytes());
+        push(&mut buf, self.train.dim as u64);
+        push(&mut buf, self.train.classes as u64);
+        push(&mut buf, self.train.len() as u64);
+        push(&mut buf, self.test.len() as u64);
+        push(&mut buf, self.batch as u64);
+        push(&mut buf, self.fed.workers() as u64);
+        for shard in &self.fed.shards {
+            push(&mut buf, shard.len() as u64);
+            push(&mut buf, shard.first().copied().unwrap_or(0) as u64);
+        }
+        let stride = (self.train.x.len() / 64).max(1);
+        for i in (0..self.train.x.len()).step_by(stride) {
+            push(&mut buf, self.train.x[i].to_bits() as u64);
+        }
+        let stride = (self.train.y.len() / 64).max(1);
+        for i in (0..self.train.y.len()).step_by(stride) {
+            push(&mut buf, self.train.y[i] as u64);
+        }
+        crate::snapshot::fingerprint_bytes(&buf)
     }
 }
 

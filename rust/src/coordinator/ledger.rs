@@ -22,7 +22,7 @@
 use crate::compressors::CompressedGrad;
 
 /// Per-round communication record.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RoundComm {
     /// Worker → server bits this round (summed over selected workers).
     pub uplink_bits: f64,
@@ -59,7 +59,7 @@ impl RoundComm {
 }
 
 /// Cumulative communication ledger.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommLedger {
     rounds: Vec<RoundComm>,
 }
@@ -67,6 +67,26 @@ pub struct CommLedger {
 impl CommLedger {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Rebuild a ledger from per-round records — the snapshot restore
+    /// path (`crate::snapshot`), which revalidated the records on load.
+    pub fn from_records(rounds: Vec<RoundComm>) -> Self {
+        Self { rounds }
+    }
+
+    /// Reserve room for `additional` further records (the resume path's
+    /// equivalent of [`Self::with_capacity`]: restored ledgers get their
+    /// remaining-rounds headroom up front so steady-state rounds never
+    /// reallocate mid-round).
+    pub fn reserve(&mut self, additional: usize) {
+        self.rounds.reserve(additional);
+    }
+
+    /// Every recorded round, in round order — the snapshot serializer
+    /// reads these verbatim so a restored ledger is field-identical.
+    pub fn records(&self) -> &[RoundComm] {
+        &self.rounds
     }
 
     /// Ledger with room for `rounds` records — the run loop preallocates

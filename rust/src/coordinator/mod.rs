@@ -20,7 +20,7 @@
 //! builds a **persistent pool** of `TrainingRun::threads` workers
 //! (default: `available_parallelism`) once per run; each round the
 //! selected workers are sharded across the parked pool threads
-//! ([`pool`], DESIGN.md §10). On the unit-scale packed-ternary fast path
+//! (the crate-private `pool` module, DESIGN.md §10). On the unit-scale packed-ternary fast path
 //! each pool thread folds its messages into a thread-local
 //! [`VoteAccumulator`] as they are produced and the accumulators merge —
 //! votes are exact integers, so the counts are independent of fold and
@@ -51,6 +51,7 @@ use crate::compressors::{
     QsgdCompressor, SparsignCompressor,
 };
 use crate::optim::{sgd_step, LrSchedule};
+use crate::snapshot::{CoordinatorSnapshot, SnapPhase, SnapshotError, SnapshotPolicy};
 use crate::util::rng::Pcg64;
 use std::sync::Mutex;
 
@@ -119,8 +120,9 @@ impl Algorithm {
     }
 }
 
-/// Per-round metrics.
-#[derive(Clone, Debug)]
+/// Per-round metrics. `PartialEq` compares every field exactly — the
+/// snapshot-resume equivalence tests diff restored histories field-wise.
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundReport {
     pub round: usize,
     pub lr: f64,
@@ -296,6 +298,9 @@ pub(crate) struct RoundLoop<'a> {
     /// Unit-scale packed-ternary fast path active (pool engine / net
     /// coordinator).
     streaming: bool,
+    /// Environment fingerprint mixed into snapshot fingerprints (0 when
+    /// the caller does not snapshot).
+    env_tag: u64,
     sampler: WorkerSampler,
     select_rng: Pcg64,
     pub(crate) server: ServerScratch,
@@ -316,6 +321,7 @@ impl<'a> RoundLoop<'a> {
         d: usize,
         m: usize,
         streaming: bool,
+        env_tag: u64,
         init: Vec<f32>,
     ) -> Self {
         assert_eq!(init.len(), d, "init params dim mismatch");
@@ -326,6 +332,7 @@ impl<'a> RoundLoop<'a> {
             run,
             d,
             streaming,
+            env_tag,
             sampler,
             select_rng: run.root_rng().derive(0xfeed),
             server: ServerScratch::new(d, n_max),
@@ -448,6 +455,125 @@ impl<'a> RoundLoop<'a> {
             ledger: self.ledger,
         }
     }
+
+    /// First round this loop will run: 0 for a fresh run, the snapshot's
+    /// next round after a restore.
+    pub(crate) fn start_round(&self) -> usize {
+        self.reports.len()
+    }
+
+    /// Capture the full server-side state at the current round boundary
+    /// (DESIGN.md §12). Everything a bit-identical resume needs is here:
+    /// the worker streams are derived per `(seed, round, worker)` and
+    /// never persist, so params + selection stream + residual + history
+    /// are the complete stateful surface.
+    pub(crate) fn to_snapshot(&self) -> CoordinatorSnapshot {
+        let next = self.reports.len();
+        CoordinatorSnapshot {
+            fingerprint: self.run.config_fingerprint(self.d, self.sampler.total, self.env_tag),
+            dim: self.d,
+            workers: self.sampler.total,
+            rounds_total: self.run.rounds,
+            phase: if next == 0 { SnapPhase::Standby } else { SnapPhase::Broadcast(next - 1) },
+            select_rng: self.select_rng.to_raw(),
+            params: self.params.clone(),
+            residual: matches!(self.run.algorithm, Algorithm::EfSparsign { .. })
+                .then(|| self.server_residual.clone()),
+            reports: self.reports.clone(),
+            ledger: self.ledger.clone(),
+        }
+    }
+
+    /// Write a periodic snapshot if the policy says one is due after
+    /// round `t` completed.
+    pub(crate) fn maybe_snapshot(
+        &self,
+        policy: Option<&SnapshotPolicy>,
+        t: usize,
+    ) -> Result<(), SnapshotError> {
+        if let Some(p) = policy {
+            if p.due(t + 1, self.run.rounds) {
+                self.to_snapshot().save(&p.path)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Rebuild the per-run server state from a (file-validated) snapshot.
+    /// Cross-checks the snapshot against *this* run's configuration —
+    /// shape, round budget and the config fingerprint — so a resume can
+    /// never silently continue a different experiment.
+    pub(crate) fn resume(
+        run: &'a TrainingRun,
+        d: usize,
+        m: usize,
+        streaming: bool,
+        env_tag: u64,
+        snap: CoordinatorSnapshot,
+    ) -> Result<Self, SnapshotError> {
+        if snap.dim != d || snap.workers != m {
+            return Err(SnapshotError::Incompatible(format!(
+                "snapshot shape {}d/{}w vs run {d}d/{m}w",
+                snap.dim, snap.workers
+            )));
+        }
+        if snap.rounds_total != run.rounds {
+            return Err(SnapshotError::Incompatible(format!(
+                "snapshot run length {} vs configured {}",
+                snap.rounds_total, run.rounds
+            )));
+        }
+        let want = run.config_fingerprint(d, m, env_tag);
+        if snap.fingerprint != want {
+            return Err(SnapshotError::Incompatible(format!(
+                "config fingerprint {:#018x} != this run's {:#018x} (algorithm, schedule, \
+                 rounds, participation, eval cadence, seed, attack plan and the data \
+                 environment must all match)",
+                snap.fingerprint, want
+            )));
+        }
+        let select_rng = Pcg64::from_raw(snap.select_rng)
+            .ok_or(SnapshotError::Malformed("even selection-rng increment"))?;
+        let is_ef = matches!(run.algorithm, Algorithm::EfSparsign { .. });
+        let server_residual = match (snap.residual, is_ef) {
+            (Some(r), true) => r,
+            (None, false) => vec![0.0; d],
+            (Some(_), false) => {
+                return Err(SnapshotError::Incompatible(
+                    "snapshot carries a server residual but this algorithm keeps none".into(),
+                ))
+            }
+            (None, true) => {
+                return Err(SnapshotError::Incompatible(
+                    "EF-sparsign resume requires the server residual".into(),
+                ))
+            }
+        };
+        let sampler = WorkerSampler::new(m, run.participation);
+        let n_max = sampler.per_round();
+        let cum_uplink = snap.reports.last().map(|r| r.cum_uplink_bits).unwrap_or(0.0);
+        let mut reports = snap.reports;
+        reports.reserve(run.rounds.saturating_sub(reports.len()));
+        // Same headroom for the restored ledger, upholding the
+        // `CommLedger::with_capacity` no-mid-round-reallocation contract
+        // on the resumed tail.
+        let mut ledger = snap.ledger;
+        ledger.reserve(run.rounds.saturating_sub(ledger.rounds()));
+        Ok(RoundLoop {
+            run,
+            d,
+            streaming,
+            env_tag,
+            sampler,
+            select_rng,
+            server: ServerScratch::new(d, n_max),
+            server_residual,
+            params: snap.params,
+            reports,
+            cum_uplink,
+            ledger,
+        })
+    }
 }
 
 impl TrainingRun {
@@ -532,6 +658,52 @@ impl TrainingRun {
                 );
             }
         }
+    }
+
+    /// Stable hash of everything that determines this run's trajectory:
+    /// algorithm, schedule, rounds, participation, eval cadence, seed,
+    /// attack plan, model dimension, worker population, plus the
+    /// environment's own structural fingerprint
+    /// ([`GradientSource::env_fingerprint`] — dataset/partition/batch
+    /// drift the run config alone cannot see). Stamped into every
+    /// snapshot and checked on resume, so a snapshot can only continue
+    /// the exact run that wrote it; the `net` rendezvous additionally
+    /// exchanges the `env_tag = 0` form in `Hello` so a coordinator
+    /// refuses a fleet built from drifted flags. Public so out-of-crate
+    /// clients can speak the handshake.
+    pub fn config_fingerprint(&self, d: usize, m: usize, env_tag: u64) -> u64 {
+        let desc = format!(
+            "alg={:?};sched={:?};rounds={};participation={:016x};eval_every={};seed={};\
+             attack={:?};d={d};m={m};env={env_tag:016x}",
+            self.algorithm,
+            self.schedule,
+            self.rounds,
+            self.participation.to_bits(),
+            self.eval_every,
+            self.seed,
+            self.attack,
+        );
+        crate::snapshot::fingerprint_bytes(desc.as_bytes())
+    }
+
+    /// Snapshotting covers the full server-side state; worker-side state
+    /// (the EF/SSDM baselines) lives in the clients and cannot ride a
+    /// coordinator snapshot — refuse with a typed error rather than
+    /// resume into silently-stale worker residuals. Shared by the
+    /// in-process engines and the `net` coordinator service.
+    pub(crate) fn require_snapshot_support(
+        &self,
+        comps: &WorkerComps,
+    ) -> Result<(), SnapshotError> {
+        if let Some(c) = comps.first() {
+            if c.lock().expect("compressor lock").requires_worker_state() {
+                return Err(SnapshotError::Unsupported(
+                    "stateful worker compressors (EF/SSDM) keep client-side state a \
+                     coordinator snapshot cannot carry",
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// True when the coordinator should stream votes into a
@@ -697,10 +869,57 @@ impl TrainingRun {
         env: &dyn GradientSource,
         init: Vec<f32>,
         eval: &dyn Fn(&[f32]) -> (f64, f64),
-        mut probe: Option<RoundProbe<'_>>,
+        probe: Option<RoundProbe<'_>>,
     ) -> RunHistory {
+        self.run_engine(env, EngineStart::Fresh(init), eval, probe, None)
+            .expect("a run without a snapshot policy performs no fallible IO")
+    }
+
+    /// [`TrainingRun::run`] with periodic coordinator snapshots
+    /// (DESIGN.md §12): after every `policy.every` completed rounds the
+    /// full server-side state is written atomically to `policy.path`.
+    /// Snapshotting never perturbs the run — the returned `RunHistory`
+    /// is bit-identical to a plain [`TrainingRun::run`]
+    /// (`tests/snapshot_resume.rs`).
+    pub fn run_snapshotted(
+        &self,
+        env: &dyn GradientSource,
+        init: Vec<f32>,
+        eval: &dyn Fn(&[f32]) -> (f64, f64),
+        policy: &SnapshotPolicy,
+    ) -> Result<RunHistory, SnapshotError> {
+        assert!(
+            policy.every > 0,
+            "in-process runs need a periodic snapshot cadence (every ≥ 1)"
+        );
+        self.run_engine(env, EngineStart::Fresh(init), eval, None, Some(policy))
+    }
+
+    /// Continue a run from a restored [`CoordinatorSnapshot`]: rounds
+    /// `snap.next_round()..rounds` execute on the restored state, and the
+    /// resulting `RunHistory` (restored prefix + fresh tail) is
+    /// bit-identical to an uninterrupted run — the determinism contract
+    /// makes the snapshot a complete cut of the server state.
+    pub fn resume_from(
+        &self,
+        env: &dyn GradientSource,
+        snap: CoordinatorSnapshot,
+        eval: &dyn Fn(&[f32]) -> (f64, f64),
+        policy: Option<&SnapshotPolicy>,
+    ) -> Result<RunHistory, SnapshotError> {
+        self.run_engine(env, EngineStart::Resume(snap), eval, None, policy)
+    }
+
+    /// The engine proper, shared by every in-process entry point.
+    fn run_engine(
+        &self,
+        env: &dyn GradientSource,
+        origin: EngineStart,
+        eval: &dyn Fn(&[f32]) -> (f64, f64),
+        mut probe: Option<RoundProbe<'_>>,
+        policy: Option<&SnapshotPolicy>,
+    ) -> Result<RunHistory, SnapshotError> {
         let d = env.dim();
-        assert_eq!(init.len(), d, "init params dim mismatch");
         assert!(self.rounds > 0, "need at least one round");
         let m = env.workers();
         let root = self.root_rng();
@@ -712,6 +931,14 @@ impl TrainingRun {
         // rounds, keeping threaded runs bit-exact.
         let worker_comps = self.build_worker_comps(d, m);
         self.reject_stateful_sampling(&worker_comps);
+        let snapshotting = policy.is_some() || matches!(origin, EngineStart::Resume(_));
+        if snapshotting {
+            self.require_snapshot_support(&worker_comps)?;
+        }
+        // The environment hash is only consulted by snapshot
+        // fingerprints; plain runs skip the O(dataset-sample) pass (and
+        // its allocations — `tests/zero_alloc_round.rs`).
+        let env_tag = if snapshotting { env.env_fingerprint() } else { 0 };
 
         // The streaming fast path needs the pool's per-thread
         // accumulators; the serial reference engine stays buffered by
@@ -721,12 +948,21 @@ impl TrainingRun {
         let n_max = WorkerSampler::new(m, self.participation).per_round();
         let threads = self.engine_threads(env, n_max);
         let streaming = threads > 1 && self.streams_votes(n_max);
-        let mut lp = RoundLoop::new(self, d, m, streaming, init);
+        let mut lp = match origin {
+            EngineStart::Fresh(init) => {
+                assert_eq!(init.len(), d, "init params dim mismatch");
+                RoundLoop::new(self, d, m, streaming, env_tag, init)
+            }
+            EngineStart::Resume(snap) => {
+                RoundLoop::resume(self, d, m, streaming, env_tag, snap)?
+            }
+        };
+        let start = lp.start_round();
 
         if threads <= 1 {
             // Serial reference engine: one scratch, buffered aggregation.
             let mut scratch = WorkerScratch::new(d);
-            for t in 0..self.rounds {
+            for t in start..self.rounds {
                 let lr = self.schedule.at(t);
                 let n = lp.select();
                 for k in 0..n {
@@ -745,6 +981,7 @@ impl TrainingRun {
                     lp.server.msgs[k] = Some(msg);
                 }
                 lp.finish_round(t, lr, n, eval, &mut probe);
+                lp.maybe_snapshot(policy, t)?;
             }
         } else {
             // Persistent pool engine (DESIGN.md §10): `threads` workers
@@ -755,7 +992,7 @@ impl TrainingRun {
             let gate = pool::PoolGate::new();
             let cell = pool::JobCell::new();
             let votes = Mutex::new(VoteAccumulator::new());
-            std::thread::scope(|s| {
+            let pool_out: Result<(), SnapshotError> = std::thread::scope(|s| {
                 // Wakes parked workers even if a coordinator-side panic
                 // (eval, probe, a poisoned gate) unwinds this closure —
                 // otherwise the scope would join them forever.
@@ -828,7 +1065,7 @@ impl TrainingRun {
                         }
                     });
                 }
-                for t in 0..self.rounds {
+                for t in start..self.rounds {
                     let lr = self.schedule.at(t);
                     let n = lp.select();
                     if streaming {
@@ -857,12 +1094,25 @@ impl TrainingRun {
                             .counts_into(&mut lp.server.counts);
                     }
                     lp.finish_round(t, lr, n, eval, &mut probe);
+                    // An early `?` drops the shutdown guard, which wakes
+                    // the parked pool so the scope can join it.
+                    lp.maybe_snapshot(policy, t)?;
                 }
+                Ok(())
             });
+            pool_out?;
         }
 
-        lp.into_history(self.algorithm.label(), d)
+        Ok(lp.into_history(self.algorithm.label(), d))
     }
+}
+
+/// Where [`TrainingRun::run_engine`] starts from.
+enum EngineStart {
+    /// Fresh run from initial parameters.
+    Fresh(Vec<f32>),
+    /// Continue from a restored coordinator snapshot.
+    Resume(CoordinatorSnapshot),
 }
 
 #[cfg(test)]

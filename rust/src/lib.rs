@@ -32,6 +32,11 @@
 //!   frames), a coordinator service over TCP/UDS feeding the streaming
 //!   vote path, and a client-fleet driver whose loopback runs are
 //!   bit-identical to the in-process engine.
+//! * **[`snapshot`]** — elastic-federation checkpointing: a versioned,
+//!   CRC-guarded coordinator snapshot (params, RNG streams, server EF
+//!   residual, ledger, metrics history) written atomically, so a killed
+//!   coordinator resumes with a `RunHistory` bit-identical to an
+//!   uninterrupted run.
 //! * **[`experiments`]** — one harness per paper table/figure (Fig. 1–3,
 //!   Tables 1–7) that regenerates the reported rows/series.
 //!
@@ -60,6 +65,7 @@ pub mod model;
 pub mod net;
 pub mod optim;
 pub mod runtime;
+pub mod snapshot;
 pub mod testing;
 pub mod util;
 

@@ -1,13 +1,17 @@
 //! `sparsignd` — the launcher.
 //!
 //! ```text
-//! sparsignd train   [--rounds N] [--alpha A] [--workers M] [--lr X] …
-//! sparsignd tables  [--preset fast|paper] [--only table1[,table2…]]
-//! sparsignd fig1    [--rounds N] [--lr X] [--csv out.csv]
-//! sparsignd fig2    [--rounds N] [--lr X] [--csv out.csv]
-//! sparsignd theory  [--trials N]
-//! sparsignd serve   [--addr EP] [--clients M] [--rounds N] [--deadline-ms D] …
-//! sparsignd fleet   [--clients M] [--rounds N] [--transport tcp|uds] [--connect EP] …
+//! sparsignd train     [--rounds N] [--alpha A] [--workers M] [--lr X] …
+//! sparsignd tables    [--preset fast|paper] [--only table1[,table2…]]
+//! sparsignd fig1      [--rounds N] [--lr X] [--csv out.csv]
+//! sparsignd fig2      [--rounds N] [--lr X] [--csv out.csv]
+//! sparsignd theory    [--trials N]
+//! sparsignd serve     [--addr EP] [--clients M] [--rounds N] [--deadline-ms D]
+//!                     [--snapshot F [--snapshot-every K]] [--resume F]
+//!                     [--drain-after N] [--endpoint-file F] [--history-json F] …
+//! sparsignd fleet     [--clients M] [--rounds N] [--transport tcp|uds]
+//!                     [--connect EP | --connect-file F] [--reconnect-secs S] …
+//! sparsignd benchdiff --baseline F --fresh F [--tolerance T]
 //! sparsignd artifacts
 //! ```
 //!
@@ -17,13 +21,16 @@
 use sparsignd::cli::ArgMap;
 use sparsignd::compressors::{CompressorKind, NormKind};
 use sparsignd::config::ExperimentConfig;
-use sparsignd::coordinator::{Algorithm, AggregationRule, ClassifierEnv, RunHistory, TrainingRun};
+use sparsignd::coordinator::{
+    Algorithm, AggregationRule, ClassifierEnv, GradientSource, RunHistory, TrainingRun,
+};
 use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
 use sparsignd::experiments;
 use sparsignd::metrics::write_csv;
 use sparsignd::model::ModelKind;
 use sparsignd::net;
 use sparsignd::optim::LrSchedule;
+use sparsignd::snapshot::{CoordinatorSnapshot, SnapshotPolicy};
 use sparsignd::util::rng::Pcg64;
 
 fn main() {
@@ -36,6 +43,7 @@ fn main() {
         Some("theory") => cmd_theory(&args),
         Some("serve") => cmd_serve(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("benchdiff") => cmd_benchdiff(&args),
         Some("artifacts") => cmd_artifacts(),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
@@ -61,8 +69,13 @@ fn usage() {
          \x20 fig2       Rosenbrock worker-sampling figure\n\
          \x20 theory     Theorem 1 Monte-Carlo bound check\n\
          \x20 serve      run the federation coordinator on a TCP/UDS endpoint\n\
+         \x20            (--snapshot/--resume/--drain-after for elastic runs;\n\
+         \x20            exit 3 = drained after snapshot, ready to --resume)\n\
          \x20 fleet      drive a client fleet; default: loopback run diffed\n\
-         \x20            against the in-process engine (exit 1 on mismatch)\n\
+         \x20            against the in-process engine (exit 1 on mismatch);\n\
+         \x20            --connect/--connect-file agents reconnect with backoff\n\
+         \x20 benchdiff  diff a fresh BENCH_*.json against the committed\n\
+         \x20            baseline; exit 1 on >tolerance throughput regression\n\
          \x20 artifacts  list AOT artifacts + staleness"
     );
 }
@@ -312,6 +325,14 @@ fn diff_histories(a: &RunHistory, b: &RunHistory) -> Result<(), String> {
     Ok(())
 }
 
+/// Publish the resolved endpoint atomically (write-temp + rename) so a
+/// fleet polling the file never reads a torn line.
+fn write_endpoint_file(path: &str, ep: &net::Endpoint) -> std::io::Result<()> {
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, format!("{ep}\n"))?;
+    std::fs::rename(&tmp, path)
+}
+
 fn cmd_serve(args: &ArgMap) -> i32 {
     let setup = match net_setup(args) {
         Ok(s) => s,
@@ -334,6 +355,40 @@ fn cmd_serve(args: &ArgMap) -> i32 {
     }
     let secs = args.get::<u64>("rendezvous-secs", 120);
     opts.rendezvous_timeout = std::time::Duration::from_secs(secs);
+    let drain_after = args.get::<usize>("drain-after", 0);
+    if drain_after > 0 {
+        opts.drain_after = Some(drain_after);
+    }
+    if let Some(path) = args.get_str("snapshot") {
+        let every = args.get::<usize>("snapshot-every", 0);
+        // every = 0 means "write on drain only"; without a drain trigger
+        // such a policy can never fire — refuse rather than hand the
+        // operator crash protection that silently does nothing.
+        if every == 0 && drain_after == 0 {
+            eprintln!(
+                "--snapshot needs a trigger: add --snapshot-every K (periodic) \
+                 and/or --drain-after N (write on drain)"
+            );
+            return 2;
+        }
+        opts.snapshot = Some(SnapshotPolicy::every(path, every));
+    }
+    // Mix the constructed environment's structural hash into snapshot
+    // fingerprints so a resume refuses a dataset rebuilt with different
+    // --alpha/--batch/--dim flags (same d/M, different data).
+    opts.env_fingerprint = setup.env.env_fingerprint();
+    if let Some(path) = args.get_str("resume") {
+        match CoordinatorSnapshot::load(std::path::Path::new(path)) {
+            Ok(snap) => {
+                println!("resuming from {path} (round {})", snap.next_round());
+                opts.resume = Some(snap);
+            }
+            Err(e) => {
+                eprintln!("resume {path}: {e}");
+                return 2;
+            }
+        }
+    }
     let coordinator = match net::NetCoordinator::bind(opts) {
         Ok(c) => c,
         Err(e) => {
@@ -343,11 +398,40 @@ fn cmd_serve(args: &ArgMap) -> i32 {
     };
     let NetSetup { env, run, init } = setup;
     println!("coordinator listening on {}", coordinator.local_endpoint());
+    if let Some(path) = args.get_str("endpoint-file") {
+        if let Err(e) = write_endpoint_file(path, coordinator.local_endpoint()) {
+            eprintln!("endpoint-file {path}: {e}");
+            return 1;
+        }
+    }
     let eval = |p: &[f32]| env.evaluate(p);
     match coordinator.serve(&run, env.fed.workers(), init, &eval) {
         Ok(hist) => {
             print_net_history("serve", &hist);
+            if let Some(path) = args.get_str("history-json") {
+                if let Err(e) = sparsignd::metrics::write_history_json(path, &hist) {
+                    eprintln!("history-json {path}: {e}");
+                    return 1;
+                }
+                println!("wrote {path}");
+            }
             0
+        }
+        // Not a failure: the drain path completed its round (and wrote
+        // the snapshot when a policy was set) before exiting so a
+        // successor can `--resume`. Exit code 3 lets supervisors tell
+        // "drained" from "broken".
+        Err(net::NetError::Drained { rounds_done }) => {
+            match args.get_str("snapshot") {
+                Some(path) => println!(
+                    "coordinator drained after {rounds_done} rounds (snapshot at {path})"
+                ),
+                None => println!(
+                    "coordinator drained after {rounds_done} rounds (no snapshot policy — \
+                     nothing written)"
+                ),
+            }
+            3
         }
         Err(e) => {
             eprintln!("serve: {e}");
@@ -370,17 +454,31 @@ fn cmd_fleet(args: &ArgMap) -> i32 {
         fleet_opts.agents = args.get::<usize>("agents", fleet_opts.agents).max(1);
     }
 
-    // Join an external coordinator when asked; default is the
+    // Join an external coordinator when asked (by address or through an
+    // endpoint file, re-read on every reconnect attempt); default is the
     // self-contained loopback diff against the in-process engine.
-    if let Some(addr) = args.get_str("connect") {
-        let ep = match net::Endpoint::parse(addr) {
-            Ok(ep) => ep,
-            Err(e) => {
-                eprintln!("{e}");
-                return 2;
+    let src: Option<Box<dyn net::EndpointSource>> =
+        if let Some(path) = args.get_str("connect-file") {
+            Some(Box::new(net::EndpointFile(path.into())))
+        } else if let Some(addr) = args.get_str("connect") {
+            match net::Endpoint::parse(addr) {
+                Ok(ep) => Some(Box::new(ep)),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
             }
+        } else {
+            None
         };
-        return match net::run_fleet(&ep, &run, &env, &fleet_opts) {
+    if let Some(src) = src {
+        // External fleets survive coordinator restarts by default; 0
+        // disables (fail fast on the first connection loss).
+        let secs = args.get::<u64>("reconnect-secs", 60);
+        if secs > 0 {
+            fleet_opts.reconnect = Some(std::time::Duration::from_secs(secs));
+        }
+        return match net::run_fleet_src(&*src, &run, &env, &fleet_opts) {
             Ok(stats) => {
                 print_fleet_stats(&stats);
                 0
@@ -433,13 +531,135 @@ fn print_net_history(tag: &str, hist: &RunHistory) {
 
 fn print_fleet_stats(stats: &net::FleetStats) {
     println!(
-        "[fleet] {} updates sent, {} rejected, {} round-opens, {:.1} KiB up / {:.1} KiB down",
+        "[fleet] {} updates sent, {} rejected, {} round-opens, {} reconnects, \
+         {:.1} KiB up / {:.1} KiB down",
         stats.updates_sent,
         stats.rejected,
         stats.rounds_seen,
+        stats.reconnects,
         stats.bytes_up as f64 / 1024.0,
         stats.bytes_down as f64 / 1024.0
     );
+}
+
+/// Throughput keys gated by the CI bench-trajectory check (bigger is
+/// better; latency keys are reported but not gated — they are noisy on
+/// shared runners).
+const GATED_KEYS: &[&str] = &[
+    "gemm_64x784x256_gflops",
+    "gemm_128x256x128_gflops",
+    "gemm_256x256x256_gflops",
+    "round_throughput_rps",
+    "engine10k_rounds_per_sec",
+    "transport_rounds_per_sec",
+    "wire_encode_frames_per_sec",
+    "wire_decode_frames_per_sec",
+];
+
+fn cmd_benchdiff(args: &ArgMap) -> i32 {
+    use sparsignd::metrics::{parse_flat_json, FlatVal};
+    let (baseline_path, fresh_path) = match (args.get_str("baseline"), args.get_str("fresh")) {
+        (Some(b), Some(f)) => (b, f),
+        _ => {
+            eprintln!("usage: benchdiff --baseline F --fresh F [--tolerance 0.25]");
+            return 2;
+        }
+    };
+    let tolerance = args.get::<f64>("tolerance", 0.25);
+    let read = |path: &str| -> Result<Vec<(String, FlatVal)>, String> {
+        let body = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        parse_flat_json(&body).map_err(|e| format!("{path}: {e}"))
+    };
+    let baseline = match read(baseline_path) {
+        Ok(kv) => kv,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let fresh = match read(fresh_path) {
+        Ok(kv) => kv,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let base_num = |key: &str| -> Option<f64> {
+        baseline.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.num())
+    };
+
+    // Markdown delta table (lands in the CI job summary verbatim).
+    println!("## Bench trajectory vs {baseline_path} (tolerance {:.0}%)\n", tolerance * 100.0);
+    println!("| key | baseline | fresh | Δ | status |");
+    println!("|---|---:|---:|---:|---|");
+    let mut regressed: Vec<String> = Vec::new();
+    let mut pending = 0usize;
+    for (key, val) in &fresh {
+        // Non-finite values (a broken bench can emit NaN, which defeats
+        // any comparison) fall through to the missing-key sweep below.
+        let Some(f) = val.num().filter(|x| x.is_finite()) else { continue };
+        let gated = GATED_KEYS.contains(&key.as_str());
+        let (b_cell, delta_cell, status) = match base_num(key) {
+            Some(b) if b > 0.0 => {
+                let delta = (f - b) / b * 100.0;
+                let status = if gated && f < b * (1.0 - tolerance) {
+                    regressed.push(key.clone());
+                    "**REGRESSED**"
+                } else if gated {
+                    "ok"
+                } else {
+                    "info"
+                };
+                (format!("{b:.3}"), format!("{delta:+.1}%"), status)
+            }
+            _ => {
+                if gated {
+                    pending += 1;
+                }
+                ("—".into(), "—".into(), if gated { "no baseline" } else { "info" })
+            }
+        };
+        println!("| {key} | {b_cell} | {f:.3} | {delta_cell} | {status} |");
+    }
+    // A gated key that vanished from the fresh run — or came back as a
+    // string/NaN — is a silent way to disarm the gate; treat it like a
+    // full regression once a baseline is armed.
+    for &key in GATED_KEYS {
+        let usable = fresh
+            .iter()
+            .any(|(k, v)| k == key && v.num().filter(|x| x.is_finite()).is_some());
+        if usable {
+            continue;
+        }
+        match base_num(key) {
+            Some(b) if b > 0.0 => {
+                regressed.push(format!("{key} (missing from fresh run)"));
+                println!("| {key} | {b:.3} | — | — | **MISSING** |");
+            }
+            _ => {
+                pending += 1;
+                println!("| {key} | — | — | — | no baseline, missing |");
+            }
+        }
+    }
+    println!();
+    if pending > 0 {
+        println!(
+            "{pending} gated key(s) have no committed baseline yet — commit the fresh \
+             BENCH json as the rolling baseline to arm the gate."
+        );
+    }
+    if regressed.is_empty() {
+        println!("bench trajectory OK");
+        0
+    } else {
+        eprintln!(
+            "bench trajectory REGRESSED >{:.0}% on: {}",
+            tolerance * 100.0,
+            regressed.join(", ")
+        );
+        1
+    }
 }
 
 fn cmd_artifacts() -> i32 {

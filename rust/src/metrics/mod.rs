@@ -158,6 +158,187 @@ pub fn write_csv(path: &str, headers: &[&str], rows: &[Vec<String>]) -> std::io:
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Bit-exact RunHistory JSON (the resume-equivalence CI artifact).
+// ---------------------------------------------------------------------
+
+/// Hex of an f64's bit pattern — two histories render to identical
+/// strings iff they are bit-identical, which is what the CI
+/// `resume-equivalence` job `cmp`s across the kill+resume boundary.
+fn f64_bits(v: f64) -> String {
+    format!("\"{:016x}\"", v.to_bits())
+}
+
+fn opt_eval(e: Option<(f64, f64)>) -> String {
+    match e {
+        None => "null".into(),
+        Some((l, a)) => format!("[{}, {}]", f64_bits(l), f64_bits(a)),
+    }
+}
+
+/// Render a [`RunHistory`] as JSON with every float as its exact bit
+/// pattern (hex strings). Field-exact: reports, final parameters and
+/// the full communication ledger — `cmp`-ing two of these is the
+/// bit-identity check from DESIGN.md §12.
+pub fn history_json(h: &RunHistory) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"label\": {:?},\n", h.label));
+    s.push_str(&format!("  \"dim\": {},\n", h.dim));
+    s.push_str("  \"final_params\": [");
+    for (i, p) in h.final_params.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("\"{:08x}\"", p.to_bits()));
+    }
+    s.push_str("],\n  \"reports\": [\n");
+    for (i, r) in h.reports.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"round\": {}, \"lr\": {}, \"train_loss\": {}, \"eval\": {}, \
+             \"uplink_bits\": {}, \"downlink_bits\": {}, \"cum_uplink_bits\": {}}}{}\n",
+            r.round,
+            f64_bits(r.lr),
+            f64_bits(r.train_loss),
+            opt_eval(r.eval),
+            f64_bits(r.uplink_bits),
+            f64_bits(r.downlink_bits),
+            f64_bits(r.cum_uplink_bits),
+            if i + 1 < h.reports.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ],\n  \"ledger\": [\n");
+    let recs = h.ledger.records();
+    for (i, rc) in recs.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"uplink_bits\": {}, \"downlink_bits\": {}, \"senders\": {}, \
+             \"uplink_nnz\": {}, \"uplink_wire_bytes\": {}, \"downlink_wire_bytes\": {}, \
+             \"stragglers\": {}}}{}\n",
+            f64_bits(rc.uplink_bits),
+            f64_bits(rc.downlink_bits),
+            rc.senders,
+            rc.uplink_nnz,
+            rc.uplink_wire_bytes,
+            rc.downlink_wire_bytes,
+            rc.stragglers,
+            if i + 1 < recs.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write [`history_json`] to `path`.
+pub fn write_history_json(path: &str, h: &RunHistory) -> std::io::Result<()> {
+    std::fs::write(path, history_json(h))
+}
+
+// ---------------------------------------------------------------------
+// Flat benchmark-JSON parsing (the CI bench-trajectory gate).
+// ---------------------------------------------------------------------
+
+/// A value in the flat `BENCH_*.json` vocabulary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FlatVal {
+    Num(f64),
+    Str(String),
+}
+
+impl FlatVal {
+    /// Numeric view (`None` for strings).
+    pub fn num(&self) -> Option<f64> {
+        match self {
+            FlatVal::Num(v) => Some(*v),
+            FlatVal::Str(_) => None,
+        }
+    }
+}
+
+/// Parse the flat `{"key": number-or-string, …}` JSON the perf bench
+/// emits (`BENCH_hotpaths.json`). Deliberately minimal — one nesting
+/// level, no escapes — matching the emitter exactly; anything else is a
+/// descriptive error. Order-preserving so delta tables read like the
+/// bench output.
+pub fn parse_flat_json(s: &str) -> Result<Vec<(String, FlatVal)>, String> {
+    let mut out = Vec::new();
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    let skip_ws = |i: &mut usize| {
+        while *i < b.len() && (b[*i] as char).is_ascii_whitespace() {
+            *i += 1;
+        }
+    };
+    let parse_str = |i: &mut usize| -> Result<String, String> {
+        if *i >= b.len() || b[*i] != b'"' {
+            return Err(format!("expected '\"' at byte {i:?}", i = *i));
+        }
+        *i += 1;
+        let start = *i;
+        while *i < b.len() && b[*i] != b'"' {
+            if b[*i] == b'\\' {
+                return Err("escapes are not part of the flat-json vocabulary".into());
+            }
+            *i += 1;
+        }
+        if *i >= b.len() {
+            return Err("unterminated string".into());
+        }
+        let v = String::from_utf8_lossy(&b[start..*i]).into_owned();
+        *i += 1;
+        Ok(v)
+    };
+    skip_ws(&mut i);
+    if i >= b.len() || b[i] != b'{' {
+        return Err("expected '{'".into());
+    }
+    i += 1;
+    loop {
+        skip_ws(&mut i);
+        if i < b.len() && b[i] == b'}' {
+            i += 1;
+            break;
+        }
+        let key = parse_str(&mut i)?;
+        skip_ws(&mut i);
+        if i >= b.len() || b[i] != b':' {
+            return Err(format!("expected ':' after key {key:?}"));
+        }
+        i += 1;
+        skip_ws(&mut i);
+        let val = if i < b.len() && b[i] == b'"' {
+            FlatVal::Str(parse_str(&mut i)?)
+        } else {
+            let start = i;
+            while i < b.len() && !matches!(b[i], b',' | b'}' | b'\n' | b' ' | b'\t' | b'\r') {
+                i += 1;
+            }
+            let raw = std::str::from_utf8(&b[start..i]).map_err(|_| "non-utf8 number")?;
+            FlatVal::Num(
+                raw.parse::<f64>().map_err(|_| format!("bad number {raw:?} for key {key:?}"))?,
+            )
+        };
+        out.push((key, val));
+        skip_ws(&mut i);
+        if i < b.len() && b[i] == b',' {
+            i += 1;
+            continue;
+        }
+        skip_ws(&mut i);
+        if i < b.len() && b[i] == b'}' {
+            i += 1;
+            break;
+        }
+        if i >= b.len() {
+            return Err("unterminated object".into());
+        }
+    }
+    skip_ws(&mut i);
+    if i != b.len() {
+        return Err("trailing bytes after object".into());
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,5 +413,33 @@ mod tests {
     fn arity_checked() {
         let mut t = TablePrinter::new("t", &["a", "b"]);
         t.add_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn history_json_is_bit_exact_and_distinguishes_ulps() {
+        let a = fake_run(&[(1, 0.5)], 10.0, 2);
+        let mut b = a.clone();
+        assert_eq!(history_json(&a), history_json(&b));
+        // A one-ulp nudge must change the rendering — decimal formatting
+        // would round it away, hex bit patterns cannot.
+        b.reports[0].train_loss = f64::from_bits(b.reports[0].train_loss.to_bits() + 1);
+        assert_ne!(history_json(&a), history_json(&b));
+        assert!(history_json(&a).contains("\"ledger\""));
+    }
+
+    #[test]
+    fn flat_json_roundtrips_the_bench_emitter_format() {
+        let body = "{\n  \"kernel\": \"avx2+fma 6x16\",\n  \"gemm_gflops\": 41.125000,\n  \
+                    \"neg\": -2.5\n}\n";
+        let kv = parse_flat_json(body).expect("parse");
+        assert_eq!(kv.len(), 3);
+        assert_eq!(kv[0], ("kernel".into(), FlatVal::Str("avx2+fma 6x16".into())));
+        assert_eq!(kv[1].1.num(), Some(41.125));
+        assert_eq!(kv[2].1.num(), Some(-2.5));
+        // Empty object and malformed bodies.
+        assert!(parse_flat_json("{}").expect("empty").is_empty());
+        assert!(parse_flat_json("{\"a\": }").is_err());
+        assert!(parse_flat_json("[1]").is_err());
+        assert!(parse_flat_json("{\"a\": 1} x").is_err());
     }
 }

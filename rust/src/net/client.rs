@@ -9,16 +9,63 @@
 //! bit-identical to the messages the pool engine folds locally — the
 //! transport moves bytes, it does not perturb the math
 //! (`tests/net_loopback.rs` pins this end to end).
+//!
+//! ## Elastic reconnect (DESIGN.md §12)
+//!
+//! With [`FleetOptions::reconnect`] set, an agent that loses its
+//! connection (coordinator killed, drained, or restarted) re-dials with
+//! exponential backoff, re-resolves the endpoint through its
+//! [`EndpointSource`] on every attempt, re-claims the same worker range
+//! and keeps serving. Because worker rounds are pure in
+//! `(seed, round, worker, params)`, re-computing a round the dead
+//! coordinator had already opened is harmless — the resumed
+//! coordinator's `RunHistory` stays bit-identical to an uninterrupted
+//! run (`tests/snapshot_resume.rs`, the `resume-equivalence` CI job).
 
 use std::io::Write as _;
+use std::path::PathBuf;
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{pool, GradientSource, RunHistory, TrainingRun, WorkerScratch};
 
 use super::server::{NetCoordinator, ServeOptions};
 use super::wire::{self, Msg, WireBuf};
 use super::{read_frame_bytes, Endpoint, NetError, Stream};
+
+/// Where an agent finds the coordinator. Re-resolved on every dial, so
+/// a restarted coordinator can come back on a different address (the
+/// `serve --endpoint-file` hand-off).
+pub trait EndpointSource: Sync {
+    fn endpoint(&self) -> Result<Endpoint, NetError>;
+}
+
+impl EndpointSource for Endpoint {
+    fn endpoint(&self) -> Result<Endpoint, NetError> {
+        Ok(self.clone())
+    }
+}
+
+/// Endpoint published through a file (one trimmed line, the
+/// `Endpoint::parse` grammar). Reads fail with a retriable `Io` error
+/// while the coordinator has not written it yet.
+#[derive(Clone, Debug)]
+pub struct EndpointFile(pub PathBuf);
+
+impl EndpointSource for EndpointFile {
+    fn endpoint(&self) -> Result<Endpoint, NetError> {
+        let body = std::fs::read_to_string(&self.0)?;
+        Endpoint::parse(body.trim())
+    }
+}
+
+/// Shared mutable endpoint for in-process coordinator hand-offs (the
+/// kill+resume integration tests).
+impl EndpointSource for Mutex<Endpoint> {
+    fn endpoint(&self) -> Result<Endpoint, NetError> {
+        Ok(self.lock().unwrap_or_else(|e| e.into_inner()).clone())
+    }
+}
 
 /// Fleet configuration.
 #[derive(Clone, Debug)]
@@ -30,6 +77,10 @@ pub struct FleetOptions {
     /// Socket read timeout (a dead coordinator should not hang the
     /// fleet forever).
     pub read_timeout: Duration,
+    /// Total per-outage window for reconnect-with-backoff; `None`
+    /// fails fast on the first connection loss (the loopback-harness
+    /// configuration).
+    pub reconnect: Option<Duration>,
 }
 
 impl Default for FleetOptions {
@@ -39,6 +90,7 @@ impl Default for FleetOptions {
             agents: hw.min(8),
             max_payload: wire::MAX_PAYLOAD,
             read_timeout: Duration::from_secs(60),
+            reconnect: None,
         }
     }
 }
@@ -57,6 +109,8 @@ pub struct FleetStats {
     pub bytes_up: u64,
     /// Bytes read (frames, server → client).
     pub bytes_down: u64,
+    /// Sessions re-established after a connection loss.
+    pub reconnects: u64,
 }
 
 impl FleetStats {
@@ -66,6 +120,7 @@ impl FleetStats {
         self.rounds_seen += o.rounds_seen;
         self.bytes_up += o.bytes_up;
         self.bytes_down += o.bytes_down;
+        self.reconnects += o.reconnects;
     }
 }
 
@@ -78,11 +133,34 @@ pub fn run_fleet(
     env: &dyn GradientSource,
     opts: &FleetOptions,
 ) -> Result<FleetStats, NetError> {
+    run_fleet_src(ep, run, env, opts)
+}
+
+/// [`run_fleet`] over any [`EndpointSource`] — the elastic entry point.
+pub fn run_fleet_src(
+    src: &dyn EndpointSource,
+    run: &TrainingRun,
+    env: &dyn GradientSource,
+    opts: &FleetOptions,
+) -> Result<FleetStats, NetError> {
     let m = env.workers();
     let d = env.dim();
     // The stateful-compressor × sampling refusal applies to remote
     // workers exactly as it does in-process.
-    run.reject_stateful_sampling(&run.build_worker_comps(d, 1));
+    let probe = run.build_worker_comps(d, 1);
+    run.reject_stateful_sampling(&probe);
+    // Reconnecting re-computes rounds the dead coordinator had already
+    // opened; that is only sound for stateless worker compressors
+    // (replaying a round would double-advance worker-side state). Same
+    // policy — and same check — as the coordinator's snapshot guard.
+    if opts.reconnect.is_some() {
+        run.require_snapshot_support(&probe).map_err(|e| {
+            NetError::Config(format!(
+                "reconnect would replay rounds into stateful worker compressors ({e}); \
+                 disable reconnect or use a stateless compressor"
+            ))
+        })?;
+    }
     // Serial-only environments (PJRT-backed models) must not be sampled
     // from concurrent agent threads — same clamp as the round engine.
     let agents = if env.serial_only() { 1 } else { opts.agents.clamp(1, m) };
@@ -95,7 +173,7 @@ pub fn run_fleet(
             }
             let results = &results;
             s.spawn(move || {
-                let out = agent_loop(ep, run, env, lo, hi, opts);
+                let out = agent_loop(src, run, env, lo, hi, opts);
                 results.lock().unwrap_or_else(|e| e.into_inner()).push(out);
             });
         }
@@ -107,9 +185,27 @@ pub fn run_fleet(
     Ok(stats)
 }
 
-/// One agent: hosts workers `[lo, hi)` over a single connection.
+/// An error that a reconnecting agent may recover from: the socket went
+/// away (killed/drained coordinator). Read timeouts are explicitly NOT
+/// retriable — a slow-but-healthy round must fail the fleet loudly, not
+/// be silently converted into partial participation by a mid-round
+/// reconnect (which would break the bit-identity contract). Protocol,
+/// wire and config errors mean a bug or a hostile peer and always fail.
+fn retriable(e: &NetError) -> bool {
+    match e {
+        NetError::Disconnected => true,
+        NetError::Io(err) => !matches!(
+            err.kind(),
+            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+        ),
+        _ => false,
+    }
+}
+
+/// One agent: hosts workers `[lo, hi)`, reconnecting across coordinator
+/// restarts when configured.
 fn agent_loop(
-    ep: &Endpoint,
+    src: &dyn EndpointSource,
     run: &TrainingRun,
     env: &dyn GradientSource,
     lo: usize,
@@ -117,20 +213,114 @@ fn agent_loop(
     opts: &FleetOptions,
 ) -> Result<FleetStats, NetError> {
     let d = env.dim();
-    let m = env.workers();
-    let mut conn = Stream::connect(ep)?;
-    conn.set_read_timeout(Some(opts.read_timeout))?;
+    // Per-hosted-worker compressor bank (index `w - lo`) + the same
+    // worker-side scratch and root RNG stream the in-process engines
+    // use. All survive a reconnect: the session is transport state, the
+    // worker math is not.
+    let comps = run.build_worker_comps(d, hi - lo);
+    let mut scratch = WorkerScratch::new(d);
+    let root = run.root_rng();
+    let mut params = vec![0.0f32; d];
     let mut stats = FleetStats::default();
     let mut wbuf = WireBuf::new();
     let mut out = Vec::new();
     let mut buf = Vec::new();
+    let mut first_session = true;
 
-    let hello = Msg::Hello { lo: lo as u64, hi: hi as u64 };
+    loop {
+        let mut conn = connect_session(src, run, env, lo, hi, opts, &mut stats)?;
+        if !first_session {
+            stats.reconnects += 1;
+        }
+        first_session = false;
+        let fin = serve_session(
+            &mut conn,
+            run,
+            env,
+            lo,
+            hi,
+            opts,
+            &comps,
+            &mut scratch,
+            &root,
+            &mut params,
+            &mut wbuf,
+            &mut out,
+            &mut buf,
+            &mut stats,
+        );
+        match fin {
+            Ok(()) => return Ok(stats),
+            Err(e) if retriable(&e) && opts.reconnect.is_some() => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Dial the coordinator and complete the rendezvous handshake (Hello →
+/// Welcome shape echo → one Heartbeat), retrying retriable failures
+/// with exponential backoff inside the configured window.
+fn connect_session(
+    src: &dyn EndpointSource,
+    run: &TrainingRun,
+    env: &dyn GradientSource,
+    lo: usize,
+    hi: usize,
+    opts: &FleetOptions,
+    stats: &mut FleetStats,
+) -> Result<Stream, NetError> {
+    let deadline = opts.reconnect.map(|w| Instant::now() + w);
+    let mut backoff = Duration::from_millis(25);
+    loop {
+        match try_handshake(src, run, env, lo, hi, opts, stats) {
+            Ok(conn) => return Ok(conn),
+            Err(e) if retriable(&e) => {
+                let Some(dl) = deadline else { return Err(e) };
+                if Instant::now() + backoff >= dl {
+                    return Err(e);
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn try_handshake(
+    src: &dyn EndpointSource,
+    run: &TrainingRun,
+    env: &dyn GradientSource,
+    lo: usize,
+    hi: usize,
+    opts: &FleetOptions,
+    stats: &mut FleetStats,
+) -> Result<Stream, NetError> {
+    let d = env.dim();
+    let m = env.workers();
+    let ep = src.endpoint()?;
+    let mut conn = Stream::connect(&ep)?;
+    conn.set_read_timeout(Some(opts.read_timeout))?;
+    let mut wbuf = WireBuf::new();
+    let mut out = Vec::new();
+    let mut buf = Vec::new();
+
+    // The claim carries proof of what this fleet was built from: the
+    // run-config fingerprint (env component zero — the coordinator
+    // recomputes the same value from its own TrainingRun) and the data
+    // environment's structural hash. A drifted fleet is hung up on at
+    // rendezvous instead of silently diverging the run.
+    let hello = Msg::Hello {
+        lo: lo as u64,
+        hi: hi as u64,
+        cfg: run.config_fingerprint(d, m, 0),
+        env: env.env_fingerprint(),
+    };
     stats.bytes_up += wbuf.encode(&hello, &mut out) as u64;
     conn.write_all(&out)?;
 
     // Rendezvous reply must echo the run shape this fleet was built for.
-    let msg = read_msg(&mut conn, opts.max_payload, &mut buf, &mut stats)?;
+    let msg = read_msg(&mut conn, opts.max_payload, &mut buf, stats)?;
     match msg {
         Msg::Welcome { workers, dim, rounds, .. } => {
             if workers != m as u64 || dim != d as u64 || rounds != run.rounds as u64 {
@@ -146,21 +336,36 @@ fn agent_loop(
         }
     }
 
-    // Exercise the liveness path once per agent (server replies Ack).
+    // Exercise the liveness path once per session (server replies Ack).
     let beat = Msg::Heartbeat { client_id: lo as u64 };
     out.clear();
     stats.bytes_up += wbuf.encode(&beat, &mut out) as u64;
     conn.write_all(&out)?;
+    Ok(conn)
+}
 
-    // Per-hosted-worker compressor bank (index `w - lo`) + the same
-    // worker-side scratch and root RNG stream the in-process engines use.
-    let comps = run.build_worker_comps(d, hi - lo);
-    let mut scratch = WorkerScratch::new(d);
-    let root = run.root_rng();
-    let mut params = vec![0.0f32; d];
-
+/// Serve rounds over one established session until `Fin` (Ok) or the
+/// connection fails (the caller decides whether to reconnect).
+#[allow(clippy::too_many_arguments)]
+fn serve_session(
+    conn: &mut Stream,
+    run: &TrainingRun,
+    env: &dyn GradientSource,
+    lo: usize,
+    hi: usize,
+    opts: &FleetOptions,
+    comps: &crate::coordinator::WorkerComps,
+    scratch: &mut WorkerScratch,
+    root: &crate::util::rng::Pcg64,
+    params: &mut [f32],
+    wbuf: &mut WireBuf,
+    out: &mut Vec<u8>,
+    buf: &mut Vec<u8>,
+    stats: &mut FleetStats,
+) -> Result<(), NetError> {
+    let d = env.dim();
     loop {
-        let msg = read_msg(&mut conn, opts.max_payload, &mut buf, &mut stats)?;
+        let msg = read_msg(conn, opts.max_payload, buf, stats)?;
         match msg {
             Msg::RoundOpen { t, lr, selected, params: bcast, .. } => {
                 stats.rounds_seen += 1;
@@ -182,20 +387,20 @@ fn agent_loop(
                         t_us,
                         w,
                         lr,
-                        &params,
-                        &root,
+                        params,
+                        root,
                         comps.get(w - lo),
-                        &mut scratch,
+                        scratch,
                     );
                     out.clear();
-                    stats.bytes_up += wbuf.encode_update(t, w64, loss, &grad, &mut out) as u64;
-                    conn.write_all(&out)?;
+                    stats.bytes_up += wbuf.encode_update(t, w64, loss, &grad, out) as u64;
+                    conn.write_all(out)?;
                     stats.updates_sent += 1;
                 }
             }
             Msg::Ack { .. } => {}
             Msg::Reject { .. } => stats.rejected += 1,
-            Msg::Fin { .. } => break,
+            Msg::Fin { .. } => return Ok(()),
             other => {
                 return Err(NetError::Protocol(format!(
                     "unexpected {:?} from coordinator",
@@ -204,7 +409,6 @@ fn agent_loop(
             }
         }
     }
-    Ok(stats)
 }
 
 /// Read + fully decode the next frame (agents are control-plane readers;

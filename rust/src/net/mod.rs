@@ -27,7 +27,10 @@ pub mod protocol;
 pub mod server;
 pub mod wire;
 
-pub use client::{run_fleet, run_loopback, FleetOptions, FleetStats};
+pub use client::{
+    run_fleet, run_fleet_src, run_loopback, EndpointFile, EndpointSource, FleetOptions,
+    FleetStats,
+};
 pub use server::{NetCoordinator, ServeOptions};
 pub use wire::{Msg, MsgType, RejectReason, WireError};
 
@@ -50,6 +53,13 @@ pub enum NetError {
     Protocol(String),
     /// Invalid configuration (bad endpoint, unsupported platform, …).
     Config(String),
+    /// Snapshot write/load failure (see [`crate::snapshot::SnapshotError`]).
+    Snapshot(crate::snapshot::SnapshotError),
+    /// Not a failure: the coordinator drained gracefully after
+    /// `rounds_done` rounds (finished the open round, snapshotted, and
+    /// exited so a successor can `--resume`). Connections are closed
+    /// without `Fin`, which is the fleet's cue to reconnect.
+    Drained { rounds_done: usize },
 }
 
 impl std::fmt::Display for NetError {
@@ -60,6 +70,10 @@ impl std::fmt::Display for NetError {
             NetError::Disconnected => write!(f, "peer disconnected"),
             NetError::Protocol(s) => write!(f, "protocol: {s}"),
             NetError::Config(s) => write!(f, "config: {s}"),
+            NetError::Snapshot(e) => write!(f, "snapshot: {e}"),
+            NetError::Drained { rounds_done } => {
+                write!(f, "coordinator drained after {rounds_done} rounds")
+            }
         }
     }
 }
@@ -75,6 +89,12 @@ impl From<WireError> for NetError {
 impl From<std::io::Error> for NetError {
     fn from(e: std::io::Error) -> Self {
         NetError::Io(e)
+    }
+}
+
+impl From<crate::snapshot::SnapshotError> for NetError {
+    fn from(e: crate::snapshot::SnapshotError) -> Self {
+        NetError::Snapshot(e)
     }
 }
 
@@ -337,16 +357,17 @@ mod tests {
     #[test]
     fn frame_reader_round_trips_over_a_pipe() {
         // An in-memory "socket": encode two frames, stream-read them back.
+        let hello = Msg::Hello { lo: 0, hi: 5, cfg: 7, env: 0 };
         let mut wbuf = wire::WireBuf::new();
         let mut bytes = Vec::new();
-        wbuf.encode(&Msg::Hello { lo: 0, hi: 5 }, &mut bytes);
+        wbuf.encode(&hello, &mut bytes);
         wbuf.encode(&Msg::Fin { rounds: 9 }, &mut bytes);
         let mut cursor = std::io::Cursor::new(bytes);
         let mut frame = Vec::new();
         let n1 = read_frame_bytes(&mut cursor, wire::MAX_PAYLOAD, &mut frame).unwrap();
         let (f1, used) = wire::parse_frame(&frame[..n1], wire::MAX_PAYLOAD).unwrap();
         assert_eq!(used, n1);
-        assert_eq!(wire::decode_msg(f1).unwrap(), Msg::Hello { lo: 0, hi: 5 });
+        assert_eq!(wire::decode_msg(f1).unwrap(), hello);
         let n2 = read_frame_bytes(&mut cursor, wire::MAX_PAYLOAD, &mut frame).unwrap();
         let (f2, _) = wire::parse_frame(&frame[..n2], wire::MAX_PAYLOAD).unwrap();
         assert_eq!(wire::decode_msg(f2).unwrap(), Msg::Fin { rounds: 9 });

@@ -53,6 +53,21 @@ impl PhaseTracker {
         Self { phase: Phase::Standby }
     }
 
+    /// Tracker for a coordinator resuming at `next_round` (DESIGN.md
+    /// §12): snapshots are taken at round boundaries, so the restored
+    /// phase is `Broadcast(next_round - 1)` — exactly where an
+    /// uninterrupted coordinator would stand — or `Standby` for a
+    /// fresh run.
+    pub fn resumed_at(next_round: usize) -> Self {
+        Self {
+            phase: if next_round == 0 {
+                Phase::Standby
+            } else {
+                Phase::Broadcast(next_round - 1)
+            },
+        }
+    }
+
     pub fn phase(&self) -> Phase {
         self.phase
     }
@@ -73,6 +88,16 @@ impl PhaseTracker {
     pub fn aggregate(&mut self, t: usize) {
         assert_eq!(self.phase, Phase::RoundOpen(t), "aggregate({t})");
         self.phase = Phase::Aggregating(t);
+    }
+
+    /// Aggregating(t) → RoundOpen(t): the round closed with zero live
+    /// submissions (every host of its cohort died) and is being
+    /// re-broadcast after the fleet re-covers the population — the
+    /// elastic churn path (DESIGN.md §12). Selection is NOT redrawn;
+    /// the same round re-opens.
+    pub fn reopen_round(&mut self, t: usize) {
+        assert_eq!(self.phase, Phase::Aggregating(t), "reopen_round({t})");
+        self.phase = Phase::RoundOpen(t);
     }
 
     /// Aggregating(t) → Broadcast(t).
@@ -161,6 +186,18 @@ impl Roster {
         self.claims.iter().find(|&&(_, _, c)| c == conn).map(|&(lo, hi, _)| (lo, hi))
     }
 
+    /// Drop `conn`'s claim (it died), returning the freed range. The
+    /// dead-conn bookkeeping calls this so a reconnecting agent can
+    /// re-claim the range instead of bouncing off `Overlap` — the churn
+    /// path elastic federation needs. Coverage regresses until someone
+    /// re-claims, which is exactly right: a "covered" roster must mean
+    /// *live* connections host every worker.
+    pub fn release(&mut self, conn: usize) -> Option<(usize, usize)> {
+        let at = self.claims.iter().position(|&(_, _, c)| c == conn)?;
+        let (lo, hi, _) = self.claims.swap_remove(at);
+        Some((lo, hi))
+    }
+
     pub fn total(&self) -> usize {
         self.total
     }
@@ -192,9 +229,13 @@ impl RoundTable {
     }
 
     /// Open round `t` over `selected` (slot order = selection order).
-    /// `owners[k]` is the connection hosting slot `k`'s worker and
-    /// `alive[conn]` its liveness — dead connections' slots are not
-    /// awaited.
+    /// `owners[k]` is the connection hosting slot `k`'s worker —
+    /// `usize::MAX` marks a worker whose range has no live claimant
+    /// (its host died and nobody re-claimed yet) — and `alive[conn]`
+    /// its liveness. Unowned and dead-connection slots are excluded
+    /// from `expected` *up front*, so a round never waits (and a
+    /// deadline never has to expire) for a submission that cannot
+    /// arrive.
     pub fn open(
         &mut self,
         t: usize,
@@ -218,7 +259,10 @@ impl RoundTable {
         self.filled.clear();
         self.filled.resize(selected.len(), false);
         self.received = 0;
-        self.expected = owners.iter().filter(|&&c| alive[c]).count();
+        self.expected = owners
+            .iter()
+            .filter(|&&c| c != usize::MAX && alive.get(c).copied().unwrap_or(false))
+            .count();
     }
 
     /// Validate a submission for `(t, worker)` from `conn`; on success
@@ -351,6 +395,71 @@ mod tests {
         r.claim(0, 0, 2).unwrap();
         r.claim(1, 3, 6).unwrap();
         assert!(!r.covered(), "gap at worker 2");
+    }
+
+    #[test]
+    fn released_ranges_can_be_reclaimed() {
+        let mut r = Roster::new(6);
+        r.claim(0, 0, 3).unwrap();
+        r.claim(1, 3, 6).unwrap();
+        assert!(r.covered());
+        // Conn 1 dies: its range frees up and coverage regresses.
+        assert_eq!(r.release(1), Some((3, 6)));
+        assert_eq!(r.release(1), None, "release is idempotent");
+        assert!(!r.covered());
+        assert_eq!(r.owner_of(4), None);
+        // A reconnecting agent (fresh conn id) re-claims the same range.
+        r.claim(2, 3, 6).unwrap();
+        assert!(r.covered());
+        assert_eq!(r.owner_of(4), Some(2));
+    }
+
+    #[test]
+    fn reopen_after_empty_aggregation_is_legal() {
+        let mut p = PhaseTracker::new();
+        p.open_round(0);
+        p.aggregate(0);
+        // Zero live submissions: re-broadcast the same round.
+        p.reopen_round(0);
+        p.aggregate(0);
+        p.broadcast(0);
+        p.open_round(1);
+    }
+
+    #[test]
+    #[should_panic(expected = "reopen_round")]
+    fn reopen_requires_an_aggregating_round() {
+        let mut p = PhaseTracker::new();
+        p.open_round(0);
+        p.reopen_round(0);
+    }
+
+    #[test]
+    fn resumed_tracker_continues_the_machine() {
+        // Fresh resume = Standby; mid-run resume lands on Broadcast of
+        // the last completed round, so the next open_round is legal.
+        assert_eq!(PhaseTracker::resumed_at(0).phase(), Phase::Standby);
+        let mut p = PhaseTracker::resumed_at(3);
+        assert_eq!(p.phase(), Phase::Broadcast(2));
+        p.open_round(3);
+        p.aggregate(3);
+        p.broadcast(3);
+        p.finish();
+    }
+
+    #[test]
+    fn unowned_slots_are_never_awaited() {
+        let mut tb = RoundTable::new();
+        let alive = vec![true];
+        // Worker 1's host died and released its range before the round
+        // opened: its slot carries the usize::MAX owner sentinel.
+        tb.open(0, 3, &[0, 1, 2], &[0, usize::MAX, 0], &alive);
+        assert_eq!(tb.submit(0, 0, 0), Ok(0));
+        assert!(!tb.complete());
+        assert_eq!(tb.submit(0, 2, 0), Ok(2));
+        assert!(tb.complete(), "the orphaned slot must not stall the round");
+        // The orphan slot still rejects impostors with a typed reason.
+        assert_eq!(tb.submit(0, 1, 0), Err(RejectReason::WrongClient));
     }
 
     #[test]

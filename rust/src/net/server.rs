@@ -9,7 +9,7 @@
 //! buffers the round's `n` messages on the unit-scale fast path, exactly
 //! like the PR 3 pool engine. Per-slot scalars (loss, bit cost, nnz) are
 //! recorded in selection-slot order, so the shared
-//! [`RoundLoop::finish_round`] tail reduces them in the same order as
+//! `RoundLoop::finish_round` tail reduces them in the same order as
 //! the in-process engine and the resulting `RunHistory` is
 //! bit-identical on the same seed (`tests/net_loopback.rs`).
 //!
@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 
 use crate::compressors::{CompressedGrad, PackedTernary};
 use crate::coordinator::{RoundLoop, RunHistory, TrainingRun, VoteAccumulator, WorkerSampler};
+use crate::snapshot::{CoordinatorSnapshot, SnapshotPolicy};
 
 use super::protocol::{PhaseTracker, Roster, RoundTable};
 use super::wire::{self, Msg, MsgType, RejectReason, WireBuf};
@@ -44,6 +45,26 @@ pub struct ServeOptions {
     pub rendezvous_timeout: Duration,
     /// Frame payload cap handed to the decoder.
     pub max_payload: usize,
+    /// Coordinator snapshot policy (DESIGN.md §12): periodic every-k
+    /// writes and/or the drain-time write. `None` disables snapshots.
+    pub snapshot: Option<SnapshotPolicy>,
+    /// Graceful drain: finish round `drain_after - 1` (i.e. complete
+    /// `drain_after` rounds), write a snapshot if a policy is set, close
+    /// every connection *without* `Fin`, and return
+    /// [`NetError::Drained`]. The SIGTERM-shaped exit a supervisor uses
+    /// before handing the endpoint to a `--resume` successor.
+    pub drain_after: Option<usize>,
+    /// Resume from a restored snapshot instead of `init` (which then
+    /// only supplies the expected dimension). The snapshot is
+    /// revalidated against the run's config fingerprint.
+    pub resume: Option<CoordinatorSnapshot>,
+    /// Environment fingerprint mixed into snapshot fingerprints
+    /// ([`crate::coordinator::GradientSource::env_fingerprint`] of the
+    /// dataset both sides were built from). The coordinator itself never
+    /// sees the data, so the caller supplies it — the `serve` CLI sets
+    /// it from the env it constructs; 0 (the default) disables the
+    /// environment check but keeps every other fingerprint guard.
+    pub env_fingerprint: u64,
 }
 
 impl ServeOptions {
@@ -53,6 +74,10 @@ impl ServeOptions {
             round_deadline: None,
             rendezvous_timeout: Duration::from_secs(30),
             max_payload: wire::MAX_PAYLOAD,
+            snapshot: None,
+            drain_after: None,
+            resume: None,
+            env_fingerprint: 0,
         }
     }
 }
@@ -83,8 +108,9 @@ struct Gate {
 enum Ev {
     /// A connection was accepted and its reader thread started.
     Conn(Arc<ConnHandle>),
-    /// Rendezvous claim for workers `[lo, hi)`.
-    Hello { conn: usize, lo: u64, hi: u64 },
+    /// Rendezvous claim for workers `[lo, hi)` with the claimant's
+    /// run-config and environment fingerprints.
+    Hello { conn: usize, lo: u64, hi: u64, cfg: u64, env: u64 },
     /// Liveness ping.
     Beat { conn: usize },
     /// A submission was accepted into the gate.
@@ -126,12 +152,24 @@ impl NetCoordinator {
         init: Vec<f32>,
         eval: &dyn Fn(&[f32]) -> (f64, f64),
     ) -> Result<RunHistory, NetError> {
+        let NetCoordinator { listener, local, mut opts } = self;
         let d = init.len();
         let n_max = WorkerSampler::new(workers, run.participation).per_round();
         let streaming = run.streams_votes(n_max);
-        let lp = RoundLoop::new(run, d, workers, streaming, init);
-        let opts = &self.opts;
-        let listener = &self.listener;
+        if opts.snapshot.is_some() || opts.resume.is_some() {
+            // The snapshot covers server-side state only; stateful
+            // worker compressors live in the clients and cannot ride it.
+            run.require_snapshot_support(&run.build_worker_comps(d, 1))
+                .map_err(NetError::Snapshot)?;
+        }
+        let env_tag = opts.env_fingerprint;
+        let lp = match opts.resume.take() {
+            Some(snap) => RoundLoop::resume(run, d, workers, streaming, env_tag, snap)
+                .map_err(NetError::Snapshot)?,
+            None => RoundLoop::new(run, d, workers, streaming, env_tag, init),
+        };
+        let opts = &opts;
+        let listener = &listener;
         listener.set_nonblocking(true)?;
         let gate = Mutex::new(Gate {
             d,
@@ -179,6 +217,7 @@ impl NetCoordinator {
                 }
             });
 
+            let phase = PhaseTracker::resumed_at(lp.start_round());
             let drv = Driver {
                 run,
                 m: workers,
@@ -186,7 +225,7 @@ impl NetCoordinator {
                 opts,
                 gate: &gate,
                 rx: &rx,
-                phase: PhaseTracker::new(),
+                phase,
                 roster: Roster::new(workers),
                 conns: Vec::new(),
                 alive: Vec::new(),
@@ -214,9 +253,11 @@ impl NetCoordinator {
 
         // A UDS socket file outlives its listener; clean up.
         #[cfg(unix)]
-        if let Endpoint::Uds(path) = &self.local {
+        if let Endpoint::Uds(path) = &local {
             let _ = std::fs::remove_file(path);
         }
+        #[cfg(not(unix))]
+        let _ = &local;
         result
     }
 }
@@ -259,8 +300,30 @@ impl<'a> Driver<'a> {
 
     fn run_protocol(&mut self, eval: &dyn Fn(&[f32]) -> (f64, f64)) -> Result<(), NetError> {
         self.rendezvous()?;
-        for t in 0..self.run.rounds {
+        // A resumed coordinator starts at the snapshot's next round; the
+        // reconnected fleet recomputes that round from the same
+        // (seed, round, worker) RNG streams, so nothing is lost even if
+        // the dead coordinator had already opened it.
+        let start = self.lp.start_round();
+        for t in start..self.run.rounds {
             self.round(t, eval)?;
+            let done = t + 1;
+            // `>=` rather than `==`: a resumed coordinator whose start
+            // round is already past the drain mark drains after its
+            // first completed round instead of silently never draining.
+            let draining =
+                self.opts.drain_after.map_or(false, |n| done >= n) && done < self.run.rounds;
+            if let Some(policy) = &self.opts.snapshot {
+                if policy.due(done, self.run.rounds) || draining {
+                    self.lp.to_snapshot().save(&policy.path).map_err(NetError::Snapshot)?;
+                }
+            }
+            if draining {
+                // Graceful SIGTERM-style drain: the round is complete and
+                // snapshotted; exit without Fin so the fleet reconnects
+                // to the successor coordinator.
+                return Err(NetError::Drained { rounds_done: done });
+            }
         }
         // Fin + state machine epilogue.
         let fin = Msg::Fin { rounds: self.run.rounds as u64 };
@@ -294,90 +357,177 @@ impl<'a> Driver<'a> {
 
     /// One federated round over the wire.
     fn round(&mut self, t: usize, eval: &dyn Fn(&[f32]) -> (f64, f64)) -> Result<(), NetError> {
+        // Drain queued notifications first: a connection that died (or an
+        // agent that re-claimed a freed range) between rounds must be
+        // reflected in the expectations *before* they are set, not
+        // discovered while the deadline runs down.
+        while let Ok(ev) = self.rx.try_recv() {
+            self.on_event(ev, Some(t))?;
+        }
         let run = self.run;
         let lr = run.schedule.at(t);
+        // Selection is drawn exactly once per round (the RNG stream is
+        // part of the determinism contract); a re-broadcast after an
+        // all-hosts-dead attempt reuses the same cohort.
         let n = self.lp.select();
         self.phase.open_round(t);
-
-        // Slot owners come from the rendezvous roster; dead connections'
-        // slots are stragglers from the start.
-        let owners: Vec<usize> = self.lp.server.selected[..n]
-            .iter()
-            .map(|&w| self.roster.owner_of(w).expect("roster covered"))
-            .collect();
-        {
-            let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
-            g.table.open(t, self.m, &self.lp.server.selected[..n], &owners, &self.alive);
-            if g.streaming {
-                g.votes.reset(g.d, n);
-            }
-            g.losses.clear();
-            g.losses.resize(n, 0.0);
-            g.bits.clear();
-            g.bits.resize(n, 0.0);
-            g.nnz.clear();
-            g.nnz.resize(n, 0);
-            g.msgs.clear();
-            g.msgs.resize(n, None);
-            g.up_bytes = 0;
-        }
-
-        // Broadcast: per-connection selection subset + the model.
-        let deadline_ms = self.opts.round_deadline.map(|d| d.as_millis() as u64).unwrap_or(0);
         let mut down_bytes = 0u64;
         let mut sel_ids: Vec<u64> = Vec::new();
-        for id in 0..self.conns.len() {
-            if !self.alive[id] {
-                continue;
-            }
-            let Some((lo, hi)) = self.roster.range_of(id) else { continue };
-            sel_ids.clear();
-            for &w in &self.lp.server.selected[..n] {
-                if lo <= w && w < hi {
-                    sel_ids.push(w as u64);
-                }
-            }
-            self.frame.clear();
-            let len = self.wbuf.encode_round_open(
-                t as u64,
-                lr,
-                deadline_ms,
-                &sel_ids,
-                &self.lp.params,
-                &mut self.frame,
-            );
-            let ok = {
-                let mut w = self.conns[id].writer.lock().unwrap_or_else(|e| e.into_inner());
-                std::io::Write::write_all(&mut *w, &self.frame).is_ok()
-            };
-            if ok {
-                down_bytes += len as u64;
-            } else {
-                self.mark_dead(id);
-            }
-        }
-        self.phase.aggregate(t);
+        let mut attempts = 0usize;
 
-        // Collect until every live slot filled or the deadline expires.
-        let hard_deadline = self.opts.round_deadline.map(|d| Instant::now() + d);
         loop {
+            // Slot owners come from the rendezvous roster. A worker whose
+            // host died (its claim was released) and has no replacement
+            // yet gets the unowned sentinel — a straggler from the start,
+            // never awaited.
+            let owners: Vec<usize> = self.lp.server.selected[..n]
+                .iter()
+                .map(|&w| self.roster.owner_of(w).unwrap_or(usize::MAX))
+                .collect();
             {
-                let g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
-                if g.table.complete() {
-                    break;
+                let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+                g.table.open(t, self.m, &self.lp.server.selected[..n], &owners, &self.alive);
+                if g.streaming {
+                    g.votes.reset(g.d, n);
+                }
+                g.losses.clear();
+                g.losses.resize(n, 0.0);
+                g.bits.clear();
+                g.bits.resize(n, 0.0);
+                g.nnz.clear();
+                g.nnz.resize(n, 0);
+                g.msgs.clear();
+                g.msgs.resize(n, None);
+                g.up_bytes = 0;
+            }
+
+            // Broadcast: per-connection selection subset + the model.
+            let deadline_ms =
+                self.opts.round_deadline.map(|d| d.as_millis() as u64).unwrap_or(0);
+            for id in 0..self.conns.len() {
+                if !self.alive[id] {
+                    continue;
+                }
+                let Some((lo, hi)) = self.roster.range_of(id) else { continue };
+                sel_ids.clear();
+                for &w in &self.lp.server.selected[..n] {
+                    if lo <= w && w < hi {
+                        sel_ids.push(w as u64);
+                    }
+                }
+                self.frame.clear();
+                let len = self.wbuf.encode_round_open(
+                    t as u64,
+                    lr,
+                    deadline_ms,
+                    &sel_ids,
+                    &self.lp.params,
+                    &mut self.frame,
+                );
+                let ok = {
+                    let mut w =
+                        self.conns[id].writer.lock().unwrap_or_else(|e| e.into_inner());
+                    std::io::Write::write_all(&mut *w, &self.frame).is_ok()
+                };
+                if ok {
+                    down_bytes += len as u64;
+                } else {
+                    self.mark_dead(id);
                 }
             }
-            let wait = match hard_deadline {
-                Some(dl) => {
-                    let left = dl.saturating_duration_since(Instant::now());
-                    if left.is_zero() {
+            self.phase.aggregate(t);
+
+            // Collect until every live slot filled or the deadline expires.
+            let hard_deadline = self.opts.round_deadline.map(|d| Instant::now() + d);
+            loop {
+                {
+                    let g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+                    if g.table.complete() {
                         break;
                     }
-                    left.min(Duration::from_millis(200))
                 }
-                None => Duration::from_millis(200),
+                let wait = match hard_deadline {
+                    Some(dl) => {
+                        let left = dl.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        left.min(Duration::from_millis(200))
+                    }
+                    None => Duration::from_millis(200),
+                };
+                match self.rx.recv_timeout(wait) {
+                    Ok(ev) => self.on_event(ev, Some(t))?,
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(NetError::Protocol("accept loop died".into()));
+                    }
+                }
+            }
+
+            // Close the round and compact filled slots into the shared
+            // RoundLoop buffers (ascending slot order = selection order,
+            // the same deterministic reduction order the in-process
+            // engine uses).
+            let (n_eff, stragglers, up_bytes) = {
+                let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+                let g = &mut *g;
+                g.table.close();
+                let mut k_new = 0usize;
+                for k in 0..n {
+                    if g.table.filled()[k] {
+                        self.lp.server.losses[k_new] = g.losses[k];
+                        self.lp.server.bits[k_new] = g.bits[k];
+                        self.lp.server.nnz[k_new] = g.nnz[k];
+                        self.lp.server.msgs[k_new] = g.msgs[k].take();
+                        k_new += 1;
+                    }
+                }
+                if g.streaming && k_new > 0 {
+                    g.votes.counts_into(&mut self.lp.server.counts);
+                }
+                (k_new, n - k_new, g.up_bytes)
             };
-            match self.rx.recv_timeout(wait) {
+            if n_eff == 0 {
+                // Zero live submissions. A covered roster means the
+                // cohort's hosts are alive yet silent — fatal, exactly as
+                // before. An uncovered one means every host died: give
+                // the fleet's reconnect-with-backoff one bounded
+                // re-rendezvous window to re-claim, then re-broadcast
+                // the same round (worker rounds are pure, so recomputing
+                // is harmless). Capped so a pathologically flapping
+                // fleet cannot spin a round forever.
+                attempts += 1;
+                if self.roster.covered() || attempts >= 3 {
+                    return Err(NetError::Protocol(format!(
+                        "round {t}: no submissions arrived"
+                    )));
+                }
+                self.phase.reopen_round(t);
+                self.await_recoverage(t)?;
+                continue;
+            }
+            self.lp.finish_round(t, lr, n_eff, eval, &mut None);
+            self.lp.ledger.annotate_wire(t, up_bytes, down_bytes, stragglers);
+            self.phase.broadcast(t);
+            return Ok(());
+        }
+    }
+
+    /// After an all-hosts-dead round attempt: wait (bounded by the
+    /// rendezvous timeout) for reconnecting agents to re-claim until the
+    /// roster covers the population again.
+    fn await_recoverage(&mut self, t: usize) -> Result<(), NetError> {
+        let deadline = Instant::now() + self.opts.rendezvous_timeout;
+        while !self.roster.covered() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(NetError::Protocol(format!(
+                    "round {t}: no submissions arrived and the fleet did not re-cover \
+                     the population"
+                )));
+            }
+            match self.rx.recv_timeout(left.min(Duration::from_millis(200))) {
                 Ok(ev) => self.on_event(ev, Some(t))?,
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
@@ -385,35 +535,6 @@ impl<'a> Driver<'a> {
                 }
             }
         }
-
-        // Close the round and compact filled slots into the shared
-        // RoundLoop buffers (ascending slot order = selection order, the
-        // same deterministic reduction order the in-process engine uses).
-        let (n_eff, stragglers, up_bytes) = {
-            let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
-            let g = &mut *g;
-            g.table.close();
-            let mut k_new = 0usize;
-            for k in 0..n {
-                if g.table.filled()[k] {
-                    self.lp.server.losses[k_new] = g.losses[k];
-                    self.lp.server.bits[k_new] = g.bits[k];
-                    self.lp.server.nnz[k_new] = g.nnz[k];
-                    self.lp.server.msgs[k_new] = g.msgs[k].take();
-                    k_new += 1;
-                }
-            }
-            if g.streaming && k_new > 0 {
-                g.votes.counts_into(&mut self.lp.server.counts);
-            }
-            (k_new, n - k_new, g.up_bytes)
-        };
-        if n_eff == 0 {
-            return Err(NetError::Protocol(format!("round {t}: no submissions arrived")));
-        }
-        self.lp.finish_round(t, lr, n_eff, eval, &mut None);
-        self.lp.ledger.annotate_wire(t, up_bytes, down_bytes, stragglers);
-        self.phase.broadcast(t);
         Ok(())
     }
 
@@ -426,13 +547,32 @@ impl<'a> Driver<'a> {
                 self.conns.push(h);
                 self.alive.push(true);
             }
-            Ev::Hello { conn, lo, hi } => {
+            Ev::Hello { conn, lo, hi, cfg, env } => {
+                // A fleet built from drifted flags (different seed,
+                // schedule, compressor, dataset α/batch, …) must be
+                // refused at rendezvous: the coordinator cannot see the
+                // clients' data, so the fingerprints carry the proof.
+                // The env check only arms when the caller supplied its
+                // own environment hash (the CLI always does).
+                let want_cfg = self.run.config_fingerprint(self.lp.params.len(), self.m, 0);
+                let env_ok =
+                    self.opts.env_fingerprint == 0 || env == self.opts.env_fingerprint;
+                if cfg != want_cfg || !env_ok {
+                    self.hangup(conn);
+                    return Ok(());
+                }
                 let claim = usize::try_from(lo)
                     .ok()
                     .zip(usize::try_from(hi).ok())
                     .map(|(l, h)| self.roster.claim(conn, l, h));
                 match claim {
-                    Some(Ok(())) if round.is_none() => {
+                    // A valid claim is welcomed during rendezvous AND
+                    // mid-run: a dead connection's range is released by
+                    // the dead-conn bookkeeping, so a reconnecting agent
+                    // re-claims it and rejoins from the next round — the
+                    // churn path elastic federation (and a restarted
+                    // coordinator's re-rostering) depends on.
+                    Some(Ok(())) => {
                         let msg = Msg::Welcome {
                             client_id: conn as u64,
                             workers: self.m as u64,
@@ -443,8 +583,9 @@ impl<'a> Driver<'a> {
                             self.mark_dead(conn);
                         }
                     }
-                    // Late joins and bad claims are hung up on; the
-                    // reader thread turns the shutdown into `Gone`.
+                    // Bad claims (overlap with a live host, bad range)
+                    // are hung up on; the reader thread turns the
+                    // shutdown into `Gone`.
                     _ => self.hangup(conn),
                 }
             }
@@ -476,6 +617,10 @@ impl<'a> Driver<'a> {
         if conn < self.alive.len() && self.alive[conn] {
             self.alive[conn] = false;
             self.hangup(conn);
+            // Free the range so a reconnecting agent can re-claim it,
+            // and stop awaiting the open round's unfilled slots — both
+            // immediately, not at the deadline.
+            self.roster.release(conn);
             let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
             g.table.drop_conn(conn);
         }
@@ -505,8 +650,8 @@ fn reader_loop(
         let Ok((frame, _)) = wire::parse_frame(&buf[..len], max_payload) else { break };
         match frame.msg_type {
             MsgType::Hello => {
-                let Ok(Msg::Hello { lo, hi }) = wire::decode_msg(frame) else { break };
-                if tx.send(Ev::Hello { conn: h.id, lo, hi }).is_err() {
+                let Ok(Msg::Hello { lo, hi, cfg, env }) = wire::decode_msg(frame) else { break };
+                if tx.send(Ev::Hello { conn: h.id, lo, hi, cfg, env }).is_err() {
                     break;
                 }
             }

@@ -40,8 +40,11 @@ use crate::compressors::{CompressedGrad, PackedTernary};
 
 /// Frame magic: `"SGND"` read MSB-first.
 pub const MAGIC: u32 = 0x5347_4E44;
-/// Current wire-format version.
-pub const WIRE_VERSION: u8 = 1;
+/// Current wire-format version. v2: `Hello` carries the run-config and
+/// environment fingerprints (DESIGN.md §12), so a coordinator refuses a
+/// fleet built from drifted flags at rendezvous instead of silently
+/// diverging.
+pub const WIRE_VERSION: u8 = 2;
 /// Hard payload cap: decoders refuse to allocate past this, bounding
 /// memory even against a hostile length prefix.
 pub const MAX_PAYLOAD: usize = 1 << 28;
@@ -143,21 +146,29 @@ pub fn push_varint(out: &mut Vec<u8>, mut v: u64) {
 }
 
 /// Cursor over a payload slice; every `take_*` bounds-checks first.
-struct Cursor<'a> {
+/// Crate-visible: the coordinator snapshot codec (`crate::snapshot`)
+/// decodes its body with the same hardened primitives.
+pub(crate) struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
-    fn done(&self) -> Result<(), WireError> {
+    /// Bytes consumed so far (the snapshot codec locates its body with
+    /// this, exactly as [`parse_frame`] does in-module).
+    pub(crate) fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub(crate) fn done(&self) -> Result<(), WireError> {
         if self.remaining() == 0 {
             Ok(())
         } else {
@@ -165,7 +176,7 @@ impl<'a> Cursor<'a> {
         }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         if self.remaining() < n {
             return Err(WireError::Truncated { need: self.pos + n, have: self.buf.len() });
         }
@@ -174,11 +185,11 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, WireError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    fn varint(&mut self) -> Result<u64, WireError> {
+    pub(crate) fn varint(&mut self) -> Result<u64, WireError> {
         let mut v = 0u64;
         for i in 0..10 {
             let b = self.u8()?;
@@ -195,7 +206,7 @@ impl<'a> Cursor<'a> {
     }
 
     /// Varint bounded to `usize` and to a caller cap (count fields).
-    fn count(&mut self, cap: usize, what: &'static str) -> Result<usize, WireError> {
+    pub(crate) fn count(&mut self, cap: usize, what: &'static str) -> Result<usize, WireError> {
         let v = self.varint()?;
         if v > cap as u64 {
             return Err(WireError::Malformed(what));
@@ -203,14 +214,19 @@ impl<'a> Cursor<'a> {
         Ok(v as usize)
     }
 
-    fn f32(&mut self) -> Result<f32, WireError> {
+    pub(crate) fn f32(&mut self) -> Result<f32, WireError> {
         let b = self.take(4)?;
         Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn f64(&mut self) -> Result<f64, WireError> {
+    pub(crate) fn f64(&mut self) -> Result<f64, WireError> {
         let b = self.take(8)?;
         Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub(crate) fn u64le(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 }
 
@@ -292,7 +308,13 @@ impl RejectReason {
 /// Owned, fully-validated protocol message.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
-    Hello { lo: u64, hi: u64 },
+    /// Rendezvous claim for workers `[lo, hi)`. `cfg` is the claimant's
+    /// run-config fingerprint (`TrainingRun::config_fingerprint` with a
+    /// zero env component — both sides can compute it from their own
+    /// `TrainingRun`) and `env` its data-environment fingerprint
+    /// (`GradientSource::env_fingerprint`); the coordinator hangs up on
+    /// a mismatched fleet at rendezvous.
+    Hello { lo: u64, hi: u64, cfg: u64, env: u64 },
     Welcome { client_id: u64, workers: u64, dim: u64, rounds: u64 },
     RoundOpen { t: u64, lr: f64, deadline_ms: u64, selected: Vec<u64>, params: Vec<f32> },
     Update { t: u64, worker: u64, loss: f64, grad: CompressedGrad },
@@ -431,9 +453,13 @@ impl WireBuf {
         self.payload.clear();
         let p = &mut self.payload;
         match msg {
-            Msg::Hello { lo, hi } => {
+            Msg::Hello { lo, hi, cfg, env } => {
                 push_varint(p, *lo);
                 push_varint(p, *hi);
+                // Fingerprints are full-entropy u64s: fixed-width beats
+                // a (typically 10-byte) varint.
+                p.extend_from_slice(&cfg.to_le_bytes());
+                p.extend_from_slice(&env.to_le_bytes());
             }
             Msg::Welcome { client_id, workers, dim, rounds } => {
                 push_varint(p, *client_id);
@@ -671,7 +697,9 @@ pub fn decode_msg(frame: Frame<'_>) -> Result<Msg, WireError> {
         MsgType::Hello => {
             let lo = cur.varint()?;
             let hi = cur.varint()?;
-            Msg::Hello { lo, hi }
+            let cfg = cur.u64le()?;
+            let env = cur.u64le()?;
+            Msg::Hello { lo, hi, cfg, env }
         }
         MsgType::Welcome => {
             let client_id = cur.varint()?;
@@ -758,7 +786,7 @@ mod tests {
     #[test]
     fn every_message_roundtrips_bit_identically() {
         let msgs = vec![
-            Msg::Hello { lo: 0, hi: 1000 },
+            Msg::Hello { lo: 0, hi: 1000, cfg: 0x1122_3344_5566_7788, env: u64::MAX },
             Msg::Welcome { client_id: 3, workers: 1000, dim: 1 << 20, rounds: 500 },
             Msg::RoundOpen {
                 t: 41,

@@ -1,0 +1,739 @@
+//! Coordinator snapshot/restore (DESIGN.md §12): the elastic-federation
+//! subsystem that lets a training run outlive its coordinator process.
+//!
+//! A [`CoordinatorSnapshot`] captures the full server-side round state at
+//! a round boundary — model parameters, the server-side EF residual
+//! (Algorithm 2, eq. 8), the selection RNG stream, the per-round report
+//! and [`CommLedger`] history, and the protocol phase — in one
+//! CRC-guarded file. The determinism contract (DESIGN.md §2/§10) makes
+//! this *sufficient* for bit-identical resume: worker RNG streams are
+//! derived per `(seed, round, worker)` and never persist, stateless
+//! compressors carry nothing across rounds, and the only stateful
+//! server-side objects are exactly the fields serialized here. A resumed
+//! run therefore replays the remaining rounds onto the restored state
+//! and produces a `RunHistory` bit-for-bit equal to an uninterrupted
+//! run (`tests/snapshot_resume.rs`; the `resume-equivalence` CI job
+//! pins the cross-process version over TCP and UDS).
+//!
+//! ## File grammar (version 1)
+//!
+//! ```text
+//! snapshot := magic:u32be("SGSP")  version:u8  kind:u8(=1)
+//!             len:varint  body[len]  crc:u32le
+//! body     := fingerprint:u64le
+//!             dim:varint  workers:varint  rounds_total:varint
+//!             next_round:varint
+//!             phase_tag:u8  phase_round:varint
+//!             select_rng: 4 × u64le
+//!             params: dim × f32le
+//!             residual_flag:u8  [ residual: dim × f32le ]
+//!             nreports:varint  report[nreports]
+//!             nledger:varint   ledgerrec[nledger]
+//! report   := round:varint  lr:f64le  train_loss:f64le
+//!             eval_flag:u8 [ eval_loss:f64le  eval_acc:f64le ]
+//!             uplink_bits:f64le  downlink_bits:f64le
+//!             cum_uplink_bits:f64le
+//! ledgerrec:= uplink_bits:f64le  downlink_bits:f64le  senders:varint
+//!             uplink_nnz:varint  uplink_wire_bytes:varint
+//!             downlink_wire_bytes:varint  stragglers:varint
+//! ```
+//!
+//! The framing deliberately reuses the `net/wire.rs` building blocks —
+//! the [`crate::coding::bitio`] MSB-first header, LEB128 varints, and
+//! the same CRC-32 — so one hardened codec vocabulary covers both byte
+//! boundaries in the system.
+//!
+//! ## Hardening
+//!
+//! Loading mirrors `PackedTernary::load_words`: every field of a
+//! snapshot file is untrusted. The declared body length is capped by
+//! [`MAX_SNAPSHOT`] *before* any allocation (and [`CoordinatorSnapshot::load`]
+//! checks the file's metadata length before reading it), every count is
+//! bounded (`dim` by [`MAX_DIM`], rounds by [`MAX_ROUNDS`], report/ledger
+//! counts by the declared round index), vectors grow only from bytes
+//! actually present, cross-field consistency (phase ↔ round index,
+//! report contiguity, report/ledger arity, RNG increment parity) is
+//! revalidated, and every failure is a typed [`SnapshotError`] — no
+//! panics, no attacker-length allocations
+//! (`tests/property_suite.rs` fuzzes mutations and truncations).
+//!
+//! ## Atomicity
+//!
+//! [`CoordinatorSnapshot::save`] writes to `<path>.tmp`, fsyncs, then
+//! renames over `<path>` (and fsyncs the parent directory on unix), so a
+//! crash mid-write leaves either the previous snapshot or the new one —
+//! never a torn file.
+//!
+//! ## Version policy
+//!
+//! One version byte, bumped on any incompatible layout change; loaders
+//! reject mismatches with [`SnapshotError::BadVersion`] (no migration —
+//! a snapshot is a short-lived crash artifact, not an archive format).
+//! The `kind` byte namespaces future snapshot flavors; unknown kinds
+//! fail loudly ([`SnapshotError::BadKind`]). The layout itself is pinned
+//! by a golden test in `tests/property_suite.rs` that re-encodes the
+//! grammar independently.
+
+use std::path::{Path, PathBuf};
+
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coordinator::{CommLedger, RoundComm, RoundReport};
+use crate::net::wire::{crc32, push_varint, Cursor, WireError};
+
+/// Snapshot file magic: `"SGSP"` read MSB-first.
+pub const SNAP_MAGIC: u32 = 0x5347_5350;
+/// Current snapshot-format version.
+pub const SNAP_VERSION: u8 = 1;
+/// Snapshot kind byte: the full-coordinator state (the only kind so far).
+pub const KIND_COORDINATOR: u8 = 1;
+/// Fixed header bytes before the length varint (magic + version + kind).
+pub const HEADER_FIXED: usize = 6;
+/// Trailing checksum bytes.
+pub const CRC_LEN: usize = 4;
+/// Hard body cap: decoders refuse to proceed past this, bounding memory
+/// even against a hostile length prefix (and `load` refuses larger
+/// files before reading them).
+pub const MAX_SNAPSHOT: usize = 1 << 30;
+/// Model-dimension cap (64M coordinates ≈ 256 MiB of f32 parameters).
+pub const MAX_DIM: usize = 1 << 26;
+/// Round-count cap.
+pub const MAX_ROUNDS: usize = 1 << 24;
+/// Worker-population cap.
+pub const MAX_WORKERS: usize = 1 << 24;
+
+/// Typed snapshot failure. Never panics, never over-allocates.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// Filesystem-level failure (open/read/write/rename/fsync).
+    Io(std::io::Error),
+    /// Fewer bytes than the file (or field) requires.
+    Truncated { need: usize, have: usize },
+    /// First four bytes are not [`SNAP_MAGIC`].
+    BadMagic { got: u32 },
+    /// Version byte differs from [`SNAP_VERSION`].
+    BadVersion { got: u8 },
+    /// Unknown snapshot-kind byte.
+    BadKind { got: u8 },
+    /// Checksum mismatch (torn or corrupt file).
+    BadCrc { want: u32, got: u32 },
+    /// Declared body length exceeds the decoder's cap.
+    Oversized { len: u64, max: usize },
+    /// Structurally invalid body (bad varint, count mismatch, violated
+    /// cross-field invariant, trailing garbage, …).
+    Malformed(&'static str),
+    /// A structurally valid snapshot that does not belong to this run
+    /// (config fingerprint / dimension / population mismatch).
+    Incompatible(String),
+    /// The run configuration cannot be snapshotted (stateful worker
+    /// compressors keep client-side state no coordinator file can carry).
+    Unsupported(&'static str),
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "snapshot io: {e}"),
+            SnapshotError::Truncated { need, have } => {
+                write!(f, "truncated snapshot: need {need} bytes, have {have}")
+            }
+            SnapshotError::BadMagic { got } => write!(f, "bad snapshot magic {got:#010x}"),
+            SnapshotError::BadVersion { got } => {
+                write!(f, "snapshot version {got} (this build speaks {SNAP_VERSION})")
+            }
+            SnapshotError::BadKind { got } => write!(f, "unknown snapshot kind {got}"),
+            SnapshotError::BadCrc { want, got } => {
+                write!(f, "snapshot crc mismatch: file says {want:#010x}, computed {got:#010x}")
+            }
+            SnapshotError::Oversized { len, max } => {
+                write!(f, "snapshot length {len} exceeds cap {max}")
+            }
+            SnapshotError::Malformed(what) => write!(f, "malformed snapshot: {what}"),
+            SnapshotError::Incompatible(what) => write!(f, "incompatible snapshot: {what}"),
+            SnapshotError::Unsupported(what) => write!(f, "snapshot unsupported: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> Self {
+        SnapshotError::Io(e)
+    }
+}
+
+impl From<WireError> for SnapshotError {
+    fn from(e: WireError) -> Self {
+        match e {
+            WireError::Truncated { need, have } => SnapshotError::Truncated { need, have },
+            WireError::BadMagic { got } => SnapshotError::BadMagic { got },
+            WireError::BadVersion { got } => SnapshotError::BadVersion { got },
+            WireError::BadMsgType { got } => SnapshotError::BadKind { got },
+            WireError::BadCrc { want, got } => SnapshotError::BadCrc { want, got },
+            WireError::Oversized { len, max } => SnapshotError::Oversized { len, max },
+            WireError::Malformed(what) => SnapshotError::Malformed(what),
+        }
+    }
+}
+
+/// Protocol phase at the snapshot boundary. Snapshots are only taken
+/// between rounds, so the phase is either `Standby` (nothing ran yet) or
+/// `Broadcast(t)` (round `t` fully applied, its `RoundTable` closed);
+/// the loader rejects any other combination.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapPhase {
+    /// No round completed; a resume starts from round 0.
+    Standby,
+    /// Round `t` completed and applied; a resume starts from `t + 1`.
+    Broadcast(usize),
+}
+
+/// When the engine writes snapshots.
+#[derive(Clone, Debug)]
+pub struct SnapshotPolicy {
+    /// Destination file (written atomically; see the module docs).
+    pub path: PathBuf,
+    /// Write after every `every` completed rounds; `0` means only on an
+    /// explicit drain (the `net` coordinator's graceful-shutdown path).
+    pub every: usize,
+}
+
+impl SnapshotPolicy {
+    /// Snapshot every `every` completed rounds into `path`.
+    pub fn every(path: impl Into<PathBuf>, every: usize) -> Self {
+        Self { path: path.into(), every }
+    }
+
+    /// Snapshot only when the coordinator drains.
+    pub fn on_drain(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into(), every: 0 }
+    }
+
+    /// True when a periodic snapshot is due after `done` of `total`
+    /// rounds (the final round never writes one — the run is complete).
+    pub fn due(&self, done: usize, total: usize) -> bool {
+        self.every > 0 && done % self.every == 0 && done < total
+    }
+}
+
+/// The full serialized coordinator state at a round boundary.
+///
+/// Fields are public for construction by the engine (and the benches);
+/// everything is *re-validated* on [`CoordinatorSnapshot::decode`], so
+/// in-memory construction is trusted but files never are.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoordinatorSnapshot {
+    /// Run-configuration fingerprint (algorithm, schedule, rounds,
+    /// participation, eval cadence, seed, dim, workers). A resume
+    /// refuses a snapshot whose fingerprint differs from the run it is
+    /// asked to continue.
+    pub fingerprint: u64,
+    /// Model dimension `d`.
+    pub dim: usize,
+    /// Worker population `M`.
+    pub workers: usize,
+    /// Total rounds the run was configured for.
+    pub rounds_total: usize,
+    /// Protocol phase at the boundary (checked against `next_round`).
+    pub phase: SnapPhase,
+    /// Raw server-side selection RNG stream ([`crate::util::rng::Pcg64::to_raw`]).
+    pub select_rng: [u64; 4],
+    /// Model parameters after the last completed round.
+    pub params: Vec<f32>,
+    /// Algorithm 2's server-side EF residual `ẽ`; `None` for algorithms
+    /// without server state.
+    pub residual: Option<Vec<f32>>,
+    /// Per-round reports for every completed round, in round order.
+    pub reports: Vec<RoundReport>,
+    /// Communication ledger for every completed round.
+    pub ledger: CommLedger,
+}
+
+impl CoordinatorSnapshot {
+    /// Rounds already completed — the round index a resume starts from.
+    pub fn next_round(&self) -> usize {
+        self.reports.len()
+    }
+
+    /// Serialize to one self-contained byte buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize, appending to `out`; returns the snapshot's byte length.
+    pub fn encode_into(&self, out: &mut Vec<u8>) -> usize {
+        assert_eq!(self.params.len(), self.dim, "snapshot params dim mismatch");
+        if let Some(r) = &self.residual {
+            assert_eq!(r.len(), self.dim, "snapshot residual dim mismatch");
+        }
+        assert_eq!(
+            self.ledger.rounds(),
+            self.reports.len(),
+            "snapshot ledger/report arity mismatch"
+        );
+        let next = self.reports.len();
+        let mut body = Vec::new();
+        body.extend_from_slice(&self.fingerprint.to_le_bytes());
+        push_varint(&mut body, self.dim as u64);
+        push_varint(&mut body, self.workers as u64);
+        push_varint(&mut body, self.rounds_total as u64);
+        push_varint(&mut body, next as u64);
+        match self.phase {
+            SnapPhase::Standby => {
+                body.push(0);
+                push_varint(&mut body, 0);
+            }
+            SnapPhase::Broadcast(t) => {
+                body.push(1);
+                push_varint(&mut body, t as u64);
+            }
+        }
+        for w in self.select_rng {
+            body.extend_from_slice(&w.to_le_bytes());
+        }
+        for &x in &self.params {
+            body.extend_from_slice(&x.to_le_bytes());
+        }
+        match &self.residual {
+            None => body.push(0),
+            Some(r) => {
+                body.push(1);
+                for &x in r {
+                    body.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        push_varint(&mut body, self.reports.len() as u64);
+        for r in &self.reports {
+            push_varint(&mut body, r.round as u64);
+            body.extend_from_slice(&r.lr.to_le_bytes());
+            body.extend_from_slice(&r.train_loss.to_le_bytes());
+            match r.eval {
+                None => body.push(0),
+                Some((l, a)) => {
+                    body.push(1);
+                    body.extend_from_slice(&l.to_le_bytes());
+                    body.extend_from_slice(&a.to_le_bytes());
+                }
+            }
+            body.extend_from_slice(&r.uplink_bits.to_le_bytes());
+            body.extend_from_slice(&r.downlink_bits.to_le_bytes());
+            body.extend_from_slice(&r.cum_uplink_bits.to_le_bytes());
+        }
+        push_varint(&mut body, self.ledger.rounds() as u64);
+        for rec in self.ledger.records() {
+            body.extend_from_slice(&rec.uplink_bits.to_le_bytes());
+            body.extend_from_slice(&rec.downlink_bits.to_le_bytes());
+            push_varint(&mut body, rec.senders as u64);
+            push_varint(&mut body, rec.uplink_nnz as u64);
+            push_varint(&mut body, rec.uplink_wire_bytes);
+            push_varint(&mut body, rec.downlink_wire_bytes);
+            push_varint(&mut body, rec.stragglers as u64);
+        }
+        assert!(body.len() <= MAX_SNAPSHOT, "snapshot body {} B exceeds cap", body.len());
+
+        let start = out.len();
+        let mut hdr = BitWriter::new();
+        hdr.push_bits(SNAP_MAGIC as u64, 32);
+        hdr.push_bits(SNAP_VERSION as u64, 8);
+        hdr.push_bits(KIND_COORDINATOR as u64, 8);
+        out.extend_from_slice(hdr.as_bytes());
+        push_varint(out, body.len() as u64);
+        out.extend_from_slice(&body);
+        let crc = crc32(&out[start..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.len() - start
+    }
+
+    /// Parse and fully validate one snapshot from `bytes` (which must
+    /// contain exactly one snapshot — trailing bytes are an error).
+    pub fn decode(bytes: &[u8]) -> Result<Self, SnapshotError> {
+        if bytes.len() < HEADER_FIXED {
+            return Err(SnapshotError::Truncated { need: HEADER_FIXED, have: bytes.len() });
+        }
+        let mut hdr = BitReader::new(&bytes[..HEADER_FIXED]);
+        let magic = hdr.read_bits(32).expect("fixed header") as u32;
+        if magic != SNAP_MAGIC {
+            return Err(SnapshotError::BadMagic { got: magic });
+        }
+        let version = hdr.read_bits(8).expect("fixed header") as u8;
+        if version != SNAP_VERSION {
+            return Err(SnapshotError::BadVersion { got: version });
+        }
+        let kind = hdr.read_bits(8).expect("fixed header") as u8;
+        if kind != KIND_COORDINATOR {
+            return Err(SnapshotError::BadKind { got: kind });
+        }
+
+        let mut pre = Cursor::new(&bytes[HEADER_FIXED..]);
+        let len = pre.varint()?;
+        if len > MAX_SNAPSHOT as u64 {
+            return Err(SnapshotError::Oversized { len, max: MAX_SNAPSHOT });
+        }
+        let len = len as usize;
+        let body_at = HEADER_FIXED + pre.pos();
+        let total = body_at + len + CRC_LEN;
+        if bytes.len() < total {
+            return Err(SnapshotError::Truncated { need: total, have: bytes.len() });
+        }
+        if bytes.len() > total {
+            return Err(SnapshotError::Malformed("trailing bytes after snapshot"));
+        }
+        let mut crc_bytes = [0u8; CRC_LEN];
+        crc_bytes.copy_from_slice(&bytes[total - CRC_LEN..]);
+        let want = u32::from_le_bytes(crc_bytes);
+        let got = crc32(&bytes[..total - CRC_LEN]);
+        if want != got {
+            return Err(SnapshotError::BadCrc { want, got });
+        }
+
+        let mut cur = Cursor::new(&bytes[body_at..body_at + len]);
+        let fingerprint = cur.u64le()?;
+        let dim = cur.count(MAX_DIM, "snapshot dim out of range")?;
+        let workers = cur.count(MAX_WORKERS, "snapshot workers out of range")?;
+        let rounds_total = cur.count(MAX_ROUNDS, "snapshot rounds out of range")?;
+        if rounds_total == 0 {
+            return Err(SnapshotError::Malformed("zero-round run"));
+        }
+        let next_round = cur.count(rounds_total, "next_round exceeds rounds_total")?;
+        let phase = match cur.u8()? {
+            0 => {
+                let r = cur.varint()?;
+                if next_round != 0 || r != 0 {
+                    return Err(SnapshotError::Malformed("standby phase after completed rounds"));
+                }
+                SnapPhase::Standby
+            }
+            1 => {
+                let r = cur.count(MAX_ROUNDS, "phase round out of range")?;
+                if next_round == 0 || r != next_round - 1 {
+                    return Err(SnapshotError::Malformed("phase round disagrees with next_round"));
+                }
+                SnapPhase::Broadcast(r)
+            }
+            _ => return Err(SnapshotError::Malformed("unknown phase tag")),
+        };
+        let mut select_rng = [0u64; 4];
+        for w in select_rng.iter_mut() {
+            *w = cur.u64le()?;
+        }
+        if select_rng[2] & 1 == 0 {
+            return Err(SnapshotError::Malformed("even selection-rng increment"));
+        }
+        // Parameter (and residual) bytes are taken before any allocation,
+        // so a hostile dim can never demand memory the file lacks.
+        let pbytes = cur.take(4 * dim)?;
+        let params: Vec<f32> = pbytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let residual = match cur.u8()? {
+            0 => None,
+            1 => {
+                let rbytes = cur.take(4 * dim)?;
+                Some(
+                    rbytes
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect::<Vec<f32>>(),
+                )
+            }
+            _ => return Err(SnapshotError::Malformed("bad residual flag")),
+        };
+
+        let nreports = cur.count(next_round, "report count exceeds next_round")?;
+        if nreports != next_round {
+            return Err(SnapshotError::Malformed("report count disagrees with next_round"));
+        }
+        let mut reports = Vec::new();
+        for k in 0..nreports {
+            let round = cur.count(MAX_ROUNDS, "report round out of range")?;
+            if round != k {
+                return Err(SnapshotError::Malformed("report rounds not contiguous"));
+            }
+            let lr = cur.f64()?;
+            let train_loss = cur.f64()?;
+            let eval = match cur.u8()? {
+                0 => None,
+                1 => Some((cur.f64()?, cur.f64()?)),
+                _ => return Err(SnapshotError::Malformed("bad eval flag")),
+            };
+            let uplink_bits = cur.f64()?;
+            let downlink_bits = cur.f64()?;
+            let cum_uplink_bits = cur.f64()?;
+            reports.push(RoundReport {
+                round,
+                lr,
+                train_loss,
+                eval,
+                uplink_bits,
+                downlink_bits,
+                cum_uplink_bits,
+            });
+        }
+
+        let nledger = cur.count(next_round, "ledger count exceeds next_round")?;
+        if nledger != next_round {
+            return Err(SnapshotError::Malformed("ledger count disagrees with next_round"));
+        }
+        let mut records = Vec::new();
+        for _ in 0..nledger {
+            let uplink_bits = cur.f64()?;
+            let downlink_bits = cur.f64()?;
+            let senders = cur.count(MAX_WORKERS, "ledger senders out of range")?;
+            let uplink_nnz = cur.count(usize::MAX, "ledger nnz out of range")?;
+            let uplink_wire_bytes = cur.varint()?;
+            let downlink_wire_bytes = cur.varint()?;
+            let stragglers = cur.count(MAX_WORKERS, "ledger stragglers out of range")?;
+            records.push(RoundComm {
+                uplink_bits,
+                downlink_bits,
+                senders,
+                uplink_nnz,
+                uplink_wire_bytes,
+                downlink_wire_bytes,
+                stragglers,
+            });
+        }
+        cur.done()?;
+
+        Ok(CoordinatorSnapshot {
+            fingerprint,
+            dim,
+            workers,
+            rounds_total,
+            phase,
+            select_rng,
+            params,
+            residual,
+            reports,
+            ledger: CommLedger::from_records(records),
+        })
+    }
+
+    /// Write the snapshot to `path` atomically: serialize, write to
+    /// `<path>.tmp`, fsync, rename over `path`, fsync the parent
+    /// directory (unix). A crash at any point leaves either the old file
+    /// or the new one.
+    pub fn save(&self, path: &Path) -> Result<(), SnapshotError> {
+        use std::io::Write as _;
+        let bytes = self.encode();
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        #[cfg(unix)]
+        {
+            let dir = match path.parent() {
+                Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+                _ => PathBuf::from("."),
+            };
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    /// Load and validate a snapshot file. The file's metadata length is
+    /// checked against [`MAX_SNAPSHOT`] *before* the read, so a hostile
+    /// path cannot force a giant allocation.
+    pub fn load(path: &Path) -> Result<Self, SnapshotError> {
+        let meta = std::fs::metadata(path)?;
+        let cap = (MAX_SNAPSHOT + HEADER_FIXED + CRC_LEN + 10) as u64;
+        if meta.len() > cap {
+            return Err(SnapshotError::Oversized { len: meta.len(), max: MAX_SNAPSHOT });
+        }
+        let bytes = std::fs::read(path)?;
+        Self::decode(&bytes)
+    }
+}
+
+/// FNV-1a 64-bit — the run-configuration fingerprint hash (stable across
+/// processes; not cryptographic, it only guards against *accidental*
+/// config drift between a snapshot and the run resuming from it).
+pub fn fingerprint_bytes(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(next: usize) -> CoordinatorSnapshot {
+        let dim = 5;
+        let reports: Vec<RoundReport> = (0..next)
+            .map(|t| RoundReport {
+                round: t,
+                lr: 0.05,
+                train_loss: 1.0 / (t + 1) as f64,
+                eval: if t % 2 == 0 { Some((0.5, 0.75)) } else { None },
+                uplink_bits: 100.0,
+                downlink_bits: 10.0,
+                cum_uplink_bits: 100.0 * (t + 1) as f64,
+            })
+            .collect();
+        let mut ledger = CommLedger::new();
+        for t in 0..next {
+            ledger.record(RoundComm {
+                uplink_bits: 100.0,
+                downlink_bits: 10.0,
+                senders: 4,
+                uplink_nnz: 3 + t,
+                uplink_wire_bytes: 256,
+                downlink_wire_bytes: 128,
+                stragglers: t % 2,
+            });
+        }
+        CoordinatorSnapshot {
+            fingerprint: 0xdead_beef_cafe_f00d,
+            dim,
+            workers: 4,
+            rounds_total: next.max(1) + 2,
+            phase: if next == 0 { SnapPhase::Standby } else { SnapPhase::Broadcast(next - 1) },
+            select_rng: crate::util::rng::Pcg64::seed_from(7).to_raw(),
+            params: (0..dim).map(|i| i as f32 * 0.25 - 0.5).collect(),
+            residual: Some(vec![0.125; dim]),
+            reports,
+            ledger,
+        }
+    }
+
+    #[test]
+    fn roundtrip_bit_identical() {
+        for next in [0usize, 1, 3] {
+            let snap = sample(next);
+            let bytes = snap.encode();
+            let back = CoordinatorSnapshot::decode(&bytes).expect("decode");
+            assert_eq!(back, snap, "next={next}");
+            assert_eq!(back.next_round(), next);
+        }
+    }
+
+    #[test]
+    fn save_is_atomic_and_loads_back() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("sparsignd-snap-test-{}.bin", std::process::id()));
+        let snap = sample(2);
+        snap.save(&path).expect("save");
+        // No temp residue, and the load revalidates to the same value.
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        assert!(!PathBuf::from(tmp_name).exists(), "tmp file left behind");
+        let back = CoordinatorSnapshot::load(&path).expect("load");
+        assert_eq!(back, snap);
+        // Overwrite with a later snapshot; the file is replaced whole.
+        let later = sample(3);
+        later.save(&path).expect("resave");
+        assert_eq!(CoordinatorSnapshot::load(&path).expect("reload"), later);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn header_and_crc_failures_are_typed() {
+        let good = sample(1).encode();
+
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(
+            CoordinatorSnapshot::decode(&bad),
+            Err(SnapshotError::BadMagic { .. })
+        ));
+
+        let mut bad = good.clone();
+        bad[4] = SNAP_VERSION + 1;
+        assert!(matches!(
+            CoordinatorSnapshot::decode(&bad),
+            Err(SnapshotError::BadVersion { got }) if got == SNAP_VERSION + 1
+        ));
+
+        let mut bad = good.clone();
+        bad[5] = 0x7f;
+        assert!(matches!(
+            CoordinatorSnapshot::decode(&bad),
+            Err(SnapshotError::BadKind { got: 0x7f })
+        ));
+
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x04;
+        assert!(matches!(CoordinatorSnapshot::decode(&bad), Err(SnapshotError::BadCrc { .. })));
+
+        for cut in 0..good.len() {
+            let err = CoordinatorSnapshot::decode(&good[..cut]).unwrap_err();
+            assert!(matches!(err, SnapshotError::Truncated { .. }), "cut {cut}: {err}");
+        }
+
+        let mut long = good.clone();
+        long.push(0);
+        assert!(matches!(
+            CoordinatorSnapshot::decode(&long),
+            Err(SnapshotError::Malformed("trailing bytes after snapshot"))
+        ));
+    }
+
+    #[test]
+    fn hostile_lengths_are_capped_before_allocation() {
+        // A gigantic declared body length is refused up front.
+        let mut hostile = Vec::new();
+        let mut hdr = BitWriter::new();
+        hdr.push_bits(SNAP_MAGIC as u64, 32);
+        hdr.push_bits(SNAP_VERSION as u64, 8);
+        hdr.push_bits(KIND_COORDINATOR as u64, 8);
+        hostile.extend_from_slice(hdr.as_bytes());
+        push_varint(&mut hostile, u64::MAX / 2);
+        hostile.extend_from_slice(&[0u8; 32]);
+        assert!(matches!(
+            CoordinatorSnapshot::decode(&hostile),
+            Err(SnapshotError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn phase_and_rng_consistency_is_enforced() {
+        // Standby with completed rounds must be rejected: re-encode a
+        // 1-round snapshot with a lying phase tag.
+        let mut snap = sample(1);
+        snap.phase = SnapPhase::Standby;
+        let bytes = snap.encode();
+        assert!(matches!(
+            CoordinatorSnapshot::decode(&bytes),
+            Err(SnapshotError::Malformed("standby phase after completed rounds"))
+        ));
+
+        let mut snap = sample(2);
+        snap.phase = SnapPhase::Broadcast(0); // should be Broadcast(1)
+        let bytes = snap.encode();
+        assert!(matches!(
+            CoordinatorSnapshot::decode(&bytes),
+            Err(SnapshotError::Malformed("phase round disagrees with next_round"))
+        ));
+
+        let mut snap = sample(1);
+        snap.select_rng[2] &= !1;
+        let bytes = snap.encode();
+        assert!(matches!(
+            CoordinatorSnapshot::decode(&bytes),
+            Err(SnapshotError::Malformed("even selection-rng increment"))
+        ));
+    }
+
+    #[test]
+    fn fingerprint_is_stable() {
+        assert_eq!(fingerprint_bytes(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fingerprint_bytes(b"a"), fingerprint_bytes(b"a"));
+        assert_ne!(fingerprint_bytes(b"a"), fingerprint_bytes(b"b"));
+    }
+}

@@ -236,6 +236,34 @@ impl Pcg64 {
         }
     }
 
+    /// Export the generator's raw LCG state as four words
+    /// (`[state_lo, state_hi, inc_lo, inc_hi]`) — the coordinator
+    /// snapshot codec serializes the server-side selection stream this
+    /// way so a resumed run continues the exact sequence
+    /// (DESIGN.md §12).
+    pub fn to_raw(&self) -> [u64; 4] {
+        [
+            self.state as u64,
+            (self.state >> 64) as u64,
+            self.inc as u64,
+            (self.inc >> 64) as u64,
+        ]
+    }
+
+    /// Rebuild a generator from [`Self::to_raw`] words. Returns `None`
+    /// when the increment is even — every reachable PCG stream has an
+    /// odd increment, so an even one can only come from a corrupt or
+    /// hostile snapshot.
+    pub fn from_raw(raw: [u64; 4]) -> Option<Pcg64> {
+        if raw[2] & 1 == 0 {
+            return None;
+        }
+        Some(Pcg64 {
+            state: (raw[0] as u128) | ((raw[1] as u128) << 64),
+            inc: (raw[2] as u128) | ((raw[3] as u128) << 64),
+        })
+    }
+
     /// Sample `k` distinct indices uniformly from `[0, n)` (partial
     /// Fisher–Yates; O(n) memory, O(k) swaps). Sorted output for
     /// reproducible iteration order.
@@ -337,6 +365,22 @@ mod tests {
         let mut c2 = root.derive(1);
         let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn raw_state_roundtrip_resumes_the_stream() {
+        let mut a = Pcg64::seed_from(99).derive(0xfeed);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Pcg64::from_raw(a.to_raw()).expect("odd increment");
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Even increments are unreachable states and must be refused.
+        let mut raw = Pcg64::seed_from(1).to_raw();
+        raw[2] &= !1;
+        assert!(Pcg64::from_raw(raw).is_none());
     }
 
     #[test]

@@ -238,8 +238,11 @@ impl RawClient {
         wire::decode_msg(frame).unwrap()
     }
 
-    fn join(&mut self, lo: u64, hi: u64) {
-        self.send(&Msg::Hello { lo, hi });
+    /// Rendezvous with the run-config fingerprint the coordinator will
+    /// demand (`TrainingRun::config_fingerprint(d, m, 0)`); env hash 0
+    /// because these fault harnesses serve without one.
+    fn join(&mut self, lo: u64, hi: u64, cfg: u64) {
+        self.send(&Msg::Hello { lo, hi, cfg, env: 0 });
         let Msg::Welcome { .. } = self.recv() else { panic!("expected Welcome") };
     }
 
@@ -291,11 +294,12 @@ where
 fn transport_dropped_client_mid_round_still_completes() {
     let d = 8;
     let run = net_run(2);
+    let cfg = run.config_fingerprint(d, 3, 0);
     let hist = serve_with(&run, 3, d, None, |ep| {
         let mut a = RawClient::connect(ep);
         let mut b = RawClient::connect(ep);
-        a.join(0, 2);
-        b.join(2, 3);
+        a.join(0, 2, cfg);
+        b.join(2, 3, cfg);
         // B sees round 0 open, then dies without submitting.
         let _ = b.expect_round();
         drop(b);
@@ -324,9 +328,10 @@ fn transport_dropped_client_mid_round_still_completes() {
 fn transport_duplicate_submission_is_idempotently_rejected() {
     let d = 8;
     let run = net_run(1);
+    let cfg = run.config_fingerprint(d, 2, 0);
     let hist = serve_with(&run, 2, d, None, |ep| {
         let mut c = RawClient::connect(ep);
-        c.join(0, 2);
+        c.join(0, 2, cfg);
         let (t, _lr, selected) = c.expect_round();
         assert_eq!(selected, vec![0, 1]);
         let len0 = c.send_update(t, 0, d);
@@ -362,11 +367,12 @@ fn transport_deadline_expired_straggler_is_counted() {
     let d = 8;
     let run = net_run(2);
     let deadline = Some(Duration::from_millis(2000));
+    let cfg = run.config_fingerprint(d, 2, 0);
     let hist = serve_with(&run, 2, d, deadline, |ep| {
         let mut a = RawClient::connect(ep);
         let mut b = RawClient::connect(ep);
-        a.join(0, 1);
-        b.join(1, 2);
+        a.join(0, 1, cfg);
+        b.join(1, 2, cfg);
         // A is prompt in both rounds.
         let (t0, _, sel) = a.expect_round();
         for &w in &sel {
@@ -405,6 +411,138 @@ fn transport_deadline_expired_straggler_is_counted() {
     assert_eq!((r0.senders, r0.stragglers), (1, 1), "round 0 closed at the deadline");
     let r1 = hist.ledger.get(1).unwrap();
     assert_eq!((r1.senders, r1.stragglers), (2, 0), "round 1 recovered");
+}
+
+#[test]
+fn transport_claim_then_drop_completes_long_before_the_deadline() {
+    // The satellite bug shape: a client that claims a roster range and
+    // disconnects before its first update frame must be surfaced through
+    // the dead-conn bookkeeping *immediately* (roster release + table
+    // expectation shrink), not discovered when the round deadline
+    // expires. With a 20 s deadline and 2 rounds, a deadline-stall
+    // implementation would take ≥ 40 s; the immediate path takes
+    // milliseconds.
+    let d = 8;
+    let run = net_run(2);
+    let deadline = Some(Duration::from_secs(20));
+    let cfg = run.config_fingerprint(d, 3, 0);
+    let t0 = std::time::Instant::now();
+    let hist = serve_with(&run, 3, d, deadline, |ep| {
+        let mut a = RawClient::connect(ep);
+        let mut b = RawClient::connect(ep);
+        a.join(0, 2, cfg);
+        b.join(2, 3, cfg);
+        // B claimed workers 2..3 and dies before any update frame.
+        let _ = b.expect_round();
+        drop(b);
+        for _ in 0..2 {
+            let (t, _lr, selected) = a.expect_round();
+            for &w in &selected {
+                a.send_update(t, w, d);
+            }
+        }
+        let Msg::Fin { .. } = a.recv() else { panic!("expected Fin") };
+    });
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "rounds stalled {elapsed:?} against a 20 s deadline — dead conns must \
+         shrink expectations immediately"
+    );
+    assert_eq!(hist.reports.len(), 2);
+    assert_eq!(hist.ledger.total_stragglers(), 2, "B's worker is a straggler both rounds");
+}
+
+#[test]
+fn transport_empty_round_waits_for_recoverage_instead_of_dying() {
+    // The whole cohort's host dies before submitting anything: the round
+    // closes with zero live submissions, but instead of aborting the run
+    // the coordinator waits (bounded by the rendezvous timeout) for a
+    // replacement to re-claim the range, then re-broadcasts the *same*
+    // round — worker rounds are pure, so the recomputation is harmless.
+    let d = 8;
+    let run = net_run(2);
+    let cfg = run.config_fingerprint(d, 2, 0);
+    let hist = serve_with(&run, 2, d, None, |ep| {
+        let mut a1 = RawClient::connect(ep);
+        a1.join(0, 2, cfg);
+        // Receive round 0's broadcast, then die without a single update.
+        let _ = a1.expect_round();
+        drop(a1);
+        std::thread::sleep(Duration::from_millis(400));
+        let mut a2 = RawClient::connect(ep);
+        a2.join(0, 2, cfg); // re-claims the whole population
+        for _ in 0..2 {
+            let (t, _lr, sel) = a2.expect_round();
+            for &w in &sel {
+                a2.send_update(t, w, d);
+            }
+        }
+        let Msg::Fin { .. } = a2.recv() else { panic!("expected Fin") };
+    });
+    assert_eq!(hist.reports.len(), 2);
+    // The re-broadcast attempt completed in full: no stragglers recorded.
+    for t in 0..2 {
+        let rc = hist.ledger.get(t).unwrap();
+        assert_eq!((rc.senders, rc.stragglers), (2, 0), "round {t}");
+    }
+}
+
+#[test]
+fn transport_dead_range_is_reclaimed_by_a_reconnecting_client() {
+    // Elastic churn: when a client dies its roster claim is released, so
+    // a replacement can re-claim the same worker range mid-run and serve
+    // from the next round — instead of bouncing off ClaimError::Overlap
+    // forever.
+    let d = 8;
+    let run = net_run(3);
+    let cfg = run.config_fingerprint(d, 2, 0);
+    let hist = serve_with(&run, 2, d, None, |ep| {
+        let mut a = RawClient::connect(ep);
+        let mut b1 = RawClient::connect(ep);
+        a.join(0, 1, cfg);
+        b1.join(1, 2, cfg);
+        // Round 0: both submit.
+        let (t, _lr, sel) = a.expect_round();
+        for &w in &sel {
+            a.send_update(t, w, d);
+        }
+        let (t, _lr, sel) = b1.expect_round();
+        for &w in &sel {
+            b1.send_update(t, w, d);
+        }
+        // B1 dies. Give the coordinator time to process Gone (release
+        // the claim + drop the slot) before the replacement dials in.
+        drop(b1);
+        std::thread::sleep(Duration::from_millis(400));
+        let mut b2 = RawClient::connect(ep);
+        b2.join(1, 2, cfg); // re-claims the freed range mid-run
+        // A carries round 1 alone (B1's slot was dropped immediately).
+        let (t, _lr, sel) = a.expect_round();
+        assert_eq!(t, 1);
+        for &w in &sel {
+            a.send_update(t, w, d);
+        }
+        // Round 2: both hosts serve again.
+        let (t, _lr, sel) = a.expect_round();
+        assert_eq!(t, 2);
+        for &w in &sel {
+            a.send_update(t, w, d);
+        }
+        let (t, _lr, sel) = b2.expect_round();
+        assert_eq!((t, sel.as_slice()), (2, &[1u64][..]));
+        for &w in &sel {
+            b2.send_update(t, w, d);
+        }
+        let Msg::Fin { .. } = a.recv() else { panic!("A expected Fin") };
+        let Msg::Fin { .. } = b2.recv() else { panic!("B2 expected Fin") };
+    });
+    assert_eq!(hist.reports.len(), 3);
+    let senders: Vec<usize> = (0..3).map(|t| hist.ledger.get(t).unwrap().senders).collect();
+    let stragglers: Vec<usize> =
+        (0..3).map(|t| hist.ledger.get(t).unwrap().stragglers).collect();
+    assert_eq!(senders, vec![2, 1, 2], "round 1 runs without B, round 2 with B2");
+    assert_eq!(stragglers, vec![0, 1, 0]);
 }
 
 #[test]

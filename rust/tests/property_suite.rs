@@ -491,7 +491,12 @@ fn gen_wire_msg(rng: &mut Pcg64) -> Msg {
         }
     };
     match rng.index(8) {
-        0 => Msg::Hello { lo: rng.next_u64() >> 40, hi: rng.next_u64() >> 40 },
+        0 => Msg::Hello {
+            lo: rng.next_u64() >> 40,
+            hi: rng.next_u64() >> 40,
+            cfg: rng.next_u64(),
+            env: rng.next_u64(),
+        },
         1 => Msg::Welcome {
             client_id: rng.next_u64() >> 32,
             workers: rng.next_u64() >> 32,
@@ -608,6 +613,235 @@ fn prop_wire_truncations_yield_typed_errors() {
             }
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// Snapshot-codec hardening (DESIGN.md §12): random coordinator states
+// round-trip bit-identically; mutated/truncated/version-bumped files are
+// typed `SnapshotError`s — never a panic, never an attacker-length
+// allocation; and a golden re-encoding pins the version-1 layout.
+// ---------------------------------------------------------------------
+
+use sparsignd::coordinator::{CommLedger, RoundComm, RoundReport};
+use sparsignd::snapshot::{
+    CoordinatorSnapshot, SnapPhase, SnapshotError, KIND_COORDINATOR, SNAP_MAGIC, SNAP_VERSION,
+};
+
+/// Random-but-internally-consistent coordinator snapshot.
+fn gen_snapshot(rng: &mut Pcg64) -> CoordinatorSnapshot {
+    let dim = 1 + rng.index(150);
+    let rounds_total = 1 + rng.index(10);
+    let next = rng.index(rounds_total + 1);
+    let reports: Vec<RoundReport> = (0..next)
+        .map(|t| RoundReport {
+            round: t,
+            lr: rng.f64(),
+            train_loss: rng.normal(),
+            eval: rng.bernoulli(0.5).then(|| (rng.normal(), rng.f64())),
+            uplink_bits: rng.f64() * 1e6,
+            downlink_bits: rng.f64() * 1e4,
+            cum_uplink_bits: rng.f64() * 1e7,
+        })
+        .collect();
+    let mut ledger = CommLedger::new();
+    for _ in 0..next {
+        ledger.record(RoundComm {
+            uplink_bits: rng.f64() * 1e6,
+            downlink_bits: rng.f64() * 1e4,
+            senders: rng.index(500),
+            uplink_nnz: rng.index(1 << 20),
+            uplink_wire_bytes: rng.next_u64() >> 40,
+            downlink_wire_bytes: rng.next_u64() >> 40,
+            stragglers: rng.index(16),
+        });
+    }
+    let mut params = vec![0.0f32; dim];
+    rng.fill_normal(&mut params, 0.0, 1.0);
+    let residual = rng.bernoulli(0.5).then(|| {
+        let mut r = vec![0.0f32; dim];
+        rng.fill_normal(&mut r, 0.0, 0.1);
+        r
+    });
+    CoordinatorSnapshot {
+        fingerprint: rng.next_u64(),
+        dim,
+        workers: 1 + rng.index(1000),
+        rounds_total,
+        phase: if next == 0 { SnapPhase::Standby } else { SnapPhase::Broadcast(next - 1) },
+        select_rng: Pcg64::seed_from(rng.next_u64()).to_raw(),
+        params,
+        residual,
+        reports,
+        ledger,
+    }
+}
+
+#[test]
+fn prop_snapshot_roundtrip_bit_identical() {
+    check(cfg(64, 0x181), gen_snapshot, |snap| {
+        let bytes = snap.encode();
+        let back = CoordinatorSnapshot::decode(&bytes).map_err(|e| format!("decode: {e}"))?;
+        if &back != snap {
+            return Err("snapshot round-trip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_snapshot_single_byte_mutations_yield_typed_errors() {
+    check(
+        cfg(96, 0x182),
+        |rng| {
+            let bytes = gen_snapshot(rng).encode();
+            let at = rng.index(bytes.len());
+            let flip = 1 + rng.index(255) as u8;
+            (bytes, at, flip)
+        },
+        |case| {
+            let (bytes, at, flip) = case;
+            let mut bad = bytes.clone();
+            bad[*at] ^= *flip;
+            // Header checks catch the first six bytes, CRC-32 catches
+            // every ≤32-bit burst in the length/body, and a flip inside
+            // the trailing CRC itself reads as BadCrc — every single-byte
+            // corruption must surface as a typed error.
+            match CoordinatorSnapshot::decode(&bad) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("mutation at {at} (^{flip:#x}) decoded")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_snapshot_truncations_yield_typed_errors() {
+    check(
+        cfg(48, 0x183),
+        |rng| {
+            let bytes = gen_snapshot(rng).encode();
+            let cut = rng.index(bytes.len());
+            (bytes, cut)
+        },
+        |case| {
+            let (bytes, cut) = case;
+            match CoordinatorSnapshot::decode(&bytes[..*cut]) {
+                Err(SnapshotError::Truncated { .. }) => Ok(()),
+                Err(other) => Err(format!("cut {cut}: wrong error {other}")),
+                Ok(_) => Err(format!("cut {cut}: decoded a prefix")),
+            }
+        },
+    );
+}
+
+#[test]
+fn snapshot_version_bump_is_refused() {
+    let mut rng = Pcg64::seed_from(0x184);
+    let mut bytes = gen_snapshot(&mut rng).encode();
+    bytes[4] = SNAP_VERSION + 1;
+    assert!(matches!(
+        CoordinatorSnapshot::decode(&bytes),
+        Err(SnapshotError::BadVersion { got }) if got == SNAP_VERSION + 1
+    ));
+}
+
+/// Golden layout pin for snapshot version 1: an independent re-encoding
+/// of the DESIGN.md §12 grammar must byte-match the codec's output for a
+/// fixed state. Any layout change breaks this test, forcing a version
+/// bump (and a new golden) rather than a silent format drift.
+#[test]
+fn snapshot_v1_golden_layout() {
+    // Independent LEB128 (deliberately re-implemented, not imported).
+    fn varint(out: &mut Vec<u8>, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                out.push(b);
+                break;
+            }
+            out.push(b | 0x80);
+        }
+    }
+    let rng_raw = [0x1111u64, 0x2222, 0x3333 | 1, 0x4444];
+    let snap = CoordinatorSnapshot {
+        fingerprint: 0x0102_0304_0506_0708,
+        dim: 3,
+        workers: 2,
+        rounds_total: 4,
+        phase: SnapPhase::Broadcast(0),
+        select_rng: rng_raw,
+        params: vec![1.0, -2.5, 0.0],
+        residual: None,
+        reports: vec![RoundReport {
+            round: 0,
+            lr: 0.5,
+            train_loss: 2.0,
+            eval: Some((1.25, 0.75)),
+            uplink_bits: 300.0,
+            downlink_bits: 64.0,
+            cum_uplink_bits: 300.0,
+        }],
+        ledger: CommLedger::from_records(vec![RoundComm {
+            uplink_bits: 300.0,
+            downlink_bits: 64.0,
+            senders: 2,
+            uplink_nnz: 5,
+            uplink_wire_bytes: 130,
+            downlink_wire_bytes: 260,
+            stragglers: 0,
+        }]),
+    };
+
+    // body := fingerprint dim workers rounds_total next_round phase
+    //         rng params residual_flag reports ledger
+    let mut body = Vec::new();
+    body.extend_from_slice(&0x0102_0304_0506_0708u64.to_le_bytes());
+    varint(&mut body, 3); // dim
+    varint(&mut body, 2); // workers
+    varint(&mut body, 4); // rounds_total
+    varint(&mut body, 1); // next_round
+    body.push(1); // phase tag: Broadcast
+    varint(&mut body, 0); // phase round
+    for w in rng_raw {
+        body.extend_from_slice(&w.to_le_bytes());
+    }
+    for p in [1.0f32, -2.5, 0.0] {
+        body.extend_from_slice(&p.to_le_bytes());
+    }
+    body.push(0); // no residual
+    varint(&mut body, 1); // one report
+    varint(&mut body, 0); // round
+    body.extend_from_slice(&0.5f64.to_le_bytes()); // lr
+    body.extend_from_slice(&2.0f64.to_le_bytes()); // train_loss
+    body.push(1); // eval present
+    body.extend_from_slice(&1.25f64.to_le_bytes());
+    body.extend_from_slice(&0.75f64.to_le_bytes());
+    body.extend_from_slice(&300.0f64.to_le_bytes()); // uplink_bits
+    body.extend_from_slice(&64.0f64.to_le_bytes()); // downlink_bits
+    body.extend_from_slice(&300.0f64.to_le_bytes()); // cum_uplink_bits
+    varint(&mut body, 1); // one ledger record
+    body.extend_from_slice(&300.0f64.to_le_bytes());
+    body.extend_from_slice(&64.0f64.to_le_bytes());
+    varint(&mut body, 2); // senders
+    varint(&mut body, 5); // nnz
+    varint(&mut body, 130); // uplink wire bytes
+    varint(&mut body, 260); // downlink wire bytes
+    varint(&mut body, 0); // stragglers
+
+    // file := magic("SGSP") version kind len body crc
+    let mut expect = Vec::new();
+    expect.extend_from_slice(&SNAP_MAGIC.to_be_bytes());
+    assert_eq!(&expect[..4], b"SGSP");
+    expect.push(SNAP_VERSION);
+    expect.push(KIND_COORDINATOR);
+    varint(&mut expect, body.len() as u64);
+    expect.extend_from_slice(&body);
+    let crc = wire::crc32(&expect);
+    expect.extend_from_slice(&crc.to_le_bytes());
+
+    assert_eq!(snap.encode(), expect, "snapshot v1 layout drifted — bump SNAP_VERSION");
+    assert_eq!(CoordinatorSnapshot::decode(&expect).expect("golden decodes"), snap);
 }
 
 /// Hostile interior lengths: a frame whose payload declares a gigantic

@@ -1,0 +1,375 @@
+//! Elastic-federation equivalence (DESIGN.md §12): a run interrupted by
+//! a coordinator snapshot + restart must produce a `RunHistory`
+//! **bit-identical** to an uninterrupted run — in-process (periodic
+//! snapshots + `resume_from`) and over the wire (coordinator drain,
+//! fleet reconnect-with-backoff, `--resume`-style successor).
+//!
+//! The determinism contract makes this provable rather than hopeful:
+//! worker RNG streams are derived per `(seed, round, worker)` and never
+//! persist, so the snapshot's params + selection stream + server
+//! residual + history are a complete cut of the run's state.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use sparsignd::compressors::CompressorKind;
+use sparsignd::coordinator::{AggregationRule, Algorithm, ClassifierEnv, RunHistory, TrainingRun};
+use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+use sparsignd::model::ModelKind;
+use sparsignd::net::client::loopback_endpoint;
+use sparsignd::net::{
+    run_fleet_src, run_loopback, Endpoint, FleetOptions, NetCoordinator, NetError, ServeOptions,
+};
+use sparsignd::optim::LrSchedule;
+use sparsignd::snapshot::{CoordinatorSnapshot, SnapshotError, SnapshotPolicy};
+use sparsignd::util::rng::Pcg64;
+
+fn env_with_alpha(workers: usize, alpha: f64) -> ClassifierEnv {
+    let task = SyntheticTask::generate(
+        SyntheticSpec {
+            dim: 12,
+            classes: 3,
+            modes: 1,
+            separation: 1.8,
+            noise: 0.25,
+            label_noise: 0.0,
+            train: 480,
+            test: 120,
+        },
+        41,
+    );
+    let mut rng = Pcg64::seed_from(42);
+    let fed = DirichletPartitioner { alpha, workers }.partition(&task.train, &mut rng);
+    ClassifierEnv::new(
+        ModelKind::Linear { inputs: 12, classes: 3 }.build(),
+        task.train,
+        task.test,
+        fed,
+        16,
+    )
+}
+
+fn env(workers: usize) -> ClassifierEnv {
+    env_with_alpha(workers, 0.5)
+}
+
+fn base_run(alg: Algorithm, rounds: usize) -> TrainingRun {
+    let mut run = TrainingRun::new(alg, LrSchedule::Const { lr: 0.05 }, rounds);
+    run.eval_every = 3;
+    run.seed = 17;
+    run
+}
+
+fn sign_vote(rounds: usize) -> TrainingRun {
+    base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        rounds,
+    )
+}
+
+/// Field-exact equality, ledger included (wire bytes and stragglers too).
+fn assert_identical(a: &RunHistory, b: &RunHistory) {
+    assert_eq!(a.final_params, b.final_params, "final params");
+    assert_eq!(a.reports, b.reports, "round reports");
+    assert_eq!(a.ledger, b.ledger, "communication ledger");
+}
+
+fn snap_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("sparsignd-resume-{}-{tag}.snap", std::process::id()))
+}
+
+#[test]
+fn in_process_snapshot_and_resume_are_bit_identical() {
+    let e = env(10);
+    let mut rng = Pcg64::seed_from(43);
+    let init = e.init_params(&mut rng);
+    let run = sign_vote(6);
+    let path = snap_path("inproc");
+
+    let plain = run.run(&e, init.clone(), &|p| e.evaluate(p));
+    // Snapshotting must not perturb the run…
+    let policy = SnapshotPolicy::every(&path, 4);
+    let snapped = run
+        .run_snapshotted(&e, init.clone(), &|p| e.evaluate(p), &policy)
+        .expect("snapshotted run");
+    assert_identical(&plain, &snapped);
+    // …and resuming from the round-4 snapshot replays rounds 4..6 onto
+    // the restored state, bit-identically.
+    let snap = CoordinatorSnapshot::load(&path).expect("load snapshot");
+    assert_eq!(snap.next_round(), 4);
+    let resumed = run.resume_from(&e, snap, &|p| e.evaluate(p), None).expect("resume");
+    assert_identical(&plain, &resumed);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn serial_and_pool_engines_resume_identically() {
+    let e = env(8);
+    let mut rng = Pcg64::seed_from(44);
+    let init = e.init_params(&mut rng);
+    let path = snap_path("serial");
+
+    let mut serial = sign_vote(5);
+    serial.threads = Some(1);
+    let plain = serial.run(&e, init.clone(), &|p| e.evaluate(p));
+    let policy = SnapshotPolicy::every(&path, 2);
+    serial
+        .run_snapshotted(&e, init.clone(), &|p| e.evaluate(p), &policy)
+        .expect("serial snapshotted run");
+    // The last periodic snapshot lands at round 4 (2 and 4 are due).
+    let snap = CoordinatorSnapshot::load(&path).expect("load");
+    assert_eq!(snap.next_round(), 4);
+    // Resume on the *pool* engine: the snapshot is engine-agnostic.
+    let mut pooled = sign_vote(5);
+    pooled.threads = Some(4);
+    let resumed = pooled.resume_from(&e, snap, &|p| e.evaluate(p), None).expect("resume");
+    assert_identical(&plain, &resumed);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn partial_participation_resume_continues_the_selection_stream() {
+    let e = env(10);
+    let mut rng = Pcg64::seed_from(45);
+    let init = e.init_params(&mut rng);
+    let mut run = sign_vote(6);
+    run.participation = 0.5;
+    let path = snap_path("partial");
+
+    let plain = run.run(&e, init.clone(), &|p| e.evaluate(p));
+    let policy = SnapshotPolicy::every(&path, 3);
+    run.run_snapshotted(&e, init.clone(), &|p| e.evaluate(p), &policy).expect("snapshotted");
+    let snap = CoordinatorSnapshot::load(&path).expect("load");
+    assert_eq!(snap.next_round(), 3);
+    // Rounds 3..6 draw fresh selections from the restored RNG stream;
+    // any drift would change which workers participate and diverge the
+    // reports immediately.
+    let resumed = run.resume_from(&e, snap, &|p| e.evaluate(p), None).expect("resume");
+    assert_identical(&plain, &resumed);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn ef_sparsign_resume_restores_the_server_residual() {
+    let e = env(8);
+    let mut rng = Pcg64::seed_from(46);
+    let init = e.init_params(&mut rng);
+    let run = base_run(
+        Algorithm::EfSparsign {
+            b_local: 10.0,
+            b_global: 1.0,
+            tau: 2,
+            server_lr_scale: None,
+            server_ef: true,
+        },
+        6,
+    );
+    let path = snap_path("ef");
+
+    let plain = run.run(&e, init.clone(), &|p| e.evaluate(p));
+    let policy = SnapshotPolicy::every(&path, 3);
+    run.run_snapshotted(&e, init.clone(), &|p| e.evaluate(p), &policy).expect("snapshotted");
+    let snap = CoordinatorSnapshot::load(&path).expect("load");
+    assert!(snap.residual.is_some(), "EF snapshot must carry the eq. (8) residual");
+    let resumed = run.resume_from(&e, snap, &|p| e.evaluate(p), None).expect("resume");
+    assert_identical(&plain, &resumed);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn stateful_worker_compressors_cannot_snapshot() {
+    let e = env(6);
+    let mut rng = Pcg64::seed_from(47);
+    let init = e.init_params(&mut rng);
+    let run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::WorkerEf(Box::new(CompressorKind::Sign)),
+            aggregation: AggregationRule::ScaledSign,
+        },
+        3,
+    );
+    let policy = SnapshotPolicy::every(snap_path("stateful"), 1);
+    let err = run
+        .run_snapshotted(&e, init, &|p| e.evaluate(p), &policy)
+        .expect_err("worker-side state cannot ride a coordinator snapshot");
+    assert!(matches!(err, SnapshotError::Unsupported(_)), "{err}");
+}
+
+#[test]
+fn resume_refuses_a_different_run() {
+    let e = env(8);
+    let mut rng = Pcg64::seed_from(48);
+    let init = e.init_params(&mut rng);
+    let run = sign_vote(6);
+    let path = snap_path("fingerprint");
+    let policy = SnapshotPolicy::every(&path, 3);
+    run.run_snapshotted(&e, init, &|p| e.evaluate(p), &policy).expect("snapshotted");
+    let snap = CoordinatorSnapshot::load(&path).expect("load");
+
+    // Same shape, different seed ⇒ different trajectory ⇒ refused.
+    let mut other = sign_vote(6);
+    other.seed = 18;
+    let err = other
+        .resume_from(&e, snap.clone(), &|p| e.evaluate(p), None)
+        .expect_err("seed mismatch must be refused");
+    assert!(matches!(err, SnapshotError::Incompatible(_)), "{err}");
+
+    // Different round budget ⇒ refused before the fingerprint even runs.
+    let shorter = sign_vote(5);
+    let err = shorter
+        .resume_from(&e, snap.clone(), &|p| e.evaluate(p), None)
+        .expect_err("round-budget mismatch must be refused");
+    assert!(matches!(err, SnapshotError::Incompatible(_)), "{err}");
+
+    // Same run config, same shape (d, M) — but the dataset partition was
+    // rebuilt with a different Dirichlet α. Only the environment
+    // fingerprint can see this drift, and it must refuse.
+    let drifted = env_with_alpha(8, 5.0);
+    let err = run
+        .resume_from(&drifted, snap, &|p| drifted.evaluate(p), None)
+        .expect_err("environment drift must be refused");
+    assert!(matches!(err, SnapshotError::Incompatible(_)), "{err}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The full elastic path over a real socket: coordinator 1 serves three
+/// rounds, snapshots, drains (connections closed, no `Fin`); the fleet
+/// reconnects with backoff; coordinator 2 — a fresh bind on a fresh
+/// endpoint, exactly like a restarted process — resumes from the
+/// snapshot, re-rosters the same virtual clients and finishes the run.
+/// The stitched history must be bit-identical to an uninterrupted
+/// loopback run.
+fn drain_and_resume(uds: bool, tag: &str) {
+    let workers = 12;
+    let rounds = 6;
+    let e = env(workers);
+    let mut rng = Pcg64::seed_from(49);
+    let init = e.init_params(&mut rng);
+    let run = sign_vote(rounds);
+    let agents = 3;
+    let path = snap_path(tag);
+
+    // Uninterrupted reference (same agent fan-out so the per-connection
+    // downlink wire bytes match too).
+    let fleet_opts = FleetOptions { agents, ..FleetOptions::default() };
+    let eval = |p: &[f32]| e.evaluate(p);
+    let (reference, _) = run_loopback(
+        &run,
+        &e,
+        init.clone(),
+        &eval,
+        ServeOptions::new(loopback_endpoint(uds)),
+        &fleet_opts,
+    )
+    .expect("uninterrupted loopback");
+
+    // Interrupted: coordinator 1 drains after round 3.
+    let mut opts1 = ServeOptions::new(loopback_endpoint(uds));
+    opts1.snapshot = Some(SnapshotPolicy::on_drain(&path));
+    opts1.drain_after = Some(3);
+    let c1 = NetCoordinator::bind(opts1).expect("bind c1");
+    let src = Mutex::new(c1.local_endpoint().clone());
+    let elastic_opts = FleetOptions {
+        agents,
+        reconnect: Some(Duration::from_secs(30)),
+        ..FleetOptions::default()
+    };
+
+    let mut resumed: Option<RunHistory> = None;
+    let mut stats = None;
+    std::thread::scope(|s| {
+        let h1 = s.spawn(|| c1.serve(&run, workers, init.clone(), &eval));
+        let fleet = s.spawn(|| run_fleet_src(&src, &run, &e, &elastic_opts));
+
+        // Coordinator 1 exits through the drain path with the snapshot
+        // on disk and its connections closed.
+        match h1.join().expect("c1 thread") {
+            Err(NetError::Drained { rounds_done }) => assert_eq!(rounds_done, 3),
+            other => panic!("expected drain, got {other:?}"),
+        }
+        let snap = CoordinatorSnapshot::load(&path).expect("drain snapshot");
+        assert_eq!(snap.next_round(), 3);
+
+        // Coordinator 2: fresh bind (fresh endpoint — a restarted
+        // process), resume from the snapshot, publish the new address.
+        let mut opts2 = ServeOptions::new(loopback_endpoint(uds));
+        opts2.resume = Some(snap);
+        let c2 = NetCoordinator::bind(opts2).expect("bind c2");
+        *src.lock().unwrap() = c2.local_endpoint().clone();
+        let hist = c2.serve(&run, workers, init.clone(), &eval).expect("resumed serve");
+        resumed = Some(hist);
+        stats = Some(fleet.join().expect("fleet thread").expect("fleet"));
+    });
+
+    let resumed = resumed.expect("resumed history");
+    let stats = stats.expect("fleet stats");
+    assert!(stats.reconnects >= 1, "the fleet must have reconnected: {stats:?}");
+    assert_eq!(stats.rejected, 0, "resume must not provoke rejects: {stats:?}");
+    assert_identical(&reference, &resumed);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn coordinator_drain_and_resume_is_bit_identical_over_tcp() {
+    drain_and_resume(false, "tcp");
+}
+
+#[cfg(unix)]
+#[test]
+fn coordinator_drain_and_resume_is_bit_identical_over_uds() {
+    drain_and_resume(true, "uds");
+}
+
+/// A fleet built from drifted flags (different seed here — the same
+/// holds for schedule/compressor/α/batch drift) is hung up on at
+/// rendezvous: wire v2's `Hello` carries the run-config + environment
+/// fingerprints, so the coordinator refuses instead of silently
+/// diverging the run.
+#[test]
+fn drifted_fleet_is_refused_at_rendezvous() {
+    let e = env(6);
+    let mut rng = Pcg64::seed_from(50);
+    let init = e.init_params(&mut rng);
+    let run = sign_vote(3);
+    let mut opts = ServeOptions::new(loopback_endpoint(false));
+    opts.rendezvous_timeout = Duration::from_secs(3);
+    let c = NetCoordinator::bind(opts).expect("bind");
+    let ep = c.local_endpoint().clone();
+    std::thread::scope(|s| {
+        let eval = |p: &[f32]| e.evaluate(p);
+        let h = s.spawn(|| c.serve(&run, 6, init.clone(), &eval));
+        let mut drifted = sign_vote(3);
+        drifted.seed = 99;
+        let fleet_opts = FleetOptions { agents: 2, ..FleetOptions::default() };
+        let err = run_fleet_src(&ep, &drifted, &e, &fleet_opts)
+            .expect_err("drifted fleet must be refused");
+        assert!(matches!(err, NetError::Disconnected | NetError::Io(_)), "{err}");
+        // The coordinator never rendezvouses with a drifted fleet.
+        let serve_err = h.join().expect("serve thread").expect_err("rendezvous must time out");
+        assert!(matches!(serve_err, NetError::Protocol(_)), "{serve_err}");
+    });
+}
+
+/// Reconnect gating: replaying rounds into stateful worker compressors
+/// would double-advance their state, so the fleet refuses up front.
+#[test]
+fn reconnect_with_stateful_compressor_is_refused() {
+    let e = env(4);
+    let run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::WorkerEf(Box::new(CompressorKind::Sign)),
+            aggregation: AggregationRule::ScaledSign,
+        },
+        2,
+    );
+    let opts = FleetOptions {
+        reconnect: Some(Duration::from_secs(1)),
+        ..FleetOptions::default()
+    };
+    let ep = Endpoint::Tcp("127.0.0.1:1".into()); // never dialed
+    let err = run_fleet_src(&ep, &run, &e, &opts).expect_err("must refuse");
+    assert!(matches!(err, NetError::Config(_)), "{err}");
+}
