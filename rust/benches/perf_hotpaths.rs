@@ -439,6 +439,7 @@ fn bench_engine(rep: &mut Report, d: usize, m: usize, rounds: usize) {
         eval_every: 0,
         seed: 9,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads,
     };
@@ -512,6 +513,7 @@ fn bench_engine_10k(rep: &mut Report, smoke: bool) {
         eval_every: 0,
         seed: 10,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads: None,
     };
@@ -593,6 +595,7 @@ fn bench_transport(rep: &mut Report, smoke: bool) {
         eval_every: 0,
         seed: 12,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads: None,
     };
@@ -678,7 +681,9 @@ fn bench_snapshot(rep: &mut Report, smoke: bool) {
         workers: 100,
         rounds_total: rounds_done + 1,
         phase: SnapPhase::Broadcast(rounds_done - 1),
-        select_rng: Pcg64::seed_from(32).to_raw(),
+        selection: sparsignd::coordinator::SelectionSnapshot::LegacyRaw(
+            Pcg64::seed_from(32).to_raw(),
+        ),
         params,
         residual: Some(residual),
         reports,

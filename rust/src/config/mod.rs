@@ -6,7 +6,7 @@
 //! participation, model, algorithm roster, rounds, schedules, seeds and
 //! scale knobs. Every experiment harness consumes an [`ExperimentConfig`].
 
-use crate::coordinator::Algorithm;
+use crate::coordinator::{Algorithm, AttackPlan, SelectionMode};
 pub use crate::coordinator::Algorithm as AlgorithmSpec;
 use crate::data::SyntheticSpec;
 use crate::model::ModelKind;
@@ -96,6 +96,13 @@ pub struct ExperimentConfig {
     pub data_scale: f64,
     /// Optional feature-dimension override (fast presets shrink the model).
     pub dim_override: Option<usize>,
+    /// Byzantine attack spec (the [`AttackPlan::parse`] grammar, e.g.
+    /// `collusive:30%` or `signflip:8,rescale:4:1e4`); `None` = honest run.
+    /// The plan itself is built per seed at run time so cohort membership
+    /// varies across the seed sweep.
+    pub attack: Option<String>,
+    /// Worker-selection stream (legacy Pcg64 vs hardened committed-seed).
+    pub selection: SelectionMode,
 }
 
 impl ExperimentConfig {
@@ -138,6 +145,8 @@ impl ExperimentConfig {
             targets: vec![0.5, 0.7],
             data_scale: 1.0,
             dim_override: None,
+            attack: None,
+            selection: SelectionMode::default(),
         }
     }
 
@@ -186,6 +195,13 @@ impl ExperimentConfig {
                     other => return Err(format!("unknown schedule '{other}'")),
                 };
             }
+            "attack" => {
+                self.attack = match value {
+                    "none" | "" => None,
+                    spec => Some(spec.to_string()),
+                };
+            }
+            "selection" => self.selection = parse_selection(value)?,
             other => return Err(format!("unknown config key '{other}'")),
         }
         Ok(())
@@ -234,7 +250,22 @@ impl ExperimentConfig {
         if !(self.data_scale > 0.0) {
             return Err("data_scale must be > 0".into());
         }
+        if let Some(spec) = &self.attack {
+            // Parse against the configured population so a bad spec fails
+            // at validation, not mid-sweep.
+            AttackPlan::parse(spec, self.workers, 0)
+                .map_err(|e| format!("attack spec: {e}"))?;
+        }
         Ok(())
+    }
+}
+
+/// Shared `--selection` / `selection =` value grammar.
+pub fn parse_selection(value: &str) -> Result<SelectionMode, String> {
+    match value {
+        "legacy" | "pcg" => Ok(SelectionMode::Legacy),
+        "committed" | "hardened" => Ok(SelectionMode::Committed),
+        other => Err(format!("unknown selection mode '{other}' (legacy|committed)")),
     }
 }
 
@@ -257,11 +288,29 @@ mod tests {
         c.apply_override("seeds", "3, 4, 5").unwrap();
         c.apply_override("task", "cifar100").unwrap();
         c.apply_override("schedule", "cifar100").unwrap();
+        c.apply_override("attack", "collusive:25%").unwrap();
+        c.apply_override("selection", "committed").unwrap();
         assert_eq!(c.alpha, 0.7);
         assert_eq!(c.rounds, 42);
         assert_eq!(c.seeds, vec![3, 4, 5]);
         assert_eq!(c.task, TaskSpec::Cifar100Like);
         assert_eq!(c.schedule, ScheduleKind::PaperCifar100);
+        assert_eq!(c.attack.as_deref(), Some("collusive:25%"));
+        assert_eq!(c.selection, SelectionMode::Committed);
+        c.apply_override("attack", "none").unwrap();
+        assert!(c.attack.is_none());
+        assert!(c.apply_override("selection", "psychic").is_err());
+    }
+
+    #[test]
+    fn bad_attack_spec_fails_validation_not_midrun() {
+        let mut c = ExperimentConfig::fast_preset();
+        c.attack = Some("warp:3".into());
+        assert!(c.validate().unwrap_err().contains("attack spec"));
+        c.attack = Some(format!("signflip:{}", c.workers + 1));
+        assert!(c.validate().is_err());
+        c.attack = Some("collusive:25%".into());
+        assert!(c.validate().is_ok());
     }
 
     #[test]

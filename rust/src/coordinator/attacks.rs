@@ -1,45 +1,285 @@
-//! Adversarial worker behaviours.
+//! Adversarial worker behaviours (DESIGN.md §13).
 //!
 //! Remark 2(4) of the paper argues sparsign is "robust against re-scaling
 //! attacks that manipulate the magnitudes" because, unlike TernGrad /
 //! QSGD, no norm is exchanged — a malicious worker can blow up its
 //! gradient magnitude yet still contributes at most ±1 per coordinate.
-//! These attack models let the experiment suite quantify that claim
-//! (`examples/attack_robustness.rs`).
+//! The attack model here lets the experiment suite quantify that claim
+//! (`sparsignd train --attack …`, `experiments::attack_sweep_configs`)
+//! and lets the transport tests exercise the coordinator's protocol
+//! defenses under real framing (`tests/byzantine_wire.rs`).
+//!
+//! ## Composable cohorts
+//!
+//! An [`AttackPlan`] is a set of [`Cohort`]s, each binding one [`Attack`]
+//! to an explicit sorted member list. Membership is either a prefix of
+//! worker ids (the historical compat form) or a **seeded random subset**
+//! ([`Cohort::sampled`]) so attacked experiments compose with Dirichlet
+//! non-IID partitions without always hitting the same data shards.
+//! Cohorts must be disjoint; the first matching cohort governs a worker.
+//!
+//! ## Gradient vs. protocol attacks
+//!
+//! * Gradient-level attacks ([`Attack::Rescale`], [`Attack::SignFlip`],
+//!   [`Attack::Garbage`], [`Attack::CollusiveSignFlip`]) mutate the
+//!   worker's gradient before compression. They run identically in the
+//!   in-process engines and the `net` client fleet — a wire run of an
+//!   attacked configuration stays bit-identical to the engine run.
+//! * Protocol-level attacks ([`Attack::Straggle`], [`Attack::Equivocate`])
+//!   misbehave at the transport: delaying past the round deadline,
+//!   re-sending duplicate frames, replaying stale round indices. They are
+//!   enacted by the malicious-agent mode of `net::client` and answered by
+//!   the coordinator's typed rejects; in the in-process engines (which
+//!   have no frames to abuse) they degenerate to honest behaviour.
 
-/// Attack applied to a malicious worker's gradient before compression.
+use crate::util::rng::Pcg64;
+
+/// Attack behaviour assigned to a cohort of malicious workers.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Attack {
-    /// Multiply the gradient by `factor` (re-scaling attack; Jin et al.
-    /// 2020). Defeats magnitude-sharing compressors whose decoded values
-    /// scale with ‖g‖.
+    /// Multiply the gradient by `factor` (re-scaling / scale-inflation
+    /// attack; Jin et al. 2020). Defeats magnitude-sharing compressors
+    /// whose decoded values scale with ‖g‖.
     Rescale { factor: f32 },
-    /// Flip the gradient sign (Byzantine sign-flip).
+    /// Flip the gradient sign (uncoordinated Byzantine sign-flip).
     SignFlip,
     /// Replace the gradient with noise of the given magnitude.
     Garbage { magnitude: f32 },
+    /// Colluding sign-flip: every cohort member replaces its gradient
+    /// with the *same* adversarial ±1 direction for the round, drawn from
+    /// a shared RNG derived as `(cohort seed, round)` — no communication
+    /// needed, so the collusion works identically in-process and across a
+    /// distributed fleet. This is the strongest vote-stuffing shape: the
+    /// cohort never splits its own votes.
+    CollusiveSignFlip,
+    /// Adaptive straggler (protocol-level): submits its update
+    /// `extra_ms` *after* the round deadline the coordinator announced,
+    /// drawing a straggler mark and a typed `Late`/`BadRound` reject
+    /// (`Late` if the round index is still current, `BadRound` once the
+    /// coordinator has moved on). Honest gradient, hostile timing.
+    Straggle { extra_ms: u64 },
+    /// Equivocation (protocol-level): sends its honest update, then a
+    /// duplicate of it, then a replay against a stale round index — each
+    /// answered by a typed reject (`Duplicate`, `BadRound`/`Late`)
+    /// without perturbing the accepted round state.
+    Equivocate,
 }
 
-/// Which workers are malicious: the first `count` worker ids (the engine
-/// shuffles worker identity at partition time, so this is a uniform
-/// random subset of the data distribution).
-#[derive(Clone, Copy, Debug)]
-pub struct AttackPlan {
+impl Attack {
+    /// True for attacks enacted at the transport rather than on the
+    /// gradient. Protocol attacks leave the gradient honest.
+    pub fn is_protocol_level(&self) -> bool {
+        matches!(self, Attack::Straggle { .. } | Attack::Equivocate)
+    }
+}
+
+/// One attack bound to an explicit, sorted, deduplicated member set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cohort {
     pub attack: Attack,
-    pub malicious: usize,
+    /// Sorted worker ids this cohort controls.
+    members: Vec<usize>,
+    /// Seed for cohort-coordinated randomness (collusive direction).
+    seed: u64,
+}
+
+impl Cohort {
+    /// Cohort over an explicit member list (sorted + deduplicated).
+    pub fn explicit(attack: Attack, mut members: Vec<usize>, seed: u64) -> Self {
+        members.sort_unstable();
+        members.dedup();
+        Self { attack, members, seed }
+    }
+
+    /// The historical prefix form: workers `0..count`.
+    pub fn prefix(attack: Attack, count: usize) -> Self {
+        Self { attack, members: (0..count).collect(), seed: 0 }
+    }
+
+    /// Seeded random subset of `count` workers out of a population of
+    /// `total` — the form that composes with non-IID partitions without
+    /// always attacking the same data shards.
+    pub fn sampled(attack: Attack, total: usize, count: usize, seed: u64) -> Self {
+        assert!(count <= total, "cohort of {count} from {total} workers");
+        let mut rng = Pcg64::new(seed, 0xc0_4072);
+        Self { attack, members: rng.sample_indices(total, count), seed }
+    }
+
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    pub fn contains(&self, worker: usize) -> bool {
+        self.members.binary_search(&worker).is_ok()
+    }
+}
+
+/// Which workers are malicious and how: a composable set of disjoint
+/// attack cohorts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttackPlan {
+    cohorts: Vec<Cohort>,
 }
 
 impl AttackPlan {
-    pub fn is_malicious(&self, worker: usize) -> bool {
-        worker < self.malicious
+    /// Compat constructor: one cohort over the worker-id prefix
+    /// `0..malicious` — the original `AttackPlan { attack, malicious }`
+    /// semantics (the engine shuffles worker identity at partition time,
+    /// so a prefix is *a* uniform subset, just always the same one).
+    pub fn new(attack: Attack, malicious: usize) -> Self {
+        Self { cohorts: vec![Cohort::prefix(attack, malicious)] }
     }
 
-    /// Apply the attack in place to a malicious worker's gradient.
-    pub fn apply(&self, worker: usize, g: &mut [f32], rng: &mut crate::util::rng::Pcg64) {
-        if !self.is_malicious(worker) {
-            return;
+    /// One seeded-random cohort of `count` workers from `total`.
+    pub fn sampled(attack: Attack, total: usize, count: usize, seed: u64) -> Self {
+        Self { cohorts: vec![Cohort::sampled(attack, total, count, seed)] }
+    }
+
+    /// Compose multiple cohorts. Panics if any worker appears in two
+    /// cohorts — a worker has one behaviour.
+    pub fn composed(cohorts: Vec<Cohort>) -> Self {
+        let mut all: Vec<usize> = cohorts.iter().flat_map(|c| c.members.iter().copied()).collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "attack cohorts must be disjoint");
+        Self { cohorts }
+    }
+
+    pub fn cohorts(&self) -> &[Cohort] {
+        &self.cohorts
+    }
+
+    pub fn is_malicious(&self, worker: usize) -> bool {
+        self.cohorts.iter().any(|c| c.contains(worker))
+    }
+
+    /// The attack governing `worker`, if any.
+    pub fn attack_of(&self, worker: usize) -> Option<Attack> {
+        self.cohorts.iter().find(|c| c.contains(worker)).map(|c| c.attack)
+    }
+
+    /// Total malicious workers across all cohorts.
+    pub fn malicious_count(&self) -> usize {
+        self.cohorts.iter().map(|c| c.members.len()).sum()
+    }
+
+    /// True when any cohort misbehaves at the protocol level (the
+    /// transport tests skip bit-identity diffs for these — timing and
+    /// rejects are inherently nondeterministic).
+    pub fn has_protocol_attacks(&self) -> bool {
+        self.cohorts.iter().any(|c| c.attack.is_protocol_level())
+    }
+
+    /// Parse a CLI/config attack spec into a plan over `workers` ids.
+    ///
+    /// Grammar: comma-separated cohorts of `kind:count[:param]`, where
+    /// `count` is an absolute worker count or a `P%` fraction of the
+    /// population, and `param` is the kind's knob:
+    ///
+    /// | kind         | param (default)        |
+    /// |--------------|------------------------|
+    /// | `rescale`    | factor (`100`)         |
+    /// | `signflip`   | —                      |
+    /// | `garbage`    | magnitude (`1`)        |
+    /// | `collusive`  | —                      |
+    /// | `straggle`   | extra ms (`250`)       |
+    /// | `equivocate` | —                      |
+    ///
+    /// e.g. `--attack collusive:30%` or `--attack signflip:8,equivocate:4`.
+    /// Cohort membership is a seeded shuffle of the population carved into
+    /// disjoint consecutive chunks, so composed specs never overlap and
+    /// the same `(spec, workers, seed)` always yields the same plan on
+    /// both sides of a wire run.
+    pub fn parse(spec: &str, workers: usize, seed: u64) -> Result<Self, String> {
+        let mut wants: Vec<(Attack, usize)> = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(format!("empty cohort in attack spec '{spec}'"));
+            }
+            let mut f = part.split(':');
+            let kind = f.next().unwrap_or("");
+            let count_s = f
+                .next()
+                .ok_or_else(|| format!("cohort '{part}' needs a count: kind:count[:param]"))?;
+            let param = f.next();
+            if f.next().is_some() {
+                return Err(format!("too many ':' fields in cohort '{part}'"));
+            }
+            let count = if let Some(pct) = count_s.strip_suffix('%') {
+                let p: f64 = pct
+                    .parse()
+                    .map_err(|_| format!("bad percentage '{count_s}' in cohort '{part}'"))?;
+                if !(0.0..=100.0).contains(&p) {
+                    return Err(format!("percentage '{count_s}' out of 0..=100"));
+                }
+                ((workers as f64 * p / 100.0).round() as usize).min(workers)
+            } else {
+                count_s
+                    .parse()
+                    .map_err(|_| format!("bad count '{count_s}' in cohort '{part}'"))?
+            };
+            let parse_param = |default: f64| -> Result<f64, String> {
+                match param {
+                    None => Ok(default),
+                    Some(v) => v
+                        .parse()
+                        .map_err(|_| format!("bad parameter '{v}' in cohort '{part}'")),
+                }
+            };
+            let attack = match kind {
+                "rescale" => Attack::Rescale { factor: parse_param(100.0)? as f32 },
+                "signflip" => Attack::SignFlip,
+                "garbage" => Attack::Garbage { magnitude: parse_param(1.0)? as f32 },
+                "collusive" => Attack::CollusiveSignFlip,
+                "straggle" => Attack::Straggle { extra_ms: parse_param(250.0)? as u64 },
+                "equivocate" => Attack::Equivocate,
+                other => return Err(format!("unknown attack kind '{other}'")),
+            };
+            if param.is_some()
+                && matches!(
+                    attack,
+                    Attack::SignFlip | Attack::CollusiveSignFlip | Attack::Equivocate
+                )
+            {
+                return Err(format!("'{kind}' takes no parameter"));
+            }
+            wants.push((attack, count));
         }
-        match self.attack {
+        let total: usize = wants.iter().map(|(_, n)| n).sum();
+        if total > workers {
+            return Err(format!(
+                "attack spec claims {total} workers but the population is {workers}"
+            ));
+        }
+        // One seeded shuffle, carved into disjoint consecutive chunks.
+        let mut ids: Vec<usize> = (0..workers).collect();
+        let mut rng = Pcg64::new(seed ^ 0xbad_c0de, 0x900d);
+        for i in (1..ids.len()).rev() {
+            ids.swap(i, rng.index(i + 1));
+        }
+        let mut cohorts = Vec::new();
+        let mut at = 0;
+        for (i, (attack, n)) in wants.into_iter().enumerate() {
+            cohorts.push(Cohort::explicit(
+                attack,
+                ids[at..at + n].to_vec(),
+                seed.wrapping_add(i as u64),
+            ));
+            at += n;
+        }
+        Ok(AttackPlan::composed(cohorts))
+    }
+
+    /// Apply the gradient-level attack (if any) in place to `worker`'s
+    /// round-`t` gradient. Protocol-level attacks leave the gradient
+    /// untouched here — their misbehaviour happens at the transport.
+    pub fn apply(&self, t: usize, worker: usize, g: &mut [f32], rng: &mut Pcg64) {
+        let Some(cohort) = self.cohorts.iter().find(|c| c.contains(worker)) else {
+            return;
+        };
+        match cohort.attack {
             Attack::Rescale { factor } => {
                 for v in g.iter_mut() {
                     *v *= factor;
@@ -55,6 +295,21 @@ impl AttackPlan {
                     *v = rng.normal_f32(0.0, magnitude);
                 }
             }
+            Attack::CollusiveSignFlip => {
+                // Shared direction: every member derives the same stream
+                // from (cohort seed, round) — coordination without
+                // communication, identical across engines and fleets.
+                let mut shared = Pcg64::new(cohort.seed ^ 0xc0_11_0d_e5, t as u64);
+                let mut bits = 0u64;
+                for (i, v) in g.iter_mut().enumerate() {
+                    if i % 64 == 0 {
+                        bits = shared.next_u64();
+                    }
+                    *v = if bits & 1 == 1 { 1.0 } else { -1.0 };
+                    bits >>= 1;
+                }
+            }
+            Attack::Straggle { .. } | Attack::Equivocate => {}
         }
     }
 }
@@ -66,31 +321,152 @@ mod tests {
 
     #[test]
     fn rescale_only_hits_malicious() {
-        let plan = AttackPlan { attack: Attack::Rescale { factor: 100.0 }, malicious: 2 };
+        let plan = AttackPlan::new(Attack::Rescale { factor: 100.0 }, 2);
         let mut rng = Pcg64::seed_from(1);
         let mut g = vec![1.0, -2.0];
-        plan.apply(1, &mut g, &mut rng);
+        plan.apply(0, 1, &mut g, &mut rng);
         assert_eq!(g, vec![100.0, -200.0]);
         let mut g2 = vec![1.0, -2.0];
-        plan.apply(2, &mut g2, &mut rng);
+        plan.apply(0, 2, &mut g2, &mut rng);
         assert_eq!(g2, vec![1.0, -2.0]);
     }
 
     #[test]
     fn sign_flip() {
-        let plan = AttackPlan { attack: Attack::SignFlip, malicious: 1 };
+        let plan = AttackPlan::new(Attack::SignFlip, 1);
         let mut rng = Pcg64::seed_from(2);
         let mut g = vec![1.0, -2.0, 0.0];
-        plan.apply(0, &mut g, &mut rng);
+        plan.apply(3, 0, &mut g, &mut rng);
         assert_eq!(g, vec![-1.0, 2.0, 0.0]);
     }
 
     #[test]
     fn garbage_replaces_gradient() {
-        let plan = AttackPlan { attack: Attack::Garbage { magnitude: 5.0 }, malicious: 1 };
+        let plan = AttackPlan::new(Attack::Garbage { magnitude: 5.0 }, 1);
         let mut rng = Pcg64::seed_from(3);
         let mut g = vec![1.0; 64];
-        plan.apply(0, &mut g, &mut rng);
+        plan.apply(0, 0, &mut g, &mut rng);
         assert!(g.iter().any(|&v| v != 1.0));
+    }
+
+    #[test]
+    fn sampled_cohort_is_seeded_subset_not_prefix() {
+        let a = Cohort::sampled(Attack::SignFlip, 100, 20, 7);
+        let b = Cohort::sampled(Attack::SignFlip, 100, 20, 7);
+        let c = Cohort::sampled(Attack::SignFlip, 100, 20, 8);
+        assert_eq!(a, b, "seeded cohort must be deterministic");
+        assert_ne!(a.members(), c.members(), "different seeds, different cohorts");
+        assert_eq!(a.members().len(), 20);
+        for w in a.members().windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // Not the prefix (overwhelmingly likely for any decent sampler).
+        assert_ne!(a.members(), (0..20).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    fn collusive_members_share_the_round_direction() {
+        let plan = AttackPlan::sampled(Attack::CollusiveSignFlip, 10, 4, 5);
+        let members: Vec<usize> = plan.cohorts()[0].members().to_vec();
+        let mut rng = Pcg64::seed_from(4);
+        let mut first: Option<Vec<f32>> = None;
+        for &w in &members {
+            let mut g = vec![0.5; 100];
+            plan.apply(3, w, &mut g, &mut rng);
+            assert!(g.iter().all(|&v| v == 1.0 || v == -1.0));
+            match &first {
+                None => first = Some(g),
+                Some(f) => assert_eq!(&g, f, "cohort members must agree on the direction"),
+            }
+        }
+        // Different rounds get different directions.
+        let w = members[0];
+        let mut g3 = vec![0.5; 100];
+        let mut g4 = vec![0.5; 100];
+        plan.apply(3, w, &mut g3, &mut rng);
+        plan.apply(4, w, &mut g4, &mut rng);
+        assert_ne!(g3, g4);
+    }
+
+    #[test]
+    fn protocol_attacks_leave_the_gradient_honest() {
+        for attack in [Attack::Straggle { extra_ms: 50 }, Attack::Equivocate] {
+            let plan = AttackPlan::new(attack, 2);
+            assert!(plan.has_protocol_attacks());
+            let mut rng = Pcg64::seed_from(6);
+            let mut g = vec![1.0, -2.0, 3.0];
+            plan.apply(0, 1, &mut g, &mut rng);
+            assert_eq!(g, vec![1.0, -2.0, 3.0]);
+        }
+        assert!(!AttackPlan::new(Attack::SignFlip, 2).has_protocol_attacks());
+    }
+
+    #[test]
+    fn composed_cohorts_dispatch_by_membership() {
+        let plan = AttackPlan::composed(vec![
+            Cohort::explicit(Attack::SignFlip, vec![0, 2], 1),
+            Cohort::explicit(Attack::Rescale { factor: 10.0 }, vec![5], 1),
+        ]);
+        assert_eq!(plan.attack_of(2), Some(Attack::SignFlip));
+        assert_eq!(plan.attack_of(5), Some(Attack::Rescale { factor: 10.0 }));
+        assert_eq!(plan.attack_of(1), None);
+        assert_eq!(plan.malicious_count(), 3);
+        let mut rng = Pcg64::seed_from(7);
+        let mut g = vec![1.0];
+        plan.apply(0, 5, &mut g, &mut rng);
+        assert_eq!(g, vec![10.0]);
+    }
+
+    #[test]
+    fn parse_builds_disjoint_seeded_cohorts() {
+        let plan = AttackPlan::parse("collusive:30%,equivocate:4", 100, 7).expect("parse");
+        assert_eq!(plan.cohorts().len(), 2);
+        assert_eq!(plan.cohorts()[0].attack, Attack::CollusiveSignFlip);
+        assert_eq!(plan.cohorts()[0].members().len(), 30);
+        assert_eq!(plan.cohorts()[1].attack, Attack::Equivocate);
+        assert_eq!(plan.cohorts()[1].members().len(), 4);
+        assert_eq!(plan.malicious_count(), 34);
+        // Deterministic in (spec, workers, seed); seed moves the cohorts.
+        assert_eq!(plan, AttackPlan::parse("collusive:30%,equivocate:4", 100, 7).unwrap());
+        assert_ne!(plan, AttackPlan::parse("collusive:30%,equivocate:4", 100, 8).unwrap());
+        // Not the id prefix: membership comes from a shuffle.
+        assert_ne!(plan.cohorts()[0].members(), (0..30).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    fn parse_reads_parameters_and_defaults() {
+        let plan = AttackPlan::parse("rescale:2:1e4", 10, 0).unwrap();
+        assert_eq!(plan.cohorts()[0].attack, Attack::Rescale { factor: 1e4 });
+        let plan = AttackPlan::parse("straggle:1", 10, 0).unwrap();
+        assert_eq!(plan.cohorts()[0].attack, Attack::Straggle { extra_ms: 250 });
+        let plan = AttackPlan::parse("garbage:1:5", 10, 0).unwrap();
+        assert_eq!(plan.cohorts()[0].attack, Attack::Garbage { magnitude: 5.0 });
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "signflip",
+            "signflip:2:9",
+            "collusive:30%:1",
+            "equivocate:1:1",
+            "warp:3",
+            "signflip:200%",
+            "signflip:7,rescale:5:10", // 12 > 10 workers
+            "rescale:1:abc",
+            "signflip:x",
+        ] {
+            assert!(AttackPlan::parse(bad, 10, 0).is_err(), "spec '{bad}' should be refused");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "disjoint")]
+    fn overlapping_cohorts_are_refused() {
+        AttackPlan::composed(vec![
+            Cohort::explicit(Attack::SignFlip, vec![0, 1], 1),
+            Cohort::explicit(Attack::Equivocate, vec![1, 2], 1),
+        ]);
     }
 }

@@ -21,6 +21,13 @@
 
 use crate::compressors::CompressedGrad;
 
+/// Number of distinct typed reject kinds the `net` protocol can answer a
+/// hostile or confused frame with (`net::wire::RejectReason`: BadRound,
+/// NotSelected, Duplicate, Late, UnknownWorker, WrongClient — in that
+/// index order). The ledger stays `net`-agnostic and records counts by
+/// index; the transport layer owns the mapping.
+pub const REJECT_KINDS: usize = 6;
+
 /// Per-round communication record.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RoundComm {
@@ -62,6 +69,11 @@ impl RoundComm {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommLedger {
     rounds: Vec<RoundComm>,
+    /// Cumulative typed rejects the coordinator issued, indexed by reject
+    /// kind ([`REJECT_KINDS`]). All-zero for in-process runs (nothing to
+    /// reject) and for honest transport runs; adversarial tests assert
+    /// exactly which defense fired from these counters.
+    rejects_by_kind: [u64; REJECT_KINDS],
 }
 
 impl CommLedger {
@@ -72,7 +84,33 @@ impl CommLedger {
     /// Rebuild a ledger from per-round records — the snapshot restore
     /// path (`crate::snapshot`), which revalidated the records on load.
     pub fn from_records(rounds: Vec<RoundComm>) -> Self {
-        Self { rounds }
+        Self { rounds, rejects_by_kind: [0; REJECT_KINDS] }
+    }
+
+    /// [`Self::from_records`] plus restored reject counters (snapshot v2).
+    pub fn from_records_with_rejects(
+        rounds: Vec<RoundComm>,
+        rejects_by_kind: [u64; REJECT_KINDS],
+    ) -> Self {
+        Self { rounds, rejects_by_kind }
+    }
+
+    /// Add typed-reject observations (the `net` coordinator folds the
+    /// round's per-kind counts in after each round closes).
+    pub fn add_rejects(&mut self, by_kind: &[u64; REJECT_KINDS]) {
+        for (acc, &n) in self.rejects_by_kind.iter_mut().zip(by_kind) {
+            *acc += n;
+        }
+    }
+
+    /// Cumulative typed rejects by kind index.
+    pub fn rejects_by_kind(&self) -> &[u64; REJECT_KINDS] {
+        &self.rejects_by_kind
+    }
+
+    /// Total typed rejects across all kinds.
+    pub fn total_rejects(&self) -> u64 {
+        self.rejects_by_kind.iter().sum()
     }
 
     /// Reserve room for `additional` further records (the resume path's
@@ -93,7 +131,7 @@ impl CommLedger {
     /// so steady-state rounds never reallocate the record vector
     /// (`tests/zero_alloc_round.rs`).
     pub fn with_capacity(rounds: usize) -> Self {
-        Self { rounds: Vec::with_capacity(rounds) }
+        Self { rounds: Vec::with_capacity(rounds), rejects_by_kind: [0; REJECT_KINDS] }
     }
 
     pub fn record(&mut self, round: RoundComm) {
@@ -253,5 +291,18 @@ mod tests {
     fn annotate_wire_requires_recorded_round() {
         let mut l = CommLedger::new();
         l.annotate_wire(0, 1, 1, 0);
+    }
+
+    #[test]
+    fn reject_counters_accumulate_by_kind() {
+        let mut l = CommLedger::new();
+        assert_eq!(l.total_rejects(), 0);
+        l.add_rejects(&[1, 0, 2, 0, 0, 0]);
+        l.add_rejects(&[0, 0, 1, 3, 0, 0]);
+        assert_eq!(l.rejects_by_kind(), &[1, 0, 3, 3, 0, 0]);
+        assert_eq!(l.total_rejects(), 7);
+        let restored =
+            CommLedger::from_records_with_rejects(l.records().to_vec(), *l.rejects_by_kind());
+        assert_eq!(restored, l);
     }
 }

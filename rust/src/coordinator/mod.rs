@@ -38,13 +38,14 @@ pub mod attacks;
 pub mod env;
 pub mod ledger;
 pub(crate) mod pool;
+pub mod prediction;
 pub mod sampling;
 
 pub use aggregation::{vote_counts, Aggregate, AggregationRule, VoteAccumulator, MAX_STREAM_MSGS};
-pub use attacks::{Attack, AttackPlan};
+pub use attacks::{Attack, AttackPlan, Cohort};
 pub use env::{ClassifierEnv, GradientSource, RosenbrockEnv};
-pub use ledger::{CommLedger, RoundComm};
-pub use sampling::WorkerSampler;
+pub use ledger::{CommLedger, RoundComm, REJECT_KINDS};
+pub use sampling::{SelectionMode, SelectionRng, SelectionSnapshot, WorkerSampler};
 
 use crate::compressors::{
     CompressedGrad, Compressor, CompressorKind, NormKind, PackedTernary,
@@ -203,6 +204,10 @@ pub struct TrainingRun {
     pub eval_every: usize,
     pub seed: u64,
     pub attack: Option<AttackPlan>,
+    /// How the per-round worker cohort is drawn: the legacy `Pcg64`
+    /// stream or the hardened ChaCha20 committed-seed mode
+    /// (DESIGN.md §13). Part of the config fingerprint.
+    pub selection: SelectionMode,
     /// Permit stateful (worker-EF) compressors under partial
     /// participation — off by default because that is exactly the broken
     /// configuration the paper identifies; enable only to demonstrate it.
@@ -302,7 +307,7 @@ pub(crate) struct RoundLoop<'a> {
     /// the caller does not snapshot).
     env_tag: u64,
     sampler: WorkerSampler,
-    select_rng: Pcg64,
+    select_rng: SelectionRng,
     pub(crate) server: ServerScratch,
     /// Algorithm 2's server error-feedback residual `ẽ`.
     server_residual: Vec<f32>,
@@ -334,7 +339,7 @@ impl<'a> RoundLoop<'a> {
             streaming,
             env_tag,
             sampler,
-            select_rng: run.root_rng().derive(0xfeed),
+            select_rng: SelectionRng::from_seed(run.selection, &run.root_rng(), run.seed),
             server: ServerScratch::new(d, n_max),
             server_residual: vec![0.0; d],
             params: init,
@@ -344,10 +349,18 @@ impl<'a> RoundLoop<'a> {
         }
     }
 
-    /// Draw this round's worker selection; returns the slot count.
-    pub(crate) fn select(&mut self) -> usize {
-        self.sampler.select_into(&mut self.select_rng, &mut self.server.selected);
+    /// Draw round `t`'s worker selection; returns the slot count. Legacy
+    /// mode ignores `t` (sequential stream); committed mode keys the draw
+    /// by it.
+    pub(crate) fn select(&mut self, t: usize) -> usize {
+        self.select_rng.select_into(&self.sampler, t, &mut self.server.selected);
         self.server.selected.len()
+    }
+
+    /// The selection commitment broadcast at rendezvous (all-zero in
+    /// legacy mode — there is nothing sound to commit to).
+    pub(crate) fn selection_commitment(&self) -> [u64; 4] {
+        self.select_rng.commitment()
     }
 
     /// Everything after the round's worker fan-out filled the slots.
@@ -475,7 +488,7 @@ impl<'a> RoundLoop<'a> {
             workers: self.sampler.total,
             rounds_total: self.run.rounds,
             phase: if next == 0 { SnapPhase::Standby } else { SnapPhase::Broadcast(next - 1) },
-            select_rng: self.select_rng.to_raw(),
+            selection: self.select_rng.snapshot(next as u64),
             params: self.params.clone(),
             residual: matches!(self.run.algorithm, Algorithm::EfSparsign { .. })
                 .then(|| self.server_residual.clone()),
@@ -532,8 +545,8 @@ impl<'a> RoundLoop<'a> {
                 snap.fingerprint, want
             )));
         }
-        let select_rng = Pcg64::from_raw(snap.select_rng)
-            .ok_or(SnapshotError::Malformed("even selection-rng increment"))?;
+        let select_rng = SelectionRng::restore(run.selection, run.seed, &snap.selection)
+            .map_err(SnapshotError::Malformed)?;
         let is_ef = matches!(run.algorithm, Algorithm::EfSparsign { .. });
         let server_residual = match (snap.residual, is_ef) {
             (Some(r), true) => r,
@@ -587,6 +600,7 @@ impl TrainingRun {
             eval_every: 10,
             seed: 0,
             attack: None,
+            selection: SelectionMode::default(),
             allow_stateful_with_sampling: false,
             threads: None,
         }
@@ -674,7 +688,7 @@ impl TrainingRun {
     pub fn config_fingerprint(&self, d: usize, m: usize, env_tag: u64) -> u64 {
         let desc = format!(
             "alg={:?};sched={:?};rounds={};participation={:016x};eval_every={};seed={};\
-             attack={:?};d={d};m={m};env={env_tag:016x}",
+             attack={:?};sel={:?};d={d};m={m};env={env_tag:016x}",
             self.algorithm,
             self.schedule,
             self.rounds,
@@ -682,6 +696,7 @@ impl TrainingRun {
             self.eval_every,
             self.seed,
             self.attack,
+            self.selection,
         );
         crate::snapshot::fingerprint_bytes(desc.as_bytes())
     }
@@ -740,7 +755,7 @@ impl TrainingRun {
                 let loss =
                     env.sample_grad_ws(w, params, &mut wrng, &mut scratch.grad, &mut scratch.model);
                 if let Some(plan) = &self.attack {
-                    plan.apply(w, &mut scratch.grad, &mut wrng);
+                    plan.apply(t, w, &mut scratch.grad, &mut wrng);
                 }
                 let msg = comp
                     .expect("CompressedGd worker requires its compressor slot")
@@ -766,7 +781,7 @@ impl TrainingRun {
                         first_loss = loss as f64;
                     }
                     if let Some(plan) = &self.attack {
-                        plan.apply(w, &mut scratch.grad, &mut wrng);
+                        plan.apply(t, w, &mut scratch.grad, &mut wrng);
                     }
                     let q = local.compress(&scratch.grad, &mut wrng);
                     // wm ← wm − η_L·q ; accum ← accum + q.
@@ -801,7 +816,7 @@ impl TrainingRun {
                         first_loss = loss as f64;
                     }
                     if let Some(plan) = &self.attack {
-                        plan.apply(w, &mut scratch.grad, &mut wrng);
+                        plan.apply(t, w, &mut scratch.grad, &mut wrng);
                     }
                     sgd_step(&mut scratch.wm, lr as f32, &scratch.grad);
                 }
@@ -852,7 +867,7 @@ impl TrainingRun {
         let mut wrng = root.derive(((t as u64) << 24) | w as u64);
         let loss = env.sample_grad_ws(w, params, &mut wrng, &mut scratch.grad, &mut scratch.model);
         if let Some(plan) = &self.attack {
-            plan.apply(w, &mut scratch.grad, &mut wrng);
+            plan.apply(t, w, &mut scratch.grad, &mut wrng);
         }
         let bits = comp
             .lock()
@@ -964,7 +979,7 @@ impl TrainingRun {
             let mut scratch = WorkerScratch::new(d);
             for t in start..self.rounds {
                 let lr = self.schedule.at(t);
-                let n = lp.select();
+                let n = lp.select(t);
                 for k in 0..n {
                     let w = lp.server.selected[k];
                     let (msg, loss) = self.worker_round(
@@ -1067,7 +1082,7 @@ impl TrainingRun {
                 }
                 for t in start..self.rounds {
                     let lr = self.schedule.at(t);
-                    let n = lp.select();
+                    let n = lp.select(t);
                     if streaming {
                         votes.lock().expect("vote accumulator lock poisoned").reset(d, n);
                     }
@@ -1156,6 +1171,7 @@ mod tests {
             eval_every: 10,
             seed: 3,
             attack: None,
+            selection: Default::default(),
             allow_stateful_with_sampling: false,
             threads: None,
         }

@@ -1,6 +1,27 @@
-//! Worker sampling — the `S^{(t)}` selection step of Algorithms 1 & 2.
+//! Worker sampling — the `S^{(t)}` selection step of Algorithms 1 & 2 —
+//! and the [`SelectionRng`] that drives it.
+//!
+//! Two selection modes exist (DESIGN.md §13):
+//!
+//! * **Legacy** — the original `Pcg64` stream derived from the run seed.
+//!   Fast and statistically fine, but *predictable*: its raw state rides
+//!   coordinator snapshots, and PCG output is invertible with known
+//!   techniques (pcg-breaker), so any party that sees a snapshot — or
+//!   enough raw outputs — can predict every future round's cohort.
+//! * **Committed** — ChaCha20-based committed-seed sampling. The round-`t`
+//!   cohort is drawn from a per-round key `PRF(root_key, t)`; the root key
+//!   never leaves the process. Snapshots (and the rendezvous `Welcome`)
+//!   carry only a one-way *commitment* to the root key plus the round
+//!   counter, so disclosure of all serialized state predicts nothing.
+//!
+//! Legacy mode routes through the exact same `Pcg64` code path as before
+//! the abstraction existed, so every bit-identity contract (engine
+//! equivalence, loopback diff, snapshot resume) is unchanged.
 
-use crate::util::rng::Pcg64;
+use crate::util::rng::{
+    selection_commitment, selection_root_key, selection_round_key, ChaChaRng, Pcg64,
+    SELECT_NONCE_STREAM,
+};
 
 /// Uniform-without-replacement worker sampler (the paper's protocol: "the
 /// server selects a random set of workers", each with equal probability
@@ -36,17 +57,188 @@ impl WorkerSampler {
     }
 
     /// [`Self::select`] into a reusable buffer (cleared first) — the run
-    /// loop's path; at full participation it draws nothing from `rng` and
-    /// allocates nothing in steady state. Consumes the same RNG stream as
-    /// `select`, so the two are interchangeable mid-run.
+    /// loop's path. At participation 1.0 the identity fast path writes
+    /// `0..total` without drawing from `rng` and without touching the
+    /// heap in steady state (`tests/zero_alloc_round.rs` pins the whole
+    /// round). Consumes the same RNG stream as `select`, so the two are
+    /// interchangeable mid-run.
     pub fn select_into(&self, rng: &mut Pcg64, out: &mut Vec<usize>) {
         out.clear();
         let k = self.per_round();
         if k == self.total {
+            // Identity fast path: full participation selects everyone,
+            // needs no randomness and no allocation.
             out.extend(0..self.total);
         } else {
             out.extend_from_slice(&rng.sample_indices(self.total, k));
         }
+    }
+}
+
+/// Which selection stream a run uses. Part of the run configuration (and
+/// its fingerprint): the two modes draw different cohorts under partial
+/// participation, so a fleet and its coordinator must agree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SelectionMode {
+    /// The original `Pcg64` stream (raw state serialized in snapshots).
+    #[default]
+    Legacy,
+    /// Hardened ChaCha20 committed-seed sampling (DESIGN.md §13).
+    Committed,
+}
+
+/// Serialized form of the selection state at a round boundary — what the
+/// snapshot codec carries. Legacy exports raw RNG words (the historical
+/// behaviour, and the attack surface the committed mode closes);
+/// committed exports only the one-way commitment plus the round counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectionSnapshot {
+    /// Raw `Pcg64` state (`[state_lo, state_hi, inc_lo, inc_hi]`).
+    LegacyRaw([u64; 4]),
+    /// Commitment to the root key + rounds drawn so far. No generator
+    /// state is recoverable from this.
+    Committed { commitment: [u64; 4], round: u64 },
+}
+
+/// The server-side selection stream, in one of the two modes.
+pub enum SelectionRng {
+    Legacy(Pcg64),
+    Committed(CommittedSelection),
+}
+
+/// Hardened committed-seed selection state: the root key (private to the
+/// process), its public commitment, the next round counter, and a
+/// reusable Fisher–Yates pool so partial-participation draws settle into
+/// zero steady-state allocations.
+pub struct CommittedSelection {
+    root_key: [u32; 8],
+    commitment: [u64; 4],
+    round: u64,
+    pool: Vec<usize>,
+}
+
+impl SelectionRng {
+    /// Build the selection stream for `mode` from the run seed. Legacy
+    /// derives the exact historical stream (`root.derive(0xfeed)`).
+    pub fn from_seed(mode: SelectionMode, root: &Pcg64, seed: u64) -> Self {
+        match mode {
+            SelectionMode::Legacy => SelectionRng::Legacy(root.derive(0xfeed)),
+            SelectionMode::Committed => {
+                let root_key = selection_root_key(seed);
+                SelectionRng::Committed(CommittedSelection {
+                    root_key,
+                    commitment: selection_commitment(&root_key),
+                    round: 0,
+                    pool: Vec::new(),
+                })
+            }
+        }
+    }
+
+    pub fn mode(&self) -> SelectionMode {
+        match self {
+            SelectionRng::Legacy(_) => SelectionMode::Legacy,
+            SelectionRng::Committed(_) => SelectionMode::Committed,
+        }
+    }
+
+    /// Draw round `t`'s cohort into `out` (sorted, distinct; cleared
+    /// first). Legacy ignores `t` — it is a sequential stream; committed
+    /// keys every round independently, so any round can be (re)drawn
+    /// from the root key alone.
+    pub fn select_into(&mut self, sampler: &WorkerSampler, t: usize, out: &mut Vec<usize>) {
+        match self {
+            SelectionRng::Legacy(rng) => sampler.select_into(rng, out),
+            SelectionRng::Committed(c) => c.select_into(sampler, t as u64, out),
+        }
+    }
+
+    /// Raw generator state for serialization — `None` in committed mode
+    /// *by construction*: the hardened selection stream has no exportable
+    /// state (`tests/selection_attack.rs` pins the refusal).
+    pub fn to_raw(&self) -> Option<[u64; 4]> {
+        match self {
+            SelectionRng::Legacy(rng) => Some(rng.to_raw()),
+            SelectionRng::Committed(_) => None,
+        }
+    }
+
+    /// The public commitment broadcast at rendezvous: the root-key
+    /// commitment in committed mode, all-zero in legacy mode (legacy has
+    /// nothing to commit to — its state is the secret it leaks).
+    pub fn commitment(&self) -> [u64; 4] {
+        match self {
+            SelectionRng::Legacy(_) => [0; 4],
+            SelectionRng::Committed(c) => c.commitment,
+        }
+    }
+
+    /// Snapshot form at a round boundary (`round` = rounds completed).
+    pub fn snapshot(&self, round: u64) -> SelectionSnapshot {
+        match self {
+            SelectionRng::Legacy(rng) => SelectionSnapshot::LegacyRaw(rng.to_raw()),
+            SelectionRng::Committed(c) => {
+                SelectionSnapshot::Committed { commitment: c.commitment, round }
+            }
+        }
+    }
+
+    /// Rebuild from a snapshot. Legacy restores the raw stream; committed
+    /// re-derives the root key from the run seed and *verifies* it against
+    /// the stored commitment — a snapshot from a different seed (or a
+    /// tampered commitment) is refused rather than silently diverging.
+    pub fn restore(
+        mode: SelectionMode,
+        seed: u64,
+        snap: &SelectionSnapshot,
+    ) -> Result<Self, &'static str> {
+        match (mode, snap) {
+            (SelectionMode::Legacy, SelectionSnapshot::LegacyRaw(raw)) => Pcg64::from_raw(*raw)
+                .map(SelectionRng::Legacy)
+                .ok_or("even selection-rng increment"),
+            (SelectionMode::Committed, SelectionSnapshot::Committed { commitment, round }) => {
+                let root_key = selection_root_key(seed);
+                if selection_commitment(&root_key) != *commitment {
+                    return Err("selection commitment does not match this run's seed");
+                }
+                Ok(SelectionRng::Committed(CommittedSelection {
+                    root_key,
+                    commitment: *commitment,
+                    round: *round,
+                    pool: Vec::new(),
+                }))
+            }
+            _ => Err("snapshot selection mode differs from the run's"),
+        }
+    }
+}
+
+impl CommittedSelection {
+    /// Rounds drawn so far (the committed mode's only mutable state).
+    pub fn rounds_drawn(&self) -> u64 {
+        self.round
+    }
+
+    fn select_into(&mut self, sampler: &WorkerSampler, t: u64, out: &mut Vec<usize>) {
+        out.clear();
+        let k = sampler.per_round();
+        if k == sampler.total {
+            // Same identity fast path as legacy: no draw, no allocation.
+            out.extend(0..sampler.total);
+        } else {
+            let key = selection_round_key(&self.root_key, t);
+            let mut rng = ChaChaRng::new(key, SELECT_NONCE_STREAM);
+            // Partial Fisher–Yates over the reusable pool.
+            self.pool.clear();
+            self.pool.extend(0..sampler.total);
+            for i in 0..k {
+                let j = i + rng.index(sampler.total - i);
+                self.pool.swap(i, j);
+            }
+            out.extend_from_slice(&self.pool[..k]);
+            out.sort_unstable();
+        }
+        self.round = t + 1;
     }
 }
 
@@ -116,5 +308,102 @@ mod tests {
     #[should_panic(expected = "participation must be in")]
     fn zero_participation_rejected() {
         WorkerSampler::new(10, 0.0);
+    }
+
+    #[test]
+    fn legacy_selection_rng_matches_historical_stream() {
+        // The abstraction must not perturb the legacy stream: selecting
+        // through SelectionRng::Legacy is bit-identical to the direct
+        // `root.derive(0xfeed)` path every engine used before.
+        let root = Pcg64::seed_from(77);
+        let s = WorkerSampler::new(30, 0.4);
+        let mut direct = root.derive(0xfeed);
+        let mut sel = SelectionRng::from_seed(SelectionMode::Legacy, &root, 77);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for t in 0..12 {
+            s.select_into(&mut direct, &mut a);
+            sel.select_into(&s, t, &mut b);
+            assert_eq!(a, b, "round {t}");
+        }
+    }
+
+    #[test]
+    fn committed_selection_is_deterministic_and_round_keyed() {
+        let root = Pcg64::seed_from(5);
+        let s = WorkerSampler::new(50, 0.2);
+        let mut r1 = SelectionRng::from_seed(SelectionMode::Committed, &root, 5);
+        let mut r2 = SelectionRng::from_seed(SelectionMode::Committed, &root, 5);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for t in 0..10 {
+            r1.select_into(&s, t, &mut a);
+            r2.select_into(&s, t, &mut b);
+            assert_eq!(a, b);
+            assert_eq!(a.len(), 10);
+            for w in a.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+        // Round-keyed: drawing round 3 out of order reproduces it exactly.
+        let mut r3 = SelectionRng::from_seed(SelectionMode::Committed, &root, 5);
+        r3.select_into(&s, 3, &mut b);
+        r1.select_into(&s, 3, &mut a);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn committed_selection_is_uniform() {
+        let root = Pcg64::seed_from(6);
+        let s = WorkerSampler::new(40, 0.25);
+        let mut sel = SelectionRng::from_seed(SelectionMode::Committed, &root, 6);
+        let mut counts = vec![0usize; 40];
+        let mut buf = Vec::new();
+        let rounds = 8_000;
+        for t in 0..rounds {
+            sel.select_into(&s, t, &mut buf);
+            for &i in &buf {
+                counts[i] += 1;
+            }
+        }
+        let expect = rounds as f64 * 0.25;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < 0.15 * expect,
+                "worker {i} selected {c} times, expected ~{expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn committed_mode_exports_no_raw_state() {
+        let root = Pcg64::seed_from(9);
+        let legacy = SelectionRng::from_seed(SelectionMode::Legacy, &root, 9);
+        let hardened = SelectionRng::from_seed(SelectionMode::Committed, &root, 9);
+        assert!(legacy.to_raw().is_some());
+        assert!(hardened.to_raw().is_none());
+        assert_eq!(legacy.commitment(), [0; 4]);
+        assert_ne!(hardened.commitment(), [0; 4]);
+    }
+
+    #[test]
+    fn committed_restore_verifies_the_commitment() {
+        let root = Pcg64::seed_from(11);
+        let mut sel = SelectionRng::from_seed(SelectionMode::Committed, &root, 11);
+        let s = WorkerSampler::new(20, 0.5);
+        let mut buf = Vec::new();
+        for t in 0..4 {
+            sel.select_into(&s, t, &mut buf);
+        }
+        let snap = sel.snapshot(4);
+        // Same seed restores and continues identically.
+        let mut back = SelectionRng::restore(SelectionMode::Committed, 11, &snap).expect("restore");
+        let mut expect = Vec::new();
+        sel.select_into(&s, 4, &mut expect);
+        back.select_into(&s, 4, &mut buf);
+        assert_eq!(expect, buf);
+        // A different seed fails the commitment check.
+        assert!(SelectionRng::restore(SelectionMode::Committed, 12, &snap).is_err());
+        // Mode mismatch is refused.
+        assert!(SelectionRng::restore(SelectionMode::Legacy, 11, &snap).is_err());
     }
 }

@@ -38,6 +38,7 @@ fn run_one(
         eval_every: 0,
         seed: 0,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads: None,
     };

@@ -126,7 +126,13 @@ pub fn run_classification(cfg: &ExperimentConfig) -> ExperimentReport {
                 participation: cfg.participation,
                 eval_every: cfg.eval_every,
                 seed,
-                attack: None,
+                // Cohort membership re-rolls per seed so the sweep's mean
+                // does not hinge on which data shards the attacker drew.
+                attack: cfg.attack.as_deref().map(|spec| {
+                    crate::coordinator::AttackPlan::parse(spec, cfg.workers, seed)
+                        .unwrap_or_else(|e| panic!("invalid attack spec '{spec}': {e}"))
+                }),
+                selection: cfg.selection,
                 allow_stateful_with_sampling: false,
                 // HLO-backed models run on the Rc/RefCell PJRT cache,
                 // which is single-threaded by contract; pure-rust models

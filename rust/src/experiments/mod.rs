@@ -20,6 +20,7 @@ pub mod theory;
 
 pub use classification::{build_env, run_classification, ExperimentReport};
 pub use presets::{
-    fig3_config, table1_config, table2_config, table3_config, tables4_7_configs,
+    attack_sweep_configs, fig3_config, table1_config, table2_config, table3_config,
+    tables4_7_configs,
 };
 pub use rosenbrock::{run_fig1, run_fig2, RosenbrockSeries};

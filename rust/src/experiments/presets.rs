@@ -287,9 +287,96 @@ pub fn tables4_7_configs(paper_scale: bool, alphas: &[f64]) -> Vec<ExperimentCon
         .collect()
 }
 
+/// The Byzantine-robustness roster (DESIGN.md §13, EXPERIMENTS.md attack
+/// tables): the paper's Remark 2(4) claim is that majority-vote sparsign
+/// caps a malicious worker's influence at ±1 per coordinate, while
+/// magnitude-sharing compressors aggregated by mean (TernGrad, QSGD) hand
+/// an attacker the whole update norm. Rows pair each family with its
+/// aggregation rule under identical attacks.
+fn robustness_roster(sign_lr: f64, mean_lr: f64) -> (Vec<Algorithm>, Vec<Option<f64>>) {
+    use AggregationRule::{MajorityVote, Mean};
+    use CompressorKind::{Qsgd, Sign, Sparsign, TernGrad};
+    let rows: Vec<(Algorithm, f64)> = vec![
+        (
+            Algorithm::CompressedGd { compressor: Sign, aggregation: MajorityVote },
+            sign_lr,
+        ),
+        (
+            Algorithm::CompressedGd {
+                compressor: Sparsign { budget: 1.0 },
+                aggregation: MajorityVote,
+            },
+            sign_lr,
+        ),
+        (
+            Algorithm::CompressedGd { compressor: TernGrad, aggregation: Mean },
+            mean_lr,
+        ),
+        (
+            Algorithm::CompressedGd {
+                compressor: Qsgd { levels: 1, norm: NormKind::L2 },
+                aggregation: Mean,
+            },
+            mean_lr,
+        ),
+    ];
+    let lrs = rows.iter().map(|(_, lr)| Some(*lr)).collect();
+    (rows.into_iter().map(|(a, _)| a).collect(), lrs)
+}
+
+/// Convergence-under-attack sweep: colluding sign-flip cohorts at
+/// increasing fractions, plus a scale-inflation cohort (the attack
+/// Remark 2(4) singles out). One config per attack spec, shared roster,
+/// so each rendered table is a column of the EXPERIMENTS.md §"attack
+/// tables" grid.
+pub fn attack_sweep_configs(paper_scale: bool) -> Vec<ExperimentConfig> {
+    let specs: &[&str] = &[
+        "collusive:10%",
+        "collusive:20%",
+        "collusive:30%",
+        "rescale:20%:1e4",
+        "signflip:20%",
+    ];
+    specs
+        .iter()
+        .map(|&spec| {
+            let (algorithms, lr_overrides) = robustness_roster(0.01, 0.5);
+            let mut cfg = table1_config(paper_scale);
+            cfg.name = if paper_scale {
+                format!("Attack sweep: Fashion-MNIST under {spec}")
+            } else {
+                format!("Attack sweep (fast): fmnist-like under {spec}")
+            };
+            cfg.algorithms = algorithms;
+            cfg.lr_overrides = lr_overrides;
+            cfg.attack = Some(spec.to_string());
+            if !paper_scale {
+                cfg.rounds = 200;
+                cfg.seeds = vec![0, 1];
+            }
+            cfg
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn attack_sweep_covers_collusion_fractions_and_rescale() {
+        let cfgs = attack_sweep_configs(false);
+        assert_eq!(cfgs.len(), 5);
+        for cfg in &cfgs {
+            cfg.validate().unwrap();
+            assert!(cfg.attack.is_some());
+            let labels: Vec<String> = cfg.algorithms.iter().map(|a| a.label()).collect();
+            assert!(labels.iter().any(|l| l.contains("sparsignSGD")));
+            assert!(labels.iter().any(|l| l.contains("TernGrad")));
+        }
+        assert_eq!(cfgs[2].attack.as_deref(), Some("collusive:30%"));
+        assert!(cfgs[3].attack.as_deref().unwrap().starts_with("rescale"));
+    }
 
     #[test]
     fn all_presets_validate() {

@@ -62,6 +62,7 @@ pub fn run_series(
         eval_every: 1,
         seed,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads: None,
     };

@@ -8,9 +8,11 @@
 //! sparsignd theory    [--trials N]
 //! sparsignd serve     [--addr EP] [--clients M] [--rounds N] [--deadline-ms D]
 //!                     [--snapshot F [--snapshot-every K]] [--resume F]
-//!                     [--drain-after N] [--endpoint-file F] [--history-json F] …
+//!                     [--drain-after N] [--endpoint-file F] [--history-json F]
+//!                     [--attack SPEC] [--selection legacy|committed] …
 //! sparsignd fleet     [--clients M] [--rounds N] [--transport tcp|uds]
-//!                     [--connect EP | --connect-file F] [--reconnect-secs S] …
+//!                     [--connect EP | --connect-file F] [--reconnect-secs S]
+//!                     [--attack SPEC] [--selection legacy|committed] …
 //! sparsignd benchdiff --baseline F --fresh F [--tolerance T]
 //! sparsignd artifacts
 //! ```
@@ -20,9 +22,10 @@
 
 use sparsignd::cli::ArgMap;
 use sparsignd::compressors::{CompressorKind, NormKind};
-use sparsignd::config::ExperimentConfig;
+use sparsignd::config::{parse_selection, ExperimentConfig};
 use sparsignd::coordinator::{
-    Algorithm, AggregationRule, ClassifierEnv, GradientSource, RunHistory, TrainingRun,
+    Algorithm, AggregationRule, AttackPlan, ClassifierEnv, GradientSource, RunHistory,
+    TrainingRun,
 };
 use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
 use sparsignd::experiments;
@@ -64,7 +67,8 @@ fn usage() {
          \n\
          subcommands:\n\
          \x20 train      run the fast-preset experiment (override via --rounds/--alpha/…)\n\
-         \x20 tables     regenerate the paper's tables (--preset fast|paper, --only …)\n\
+         \x20 tables     regenerate the paper's tables (--preset fast|paper, --only …;\n\
+         \x20            --only attacks for the Byzantine convergence sweep)\n\
          \x20 fig1       Rosenbrock wrong-aggregation figure (sign vs sparsign)\n\
          \x20 fig2       Rosenbrock worker-sampling figure\n\
          \x20 theory     Theorem 1 Monte-Carlo bound check\n\
@@ -136,6 +140,13 @@ fn cmd_tables(args: &ArgMap) -> i32 {
     }
     if want("tables4_7") {
         for cfg in experiments::tables4_7_configs(paper, &[0.1, 0.3, 0.6, 1.0]) {
+            println!("{}", experiments::run_classification(&cfg).table());
+        }
+    }
+    // Not part of the default sweep (it is a robustness suite, not a
+    // paper table): opt in with --only attacks.
+    if only.as_ref().map(|o| o.iter().any(|x| x == "attacks")).unwrap_or(false) {
+        for cfg in experiments::attack_sweep_configs(paper) {
             println!("{}", experiments::run_classification(&cfg).table());
         }
     }
@@ -297,6 +308,13 @@ fn net_setup(args: &ArgMap) -> Result<NetSetup, String> {
     run.participation = participation;
     run.eval_every = args.get::<usize>("eval-every", 0);
     run.seed = seed;
+    // Byzantine knobs. Both sides of a distributed run derive the same
+    // plan from the same flags; the coordinator needs it for its
+    // config-fingerprint and the in-process diff, the fleet to enact it.
+    if let Some(spec) = args.get_str("attack") {
+        run.attack = Some(AttackPlan::parse(spec, clients, seed)?);
+    }
+    run.selection = parse_selection(args.str_or("selection", "legacy"))?;
     Ok(NetSetup { env, run, init })
 }
 
@@ -490,9 +508,22 @@ fn cmd_fleet(args: &ArgMap) -> i32 {
         };
     }
 
-    let in_process = run.run(&env, init.clone(), &|p| env.evaluate(p));
+    // Protocol-level attacks (straggle/equivocate) make acceptance
+    // timing-dependent — the in-process engine has no frames to reject —
+    // so the bit-identity diff only gates gradient-level (or honest)
+    // runs. Attacked-transport runs are judged by their typed rejects.
+    let protocol_attacks =
+        run.attack.as_ref().map(|p| p.has_protocol_attacks()).unwrap_or(false);
+    let in_process =
+        (!protocol_attacks).then(|| run.run(&env, init.clone(), &|p| env.evaluate(p)));
     let uds = args.str_or("transport", "tcp") == "uds";
-    let serve_opts = net::ServeOptions::new(net::client::loopback_endpoint(uds));
+    let mut serve_opts = net::ServeOptions::new(net::client::loopback_endpoint(uds));
+    if protocol_attacks {
+        // Stragglers hold updates past the round deadline; without one the
+        // round would wait for them and the attack would degenerate.
+        let deadline_ms = args.get::<u64>("deadline-ms", 2_000);
+        serve_opts.round_deadline = Some(std::time::Duration::from_millis(deadline_ms));
+    }
     let eval = |p: &[f32]| env.evaluate(p);
     let (wire_hist, stats) =
         match net::run_loopback(&run, &env, init, &eval, serve_opts, &fleet_opts) {
@@ -504,15 +535,24 @@ fn cmd_fleet(args: &ArgMap) -> i32 {
         };
     print_net_history("loopback", &wire_hist);
     print_fleet_stats(&stats);
-    match diff_histories(&in_process, &wire_hist) {
-        Ok(()) => {
-            println!("RunHistory identical to the in-process engine (same seed): PASS");
+    match in_process {
+        None => {
+            println!(
+                "protocol-level attack plan: loopback diff skipped \
+                 (typed rejects above are the acceptance signal)"
+            );
             0
         }
-        Err(e) => {
-            eprintln!("RunHistory DIVERGED from the in-process engine: {e}");
-            1
-        }
+        Some(in_process) => match diff_histories(&in_process, &wire_hist) {
+            Ok(()) => {
+                println!("RunHistory identical to the in-process engine (same seed): PASS");
+                0
+            }
+            Err(e) => {
+                eprintln!("RunHistory DIVERGED from the in-process engine: {e}");
+                1
+            }
+        },
     }
 }
 
@@ -526,6 +566,14 @@ fn print_net_history(tag: &str, hist: &RunHistory) {
         hist.ledger.total_uplink_wire_bytes() as f64 / 1024.0,
         hist.ledger.total_stragglers(),
         eval.unwrap_or_else(|| "no eval".into())
+    );
+    // Typed reject counters (BadRound, NotSelected, Duplicate, Late,
+    // UnknownWorker, WrongClient) — the CI attack-smoke job greps this.
+    let rejects = hist.ledger.rejects_by_kind();
+    println!(
+        "[{tag}] rejects_by_kind {:?} (total {})",
+        rejects,
+        hist.ledger.total_rejects()
     );
 }
 

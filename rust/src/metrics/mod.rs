@@ -224,7 +224,14 @@ pub fn history_json(h: &RunHistory) -> String {
             if i + 1 < recs.len() { "," } else { "" },
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n  \"rejects_by_kind\": [");
+    for (i, n) in h.ledger.rejects_by_kind().iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&n.to_string());
+    }
+    s.push_str("]\n}\n");
     s
 }
 
@@ -425,6 +432,11 @@ mod tests {
         b.reports[0].train_loss = f64::from_bits(b.reports[0].train_loss.to_bits() + 1);
         assert_ne!(history_json(&a), history_json(&b));
         assert!(history_json(&a).contains("\"ledger\""));
+        // Typed reject counters ride along; an honest run renders all zeros.
+        assert!(history_json(&a).contains("\"rejects_by_kind\": [0, 0, 0, 0, 0, 0]"));
+        let mut c = a.clone();
+        c.ledger.add_rejects(&[0, 2, 0, 0, 1, 0]);
+        assert!(history_json(&c).contains("\"rejects_by_kind\": [0, 2, 0, 0, 1, 0]"));
     }
 
     #[test]

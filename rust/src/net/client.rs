@@ -21,13 +21,32 @@
 //! coordinator had already opened is harmless — the resumed
 //! coordinator's `RunHistory` stays bit-identical to an uninterrupted
 //! run (`tests/snapshot_resume.rs`, the `resume-equivalence` CI job).
+//!
+//! ## Malicious-agent mode (DESIGN.md §13)
+//!
+//! When the fleet's `TrainingRun` carries an [`AttackPlan`] with
+//! protocol-level cohorts, agents enact those behaviours against the
+//! real framing: [`Attack::Straggle`] holds a hosted worker's update
+//! past the announced round deadline (drawing a straggler mark and a
+//! typed `Late`/`BadRound` reject),
+//! [`Attack::Equivocate`] follows the honest update with a byte-identical
+//! duplicate and a stale-round replay (drawing `Duplicate` and
+//! `BadRound`/`Late`). Gradient-level attacks need no transport support:
+//! they are applied inside `TrainingRun::worker_round`, exactly as the
+//! in-process engines apply them, so attacked wire runs stay
+//! bit-identical to attacked engine runs. Honest workers hosted by the
+//! same agent are always served *before* the misbehaving ones so an
+//! attacker cannot starve its co-hosted honest peers of the round
+//! window.
+//!
+//! [`AttackPlan`]: crate::coordinator::AttackPlan
 
 use std::io::Write as _;
 use std::path::PathBuf;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{pool, GradientSource, RunHistory, TrainingRun, WorkerScratch};
+use crate::coordinator::{pool, Attack, GradientSource, RunHistory, TrainingRun, WorkerScratch};
 
 use super::server::{NetCoordinator, ServeOptions};
 use super::wire::{self, Msg, WireBuf};
@@ -367,7 +386,7 @@ fn serve_session(
     loop {
         let msg = read_msg(conn, opts.max_payload, buf, stats)?;
         match msg {
-            Msg::RoundOpen { t, lr, selected, params: bcast, .. } => {
+            Msg::RoundOpen { t, lr, deadline_ms, selected, params: bcast } => {
                 stats.rounds_seen += 1;
                 if bcast.len() != d {
                     return Err(NetError::Protocol("broadcast dim mismatch".into()));
@@ -375,12 +394,25 @@ fn serve_session(
                 params.copy_from_slice(&bcast);
                 let t_us = usize::try_from(t)
                     .map_err(|_| NetError::Protocol("round index overflow".into()))?;
+                // Protocol-level attackers are deferred until every honest
+                // hosted worker has submitted: a misbehaving co-tenant must
+                // not eat its neighbours' round window.
+                let mut deferred: Vec<(u64, Attack)> = Vec::new();
                 for &w64 in &selected {
                     let w = w64 as usize;
                     if w < lo || w >= hi {
                         return Err(NetError::Protocol(format!(
                             "selected worker {w} outside hosted range {lo}..{hi}"
                         )));
+                    }
+                    let protocol_attack = run
+                        .attack
+                        .as_ref()
+                        .and_then(|p| p.attack_of(w))
+                        .filter(Attack::is_protocol_level);
+                    if let Some(a) = protocol_attack {
+                        deferred.push((w64, a));
+                        continue;
                     }
                     let (grad, loss) = run.worker_round(
                         env,
@@ -396,6 +428,52 @@ fn serve_session(
                     stats.bytes_up += wbuf.encode_update(t, w64, loss, &grad, out) as u64;
                     conn.write_all(out)?;
                     stats.updates_sent += 1;
+                }
+                for (w64, a) in deferred {
+                    let w = w64 as usize;
+                    let (grad, loss) = run.worker_round(
+                        env,
+                        t_us,
+                        w,
+                        lr,
+                        params,
+                        root,
+                        comps.get(w - lo),
+                        scratch,
+                    );
+                    match a {
+                        Attack::Equivocate => {
+                            // Honest update, then a byte-identical duplicate,
+                            // then a replay against a stale round index. The
+                            // connection stays up: equivocation is answered
+                            // with typed rejects, not a hangup.
+                            out.clear();
+                            stats.bytes_up += wbuf.encode_update(t, w64, loss, &grad, out) as u64;
+                            conn.write_all(out)?;
+                            stats.updates_sent += 1;
+                            stats.bytes_up += out.len() as u64;
+                            conn.write_all(out)?;
+                            let stale = if t > 0 { t - 1 } else { t + 1 };
+                            out.clear();
+                            stats.bytes_up +=
+                                wbuf.encode_update(stale, w64, loss, &grad, out) as u64;
+                            conn.write_all(out)?;
+                        }
+                        Attack::Straggle { extra_ms } => {
+                            // Adaptive straggler: hold the (honest) update
+                            // until the announced deadline has passed, plus a
+                            // margin, so it lands as a typed `Late`/`BadRound`
+                            // reject after the round has closed.
+                            std::thread::sleep(Duration::from_millis(
+                                deadline_ms.saturating_add(extra_ms),
+                            ));
+                            out.clear();
+                            stats.bytes_up += wbuf.encode_update(t, w64, loss, &grad, out) as u64;
+                            conn.write_all(out)?;
+                            stats.updates_sent += 1;
+                        }
+                        _ => unreachable!("deferred set holds protocol-level attacks only"),
+                    }
                 }
             }
             Msg::Ack { .. } => {}

@@ -19,6 +19,7 @@
 //! explicit-phase shape for its PET rounds.)
 
 use super::wire::RejectReason;
+use crate::coordinator::REJECT_KINDS;
 
 /// Coordinator lifecycle phase.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -221,6 +222,13 @@ pub struct RoundTable {
     /// Live slots the round still waits for (dead-connection slots are
     /// excluded up front and when a connection drops mid-round).
     expected: usize,
+    /// Typed rejects issued since the last [`RoundTable::take_rejects`],
+    /// per connection (`rejects[conn][RejectReason::index()]`; grows on
+    /// demand — an equivocating client is identified by *its* counters,
+    /// not just the round total).
+    rejects: Vec<[u64; REJECT_KINDS]>,
+    /// Same rejects summed over connections.
+    rejects_total: [u64; REJECT_KINDS],
 }
 
 impl RoundTable {
@@ -266,8 +274,19 @@ impl RoundTable {
     }
 
     /// Validate a submission for `(t, worker)` from `conn`; on success
-    /// marks the slot filled and returns its index.
+    /// marks the slot filled and returns its index. Every rejection is
+    /// tallied per connection and per kind before it is returned.
     pub fn submit(&mut self, t: usize, worker: usize, conn: usize) -> Result<usize, RejectReason> {
+        match self.validate(t, worker, conn) {
+            Ok(slot) => Ok(slot),
+            Err(reason) => {
+                self.note_reject(conn, reason);
+                Err(reason)
+            }
+        }
+    }
+
+    fn validate(&mut self, t: usize, worker: usize, conn: usize) -> Result<usize, RejectReason> {
         if !self.open || t != self.t {
             // A stale round index on a closed table is the classic
             // straggler shape: the round it aimed for is gone.
@@ -290,6 +309,32 @@ impl RoundTable {
         self.filled[slot] = true;
         self.received += 1;
         Ok(slot)
+    }
+
+    fn note_reject(&mut self, conn: usize, reason: RejectReason) {
+        if conn >= self.rejects.len() {
+            self.rejects.resize(conn + 1, [0; REJECT_KINDS]);
+        }
+        self.rejects[conn][reason.index()] += 1;
+        self.rejects_total[reason.index()] += 1;
+    }
+
+    /// Typed rejects issued to `conn` since the last [`Self::take_rejects`].
+    pub fn rejects_of(&self, conn: usize) -> [u64; REJECT_KINDS] {
+        self.rejects.get(conn).copied().unwrap_or([0; REJECT_KINDS])
+    }
+
+    /// Drain the accumulated per-kind reject totals (the server folds
+    /// these into the [`crate::coordinator::CommLedger`] after each round
+    /// closes; draining rather than reading keeps late post-close rejects
+    /// counted exactly once, in the next fold).
+    pub fn take_rejects(&mut self) -> [u64; REJECT_KINDS] {
+        let out = self.rejects_total;
+        self.rejects_total = [0; REJECT_KINDS];
+        for per_conn in &mut self.rejects {
+            *per_conn = [0; REJECT_KINDS];
+        }
+        out
     }
 
     /// A connection died mid-round: stop waiting for its unfilled slots.
@@ -482,6 +527,41 @@ mod tests {
         tb.close();
         assert_eq!(tb.submit(2, 5, 1), Err(RejectReason::Late));
         assert_eq!(tb.filled(), &[true, true, true]);
+    }
+
+    #[test]
+    fn rejects_are_tallied_per_connection_and_kind() {
+        let mut tb = RoundTable::new();
+        let alive = vec![true, true];
+        tb.open(2, 6, &[4, 1, 5], &[1, 0, 1], &alive);
+        // Conn 0 probes another client's worker and an unknown id; conn 1
+        // double-submits.
+        assert!(tb.submit(2, 4, 0).is_err()); // WrongClient
+        assert!(tb.submit(2, 9, 0).is_err()); // UnknownWorker
+        assert!(tb.submit(2, 4, 1).is_ok());
+        assert!(tb.submit(2, 4, 1).is_err()); // Duplicate
+        assert!(tb.submit(1, 1, 0).is_err()); // BadRound
+        let c0 = tb.rejects_of(0);
+        assert_eq!(c0[RejectReason::WrongClient.index()], 1);
+        assert_eq!(c0[RejectReason::UnknownWorker.index()], 1);
+        assert_eq!(c0[RejectReason::BadRound.index()], 1);
+        let c1 = tb.rejects_of(1);
+        assert_eq!(c1[RejectReason::Duplicate.index()], 1);
+        assert_eq!(c1.iter().sum::<u64>(), 1);
+        // Unseen connections read as zero.
+        assert_eq!(tb.rejects_of(9), [0; REJECT_KINDS]);
+
+        // Draining returns the totals once and resets both layers.
+        let total = tb.take_rejects();
+        assert_eq!(total.iter().sum::<u64>(), 4);
+        assert_eq!(total[RejectReason::Duplicate.index()], 1);
+        assert_eq!(tb.take_rejects(), [0; REJECT_KINDS]);
+        assert_eq!(tb.rejects_of(0), [0; REJECT_KINDS]);
+
+        // A post-close straggler lands in the next drain, not nowhere.
+        tb.close();
+        assert_eq!(tb.submit(2, 5, 1), Err(RejectReason::Late));
+        assert_eq!(tb.take_rejects()[RejectReason::Late.index()], 1);
     }
 
     #[test]

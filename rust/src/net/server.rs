@@ -325,6 +325,9 @@ impl<'a> Driver<'a> {
                 return Err(NetError::Drained { rounds_done: done });
             }
         }
+        // Rejects issued after the final round closed (a straggler's
+        // stale replay, say) would otherwise be dropped on the floor.
+        self.fold_rejects();
         // Fin + state machine epilogue.
         let fin = Msg::Fin { rounds: self.run.rounds as u64 };
         for id in 0..self.conns.len() {
@@ -369,7 +372,7 @@ impl<'a> Driver<'a> {
         // Selection is drawn exactly once per round (the RNG stream is
         // part of the determinism contract); a re-broadcast after an
         // all-hosts-dead attempt reuses the same cohort.
-        let n = self.lp.select();
+        let n = self.lp.select(t);
         self.phase.open_round(t);
         let mut down_bytes = 0u64;
         let mut sel_ids: Vec<u64> = Vec::new();
@@ -509,6 +512,7 @@ impl<'a> Driver<'a> {
             }
             self.lp.finish_round(t, lr, n_eff, eval, &mut None);
             self.lp.ledger.annotate_wire(t, up_bytes, down_bytes, stragglers);
+            self.fold_rejects();
             self.phase.broadcast(t);
             return Ok(());
         }
@@ -578,6 +582,11 @@ impl<'a> Driver<'a> {
                             workers: self.m as u64,
                             dim: self.lp.params.len() as u64,
                             rounds: self.run.rounds as u64,
+                            // Committed-seed selection broadcasts its
+                            // root-key commitment at rendezvous (all
+                            // zeros in legacy mode) so clients can later
+                            // audit the selection stream (DESIGN.md §13).
+                            commit: self.lp.selection_commitment(),
                         };
                         if self.send(conn, &msg).is_err() {
                             self.mark_dead(conn);
@@ -597,6 +606,17 @@ impl<'a> Driver<'a> {
             Ev::Gone { conn } => self.mark_dead(conn),
         }
         Ok(())
+    }
+
+    /// Drain the round table's typed-reject tallies into the ledger's
+    /// cumulative per-kind counters (surfaced by `history_json` and the
+    /// adversarial tests).
+    fn fold_rejects(&mut self) {
+        let rejects = {
+            let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
+            g.table.take_rejects()
+        };
+        self.lp.ledger.add_rejects(&rejects);
     }
 
     fn send(&mut self, conn: usize, msg: &Msg) -> Result<usize, NetError> {

@@ -43,8 +43,9 @@ pub const MAGIC: u32 = 0x5347_4E44;
 /// Current wire-format version. v2: `Hello` carries the run-config and
 /// environment fingerprints (DESIGN.md §12), so a coordinator refuses a
 /// fleet built from drifted flags at rendezvous instead of silently
-/// diverging.
-pub const WIRE_VERSION: u8 = 2;
+/// diverging. v3: `Welcome` carries the selection-commitment words
+/// (DESIGN.md §13; all zeros in legacy selection mode).
+pub const WIRE_VERSION: u8 = 3;
 /// Hard payload cap: decoders refuse to allocate past this, bounding
 /// memory even against a hostile length prefix.
 pub const MAX_PAYLOAD: usize = 1 << 28;
@@ -292,6 +293,13 @@ pub enum RejectReason {
 }
 
 impl RejectReason {
+    /// Stable counter index (discriminant − 1): the order the ledger's
+    /// [`crate::coordinator::REJECT_KINDS`] array and `history_json`'s
+    /// `rejects_by_kind` use.
+    pub fn index(self) -> usize {
+        self as usize - 1
+    }
+
     fn from_u8(b: u8) -> Option<Self> {
         Some(match b {
             1 => RejectReason::BadRound,
@@ -315,7 +323,7 @@ pub enum Msg {
     /// (`GradientSource::env_fingerprint`); the coordinator hangs up on
     /// a mismatched fleet at rendezvous.
     Hello { lo: u64, hi: u64, cfg: u64, env: u64 },
-    Welcome { client_id: u64, workers: u64, dim: u64, rounds: u64 },
+    Welcome { client_id: u64, workers: u64, dim: u64, rounds: u64, commit: [u64; 4] },
     RoundOpen { t: u64, lr: f64, deadline_ms: u64, selected: Vec<u64>, params: Vec<f32> },
     Update { t: u64, worker: u64, loss: f64, grad: CompressedGrad },
     Ack { t: u64, worker: u64 },
@@ -461,11 +469,16 @@ impl WireBuf {
                 p.extend_from_slice(&cfg.to_le_bytes());
                 p.extend_from_slice(&env.to_le_bytes());
             }
-            Msg::Welcome { client_id, workers, dim, rounds } => {
+            Msg::Welcome { client_id, workers, dim, rounds, commit } => {
                 push_varint(p, *client_id);
                 push_varint(p, *workers);
                 push_varint(p, *dim);
                 push_varint(p, *rounds);
+                // Commitment words are full-entropy (or all-zero):
+                // fixed-width, like the Hello fingerprints.
+                for w in commit {
+                    p.extend_from_slice(&w.to_le_bytes());
+                }
             }
             Msg::RoundOpen { t, lr, deadline_ms, selected, params } => {
                 push_varint(p, *t);
@@ -706,7 +719,11 @@ pub fn decode_msg(frame: Frame<'_>) -> Result<Msg, WireError> {
             let workers = cur.varint()?;
             let dim = cur.varint()?;
             let rounds = cur.varint()?;
-            Msg::Welcome { client_id, workers, dim, rounds }
+            let mut commit = [0u64; 4];
+            for w in commit.iter_mut() {
+                *w = cur.u64le()?;
+            }
+            Msg::Welcome { client_id, workers, dim, rounds, commit }
         }
         MsgType::RoundOpen => {
             let t = cur.varint()?;
@@ -787,7 +804,13 @@ mod tests {
     fn every_message_roundtrips_bit_identically() {
         let msgs = vec![
             Msg::Hello { lo: 0, hi: 1000, cfg: 0x1122_3344_5566_7788, env: u64::MAX },
-            Msg::Welcome { client_id: 3, workers: 1000, dim: 1 << 20, rounds: 500 },
+            Msg::Welcome {
+                client_id: 3,
+                workers: 1000,
+                dim: 1 << 20,
+                rounds: 500,
+                commit: [u64::MAX, 0, 0x0123_4567_89ab_cdef, 7],
+            },
             Msg::RoundOpen {
                 t: 41,
                 lr: 0.012345,

@@ -15,7 +15,7 @@
 //! run (`tests/snapshot_resume.rs`; the `resume-equivalence` CI job
 //! pins the cross-process version over TCP and UDS).
 //!
-//! ## File grammar (version 1)
+//! ## File grammar (version 2; version 1 still loads)
 //!
 //! ```text
 //! snapshot := magic:u32be("SGSP")  version:u8  kind:u8(=1)
@@ -24,11 +24,16 @@
 //!             dim:varint  workers:varint  rounds_total:varint
 //!             next_round:varint
 //!             phase_tag:u8  phase_round:varint
-//!             select_rng: 4 × u64le
+//!             selection
 //!             params: dim × f32le
 //!             residual_flag:u8  [ residual: dim × f32le ]
 //!             nreports:varint  report[nreports]
 //!             nledger:varint   ledgerrec[nledger]
+//!             rejects: 6 × varint            (v2 only)
+//! selection:= v1:  select_rng: 4 × u64le     (legacy raw state)
+//!             v2:  sel_tag:u8
+//!                  0 → select_rng: 4 × u64le (legacy raw state)
+//!                  1 → commitment: 4 × u64le  sel_round:varint
 //! report   := round:varint  lr:f64le  train_loss:f64le
 //!             eval_flag:u8 [ eval_loss:f64le  eval_acc:f64le ]
 //!             uplink_bits:f64le  downlink_bits:f64le
@@ -37,6 +42,13 @@
 //!             uplink_nnz:varint  uplink_wire_bytes:varint
 //!             downlink_wire_bytes:varint  stragglers:varint
 //! ```
+//!
+//! Version 2 (the hardened-selection bump, DESIGN.md §13) adds the
+//! selection-mode tag — committed-seed runs serialize a one-way
+//! commitment plus a round counter and **never** raw RNG state — and the
+//! cumulative typed-reject counters. Writers always emit v2; the loader
+//! still accepts v1 files (legacy raw selection, zero rejects), so
+//! snapshots written by the previous release resume cleanly.
 //!
 //! The framing deliberately reuses the `net/wire.rs` building blocks —
 //! the [`crate::coding::bitio`] MSB-first header, LEB128 varints, and
@@ -77,13 +89,16 @@
 use std::path::{Path, PathBuf};
 
 use crate::coding::bitio::{BitReader, BitWriter};
-use crate::coordinator::{CommLedger, RoundComm, RoundReport};
+use crate::coordinator::{CommLedger, RoundComm, RoundReport, SelectionSnapshot, REJECT_KINDS};
 use crate::net::wire::{crc32, push_varint, Cursor, WireError};
 
 /// Snapshot file magic: `"SGSP"` read MSB-first.
 pub const SNAP_MAGIC: u32 = 0x5347_5350;
-/// Current snapshot-format version.
-pub const SNAP_VERSION: u8 = 1;
+/// Current snapshot-format version (what writers emit).
+pub const SNAP_VERSION: u8 = 2;
+/// Oldest version the loader still accepts (legacy raw selection, no
+/// reject counters).
+pub const SNAP_VERSION_V1: u8 = 1;
 /// Snapshot kind byte: the full-coordinator state (the only kind so far).
 pub const KIND_COORDINATOR: u8 = 1;
 /// Fixed header bytes before the length varint (magic + version + kind).
@@ -138,7 +153,10 @@ impl std::fmt::Display for SnapshotError {
             }
             SnapshotError::BadMagic { got } => write!(f, "bad snapshot magic {got:#010x}"),
             SnapshotError::BadVersion { got } => {
-                write!(f, "snapshot version {got} (this build speaks {SNAP_VERSION})")
+                write!(
+                    f,
+                    "snapshot version {got} (this build speaks {SNAP_VERSION_V1}..={SNAP_VERSION})"
+                )
             }
             SnapshotError::BadKind { got } => write!(f, "unknown snapshot kind {got}"),
             SnapshotError::BadCrc { want, got } => {
@@ -236,8 +254,12 @@ pub struct CoordinatorSnapshot {
     pub rounds_total: usize,
     /// Protocol phase at the boundary (checked against `next_round`).
     pub phase: SnapPhase,
-    /// Raw server-side selection RNG stream ([`crate::util::rng::Pcg64::to_raw`]).
-    pub select_rng: [u64; 4],
+    /// Serialized selection state. Legacy runs carry the raw `Pcg64`
+    /// words ([`crate::util::rng::Pcg64::to_raw`]); hardened committed-
+    /// seed runs carry only the root-key commitment plus the round
+    /// counter — the raw generator state never touches the file
+    /// (DESIGN.md §13).
+    pub selection: SelectionSnapshot,
     /// Model parameters after the last completed round.
     pub params: Vec<f32>,
     /// Algorithm 2's server-side EF residual `ẽ`; `None` for algorithms
@@ -290,8 +312,20 @@ impl CoordinatorSnapshot {
                 push_varint(&mut body, t as u64);
             }
         }
-        for w in self.select_rng {
-            body.extend_from_slice(&w.to_le_bytes());
+        match &self.selection {
+            SelectionSnapshot::LegacyRaw(raw) => {
+                body.push(0);
+                for w in raw {
+                    body.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            SelectionSnapshot::Committed { commitment, round } => {
+                body.push(1);
+                for w in commitment {
+                    body.extend_from_slice(&w.to_le_bytes());
+                }
+                push_varint(&mut body, *round);
+            }
         }
         for &x in &self.params {
             body.extend_from_slice(&x.to_le_bytes());
@@ -332,6 +366,9 @@ impl CoordinatorSnapshot {
             push_varint(&mut body, rec.downlink_wire_bytes);
             push_varint(&mut body, rec.stragglers as u64);
         }
+        for &n in self.ledger.rejects_by_kind() {
+            push_varint(&mut body, n);
+        }
         assert!(body.len() <= MAX_SNAPSHOT, "snapshot body {} B exceeds cap", body.len());
 
         let start = out.len();
@@ -359,7 +396,7 @@ impl CoordinatorSnapshot {
             return Err(SnapshotError::BadMagic { got: magic });
         }
         let version = hdr.read_bits(8).expect("fixed header") as u8;
-        if version != SNAP_VERSION {
+        if !(SNAP_VERSION_V1..=SNAP_VERSION).contains(&version) {
             return Err(SnapshotError::BadVersion { got: version });
         }
         let kind = hdr.read_bits(8).expect("fixed header") as u8;
@@ -415,13 +452,35 @@ impl CoordinatorSnapshot {
             }
             _ => return Err(SnapshotError::Malformed("unknown phase tag")),
         };
-        let mut select_rng = [0u64; 4];
-        for w in select_rng.iter_mut() {
-            *w = cur.u64le()?;
-        }
-        if select_rng[2] & 1 == 0 {
-            return Err(SnapshotError::Malformed("even selection-rng increment"));
-        }
+        // v1 bodies have no selection tag: the four raw words follow the
+        // phase directly. v2 bodies lead with the mode tag.
+        let sel_tag = if version == SNAP_VERSION_V1 { 0 } else { cur.u8()? };
+        let selection = match sel_tag {
+            0 => {
+                let mut raw = [0u64; 4];
+                for w in raw.iter_mut() {
+                    *w = cur.u64le()?;
+                }
+                if raw[2] & 1 == 0 {
+                    return Err(SnapshotError::Malformed("even selection-rng increment"));
+                }
+                SelectionSnapshot::LegacyRaw(raw)
+            }
+            1 => {
+                let mut commitment = [0u64; 4];
+                for w in commitment.iter_mut() {
+                    *w = cur.u64le()?;
+                }
+                let round = cur.varint()?;
+                if round != next_round as u64 {
+                    return Err(SnapshotError::Malformed(
+                        "selection round disagrees with next_round",
+                    ));
+                }
+                SelectionSnapshot::Committed { commitment, round }
+            }
+            _ => return Err(SnapshotError::Malformed("unknown selection tag")),
+        };
         // Parameter (and residual) bytes are taken before any allocation,
         // so a hostile dim can never demand memory the file lacks.
         let pbytes = cur.take(4 * dim)?;
@@ -497,6 +556,12 @@ impl CoordinatorSnapshot {
                 stragglers,
             });
         }
+        let mut rejects = [0u64; REJECT_KINDS];
+        if version >= SNAP_VERSION {
+            for r in rejects.iter_mut() {
+                *r = cur.varint()?;
+            }
+        }
         cur.done()?;
 
         Ok(CoordinatorSnapshot {
@@ -505,11 +570,11 @@ impl CoordinatorSnapshot {
             workers,
             rounds_total,
             phase,
-            select_rng,
+            selection,
             params,
             residual,
             reports,
-            ledger: CommLedger::from_records(records),
+            ledger: CommLedger::from_records_with_rejects(records, rejects),
         })
     }
 
@@ -603,7 +668,7 @@ mod tests {
             workers: 4,
             rounds_total: next.max(1) + 2,
             phase: if next == 0 { SnapPhase::Standby } else { SnapPhase::Broadcast(next - 1) },
-            select_rng: crate::util::rng::Pcg64::seed_from(7).to_raw(),
+            selection: SelectionSnapshot::LegacyRaw(crate::util::rng::Pcg64::seed_from(7).to_raw()),
             params: (0..dim).map(|i| i as f32 * 0.25 - 0.5).collect(),
             residual: Some(vec![0.125; dim]),
             reports,
@@ -722,12 +787,131 @@ mod tests {
         ));
 
         let mut snap = sample(1);
-        snap.select_rng[2] &= !1;
+        match &mut snap.selection {
+            SelectionSnapshot::LegacyRaw(raw) => raw[2] &= !1,
+            _ => unreachable!("sample uses legacy selection"),
+        }
         let bytes = snap.encode();
         assert!(matches!(
             CoordinatorSnapshot::decode(&bytes),
             Err(SnapshotError::Malformed("even selection-rng increment"))
         ));
+
+        // A committed round counter must agree with next_round.
+        let mut snap = sample(2);
+        snap.selection = SelectionSnapshot::Committed { commitment: [1, 2, 3, 4], round: 5 };
+        let bytes = snap.encode();
+        assert!(matches!(
+            CoordinatorSnapshot::decode(&bytes),
+            Err(SnapshotError::Malformed("selection round disagrees with next_round"))
+        ));
+    }
+
+    #[test]
+    fn committed_selection_roundtrips_without_raw_state() {
+        let mut snap = sample(3);
+        let commitment = crate::util::rng::selection_commitment(
+            &crate::util::rng::selection_root_key(7),
+        );
+        snap.selection = SelectionSnapshot::Committed { commitment, round: 3 };
+        snap.ledger.add_rejects(&[0, 1, 0, 2, 0, 0]);
+        let bytes = snap.encode();
+        let back = CoordinatorSnapshot::decode(&bytes).expect("decode");
+        assert_eq!(back, snap);
+        assert_eq!(back.ledger.total_rejects(), 3);
+        // The raw Pcg64 words for seed 7 must not appear anywhere in the
+        // file: hardened snapshots leak no generator state.
+        for w in crate::util::rng::Pcg64::seed_from(7).to_raw() {
+            let needle = w.to_le_bytes();
+            assert!(
+                !bytes.windows(8).any(|win| win == needle),
+                "raw selection word {w:#x} leaked into a committed snapshot"
+            );
+        }
+    }
+
+    #[test]
+    fn v1_snapshots_still_load() {
+        // Re-encode sample(2) in the version-1 grammar by hand: no
+        // selection tag (raw words follow the phase) and no reject
+        // counters. The loader must accept it bit-for-bit.
+        let snap = sample(2);
+        let raw = match snap.selection {
+            SelectionSnapshot::LegacyRaw(raw) => raw,
+            _ => unreachable!(),
+        };
+        let mut body = Vec::new();
+        body.extend_from_slice(&snap.fingerprint.to_le_bytes());
+        push_varint(&mut body, snap.dim as u64);
+        push_varint(&mut body, snap.workers as u64);
+        push_varint(&mut body, snap.rounds_total as u64);
+        push_varint(&mut body, snap.reports.len() as u64);
+        match snap.phase {
+            SnapPhase::Standby => {
+                body.push(0);
+                push_varint(&mut body, 0);
+            }
+            SnapPhase::Broadcast(t) => {
+                body.push(1);
+                push_varint(&mut body, t as u64);
+            }
+        }
+        for w in raw {
+            body.extend_from_slice(&w.to_le_bytes());
+        }
+        for &x in &snap.params {
+            body.extend_from_slice(&x.to_le_bytes());
+        }
+        match &snap.residual {
+            None => body.push(0),
+            Some(r) => {
+                body.push(1);
+                for &x in r {
+                    body.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        push_varint(&mut body, snap.reports.len() as u64);
+        for r in &snap.reports {
+            push_varint(&mut body, r.round as u64);
+            body.extend_from_slice(&r.lr.to_le_bytes());
+            body.extend_from_slice(&r.train_loss.to_le_bytes());
+            match r.eval {
+                None => body.push(0),
+                Some((l, a)) => {
+                    body.push(1);
+                    body.extend_from_slice(&l.to_le_bytes());
+                    body.extend_from_slice(&a.to_le_bytes());
+                }
+            }
+            body.extend_from_slice(&r.uplink_bits.to_le_bytes());
+            body.extend_from_slice(&r.downlink_bits.to_le_bytes());
+            body.extend_from_slice(&r.cum_uplink_bits.to_le_bytes());
+        }
+        push_varint(&mut body, snap.ledger.rounds() as u64);
+        for rec in snap.ledger.records() {
+            body.extend_from_slice(&rec.uplink_bits.to_le_bytes());
+            body.extend_from_slice(&rec.downlink_bits.to_le_bytes());
+            push_varint(&mut body, rec.senders as u64);
+            push_varint(&mut body, rec.uplink_nnz as u64);
+            push_varint(&mut body, rec.uplink_wire_bytes);
+            push_varint(&mut body, rec.downlink_wire_bytes);
+            push_varint(&mut body, rec.stragglers as u64);
+        }
+        let mut v1 = Vec::new();
+        let mut hdr = BitWriter::new();
+        hdr.push_bits(SNAP_MAGIC as u64, 32);
+        hdr.push_bits(SNAP_VERSION_V1 as u64, 8);
+        hdr.push_bits(KIND_COORDINATOR as u64, 8);
+        v1.extend_from_slice(hdr.as_bytes());
+        push_varint(&mut v1, body.len() as u64);
+        v1.extend_from_slice(&body);
+        let crc = crc32(&v1);
+        v1.extend_from_slice(&crc.to_le_bytes());
+
+        let back = CoordinatorSnapshot::decode(&v1).expect("v1 decode");
+        assert_eq!(back, snap);
+        assert_eq!(back.ledger.total_rejects(), 0);
     }
 
     #[test]

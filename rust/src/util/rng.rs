@@ -328,6 +328,180 @@ pub fn bernoulli_threshold(p: f32) -> f32 {
     p * 4_294_967_296.0
 }
 
+// ---------------------------------------------------------------------------
+// ChaCha20 — the hardened selection PRF (DESIGN.md §13).
+//
+// `Pcg64` is statistically strong but *cryptographically transparent*: its
+// raw state is exported into coordinator snapshots (`to_raw`) and its
+// output function is invertible enough that observed outputs leak the
+// stream (the pcg-breaker line of work). Client selection is an
+// adversarially relevant stream — a worker that predicts future rounds can
+// time its misbehaviour — so the hardened selection mode replaces it with
+// ChaCha20 used as a PRF: per-round key = PRF(root key, round), and only a
+// one-way commitment to the root key ever leaves the process. This is a
+// from-scratch implementation (the crate has zero dependencies); it is
+// used as a deterministic PRF, not for interop, and its block function is
+// pinned by golden tests below.
+
+/// ChaCha quarter round.
+#[inline]
+fn chacha_qr(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(16);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(12);
+    s[a] = s[a].wrapping_add(s[b]);
+    s[d] = (s[d] ^ s[a]).rotate_left(8);
+    s[c] = s[c].wrapping_add(s[d]);
+    s[b] = (s[b] ^ s[c]).rotate_left(7);
+}
+
+/// One ChaCha20 block: 256-bit key, 64-bit block counter, 64-bit nonce
+/// (the original djb layout), 20 rounds, feed-forward add. The
+/// feed-forward makes the block function one-way in the key, which is
+/// what the selection commitment relies on.
+pub fn chacha20_block(key: &[u32; 8], counter: u64, nonce: u64) -> [u32; 16] {
+    let mut s: [u32; 16] = [
+        0x6170_7865,
+        0x3320_646e,
+        0x7962_2d32,
+        0x6b20_6574,
+        key[0],
+        key[1],
+        key[2],
+        key[3],
+        key[4],
+        key[5],
+        key[6],
+        key[7],
+        counter as u32,
+        (counter >> 32) as u32,
+        nonce as u32,
+        (nonce >> 32) as u32,
+    ];
+    let init = s;
+    for _ in 0..10 {
+        chacha_qr(&mut s, 0, 4, 8, 12);
+        chacha_qr(&mut s, 1, 5, 9, 13);
+        chacha_qr(&mut s, 2, 6, 10, 14);
+        chacha_qr(&mut s, 3, 7, 11, 15);
+        chacha_qr(&mut s, 0, 5, 10, 15);
+        chacha_qr(&mut s, 1, 6, 11, 12);
+        chacha_qr(&mut s, 2, 7, 8, 13);
+        chacha_qr(&mut s, 3, 4, 9, 14);
+    }
+    for (w, i) in s.iter_mut().zip(init) {
+        *w = w.wrapping_add(i);
+    }
+    s
+}
+
+/// A ChaCha20-keyed deterministic generator: the hardened selection
+/// stream. Unlike [`Pcg64`] it deliberately exposes **no** raw-state
+/// export — a `ChaChaRng` can only be rebuilt from the key it was built
+/// from, never from observed state or outputs.
+pub struct ChaChaRng {
+    key: [u32; 8],
+    nonce: u64,
+    counter: u64,
+    block: [u32; 16],
+    idx: usize,
+}
+
+impl ChaChaRng {
+    pub fn new(key: [u32; 8], nonce: u64) -> Self {
+        Self { key, nonce, counter: 0, block: [0; 16], idx: 16 }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.idx == 16 {
+            self.block = chacha20_block(&self.key, self.counter, self.nonce);
+            self.counter = self.counter.wrapping_add(1);
+            self.idx = 0;
+        }
+        let w = self.block[self.idx];
+        self.idx += 1;
+        w
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let lo = self.next_u32() as u64;
+        let hi = self.next_u32() as u64;
+        lo | (hi << 32)
+    }
+
+    /// Uniform integer in `[0, bound)` (same Lemire method as [`Pcg64`]).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize index in `[0, bound)`.
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+}
+
+/// Expand a 64-bit run seed into a 256-bit ChaCha root key (domain
+/// separated from every other seed use in the crate). The key has only
+/// the seed's entropy — the hardened mode protects the selection stream
+/// against *state disclosure and output observation*, not against a
+/// guessable root seed (DESIGN.md §13 spells out this boundary).
+pub fn selection_root_key(seed: u64) -> [u32; 8] {
+    let mut out = [0u32; 8];
+    let mut x = seed ^ 0x5e1e_c7ed_c0a1_17ed;
+    for pair in out.chunks_mut(2) {
+        x = splitmix64(x);
+        pair[0] = x as u32;
+        pair[1] = (x >> 32) as u32;
+    }
+    out
+}
+
+/// Nonce domains for the selection PRF uses of ChaCha20.
+pub const SELECT_NONCE_COMMIT: u64 = 0x434f_4d4d_4954_0001; // commitment
+pub const SELECT_NONCE_ROUND_KEY: u64 = 0x524b_4559_0000_0001; // per-round key
+pub const SELECT_NONCE_STREAM: u64 = 0x5354_5245_414d_0001; // selection draws
+
+/// One-way commitment to a selection root key: the first 256 bits of a
+/// ChaCha20 block keyed by it. The feed-forward add makes recovering the
+/// key from the commitment as hard as inverting the block function; the
+/// commitment is what snapshots and the rendezvous broadcast carry
+/// instead of raw RNG state.
+pub fn selection_commitment(key: &[u32; 8]) -> [u64; 4] {
+    let block = chacha20_block(key, 0, SELECT_NONCE_COMMIT);
+    let mut out = [0u64; 4];
+    for (o, pair) in out.iter_mut().zip(block.chunks(2)) {
+        *o = pair[0] as u64 | ((pair[1] as u64) << 32);
+    }
+    out
+}
+
+/// Per-round selection key: PRF(root key, round). Stateless in the round
+/// index, which is what makes hardened selection snapshot-free — a resume
+/// recomputes any round's key from the (never-serialized) root key.
+pub fn selection_round_key(root: &[u32; 8], round: u64) -> [u32; 8] {
+    let block = chacha20_block(root, round, SELECT_NONCE_ROUND_KEY);
+    let mut out = [0u32; 8];
+    out.copy_from_slice(&block[..8]);
+    out
+}
+
 /// splitmix64 — used for seed mixing only.
 pub fn splitmix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
@@ -492,6 +666,99 @@ mod tests {
         }
         assert_eq!(counts[0], 0);
         assert!((counts[1] as f64 - 7_000.0).abs() < 350.0);
+    }
+
+    #[test]
+    fn chacha_block_is_deterministic_and_key_sensitive() {
+        let k1 = selection_root_key(7);
+        let k2 = selection_root_key(8);
+        assert_eq!(chacha20_block(&k1, 0, 1), chacha20_block(&k1, 0, 1));
+        assert_ne!(chacha20_block(&k1, 0, 1), chacha20_block(&k2, 0, 1));
+        assert_ne!(chacha20_block(&k1, 0, 1), chacha20_block(&k1, 1, 1));
+        assert_ne!(chacha20_block(&k1, 0, 1), chacha20_block(&k1, 0, 2));
+    }
+
+    #[test]
+    fn chacha_rng_stream_uniformity() {
+        let mut rng = ChaChaRng::new(selection_root_key(42), 9);
+        let mut counts = [0usize; 8];
+        for _ in 0..80_000 {
+            counts[rng.below(8) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "count {c}");
+        }
+    }
+
+    #[test]
+    fn chacha_rng_replays_from_key_only() {
+        let key = selection_root_key(1234);
+        let mut a = ChaChaRng::new(key, 5);
+        let mut b = ChaChaRng::new(key, 5);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = ChaChaRng::new(key, 6);
+        let same = (0..64).filter(|_| a.next_u64() == c.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn selection_commitment_hides_the_key() {
+        let key = selection_root_key(99);
+        let commit = selection_commitment(&key);
+        assert_eq!(commit, selection_commitment(&key));
+        assert_ne!(commit, selection_commitment(&selection_root_key(100)));
+        // The commitment words must not simply restate the key words.
+        let key_words: Vec<u64> = key
+            .chunks(2)
+            .map(|p| p[0] as u64 | ((p[1] as u64) << 32))
+            .collect();
+        for w in commit {
+            assert!(!key_words.contains(&w), "commitment leaks a key word");
+        }
+    }
+
+    #[test]
+    fn round_keys_decorrelate_across_rounds() {
+        let root = selection_root_key(3);
+        let k0 = selection_round_key(&root, 0);
+        let k1 = selection_round_key(&root, 1);
+        assert_ne!(k0, k1);
+        assert_eq!(k0, selection_round_key(&root, 0));
+        // Derived round keys never equal the root key itself.
+        assert_ne!(k0, root);
+    }
+
+    /// Pins the block function's exact output so an accidental edit to the
+    /// round structure cannot slip through (the selection commitment and
+    /// every hardened selection draw depend on these exact bits).
+    #[test]
+    fn chacha_block_golden() {
+        // All-zero key/counter/nonce: the djb layout coincides with the
+        // IETF layout here, so this is the published ChaCha20 zero-input
+        // keystream (76 b8 e0 ad a0 f1 3d 90 …) as little-endian words.
+        let zero = chacha20_block(&[0u32; 8], 0, 0);
+        assert_eq!(
+            zero,
+            [
+                0xade0_b876, 0x903d_f1a0, 0xe56a_5d40, 0x28bd_8653, 0xb819_d2bd, 0x1aed_8da0,
+                0xccef_36a8, 0xc70d_778b, 0x7c59_41da, 0x8d48_5751, 0x3fe0_2477, 0x374a_d8b8,
+                0xf4b8_436a, 0x1ca1_1815, 0x69b6_87c3, 0x8665_eeb2,
+            ]
+        );
+        // Crate-specific derivation pins: the seed→key expansion and the
+        // 64/64 counter/nonce split (verified against an independent
+        // implementation at introduction).
+        assert_eq!(
+            selection_root_key(7),
+            [
+                0x9211_5837, 0x3040_2385, 0xae70_d8a7, 0x6faf_0c10, 0x9aac_5911, 0xbe42_f387,
+                0xade2_6130, 0x56b4_f039,
+            ]
+        );
+        let b = chacha20_block(&selection_root_key(7), 3, SELECT_NONCE_STREAM);
+        assert_eq!(&b[..4], &[0x087e_a1de, 0xfac5_663e, 0xfd23_c2f7, 0xd1cd_ce4c]);
     }
 
     #[test]

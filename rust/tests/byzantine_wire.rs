@@ -1,0 +1,339 @@
+//! Byzantine behaviour over the real transport (DESIGN.md §13): the
+//! malicious-agent mode of `net::client` enacts protocol-level attacks
+//! against the coordinator's actual framing, and the coordinator answers
+//! with typed rejects — the run completes without stalling or panicking.
+//!
+//! * Equivocation (duplicate + stale-replay frames) → `Duplicate` /
+//!   `BadRound` / `Late` rejects, over both TCP and (on unix) UDS.
+//! * Adaptive stragglers → straggler marks plus `Late`/`BadRound`
+//!   rejects, with honest co-hosted workers served first.
+//! * Gradient-level attacks (collusive sign-flip) need no protocol
+//!   defense and must stay **bit-identical** between the wire and the
+//!   in-process engine — the attack rides inside `worker_round`.
+//! * Payload-level garbage (wrong-dimension frames) is a contract
+//!   violation, not a reject: the hostile peer is hung up on and the
+//!   run recovers through the dead-range bookkeeping.
+
+use sparsignd::compressors::{CompressedGrad, CompressorKind, PackedTernary};
+use sparsignd::coordinator::{
+    AggregationRule, Algorithm, AttackPlan, ClassifierEnv, RunHistory, TrainingRun,
+};
+use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+use sparsignd::model::ModelKind;
+use sparsignd::net::client::loopback_endpoint;
+use sparsignd::net::wire::{self, WireBuf};
+use sparsignd::net::{
+    read_frame_bytes, run_fleet, run_loopback, Endpoint, FleetOptions, Msg, NetCoordinator,
+    RejectReason, ServeOptions,
+};
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Cumulative count of one reject kind from the ledger's per-kind array.
+fn kind(by_kind: &[u64], r: RejectReason) -> u64 {
+    by_kind[r.index()]
+}
+
+fn env(workers: usize) -> ClassifierEnv {
+    let task = SyntheticTask::generate(
+        SyntheticSpec {
+            dim: 10,
+            classes: 3,
+            modes: 1,
+            separation: 1.8,
+            noise: 0.25,
+            label_noise: 0.0,
+            train: 360,
+            test: 90,
+        },
+        71,
+    );
+    let mut rng = Pcg64::seed_from(72);
+    let fed = DirichletPartitioner { alpha: 0.5, workers }.partition(&task.train, &mut rng);
+    ClassifierEnv::new(
+        ModelKind::Linear { inputs: 10, classes: 3 }.build(),
+        task.train,
+        task.test,
+        fed,
+        16,
+    )
+}
+
+fn base_run(rounds: usize) -> TrainingRun {
+    let mut run = TrainingRun::new(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        LrSchedule::Const { lr: 0.05 },
+        rounds,
+    );
+    run.eval_every = 0;
+    run.seed = 11;
+    run
+}
+
+/// Equivocating cohort over a live loopback transport: every round each
+/// equivocator sends its honest update, a byte-identical duplicate and a
+/// stale-round replay. The run must complete all rounds with the abuse
+/// confined to typed rejects.
+fn equivocation_round_trip(uds: bool) {
+    let workers = 8;
+    let rounds = 4;
+    let e = env(workers);
+    let mut rng = Pcg64::seed_from(73);
+    let init = e.init_params(&mut rng);
+    let mut run = base_run(rounds);
+    let equivocators = 2u64;
+    run.attack = Some(AttackPlan::parse("equivocate:2", workers, run.seed).expect("spec"));
+
+    let serve_opts = ServeOptions::new(loopback_endpoint(uds));
+    let fleet_opts = FleetOptions { agents: 2, ..FleetOptions::default() };
+    let eval = |p: &[f32]| e.evaluate(p);
+    let (hist, stats) =
+        run_loopback(&run, &e, init, &eval, serve_opts, &fleet_opts).expect("attacked run");
+
+    assert_eq!(hist.reports.len(), rounds, "every round completed");
+    assert!(hist.final_params.iter().all(|v| v.is_finite()));
+    // Honest updates all landed: no straggler marks, full senders.
+    assert_eq!(hist.ledger.total_stragglers(), 0);
+    for t in 0..rounds {
+        assert_eq!(hist.ledger.get(t).unwrap().senders, workers, "round {t}");
+    }
+
+    // Each equivocator sends two bad frames per round (duplicate +
+    // stale replay); rejects issued while the final round tears down may
+    // race the last ledger fold, so the floor excludes one round.
+    let by_kind = hist.ledger.rejects_by_kind();
+    let total = hist.ledger.total_rejects();
+    let per_round = 2 * equivocators;
+    assert!(
+        total >= per_round * (rounds as u64 - 1) && total <= per_round * rounds as u64,
+        "expected ~{} typed rejects, got {total} ({by_kind:?})",
+        per_round * rounds as u64
+    );
+    // Every reject is one of the equivocation shapes; nothing leaked
+    // into the identity/selection kinds.
+    assert_eq!(kind(by_kind, RejectReason::NotSelected), 0, "{by_kind:?}");
+    assert_eq!(kind(by_kind, RejectReason::UnknownWorker), 0, "{by_kind:?}");
+    assert_eq!(kind(by_kind, RejectReason::WrongClient), 0, "{by_kind:?}");
+    let equivocation_kinds = kind(by_kind, RejectReason::BadRound)
+        + kind(by_kind, RejectReason::Duplicate)
+        + kind(by_kind, RejectReason::Late);
+    assert_eq!(equivocation_kinds, total, "{by_kind:?}");
+    assert!(kind(by_kind, RejectReason::Duplicate) > 0, "duplicates typed: {by_kind:?}");
+    assert!(kind(by_kind, RejectReason::BadRound) > 0, "stale replays typed: {by_kind:?}");
+    // The fleet saw its abuse answered (rejects from completed rounds
+    // are always read back before `Fin`).
+    assert!(stats.rejected > 0);
+}
+
+#[test]
+fn equivocating_cohort_draws_typed_rejects_over_tcp() {
+    equivocation_round_trip(false);
+}
+
+#[cfg(unix)]
+#[test]
+fn equivocating_cohort_draws_typed_rejects_over_uds() {
+    equivocation_round_trip(true);
+}
+
+/// Adaptive straggler cohort: holds its (honest) update past every
+/// announced deadline. Each round closes on time, marks the straggler
+/// and types its late frame `BadRound`/`Late`; honest workers co-hosted
+/// on the same agent are unaffected.
+#[test]
+fn adaptive_straggler_is_marked_and_typed_each_round() {
+    let workers = 6;
+    let rounds = 3;
+    let e = env(workers);
+    let mut rng = Pcg64::seed_from(74);
+    let init = e.init_params(&mut rng);
+    let mut run = base_run(rounds);
+    run.attack = Some(AttackPlan::parse("straggle:1:100", workers, run.seed).expect("spec"));
+
+    let mut serve_opts = ServeOptions::new(loopback_endpoint(false));
+    serve_opts.round_deadline = Some(Duration::from_millis(500));
+    let fleet_opts = FleetOptions { agents: 2, ..FleetOptions::default() };
+    let coordinator = NetCoordinator::bind(serve_opts).expect("bind");
+    let ep = coordinator.local_endpoint().clone();
+    let mut hist: Option<RunHistory> = None;
+    std::thread::scope(|s| {
+        let handle = s.spawn(|| coordinator.serve(&run, workers, init, &|p| e.evaluate(p)));
+        // The straggler sleeps through the final round's teardown and
+        // then writes into a closed socket, so its agent may error out
+        // after `Fin` — the server-side history is the acceptance
+        // signal, not the fleet result.
+        let _ = run_fleet(&ep, &run, &e, &fleet_opts);
+        hist = Some(handle.join().expect("server thread").expect("serve"));
+    });
+    let hist = hist.unwrap();
+
+    assert_eq!(hist.reports.len(), rounds, "deadline keeps every round moving");
+    assert!(hist.final_params.iter().all(|v| v.is_finite()));
+    // One straggler mark per round (more only if the harness itself ran
+    // slow enough for an honest worker to miss a deadline).
+    assert!(
+        hist.ledger.total_stragglers() >= rounds,
+        "straggler must be marked every round, got {}",
+        hist.ledger.total_stragglers()
+    );
+    // Its held-back frames land after the rounds close: all typed as
+    // `Late`/`BadRound`, nothing else. The final round's frame hits the
+    // torn-down socket, so the floor is rounds - 1.
+    let by_kind = hist.ledger.rejects_by_kind();
+    let total = hist.ledger.total_rejects();
+    assert!(total >= rounds as u64 - 1, "late frames must be typed, got {by_kind:?}");
+    let late_kinds = kind(by_kind, RejectReason::BadRound) + kind(by_kind, RejectReason::Late);
+    assert_eq!(late_kinds, total, "{by_kind:?}");
+}
+
+/// Gradient-level attacks ride inside `worker_round`, so an attacked
+/// wire run is *bit-identical* to the attacked in-process run — and
+/// draws no rejects: the transport has nothing to defend against.
+#[test]
+fn collusive_sign_flip_over_the_wire_matches_the_engine() {
+    let workers = 10;
+    let e = env(workers);
+    let mut rng = Pcg64::seed_from(75);
+    let init = e.init_params(&mut rng);
+    let mut run = base_run(5);
+    run.algorithm = Algorithm::CompressedGd {
+        compressor: CompressorKind::Sparsign { budget: 1.0 },
+        aggregation: AggregationRule::MajorityVote,
+    };
+    run.attack = Some(AttackPlan::parse("collusive:30%", workers, run.seed).expect("spec"));
+
+    let in_process = run.run(&e, init.clone(), &|p| e.evaluate(p));
+    let serve_opts = ServeOptions::new(loopback_endpoint(false));
+    let fleet_opts = FleetOptions { agents: 3, ..FleetOptions::default() };
+    let eval = |p: &[f32]| e.evaluate(p);
+    let (wire_hist, stats) =
+        run_loopback(&run, &e, init, &eval, serve_opts, &fleet_opts).expect("loopback run");
+
+    assert_eq!(in_process.final_params, wire_hist.final_params, "final params");
+    assert_eq!(in_process.reports.len(), wire_hist.reports.len());
+    for (ra, rb) in in_process.reports.iter().zip(&wire_hist.reports) {
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.uplink_bits, rb.uplink_bits, "round {}", ra.round);
+    }
+    assert_eq!(wire_hist.ledger.total_rejects(), 0, "no protocol misbehaviour");
+    assert_eq!(wire_hist.ledger.total_stragglers(), 0);
+    assert_eq!(stats.rejected, 0);
+}
+
+/// A hand-driven wire client: speaks raw frames over TCP so the test
+/// controls exactly what the server sees — honestly for the workers it
+/// covers, or hostilely for the garbage-payload probe.
+struct RawWire {
+    stream: TcpStream,
+    wbuf: WireBuf,
+    out: Vec<u8>,
+    buf: Vec<u8>,
+}
+
+impl RawWire {
+    fn connect(ep: &Endpoint) -> Self {
+        let Endpoint::Tcp(addr) = ep else { panic!("garbage test speaks tcp") };
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_nodelay(true).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Self { stream, wbuf: WireBuf::new(), out: Vec::new(), buf: Vec::new() }
+    }
+
+    fn send(&mut self, msg: &Msg) {
+        self.out.clear();
+        self.wbuf.encode(msg, &mut self.out);
+        self.stream.write_all(&self.out).expect("send frame");
+    }
+
+    /// A protocol-valid update frame whose ternary payload has dimension
+    /// `d` — pass the run's true dimension for an honest submission, or
+    /// any other value for the payload-contract violation the server
+    /// answers with a hangup rather than a typed reject.
+    fn send_update(&mut self, t: u64, worker: u64, d: usize) {
+        let pack = PackedTernary::dense_signs(&vec![0.5f32; d], 1.0);
+        let grad = CompressedGrad::ternary(pack, 2.0 * d as f64);
+        self.out.clear();
+        self.wbuf.encode_update(t, worker, 0.25, &grad, &mut self.out);
+        self.stream.write_all(&self.out).expect("send update");
+    }
+
+    fn recv(&mut self) -> Option<Msg> {
+        let n = read_frame_bytes(&mut self.stream, wire::MAX_PAYLOAD, &mut self.buf).ok()?;
+        let (frame, _) = wire::parse_frame(&self.buf[..n], wire::MAX_PAYLOAD).ok()?;
+        wire::decode_msg(frame).ok()
+    }
+
+    fn join(&mut self, lo: u64, hi: u64, cfg: u64) {
+        self.send(&Msg::Hello { lo, hi, cfg, env: 0 });
+        assert!(matches!(self.recv(), Some(Msg::Welcome { .. })), "expected Welcome");
+    }
+
+    fn expect_round(&mut self) -> (u64, Vec<u64>) {
+        match self.recv() {
+            Some(Msg::RoundOpen { t, selected, .. }) => (t, selected),
+            other => panic!("expected RoundOpen, got {other:?}"),
+        }
+    }
+}
+
+/// Wrong-dimension update frames break the payload contract: the server
+/// hangs up on the sender (no typed reject, no panic), releases its
+/// claimed range through the dead-conn bookkeeping, and the honest rest
+/// of the fleet finishes the run.
+#[test]
+fn garbage_payload_is_hung_up_on_and_the_run_survives() {
+    let workers = 3;
+    let rounds = 2;
+    let d = 10;
+    let e = env(workers);
+    let mut rng = Pcg64::seed_from(76);
+    let init = e.init_params(&mut rng);
+    let run = base_run(rounds);
+    let cfg = run.config_fingerprint(d, workers, 0);
+
+    let opts = ServeOptions::new(Endpoint::Tcp("127.0.0.1:0".into()));
+    let coordinator = NetCoordinator::bind(opts).expect("bind");
+    let ep = coordinator.local_endpoint().clone();
+    let mut hist: Option<RunHistory> = None;
+    std::thread::scope(|s| {
+        let handle = s.spawn(|| coordinator.serve(&run, workers, init, &|p| e.evaluate(p)));
+
+        // The hostile client claims worker 2 with a well-formed
+        // rendezvous; an honest raw client covers the rest.
+        let mut evil = RawWire::connect(&ep);
+        let mut honest = RawWire::connect(&ep);
+        evil.join(2, 3, cfg);
+        honest.join(0, 2, cfg);
+
+        let (et, esel) = evil.expect_round();
+        assert_eq!(esel, vec![2]);
+        evil.send_update(et, 2, d + 3); // dimension lie
+        // The server's answer to a payload violation is a shutdown: the
+        // next read hits EOF, not a typed reject.
+        assert!(evil.recv().is_none(), "garbage sender must be hung up on");
+
+        for _ in 0..rounds {
+            let (t, sel) = honest.expect_round();
+            for &w in &sel {
+                honest.send_update(t, w, d);
+            }
+        }
+        assert!(matches!(honest.recv(), Some(Msg::Fin { .. })), "expected Fin");
+        hist = Some(handle.join().expect("server thread").expect("serve"));
+    });
+    let hist = hist.unwrap();
+
+    assert_eq!(hist.reports.len(), rounds);
+    assert!(hist.final_params.iter().all(|v| v.is_finite()));
+    // The hostile worker's slot went unfilled in both rounds; its frames
+    // never became rejects (the violation is below the reject layer).
+    assert_eq!(hist.ledger.total_stragglers(), rounds);
+    assert_eq!(hist.ledger.total_rejects(), 0);
+    assert_eq!(*hist.ledger.rejects_by_kind(), [0u64; 6]);
+}

@@ -63,6 +63,7 @@ fn run_with_threads(
         eval_every: 4,
         seed: 77,
         attack,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads,
     };
@@ -155,12 +156,12 @@ fn equivalence_holds_under_partial_participation() {
 #[test]
 fn equivalence_holds_under_attack() {
     let e = env(12);
-    let attack = Some(AttackPlan { attack: Attack::Rescale { factor: 100.0 }, malicious: 3 });
+    let attack = Some(AttackPlan::new(Attack::Rescale { factor: 100.0 }, 3));
     let alg = Algorithm::CompressedGd {
         compressor: CompressorKind::Sparsign { budget: 1.0 },
         aggregation: AggregationRule::MajorityVote,
     };
-    let serial = run_with_threads(&e, alg.clone(), 1.0, attack, Some(1));
+    let serial = run_with_threads(&e, alg.clone(), 1.0, attack.clone(), Some(1));
     let par = run_with_threads(&e, alg, 1.0, attack, Some(4));
     assert_identical(&serial, &par, "sparsign under rescale attack");
 }

@@ -46,6 +46,7 @@ fn base_run(alg: Algorithm) -> TrainingRun {
         eval_every: 0,
         seed: 0,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads: None,
     }

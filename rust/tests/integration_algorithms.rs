@@ -31,6 +31,7 @@ fn run_rosen(alg: Algorithm, rounds: usize, participation: f64, seed: u64) -> f6
         eval_every: 0,
         seed,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads: None,
     };
@@ -91,7 +92,7 @@ fn worker_ef_fixes_sign_under_full_participation() {
 fn rescale_attack_hurts_norm_scaled_compressors_more() {
     let mut cfg = ExperimentConfig::fast_preset();
     cfg.rounds = 100;
-    let attack = Some(AttackPlan { attack: Attack::Rescale { factor: 1e4 }, malicious: 4 });
+    let attack = Some(AttackPlan::new(Attack::Rescale { factor: 1e4 }, 4));
 
     let final_acc = |kind: CompressorKind, agg: AggregationRule, lr: f64, attack: Option<AttackPlan>| {
         let env = build_env(&cfg, 0xda7a);
@@ -105,6 +106,7 @@ fn rescale_attack_hurts_norm_scaled_compressors_more() {
             eval_every: 0,
             seed: 0,
             attack,
+            selection: Default::default(),
             allow_stateful_with_sampling: false,
             threads: None,
         };
@@ -118,7 +120,7 @@ fn rescale_attack_hurts_norm_scaled_compressors_more() {
         CompressorKind::Sparsign { budget: 1.0 },
         AggregationRule::MajorityVote,
         0.005,
-        attack,
+        attack.clone(),
     );
     let terngrad_clean =
         final_acc(CompressorKind::TernGrad, AggregationRule::Mean, 0.05, None);
@@ -163,6 +165,7 @@ fn ef_sparsign_trains_under_low_participation() {
         eval_every: 0,
         seed: 1,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads: None,
     };
@@ -189,6 +192,7 @@ fn local_steps_reduce_rounds_to_target() {
             eval_every: 2,
             seed: 2,
             attack: None,
+            selection: Default::default(),
             allow_stateful_with_sampling: false,
             threads: None,
         };
@@ -226,6 +230,7 @@ fn sparsign_uplink_beats_dense_sign_when_sparse() {
             eval_every: 0,
             seed: 3,
             attack: None,
+            selection: Default::default(),
             allow_stateful_with_sampling: false,
             threads: None,
         };

@@ -82,6 +82,7 @@ fn every_algorithm_family_trains_and_accounts_bits() {
             eval_every: 0,
             seed: 0,
             attack: None,
+            selection: Default::default(),
             allow_stateful_with_sampling: false,
             threads: None,
         };
@@ -118,6 +119,7 @@ fn theory_rate_schedule_trains() {
         eval_every: 0,
         seed: 5,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads: None,
     };

@@ -502,6 +502,7 @@ fn gen_wire_msg(rng: &mut Pcg64) -> Msg {
             workers: rng.next_u64() >> 32,
             dim: rng.next_u64() >> 32,
             rounds: rng.next_u64() >> 32,
+            commit: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
         },
         2 => {
             let k = rng.index(20);
@@ -622,10 +623,11 @@ fn prop_wire_truncations_yield_typed_errors() {
 // allocation; and a golden re-encoding pins the version-1 layout.
 // ---------------------------------------------------------------------
 
-use sparsignd::coordinator::{CommLedger, RoundComm, RoundReport};
+use sparsignd::coordinator::{CommLedger, RoundComm, RoundReport, SelectionSnapshot};
 use sparsignd::snapshot::{
     CoordinatorSnapshot, SnapPhase, SnapshotError, KIND_COORDINATOR, SNAP_MAGIC, SNAP_VERSION,
 };
+use sparsignd::util::rng::{selection_commitment, selection_root_key};
 
 /// Random-but-internally-consistent coordinator snapshot.
 fn gen_snapshot(rng: &mut Pcg64) -> CoordinatorSnapshot {
@@ -655,6 +657,13 @@ fn gen_snapshot(rng: &mut Pcg64) -> CoordinatorSnapshot {
             stragglers: rng.index(16),
         });
     }
+    if rng.bernoulli(0.5) {
+        let mut rejects = [0u64; sparsignd::coordinator::REJECT_KINDS];
+        for r in rejects.iter_mut() {
+            *r = rng.next_u64() >> 48;
+        }
+        ledger.add_rejects(&rejects);
+    }
     let mut params = vec![0.0f32; dim];
     rng.fill_normal(&mut params, 0.0, 1.0);
     let residual = rng.bernoulli(0.5).then(|| {
@@ -668,7 +677,14 @@ fn gen_snapshot(rng: &mut Pcg64) -> CoordinatorSnapshot {
         workers: 1 + rng.index(1000),
         rounds_total,
         phase: if next == 0 { SnapPhase::Standby } else { SnapPhase::Broadcast(next - 1) },
-        select_rng: Pcg64::seed_from(rng.next_u64()).to_raw(),
+        selection: if rng.bernoulli(0.5) {
+            SelectionSnapshot::LegacyRaw(Pcg64::seed_from(rng.next_u64()).to_raw())
+        } else {
+            SelectionSnapshot::Committed {
+                commitment: selection_commitment(&selection_root_key(rng.next_u64())),
+                round: next as u64,
+            }
+        },
         params,
         residual,
         reports,
@@ -745,12 +761,12 @@ fn snapshot_version_bump_is_refused() {
     ));
 }
 
-/// Golden layout pin for snapshot version 1: an independent re-encoding
-/// of the DESIGN.md §12 grammar must byte-match the codec's output for a
-/// fixed state. Any layout change breaks this test, forcing a version
-/// bump (and a new golden) rather than a silent format drift.
+/// Golden layout pin for snapshot version 2: an independent re-encoding
+/// of the DESIGN.md §12/§13 grammar must byte-match the codec's output
+/// for a fixed state. Any layout change breaks this test, forcing a
+/// version bump (and a new golden) rather than a silent format drift.
 #[test]
-fn snapshot_v1_golden_layout() {
+fn snapshot_v2_golden_layout() {
     // Independent LEB128 (deliberately re-implemented, not imported).
     fn varint(out: &mut Vec<u8>, mut v: u64) {
         loop {
@@ -764,13 +780,14 @@ fn snapshot_v1_golden_layout() {
         }
     }
     let rng_raw = [0x1111u64, 0x2222, 0x3333 | 1, 0x4444];
+    let rejects = [1u64, 0, 2, 0, 0, 300];
     let snap = CoordinatorSnapshot {
         fingerprint: 0x0102_0304_0506_0708,
         dim: 3,
         workers: 2,
         rounds_total: 4,
         phase: SnapPhase::Broadcast(0),
-        select_rng: rng_raw,
+        selection: SelectionSnapshot::LegacyRaw(rng_raw),
         params: vec![1.0, -2.5, 0.0],
         residual: None,
         reports: vec![RoundReport {
@@ -782,19 +799,22 @@ fn snapshot_v1_golden_layout() {
             downlink_bits: 64.0,
             cum_uplink_bits: 300.0,
         }],
-        ledger: CommLedger::from_records(vec![RoundComm {
-            uplink_bits: 300.0,
-            downlink_bits: 64.0,
-            senders: 2,
-            uplink_nnz: 5,
-            uplink_wire_bytes: 130,
-            downlink_wire_bytes: 260,
-            stragglers: 0,
-        }]),
+        ledger: CommLedger::from_records_with_rejects(
+            vec![RoundComm {
+                uplink_bits: 300.0,
+                downlink_bits: 64.0,
+                senders: 2,
+                uplink_nnz: 5,
+                uplink_wire_bytes: 130,
+                downlink_wire_bytes: 260,
+                stragglers: 0,
+            }],
+            rejects,
+        ),
     };
 
     // body := fingerprint dim workers rounds_total next_round phase
-    //         rng params residual_flag reports ledger
+    //         selection params residual_flag reports ledger rejects
     let mut body = Vec::new();
     body.extend_from_slice(&0x0102_0304_0506_0708u64.to_le_bytes());
     varint(&mut body, 3); // dim
@@ -803,6 +823,7 @@ fn snapshot_v1_golden_layout() {
     varint(&mut body, 1); // next_round
     body.push(1); // phase tag: Broadcast
     varint(&mut body, 0); // phase round
+    body.push(0); // selection tag: legacy raw
     for w in rng_raw {
         body.extend_from_slice(&w.to_le_bytes());
     }
@@ -828,6 +849,9 @@ fn snapshot_v1_golden_layout() {
     varint(&mut body, 130); // uplink wire bytes
     varint(&mut body, 260); // downlink wire bytes
     varint(&mut body, 0); // stragglers
+    for r in rejects {
+        varint(&mut body, r); // cumulative typed rejects by kind
+    }
 
     // file := magic("SGSP") version kind len body crc
     let mut expect = Vec::new();
@@ -840,7 +864,7 @@ fn snapshot_v1_golden_layout() {
     let crc = wire::crc32(&expect);
     expect.extend_from_slice(&crc.to_le_bytes());
 
-    assert_eq!(snap.encode(), expect, "snapshot v1 layout drifted — bump SNAP_VERSION");
+    assert_eq!(snap.encode(), expect, "snapshot v2 layout drifted — bump SNAP_VERSION");
     assert_eq!(CoordinatorSnapshot::decode(&expect).expect("golden decodes"), snap);
 }
 

@@ -93,6 +93,7 @@ fn run_and_count(e: &ClassifierEnv, rounds: usize) -> (Vec<f32>, u64) {
         eval_every: 0, // eval only on the final round, once per run
         seed: 11,
         attack: None,
+        selection: Default::default(),
         allow_stateful_with_sampling: false,
         threads: Some(3), // force the pool engine regardless of host cores
     };
@@ -127,4 +128,23 @@ fn pool_engine_steady_state_rounds_allocate_nothing() {
         long_rounds - short_rounds,
         allocs_long as i64 - allocs_short as i64
     );
+
+    // The participation-1.0 identity fast path of
+    // `WorkerSampler::select_into` is the selection half of the same
+    // contract: once the buffer is warm it must neither draw randomness
+    // nor touch the heap. (Same binary so no concurrent test can perturb
+    // the global counter.)
+    let sampler = sparsignd::coordinator::WorkerSampler::new(64, 1.0);
+    let mut rng = Pcg64::seed_from(1);
+    let raw_before = rng.to_raw();
+    let mut buf = Vec::new();
+    sampler.select_into(&mut rng, &mut buf); // warm the buffer
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..32 {
+        sampler.select_into(&mut rng, &mut buf);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(after - before, 0, "full-participation select_into touched the heap");
+    assert_eq!(rng.to_raw(), raw_before, "identity fast path must not consume randomness");
+    assert_eq!(buf, (0..64).collect::<Vec<_>>());
 }
