@@ -19,6 +19,9 @@
 //!      bit-identical to the in-process engine
 //!   9. the coordinator snapshot (DESIGN.md §12): atomic write + validated
 //!      load latency at d = 1e5 with a 200-round history
+//!  10. the sharded aggregation tree (DESIGN.md §14): 100k multiplexed
+//!      virtual clients through 2–4 aggregator shards over loopback
+//!      sockets, bit-identical to the in-process engine
 //!
 //! `cargo bench --bench perf_hotpaths` runs the full configuration;
 //! `-- --smoke` (or `PERF_SMOKE=1`) shrinks every section for CI.
@@ -636,6 +639,94 @@ fn bench_transport(rep: &mut Report, smoke: bool) {
     rep.num("transport_fleet_updates", stats.updates_sent as f64);
 }
 
+/// §14: the sharded aggregation tree — a 100,000-virtual-client cohort
+/// multiplexed through aggregator shards over loopback sockets, every
+/// shard folding its slice into a local `VoteAccumulator` and streaming
+/// one merged frame per round to the root. Participation is 0.3 so the
+/// per-round cohort (30,000) stays under the 15-bit streaming plane cap
+/// (`MAX_STREAM_MSGS` = 32,767) that the shard wire frame inherits.
+/// Asserts the tree's `RunHistory` is bit-identical to the in-process
+/// engine before recording throughput.
+fn bench_shard(rep: &mut Report, smoke: bool) {
+    use sparsignd::net;
+
+    let m = 100_000;
+    let shards = if smoke { 2 } else { 4 };
+    let d = 1 << 10;
+    let rounds = if smoke { 2 } else { 5 };
+    let env = SynthEnv { d, m };
+    let run = TrainingRun {
+        algorithm: Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 1.0 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        schedule: LrSchedule::Const { lr: 0.01 },
+        rounds,
+        participation: 0.3,
+        eval_every: 0,
+        seed: 14,
+        attack: None,
+        selection: Default::default(),
+        allow_stateful_with_sampling: false,
+        threads: None,
+    };
+    let init = vec![0.0f32; d];
+    let in_process = run.run(&env, init.clone(), &|_p| (0.0, 0.0));
+
+    let uds = cfg!(unix);
+    let transport = if uds { "uds" } else { "tcp" };
+    println!(
+        "\n-- shard tree: {m} virtual clients through {shards} aggregator shards \
+         over {transport} (participation 0.3, d = {d}) --"
+    );
+    let serve_opts = net::ServeOptions::new(net::client::loopback_endpoint(uds));
+    let fleet_opts = net::FleetOptions::default();
+    let eval = |_p: &[f32]| (0.0, 0.0);
+    let t0 = std::time::Instant::now();
+    let (wire_hist, stats, shard_stats) = net::run_loopback_sharded(
+        &run,
+        &env,
+        init,
+        &eval,
+        serve_opts,
+        &fleet_opts,
+        shards,
+        uds,
+    )
+    .expect("sharded loopback");
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        in_process.final_params, wire_hist.final_params,
+        "sharded run diverged from the in-process engine"
+    );
+    assert_eq!(in_process.total_uplink(), wire_hist.total_uplink());
+    assert!(
+        wire_hist.ledger.total_shard_uplink_wire_bytes() > 0,
+        "no shard-tier traffic recorded — the tree did not carry the round"
+    );
+    let folded: u64 = shard_stats.iter().map(|s| s.updates_folded).sum();
+    let rps = rounds as f64 / dt;
+    let shard_up_kib = wire_hist.ledger.total_shard_uplink_wire_bytes() as f64 / 1024.0;
+    let client_up_mib = wire_hist.ledger.total_uplink_wire_bytes() as f64 / (1 << 20) as f64;
+    println!(
+        "  {rounds} rounds in {dt:.2}s → {rps:.2} rounds/s \
+         ({:.2}M updates/s folded at the shard tier; client uplink {client_up_mib:.1} MiB \
+         → root uplink {shard_up_kib:.1} KiB merged; bit-identical)",
+        folded as f64 / dt / 1e6
+    );
+    rep.num("shard_clients", m as f64);
+    rep.num("shard_count", shards as f64);
+    rep.num("shard_dim", d as f64);
+    rep.num("shard_rounds_per_sec", rps);
+    rep.num("shard_updates_folded", folded as f64);
+    rep.num("shard_root_uplink_kib", shard_up_kib);
+    rep.num("shard_fleet_updates", stats.updates_sent as f64);
+    if let Some(mib) = vm_hwm_mib() {
+        println!("  peak RSS (VmHWM proxy): {mib:.1} MiB");
+        rep.num("shard_peak_rss_mib", mib);
+    }
+}
+
 /// §12: coordinator snapshot write/load at d = 1e5 — the elastic-resume
 /// overhead a production deployment pays every k rounds. Write includes
 /// the full atomic dance (temp file + fsync + rename); load includes
@@ -662,6 +753,8 @@ fn bench_snapshot(rep: &mut Report, smoke: bool) {
                 uplink_nnz: d / 2,
                 uplink_wire_bytes: (d / 4) as u64,
                 downlink_wire_bytes: 4 * d as u64,
+                shard_uplink_wire_bytes: 0,
+                shard_downlink_wire_bytes: 0,
                 stragglers: 0,
             });
             RoundReport {
@@ -927,6 +1020,7 @@ fn main() {
         bench_engine(&mut rep, 1 << 15, 16, 2);
         bench_engine_10k(&mut rep, true);
         bench_transport(&mut rep, true);
+        bench_shard(&mut rep, true);
         bench_snapshot(&mut rep, true);
         bench_golomb(1 << 14);
         bench_gemm(&mut rep, true);
@@ -939,6 +1033,7 @@ fn main() {
         bench_engine(&mut rep, 1 << 20, 100, 2);
         bench_engine_10k(&mut rep, false);
         bench_transport(&mut rep, false);
+        bench_shard(&mut rep, false);
         bench_snapshot(&mut rep, false);
         bench_golomb(1 << 20);
         bench_gemm(&mut rep, false);

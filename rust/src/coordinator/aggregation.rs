@@ -107,6 +107,27 @@ impl VoteAccumulator {
         self.msgs
     }
 
+    /// Coordinate dimension of the current `reset` shape.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Carry-save counter depth (`⌈log₂(cap+1)⌉`).
+    pub fn planes(&self) -> usize {
+        self.planes
+    }
+
+    /// Raw positive counter planes (`words(dim) · planes` words,
+    /// per-word plane-major) — what a shard ships upstream verbatim.
+    pub fn pos_planes(&self) -> &[u64] {
+        &self.pos
+    }
+
+    /// Raw negative counter planes (layout as [`Self::pos_planes`]).
+    pub fn neg_planes(&self) -> &[u64] {
+        &self.neg
+    }
+
     /// Fold one message's votes: `counts[i] += q[i]`. Empty support words
     /// are skipped, so sparse sparsign messages cost ~nothing.
     pub fn fold(&mut self, pack: &PackedTernary) {
@@ -127,14 +148,19 @@ impl VoteAccumulator {
         }
     }
 
-    /// Word-parallel merge of another accumulator over the same `reset`
-    /// shape: each of `other`'s planes carry-save-ripples into `self`
-    /// starting at its own weight.
+    /// Word-parallel merge of another accumulator: each of `other`'s
+    /// planes carry-save-ripples into `self` starting at its own
+    /// weight. `other` may be *shallower* (fewer planes — e.g. a shard
+    /// sized for its local sub-cohort merging into a root sized for the
+    /// whole selection); its counts are exact integers, so the merge is
+    /// bit-identical to folding `other`'s messages here directly.
     pub fn merge(&mut self, other: &VoteAccumulator) {
-        assert_eq!(
-            (self.dim, self.planes),
-            (other.dim, other.planes),
-            "vote accumulator shape mismatch"
+        assert_eq!(self.dim, other.dim, "vote accumulator dim mismatch");
+        assert!(
+            other.planes <= self.planes,
+            "merge source deeper ({} planes) than target ({})",
+            other.planes,
+            self.planes
         );
         assert!(
             self.msgs + other.msgs <= self.cap,
@@ -142,19 +168,121 @@ impl VoteAccumulator {
             self.cap
         );
         self.msgs += other.msgs;
-        let planes = self.planes;
+        let sp = self.planes;
+        let op = other.planes;
         for w in 0..self.words() {
-            let base = w * planes;
-            for b in 0..planes {
-                let pa = other.pos[base + b];
+            let sbase = w * sp;
+            let obase = w * op;
+            for b in 0..op {
+                let pa = other.pos[obase + b];
                 if pa != 0 {
-                    vc_add(&mut self.pos[base + b..base + planes], pa);
+                    vc_add(&mut self.pos[sbase + b..sbase + sp], pa);
                 }
-                let na = other.neg[base + b];
+                let na = other.neg[obase + b];
                 if na != 0 {
-                    vc_add(&mut self.neg[base + b..base + planes], na);
+                    vc_add(&mut self.neg[sbase + b..sbase + sp], na);
                 }
             }
+        }
+    }
+
+    /// [`Self::merge`] from wire bytes: fold a decoded `ShardAgg`'s raw
+    /// counter planes (little-endian `u64` words, per-word plane-major)
+    /// carrying `msgs` messages at depth `planes`. Structural failures
+    /// are typed errors (the root hangs up on the shard rather than
+    /// panicking); *count* integrity inside the planes is the shard's
+    /// responsibility — shards are trusted aggregation infrastructure
+    /// (DESIGN.md §14.5), unlike clients.
+    pub fn merge_wire_planes(
+        &mut self,
+        msgs: usize,
+        planes: usize,
+        pos: &[u8],
+        neg: &[u8],
+    ) -> Result<(), &'static str> {
+        if planes > self.planes {
+            return Err("shard planes exceed root accumulator depth");
+        }
+        match self.msgs.checked_add(msgs) {
+            Some(total) if total <= self.cap => {}
+            _ => return Err("shard merge exceeds accumulator capacity"),
+        }
+        let want = self.words() * planes * 8;
+        if pos.len() != want || neg.len() != want {
+            return Err("shard plane bytes disagree with dim/planes");
+        }
+        self.msgs += msgs;
+        let sp = self.planes;
+        for w in 0..self.words() {
+            let sbase = w * sp;
+            let obase = w * planes * 8;
+            for b in 0..planes {
+                let at = obase + b * 8;
+                let pa = le_bytes_word(&pos[at..at + 8]);
+                if pa != 0 {
+                    vc_add(&mut self.pos[sbase + b..sbase + sp], pa);
+                }
+                let na = le_bytes_word(&neg[at..at + 8]);
+                if na != 0 {
+                    vc_add(&mut self.neg[sbase + b..sbase + sp], na);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate one wire ternary payload (little-endian mask/sign plane
+    /// bytes) against `dim` without touching any accumulator state:
+    /// exact word count, no mask bits beyond `dim`, sign support inside
+    /// the mask. Returns the support popcount for the `nnz` cross-check.
+    /// Split from [`Self::fold_wire_planes`] so the coordinator can
+    /// validate *before* claiming the round-table slot and fold after —
+    /// a rejected submission must leave the votes untouched.
+    pub fn validate_wire_planes(
+        dim: usize,
+        mask: &[u8],
+        sign: &[u8],
+    ) -> Result<usize, &'static str> {
+        let words = PackedTernary::words(dim);
+        if mask.len() != words * 8 || sign.len() != words * 8 {
+            return Err("plane byte count disagrees with dim");
+        }
+        let mut nnz = 0usize;
+        for (w, (mb, sb)) in mask.chunks_exact(8).zip(sign.chunks_exact(8)).enumerate() {
+            let m = le_bytes_word(mb);
+            let s = le_bytes_word(sb);
+            if s & !m != 0 {
+                return Err("sign bit outside mask support");
+            }
+            if w == words - 1 {
+                let used = dim - (words - 1) * PackedTernary::LANES;
+                if used < PackedTernary::LANES && m >> used != 0 {
+                    return Err("mask bits beyond dim");
+                }
+            }
+            nnz += m.count_ones() as usize;
+        }
+        Ok(nnz)
+    }
+
+    /// Fold one message's votes straight from wire plane bytes — the
+    /// zero-copy shard hot path (no intermediate [`PackedTernary`]).
+    /// The caller must have validated the same bytes with
+    /// [`Self::validate_wire_planes`] first; like [`Self::fold`], empty
+    /// support words are skipped.
+    pub fn fold_wire_planes(&mut self, mask: &[u8], sign: &[u8]) {
+        assert_eq!(mask.len(), self.words() * 8, "plane byte count disagrees with dim");
+        assert!(self.msgs < self.cap, "vote accumulator capacity {} exceeded", self.cap);
+        self.msgs += 1;
+        let planes = self.planes;
+        for (w, (mb, sb)) in mask.chunks_exact(8).zip(sign.chunks_exact(8)).enumerate() {
+            let m = le_bytes_word(mb);
+            if m == 0 {
+                continue;
+            }
+            let s = le_bytes_word(sb);
+            vc_add(&mut self.pos[w * planes..(w + 1) * planes], m & !s);
+            vc_add(&mut self.neg[w * planes..(w + 1) * planes], m & s);
         }
     }
 
@@ -201,6 +329,11 @@ pub fn vote_counts(packs: &[&PackedTernary], dim: usize) -> Vec<i16> {
     let mut counts = vec![0i16; dim];
     acc.counts_into(&mut counts);
     counts
+}
+
+#[inline]
+fn le_bytes_word(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
 }
 
 /// Ripple-carry add of a 64-lane bit vector into a vertical counter.
@@ -561,6 +694,112 @@ mod tests {
         let mut dirty = vec![i16::MAX; d];
         global.counts_into(&mut dirty);
         assert_eq!(dirty, want);
+    }
+
+    #[test]
+    fn shallow_shard_accumulators_merge_bit_identically() {
+        // The sharded-tree shape: each shard sizes its accumulator for
+        // its *local* sub-cohort (fewer planes), the root for the whole
+        // selection. Adversarial boundary splits — empty shards, a
+        // single fat shard, one-message slivers — all merge to the
+        // single-shot counts.
+        let mut rng = Pcg64::seed_from(23);
+        for trial in 0..20 {
+            let d = 1 + rng.index(150);
+            let m = 2 + rng.index(600);
+            let codes: Vec<Vec<i8>> = (0..m)
+                .map(|_| (0..d).map(|_| [-1i8, -1, 0, 1][rng.index(4)]).collect())
+                .collect();
+            let packs: Vec<PackedTernary> =
+                codes.iter().map(|q| PackedTernary::from_codes(q, 1.0)).collect();
+            let refs: Vec<&PackedTernary> = packs.iter().collect();
+            let want = vote_counts(&refs, d);
+            // Random split points, including degenerate ones.
+            let mut cuts = vec![0, m];
+            for _ in 0..rng.index(6) {
+                cuts.push(rng.index(m + 1));
+            }
+            cuts.sort_unstable();
+            let mut root = VoteAccumulator::new();
+            root.reset(d, m);
+            for span in cuts.windows(2) {
+                let (lo, hi) = (span[0], span[1]);
+                if lo == hi {
+                    continue;
+                }
+                let mut shard = VoteAccumulator::new();
+                shard.reset(d, hi - lo); // local capacity ⇒ shallower planes
+                for p in &packs[lo..hi] {
+                    shard.fold(p);
+                }
+                assert!(shard.planes() <= root.planes());
+                root.merge(&shard);
+            }
+            assert_eq!(root.msgs(), m, "trial {trial}");
+            let mut got = vec![0i16; d];
+            root.counts_into(&mut got);
+            assert_eq!(got, want, "trial {trial} (d={d}, m={m}, cuts={cuts:?})");
+        }
+    }
+
+    #[test]
+    fn wire_plane_fold_and_merge_match_pack_path() {
+        let mut rng = Pcg64::seed_from(24);
+        let d = 130; // straddles a word boundary (3 words, 2 used bits)
+        let m = 9;
+        let packs: Vec<PackedTernary> = (0..m)
+            .map(|_| {
+                let q: Vec<i8> = (0..d).map(|_| [-1i8, 0, 0, 1][rng.index(4)]).collect();
+                PackedTernary::from_codes(&q, 1.0)
+            })
+            .collect();
+        let refs: Vec<&PackedTernary> = packs.iter().collect();
+        let want = vote_counts(&refs, d);
+        // Shard side: fold from the wire-byte representation.
+        let mut shard = VoteAccumulator::new();
+        shard.reset(d, m);
+        for p in &packs {
+            let mask: Vec<u8> = p.mask_words().iter().flat_map(|w| w.to_le_bytes()).collect();
+            let sign: Vec<u8> = p.sign_words().iter().flat_map(|w| w.to_le_bytes()).collect();
+            let nnz = VoteAccumulator::validate_wire_planes(d, &mask, &sign).unwrap();
+            assert_eq!(nnz, p.nnz());
+            shard.fold_wire_planes(&mask, &sign);
+        }
+        // Root side: merge from the shard's serialized planes.
+        let pos: Vec<u8> = shard.pos_planes().iter().flat_map(|w| w.to_le_bytes()).collect();
+        let neg: Vec<u8> = shard.neg_planes().iter().flat_map(|w| w.to_le_bytes()).collect();
+        let mut root = VoteAccumulator::new();
+        root.reset(d, 3 * m); // deeper than the shard
+        root.merge_wire_planes(m, shard.planes(), &pos, &neg).unwrap();
+        assert_eq!(root.msgs(), m);
+        let mut got = vec![0i16; d];
+        root.counts_into(&mut got);
+        assert_eq!(got, want);
+        // Structural failures are typed errors, not panics.
+        assert!(root.merge_wire_planes(1, root.planes() + 1, &pos, &neg).is_err());
+        assert!(root.merge_wire_planes(usize::MAX, shard.planes(), &pos, &neg).is_err());
+        assert!(root.merge_wire_planes(1, shard.planes(), &pos[..8], &neg).is_err());
+    }
+
+    #[test]
+    fn wire_plane_validation_rejects_invariant_violations() {
+        let d = 70; // 2 words, 6 used bits in the tail word
+        let words = PackedTernary::words(d);
+        let mut mask = vec![0u8; words * 8];
+        let mut sign = vec![0u8; words * 8];
+        mask[0] = 0b101;
+        sign[0] = 0b001;
+        assert_eq!(VoteAccumulator::validate_wire_planes(d, &mask, &sign).unwrap(), 2);
+        // Sign outside mask.
+        sign[0] = 0b010;
+        assert!(VoteAccumulator::validate_wire_planes(d, &mask, &sign).is_err());
+        sign[0] = 0;
+        // Mask bit beyond dim (bit 70 = tail word bit 6).
+        mask[8] = 1 << 6;
+        assert!(VoteAccumulator::validate_wire_planes(d, &mask, &sign).is_err());
+        mask[8] = 0;
+        // Byte-count mismatch.
+        assert!(VoteAccumulator::validate_wire_planes(d, &mask[..8], &sign).is_err());
     }
 
     #[test]

@@ -48,6 +48,14 @@ pub struct RoundComm {
     /// Actual framed bytes broadcast downlink (per-connection fan-out of
     /// the round-open frame). Zero in-process.
     pub downlink_wire_bytes: u64,
+    /// Shard-tier uplink bytes: the merged accumulator frames the root
+    /// received from its aggregator shards (DESIGN.md §14). Zero for
+    /// in-process and flat transport runs.
+    pub shard_uplink_wire_bytes: u64,
+    /// Shard-tier downlink bytes: round-open frames the root sent to
+    /// shard connections (which relay them to clients; the relayed
+    /// fan-out is counted in `downlink_wire_bytes`).
+    pub shard_downlink_wire_bytes: u64,
     /// Selected workers that failed to deliver before the round closed.
     pub stragglers: usize,
 }
@@ -149,12 +157,29 @@ impl CommLedger {
         downlink_wire_bytes: u64,
         stragglers: usize,
     ) {
+        self.annotate_wire_tiered(t, uplink_wire_bytes, downlink_wire_bytes, stragglers, 0, 0);
+    }
+
+    /// [`Self::annotate_wire`] with the shard tier split out: client-tier
+    /// bytes (direct connections plus what the shards fronted) land in
+    /// the classic columns, root↔shard traffic in the `shard_*` ones.
+    pub fn annotate_wire_tiered(
+        &mut self,
+        t: usize,
+        uplink_wire_bytes: u64,
+        downlink_wire_bytes: u64,
+        stragglers: usize,
+        shard_uplink_wire_bytes: u64,
+        shard_downlink_wire_bytes: u64,
+    ) {
         let r = self
             .rounds
             .get_mut(t)
             .unwrap_or_else(|| panic!("annotate_wire: round {t} not recorded yet"));
         r.uplink_wire_bytes = uplink_wire_bytes;
         r.downlink_wire_bytes = downlink_wire_bytes;
+        r.shard_uplink_wire_bytes = shard_uplink_wire_bytes;
+        r.shard_downlink_wire_bytes = shard_downlink_wire_bytes;
         r.stragglers = stragglers;
     }
 
@@ -180,6 +205,16 @@ impl CommLedger {
     /// Total framed downlink bytes so far (zero for in-process runs).
     pub fn total_downlink_wire_bytes(&self) -> u64 {
         self.rounds.iter().map(|r| r.downlink_wire_bytes).sum()
+    }
+
+    /// Total shard-tier uplink bytes so far (zero without shards).
+    pub fn total_shard_uplink_wire_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.shard_uplink_wire_bytes).sum()
+    }
+
+    /// Total shard-tier downlink bytes so far (zero without shards).
+    pub fn total_shard_downlink_wire_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.shard_downlink_wire_bytes).sum()
     }
 
     /// Total deadline-missed (or mid-round-dropped) selected workers.
@@ -278,10 +313,14 @@ mod tests {
         l.record(RoundComm { uplink_bits: 10.0, senders: 2, ..RoundComm::default() });
         l.record(RoundComm { uplink_bits: 20.0, senders: 2, ..RoundComm::default() });
         l.annotate_wire(0, 128, 64, 0);
-        l.annotate_wire(1, 100, 64, 1);
+        l.annotate_wire_tiered(1, 100, 64, 1, 40, 24);
         assert_eq!(l.total_uplink_wire_bytes(), 228);
         assert_eq!(l.total_downlink_wire_bytes(), 128);
+        assert_eq!(l.total_shard_uplink_wire_bytes(), 40);
+        assert_eq!(l.total_shard_downlink_wire_bytes(), 24);
         assert_eq!(l.total_stragglers(), 1);
+        // The flat annotation leaves the shard tier zeroed.
+        assert_eq!(l.get(0).unwrap().shard_uplink_wire_bytes, 0);
         // Payload-bit estimates are untouched by the wire layer.
         assert_eq!(l.total_uplink(), 30.0);
     }

@@ -42,6 +42,7 @@ pub mod prediction;
 pub mod sampling;
 
 pub use aggregation::{vote_counts, Aggregate, AggregationRule, VoteAccumulator, MAX_STREAM_MSGS};
+pub use pool::chunk_bounds;
 pub use attacks::{Attack, AttackPlan, Cohort};
 pub use env::{ClassifierEnv, GradientSource, RosenbrockEnv};
 pub use ledger::{CommLedger, RoundComm, REJECT_KINDS};

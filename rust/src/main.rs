@@ -7,12 +7,13 @@
 //! sparsignd fig2      [--rounds N] [--lr X] [--csv out.csv]
 //! sparsignd theory    [--trials N]
 //! sparsignd serve     [--addr EP] [--clients M] [--rounds N] [--deadline-ms D]
-//!                     [--snapshot F [--snapshot-every K]] [--resume F]
+//!                     [--shards N] [--snapshot F [--snapshot-every K]] [--resume F]
 //!                     [--drain-after N] [--endpoint-file F] [--history-json F]
 //!                     [--attack SPEC] [--selection legacy|committed] …
 //! sparsignd fleet     [--clients M] [--rounds N] [--transport tcp|uds]
-//!                     [--connect EP | --connect-file F] [--reconnect-secs S]
-//!                     [--attack SPEC] [--selection legacy|committed] …
+//!                     [--shards N | --via-shards] [--connect EP | --connect-file F]
+//!                     [--reconnect-secs S] [--attack SPEC]
+//!                     [--selection legacy|committed] …
 //! sparsignd benchdiff --baseline F --fresh F [--tolerance T]
 //! sparsignd artifacts
 //! ```
@@ -73,11 +74,14 @@ fn usage() {
          \x20 fig2       Rosenbrock worker-sampling figure\n\
          \x20 theory     Theorem 1 Monte-Carlo bound check\n\
          \x20 serve      run the federation coordinator on a TCP/UDS endpoint\n\
-         \x20            (--snapshot/--resume/--drain-after for elastic runs;\n\
-         \x20            exit 3 = drained after snapshot, ready to --resume)\n\
+         \x20            (--shards N adds in-process aggregator shards, endpoint\n\
+         \x20            file gains one shard line each; --snapshot/--resume/\n\
+         \x20            --drain-after for elastic runs; exit 3 = drained)\n\
          \x20 fleet      drive a client fleet; default: loopback run diffed\n\
-         \x20            against the in-process engine (exit 1 on mismatch);\n\
-         \x20            --connect/--connect-file agents reconnect with backoff\n\
+         \x20            against the in-process engine (exit 1 on mismatch;\n\
+         \x20            --shards N routes it through an aggregation tree);\n\
+         \x20            --connect/--connect-file agents reconnect with backoff,\n\
+         \x20            --via-shards splits sub-fleets over the shard lines\n\
          \x20 benchdiff  diff a fresh BENCH_*.json against the committed\n\
          \x20            baseline; exit 1 on >tolerance throughput regression\n\
          \x20 artifacts  list AOT artifacts + staleness"
@@ -343,12 +347,37 @@ fn diff_histories(a: &RunHistory, b: &RunHistory) -> Result<(), String> {
     Ok(())
 }
 
-/// Publish the resolved endpoint atomically (write-temp + rename) so a
-/// fleet polling the file never reads a torn line.
-fn write_endpoint_file(path: &str, ep: &net::Endpoint) -> std::io::Result<()> {
+/// Publish the resolved endpoints atomically (write-temp + rename) so a
+/// fleet polling the file never reads a torn layout. Line 0 is the root
+/// coordinator; with `--shards N`, lines `1..=N` are the shard
+/// endpoints in shard order (`fleet --via-shards` maps line `1 + i` to
+/// worker slice `chunk_bounds(m, N, i)`).
+fn write_endpoint_file(path: &str, eps: &[net::Endpoint]) -> std::io::Result<()> {
     let tmp = format!("{path}.tmp");
-    std::fs::write(&tmp, format!("{ep}\n"))?;
+    let mut body = String::new();
+    for ep in eps {
+        body.push_str(&format!("{ep}\n"));
+    }
+    std::fs::write(&tmp, body)?;
     std::fs::rename(&tmp, path)
+}
+
+/// A listen endpoint for in-process shard `i`, in the root's transport
+/// family: an ephemeral TCP port on the root's interface, or the root's
+/// socket path suffixed per shard.
+fn shard_listen_endpoint(root: &net::Endpoint, i: usize) -> net::Endpoint {
+    #[cfg(not(unix))]
+    let _ = i;
+    match root {
+        net::Endpoint::Tcp(addr) => {
+            let host = addr.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+            net::Endpoint::Tcp(format!("{host}:0"))
+        }
+        #[cfg(unix)]
+        net::Endpoint::Uds(path) => {
+            net::Endpoint::Uds(std::path::PathBuf::from(format!("{}.shard{i}", path.display())))
+        }
+    }
 }
 
 fn cmd_serve(args: &ArgMap) -> i32 {
@@ -407,6 +436,13 @@ fn cmd_serve(args: &ArgMap) -> i32 {
             }
         }
     }
+    // Shard options mirror the root's knobs; captured here because
+    // `bind` consumes `opts`. Shards get 3/4 of the root deadline so
+    // their merged frame lands before the root closes the round.
+    let root_deadline = opts.round_deadline;
+    let rendezvous = opts.rendezvous_timeout;
+    let max_payload = opts.max_payload;
+    let env_fp = opts.env_fingerprint;
     let coordinator = match net::NetCoordinator::bind(opts) {
         Ok(c) => c,
         Err(e) => {
@@ -415,15 +451,67 @@ fn cmd_serve(args: &ArgMap) -> i32 {
         }
     };
     let NetSetup { env, run, init } = setup;
-    println!("coordinator listening on {}", coordinator.local_endpoint());
+    let m = env.fed.workers();
+    let d = init.len();
+    let root_ep = coordinator.local_endpoint().clone();
+    let shards_n = args.get::<usize>("shards", 0);
+    let mut shard_coords = Vec::new();
+    for i in 0..shards_n.min(m) {
+        let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, shards_n.min(m), i);
+        let mut sopts = net::ShardOptions::new(
+            root_ep.clone(),
+            shard_listen_endpoint(&root_ep, i),
+            lo,
+            hi,
+        );
+        sopts.round_deadline = root_deadline.map(|dl| dl * 3 / 4);
+        sopts.rendezvous_timeout = rendezvous;
+        sopts.max_payload = max_payload;
+        sopts.env_fingerprint = env_fp;
+        match net::ShardCoordinator::bind(sopts) {
+            Ok(sc) => shard_coords.push(sc),
+            Err(e) => {
+                eprintln!("shard {i} bind: {e}");
+                return 1;
+            }
+        }
+    }
+    println!("coordinator listening on {root_ep}");
+    for (i, sc) in shard_coords.iter().enumerate() {
+        println!("shard {i} listening on {}", sc.local_endpoint());
+    }
     if let Some(path) = args.get_str("endpoint-file") {
-        if let Err(e) = write_endpoint_file(path, coordinator.local_endpoint()) {
+        let mut eps = vec![root_ep.clone()];
+        eps.extend(shard_coords.iter().map(|sc| sc.local_endpoint().clone()));
+        if let Err(e) = write_endpoint_file(path, &eps) {
             eprintln!("endpoint-file {path}: {e}");
             return 1;
         }
     }
     let eval = |p: &[f32]| env.evaluate(p);
-    match coordinator.serve(&run, env.fed.workers(), init, &eval) {
+    let run_ref = &run;
+    let served = std::thread::scope(|s| {
+        let handles: Vec<_> = shard_coords
+            .into_iter()
+            .enumerate()
+            .map(|(i, sc)| (i, s.spawn(move || sc.run(run_ref, m, d))))
+            .collect();
+        let served = coordinator.serve(run_ref, m, init, &eval);
+        for (i, h) in handles {
+            match h.join() {
+                Ok(Ok(st)) => print_shard_stats(i, &st),
+                // A drained root closes shard connections without `Fin`
+                // (same contract as direct clients) — not a shard fault.
+                Ok(Err(net::NetError::Disconnected)) => {
+                    println!("[shard {i}] upstream closed before Fin (root drained or failed)")
+                }
+                Ok(Err(e)) => eprintln!("[shard {i}] {e}"),
+                Err(_) => eprintln!("[shard {i}] panicked"),
+            }
+        }
+        served
+    });
+    match served {
         Ok(hist) => {
             print_net_history("serve", &hist);
             if let Some(path) = args.get_str("history-json") {
@@ -470,6 +558,68 @@ fn cmd_fleet(args: &ArgMap) -> i32 {
     let mut fleet_opts = net::FleetOptions::default();
     if args.has("agents") {
         fleet_opts.agents = args.get::<usize>("agents", fleet_opts.agents).max(1);
+    }
+
+    // `--via-shards` splits the fleet over the shard lines of an
+    // endpoint file written by `serve --shards N`: sub-fleet i dials
+    // line `1 + i` and hosts worker slice `chunk_bounds(m, N, i)` —
+    // the same partition the serving side claimed.
+    if args.has("via-shards") {
+        let Some(path) = args.get_str("connect-file") else {
+            eprintln!(
+                "--via-shards needs --connect-file (the endpoint layout \
+                 written by `serve --shards N --endpoint-file F`)"
+            );
+            return 2;
+        };
+        let body = match std::fs::read_to_string(path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("connect-file {path}: {e}");
+                return 2;
+            }
+        };
+        let nshards = body.lines().filter(|l| !l.trim().is_empty()).count().saturating_sub(1);
+        if nshards == 0 {
+            eprintln!(
+                "connect-file {path} has no shard lines \
+                 (serve --shards N writes 1 + N lines)"
+            );
+            return 2;
+        }
+        let secs = args.get::<u64>("reconnect-secs", 60);
+        if secs > 0 {
+            fleet_opts.reconnect = Some(std::time::Duration::from_secs(secs));
+        }
+        let m = env.fed.workers();
+        let run_ref = &run;
+        let env_ref = &env;
+        let fo = &fleet_opts;
+        let results: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..nshards)
+                .map(|i| {
+                    let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, nshards, i);
+                    let src = net::EndpointFileLine(path.into(), 1 + i);
+                    s.spawn(move || net::run_fleet_range(&src, run_ref, env_ref, lo, hi, fo))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+        let mut code = 0;
+        for (i, res) in results.into_iter().enumerate() {
+            match res {
+                Ok(Ok(stats)) => print_fleet_stats_tag(&format!("fleet shard {i}"), &stats),
+                Ok(Err(e)) => {
+                    eprintln!("fleet shard {i}: {e}");
+                    code = 1;
+                }
+                Err(_) => {
+                    eprintln!("fleet shard {i}: panicked");
+                    code = 1;
+                }
+            }
+        }
+        return code;
     }
 
     // Join an external coordinator when asked (by address or through an
@@ -525,14 +675,40 @@ fn cmd_fleet(args: &ArgMap) -> i32 {
         serve_opts.round_deadline = Some(std::time::Duration::from_millis(deadline_ms));
     }
     let eval = |p: &[f32]| env.evaluate(p);
-    let (wire_hist, stats) =
+    // `--shards N` routes the same loopback run through an in-process
+    // aggregation tree (N shard tiers between fleet and root); the
+    // bit-identity diff below is the tree's correctness gate.
+    let nshards = args.get::<usize>("shards", 0);
+    let (wire_hist, stats) = if nshards > 0 {
+        let (hist, stats, shard_stats) = match net::run_loopback_sharded(
+            &run,
+            &env,
+            init,
+            &eval,
+            serve_opts,
+            &fleet_opts,
+            nshards,
+            uds,
+        ) {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!("sharded loopback: {e}");
+                return 1;
+            }
+        };
+        for (i, st) in shard_stats.iter().enumerate() {
+            print_shard_stats(i, st);
+        }
+        (hist, stats)
+    } else {
         match net::run_loopback(&run, &env, init, &eval, serve_opts, &fleet_opts) {
             Ok(out) => out,
             Err(e) => {
                 eprintln!("loopback: {e}");
                 return 1;
             }
-        };
+        }
+    };
     print_net_history("loopback", &wire_hist);
     print_fleet_stats(&stats);
     match in_process {
@@ -575,11 +751,27 @@ fn print_net_history(tag: &str, hist: &RunHistory) {
         rejects,
         hist.ledger.total_rejects()
     );
+    // Shard-tier wire traffic (root <-> shards). Nonzero only on runs
+    // routed through the aggregation tree — the CI shard-smoke job
+    // greps this line to prove the tree actually carried the round.
+    let shard_up = hist.ledger.total_shard_uplink_wire_bytes();
+    let shard_down = hist.ledger.total_shard_downlink_wire_bytes();
+    if shard_up > 0 || shard_down > 0 {
+        println!(
+            "[{tag}] shard tier {:.1} KiB up / {:.1} KiB down",
+            shard_up as f64 / 1024.0,
+            shard_down as f64 / 1024.0
+        );
+    }
 }
 
 fn print_fleet_stats(stats: &net::FleetStats) {
+    print_fleet_stats_tag("fleet", stats);
+}
+
+fn print_fleet_stats_tag(tag: &str, stats: &net::FleetStats) {
     println!(
-        "[fleet] {} updates sent, {} rejected, {} round-opens, {} reconnects, \
+        "[{tag}] {} updates sent, {} rejected, {} round-opens, {} reconnects, \
          {:.1} KiB up / {:.1} KiB down",
         stats.updates_sent,
         stats.rejected,
@@ -587,6 +779,19 @@ fn print_fleet_stats(stats: &net::FleetStats) {
         stats.reconnects,
         stats.bytes_up as f64 / 1024.0,
         stats.bytes_down as f64 / 1024.0
+    );
+}
+
+fn print_shard_stats(i: usize, st: &net::ShardStats) {
+    println!(
+        "[shard {i}] rounds {}, folded {}, client {:.1} KiB up / {:.1} KiB down, \
+         root {:.1} KiB up / {:.1} KiB down",
+        st.rounds_relayed,
+        st.updates_folded,
+        st.client_up_bytes as f64 / 1024.0,
+        st.client_down_bytes as f64 / 1024.0,
+        st.root_up_bytes as f64 / 1024.0,
+        st.root_down_bytes as f64 / 1024.0
     );
 }
 
@@ -602,6 +807,7 @@ const GATED_KEYS: &[&str] = &[
     "transport_rounds_per_sec",
     "wire_encode_frames_per_sec",
     "wire_decode_frames_per_sec",
+    "shard_rounds_per_sec",
 ];
 
 fn cmd_benchdiff(args: &ArgMap) -> i32 {

@@ -213,6 +213,7 @@ pub fn history_json(h: &RunHistory) -> String {
         s.push_str(&format!(
             "    {{\"uplink_bits\": {}, \"downlink_bits\": {}, \"senders\": {}, \
              \"uplink_nnz\": {}, \"uplink_wire_bytes\": {}, \"downlink_wire_bytes\": {}, \
+             \"shard_uplink_wire_bytes\": {}, \"shard_downlink_wire_bytes\": {}, \
              \"stragglers\": {}}}{}\n",
             f64_bits(rc.uplink_bits),
             f64_bits(rc.downlink_bits),
@@ -220,6 +221,8 @@ pub fn history_json(h: &RunHistory) -> String {
             rc.uplink_nnz,
             rc.uplink_wire_bytes,
             rc.downlink_wire_bytes,
+            rc.shard_uplink_wire_bytes,
+            rc.shard_downlink_wire_bytes,
             rc.stragglers,
             if i + 1 < recs.len() { "," } else { "" },
         ));

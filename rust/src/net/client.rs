@@ -49,6 +49,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::{pool, Attack, GradientSource, RunHistory, TrainingRun, WorkerScratch};
 
 use super::server::{NetCoordinator, ServeOptions};
+use super::shard::{ShardCoordinator, ShardOptions, ShardStats};
 use super::wire::{self, Msg, WireBuf};
 use super::{read_frame_bytes, Endpoint, NetError, Stream};
 
@@ -74,7 +75,30 @@ pub struct EndpointFile(pub PathBuf);
 impl EndpointSource for EndpointFile {
     fn endpoint(&self) -> Result<Endpoint, NetError> {
         let body = std::fs::read_to_string(&self.0)?;
-        Endpoint::parse(body.trim())
+        // Tolerate the multi-line shard layout: line 0 is the root (or
+        // only) endpoint either way.
+        Endpoint::parse(body.lines().next().unwrap_or("").trim())
+    }
+}
+
+/// One line of a multi-line endpoint file — `serve --shards N` writes
+/// the root endpoint on line 0 and one shard endpoint per following
+/// line, so `fleet --via-shards` points each sub-fleet at its shard.
+/// Re-read on every dial, like [`EndpointFile`].
+#[derive(Clone, Debug)]
+pub struct EndpointFileLine(pub PathBuf, pub usize);
+
+impl EndpointSource for EndpointFileLine {
+    fn endpoint(&self) -> Result<Endpoint, NetError> {
+        let body = std::fs::read_to_string(&self.0)?;
+        let line = body.lines().nth(self.1).ok_or_else(|| {
+            NetError::Config(format!(
+                "endpoint file {} has no line {}",
+                self.0.display(),
+                self.1
+            ))
+        })?;
+        Endpoint::parse(line.trim())
     }
 }
 
@@ -162,8 +186,29 @@ pub fn run_fleet_src(
     env: &dyn GradientSource,
     opts: &FleetOptions,
 ) -> Result<FleetStats, NetError> {
+    run_fleet_range(src, run, env, 0, env.workers(), opts)
+}
+
+/// [`run_fleet_src`] restricted to the global worker slice `[lo, hi)` —
+/// the sub-fleet a shard fronts (`fleet --via-shards`). Worker ids stay
+/// global: the agents claim and compute exactly the workers the shard's
+/// roster spans, from the same seed-derived RNG streams as everywhere
+/// else.
+pub fn run_fleet_range(
+    src: &dyn EndpointSource,
+    run: &TrainingRun,
+    env: &dyn GradientSource,
+    lo: usize,
+    hi: usize,
+    opts: &FleetOptions,
+) -> Result<FleetStats, NetError> {
     let m = env.workers();
     let d = env.dim();
+    if lo >= hi || hi > m {
+        return Err(NetError::Config(format!(
+            "fleet range {lo}..{hi} invalid for population {m}"
+        )));
+    }
     // The stateful-compressor × sampling refusal applies to remote
     // workers exactly as it does in-process.
     let probe = run.build_worker_comps(d, 1);
@@ -182,17 +227,18 @@ pub fn run_fleet_src(
     }
     // Serial-only environments (PJRT-backed models) must not be sampled
     // from concurrent agent threads — same clamp as the round engine.
-    let agents = if env.serial_only() { 1 } else { opts.agents.clamp(1, m) };
+    let span = hi - lo;
+    let agents = if env.serial_only() { 1 } else { opts.agents.clamp(1, span) };
     let results: Mutex<Vec<Result<FleetStats, NetError>>> = Mutex::new(Vec::new());
     std::thread::scope(|s| {
         for a in 0..agents {
-            let (lo, hi) = pool::chunk_bounds(m, agents, a);
-            if lo >= hi {
+            let (alo, ahi) = pool::chunk_bounds(span, agents, a);
+            if alo >= ahi {
                 continue;
             }
             let results = &results;
             s.spawn(move || {
-                let out = agent_loop(src, run, env, lo, hi, opts);
+                let out = agent_loop(src, run, env, lo + alo, lo + ahi, opts);
                 results.lock().unwrap_or_else(|e| e.into_inner()).push(out);
             });
         }
@@ -400,10 +446,11 @@ fn serve_session(
                 let mut deferred: Vec<(u64, Attack)> = Vec::new();
                 for &w64 in &selected {
                     let w = w64 as usize;
+                    // The coordinator broadcasts the *full* cohort in one
+                    // shared frame (flat and sharded tiers alike); each
+                    // agent serves its hosted slice and skips the rest.
                     if w < lo || w >= hi {
-                        return Err(NetError::Protocol(format!(
-                            "selected worker {w} outside hosted range {lo}..{hi}"
-                        )));
+                        continue;
                     }
                     let protocol_attack = run
                         .attack
@@ -534,6 +581,86 @@ pub fn run_loopback(
     });
     let hist = server_out.expect("server result recorded")?;
     Ok((hist, fleet_out?))
+}
+
+/// [`run_loopback`] through an aggregation tree (DESIGN.md §14): bind
+/// the root coordinator plus `shards` aggregator shards partitioning
+/// `0..m` by [`pool::chunk_bounds`], then drive one ranged sub-fleet
+/// per shard — all in this process, over real sockets. Returns the
+/// root's `RunHistory` (bit-identical to the flat and in-process runs
+/// on the same seed — `tests/shard_tree.rs`), the summed fleet stats,
+/// and each shard's per-tier traffic stats in shard order.
+///
+/// When the root runs a `round_deadline`, each shard gets 3/4 of it so
+/// its merged frame lands before the root closes the round; stragglers
+/// therefore draw their `Late` rejects at the shard tier.
+#[allow(clippy::type_complexity)]
+pub fn run_loopback_sharded(
+    run: &TrainingRun,
+    env: &dyn GradientSource,
+    init: Vec<f32>,
+    eval: &(dyn Fn(&[f32]) -> (f64, f64) + Sync),
+    serve_opts: ServeOptions,
+    fleet_opts: &FleetOptions,
+    shards: usize,
+    uds: bool,
+) -> Result<(RunHistory, FleetStats, Vec<ShardStats>), NetError> {
+    let m = env.workers();
+    let d = env.dim();
+    let shards = shards.clamp(1, m);
+    let shard_deadline = serve_opts.round_deadline.map(|dl| dl * 3 / 4);
+    let max_payload = serve_opts.max_payload;
+    let env_tag = serve_opts.env_fingerprint;
+
+    let coordinator = NetCoordinator::bind(serve_opts)?;
+    let root_ep = coordinator.local_endpoint().clone();
+    // Bind every shard before any thread runs so the downstream
+    // endpoints are known up front.
+    let mut bound: Vec<(usize, usize, ShardCoordinator)> = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let (lo, hi) = pool::chunk_bounds(m, shards, i);
+        let mut so = ShardOptions::new(root_ep.clone(), loopback_endpoint(uds), lo, hi);
+        so.round_deadline = shard_deadline;
+        so.max_payload = max_payload;
+        so.env_fingerprint = env_tag;
+        bound.push((lo, hi, ShardCoordinator::bind(so)?));
+    }
+
+    let mut server_out: Option<Result<RunHistory, NetError>> = None;
+    let shard_out: Mutex<Vec<(usize, Result<ShardStats, NetError>)>> = Mutex::new(Vec::new());
+    let fleet_out: Mutex<Vec<Result<FleetStats, NetError>>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        let root = s.spawn(|| coordinator.serve(run, m, init, eval));
+        for (i, (lo, hi, shard)) in bound.into_iter().enumerate() {
+            let shard_ep = shard.local_endpoint().clone();
+            let shard_out = &shard_out;
+            let fleet_out = &fleet_out;
+            s.spawn(move || {
+                let out = shard.run(run, m, d);
+                shard_out.lock().unwrap_or_else(|e| e.into_inner()).push((i, out));
+            });
+            s.spawn(move || {
+                let out = run_fleet_range(&shard_ep, run, env, lo, hi, fleet_opts);
+                fleet_out.lock().unwrap_or_else(|e| e.into_inner()).push(out);
+            });
+        }
+        server_out = Some(match root.join() {
+            Ok(r) => r,
+            Err(_) => Err(NetError::Protocol("root coordinator thread panicked".into())),
+        });
+    });
+    let hist = server_out.expect("server result recorded")?;
+    let mut stats = FleetStats::default();
+    for r in fleet_out.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        stats.absorb(r?);
+    }
+    let mut tagged = shard_out.into_inner().unwrap_or_else(|e| e.into_inner());
+    tagged.sort_by_key(|(i, _)| *i);
+    let mut shard_stats = Vec::new();
+    for (_, r) in tagged {
+        shard_stats.push(r?);
+    }
+    Ok((hist, stats, shard_stats))
 }
 
 /// A fresh loopback endpoint for tests/benches: UDS under the temp dir

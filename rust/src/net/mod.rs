@@ -7,14 +7,23 @@
 //! * [`protocol`] — the coordinator state machine (Standby → RoundOpen →
 //!   Aggregating → Broadcast), rendezvous roster and per-round
 //!   submission table, transport-free and unit-tested.
-//! * [`server`] — the coordinator service over TCP or Unix-domain
-//!   sockets: an accept loop + per-connection readers that decode update
-//!   frames straight into the PR 3 [`crate::coordinator::VoteAccumulator`]
+//! * `reactor` (crate-private) — the readiness-driven connection multiplexer
+//!   (DESIGN.md §14.3): one thread, nonblocking sockets behind an
+//!   epoll/poll shim, vectored broadcast writes of shared refcounted
+//!   frames — no per-connection threads, no sleep-polling accept loop.
+//! * [`server`] — the root coordinator service over TCP or Unix-domain
+//!   sockets, single-threaded on the reactor: update frames decode
+//!   straight into the PR 3 [`crate::coordinator::VoteAccumulator`]
 //!   streaming path (no n-message buffering), with per-round deadlines,
-//!   duplicate/straggler rejection and heartbeat liveness.
+//!   duplicate/straggler rejection, heartbeat liveness, and merged
+//!   shard-aggregate frames from the tier below.
+//! * [`shard`] — the aggregator-shard tier (DESIGN.md §14): each shard
+//!   owns a disjoint client range, folds its slice's updates into a
+//!   local accumulator, and streams exactly one merged frame per round
+//!   upstream; the root merges shard accumulators word-parallel.
 //! * [`client`] — the fleet driver: N agent threads multiplexing M
 //!   virtual clients each through the full protocol, plus the loopback
-//!   harness the equivalence tests and benches use.
+//!   harnesses (flat and sharded) the equivalence tests and benches use.
 //!
 //! An end-to-end loopback run — compress, frame, send, decode, vote,
 //! broadcast — produces a `RunHistory` **bit-identical** to the
@@ -24,14 +33,17 @@
 
 pub mod client;
 pub mod protocol;
+pub(crate) mod reactor;
 pub mod server;
+pub mod shard;
 pub mod wire;
 
 pub use client::{
-    run_fleet, run_fleet_src, run_loopback, EndpointFile, EndpointSource, FleetOptions,
-    FleetStats,
+    run_fleet, run_fleet_range, run_fleet_src, run_loopback, run_loopback_sharded, EndpointFile,
+    EndpointFileLine, EndpointSource, FleetOptions, FleetStats,
 };
 pub use server::{NetCoordinator, ServeOptions};
+pub use shard::{ShardCoordinator, ShardOptions, ShardStats};
 pub use wire::{Msg, MsgType, RejectReason, WireError};
 
 use std::io::{Read, Write};
@@ -186,6 +198,25 @@ impl Stream {
         }
         Ok(())
     }
+
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> Result<(), NetError> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb)?,
+            #[cfg(unix)]
+            Stream::Uds(s) => s.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
+    /// Raw descriptor for reactor registration (unix only).
+    #[cfg(unix)]
+    pub(crate) fn raw_fd(&self) -> std::os::fd::RawFd {
+        use std::os::fd::AsRawFd;
+        match self {
+            Stream::Tcp(s) => s.as_raw_fd(),
+            Stream::Uds(s) => s.as_raw_fd(),
+        }
+    }
 }
 
 impl Read for Stream {
@@ -204,6 +235,14 @@ impl Write for Stream {
             Stream::Tcp(s) => s.write(buf),
             #[cfg(unix)]
             Stream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn write_vectored(&mut self, bufs: &[std::io::IoSlice<'_>]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write_vectored(bufs),
+            #[cfg(unix)]
+            Stream::Uds(s) => s.write_vectored(bufs),
         }
     }
 
@@ -281,6 +320,39 @@ impl Listener {
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
             Err(e) => Err(NetError::Io(e)),
+        }
+    }
+
+    /// Accept one connection for the reactor path: the accepted stream
+    /// *stays nonblocking* (unlike [`Listener::accept`], which restores
+    /// blocking mode for thread-per-connection readers).
+    pub(crate) fn accept_nonblocking(&self) -> Result<Option<Stream>, NetError> {
+        let res = match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                Stream::Tcp(s)
+            }),
+            #[cfg(unix)]
+            Listener::Uds(l) => l.accept().map(|(s, _)| Stream::Uds(s)),
+        };
+        match res {
+            Ok(s) => {
+                s.set_nonblocking(true)?;
+                Ok(Some(s))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(NetError::Io(e)),
+        }
+    }
+
+    /// Raw descriptor for reactor registration (unix only).
+    #[cfg(unix)]
+    pub(crate) fn raw_fd(&self) -> std::os::fd::RawFd {
+        use std::os::fd::AsRawFd;
+        match self {
+            Listener::Tcp(l) => l.as_raw_fd(),
+            #[cfg(unix)]
+            Listener::Uds(l) => l.as_raw_fd(),
         }
     }
 }

@@ -128,10 +128,15 @@ pub enum ClaimError {
 }
 
 /// Rendezvous roster: which connection hosts which worker range. The
-/// fleet partitions `0..total` among its agents; the coordinator starts
-/// the run once the union of claims covers the population exactly.
+/// fleet partitions `base..total` among its agents; the coordinator
+/// starts the run once the union of claims covers the population
+/// exactly. The root coordinator rosters `0..m` (claimants are clients
+/// or aggregator shards); a shard rosters its own slice `lo..hi` of the
+/// population (DESIGN.md §14.2), so worker ids stay *global* at every
+/// tier — no re-indexing anywhere.
 #[derive(Clone, Debug)]
 pub struct Roster {
+    base: usize,
     total: usize,
     /// `(lo, hi, conn)` claims, disjoint by construction.
     claims: Vec<(usize, usize, usize)>,
@@ -139,8 +144,14 @@ pub struct Roster {
 
 impl Roster {
     pub fn new(total: usize) -> Self {
-        assert!(total > 0, "roster needs at least one worker");
-        Self { total, claims: Vec::new() }
+        Self::ranged(0, total)
+    }
+
+    /// Roster over the global worker slice `[base, total)` — the shard
+    /// tier's rendezvous, with claims still in global worker ids.
+    pub fn ranged(base: usize, total: usize) -> Self {
+        assert!(base < total, "roster needs at least one worker");
+        Self { base, total, claims: Vec::new() }
     }
 
     /// Register `conn` as host of workers `[lo, hi)`.
@@ -148,7 +159,7 @@ impl Roster {
         if lo >= hi {
             return Err(ClaimError::EmptyRange);
         }
-        if hi > self.total {
+        if lo < self.base || hi > self.total {
             return Err(ClaimError::OutOfRange);
         }
         for &(clo, chi, cconn) in &self.claims {
@@ -163,11 +174,11 @@ impl Roster {
         Ok(())
     }
 
-    /// True once the claims cover `0..total` exactly.
+    /// True once the claims cover `base..total` exactly.
     pub fn covered(&self) -> bool {
         let mut spans: Vec<(usize, usize)> = self.claims.iter().map(|&(l, h, _)| (l, h)).collect();
         spans.sort_unstable();
-        let mut at = 0;
+        let mut at = self.base;
         for (lo, hi) in spans {
             if lo != at {
                 return false;
@@ -287,6 +298,18 @@ impl RoundTable {
     }
 
     fn validate(&mut self, t: usize, worker: usize, conn: usize) -> Result<usize, RejectReason> {
+        let slot = self.peek(t, worker, conn)?;
+        self.filled[slot] = true;
+        self.received += 1;
+        Ok(slot)
+    }
+
+    /// What [`Self::submit`] would answer for `(t, worker)` from `conn`
+    /// — without claiming the slot or tallying a reject. The root uses
+    /// this to vet every record of a shard's merged frame *before*
+    /// applying any of them: a shard frame is all-or-nothing, so the
+    /// vote accumulator and the filled slots can never diverge.
+    pub fn peek(&self, t: usize, worker: usize, conn: usize) -> Result<usize, RejectReason> {
         if !self.open || t != self.t {
             // A stale round index on a closed table is the classic
             // straggler shape: the round it aimed for is gone.
@@ -306,8 +329,6 @@ impl RoundTable {
         if self.filled[slot] {
             return Err(RejectReason::Duplicate);
         }
-        self.filled[slot] = true;
-        self.received += 1;
         Ok(slot)
     }
 
@@ -347,6 +368,16 @@ impl RoundTable {
                 self.expected -= 1;
             }
         }
+    }
+
+    /// A live shard delivered its merged frame for this round: its
+    /// unfilled slots are the workers that sat out (partial
+    /// participation downstream), and exactly one frame arrives per
+    /// shard per round — stop waiting for them so the root can close
+    /// without running out the deadline. Same arithmetic as
+    /// [`Self::drop_conn`], but the connection stays alive.
+    pub fn settle_conn(&mut self, conn: usize) {
+        self.drop_conn(conn);
     }
 
     /// Close the round (subsequent submissions are `Late`).
@@ -457,6 +488,59 @@ mod tests {
         r.claim(2, 3, 6).unwrap();
         assert!(r.covered());
         assert_eq!(r.owner_of(4), Some(2));
+    }
+
+    #[test]
+    fn ranged_roster_covers_its_slice_in_global_ids() {
+        // A shard hosting workers 4..10 rosters that slice directly;
+        // claims stay in global worker ids.
+        let mut r = Roster::ranged(4, 10);
+        assert_eq!(r.claim(0, 0, 4), Err(ClaimError::OutOfRange));
+        assert_eq!(r.claim(0, 3, 5), Err(ClaimError::OutOfRange));
+        r.claim(0, 4, 7).unwrap();
+        assert!(!r.covered());
+        r.claim(1, 7, 10).unwrap();
+        assert!(r.covered());
+        assert_eq!(r.owner_of(3), None);
+        assert_eq!(r.owner_of(4), Some(0));
+        assert_eq!(r.range_of(1), Some((7, 10)));
+        // Ranged from zero is exactly the classic roster.
+        let mut flat = Roster::ranged(0, 2);
+        flat.claim(0, 0, 2).unwrap();
+        assert!(flat.covered());
+    }
+
+    #[test]
+    fn peek_matches_submit_without_claiming() {
+        let mut tb = RoundTable::new();
+        let alive = vec![true, true];
+        tb.open(1, 4, &[2, 0], &[0, 1], &alive);
+        // Peek agrees with submit on every outcome but mutates nothing.
+        assert_eq!(tb.peek(0, 2, 0), Err(RejectReason::BadRound));
+        assert_eq!(tb.peek(1, 3, 0), Err(RejectReason::NotSelected));
+        assert_eq!(tb.peek(1, 2, 1), Err(RejectReason::WrongClient));
+        assert_eq!(tb.peek(1, 2, 0), Ok(0));
+        assert_eq!(tb.peek(1, 2, 0), Ok(0), "peek never claims the slot");
+        assert_eq!(tb.received(), 0);
+        assert_eq!(tb.take_rejects(), [0; REJECT_KINDS], "peek never tallies");
+        assert_eq!(tb.submit(1, 2, 0), Ok(0));
+        assert_eq!(tb.peek(1, 2, 0), Err(RejectReason::Duplicate));
+    }
+
+    #[test]
+    fn settled_conn_stops_blocking_completion() {
+        let mut tb = RoundTable::new();
+        // Two shards, three selected workers each side of the cut.
+        let alive = vec![true, true];
+        tb.open(0, 6, &[0, 1, 3, 4], &[0, 0, 1, 1], &alive);
+        assert_eq!(tb.submit(0, 0, 0), Ok(0));
+        assert_eq!(tb.submit(0, 3, 1), Ok(2));
+        assert_eq!(tb.submit(0, 4, 1), Ok(3));
+        assert!(!tb.complete(), "worker 1 still owed");
+        // Shard 0's merged frame arrived without worker 1 (it sat out):
+        // settling the shard releases the slot, the shard stays usable.
+        tb.settle_conn(0);
+        assert!(tb.complete());
     }
 
     #[test]

@@ -1,28 +1,33 @@
-//! The coordinator service (DESIGN.md §11): Algorithm 1's parameter
-//! server behind a real socket.
+//! The coordinator service (DESIGN.md §11, §14): Algorithm 1's
+//! parameter server behind a real socket.
 //!
-//! An accept loop (TCP or UDS) hands each connection to a reader thread.
-//! Readers decode update frames **directly into the streaming
-//! aggregation path**: the ternary bitplanes land in a per-reader
-//! scratch [`PackedTernary`] and fold into the shared
-//! [`VoteAccumulator`] under the round gate's mutex — the server never
-//! buffers the round's `n` messages on the unit-scale fast path, exactly
-//! like the PR 3 pool engine. Per-slot scalars (loss, bit cost, nnz) are
-//! recorded in selection-slot order, so the shared
-//! `RoundLoop::finish_round` tail reduces them in the same order as
-//! the in-process engine and the resulting `RunHistory` is
-//! bit-identical on the same seed (`tests/net_loopback.rs`).
+//! One thread, one readiness loop. Every connection — direct client or
+//! aggregator shard — lives in the [`Mux`], and the driver consumes
+//! protocol events frame by frame: no accept thread, no per-connection
+//! reader threads, no sleep-polling, no round gate mutex. Update frames
+//! decode **directly into the streaming aggregation path**: the ternary
+//! bitplanes land in a scratch [`PackedTernary`] and fold into the
+//! [`VoteAccumulator`]; a shard's merged frame lands its carry-save
+//! counter planes with the same word-parallel merge. Per-slot scalars
+//! (loss, bit cost, nnz) are recorded in selection-slot order, so the
+//! shared `RoundLoop::finish_round` tail reduces them in the same order
+//! as the in-process engine and the resulting `RunHistory` is
+//! bit-identical on the same seed (`tests/net_loopback.rs`,
+//! `tests/shard_tree.rs`) — flat or sharded, the votes commute.
+//!
+//! The per-round model broadcast is encoded **once** into a refcounted
+//! frame shared by every connection's output queue (clients filter the
+//! full cohort to their hosted range; shards relay the bytes verbatim),
+//! so the O(d) payload is never copied per peer.
 //!
 //! Fault handling: duplicate submissions are rejected idempotently,
 //! frames for a closed round are rejected as `Late`, a dead connection's
 //! pending slots stop being awaited, and a round closes at its deadline
-//! with partial participation — stragglers are counted in the ledger
-//! (`CommLedger::annotate_wire`), alongside the actual framed byte
-//! traffic.
+//! with partial participation — stragglers are counted in the ledger,
+//! alongside the actual framed byte traffic, split by tier
+//! (client-facing vs shard-facing wire bytes).
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::compressors::{CompressedGrad, PackedTernary};
@@ -30,8 +35,9 @@ use crate::coordinator::{RoundLoop, RunHistory, TrainingRun, VoteAccumulator, Wo
 use crate::snapshot::{CoordinatorSnapshot, SnapshotPolicy};
 
 use super::protocol::{PhaseTracker, Roster, RoundTable};
+use super::reactor::{Mux, MuxEvent};
 use super::wire::{self, Msg, MsgType, RejectReason, WireBuf};
-use super::{read_frame_bytes, Endpoint, Listener, NetError, Stream};
+use super::{Endpoint, Listener, NetError};
 
 /// Coordinator service configuration.
 #[derive(Clone, Debug)]
@@ -80,43 +86,6 @@ impl ServeOptions {
             env_fingerprint: 0,
         }
     }
-}
-
-/// One registered connection: the writer half plus its identity. The
-/// reader half lives in the connection's reader thread.
-struct ConnHandle {
-    id: usize,
-    writer: Mutex<Stream>,
-}
-
-/// Shared round state behind one mutex: the pure submission table plus
-/// the payload slots and the streaming vote accumulator. Readers mutate
-/// it frame-by-frame; the coordinator opens/closes rounds and extracts.
-struct Gate {
-    d: usize,
-    streaming: bool,
-    table: RoundTable,
-    losses: Vec<f64>,
-    bits: Vec<f64>,
-    nnz: Vec<usize>,
-    msgs: Vec<Option<CompressedGrad>>,
-    votes: VoteAccumulator,
-    up_bytes: u64,
-}
-
-/// Reader/accept → coordinator notifications.
-enum Ev {
-    /// A connection was accepted and its reader thread started.
-    Conn(Arc<ConnHandle>),
-    /// Rendezvous claim for workers `[lo, hi)` with the claimant's
-    /// run-config and environment fingerprints.
-    Hello { conn: usize, lo: u64, hi: u64, cfg: u64, env: u64 },
-    /// Liveness ping.
-    Beat { conn: usize },
-    /// A submission was accepted into the gate.
-    Progress,
-    /// Connection closed (EOF, IO error, or protocol violation).
-    Gone { conn: usize },
 }
 
 /// A bound-but-not-yet-serving coordinator; binding first lets callers
@@ -168,10 +137,20 @@ impl NetCoordinator {
                 .map_err(NetError::Snapshot)?,
             None => RoundLoop::new(run, d, workers, streaming, env_tag, init),
         };
-        let opts = &opts;
-        let listener = &listener;
-        listener.set_nonblocking(true)?;
-        let gate = Mutex::new(Gate {
+        let mut mux = Mux::new(opts.max_payload)?;
+        mux.listen(listener)?;
+
+        let phase = PhaseTracker::resumed_at(lp.start_round());
+        let drv = Driver {
+            run,
+            m: workers,
+            lp,
+            opts: &opts,
+            mux,
+            phase,
+            roster: Roster::new(workers),
+            alive: Vec::new(),
+            is_shard: Vec::new(),
             d,
             streaming,
             table: RoundTable::new(),
@@ -180,76 +159,16 @@ impl NetCoordinator {
             nnz: Vec::new(),
             msgs: Vec::new(),
             votes: VoteAccumulator::new(),
+            seen: Vec::new(),
             up_bytes: 0,
-        });
-        let accepting = AtomicBool::new(true);
-        let (tx, rx) = mpsc::channel::<Ev>();
-        let max_payload = opts.max_payload;
-
-        let result = std::thread::scope(|s| {
-            // Accept loop: registers the writer half, spawns the reader
-            // thread (the scope handle is Sync, so nested spawns are
-            // fine), and tells the coordinator.
-            let gate_ref = &gate;
-            let accepting_ref = &accepting;
-            let acc_tx = tx.clone();
-            let acc_handle = s.spawn(move || {
-                let mut next_id = 0usize;
-                while accepting_ref.load(Ordering::SeqCst) {
-                    match listener.accept() {
-                        Ok(Some(stream)) => {
-                            let Ok(reader) = stream.try_clone() else { continue };
-                            let writer = Mutex::new(stream);
-                            let h = Arc::new(ConnHandle { id: next_id, writer });
-                            next_id += 1;
-                            if acc_tx.send(Ev::Conn(h.clone())).is_err() {
-                                return;
-                            }
-                            let rd_tx = acc_tx.clone();
-                            s.spawn(move || {
-                                let shape = (d, streaming);
-                                reader_loop(&h, reader, gate_ref, &rd_tx, max_payload, shape);
-                            });
-                        }
-                        Ok(None) => std::thread::sleep(Duration::from_millis(2)),
-                        Err(_) => return,
-                    }
-                }
-            });
-
-            let phase = PhaseTracker::resumed_at(lp.start_round());
-            let drv = Driver {
-                run,
-                m: workers,
-                lp,
-                opts,
-                gate: &gate,
-                rx: &rx,
-                phase,
-                roster: Roster::new(workers),
-                conns: Vec::new(),
-                alive: Vec::new(),
-                wbuf: WireBuf::new(),
-                frame: Vec::new(),
-            };
-            let (out, conns) = drv.drive(eval);
-            // Stop accepting and unblock every reader regardless of how
-            // the run ended, or the scope would join forever. Connections
-            // the accept loop registered but the driver never processed
-            // (they sit in the channel) get shut down too — join the
-            // accept thread first so no further ones appear.
-            accepting.store(false, Ordering::SeqCst);
-            let _ = acc_handle.join();
-            while let Ok(ev) = rx.try_recv() {
-                if let Ev::Conn(h) = ev {
-                    h.writer.lock().unwrap_or_else(|e| e.into_inner()).shutdown();
-                }
-            }
-            for c in &conns {
-                c.writer.lock().unwrap_or_else(|e| e.into_inner()).shutdown();
-            }
-            out
-        });
+            down_extra: 0,
+            shard_up: 0,
+            pack: PackedTernary::zeros(0, 1.0),
+            wbuf: WireBuf::new(),
+            frame: Vec::new(),
+            evs: Vec::new(),
+        };
+        let result = drv.drive(eval);
 
         // A UDS socket file outlives its listener; clean up.
         #[cfg(unix)]
@@ -263,39 +182,63 @@ impl NetCoordinator {
 }
 
 /// The coordinator proper: rendezvous, then the round loop over the
-/// shared [`RoundLoop`] tail.
+/// shared [`RoundLoop`] tail. Single-threaded — every field is plain
+/// state mutated between [`Mux::pump`] calls.
 struct Driver<'a> {
     run: &'a TrainingRun,
     m: usize,
     lp: RoundLoop<'a>,
     opts: &'a ServeOptions,
-    gate: &'a Mutex<Gate>,
-    rx: &'a mpsc::Receiver<Ev>,
+    mux: Mux,
     phase: PhaseTracker,
     roster: Roster,
-    conns: Vec<Arc<ConnHandle>>,
     alive: Vec<bool>,
+    /// Connections that rendezvoused with `ShardHello` — they submit
+    /// merged accumulator frames, never individual updates.
+    is_shard: Vec<bool>,
+    d: usize,
+    streaming: bool,
+    table: RoundTable,
+    /// Per-slot payload state for the aggregating round (what the PR 3
+    /// gate held behind its mutex, now plain driver fields).
+    losses: Vec<f64>,
+    bits: Vec<f64>,
+    nnz: Vec<usize>,
+    msgs: Vec<Option<CompressedGrad>>,
+    votes: VoteAccumulator,
+    /// Scratch slot-dedup bitmap for vetting a shard frame's records.
+    seen: Vec<bool>,
+    /// Client-tier uplink bytes this attempt (direct updates + bytes
+    /// the shards report having accepted downstream).
+    up_bytes: u64,
+    /// Client-tier downlink bytes the shards report having broadcast.
+    down_extra: u64,
+    /// Shard-tier uplink bytes (the merged frames themselves).
+    shard_up: u64,
+    pack: PackedTernary,
     wbuf: WireBuf,
     frame: Vec<u8>,
+    evs: Vec<MuxEvent>,
 }
-
-type DriveOutcome = (Result<RunHistory, NetError>, Vec<Arc<ConnHandle>>);
 
 impl<'a> Driver<'a> {
     /// Run the whole protocol; consumes the driver so the finished
-    /// `RoundLoop` moves out without a placeholder. Returns the
-    /// connection handles alongside so the caller can shut them down.
-    fn drive(mut self, eval: &dyn Fn(&[f32]) -> (f64, f64)) -> DriveOutcome {
+    /// `RoundLoop` moves out without a placeholder.
+    fn drive(mut self, eval: &dyn Fn(&[f32]) -> (f64, f64)) -> Result<RunHistory, NetError> {
         let res = self.run_protocol(eval);
-        let out = match res {
+        // Tear every connection down regardless of how the run ended —
+        // a drain exits without Fin by design, an error as a side effect.
+        for conn in 0..self.alive.len() {
+            self.mux.close(conn);
+        }
+        match res {
             Ok(()) => {
                 let label = self.run.algorithm.label();
                 let d = self.lp.params.len();
                 Ok(self.lp.into_history(label, d))
             }
             Err(e) => Err(e),
-        };
-        (out, self.conns)
+        }
     }
 
     fn run_protocol(&mut self, eval: &dyn Fn(&[f32]) -> (f64, f64)) -> Result<(), NetError> {
@@ -330,11 +273,14 @@ impl<'a> Driver<'a> {
         self.fold_rejects();
         // Fin + state machine epilogue.
         let fin = Msg::Fin { rounds: self.run.rounds as u64 };
-        for id in 0..self.conns.len() {
-            if self.alive[id] {
-                let _ = self.send(id, &fin);
+        for conn in 0..self.alive.len() {
+            if self.alive[conn] && !self.send(conn, &fin) {
+                self.mark_dead(conn);
             }
         }
+        // Nonblocking sockets may still hold queued Fin bytes; give the
+        // reactor a bounded window to flush before the teardown.
+        self.drain_outgoing();
         self.phase.finish();
         Ok(())
     }
@@ -347,26 +293,18 @@ impl<'a> Driver<'a> {
             if left.is_zero() {
                 return Err(NetError::Protocol("rendezvous timeout".into()));
             }
-            match self.rx.recv_timeout(left.min(Duration::from_millis(200))) {
-                Ok(ev) => self.on_event(ev, None)?,
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => {
-                    return Err(NetError::Protocol("accept loop died".into()));
-                }
-            }
+            self.pump_step(left.min(Duration::from_millis(200)), None)?;
         }
         Ok(())
     }
 
     /// One federated round over the wire.
     fn round(&mut self, t: usize, eval: &dyn Fn(&[f32]) -> (f64, f64)) -> Result<(), NetError> {
-        // Drain queued notifications first: a connection that died (or an
+        // Drain pending readiness first: a connection that died (or an
         // agent that re-claimed a freed range) between rounds must be
         // reflected in the expectations *before* they are set, not
         // discovered while the deadline runs down.
-        while let Ok(ev) = self.rx.try_recv() {
-            self.on_event(ev, Some(t))?;
-        }
+        self.pump_step(Duration::ZERO, Some(t))?;
         let run = self.run;
         let lr = run.schedule.at(t);
         // Selection is drawn exactly once per round (the RNG stream is
@@ -374,8 +312,9 @@ impl<'a> Driver<'a> {
         // all-hosts-dead attempt reuses the same cohort.
         let n = self.lp.select(t);
         self.phase.open_round(t);
-        let mut down_bytes = 0u64;
-        let mut sel_ids: Vec<u64> = Vec::new();
+        let mut down_client = 0u64;
+        let mut down_shard = 0u64;
+        let mut sel_ids: Vec<u64> = Vec::with_capacity(n);
         let mut attempts = 0usize;
 
         loop {
@@ -387,55 +326,52 @@ impl<'a> Driver<'a> {
                 .iter()
                 .map(|&w| self.roster.owner_of(w).unwrap_or(usize::MAX))
                 .collect();
-            {
-                let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
-                g.table.open(t, self.m, &self.lp.server.selected[..n], &owners, &self.alive);
-                if g.streaming {
-                    g.votes.reset(g.d, n);
-                }
-                g.losses.clear();
-                g.losses.resize(n, 0.0);
-                g.bits.clear();
-                g.bits.resize(n, 0.0);
-                g.nnz.clear();
-                g.nnz.resize(n, 0);
-                g.msgs.clear();
-                g.msgs.resize(n, None);
-                g.up_bytes = 0;
+            self.table.open(t, self.m, &self.lp.server.selected[..n], &owners, &self.alive);
+            if self.streaming {
+                self.votes.reset(self.d, n);
             }
+            self.losses.clear();
+            self.losses.resize(n, 0.0);
+            self.bits.clear();
+            self.bits.resize(n, 0.0);
+            self.nnz.clear();
+            self.nnz.resize(n, 0);
+            self.msgs.clear();
+            self.msgs.resize(n, None);
+            self.up_bytes = 0;
+            self.down_extra = 0;
+            self.shard_up = 0;
 
-            // Broadcast: per-connection selection subset + the model.
+            // Broadcast: the full cohort + the model, encoded exactly
+            // once and queued as one shared refcounted frame on every
+            // live claimant — clients filter to their hosted range,
+            // shards relay the identical bytes downstream.
             let deadline_ms =
                 self.opts.round_deadline.map(|d| d.as_millis() as u64).unwrap_or(0);
-            for id in 0..self.conns.len() {
-                if !self.alive[id] {
+            sel_ids.clear();
+            sel_ids.extend(self.lp.server.selected[..n].iter().map(|&w| w as u64));
+            self.frame.clear();
+            let len = self.wbuf.encode_round_open(
+                t as u64,
+                lr,
+                deadline_ms,
+                &sel_ids,
+                &self.lp.params,
+                &mut self.frame,
+            );
+            let shared: Arc<[u8]> = Arc::from(self.frame.as_slice());
+            for conn in 0..self.alive.len() {
+                if !self.alive[conn] || self.roster.range_of(conn).is_none() {
                     continue;
                 }
-                let Some((lo, hi)) = self.roster.range_of(id) else { continue };
-                sel_ids.clear();
-                for &w in &self.lp.server.selected[..n] {
-                    if lo <= w && w < hi {
-                        sel_ids.push(w as u64);
+                if self.mux.send(conn, shared.clone()) {
+                    if self.is_shard[conn] {
+                        down_shard += len as u64;
+                    } else {
+                        down_client += len as u64;
                     }
-                }
-                self.frame.clear();
-                let len = self.wbuf.encode_round_open(
-                    t as u64,
-                    lr,
-                    deadline_ms,
-                    &sel_ids,
-                    &self.lp.params,
-                    &mut self.frame,
-                );
-                let ok = {
-                    let mut w =
-                        self.conns[id].writer.lock().unwrap_or_else(|e| e.into_inner());
-                    std::io::Write::write_all(&mut *w, &self.frame).is_ok()
-                };
-                if ok {
-                    down_bytes += len as u64;
                 } else {
-                    self.mark_dead(id);
+                    self.mark_dead(conn);
                 }
             }
             self.phase.aggregate(t);
@@ -443,11 +379,8 @@ impl<'a> Driver<'a> {
             // Collect until every live slot filled or the deadline expires.
             let hard_deadline = self.opts.round_deadline.map(|d| Instant::now() + d);
             loop {
-                {
-                    let g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
-                    if g.table.complete() {
-                        break;
-                    }
+                if self.table.complete() {
+                    break;
                 }
                 let wait = match hard_deadline {
                     Some(dl) => {
@@ -459,38 +392,28 @@ impl<'a> Driver<'a> {
                     }
                     None => Duration::from_millis(200),
                 };
-                match self.rx.recv_timeout(wait) {
-                    Ok(ev) => self.on_event(ev, Some(t))?,
-                    Err(RecvTimeoutError::Timeout) => {}
-                    Err(RecvTimeoutError::Disconnected) => {
-                        return Err(NetError::Protocol("accept loop died".into()));
-                    }
-                }
+                self.pump_step(wait, Some(t))?;
             }
 
             // Close the round and compact filled slots into the shared
             // RoundLoop buffers (ascending slot order = selection order,
             // the same deterministic reduction order the in-process
             // engine uses).
-            let (n_eff, stragglers, up_bytes) = {
-                let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
-                let g = &mut *g;
-                g.table.close();
-                let mut k_new = 0usize;
-                for k in 0..n {
-                    if g.table.filled()[k] {
-                        self.lp.server.losses[k_new] = g.losses[k];
-                        self.lp.server.bits[k_new] = g.bits[k];
-                        self.lp.server.nnz[k_new] = g.nnz[k];
-                        self.lp.server.msgs[k_new] = g.msgs[k].take();
-                        k_new += 1;
-                    }
+            self.table.close();
+            let mut n_eff = 0usize;
+            for k in 0..n {
+                if self.table.filled()[k] {
+                    self.lp.server.losses[n_eff] = self.losses[k];
+                    self.lp.server.bits[n_eff] = self.bits[k];
+                    self.lp.server.nnz[n_eff] = self.nnz[k];
+                    self.lp.server.msgs[n_eff] = self.msgs[k].take();
+                    n_eff += 1;
                 }
-                if g.streaming && k_new > 0 {
-                    g.votes.counts_into(&mut self.lp.server.counts);
-                }
-                (k_new, n - k_new, g.up_bytes)
-            };
+            }
+            if self.streaming && n_eff > 0 {
+                self.votes.counts_into(&mut self.lp.server.counts);
+            }
+            let stragglers = n - n_eff;
             if n_eff == 0 {
                 // Zero live submissions. A covered roster means the
                 // cohort's hosts are alive yet silent — fatal, exactly as
@@ -511,7 +434,14 @@ impl<'a> Driver<'a> {
                 continue;
             }
             self.lp.finish_round(t, lr, n_eff, eval, &mut None);
-            self.lp.ledger.annotate_wire(t, up_bytes, down_bytes, stragglers);
+            self.lp.ledger.annotate_wire_tiered(
+                t,
+                self.up_bytes,
+                down_client + self.down_extra,
+                stragglers,
+                self.shard_up,
+                down_shard,
+            );
             self.fold_rejects();
             self.phase.broadcast(t);
             return Ok(());
@@ -531,231 +461,355 @@ impl<'a> Driver<'a> {
                      the population"
                 )));
             }
-            match self.rx.recv_timeout(left.min(Duration::from_millis(200))) {
-                Ok(ev) => self.on_event(ev, Some(t))?,
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => {
-                    return Err(NetError::Protocol("accept loop died".into()));
-                }
-            }
+            self.pump_step(left.min(Duration::from_millis(200)), Some(t))?;
         }
         Ok(())
     }
 
-    /// Handle one notification. `round` is the currently-aggregating
-    /// round (heartbeat acks echo it), `None` during rendezvous.
-    fn on_event(&mut self, ev: Ev, round: Option<usize>) -> Result<(), NetError> {
+    /// One reactor turn: wait up to `wait` for readiness, then handle
+    /// every event it produced. `round` is the currently-aggregating
+    /// round (heartbeat acks and stale-frame rejects echo it), `None`
+    /// during rendezvous.
+    fn pump_step(&mut self, wait: Duration, round: Option<usize>) -> Result<(), NetError> {
+        let mut evs = std::mem::take(&mut self.evs);
+        evs.clear();
+        let res = self.mux.pump(Some(wait), &mut evs);
+        for ev in evs.drain(..) {
+            self.on_mux_event(ev, round);
+        }
+        self.evs = evs;
+        res
+    }
+
+    fn on_mux_event(&mut self, ev: MuxEvent, round: Option<usize>) {
         match ev {
-            Ev::Conn(h) => {
-                debug_assert_eq!(h.id, self.conns.len(), "conn ids are arrival-ordered");
-                self.conns.push(h);
+            MuxEvent::Accepted { conn } => {
+                debug_assert_eq!(conn, self.alive.len(), "conn ids are arrival-ordered");
                 self.alive.push(true);
+                self.is_shard.push(false);
             }
-            Ev::Hello { conn, lo, hi, cfg, env } => {
-                // A fleet built from drifted flags (different seed,
-                // schedule, compressor, dataset α/batch, …) must be
-                // refused at rendezvous: the coordinator cannot see the
-                // clients' data, so the fingerprints carry the proof.
-                // The env check only arms when the caller supplied its
-                // own environment hash (the CLI always does).
-                let want_cfg = self.run.config_fingerprint(self.lp.params.len(), self.m, 0);
-                let env_ok =
-                    self.opts.env_fingerprint == 0 || env == self.opts.env_fingerprint;
-                if cfg != want_cfg || !env_ok {
-                    self.hangup(conn);
-                    return Ok(());
+            MuxEvent::Closed { conn } => self.mark_dead(conn),
+            MuxEvent::Frame { conn, bytes } => {
+                self.on_frame(conn, &bytes, round);
+                self.mux.recycle(bytes);
+            }
+        }
+    }
+
+    /// Dispatch one complete frame from `conn`.
+    fn on_frame(&mut self, conn: usize, bytes: &[u8], round: Option<usize>) {
+        if conn >= self.alive.len() || !self.alive[conn] {
+            return;
+        }
+        let Ok((frame, _)) = wire::parse_frame(bytes, self.opts.max_payload) else {
+            self.hangup(conn);
+            return;
+        };
+        match frame.msg_type {
+            MsgType::Hello => match wire::decode_msg(frame) {
+                Ok(Msg::Hello { lo, hi, cfg, env }) => self.on_hello(conn, lo, hi, cfg, env, false),
+                _ => self.hangup(conn),
+            },
+            MsgType::ShardHello => match wire::decode_msg(frame) {
+                Ok(Msg::ShardHello { lo, hi, cfg, env }) => {
+                    self.on_hello(conn, lo, hi, cfg, env, true)
                 }
-                let claim = usize::try_from(lo)
-                    .ok()
-                    .zip(usize::try_from(hi).ok())
-                    .map(|(l, h)| self.roster.claim(conn, l, h));
-                match claim {
-                    // A valid claim is welcomed during rendezvous AND
-                    // mid-run: a dead connection's range is released by
-                    // the dead-conn bookkeeping, so a reconnecting agent
-                    // re-claims it and rejoins from the next round — the
-                    // churn path elastic federation (and a restarted
-                    // coordinator's re-rostering) depends on.
-                    Some(Ok(())) => {
-                        let msg = Msg::Welcome {
-                            client_id: conn as u64,
-                            workers: self.m as u64,
-                            dim: self.lp.params.len() as u64,
-                            rounds: self.run.rounds as u64,
-                            // Committed-seed selection broadcasts its
-                            // root-key commitment at rendezvous (all
-                            // zeros in legacy mode) so clients can later
-                            // audit the selection stream (DESIGN.md §13).
-                            commit: self.lp.selection_commitment(),
-                        };
-                        if self.send(conn, &msg).is_err() {
+                _ => self.hangup(conn),
+            },
+            MsgType::Heartbeat => {
+                let t = round.unwrap_or(0) as u64;
+                if !self.send(conn, &Msg::Ack { t, worker: conn as u64 }) {
+                    self.mark_dead(conn);
+                }
+            }
+            MsgType::Update => {
+                if self.is_shard[conn] {
+                    // Shards submit merged frames, never raw updates.
+                    self.hangup(conn);
+                    return;
+                }
+                let Ok(uv) = wire::decode_update(frame.payload) else {
+                    self.hangup(conn);
+                    return;
+                };
+                match self.submit_update(conn, &uv, bytes.len() as u64) {
+                    Ok(()) => {}
+                    Err(Some(reason)) => {
+                        let reject = Msg::Reject { t: uv.t, worker: uv.worker, reason };
+                        if !self.send(conn, &reject) {
                             self.mark_dead(conn);
                         }
                     }
-                    // Bad claims (overlap with a live host, bad range)
-                    // are hung up on; the reader thread turns the
-                    // shutdown into `Gone`.
-                    _ => self.hangup(conn),
+                    // Payload broke the streaming contract: corrupt or
+                    // hostile peer — hang up.
+                    Err(None) => self.hangup(conn),
                 }
             }
-            Ev::Beat { conn } => {
-                let t = round.unwrap_or(0) as u64;
-                let _ = self.send(conn, &Msg::Ack { t, worker: conn as u64 });
+            MsgType::ShardAgg => {
+                if !self.is_shard[conn] {
+                    self.hangup(conn);
+                    return;
+                }
+                self.on_shard_agg(conn, frame.payload, bytes.len() as u64);
             }
-            Ev::Progress => {}
-            Ev::Gone { conn } => self.mark_dead(conn),
+            // Client-bound message types on a server-bound stream are a
+            // protocol violation.
+            _ => self.hangup(conn),
         }
+    }
+
+    /// Rendezvous claim — `Hello` from a client, `ShardHello` from an
+    /// aggregator shard. Identical fingerprint and roster vetting; the
+    /// only difference is which submission grammar the connection is
+    /// then allowed to speak.
+    fn on_hello(&mut self, conn: usize, lo: u64, hi: u64, cfg: u64, env: u64, shard: bool) {
+        // A fleet built from drifted flags (different seed, schedule,
+        // compressor, dataset α/batch, …) must be refused at rendezvous:
+        // the coordinator cannot see the clients' data, so the
+        // fingerprints carry the proof. The env check only arms when the
+        // caller supplied its own environment hash (the CLI always does).
+        let want_cfg = self.run.config_fingerprint(self.lp.params.len(), self.m, 0);
+        let env_ok = self.opts.env_fingerprint == 0 || env == self.opts.env_fingerprint;
+        if cfg != want_cfg || !env_ok {
+            self.hangup(conn);
+            return;
+        }
+        // A shard's merged frame carries vote-counter planes; without
+        // the streaming vote path there is nothing to merge them into.
+        if shard && !self.streaming {
+            self.hangup(conn);
+            return;
+        }
+        let claim = usize::try_from(lo)
+            .ok()
+            .zip(usize::try_from(hi).ok())
+            .map(|(l, h)| self.roster.claim(conn, l, h));
+        match claim {
+            // A valid claim is welcomed during rendezvous AND mid-run: a
+            // dead connection's range is released by the dead-conn
+            // bookkeeping, so a reconnecting agent (or respawned shard)
+            // re-claims it and rejoins from the next round — the churn
+            // path elastic federation depends on.
+            Some(Ok(())) => {
+                self.is_shard[conn] = shard;
+                let msg = Msg::Welcome {
+                    client_id: conn as u64,
+                    workers: self.m as u64,
+                    dim: self.lp.params.len() as u64,
+                    rounds: self.run.rounds as u64,
+                    // Committed-seed selection broadcasts its root-key
+                    // commitment at rendezvous (all zeros in legacy mode)
+                    // so clients can later audit the selection stream
+                    // (DESIGN.md §13).
+                    commit: self.lp.selection_commitment(),
+                };
+                if !self.send(conn, &msg) {
+                    self.mark_dead(conn);
+                }
+            }
+            // Bad claims (overlap with a live host, bad range) are hung
+            // up on.
+            _ => self.hangup(conn),
+        }
+    }
+
+    /// Validate + record one direct-client update. `Err(Some(reason))`
+    /// asks for a typed reject; `Err(None)` is a payload-level violation
+    /// that drops the connection.
+    fn submit_update(
+        &mut self,
+        conn: usize,
+        uv: &wire::UpdateView<'_>,
+        wire_len: u64,
+    ) -> Result<(), Option<RejectReason>> {
+        if uv.grad.dim() != self.d {
+            return Err(None);
+        }
+        let t = usize::try_from(uv.t).unwrap_or(usize::MAX);
+        let worker = usize::try_from(uv.worker).unwrap_or(usize::MAX);
+        // Decode the payload into the scratch pack *before* claiming the
+        // slot: a slot marked filled must always hold a recorded
+        // submission.
+        let msg = if self.streaming {
+            match uv.grad.unpack_ternary_into(&mut self.pack) {
+                Ok(Some(())) if self.pack.scale() == 1.0 => None,
+                // Dense, mis-scaled or invariant-violating payloads
+                // cannot enter the vote accumulator.
+                _ => return Err(None),
+            }
+        } else {
+            match uv.grad.to_msg() {
+                Ok(m) => Some(m),
+                Err(_) => return Err(None),
+            }
+        };
+        let slot = self.table.submit(t, worker, conn).map_err(Some)?;
+        self.losses[slot] = uv.loss;
+        self.bits[slot] = uv.grad.bits();
+        match msg {
+            None => {
+                self.nnz[slot] = self.pack.nnz();
+                self.votes.fold(&self.pack);
+            }
+            Some(m) => {
+                self.nnz[slot] = m.nnz();
+                self.msgs[slot] = Some(m);
+            }
+        }
+        self.up_bytes += wire_len;
         Ok(())
+    }
+
+    /// A shard's merged round submission: one frame speaking for every
+    /// downstream worker that participated. All-or-nothing — every
+    /// record is vetted *before* anything is applied, so the vote
+    /// accumulator and the filled slots can never diverge. Shards are
+    /// trusted infrastructure (DESIGN.md §14.5): a structural violation
+    /// here means a broken or impostor shard, and the whole connection
+    /// is dropped rather than salvaging partial state.
+    fn on_shard_agg(&mut self, conn: usize, payload: &[u8], wire_len: u64) {
+        let Ok(v) = wire::decode_shard_agg(payload) else {
+            self.hangup(conn);
+            return;
+        };
+        let lo = usize::try_from(v.lo).unwrap_or(usize::MAX);
+        let hi = usize::try_from(v.hi).unwrap_or(usize::MAX);
+        // The frame must speak for exactly the range this shard rostered.
+        if self.roster.range_of(conn) != Some((lo, hi)) {
+            self.hangup(conn);
+            return;
+        }
+        let t = usize::try_from(v.t).unwrap_or(usize::MAX);
+        if !self.table.is_open() || t != self.table.round() {
+            // The shard missed the close — the merged-frame analogue of
+            // a straggling client: tally a typed reject per carried
+            // record and tell the shard once.
+            let mut reason = if t == self.table.round() {
+                RejectReason::Late
+            } else {
+                RejectReason::BadRound
+            };
+            for rec in &v.recs {
+                let worker = usize::try_from(rec.worker).unwrap_or(usize::MAX);
+                if let Err(r) = self.table.submit(t, worker, conn) {
+                    reason = r;
+                }
+            }
+            let reject = Msg::Reject { t: v.t, worker: v.lo, reason };
+            if !self.send(conn, &reject) {
+                self.mark_dead(conn);
+            }
+            return;
+        }
+        if v.dim != self.d {
+            self.hangup(conn);
+            return;
+        }
+        // Phase 1: vet every record read-only (slot validity, no
+        // duplicates within the frame, unit scale — the streaming
+        // contract the shard enforced downstream).
+        self.seen.clear();
+        self.seen.resize(self.table.filled().len(), false);
+        let mut slots: Vec<usize> = Vec::with_capacity(v.recs.len());
+        for rec in &v.recs {
+            if rec.scale != 1.0 || rec.nnz > v.dim as u64 {
+                self.hangup(conn);
+                return;
+            }
+            let worker = usize::try_from(rec.worker).unwrap_or(usize::MAX);
+            let slot = match self.table.peek(t, worker, conn) {
+                Ok(slot) if !self.seen[slot] => slot,
+                _ => {
+                    self.hangup(conn);
+                    return;
+                }
+            };
+            self.seen[slot] = true;
+            slots.push(slot);
+        }
+        // Phase 2: merge the counter planes first — it validates its
+        // preconditions (plane depth, message budget, byte lengths)
+        // before mutating — then claim the slots, which can no longer
+        // fail.
+        if self.votes.merge_wire_planes(v.msgs as usize, v.planes, v.pos, v.neg).is_err() {
+            self.hangup(conn);
+            return;
+        }
+        for (rec, &slot) in v.recs.iter().zip(&slots) {
+            let worker = usize::try_from(rec.worker).unwrap_or(usize::MAX);
+            let claimed = self.table.submit(t, worker, conn);
+            debug_assert_eq!(claimed, Ok(slot), "vetted record must claim its slot");
+            self.losses[slot] = rec.loss;
+            self.bits[slot] = rec.bits;
+            self.nnz[slot] = rec.nnz as usize;
+        }
+        // Tiered byte accounting: the frame itself is shard-tier uplink;
+        // the bytes it reports are the client tier the shard fronted.
+        self.up_bytes += v.up_bytes;
+        self.down_extra += v.down_bytes;
+        self.shard_up += wire_len;
+        // Shard-local typed rejects (its own stragglers/equivocators)
+        // fold into the same cumulative ledger counters.
+        self.lp.ledger.add_rejects(&v.rejects);
+        // The shard has spoken for its whole range this round: anything
+        // unfilled sat out downstream (partial participation), and
+        // exactly one merged frame arrives per shard per round — stop
+        // awaiting those slots so the round can close without running
+        // out the deadline.
+        self.table.settle_conn(conn);
     }
 
     /// Drain the round table's typed-reject tallies into the ledger's
     /// cumulative per-kind counters (surfaced by `history_json` and the
     /// adversarial tests).
     fn fold_rejects(&mut self) {
-        let rejects = {
-            let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
-            g.table.take_rejects()
-        };
+        let rejects = self.table.take_rejects();
         self.lp.ledger.add_rejects(&rejects);
     }
 
-    fn send(&mut self, conn: usize, msg: &Msg) -> Result<usize, NetError> {
-        self.frame.clear();
-        let len = self.wbuf.encode(msg, &mut self.frame);
-        let mut w = self.conns[conn].writer.lock().unwrap_or_else(|e| e.into_inner());
-        std::io::Write::write_all(&mut *w, &self.frame)?;
-        Ok(len)
-    }
-
-    fn hangup(&mut self, conn: usize) {
-        if let Some(h) = self.conns.get(conn) {
-            h.writer.lock().unwrap_or_else(|e| e.into_inner()).shutdown();
+    /// Bounded post-Fin flush: pump until every live connection's output
+    /// queue is empty (or the window closes). Peers hanging up while we
+    /// flush is normal — they got their Fin.
+    fn drain_outgoing(&mut self) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let pending: usize =
+                (0..self.alive.len()).filter(|&c| self.alive[c]).map(|c| self.mux.backlog(c)).sum();
+            if pending == 0 {
+                return;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return;
+            }
+            if self.pump_step(left.min(Duration::from_millis(50)), None).is_err() {
+                return;
+            }
         }
     }
 
+    fn send(&mut self, conn: usize, msg: &Msg) -> bool {
+        self.frame.clear();
+        self.wbuf.encode(msg, &mut self.frame);
+        self.mux.send(conn, Arc::from(self.frame.as_slice()))
+    }
+
+    /// Protocol violation or refused rendezvous: same teardown as a
+    /// death we observed — with the reactor there is no reader thread
+    /// to notice a shutdown, so the bookkeeping runs here directly.
+    fn hangup(&mut self, conn: usize) {
+        self.mark_dead(conn);
+    }
+
     fn mark_dead(&mut self, conn: usize) {
+        self.mux.close(conn);
         if conn < self.alive.len() && self.alive[conn] {
             self.alive[conn] = false;
-            self.hangup(conn);
             // Free the range so a reconnecting agent can re-claim it,
             // and stop awaiting the open round's unfilled slots — both
             // immediately, not at the deadline.
             self.roster.release(conn);
-            let mut g = self.gate.lock().unwrap_or_else(|e| e.into_inner());
-            g.table.drop_conn(conn);
+            self.table.drop_conn(conn);
         }
     }
-}
-
-/// Per-connection reader: frames → validated protocol events. Update
-/// payloads are decoded into the per-reader scratch *before* the gate
-/// lock (readers parallelize the O(d) unpack work); the slot claim and
-/// the vote fold then happen under the lock, so a round that closes
-/// never loses a submission it already counted. `shape` is the run's
-/// `(d, streaming)` pair, immutable for the whole serve.
-fn reader_loop(
-    h: &Arc<ConnHandle>,
-    mut reader: Stream,
-    gate: &Mutex<Gate>,
-    tx: &mpsc::Sender<Ev>,
-    max_payload: usize,
-    shape: (usize, bool),
-) {
-    let mut buf = Vec::new();
-    let mut pack = PackedTernary::zeros(0, 1.0);
-    let mut wbuf = WireBuf::new();
-    let mut out = Vec::new();
-    loop {
-        let Ok(len) = read_frame_bytes(&mut reader, max_payload, &mut buf) else { break };
-        let Ok((frame, _)) = wire::parse_frame(&buf[..len], max_payload) else { break };
-        match frame.msg_type {
-            MsgType::Hello => {
-                let Ok(Msg::Hello { lo, hi, cfg, env }) = wire::decode_msg(frame) else { break };
-                if tx.send(Ev::Hello { conn: h.id, lo, hi, cfg, env }).is_err() {
-                    break;
-                }
-            }
-            MsgType::Heartbeat => {
-                if tx.send(Ev::Beat { conn: h.id }).is_err() {
-                    break;
-                }
-            }
-            MsgType::Update => {
-                let Ok(uv) = wire::decode_update(frame.payload) else { break };
-                match submit_update(h.id, &uv, len as u64, shape, gate, &mut pack) {
-                    Ok(()) => {
-                        if tx.send(Ev::Progress).is_err() {
-                            break;
-                        }
-                    }
-                    Err(Some(reason)) => {
-                        out.clear();
-                        let reject = Msg::Reject { t: uv.t, worker: uv.worker, reason };
-                        wbuf.encode(&reject, &mut out);
-                        let mut w = h.writer.lock().unwrap_or_else(|e| e.into_inner());
-                        let _ = std::io::Write::write_all(&mut *w, &out);
-                    }
-                    // Payload broke the streaming contract: corrupt or
-                    // hostile peer — hang up.
-                    Err(None) => break,
-                }
-            }
-            // Client-bound message types on a server-bound stream are a
-            // protocol violation.
-            _ => break,
-        }
-    }
-    let _ = tx.send(Ev::Gone { conn: h.id });
-}
-
-/// Validate + record one update submission. `Err(Some(reason))` asks the
-/// reader to send a typed reject; `Err(None)` is a payload-level
-/// violation that drops the connection.
-fn submit_update(
-    conn: usize,
-    uv: &wire::UpdateView<'_>,
-    wire_len: u64,
-    (d, streaming): (usize, bool),
-    gate: &Mutex<Gate>,
-    pack: &mut PackedTernary,
-) -> Result<(), Option<RejectReason>> {
-    if uv.grad.dim() != d {
-        return Err(None);
-    }
-    let t = usize::try_from(uv.t).unwrap_or(usize::MAX);
-    let worker = usize::try_from(uv.worker).unwrap_or(usize::MAX);
-    // Decode the payload into the per-reader scratch OUTSIDE the gate
-    // lock — the O(d) unpack runs concurrently across readers — and
-    // before claiming the slot: a slot marked filled must always hold a
-    // recorded submission.
-    let msg = if streaming {
-        match uv.grad.unpack_ternary_into(pack) {
-            Ok(Some(())) if pack.scale() == 1.0 => None,
-            // Dense, mis-scaled or invariant-violating payloads cannot
-            // enter the vote accumulator.
-            _ => return Err(None),
-        }
-    } else {
-        match uv.grad.to_msg() {
-            Ok(m) => Some(m),
-            Err(_) => return Err(None),
-        }
-    };
-    let mut g = gate.lock().unwrap_or_else(|e| e.into_inner());
-    let g = &mut *g;
-    let slot = g.table.submit(t, worker, conn).map_err(Some)?;
-    g.losses[slot] = uv.loss;
-    g.bits[slot] = uv.grad.bits();
-    match msg {
-        None => {
-            g.nnz[slot] = pack.nnz();
-            g.votes.fold(pack);
-        }
-        Some(m) => {
-            g.nnz[slot] = m.nnz();
-            g.msgs[slot] = Some(m);
-        }
-    }
-    g.up_bytes += wire_len;
-    Ok(())
 }

@@ -1,0 +1,737 @@
+//! The aggregator-shard tier (DESIGN.md §14): a mid-tree coordinator
+//! that fronts a disjoint slice `[lo, hi)` of the worker population.
+//!
+//! Downstream it speaks the ordinary coordinator protocol — clients
+//! rendezvous with `Hello`, receive `Welcome`/`RoundOpen`/`Ack`/
+//! `Reject`/`Fin`, and submit `Update` frames — so a fleet agent cannot
+//! tell a shard from the root. Upstream it rendezvouses with
+//! `ShardHello` over the same wire grammar and, once per round, folds
+//! everything it accepted into its local
+//! [`VoteAccumulator`] and streams **one** merged `ShardAgg` frame to
+//! the root: the raw carry-save counter planes, the per-worker scalar
+//! records in slot order, the client-tier byte totals it fronted, and
+//! its drained typed-reject tallies. Vote counts are integer sums, so
+//! the root's word-parallel merge of shard planes commutes with folding
+//! the same updates directly — a sharded run's `RunHistory` is
+//! bit-identical to the flat run on the same seed
+//! (`tests/shard_tree.rs`).
+//!
+//! The shard never holds model state and never sees the data: it
+//! relays the root's `RoundOpen` broadcast downstream *verbatim* (one
+//! refcounted frame shared across every client's output queue) and
+//! validates submissions with the same [`RoundTable`] the root uses.
+//! Like the root it is single-threaded: one [`Mux`] readiness loop
+//! carries the upstream connection and every downstream client.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::compressors::PackedTernary;
+use crate::coordinator::{TrainingRun, VoteAccumulator, WorkerSampler};
+
+use super::protocol::{Phase, PhaseTracker, Roster, RoundTable};
+use super::reactor::{Mux, MuxEvent};
+use super::wire::{self, Msg, MsgType, ShardRec, WireBuf};
+use super::{read_frame_bytes, Endpoint, Listener, NetError, Stream};
+
+/// Aggregator-shard configuration.
+#[derive(Clone, Debug)]
+pub struct ShardOptions {
+    /// The root coordinator (or parent shard) to report to.
+    pub upstream: Endpoint,
+    /// Bind address for the downstream fleet.
+    pub listen: Endpoint,
+    /// Global worker range this shard fronts (`lo..hi`).
+    pub lo: usize,
+    pub hi: usize,
+    /// Local submission deadline per round; `None` waits for every live
+    /// downstream slot (the loopback-equivalence configuration). When
+    /// the root runs a deadline, set this *shorter* so the merged frame
+    /// lands before the root closes the round.
+    pub round_deadline: Option<Duration>,
+    /// How long the shard waits for its downstream fleet to cover
+    /// `[lo, hi)` once a round is pending relay.
+    pub rendezvous_timeout: Duration,
+    /// Frame payload cap, both directions.
+    pub max_payload: usize,
+    /// Read timeout for the blocking upstream handshake.
+    pub handshake_timeout: Duration,
+    /// Environment fingerprint downstream claims must match (0 disables
+    /// the check, exactly as on the root).
+    pub env_fingerprint: u64,
+}
+
+impl ShardOptions {
+    pub fn new(upstream: Endpoint, listen: Endpoint, lo: usize, hi: usize) -> Self {
+        Self {
+            upstream,
+            listen,
+            lo,
+            hi,
+            round_deadline: None,
+            rendezvous_timeout: Duration::from_secs(30),
+            max_payload: wire::MAX_PAYLOAD,
+            handshake_timeout: Duration::from_secs(30),
+            env_fingerprint: 0,
+        }
+    }
+}
+
+/// What one shard observed over a full run, split by tier.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStats {
+    /// Rounds relayed downstream (re-broadcasts of the same round count
+    /// again, exactly as the root re-sends them).
+    pub rounds_relayed: u64,
+    /// Client updates accepted and folded into merged frames.
+    pub updates_folded: u64,
+    /// Client-tier wire bytes accepted (update frames).
+    pub client_up_bytes: u64,
+    /// Client-tier wire bytes broadcast (relayed `RoundOpen` frames).
+    pub client_down_bytes: u64,
+    /// Shard-tier wire bytes sent upstream (`ShardHello` + merged
+    /// `ShardAgg` frames).
+    pub root_up_bytes: u64,
+    /// Shard-tier wire bytes received from upstream.
+    pub root_down_bytes: u64,
+    /// Typed rejects the root issued against this shard's merged frames
+    /// (a late shard is a straggler like any other).
+    pub rejects_from_root: u64,
+}
+
+/// A bound-but-not-yet-serving shard; binding first lets callers learn
+/// the resolved downstream endpoint before the fleet dials in.
+pub struct ShardCoordinator {
+    listener: Listener,
+    local: Endpoint,
+    opts: ShardOptions,
+}
+
+impl ShardCoordinator {
+    /// Bind the downstream accept socket.
+    pub fn bind(opts: ShardOptions) -> Result<Self, NetError> {
+        if opts.lo >= opts.hi {
+            return Err(NetError::Config(format!(
+                "shard range {}..{} is empty",
+                opts.lo, opts.hi
+            )));
+        }
+        let listener = Listener::bind(&opts.listen)?;
+        let local = listener.local_endpoint(&opts.listen);
+        Ok(Self { listener, local, opts })
+    }
+
+    /// The resolved downstream bind address (clients dial this).
+    pub fn local_endpoint(&self) -> &Endpoint {
+        &self.local
+    }
+
+    /// Rendezvous upstream, serve the downstream fleet until the root
+    /// sends `Fin` (relayed before returning), and report the byte
+    /// traffic. `workers`/`dim` are the global population M and model
+    /// dimension d the run was built for — the shard needs them before
+    /// the upstream `Welcome` to compute the config fingerprint its
+    /// `ShardHello` must carry.
+    pub fn run(
+        self,
+        run: &TrainingRun,
+        workers: usize,
+        dim: usize,
+    ) -> Result<ShardStats, NetError> {
+        let ShardCoordinator { listener, local, opts } = self;
+        if opts.hi > workers {
+            return Err(NetError::Config(format!(
+                "shard range {}..{} exceeds population {workers}",
+                opts.lo, opts.hi
+            )));
+        }
+        // The merged frame carries vote-counter planes; without the
+        // streaming vote path there is nothing to fold them into —
+        // same gate the root applies to `ShardHello` claims.
+        let n_max = WorkerSampler::new(workers, run.participation).per_round();
+        if !run.streams_votes(n_max) {
+            return Err(NetError::Config(
+                "sharded aggregation requires the streaming unit-ternary vote path \
+                 (majority-vote aggregation with a stateless sign compressor)"
+                    .into(),
+            ));
+        }
+
+        let mut stats = ShardStats::default();
+        let cfg = run.config_fingerprint(dim, workers, 0);
+        let (upstream, commit) =
+            handshake_upstream(&opts, run, workers, dim, cfg, &mut stats)?;
+
+        let mut mux = Mux::new(opts.max_payload)?;
+        let up = mux.adopt(upstream)?;
+        mux.listen(listener)?;
+
+        let drv = ShardDriver {
+            run,
+            m: workers,
+            d: dim,
+            cfg,
+            commit,
+            opts: &opts,
+            mux,
+            up,
+            phase: PhaseTracker::new(),
+            roster: Roster::ranged(opts.lo, opts.hi),
+            alive: vec![true], // conn 0 = upstream
+            table: RoundTable::new(),
+            round: None,
+            pending: None,
+            votes: VoteAccumulator::new(),
+            losses: Vec::new(),
+            bits: Vec::new(),
+            nnz: Vec::new(),
+            slot_worker: Vec::new(),
+            pack: PackedTernary::zeros(0, 1.0),
+            wbuf: WireBuf::new(),
+            frame: Vec::new(),
+            evs: Vec::new(),
+            stats,
+            fin: false,
+        };
+        let result = drv.drive();
+
+        #[cfg(unix)]
+        if let Endpoint::Uds(path) = &local {
+            let _ = std::fs::remove_file(path);
+        }
+        #[cfg(not(unix))]
+        let _ = &local;
+        result
+    }
+}
+
+/// Blocking upstream rendezvous: `ShardHello` → `Welcome` (whose shape
+/// must match the run this shard was built for). Returns the connected
+/// stream plus the root's selection commitment, which the shard relays
+/// verbatim in its own downstream `Welcome`s.
+fn handshake_upstream(
+    opts: &ShardOptions,
+    run: &TrainingRun,
+    workers: usize,
+    dim: usize,
+    cfg: u64,
+    stats: &mut ShardStats,
+) -> Result<(Stream, [u64; 4]), NetError> {
+    let mut conn = Stream::connect(&opts.upstream)?;
+    conn.set_read_timeout(Some(opts.handshake_timeout))?;
+    let mut wbuf = WireBuf::new();
+    let mut out = Vec::new();
+    let hello = Msg::ShardHello {
+        lo: opts.lo as u64,
+        hi: opts.hi as u64,
+        cfg,
+        env: opts.env_fingerprint,
+    };
+    stats.root_up_bytes += wbuf.encode(&hello, &mut out) as u64;
+    std::io::Write::write_all(&mut conn, &out)?;
+
+    let mut buf = Vec::new();
+    let len = read_frame_bytes(&mut conn, opts.max_payload, &mut buf)?;
+    stats.root_down_bytes += len as u64;
+    let (frame, _) = wire::parse_frame(&buf[..len], opts.max_payload)?;
+    match wire::decode_msg(frame)? {
+        Msg::Welcome { workers: w, dim: d, rounds, commit, .. } => {
+            if w != workers as u64 || d != dim as u64 || rounds != run.rounds as u64 {
+                return Err(NetError::Protocol(format!(
+                    "upstream welcome shape mismatch: root says {w}w/{d}d/{rounds}r, \
+                     shard built for {workers}w/{dim}d/{}r",
+                    run.rounds
+                )));
+            }
+            Ok((conn, commit))
+        }
+        other => Err(NetError::Protocol(format!(
+            "expected Welcome from upstream, got {:?}",
+            other.msg_type()
+        ))),
+    }
+}
+
+/// A `RoundOpen` received from upstream but not yet relayed — the
+/// downstream fleet has not covered `[lo, hi)` yet (it dials
+/// concurrently with the shard's own upstream claim, so the root's
+/// first broadcast can outrun it). Held until coverage, bounded by the
+/// rendezvous timeout.
+struct PendingRound {
+    t: usize,
+    raw: Arc<[u8]>,
+    selected_local: Vec<usize>,
+    since: Instant,
+}
+
+/// The round currently collecting downstream submissions.
+struct OpenRound {
+    t: usize,
+    deadline: Option<Instant>,
+    /// Client-tier uplink bytes accepted this round.
+    up_bytes: u64,
+    /// Client-tier downlink bytes relayed this round.
+    down_bytes: u64,
+}
+
+/// The shard proper. Single-threaded: every field is plain state
+/// mutated between [`Mux::pump`] calls, exactly like the root's driver.
+struct ShardDriver<'a> {
+    run: &'a TrainingRun,
+    /// Global population / model dimension (the shard validates against
+    /// the same shapes the root announces).
+    m: usize,
+    d: usize,
+    cfg: u64,
+    /// Root's selection commitment, relayed in downstream `Welcome`s.
+    commit: [u64; 4],
+    opts: &'a ShardOptions,
+    mux: Mux,
+    /// Upstream connection id inside the mux (adopted first, so 0).
+    up: usize,
+    phase: PhaseTracker,
+    roster: Roster,
+    alive: Vec<bool>,
+    table: RoundTable,
+    round: Option<OpenRound>,
+    pending: Option<PendingRound>,
+    votes: VoteAccumulator,
+    /// Per-local-slot scalars, compacted into `ShardRec`s at round close.
+    losses: Vec<f64>,
+    bits: Vec<f64>,
+    nnz: Vec<usize>,
+    /// Local slot → global worker id (slot order = the global selection
+    /// order filtered to `[lo, hi)`).
+    slot_worker: Vec<usize>,
+    pack: PackedTernary,
+    wbuf: WireBuf,
+    frame: Vec<u8>,
+    evs: Vec<MuxEvent>,
+    stats: ShardStats,
+    fin: bool,
+}
+
+impl<'a> ShardDriver<'a> {
+    fn drive(mut self) -> Result<ShardStats, NetError> {
+        let res = self.serve();
+        for conn in 0..self.alive.len() {
+            self.mux.close(conn);
+        }
+        res.map(|()| self.stats)
+    }
+
+    fn serve(&mut self) -> Result<(), NetError> {
+        loop {
+            if self.fin {
+                // Fin relayed; flush the queues and exit.
+                self.drain_outgoing();
+                if matches!(self.phase.phase(), Phase::Broadcast(_)) {
+                    self.phase.finish();
+                }
+                return Ok(());
+            }
+            if !self.mux.is_open(self.up) {
+                return Err(NetError::Disconnected);
+            }
+            // A deferred round starts the moment the fleet covers the
+            // range — and fails the shard if it never does.
+            if let Some(p) = &self.pending {
+                if self.roster.covered() {
+                    let p = self.pending.take().expect("pending checked");
+                    self.start_round(p);
+                } else if p.since.elapsed() > self.opts.rendezvous_timeout {
+                    return Err(NetError::Protocol(format!(
+                        "shard {}..{}: round {} pending but the downstream fleet \
+                         never covered the range",
+                        self.opts.lo, self.opts.hi, p.t
+                    )));
+                }
+            }
+            // Finalize on deadline or completion.
+            let mut wait = Duration::from_millis(200);
+            if let Some(or) = &self.round {
+                let expired = match or.deadline {
+                    Some(dl) => {
+                        let left = dl.saturating_duration_since(Instant::now());
+                        wait = wait.min(left);
+                        left.is_zero()
+                    }
+                    None => false,
+                };
+                if expired || self.table.complete() {
+                    self.finalize_round();
+                    continue;
+                }
+            }
+            self.pump_step(wait)?;
+        }
+    }
+
+    /// One reactor turn, reusing the event buffer across calls.
+    fn pump_step(&mut self, wait: Duration) -> Result<(), NetError> {
+        let mut evs = std::mem::take(&mut self.evs);
+        evs.clear();
+        let res = self.mux.pump(Some(wait), &mut evs);
+        for ev in evs.drain(..) {
+            self.on_mux_event(ev);
+        }
+        self.evs = evs;
+        res
+    }
+
+    fn on_mux_event(&mut self, ev: MuxEvent) {
+        match ev {
+            MuxEvent::Accepted { conn } => {
+                debug_assert_eq!(conn, self.alive.len(), "conn ids are arrival-ordered");
+                self.alive.push(true);
+            }
+            MuxEvent::Closed { conn } => self.mark_dead(conn),
+            MuxEvent::Frame { conn, bytes } => {
+                self.on_frame(conn, &bytes);
+                self.mux.recycle(bytes);
+            }
+        }
+    }
+
+    fn on_frame(&mut self, conn: usize, bytes: &[u8]) {
+        if conn >= self.alive.len() || !self.alive[conn] {
+            return;
+        }
+        if conn == self.up {
+            self.stats.root_down_bytes += bytes.len() as u64;
+            self.on_upstream_frame(bytes);
+        } else {
+            self.on_downstream_frame(conn, bytes);
+        }
+    }
+
+    /// Control frames from the root: round broadcasts to relay, typed
+    /// rejects against our merged frames, heartbeat acks, and `Fin`.
+    /// Anything else — or an undecodable frame — is a root-side
+    /// protocol violation the shard cannot continue past.
+    fn on_upstream_frame(&mut self, bytes: &[u8]) {
+        let Ok((frame, _)) = wire::parse_frame(bytes, self.opts.max_payload) else {
+            self.mux.close(self.up);
+            return;
+        };
+        match frame.msg_type {
+            MsgType::RoundOpen => match wire::decode_msg(frame) {
+                Ok(Msg::RoundOpen { t, selected, params, .. }) => {
+                    if params.len() != self.d {
+                        self.mux.close(self.up);
+                        return;
+                    }
+                    self.on_round_open(t, &selected, bytes);
+                }
+                _ => self.mux.close(self.up),
+            },
+            MsgType::Fin => {
+                // Discard any still-open round (the root has moved on)
+                // and relay the run's end to every downstream client.
+                self.abandon_round();
+                let shared: Arc<[u8]> = Arc::from(bytes);
+                for conn in 0..self.alive.len() {
+                    if conn == self.up || !self.alive[conn] {
+                        continue;
+                    }
+                    if self.mux.send(conn, shared.clone()) {
+                        self.stats.client_down_bytes += bytes.len() as u64;
+                    } else {
+                        self.mark_dead(conn);
+                    }
+                }
+                self.fin = true;
+            }
+            MsgType::Reject => {
+                self.stats.rejects_from_root += 1;
+            }
+            MsgType::Ack => {}
+            _ => self.mux.close(self.up),
+        }
+    }
+
+    /// An upstream `RoundOpen`: supersedes whatever round is open (a
+    /// re-broadcast of the same round after a zero-submission attempt,
+    /// or a newer round the root opened after closing ours without us)
+    /// and is relayed as soon as the downstream roster covers the range.
+    fn on_round_open(&mut self, t: u64, selected: &[u64], raw: &[u8]) {
+        let Ok(t) = usize::try_from(t) else {
+            self.mux.close(self.up);
+            return;
+        };
+        self.abandon_round();
+        // The global cohort, filtered to this shard's slice — in the
+        // global selection order, which every tier preserves.
+        let selected_local: Vec<usize> = selected
+            .iter()
+            .filter_map(|&w| usize::try_from(w).ok())
+            .filter(|&w| w >= self.opts.lo && w < self.opts.hi)
+            .collect();
+        self.pending = Some(PendingRound {
+            t,
+            raw: Arc::from(raw),
+            selected_local,
+            since: Instant::now(),
+        });
+    }
+
+    /// Relay the round downstream and open the local table.
+    fn start_round(&mut self, p: PendingRound) {
+        let t = p.t;
+        self.note_round_open(t);
+        let n_local = p.selected_local.len();
+        let owners: Vec<usize> = p
+            .selected_local
+            .iter()
+            .map(|&w| self.roster.owner_of(w).unwrap_or(usize::MAX))
+            .collect();
+        self.table.open(t, self.m, &p.selected_local, &owners, &self.alive);
+        self.votes.reset(self.d, n_local.max(1));
+        self.losses.clear();
+        self.losses.resize(n_local, 0.0);
+        self.bits.clear();
+        self.bits.resize(n_local, 0.0);
+        self.nnz.clear();
+        self.nnz.resize(n_local, 0);
+        self.slot_worker.clear();
+        self.slot_worker.extend_from_slice(&p.selected_local);
+
+        let mut down_bytes = 0u64;
+        let len = p.raw.len() as u64;
+        for conn in 0..self.alive.len() {
+            if conn == self.up || !self.alive[conn] || self.roster.range_of(conn).is_none() {
+                continue;
+            }
+            if self.mux.send(conn, p.raw.clone()) {
+                down_bytes += len;
+            } else {
+                self.mark_dead(conn);
+            }
+        }
+        self.phase.aggregate(t);
+        self.stats.rounds_relayed += 1;
+        let deadline = self.opts.round_deadline.map(|d| Instant::now() + d);
+        self.round = Some(OpenRound { t, deadline, up_bytes: 0, down_bytes });
+    }
+
+    /// Phase bookkeeping for an upstream round announcement. The shard
+    /// does not drive the round sequence — the root does — so beyond
+    /// the two in-sequence transitions it re-anchors the tracker at the
+    /// announced round (first round of a resumed run, a re-broadcast of
+    /// the same round, or a round the root opened after closing ours
+    /// without us).
+    fn note_round_open(&mut self, t: usize) {
+        match self.phase.phase() {
+            Phase::Standby if t == 0 => self.phase.open_round(0),
+            Phase::Broadcast(prev) if t == prev + 1 => self.phase.open_round(t),
+            _ => {
+                self.phase = PhaseTracker::resumed_at(t);
+                self.phase.open_round(t);
+            }
+        }
+    }
+
+    /// Close the local round and stream the merged frame upstream.
+    fn finalize_round(&mut self) {
+        let Some(or) = self.round.take() else { return };
+        self.table.close();
+        let mut recs = Vec::with_capacity(self.slot_worker.len());
+        for (k, &w) in self.slot_worker.iter().enumerate() {
+            if self.table.filled()[k] {
+                recs.push(ShardRec {
+                    worker: w as u64,
+                    loss: self.losses[k],
+                    bits: self.bits[k],
+                    nnz: self.nnz[k] as u64,
+                    scale: 1.0,
+                });
+            }
+        }
+        debug_assert_eq!(self.votes.msgs(), recs.len(), "one fold per filled slot");
+        // `(planes == 0) != (k == 0)` is malformed on the wire, so an
+        // empty round ships empty planes.
+        let (planes, pos, neg) = if recs.is_empty() {
+            (0, &[][..], &[][..])
+        } else {
+            (self.votes.planes(), self.votes.pos_planes(), self.votes.neg_planes())
+        };
+        let rejects = self.table.take_rejects();
+        self.frame.clear();
+        let mut out = std::mem::take(&mut self.frame);
+        let len = self.wbuf.encode_shard_agg(
+            or.t as u64,
+            self.opts.lo as u64,
+            self.opts.hi as u64,
+            &recs,
+            or.up_bytes,
+            or.down_bytes,
+            &rejects,
+            self.d,
+            planes,
+            pos,
+            neg,
+            &mut out,
+        );
+        let shared: Arc<[u8]> = Arc::from(out.as_slice());
+        self.frame = out;
+        if self.mux.send(self.up, shared) {
+            self.stats.root_up_bytes += len as u64;
+        }
+        self.stats.updates_folded += recs.len() as u64;
+        self.stats.client_up_bytes += or.up_bytes;
+        self.stats.client_down_bytes += or.down_bytes;
+        self.phase.broadcast(or.t);
+    }
+
+    /// Drop a superseded round without reporting it upstream (the root
+    /// has already closed it and counted our slots as stragglers).
+    /// Locally-tallied typed rejects survive in the table and ride the
+    /// next merged frame.
+    fn abandon_round(&mut self) {
+        if self.round.take().is_some() {
+            self.table.close();
+        }
+        self.pending = None;
+    }
+
+    /// Downstream frames: the ordinary client-facing protocol.
+    fn on_downstream_frame(&mut self, conn: usize, bytes: &[u8]) {
+        let Ok((frame, _)) = wire::parse_frame(bytes, self.opts.max_payload) else {
+            self.hangup(conn);
+            return;
+        };
+        match frame.msg_type {
+            MsgType::Hello => match wire::decode_msg(frame) {
+                Ok(Msg::Hello { lo, hi, cfg, env }) => self.on_hello(conn, lo, hi, cfg, env),
+                _ => self.hangup(conn),
+            },
+            MsgType::Heartbeat => {
+                let t = self.round.as_ref().map(|r| r.t).unwrap_or(0) as u64;
+                if !self.send(conn, &Msg::Ack { t, worker: conn as u64 }) {
+                    self.mark_dead(conn);
+                }
+            }
+            MsgType::Update => {
+                let Ok(uv) = wire::decode_update(frame.payload) else {
+                    self.hangup(conn);
+                    return;
+                };
+                match self.submit_update(conn, &uv, bytes.len() as u64) {
+                    Ok(()) => {}
+                    Err(Some(reason)) => {
+                        let reject = Msg::Reject { t: uv.t, worker: uv.worker, reason };
+                        if !self.send(conn, &reject) {
+                            self.mark_dead(conn);
+                        }
+                    }
+                    Err(None) => self.hangup(conn),
+                }
+            }
+            // Nested shard tiers are not supported: a `ShardHello` (or
+            // any server-bound oddity) downstream is a protocol error.
+            _ => self.hangup(conn),
+        }
+    }
+
+    /// Downstream rendezvous claim — the same fingerprint vetting the
+    /// root applies, against this shard's `[lo, hi)` roster (claims
+    /// stay in global worker ids; `Roster::ranged` bounds them).
+    fn on_hello(&mut self, conn: usize, lo: u64, hi: u64, cfg: u64, env: u64) {
+        let env_ok = self.opts.env_fingerprint == 0 || env == self.opts.env_fingerprint;
+        if cfg != self.cfg || !env_ok {
+            self.hangup(conn);
+            return;
+        }
+        let claim = usize::try_from(lo)
+            .ok()
+            .zip(usize::try_from(hi).ok())
+            .map(|(l, h)| self.roster.claim(conn, l, h));
+        match claim {
+            Some(Ok(())) => {
+                let msg = Msg::Welcome {
+                    client_id: conn as u64,
+                    workers: self.m as u64,
+                    dim: self.d as u64,
+                    rounds: self.run.rounds as u64,
+                    commit: self.commit,
+                };
+                if !self.send(conn, &msg) {
+                    self.mark_dead(conn);
+                }
+            }
+            _ => self.hangup(conn),
+        }
+    }
+
+    /// Validate + fold one downstream update — the same split contract
+    /// as the root: `Err(Some(reason))` asks for a typed reject,
+    /// `Err(None)` is a payload violation that drops the connection.
+    fn submit_update(
+        &mut self,
+        conn: usize,
+        uv: &wire::UpdateView<'_>,
+        wire_len: u64,
+    ) -> Result<(), Option<wire::RejectReason>> {
+        if uv.grad.dim() != self.d {
+            return Err(None);
+        }
+        let t = usize::try_from(uv.t).unwrap_or(usize::MAX);
+        let worker = usize::try_from(uv.worker).unwrap_or(usize::MAX);
+        // The shard only exists on the streaming vote path: every
+        // accepted payload must be unit-scale packed ternary, decoded
+        // *before* the slot is claimed.
+        match uv.grad.unpack_ternary_into(&mut self.pack) {
+            Ok(Some(())) if self.pack.scale() == 1.0 => {}
+            _ => return Err(None),
+        }
+        let slot = self.table.submit(t, worker, conn).map_err(Some)?;
+        self.losses[slot] = uv.loss;
+        self.bits[slot] = uv.grad.bits();
+        self.nnz[slot] = self.pack.nnz();
+        self.votes.fold(&self.pack);
+        if let Some(or) = &mut self.round {
+            or.up_bytes += wire_len;
+        }
+        Ok(())
+    }
+
+    /// Bounded post-Fin flush, mirroring the root's.
+    fn drain_outgoing(&mut self) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let pending: usize =
+                (0..self.alive.len()).filter(|&c| self.alive[c]).map(|c| self.mux.backlog(c)).sum();
+            if pending == 0 {
+                return;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return;
+            }
+            if self.pump_step(left.min(Duration::from_millis(50))).is_err() {
+                return;
+            }
+        }
+    }
+
+    fn send(&mut self, conn: usize, msg: &Msg) -> bool {
+        self.frame.clear();
+        self.wbuf.encode(msg, &mut self.frame);
+        self.mux.send(conn, Arc::from(self.frame.as_slice()))
+    }
+
+    fn hangup(&mut self, conn: usize) {
+        self.mark_dead(conn);
+    }
+
+    fn mark_dead(&mut self, conn: usize) {
+        self.mux.close(conn);
+        if conn < self.alive.len() && self.alive[conn] {
+            self.alive[conn] = false;
+            if conn != self.up {
+                self.roster.release(conn);
+                self.table.drop_conn(conn);
+            }
+        }
+    }
+}

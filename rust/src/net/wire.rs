@@ -37,6 +37,7 @@
 
 use crate::coding::bitio::{BitReader, BitWriter};
 use crate::compressors::{CompressedGrad, PackedTernary};
+use crate::coordinator::REJECT_KINDS;
 
 /// Frame magic: `"SGND"` read MSB-first.
 pub const MAGIC: u32 = 0x5347_4E44;
@@ -256,6 +257,15 @@ pub enum MsgType {
     Fin = 7,
     /// Client → server liveness signal.
     Heartbeat = 8,
+    /// Shard → root rendezvous: "I aggregate workers `[lo, hi)`"
+    /// (DESIGN.md §14). Same fields as `Hello`; the distinct type tags
+    /// the connection as an aggregator tier, not a client.
+    ShardHello = 9,
+    /// Shard → root per-round merged submission: the shard's filled
+    /// record metadata plus its raw `VoteAccumulator` counter planes,
+    /// merged word-parallel at the root. Additive message (the frame
+    /// grammar and every v3 message are unchanged), so no version bump.
+    ShardAgg = 10,
 }
 
 impl MsgType {
@@ -269,6 +279,8 @@ impl MsgType {
             6 => MsgType::Reject,
             7 => MsgType::Fin,
             8 => MsgType::Heartbeat,
+            9 => MsgType::ShardHello,
+            10 => MsgType::ShardAgg,
             _ => return None,
         })
     }
@@ -330,6 +342,8 @@ pub enum Msg {
     Reject { t: u64, worker: u64, reason: RejectReason },
     Fin { rounds: u64 },
     Heartbeat { client_id: u64 },
+    /// Aggregator-shard rendezvous claim (same shape as `Hello`).
+    ShardHello { lo: u64, hi: u64, cfg: u64, env: u64 },
 }
 
 impl Msg {
@@ -344,6 +358,7 @@ impl Msg {
             Msg::Reject { .. } => MsgType::Reject,
             Msg::Fin { .. } => MsgType::Fin,
             Msg::Heartbeat { .. } => MsgType::Heartbeat,
+            Msg::ShardHello { .. } => MsgType::ShardHello,
         }
     }
 }
@@ -436,6 +451,96 @@ pub struct UpdateView<'a> {
     pub grad: GradView<'a>,
 }
 
+/// One accepted submission's metadata inside a [`MsgType::ShardAgg`]
+/// frame — everything the root needs to fill its per-slot arrays; the
+/// vote content itself travels merged in the counter planes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardRec {
+    pub worker: u64,
+    pub loss: f64,
+    pub bits: f64,
+    pub nnz: u64,
+    pub scale: f32,
+}
+
+/// Borrowed view of a [`MsgType::ShardAgg`] payload. `pos`/`neg` are
+/// the little-endian bytes of the shard accumulator's carry-save
+/// counter planes (`words(dim) * planes` words each, per-word
+/// plane-major — the `VoteAccumulator` memory layout verbatim).
+#[derive(Clone, Debug)]
+pub struct ShardAggView<'a> {
+    pub t: u64,
+    pub lo: u64,
+    pub hi: u64,
+    pub recs: Vec<ShardRec>,
+    /// Client-tier wire bytes the shard accepted this round.
+    pub up_bytes: u64,
+    /// Client-tier wire bytes the shard broadcast this round.
+    pub down_bytes: u64,
+    /// Shard-local typed rejects issued this round, by
+    /// [`RejectReason::index`].
+    pub rejects: [u64; REJECT_KINDS],
+    pub msgs: u64,
+    pub dim: usize,
+    pub planes: usize,
+    pub pos: &'a [u8],
+    pub neg: &'a [u8],
+}
+
+/// Decode a shard merged-round submission as a borrowed view.
+/// `frame.msg_type` must be [`MsgType::ShardAgg`]. Payload grammar:
+///
+/// ```text
+/// shard_agg := t:varint lo:varint hi:varint
+///              k:varint  k × (worker:varint loss:f64le bits:f64le
+///                             nnz:varint scale:f32le)
+///              up_bytes:varint down_bytes:varint
+///              rejects:varint × REJECT_KINDS
+///              msgs:varint (= k)  dim:varint  planes:varint
+///              pos[words(dim)·planes]:u64le  neg[same]:u64le
+/// ```
+///
+/// Counts are bounded by the bytes present before anything allocates,
+/// exactly like the update path.
+pub fn decode_shard_agg(payload: &[u8]) -> Result<ShardAggView<'_>, WireError> {
+    let mut cur = Cursor::new(payload);
+    let t = cur.varint()?;
+    let lo = cur.varint()?;
+    let hi = cur.varint()?;
+    // Each record is ≥ 22 bytes (two f64, one f32, two ≥1-byte varints).
+    let k = cur.count(cur.remaining() / 22 + 1, "shard record count exceeds payload")?;
+    let mut recs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let worker = cur.varint()?;
+        let loss = cur.f64()?;
+        let bits = cur.f64()?;
+        let nnz = cur.varint()?;
+        let scale = cur.f32()?;
+        recs.push(ShardRec { worker, loss, bits, nnz, scale });
+    }
+    let up_bytes = cur.varint()?;
+    let down_bytes = cur.varint()?;
+    let mut rejects = [0u64; REJECT_KINDS];
+    for r in rejects.iter_mut() {
+        *r = cur.varint()?;
+    }
+    let msgs = cur.varint()?;
+    if msgs != k as u64 {
+        return Err(WireError::Malformed("shard msgs disagrees with record count"));
+    }
+    let dim = cur.count(4 * MAX_PAYLOAD, "shard dim out of range")?;
+    // ≤ 15 planes cover the protocol's 32767-message streaming cap.
+    let planes = cur.count(16, "shard planes out of range")?;
+    if (planes == 0) != (k == 0) {
+        return Err(WireError::Malformed("shard planes/record count mismatch"));
+    }
+    let plane_bytes = PackedTernary::words(dim) * 8 * planes;
+    let pos = cur.take(plane_bytes)?;
+    let neg = cur.take(plane_bytes)?;
+    cur.done()?;
+    Ok(ShardAggView { t, lo, hi, recs, up_bytes, down_bytes, rejects, msgs, dim, planes, pos, neg })
+}
+
 // ---------------------------------------------------------------------
 // Encoding.
 // ---------------------------------------------------------------------
@@ -514,8 +619,65 @@ impl WireBuf {
             Msg::Heartbeat { client_id } => {
                 push_varint(p, *client_id);
             }
+            Msg::ShardHello { lo, hi, cfg, env } => {
+                push_varint(p, *lo);
+                push_varint(p, *hi);
+                p.extend_from_slice(&cfg.to_le_bytes());
+                p.extend_from_slice(&env.to_le_bytes());
+            }
         }
         frame(msg.msg_type(), &self.payload, out)
+    }
+
+    /// Encode one shard→root merged-round submission (see
+    /// [`decode_shard_agg`] for the payload grammar); returns the
+    /// frame's byte length. `pos`/`neg` are the shard accumulator's raw
+    /// carry-save counter planes (`words(dim) * planes` words each).
+    pub fn encode_shard_agg(
+        &mut self,
+        t: u64,
+        lo: u64,
+        hi: u64,
+        recs: &[ShardRec],
+        up_bytes: u64,
+        down_bytes: u64,
+        rejects: &[u64; REJECT_KINDS],
+        dim: usize,
+        planes: usize,
+        pos: &[u64],
+        neg: &[u64],
+        out: &mut Vec<u8>,
+    ) -> usize {
+        debug_assert_eq!(pos.len(), PackedTernary::words(dim) * planes);
+        debug_assert_eq!(neg.len(), pos.len());
+        self.payload.clear();
+        let p = &mut self.payload;
+        push_varint(p, t);
+        push_varint(p, lo);
+        push_varint(p, hi);
+        push_varint(p, recs.len() as u64);
+        for r in recs {
+            push_varint(p, r.worker);
+            p.extend_from_slice(&r.loss.to_le_bytes());
+            p.extend_from_slice(&r.bits.to_le_bytes());
+            push_varint(p, r.nnz);
+            p.extend_from_slice(&r.scale.to_le_bytes());
+        }
+        push_varint(p, up_bytes);
+        push_varint(p, down_bytes);
+        for &r in rejects {
+            push_varint(p, r);
+        }
+        push_varint(p, recs.len() as u64); // msgs folded into the planes
+        push_varint(p, dim as u64);
+        push_varint(p, planes as u64);
+        for &w in pos {
+            p.extend_from_slice(&w.to_le_bytes());
+        }
+        for &w in neg {
+            p.extend_from_slice(&w.to_le_bytes());
+        }
+        frame(MsgType::ShardAgg, &self.payload, out)
     }
 
     /// Borrow-friendly round-open encoder (the coordinator's per-round
@@ -621,6 +783,67 @@ fn frame(ty: MsgType, payload: &[u8], out: &mut Vec<u8>) -> usize {
 // ---------------------------------------------------------------------
 // Decoding.
 // ---------------------------------------------------------------------
+
+/// Incremental frame delimiter for nonblocking reads: how many bytes
+/// does the frame at the front of `buf` span? `Ok(None)` means the
+/// buffer holds a valid-so-far prefix — wait for more bytes. Errors are
+/// fatal stream corruption (bad magic/version, hostile length): the
+/// connection cannot be re-synchronized. Validates framing only; the
+/// caller runs [`parse_frame`] on the complete bytes for the CRC and
+/// type checks (one CRC pass total, same as the blocking reader).
+pub fn frame_len(buf: &[u8], max_payload: usize) -> Result<Option<usize>, WireError> {
+    // magic(4) + version(1): fatal checks, byte-at-a-time so a partial
+    // prefix is judged as far as it goes.
+    for (i, &b) in MAGIC.to_be_bytes().iter().enumerate() {
+        match buf.get(i) {
+            None => return Ok(None),
+            Some(&got) if got != b => {
+                let mut four = [0u8; 4];
+                for (j, slot) in four.iter_mut().enumerate() {
+                    *slot = buf.get(j).copied().unwrap_or(0);
+                }
+                return Err(WireError::BadMagic { got: u32::from_be_bytes(four) });
+            }
+            Some(_) => {}
+        }
+    }
+    match buf.get(4) {
+        None => return Ok(None),
+        Some(&v) if v != WIRE_VERSION => return Err(WireError::BadVersion { got: v }),
+        Some(_) => {}
+    }
+    // Type byte is validated by parse_frame (unknown types are a typed
+    // error there, and the frame is still well-delimited here).
+    if buf.len() < HEADER_FIXED {
+        return Ok(None);
+    }
+    // Length varint, mirroring the Cursor rules.
+    let mut len = 0u64;
+    let mut vlen = 0usize;
+    for i in 0..10 {
+        let Some(&b) = buf.get(HEADER_FIXED + i) else { return Ok(None) };
+        let low = (b & 0x7f) as u64;
+        if i == 9 && low > 1 {
+            return Err(WireError::Malformed("varint overflows u64"));
+        }
+        len |= low << (7 * i);
+        if b & 0x80 == 0 {
+            vlen = i + 1;
+            break;
+        }
+        if i == 9 {
+            return Err(WireError::Malformed("varint longer than 10 bytes"));
+        }
+    }
+    if vlen == 0 {
+        return Ok(None);
+    }
+    if len > max_payload as u64 {
+        return Err(WireError::Oversized { len, max: max_payload });
+    }
+    let total = HEADER_FIXED + vlen + len as usize + CRC_LEN;
+    Ok(if buf.len() < total { None } else { Some(total) })
+}
 
 /// Parse and checksum one frame from the front of `buf`; returns the
 /// borrowed frame and the total bytes consumed. `max_payload` caps the
@@ -771,6 +994,18 @@ pub fn decode_msg(frame: Frame<'_>) -> Result<Msg, WireError> {
         }
         MsgType::Fin => Msg::Fin { rounds: cur.varint()? },
         MsgType::Heartbeat => Msg::Heartbeat { client_id: cur.varint()? },
+        MsgType::ShardHello => {
+            let lo = cur.varint()?;
+            let hi = cur.varint()?;
+            let cfg = cur.u64le()?;
+            let env = cur.u64le()?;
+            Msg::ShardHello { lo, hi, cfg, env }
+        }
+        // Bulk data-plane frame: owned decode would clone the counter
+        // planes for no caller. Use the borrowed view.
+        MsgType::ShardAgg => {
+            return Err(WireError::Malformed("shard-agg frames use decode_shard_agg"));
+        }
     };
     cur.done()?;
     Ok(msg)
@@ -829,6 +1064,7 @@ mod tests {
             Msg::Reject { t: 5, worker: 2, reason: RejectReason::Duplicate },
             Msg::Fin { rounds: 120 },
             Msg::Heartbeat { client_id: 9 },
+            Msg::ShardHello { lo: 512, hi: 1024, cfg: 0xdead_beef, env: 42 },
         ];
         for msg in &msgs {
             assert_eq!(&roundtrip(msg), msg);
@@ -931,6 +1167,96 @@ mod tests {
         // is what crosses the wire.
         let plane_bytes = 2 * PackedTernary::words(d) * 8;
         assert!(frame.payload.len() < plane_bytes + 64);
+    }
+
+    fn sample_shard_agg(out: &mut Vec<u8>) -> (Vec<ShardRec>, Vec<u64>, Vec<u64>) {
+        // dim 100 → 2 words; 3 messages → planes happen to be caller's
+        // choice here (the accumulator dictates it in production).
+        let dim = 100;
+        let planes = 2;
+        let words = PackedTernary::words(dim) * planes;
+        let pos: Vec<u64> = (0..words as u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)).collect();
+        let neg: Vec<u64> = pos.iter().map(|w| !w).collect();
+        let recs = vec![
+            ShardRec { worker: 3, loss: 0.25, bits: 217.0, nnz: 40, scale: 1.0 },
+            ShardRec { worker: 64, loss: -0.5, bits: 217.0, nnz: 17, scale: 1.0 },
+            ShardRec { worker: 99, loss: 2.0, bits: 219.5, nnz: 100, scale: 1.0 },
+        ];
+        let rejects = [0, 1, 0, 2, 0, 0];
+        let mut wbuf = WireBuf::new();
+        let n =
+            wbuf.encode_shard_agg(7, 50, 150, &recs, 4096, 8192, &rejects, dim, planes, &pos, &neg, out);
+        assert_eq!(n, out.len());
+        (recs, pos, neg)
+    }
+
+    #[test]
+    fn shard_agg_roundtrips_bit_identically() {
+        let mut out = Vec::new();
+        let (recs, pos, neg) = sample_shard_agg(&mut out);
+        let (frame, consumed) = parse_frame(&out, MAX_PAYLOAD).unwrap();
+        assert_eq!(consumed, out.len());
+        assert_eq!(frame.msg_type, MsgType::ShardAgg);
+        let view = decode_shard_agg(frame.payload).unwrap();
+        assert_eq!((view.t, view.lo, view.hi), (7, 50, 150));
+        assert_eq!(view.recs, recs);
+        assert_eq!((view.up_bytes, view.down_bytes), (4096, 8192));
+        assert_eq!(view.rejects, [0, 1, 0, 2, 0, 0]);
+        assert_eq!((view.msgs, view.dim, view.planes), (3, 100, 2));
+        let got_pos: Vec<u64> = view.pos.chunks_exact(8).map(le_word).collect();
+        let got_neg: Vec<u64> = view.neg.chunks_exact(8).map(le_word).collect();
+        assert_eq!(got_pos, pos);
+        assert_eq!(got_neg, neg);
+        // The owned decoder refuses the bulk frame by design.
+        assert!(matches!(decode_msg(frame), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn shard_agg_hardening_rejects_inconsistent_payloads() {
+        let mut out = Vec::new();
+        sample_shard_agg(&mut out);
+        let (frame, _) = parse_frame(&out, MAX_PAYLOAD).unwrap();
+        // Every truncation of the payload is a typed error, never a panic.
+        for cut in 0..frame.payload.len() {
+            assert!(decode_shard_agg(&frame.payload[..cut]).is_err(), "cut {cut}");
+        }
+        // k = 0 must come with zero planes and no plane bytes.
+        let mut wbuf = WireBuf::new();
+        let mut empty = Vec::new();
+        wbuf.encode_shard_agg(0, 0, 8, &[], 0, 0, &[0; REJECT_KINDS], 100, 0, &[], &[], &mut empty);
+        let (f, _) = parse_frame(&empty, MAX_PAYLOAD).unwrap();
+        let view = decode_shard_agg(f.payload).unwrap();
+        assert_eq!((view.msgs, view.planes), (0, 0));
+        assert!(view.pos.is_empty() && view.neg.is_empty());
+    }
+
+    #[test]
+    fn frame_len_delimits_partial_and_concatenated_streams() {
+        let mut wbuf = WireBuf::new();
+        let mut bytes = Vec::new();
+        let n1 = wbuf.encode(&Msg::Heartbeat { client_id: 1 }, &mut bytes);
+        let n2 = wbuf.encode(&Msg::Fin { rounds: 4 }, &mut bytes);
+        // Every strict prefix of frame 1: incomplete, not an error.
+        for cut in 0..n1 {
+            assert_eq!(frame_len(&bytes[..cut], MAX_PAYLOAD).unwrap(), None, "cut {cut}");
+        }
+        // The exact frame and any longer buffer delimit frame 1 only.
+        assert_eq!(frame_len(&bytes[..n1], MAX_PAYLOAD).unwrap(), Some(n1));
+        assert_eq!(frame_len(&bytes, MAX_PAYLOAD).unwrap(), Some(n1));
+        // And the tail delimits frame 2.
+        assert_eq!(frame_len(&bytes[n1..], MAX_PAYLOAD).unwrap(), Some(n2));
+        // Garbage and protocol drift are fatal, immediately.
+        assert!(matches!(frame_len(b"XXXXXXXX", MAX_PAYLOAD), Err(WireError::BadMagic { .. })));
+        let mut drift = bytes[..n1].to_vec();
+        drift[4] = WIRE_VERSION + 9;
+        assert!(matches!(frame_len(&drift, MAX_PAYLOAD), Err(WireError::BadVersion { .. })));
+        // A hostile declared length dies before any buffering decision.
+        let mut huge = bytes[..HEADER_FIXED].to_vec();
+        push_varint(&mut huge, u64::MAX / 2);
+        assert!(matches!(frame_len(&huge, MAX_PAYLOAD), Err(WireError::Oversized { .. })));
+        // frame_len agrees with parse_frame's `used` on real frames.
+        let (_, used) = parse_frame(&bytes, MAX_PAYLOAD).unwrap();
+        assert_eq!(used, n1);
     }
 
     #[test]

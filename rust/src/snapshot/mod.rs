@@ -15,7 +15,7 @@
 //! run (`tests/snapshot_resume.rs`; the `resume-equivalence` CI job
 //! pins the cross-process version over TCP and UDS).
 //!
-//! ## File grammar (version 2; version 1 still loads)
+//! ## File grammar (version 3; versions 1 and 2 still load)
 //!
 //! ```text
 //! snapshot := magic:u32be("SGSP")  version:u8  kind:u8(=1)
@@ -29,7 +29,7 @@
 //!             residual_flag:u8  [ residual: dim × f32le ]
 //!             nreports:varint  report[nreports]
 //!             nledger:varint   ledgerrec[nledger]
-//!             rejects: 6 × varint            (v2 only)
+//!             rejects: 6 × varint            (v2 onward)
 //! selection:= v1:  select_rng: 4 × u64le     (legacy raw state)
 //!             v2:  sel_tag:u8
 //!                  0 → select_rng: 4 × u64le (legacy raw state)
@@ -41,14 +41,19 @@
 //! ledgerrec:= uplink_bits:f64le  downlink_bits:f64le  senders:varint
 //!             uplink_nnz:varint  uplink_wire_bytes:varint
 //!             downlink_wire_bytes:varint  stragglers:varint
+//!             [ shard_uplink_wire_bytes:varint            (v3 only)
+//!               shard_downlink_wire_bytes:varint ]
 //! ```
 //!
 //! Version 2 (the hardened-selection bump, DESIGN.md §13) adds the
 //! selection-mode tag — committed-seed runs serialize a one-way
 //! commitment plus a round counter and **never** raw RNG state — and the
-//! cumulative typed-reject counters. Writers always emit v2; the loader
-//! still accepts v1 files (legacy raw selection, zero rejects), so
-//! snapshots written by the previous release resume cleanly.
+//! cumulative typed-reject counters. Version 3 (the aggregation-tree
+//! bump, DESIGN.md §14) appends the per-round shard-tier wire-byte
+//! columns to each ledger record. Writers always emit v3; the loader
+//! still accepts v1 (legacy raw selection, zero rejects) and v2 (zero
+//! shard-tier bytes) files, so snapshots written by previous releases
+//! resume cleanly.
 //!
 //! The framing deliberately reuses the `net/wire.rs` building blocks —
 //! the [`crate::coding::bitio`] MSB-first header, LEB128 varints, and
@@ -95,7 +100,10 @@ use crate::net::wire::{crc32, push_varint, Cursor, WireError};
 /// Snapshot file magic: `"SGSP"` read MSB-first.
 pub const SNAP_MAGIC: u32 = 0x5347_5350;
 /// Current snapshot-format version (what writers emit).
-pub const SNAP_VERSION: u8 = 2;
+pub const SNAP_VERSION: u8 = 3;
+/// The hardened-selection format (selection tag + reject counters, no
+/// shard-tier wire bytes); still loads.
+pub const SNAP_VERSION_V2: u8 = 2;
 /// Oldest version the loader still accepts (legacy raw selection, no
 /// reject counters).
 pub const SNAP_VERSION_V1: u8 = 1;
@@ -365,6 +373,8 @@ impl CoordinatorSnapshot {
             push_varint(&mut body, rec.uplink_wire_bytes);
             push_varint(&mut body, rec.downlink_wire_bytes);
             push_varint(&mut body, rec.stragglers as u64);
+            push_varint(&mut body, rec.shard_uplink_wire_bytes);
+            push_varint(&mut body, rec.shard_downlink_wire_bytes);
         }
         for &n in self.ledger.rejects_by_kind() {
             push_varint(&mut body, n);
@@ -546,6 +556,11 @@ impl CoordinatorSnapshot {
             let uplink_wire_bytes = cur.varint()?;
             let downlink_wire_bytes = cur.varint()?;
             let stragglers = cur.count(MAX_WORKERS, "ledger stragglers out of range")?;
+            let (shard_uplink_wire_bytes, shard_downlink_wire_bytes) = if version >= SNAP_VERSION {
+                (cur.varint()?, cur.varint()?)
+            } else {
+                (0, 0)
+            };
             records.push(RoundComm {
                 uplink_bits,
                 downlink_bits,
@@ -553,11 +568,13 @@ impl CoordinatorSnapshot {
                 uplink_nnz,
                 uplink_wire_bytes,
                 downlink_wire_bytes,
+                shard_uplink_wire_bytes,
+                shard_downlink_wire_bytes,
                 stragglers,
             });
         }
         let mut rejects = [0u64; REJECT_KINDS];
-        if version >= SNAP_VERSION {
+        if version >= SNAP_VERSION_V2 {
             for r in rejects.iter_mut() {
                 *r = cur.varint()?;
             }
@@ -659,6 +676,8 @@ mod tests {
                 uplink_nnz: 3 + t,
                 uplink_wire_bytes: 256,
                 downlink_wire_bytes: 128,
+                shard_uplink_wire_bytes: (t as u64) * 48,
+                shard_downlink_wire_bytes: (t as u64) * 32,
                 stragglers: t % 2,
             });
         }
@@ -830,12 +849,12 @@ mod tests {
         }
     }
 
-    #[test]
-    fn v1_snapshots_still_load() {
-        // Re-encode sample(2) in the version-1 grammar by hand: no
-        // selection tag (raw words follow the phase) and no reject
-        // counters. The loader must accept it bit-for-bit.
-        let snap = sample(2);
+    /// Hand-encode `snap` in a legacy grammar: v1 (no selection tag, no
+    /// reject counters) or v2 (selection tag + rejects, no shard-tier
+    /// ledger columns). Kept independent of `encode()` so these tests
+    /// pin the historical layouts, not whatever the writer does today.
+    fn encode_legacy(snap: &CoordinatorSnapshot, version: u8) -> Vec<u8> {
+        assert!(version == SNAP_VERSION_V1 || version == SNAP_VERSION_V2);
         let raw = match snap.selection {
             SelectionSnapshot::LegacyRaw(raw) => raw,
             _ => unreachable!(),
@@ -855,6 +874,9 @@ mod tests {
                 body.push(1);
                 push_varint(&mut body, t as u64);
             }
+        }
+        if version >= SNAP_VERSION_V2 {
+            body.push(0); // selection tag: legacy raw words
         }
         for w in raw {
             body.extend_from_slice(&w.to_le_bytes());
@@ -898,20 +920,65 @@ mod tests {
             push_varint(&mut body, rec.downlink_wire_bytes);
             push_varint(&mut body, rec.stragglers as u64);
         }
-        let mut v1 = Vec::new();
+        if version >= SNAP_VERSION_V2 {
+            for &n in snap.ledger.rejects_by_kind() {
+                push_varint(&mut body, n);
+            }
+        }
+        let mut out = Vec::new();
         let mut hdr = BitWriter::new();
         hdr.push_bits(SNAP_MAGIC as u64, 32);
-        hdr.push_bits(SNAP_VERSION_V1 as u64, 8);
+        hdr.push_bits(version as u64, 8);
         hdr.push_bits(KIND_COORDINATOR as u64, 8);
-        v1.extend_from_slice(hdr.as_bytes());
-        push_varint(&mut v1, body.len() as u64);
-        v1.extend_from_slice(&body);
-        let crc = crc32(&v1);
-        v1.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(hdr.as_bytes());
+        push_varint(&mut out, body.len() as u64);
+        out.extend_from_slice(&body);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
 
+    /// `snap` with the shard-tier ledger columns zeroed — what loading a
+    /// pre-v3 file must reconstruct.
+    fn without_shard_columns(snap: &CoordinatorSnapshot) -> CoordinatorSnapshot {
+        let recs: Vec<RoundComm> = snap
+            .ledger
+            .records()
+            .iter()
+            .map(|r| RoundComm {
+                shard_uplink_wire_bytes: 0,
+                shard_downlink_wire_bytes: 0,
+                ..*r
+            })
+            .collect();
+        let mut out = snap.clone();
+        out.ledger = CommLedger::from_records_with_rejects(recs, *snap.ledger.rejects_by_kind());
+        out
+    }
+
+    #[test]
+    fn v1_snapshots_still_load() {
+        // Re-encode sample(2) in the version-1 grammar by hand: no
+        // selection tag (raw words follow the phase), no reject
+        // counters, no shard-tier columns. The loader must accept it.
+        let snap = sample(2);
+        let v1 = encode_legacy(&snap, SNAP_VERSION_V1);
         let back = CoordinatorSnapshot::decode(&v1).expect("v1 decode");
-        assert_eq!(back, snap);
+        assert_eq!(back, without_shard_columns(&snap));
         assert_eq!(back.ledger.total_rejects(), 0);
+    }
+
+    #[test]
+    fn v2_snapshots_still_load() {
+        // Version-2 grammar: selection tag + reject counters, but no
+        // shard-tier ledger columns. The reject counters must survive
+        // the load (the v3 bump must not steal v2's reject gate).
+        let mut snap = sample(2);
+        snap.ledger.add_rejects(&[0, 2, 0, 1, 0, 0]);
+        let v2 = encode_legacy(&snap, SNAP_VERSION_V2);
+        let back = CoordinatorSnapshot::decode(&v2).expect("v2 decode");
+        assert_eq!(back, without_shard_columns(&snap));
+        assert_eq!(back.ledger.total_rejects(), 3);
     }
 
     #[test]

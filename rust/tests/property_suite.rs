@@ -654,6 +654,8 @@ fn gen_snapshot(rng: &mut Pcg64) -> CoordinatorSnapshot {
             uplink_nnz: rng.index(1 << 20),
             uplink_wire_bytes: rng.next_u64() >> 40,
             downlink_wire_bytes: rng.next_u64() >> 40,
+            shard_uplink_wire_bytes: rng.next_u64() >> 44,
+            shard_downlink_wire_bytes: rng.next_u64() >> 44,
             stragglers: rng.index(16),
         });
     }
@@ -761,12 +763,12 @@ fn snapshot_version_bump_is_refused() {
     ));
 }
 
-/// Golden layout pin for snapshot version 2: an independent re-encoding
-/// of the DESIGN.md §12/§13 grammar must byte-match the codec's output
-/// for a fixed state. Any layout change breaks this test, forcing a
-/// version bump (and a new golden) rather than a silent format drift.
+/// Golden layout pin for snapshot version 3: an independent re-encoding
+/// of the DESIGN.md §12/§13/§14 grammar must byte-match the codec's
+/// output for a fixed state. Any layout change breaks this test, forcing
+/// a version bump (and a new golden) rather than a silent format drift.
 #[test]
-fn snapshot_v2_golden_layout() {
+fn snapshot_v3_golden_layout() {
     // Independent LEB128 (deliberately re-implemented, not imported).
     fn varint(out: &mut Vec<u8>, mut v: u64) {
         loop {
@@ -807,6 +809,8 @@ fn snapshot_v2_golden_layout() {
                 uplink_nnz: 5,
                 uplink_wire_bytes: 130,
                 downlink_wire_bytes: 260,
+                shard_uplink_wire_bytes: 48,
+                shard_downlink_wire_bytes: 24,
                 stragglers: 0,
             }],
             rejects,
@@ -849,6 +853,8 @@ fn snapshot_v2_golden_layout() {
     varint(&mut body, 130); // uplink wire bytes
     varint(&mut body, 260); // downlink wire bytes
     varint(&mut body, 0); // stragglers
+    varint(&mut body, 48); // shard-tier uplink wire bytes (v3)
+    varint(&mut body, 24); // shard-tier downlink wire bytes (v3)
     for r in rejects {
         varint(&mut body, r); // cumulative typed rejects by kind
     }
@@ -864,7 +870,7 @@ fn snapshot_v2_golden_layout() {
     let crc = wire::crc32(&expect);
     expect.extend_from_slice(&crc.to_le_bytes());
 
-    assert_eq!(snap.encode(), expect, "snapshot v2 layout drifted — bump SNAP_VERSION");
+    assert_eq!(snap.encode(), expect, "snapshot v3 layout drifted — bump SNAP_VERSION");
     assert_eq!(CoordinatorSnapshot::decode(&expect).expect("golden decodes"), snap);
 }
 

@@ -1,0 +1,374 @@
+//! Sharded aggregation tree equivalence (DESIGN.md §14): routing a
+//! federated run through aggregator shards — each folding its slice of
+//! the cohort into a local `VoteAccumulator` and streaming one merged
+//! frame per round to the root — must produce a `RunHistory`
+//! **bit-identical** to both the flat transport run and the in-process
+//! engine on the same seed. Vote counts are integer sums, so the root's
+//! word-parallel merge of shard counter planes commutes with folding
+//! the same updates directly; these tests pin that argument end-to-end
+//! over real sockets (TCP and, on unix, UDS), including partial
+//! participation and a sign-flip attack cohort straddling a shard
+//! boundary.
+//!
+//! Failure injection rides the same harness: a shard that dies
+//! mid-round has its slots settled (its slice drawn as stragglers, the
+//! run completing on the surviving shard), and a shard whose handshake
+//! the root refuses can be respawned correctly with no trace in the
+//! history.
+
+use sparsignd::compressors::CompressorKind;
+use sparsignd::coordinator::{
+    chunk_bounds, AggregationRule, Algorithm, Attack, AttackPlan, ClassifierEnv, Cohort,
+    GradientSource, RunHistory, TrainingRun,
+};
+use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+use sparsignd::model::ModelKind;
+use sparsignd::net::client::loopback_endpoint;
+use sparsignd::net::{
+    run_fleet_range, run_loopback, run_loopback_sharded, FleetOptions, NetCoordinator, NetError,
+    ServeOptions, ShardCoordinator, ShardOptions,
+};
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
+use std::time::Duration;
+
+fn env(workers: usize) -> ClassifierEnv {
+    let task = SyntheticTask::generate(
+        SyntheticSpec {
+            dim: 12,
+            classes: 3,
+            modes: 1,
+            separation: 1.8,
+            noise: 0.25,
+            label_noise: 0.0,
+            train: 480,
+            test: 120,
+        },
+        31,
+    );
+    let mut rng = Pcg64::seed_from(32);
+    let fed = DirichletPartitioner { alpha: 0.5, workers }.partition(&task.train, &mut rng);
+    ClassifierEnv::new(
+        ModelKind::Linear { inputs: 12, classes: 3 }.build(),
+        task.train,
+        task.test,
+        fed,
+        16,
+    )
+}
+
+fn base_run(alg: Algorithm, rounds: usize) -> TrainingRun {
+    let mut run = TrainingRun::new(alg, LrSchedule::Const { lr: 0.05 }, rounds);
+    run.eval_every = 3;
+    run.seed = 11;
+    run
+}
+
+/// Math-field equality — the bit-identity contract. Wire-byte tier
+/// columns are *not* compared (a sharded run legitimately records
+/// shard-tier traffic a flat run has no frames for).
+fn assert_identical(a: &RunHistory, b: &RunHistory) {
+    assert_eq!(a.final_params, b.final_params, "final params");
+    assert_eq!(a.reports.len(), b.reports.len());
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.uplink_bits, rb.uplink_bits, "round {}", ra.round);
+        assert_eq!(ra.downlink_bits, rb.downlink_bits, "round {}", ra.round);
+        assert_eq!(ra.cum_uplink_bits, rb.cum_uplink_bits, "round {}", ra.round);
+        assert_eq!(ra.eval, rb.eval, "round {}", ra.round);
+    }
+    assert_eq!(a.ledger.total_uplink(), b.ledger.total_uplink());
+    assert_eq!(a.ledger.total_downlink(), b.ledger.total_downlink());
+    assert_eq!(a.ledger.total_uplink_nnz(), b.ledger.total_uplink_nnz());
+}
+
+/// In-process, flat-transport, and sharded-transport runs of the same
+/// config; pins all three identical and returns the sharded history.
+fn sharded_vs_flat_vs_in_process(
+    run: &TrainingRun,
+    workers: usize,
+    shards: usize,
+    uds: bool,
+) -> RunHistory {
+    let e = env(workers);
+    let mut rng = Pcg64::seed_from(33);
+    let init = e.init_params(&mut rng);
+    let in_process = run.run(&e, init.clone(), &|p| e.evaluate(p));
+
+    let eval = |p: &[f32]| e.evaluate(p);
+    let fleet_opts = FleetOptions { agents: 2, ..FleetOptions::default() };
+    let (flat_hist, _) = run_loopback(
+        run,
+        &e,
+        init.clone(),
+        &eval,
+        ServeOptions::new(loopback_endpoint(uds)),
+        &fleet_opts,
+    )
+    .expect("flat loopback run");
+    assert_identical(&in_process, &flat_hist);
+    // Flat runs have no shard tier to account for.
+    assert_eq!(flat_hist.ledger.total_shard_uplink_wire_bytes(), 0);
+    assert_eq!(flat_hist.ledger.total_shard_downlink_wire_bytes(), 0);
+
+    let (shard_hist, stats, shard_stats) = run_loopback_sharded(
+        run,
+        &e,
+        init,
+        &eval,
+        ServeOptions::new(loopback_endpoint(uds)),
+        &fleet_opts,
+        shards,
+        uds,
+    )
+    .expect("sharded loopback run");
+    assert_identical(&in_process, &shard_hist);
+
+    // The tree really carried the rounds: every shard relayed every
+    // round and the root's ledger saw shard-tier frames both ways.
+    assert_eq!(shard_stats.len(), shards);
+    let folded: u64 = shard_stats.iter().map(|s| s.updates_folded).sum();
+    let senders: u64 = (0..shard_hist.ledger.rounds())
+        .map(|t| shard_hist.ledger.get(t).unwrap().senders as u64)
+        .sum();
+    assert_eq!(folded, senders, "every accepted update folded at exactly one shard");
+    for (i, s) in shard_stats.iter().enumerate() {
+        assert!(s.rounds_relayed >= run.rounds as u64, "shard {i} relayed too few rounds");
+        assert_eq!(s.rejects_from_root, 0, "shard {i} drew rejects from the root");
+        assert!(s.root_up_bytes > 0 && s.root_down_bytes > 0, "shard {i} tier bytes");
+    }
+    assert!(shard_hist.ledger.total_shard_uplink_wire_bytes() > 0);
+    assert!(shard_hist.ledger.total_shard_downlink_wire_bytes() > 0);
+    assert_eq!(shard_hist.ledger.total_stragglers(), 0);
+    assert_eq!(stats.rejected, 0);
+    shard_hist
+}
+
+#[test]
+fn sharded_tree_matches_flat_and_in_process_over_tcp() {
+    let run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 0.7 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        6,
+    );
+    // 10 workers over 3 shards: uneven ranges (4/3/3) cross-check the
+    // covered-range bookkeeping.
+    sharded_vs_flat_vs_in_process(&run, 10, 3, false);
+}
+
+#[cfg(unix)]
+#[test]
+fn sharded_tree_matches_flat_and_in_process_over_uds() {
+    let run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::ScaledSign,
+        },
+        6,
+    );
+    sharded_vs_flat_vs_in_process(&run, 9, 2, true);
+}
+
+#[test]
+fn sharded_partial_participation_selection_stays_at_the_root() {
+    let mut run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        8,
+    );
+    run.participation = 0.5;
+    let hist = sharded_vs_flat_vs_in_process(&run, 10, 2, false);
+    for t in 0..hist.ledger.rounds() {
+        assert_eq!(hist.ledger.get(t).unwrap().senders, 5, "round {t}");
+    }
+}
+
+#[test]
+fn sign_flip_cohort_split_across_shards_matches_in_process() {
+    // Gradient-level attacks run identically in-process and on the wire;
+    // the cohort 3..7 straddles the 2-shard boundary at worker 5, so
+    // both shards fold attacked and honest votes into the same merge.
+    let mut run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        6,
+    );
+    run.attack =
+        Some(AttackPlan::composed(vec![Cohort::explicit(Attack::SignFlip, vec![3, 4, 5, 6], 1)]));
+    sharded_vs_flat_vs_in_process(&run, 10, 2, false);
+}
+
+/// A shard that claims its range and then dies mid-round (its own
+/// downstream fleet never arrives, so its rendezvous bound trips while
+/// the root's round is open). The root settles the dead shard's slots
+/// immediately — its slice is drawn as stragglers — and completes every
+/// round on the surviving shard alone.
+#[test]
+fn shard_death_mid_round_settles_and_the_run_completes() {
+    let workers = 8;
+    let rounds = 4;
+    let e = env(workers);
+    let run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        rounds,
+    );
+    let mut rng = Pcg64::seed_from(33);
+    let init = e.init_params(&mut rng);
+
+    let coordinator =
+        NetCoordinator::bind(ServeOptions::new(loopback_endpoint(false))).expect("root bind");
+    let root_ep = coordinator.local_endpoint().clone();
+    let mid = workers / 2;
+    let live = ShardCoordinator::bind(ShardOptions::new(
+        root_ep.clone(),
+        loopback_endpoint(false),
+        0,
+        mid,
+    ))
+    .expect("live shard bind");
+    let live_ep = live.local_endpoint().clone();
+    let mut doomed_opts =
+        ShardOptions::new(root_ep.clone(), loopback_endpoint(false), mid, workers);
+    // No fleet will ever dial this shard; a short rendezvous bound makes
+    // it die while the root's round 0 is collecting.
+    doomed_opts.rendezvous_timeout = Duration::from_millis(300);
+    let doomed = ShardCoordinator::bind(doomed_opts).expect("doomed shard bind");
+
+    let fleet_opts = FleetOptions { agents: 1, ..FleetOptions::default() };
+    let eval = |p: &[f32]| e.evaluate(p);
+    let (root_out, live_out, doomed_out, fleet_out) = std::thread::scope(|s| {
+        let root = s.spawn(|| coordinator.serve(&run, workers, init, &eval));
+        let live_h = s.spawn(|| live.run(&run, workers, e.dim()));
+        let doomed_h = s.spawn(|| doomed.run(&run, workers, e.dim()));
+        let fleet_h = s.spawn(|| run_fleet_range(&live_ep, &run, &e, 0, mid, &fleet_opts));
+        (
+            root.join().expect("root thread"),
+            live_h.join().expect("live shard thread"),
+            doomed_h.join().expect("doomed shard thread"),
+            fleet_h.join().expect("fleet thread"),
+        )
+    });
+
+    let err = doomed_out.expect_err("the doomed shard must die uncovered");
+    assert!(
+        matches!(&err, NetError::Protocol(s) if s.contains("never covered")),
+        "unexpected doomed-shard exit: {err}"
+    );
+    let hist = root_out.expect("root must complete despite the dead shard");
+    let live_stats = live_out.expect("surviving shard must complete");
+    fleet_out.expect("surviving fleet must complete");
+
+    assert_eq!(hist.ledger.rounds(), rounds);
+    for t in 0..rounds {
+        let rc = hist.ledger.get(t).unwrap();
+        // Only the surviving shard's slice ever submits; the dead
+        // shard's workers are stragglers every round.
+        assert_eq!(rc.senders, mid, "round {t} senders");
+        assert_eq!(rc.stragglers, workers - mid, "round {t} stragglers");
+    }
+    assert_eq!(live_stats.updates_folded, (mid * rounds) as u64);
+}
+
+/// A shard the root refuses at handshake (wrong environment
+/// fingerprint) is indistinguishable from one that never dialed: the
+/// root keeps waiting out its rendezvous window, a correctly-configured
+/// replacement re-claims the same range, and the completed run is
+/// bit-identical to the in-process engine.
+#[test]
+fn refused_shard_respawn_reclaims_and_stays_bit_identical() {
+    let workers = 8;
+    let e = env(workers);
+    let run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 0.7 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        4,
+    );
+    let mut rng = Pcg64::seed_from(33);
+    let init = e.init_params(&mut rng);
+    let in_process = run.run(&e, init.clone(), &|p| e.evaluate(p));
+    let env_fp = e.env_fingerprint();
+
+    let mut serve_opts = ServeOptions::new(loopback_endpoint(false));
+    serve_opts.env_fingerprint = env_fp;
+    serve_opts.rendezvous_timeout = Duration::from_secs(20);
+    let coordinator = NetCoordinator::bind(serve_opts).expect("root bind");
+    let root_ep = coordinator.local_endpoint().clone();
+    let mid = workers / 2;
+    let shard_opts = |lo: usize, hi: usize| {
+        let mut so = ShardOptions::new(root_ep.clone(), loopback_endpoint(false), lo, hi);
+        so.env_fingerprint = env_fp;
+        so
+    };
+    let good_a = ShardCoordinator::bind(shard_opts(0, mid)).expect("shard a bind");
+    let a_ep = good_a.local_endpoint().clone();
+    let mut bad_opts = shard_opts(mid, workers);
+    bad_opts.env_fingerprint = 0xdead_beef; // refused by the armed root
+    let bad = ShardCoordinator::bind(bad_opts).expect("bad shard bind");
+
+    let fleet_opts = FleetOptions { agents: 1, ..FleetOptions::default() };
+    let eval = |p: &[f32]| e.evaluate(p);
+    let (root_out, fleet_a, fleet_b) = std::thread::scope(|s| {
+        let root = s.spawn(|| coordinator.serve(&run, workers, init, &eval));
+        let a_h = s.spawn(|| good_a.run(&run, workers, e.dim()));
+        let fa = s.spawn(|| run_fleet_range(&a_ep, &run, &e, 0, mid, &fleet_opts));
+
+        // The refused shard never claims: the root hangs up on its
+        // ShardHello before any Welcome.
+        let bad_err = bad.run(&run, workers, e.dim()).expect_err("bad shard must be refused");
+        assert!(
+            matches!(bad_err, NetError::Disconnected | NetError::Io(_) | NetError::Protocol(_)),
+            "unexpected refusal shape: {bad_err}"
+        );
+
+        // Respawn with the right fingerprint; the range is still free,
+        // the root is still in rendezvous, and the run proceeds whole.
+        let good_b =
+            ShardCoordinator::bind(shard_opts(mid, workers)).expect("shard b bind");
+        let b_ep = good_b.local_endpoint().clone();
+        let b_h = s.spawn(|| good_b.run(&run, workers, e.dim()));
+        let fb = s.spawn(|| run_fleet_range(&b_ep, &run, &e, mid, workers, &fleet_opts));
+
+        let root_out = root.join().expect("root thread");
+        a_h.join().expect("shard a thread").expect("shard a run");
+        b_h.join().expect("shard b thread").expect("shard b run");
+        (
+            root_out,
+            fa.join().expect("fleet a thread"),
+            fb.join().expect("fleet b thread"),
+        )
+    });
+
+    let hist = root_out.expect("root run");
+    assert_identical(&in_process, &hist);
+    assert!(hist.ledger.total_shard_uplink_wire_bytes() > 0);
+    fleet_a.expect("fleet a");
+    fleet_b.expect("fleet b");
+}
+
+/// `chunk_bounds` is the contract both sides of the tree share: the
+/// serving side claims it, `fleet --via-shards` dials by it. Pin the
+/// partition law the docs promise (disjoint, covering, ±1 balanced).
+#[test]
+fn shard_ranges_partition_the_population() {
+    for (m, shards) in [(10usize, 3usize), (8, 2), (100_000, 4), (7, 7)] {
+        let mut next = 0;
+        for i in 0..shards {
+            let (lo, hi) = chunk_bounds(m, shards, i);
+            assert_eq!(lo, next, "m={m} shards={shards} i={i}");
+            assert!(hi > lo, "empty shard range m={m} shards={shards} i={i}");
+            next = hi;
+        }
+        assert_eq!(next, m, "m={m} shards={shards} must cover the population");
+    }
+}
