@@ -46,7 +46,9 @@ fn main() {
         Some("fig2") => cmd_fig(&args, false),
         Some("theory") => cmd_theory(&args),
         Some("serve") => cmd_serve(&args),
+        Some("shard") => cmd_shard(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("soak") => cmd_soak(&args),
         Some("benchdiff") => cmd_benchdiff(&args),
         Some("artifacts") => cmd_artifacts(),
         Some(other) => {
@@ -76,12 +78,24 @@ fn usage() {
          \x20 serve      run the federation coordinator on a TCP/UDS endpoint\n\
          \x20            (--shards N adds in-process aggregator shards, endpoint\n\
          \x20            file gains one shard line each; --snapshot/--resume/\n\
-         \x20            --drain-after for elastic runs; exit 3 = drained)\n\
+         \x20            --drain-after for elastic runs; exit 3 = drained;\n\
+         \x20            --event-log F appends structured JSONL, --heal-attempts K\n\
+         \x20            re-opens any round that closes below full coverage)\n\
+         \x20 shard      run one aggregator shard as its own process:\n\
+         \x20            --index I --shard-count K --listen EP, upstream from\n\
+         \x20            --connect EP or --connect-file F (line 0, re-read with\n\
+         \x20            --reconnect-secs backoff on every upstream loss);\n\
+         \x20            --publish-file F writes the resolved listen endpoint\n\
          \x20 fleet      drive a client fleet; default: loopback run diffed\n\
          \x20            against the in-process engine (exit 1 on mismatch;\n\
          \x20            --shards N routes it through an aggregation tree);\n\
          \x20            --connect/--connect-file agents reconnect with backoff,\n\
-         \x20            --via-shards splits sub-fleets over the shard lines\n\
+         \x20            --via-shards splits sub-fleets over the shard lines,\n\
+         \x20            --shard-line I serves slice I of --shard-count K\n\
+         \x20 soak       churn soak: fork a serve/shard/fleet process tree,\n\
+         \x20            kill+respawn children on a seeded --faults schedule,\n\
+         \x20            exit 1 unless the history is bit-identical to an\n\
+         \x20            uninterrupted reference run of the same flags\n\
          \x20 benchdiff  diff a fresh BENCH_*.json against the committed\n\
          \x20            baseline; exit 1 on >tolerance throughput regression\n\
          \x20 artifacts  list AOT artifacts + staleness"
@@ -420,6 +434,44 @@ fn cmd_serve(args: &ArgMap) -> i32 {
         }
         opts.snapshot = Some(SnapshotPolicy::every(path, every));
     }
+    // Structured JSONL event log. A resumed coordinator appends (the
+    // soak supervisor reads one continuous log across restarts); a
+    // fresh one truncates.
+    if let Some(path) = args.get_str("event-log") {
+        let p = std::path::Path::new(path);
+        let log = if args.get_str("resume").is_some() {
+            net::EventLog::append(p)
+        } else {
+            net::EventLog::create(p)
+        };
+        match log {
+            Ok(l) => opts.event_log = Some(std::sync::Arc::new(l)),
+            Err(e) => {
+                eprintln!("event-log {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    // Strict self-healing: re-open any round that closes below full
+    // coverage, up to K attempts per round. 0 (default) keeps the
+    // legacy policy (re-open only fully-empty rounds).
+    let heal = args.get::<usize>("heal-attempts", 0);
+    if heal > 0 {
+        opts.heal_attempts = Some(heal);
+    }
+    let fault_plan = match parse_fault_plan(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if let Some(plan) = &fault_plan {
+        let inj = plan.injector(net::FaultRole::Root);
+        if !inj.is_empty() {
+            opts.faults = Some(inj);
+        }
+    }
     // Mix the constructed environment's structural hash into snapshot
     // fingerprints so a resume refuses a dataset rebuilt with different
     // --alpha/--batch/--dim flags (same d/M, different data).
@@ -468,6 +520,10 @@ fn cmd_serve(args: &ArgMap) -> i32 {
         sopts.rendezvous_timeout = rendezvous;
         sopts.max_payload = max_payload;
         sopts.env_fingerprint = env_fp;
+        sopts.faults = fault_plan
+            .as_ref()
+            .map(|p| p.injector(net::FaultRole::Shard))
+            .filter(|inj| !inj.is_empty());
         match net::ShardCoordinator::bind(sopts) {
             Ok(sc) => shard_coords.push(sc),
             Err(e) => {
@@ -558,6 +614,52 @@ fn cmd_fleet(args: &ArgMap) -> i32 {
     let mut fleet_opts = net::FleetOptions::default();
     if args.has("agents") {
         fleet_opts.agents = args.get::<usize>("agents", fleet_opts.agents).max(1);
+    }
+    match parse_fault_plan(args) {
+        Ok(plan) => {
+            fleet_opts.faults = plan
+                .as_ref()
+                .map(|p| p.injector(net::FaultRole::Client))
+                .filter(|inj| !inj.is_empty());
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+
+    // `--shard-line I` serves worker slice `chunk_bounds(m, K, I)` of a
+    // K-shard tree as a standalone process, dialing line `1 + I` of the
+    // endpoint file on every (re)connect — the soak supervisor's fleet
+    // unit, where each sub-fleet must be separately killable.
+    if args.has("shard-line") {
+        let Some(path) = args.get_str("connect-file") else {
+            eprintln!("--shard-line needs --connect-file (line 0 root, line 1 + i shard i)");
+            return 2;
+        };
+        let i = args.get::<usize>("shard-line", 0);
+        let k = args.get::<usize>("shard-count", 0);
+        if k == 0 || i >= k {
+            eprintln!("--shard-line {i} needs --shard-count K with I < K");
+            return 2;
+        }
+        let secs = args.get::<u64>("reconnect-secs", 60);
+        if secs > 0 {
+            fleet_opts.reconnect = Some(std::time::Duration::from_secs(secs));
+        }
+        let m = env.fed.workers();
+        let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, k, i);
+        let src = net::EndpointFileLine(path.into(), 1 + i);
+        return match net::run_fleet_range(&src, &run, &env, lo, hi, &fleet_opts) {
+            Ok(stats) => {
+                print_fleet_stats_tag(&format!("fleet shard {i}"), &stats);
+                0
+            }
+            Err(e) => {
+                eprintln!("fleet shard {i}: {e}");
+                1
+            }
+        };
     }
 
     // `--via-shards` splits the fleet over the shard lines of an
@@ -732,6 +834,192 @@ fn cmd_fleet(args: &ArgMap) -> i32 {
     }
 }
 
+/// Parse `--faults SPEC` (with `--fault-seed S`, default 7) into a
+/// [`net::FaultPlan`]; `Ok(None)` when the flag is absent.
+fn parse_fault_plan(args: &ArgMap) -> Result<Option<net::FaultPlan>, String> {
+    let Some(spec) = args.get_str("faults") else {
+        return Ok(None);
+    };
+    let seed = args.get::<u64>("fault-seed", 7);
+    net::FaultPlan::parse(spec, seed).map(Some).map_err(|e| format!("--faults: {e}"))
+}
+
+/// One aggregator shard as its own OS process: bind `--listen`, publish
+/// the resolved endpoint, rendezvous upstream (retrying inside the
+/// `--reconnect-secs` window — the root may not be up yet), relay
+/// rounds until `Fin`. The soak supervisor forks one of these per
+/// shard so each is separately killable.
+fn cmd_shard(args: &ArgMap) -> i32 {
+    let setup = match net_setup(args) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let NetSetup { env, run, init } = setup;
+    let m = env.fed.workers();
+    let d = init.len();
+    let i = args.get::<usize>("index", 0);
+    let k = args.get::<usize>("shard-count", 0);
+    if k == 0 || i >= k {
+        eprintln!("shard needs --index I --shard-count K with I < K");
+        return 2;
+    }
+    let listen = match net::Endpoint::parse(args.str_or("listen", "tcp://127.0.0.1:0")) {
+        Ok(ep) => ep,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // Upstream: a fixed address, or line 0 of an endpoint file re-read
+    // on every (re)connect so a respawned root's fresh address is
+    // picked up. With a file the fixed endpoint is never dialed; any
+    // parseable placeholder satisfies the options struct.
+    let upstream_file = args
+        .get_str("connect-file")
+        .map(|p| (std::path::PathBuf::from(p), 0usize));
+    let upstream = if upstream_file.is_some() {
+        net::Endpoint::Tcp("127.0.0.1:0".into())
+    } else if let Some(addr) = args.get_str("connect") {
+        match net::Endpoint::parse(addr) {
+            Ok(ep) => ep,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        eprintln!("shard needs --connect EP or --connect-file F");
+        return 2;
+    };
+    let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, k, i);
+    let mut sopts = net::ShardOptions::new(upstream, listen, lo, hi);
+    sopts.upstream_file = upstream_file;
+    let secs = args.get::<u64>("reconnect-secs", 60);
+    if secs > 0 {
+        sopts.reconnect = Some(std::time::Duration::from_secs(secs));
+    }
+    sopts.rendezvous_timeout =
+        std::time::Duration::from_secs(args.get::<u64>("rendezvous-secs", 120));
+    let deadline_ms = args.get::<u64>("deadline-ms", 0);
+    if deadline_ms > 0 {
+        sopts.round_deadline = Some(std::time::Duration::from_millis(deadline_ms));
+    }
+    sopts.env_fingerprint = env.env_fingerprint();
+    match parse_fault_plan(args) {
+        Ok(plan) => {
+            sopts.faults = plan
+                .as_ref()
+                .map(|p| p.injector(net::FaultRole::Shard))
+                .filter(|inj| !inj.is_empty());
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    let sc = match net::ShardCoordinator::bind(sopts) {
+        Ok(sc) => sc,
+        Err(e) => {
+            eprintln!("shard {i} bind: {e}");
+            return 1;
+        }
+    };
+    println!("shard {i} listening on {}", sc.local_endpoint());
+    if let Some(path) = args.get_str("publish-file") {
+        if let Err(e) = write_endpoint_file(path, &[sc.local_endpoint().clone()]) {
+            eprintln!("publish-file {path}: {e}");
+            return 1;
+        }
+    }
+    match sc.run(&run, m, d) {
+        Ok(st) => {
+            print_shard_stats(i, &st);
+            0
+        }
+        Err(e) => {
+            eprintln!("[shard {i}] {e}");
+            1
+        }
+    }
+}
+
+/// Churn soak: run the reference and faulted pipelines via
+/// [`net::run_soak`] and gate on bit-identical history JSON.
+fn cmd_soak(args: &ArgMap) -> i32 {
+    let dir = std::path::PathBuf::from(args.str_or("dir", "target/soak"));
+    let binary = match std::env::current_exe() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("soak: current_exe: {e}");
+            return 1;
+        }
+    };
+    let mut opts = net::SoakOptions::new(dir, binary);
+    opts.rounds = args.get::<usize>("rounds", opts.rounds);
+    opts.clients = args.get::<usize>("clients", opts.clients);
+    opts.shards = args.get::<usize>("shards", opts.shards).max(1);
+    if let Some(spec) = args.get_str("faults") {
+        opts.faults = spec.to_string();
+    }
+    opts.fault_seed = args.get::<u64>("fault-seed", opts.fault_seed);
+    opts.uds = args.str_or("transport", "tcp") == "uds";
+    opts.heal_attempts = args.get::<usize>("heal-attempts", opts.heal_attempts);
+    opts.reconnect_secs = args.get::<u64>("reconnect-secs", opts.reconnect_secs);
+    opts.timeout = std::time::Duration::from_secs(args.get::<u64>("timeout-secs", 600));
+    // Forward the training flags every child must agree on (the soak
+    // children each rebuild the same environment from the same flags,
+    // exactly as a distributed serve/fleet pair does).
+    for key in [
+        "dim",
+        "classes",
+        "batch",
+        "alpha",
+        "seed",
+        "lr",
+        "participation",
+        "eval-every",
+        "selection",
+        "compressor",
+        "aggregation",
+    ] {
+        if let Some(v) = args.get_str(key) {
+            opts.pass.push((key.to_string(), v.to_string()));
+        }
+    }
+    match net::run_soak(&opts) {
+        Ok(report) => {
+            println!(
+                "[soak] rounds_closed {} | recoverages {} | restarts: coordinator {} \
+                 shard {} agent {}",
+                report.rounds_closed,
+                report.recoverages,
+                report.coordinator_restarts,
+                report.shard_restarts,
+                report.agent_restarts
+            );
+            println!("[soak] event log: {}", report.event_log.display());
+            if report.identical {
+                println!("[soak] history bit-identical under churn: PASS");
+                0
+            } else {
+                eprintln!(
+                    "[soak] history DIVERGED under churn: cmp {} {}",
+                    report.reference_json.display(),
+                    report.faulted_json.display()
+                );
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("soak: {e}");
+            1
+        }
+    }
+}
+
 fn print_net_history(tag: &str, hist: &RunHistory) {
     let eval = hist.final_eval().map(|(l, a)| format!("loss {l:.4}, acc {a:.3}"));
     println!(
@@ -793,6 +1081,9 @@ fn print_shard_stats(i: usize, st: &net::ShardStats) {
         st.root_up_bytes as f64 / 1024.0,
         st.root_down_bytes as f64 / 1024.0
     );
+    if st.upstream_reconnects > 0 {
+        println!("[shard {i}] upstream reconnects {}", st.upstream_reconnects);
+    }
 }
 
 /// Throughput keys gated by the CI bench-trajectory check (bigger is

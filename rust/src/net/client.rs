@@ -48,6 +48,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{pool, Attack, GradientSource, RunHistory, TrainingRun, WorkerScratch};
 
+use super::faults::FaultInjector;
 use super::server::{NetCoordinator, ServeOptions};
 use super::shard::{ShardCoordinator, ShardOptions, ShardStats};
 use super::wire::{self, Msg, WireBuf};
@@ -84,21 +85,26 @@ impl EndpointSource for EndpointFile {
 /// One line of a multi-line endpoint file — `serve --shards N` writes
 /// the root endpoint on line 0 and one shard endpoint per following
 /// line, so `fleet --via-shards` points each sub-fleet at its shard.
-/// Re-read on every dial, like [`EndpointFile`].
+/// Re-read on every dial, like [`EndpointFile`]. A missing or blank
+/// line is a *retriable* `Io` error, not a config error: a respawned
+/// shard publishes its fresh port by rewriting its line, and during
+/// that window the line is legitimately absent — a reconnecting
+/// sub-fleet must keep backing off until it reappears, exactly as it
+/// does while the whole file has not been written yet.
 #[derive(Clone, Debug)]
 pub struct EndpointFileLine(pub PathBuf, pub usize);
 
 impl EndpointSource for EndpointFileLine {
     fn endpoint(&self) -> Result<Endpoint, NetError> {
         let body = std::fs::read_to_string(&self.0)?;
-        let line = body.lines().nth(self.1).ok_or_else(|| {
-            NetError::Config(format!(
-                "endpoint file {} has no line {}",
-                self.0.display(),
-                self.1
-            ))
-        })?;
-        Endpoint::parse(line.trim())
+        let line = body.lines().nth(self.1).map(str::trim).unwrap_or("");
+        if line.is_empty() {
+            return Err(NetError::Io(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("endpoint file {} has no line {} yet", self.0.display(), self.1),
+            )));
+        }
+        Endpoint::parse(line)
     }
 }
 
@@ -124,6 +130,14 @@ pub struct FleetOptions {
     /// fails fast on the first connection loss (the loopback-harness
     /// configuration).
     pub reconnect: Option<Duration>,
+    /// Deterministic fault injection for soak runs (`None` in
+    /// production): per-update send delay plus scheduled partitions
+    /// (an agent drops its session at the scheduled round boundary and
+    /// recovers through the ordinary reconnect path), scoped to the
+    /// client role by [`FaultPlan::injector`].
+    ///
+    /// [`FaultPlan::injector`]: super::faults::FaultPlan::injector
+    pub faults: Option<FaultInjector>,
 }
 
 impl Default for FleetOptions {
@@ -134,6 +148,7 @@ impl Default for FleetOptions {
             max_payload: wire::MAX_PAYLOAD,
             read_timeout: Duration::from_secs(60),
             reconnect: None,
+            faults: None,
         }
     }
 }
@@ -256,7 +271,7 @@ pub fn run_fleet_range(
 /// be silently converted into partial participation by a mid-round
 /// reconnect (which would break the bit-identity contract). Protocol,
 /// wire and config errors mean a bug or a hostile peer and always fail.
-fn retriable(e: &NetError) -> bool {
+pub(crate) fn retriable(e: &NetError) -> bool {
     match e {
         NetError::Disconnected => true,
         NetError::Io(err) => !matches!(
@@ -291,6 +306,10 @@ fn agent_loop(
     let mut out = Vec::new();
     let mut buf = Vec::new();
     let mut first_session = true;
+    // Per-agent injector clone: `partition_now` keeps fired-round state,
+    // which must survive reconnects (a recovered agent does not re-drop
+    // the same round).
+    let mut faults = opts.faults.clone();
 
     loop {
         let mut conn = connect_session(src, run, env, lo, hi, opts, &mut stats)?;
@@ -305,6 +324,7 @@ fn agent_loop(
             lo,
             hi,
             opts,
+            &mut faults,
             &comps,
             &mut scratch,
             &root,
@@ -419,6 +439,7 @@ fn serve_session(
     lo: usize,
     hi: usize,
     opts: &FleetOptions,
+    faults: &mut Option<FaultInjector>,
     comps: &crate::coordinator::WorkerComps,
     scratch: &mut WorkerScratch,
     root: &crate::util::rng::Pcg64,
@@ -429,6 +450,7 @@ fn serve_session(
     stats: &mut FleetStats,
 ) -> Result<(), NetError> {
     let d = env.dim();
+    let send_delay = faults.as_ref().and_then(FaultInjector::send_delay);
     loop {
         let msg = read_msg(conn, opts.max_payload, buf, stats)?;
         match msg {
@@ -440,6 +462,15 @@ fn serve_session(
                 params.copy_from_slice(&bcast);
                 let t_us = usize::try_from(t)
                     .map_err(|_| NetError::Protocol("round index overflow".into()))?;
+                // Scheduled partition: drop the session at this round
+                // boundary and recover through the reconnect path. The
+                // skipped cohort is recomputed from the re-broadcast, so
+                // the healed run stays bit-identical.
+                if let Some(fi) = faults.as_mut() {
+                    if fi.partition_now(t_us) {
+                        return Err(NetError::Disconnected);
+                    }
+                }
                 // Protocol-level attackers are deferred until every honest
                 // hosted worker has submitted: a misbehaving co-tenant must
                 // not eat its neighbours' round window.
@@ -473,6 +504,9 @@ fn serve_session(
                     );
                     out.clear();
                     stats.bytes_up += wbuf.encode_update(t, w64, loss, &grad, out) as u64;
+                    if let Some(d) = send_delay {
+                        std::thread::sleep(d);
+                    }
                     conn.write_all(out)?;
                     stats.updates_sent += 1;
                 }

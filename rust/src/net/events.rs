@@ -1,0 +1,164 @@
+//! Structured per-round event log (DESIGN.md §15): one flat JSON object
+//! per line, flushed per event, written by the coordinator as protocol
+//! events happen. The `soak` supervisor tails it to key process kills
+//! to *round boundaries* (never wall-clock offsets), and operators get
+//! the same observable record a harness does.
+//!
+//! The vocabulary is the flat `{"key": number-or-string}` JSON that
+//! [`crate::metrics::parse_flat_json`] already reads — every line
+//! carries `"event"` plus numeric fields. Events:
+//!
+//! ```text
+//! serve_start  resumed, round            coordinator up (resumed=1 after --resume)
+//! round_open   t, attempt                cohort broadcast (attempt>0 = re-broadcast)
+//! round_close  t, senders, stragglers,   round finished and applied
+//!              up_bytes, down_bytes,
+//!              shard_up, shard_down,
+//!              rejects, snap_age
+//! recoverage   t, attempt                waiting for the fleet to re-cover the population
+//! conn_dead    conn, shard, lo, hi       a connection died (lo/hi if it held a claim)
+//! reclaim      conn, shard, lo, hi       a claim was accepted (rendezvous or respawn)
+//! snapshot     t                         snapshot written after round t closed
+//! drain        rounds                    graceful drain exit (no Fin)
+//! fin          rounds                    run complete, Fin broadcast
+//! ```
+//!
+//! A SIGKILL can tear the final line; [`EventLog::append`] therefore
+//! starts with a newline so the successor's first event never fuses
+//! with a torn tail, and readers skip lines that fail to parse.
+
+use std::fmt;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Append-only JSONL event sink; cheap no-op when disabled (`None` in
+/// the options structs). Interior mutability so the single-threaded
+/// drivers can emit from `&self` contexts.
+pub struct EventLog {
+    inner: Mutex<BufWriter<File>>,
+}
+
+impl fmt::Debug for EventLog {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("EventLog").finish_non_exhaustive()
+    }
+}
+
+impl EventLog {
+    /// Create/truncate the log at `path` (a fresh run).
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        let f = File::create(path)?;
+        Ok(Self { inner: Mutex::new(BufWriter::new(f)) })
+    }
+
+    /// Open `path` for append (a resumed coordinator keeps the
+    /// predecessor's record). Leads with a newline to neutralize a torn
+    /// final line from a SIGKILLed predecessor.
+    pub fn append(path: &Path) -> std::io::Result<Self> {
+        let f = OpenOptions::new().create(true).append(true).open(path)?;
+        let log = Self { inner: Mutex::new(BufWriter::new(f)) };
+        {
+            let mut w = log.inner.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = w.write_all(b"\n");
+            let _ = w.flush();
+        }
+        Ok(log)
+    }
+
+    /// Emit one event line and flush it (a supervisor keyed to the log
+    /// must see events as they happen, and a kill must lose at most the
+    /// line being written). I/O errors are swallowed: observability
+    /// must never fail the run it observes.
+    pub fn emit(&self, event: &str, fields: &[(&str, u64)]) {
+        let mut line = String::with_capacity(64);
+        line.push_str("{\"event\": \"");
+        line.push_str(event);
+        line.push('"');
+        for (k, v) in fields {
+            line.push_str(", \"");
+            line.push_str(k);
+            line.push_str("\": ");
+            line.push_str(&v.to_string());
+        }
+        line.push_str("}\n");
+        let mut w = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = w.write_all(line.as_bytes());
+        let _ = w.flush();
+    }
+}
+
+/// Parse an event-log body into `(event, fields)` records, skipping
+/// blank and torn lines — the reader half of the contract, shared by
+/// the soak supervisor and the tests.
+pub fn parse_events(body: &str) -> Vec<(String, Vec<(String, f64)>)> {
+    let mut out = Vec::new();
+    for line in body.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(kvs) = crate::metrics::parse_flat_json(line) else { continue };
+        let mut event = String::new();
+        let mut fields = Vec::new();
+        for (k, v) in kvs {
+            match v {
+                crate::metrics::FlatVal::Str(s) if k == "event" => event = s,
+                crate::metrics::FlatVal::Num(n) => fields.push((k, n)),
+                crate::metrics::FlatVal::Str(_) => {}
+            }
+        }
+        if !event.is_empty() {
+            out.push((event, fields));
+        }
+    }
+    out
+}
+
+/// Convenience: the value of `field` in an `(event, fields)` record.
+pub fn event_field(fields: &[(String, f64)], name: &str) -> Option<f64> {
+    fields.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_parseable_flat_json_lines() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("sparsignd-ev-{}.jsonl", std::process::id()));
+        let log = EventLog::create(&path).unwrap();
+        log.emit("serve_start", &[("resumed", 0), ("round", 0)]);
+        log.emit("round_close", &[("t", 3), ("senders", 9), ("stragglers", 1)]);
+        drop(log);
+        let body = std::fs::read_to_string(&path).unwrap();
+        let evs = parse_events(&body);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].0, "serve_start");
+        assert_eq!(event_field(&evs[0].1, "resumed"), Some(0.0));
+        assert_eq!(evs[1].0, "round_close");
+        assert_eq!(event_field(&evs[1].1, "senders"), Some(9.0));
+        assert_eq!(event_field(&evs[1].1, "missing"), None);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn append_survives_a_torn_tail() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("sparsignd-ev-torn-{}.jsonl", std::process::id()));
+        // A predecessor died mid-write: the file ends in half a line.
+        std::fs::write(&path, "{\"event\": \"round_close\", \"t\": 0}\n{\"event\": \"rou").unwrap();
+        let log = EventLog::append(&path).unwrap();
+        log.emit("serve_start", &[("resumed", 1), ("round", 1)]);
+        drop(log);
+        let body = std::fs::read_to_string(&path).unwrap();
+        let evs = parse_events(&body);
+        assert_eq!(evs.len(), 2, "torn line skipped, successor line intact");
+        assert_eq!(evs[0].0, "round_close");
+        assert_eq!(evs[1].0, "serve_start");
+        assert_eq!(event_field(&evs[1].1, "resumed"), Some(1.0));
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,450 @@
+//! Deterministic fault injection (DESIGN.md §15): the `FaultPlan`
+//! grammar, its supervisor-side kill schedule, and the in-process
+//! `FaultInjector` the transport tiers consult at named protocol
+//! phases.
+//!
+//! The plan mirrors the [`AttackPlan`] grammar — comma-separated
+//! `kind[:operand[:operand]]` cohorts — but where an attack plan
+//! assigns *worker behaviours*, a fault plan schedules *infrastructure
+//! abuse*: process kills, link delays, and partitions. Every fault is
+//! seeded and lands at a named protocol event (a round boundary read
+//! from the event log, a round-open broadcast, a frame flush) — never
+//! at a wall-clock offset — so a soak run under a plan is exactly
+//! repeatable and `sleep`-flakiness cannot creep into the harness.
+//!
+//! Process-level kinds (`kill-shard`, `kill-coordinator`,
+//! `agent-churn`) are consumed by the `soak` supervisor through
+//! [`FaultSchedule`]; in-process kinds (`delay`, `partition`) ride into
+//! the serve/shard/fleet options as a [`FaultInjector`] and are applied
+//! by the tier itself: a delay slows every outbound frame flush of the
+//! named role (the reactor's send path), a partition makes the named
+//! role sever its *own* upstream connection at the open of the
+//! scheduled round — exercising exactly the reconnect-with-backoff
+//! machinery a real network fault would.
+//!
+//! [`AttackPlan`]: crate::coordinator::AttackPlan
+
+use std::time::Duration;
+
+use crate::util::rng::Pcg64;
+
+/// Which tier an in-process fault names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultRole {
+    /// The root coordinator.
+    Root,
+    /// An aggregator shard (`range` in the grammar is an alias — the
+    /// ranged tier).
+    Shard,
+    /// A fleet agent.
+    Client,
+}
+
+/// When a scheduled fault fires, in completed-round counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultWhen {
+    /// Exactly once, at the boundary after round `t` closes.
+    Round(usize),
+    /// At every boundary where `done % k == 0` (and `done > 0`).
+    Every(usize),
+}
+
+impl FaultWhen {
+    /// Does the schedule fire at the boundary after `done` completed
+    /// rounds?
+    pub fn fires_at(&self, done: usize) -> bool {
+        match *self {
+            FaultWhen::Round(r) => done == r,
+            FaultWhen::Every(k) => done > 0 && done % k == 0,
+        }
+    }
+}
+
+/// One parsed fault cohort.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// SIGKILL one shard process per firing (the supervisor rotates
+    /// which, deterministically) and respawn it.
+    KillShard(FaultWhen),
+    /// SIGKILL the root coordinator per firing; the supervisor respawns
+    /// it with `--resume` from its latest snapshot.
+    KillCoordinator(FaultWhen),
+    /// Per-round-boundary seeded chance (percent) of killing one fleet
+    /// agent process, which is then respawned.
+    AgentChurn(f64),
+    /// Delay every outbound frame flush of the named role.
+    Delay(FaultRole, Duration),
+    /// The named role severs its own upstream connection at the open of
+    /// each scheduled round (roots have no upstream, so `Root` is
+    /// rejected at parse time).
+    Partition(FaultRole, FaultWhen),
+}
+
+/// A parsed, seeded fault plan. The seed pins every randomized decision
+/// (churn victims, shard rotation origin) so two soak runs under the
+/// same plan inject byte-identical abuse.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    seed: u64,
+}
+
+fn parse_when(s: &str, part: &str) -> Result<FaultWhen, String> {
+    if let Some(r) = s.strip_prefix("round=") {
+        let t: usize = r.parse().map_err(|_| format!("bad round '{s}' in fault '{part}'"))?;
+        return Ok(FaultWhen::Round(t));
+    }
+    if let Some(k) = s.strip_prefix("every=") {
+        let k: usize = k.parse().map_err(|_| format!("bad period '{s}' in fault '{part}'"))?;
+        if k == 0 {
+            return Err(format!("period must be >= 1 in fault '{part}'"));
+        }
+        return Ok(FaultWhen::Every(k));
+    }
+    Err(format!("fault '{part}' needs round=T or every=K, got '{s}'"))
+}
+
+fn parse_role(s: &str, part: &str) -> Result<FaultRole, String> {
+    match s {
+        "root" | "coordinator" => Ok(FaultRole::Root),
+        "shard" | "range" => Ok(FaultRole::Shard),
+        "client" | "agent" | "fleet" => Ok(FaultRole::Client),
+        _ => Err(format!("unknown role '{s}' in fault '{part}' (root|shard|client)")),
+    }
+}
+
+impl FaultPlan {
+    /// Parse the comma-separated fault grammar:
+    ///
+    /// ```text
+    /// kill-shard:round=7 | kill-shard:every=29
+    /// kill-coordinator:round=50 | kill-coordinator:every=50
+    /// agent-churn:10%
+    /// delay:shard:200ms | delay:root:5ms | delay:client:1ms
+    /// partition:shard:round=3 | partition:range | partition:client:every=10
+    /// ```
+    ///
+    /// `partition` defaults to `round=1` when no schedule is given (the
+    /// `partition:range` shorthand). An empty spec is an empty plan.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self, String> {
+        let mut faults = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                if spec.trim().is_empty() {
+                    continue;
+                }
+                return Err(format!("empty fault in spec '{spec}'"));
+            }
+            let mut f = part.split(':');
+            let kind = f.next().unwrap_or("");
+            let op1 = f.next();
+            let op2 = f.next();
+            if f.next().is_some() {
+                return Err(format!("too many ':' fields in fault '{part}'"));
+            }
+            let fault = match kind {
+                "kill-shard" | "kill-coordinator" => {
+                    let when_s =
+                        op1.ok_or_else(|| format!("fault '{part}' needs round=T or every=K"))?;
+                    if op2.is_some() {
+                        return Err(format!("fault '{part}' takes one operand"));
+                    }
+                    let when = parse_when(when_s, part)?;
+                    if kind == "kill-shard" {
+                        Fault::KillShard(when)
+                    } else {
+                        Fault::KillCoordinator(when)
+                    }
+                }
+                "agent-churn" => {
+                    let pct_s = op1
+                        .and_then(|s| s.strip_suffix('%'))
+                        .ok_or_else(|| format!("fault '{part}' needs a percentage, e.g. 10%"))?;
+                    if op2.is_some() {
+                        return Err(format!("fault '{part}' takes one operand"));
+                    }
+                    let p: f64 = pct_s
+                        .parse()
+                        .map_err(|_| format!("bad percentage in fault '{part}'"))?;
+                    if !(0.0..=100.0).contains(&p) {
+                        return Err(format!("percentage out of 0..=100 in fault '{part}'"));
+                    }
+                    Fault::AgentChurn(p)
+                }
+                "delay" => {
+                    let role = parse_role(
+                        op1.ok_or_else(|| format!("fault '{part}' needs a role"))?,
+                        part,
+                    )?;
+                    let ms_s = op2
+                        .and_then(|s| s.strip_suffix("ms"))
+                        .ok_or_else(|| format!("fault '{part}' needs a duration, e.g. 200ms"))?;
+                    let ms: u64 =
+                        ms_s.parse().map_err(|_| format!("bad duration in fault '{part}'"))?;
+                    Fault::Delay(role, Duration::from_millis(ms))
+                }
+                "partition" => {
+                    let role = parse_role(
+                        op1.ok_or_else(|| format!("fault '{part}' needs a role"))?,
+                        part,
+                    )?;
+                    if role == FaultRole::Root {
+                        return Err(format!(
+                            "fault '{part}': the root has no upstream to partition from \
+                             (use kill-coordinator)"
+                        ));
+                    }
+                    let when = match op2 {
+                        Some(s) => parse_when(s, part)?,
+                        None => FaultWhen::Round(1),
+                    };
+                    Fault::Partition(role, when)
+                }
+                _ => return Err(format!("unknown fault kind '{kind}' in '{part}'")),
+            };
+            faults.push(fault);
+        }
+        Ok(Self { faults, seed })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// The in-process injector for one process of the topology —
+    /// `delay` and `partition` faults addressed to `role` (process
+    /// kills are the supervisor's job and never appear here).
+    pub fn injector(&self, role: FaultRole) -> FaultInjector {
+        let mut send_delay = None;
+        let mut partitions = Vec::new();
+        for f in &self.faults {
+            match *f {
+                Fault::Delay(r, d) if r == role => {
+                    send_delay = Some(send_delay.map_or(d, |p: Duration| p.max(d)));
+                }
+                Fault::Partition(r, when) if r == role => partitions.push(when),
+                _ => {}
+            }
+        }
+        FaultInjector { send_delay, partitions, fired: Vec::new() }
+    }
+
+    /// The supervisor-side kill schedule over a concrete topology.
+    pub fn schedule(&self, shards: usize, agents: usize) -> FaultSchedule {
+        FaultSchedule {
+            faults: self.faults.clone(),
+            shards,
+            agents,
+            rng: Pcg64::new(self.seed ^ 0xfa17_1e55, 0x50a6),
+            next_shard: 0,
+            next_agent: 0,
+        }
+    }
+}
+
+/// One process kill the supervisor must carry out at a round boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// SIGKILL + respawn shard `i`.
+    KillShard(usize),
+    /// SIGKILL + respawn (with `--resume`) the root coordinator.
+    KillCoordinator,
+    /// SIGKILL + respawn fleet agent process `i`.
+    KillAgent(usize),
+}
+
+/// The process-kill schedule over a concrete topology: feed it each
+/// round boundary in order and it answers which processes die there.
+/// Fully determined by `(plan seed, topology, boundary order)` — the
+/// supervisor drives it from event-log round closes, so the same plan
+/// over the same run kills the same processes at the same rounds every
+/// time.
+#[derive(Clone, Debug)]
+pub struct FaultSchedule {
+    faults: Vec<Fault>,
+    shards: usize,
+    agents: usize,
+    rng: Pcg64,
+    next_shard: usize,
+    next_agent: usize,
+}
+
+impl FaultSchedule {
+    /// Kills to carry out at the boundary after `done` rounds have
+    /// completed. Must be called for every boundary in ascending order
+    /// (the rotation and churn draws advance per call).
+    pub fn actions_after(&mut self, done: usize) -> Vec<FaultAction> {
+        let mut out = Vec::new();
+        for f in &self.faults {
+            match *f {
+                Fault::KillShard(when) if when.fires_at(done) && self.shards > 0 => {
+                    out.push(FaultAction::KillShard(self.next_shard % self.shards));
+                    self.next_shard += 1;
+                }
+                Fault::KillCoordinator(when) if when.fires_at(done) => {
+                    out.push(FaultAction::KillCoordinator);
+                }
+                Fault::AgentChurn(pct) if self.agents > 0 && done > 0 => {
+                    // Seeded Bernoulli draw per boundary; victims rotate
+                    // so churn spreads across the fleet.
+                    let draw = self.rng.next_u64() as f64 / u64::MAX as f64 * 100.0;
+                    if draw < pct {
+                        out.push(FaultAction::KillAgent(self.next_agent % self.agents));
+                        self.next_agent += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+}
+
+/// In-process fault state for one transport process: consulted at the
+/// named phases where its faults land.
+#[derive(Clone, Debug, Default)]
+pub struct FaultInjector {
+    send_delay: Option<Duration>,
+    partitions: Vec<FaultWhen>,
+    /// Rounds where a partition already fired (each scheduled round
+    /// severs once, however many times the round re-opens).
+    fired: Vec<usize>,
+}
+
+impl FaultInjector {
+    /// Delay to apply before every outbound frame flush (the reactor's
+    /// send path), if a `delay` fault names this role.
+    pub fn send_delay(&self) -> Option<Duration> {
+        self.send_delay
+    }
+
+    /// True exactly once per scheduled round: the role must sever its
+    /// upstream connection *now* (at the open of round `t`) and take
+    /// its normal reconnect path.
+    pub fn partition_now(&mut self, t: usize) -> bool {
+        if self.fired.contains(&t) {
+            return false;
+        }
+        if self.partitions.iter().any(|w| w.fires_at(t)) {
+            self.fired.push(t);
+            return true;
+        }
+        false
+    }
+
+    /// Anything to do at all? (Lets callers skip per-frame checks.)
+    pub fn is_empty(&self) -> bool {
+        self.send_delay.is_none() && self.partitions.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_grammar() {
+        let p = FaultPlan::parse(
+            "kill-shard:every=29,kill-coordinator:round=50,agent-churn:10%",
+            7,
+        )
+        .unwrap();
+        assert_eq!(
+            p.faults(),
+            &[
+                Fault::KillShard(FaultWhen::Every(29)),
+                Fault::KillCoordinator(FaultWhen::Round(50)),
+                Fault::AgentChurn(10.0),
+            ]
+        );
+        let p = FaultPlan::parse("delay:shard:200ms,partition:range", 7).unwrap();
+        assert_eq!(
+            p.faults(),
+            &[
+                Fault::Delay(FaultRole::Shard, Duration::from_millis(200)),
+                Fault::Partition(FaultRole::Shard, FaultWhen::Round(1)),
+            ]
+        );
+        assert!(FaultPlan::parse("", 7).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "kill-shard",
+            "kill-shard:7",
+            "kill-shard:every=0",
+            "kill-shard:round=x",
+            "agent-churn:10",
+            "agent-churn:101%",
+            "delay:shard",
+            "delay:shard:200",
+            "delay:nowhere:200ms",
+            "partition:root",
+            "frobnicate:round=1",
+            "kill-shard:round=1:extra:extra",
+        ] {
+            assert!(FaultPlan::parse(bad, 7).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_rotates_shards() {
+        let p = FaultPlan::parse("kill-shard:every=2,kill-coordinator:round=4", 42).unwrap();
+        let drive = |mut s: FaultSchedule| -> Vec<Vec<FaultAction>> {
+            (0..=6).map(|done| s.actions_after(done)).collect()
+        };
+        let a = drive(p.schedule(2, 2));
+        let b = drive(p.schedule(2, 2));
+        assert_eq!(a, b, "same seed + topology → same kills");
+        assert_eq!(a[2], vec![FaultAction::KillShard(0)]);
+        assert_eq!(a[4], vec![FaultAction::KillShard(1), FaultAction::KillCoordinator]);
+        assert_eq!(a[6], vec![FaultAction::KillShard(0)], "rotation wraps");
+        assert!(a[1].is_empty() && a[3].is_empty() && a[5].is_empty());
+        assert!(a[0].is_empty(), "every=K never fires before a round completes");
+    }
+
+    #[test]
+    fn churn_draws_are_seeded() {
+        let p = FaultPlan::parse("agent-churn:50%", 9).unwrap();
+        let kills = |seed_plan: &FaultPlan| -> Vec<Vec<FaultAction>> {
+            let mut s = seed_plan.schedule(0, 3);
+            (0..40).map(|done| s.actions_after(done)).collect()
+        };
+        let a = kills(&p);
+        assert_eq!(a, kills(&p), "replays identically");
+        let total: usize = a.iter().map(Vec::len).sum();
+        assert!(total > 5 && total < 35, "~50% of 39 boundaries, got {total}");
+        // Victims rotate through the fleet.
+        let mut seen = std::collections::HashSet::new();
+        for acts in &a {
+            for act in acts {
+                if let FaultAction::KillAgent(i) = act {
+                    seen.insert(*i);
+                }
+            }
+        }
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn injector_scopes_faults_to_its_role_and_fires_once() {
+        let p =
+            FaultPlan::parse("delay:shard:5ms,partition:shard:round=2,delay:client:1ms", 7)
+                .unwrap();
+        let mut shard = p.injector(FaultRole::Shard);
+        assert_eq!(shard.send_delay(), Some(Duration::from_millis(5)));
+        assert!(!shard.partition_now(1));
+        assert!(shard.partition_now(2));
+        assert!(!shard.partition_now(2), "a re-opened round does not re-sever");
+        let client = p.injector(FaultRole::Client);
+        assert_eq!(client.send_delay(), Some(Duration::from_millis(1)));
+        let root = p.injector(FaultRole::Root);
+        assert!(root.is_empty());
+    }
+}

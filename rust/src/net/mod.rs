@@ -32,18 +32,24 @@
 //! streams; the wire merely moves the bytes.
 
 pub mod client;
+pub mod events;
+pub mod faults;
 pub mod protocol;
 pub(crate) mod reactor;
 pub mod server;
 pub mod shard;
+pub mod soak;
 pub mod wire;
 
 pub use client::{
     run_fleet, run_fleet_range, run_fleet_src, run_loopback, run_loopback_sharded, EndpointFile,
     EndpointFileLine, EndpointSource, FleetOptions, FleetStats,
 };
+pub use events::EventLog;
+pub use faults::{FaultInjector, FaultPlan, FaultRole, FaultSchedule};
 pub use server::{NetCoordinator, ServeOptions};
 pub use shard::{ShardCoordinator, ShardOptions, ShardStats};
+pub use soak::{run_soak, SoakOptions, SoakReport};
 pub use wire::{Msg, MsgType, RejectReason, WireError};
 
 use std::io::{Read, Write};

@@ -229,6 +229,13 @@ pub struct RoundTable {
     owners: Vec<usize>,
     /// Slot → submission landed.
     filled: Vec<bool>,
+    /// Slot → the round is still waiting on it. Set at [`Self::open`]
+    /// for live-owned slots only, cleared exactly once when the slot is
+    /// released (by [`Self::drop_conn`]/[`Self::settle_conn`]), so the
+    /// settle-then-die sequence — a shard delivers its merged frame
+    /// (settled) and is then marked dead in the same open round
+    /// (dropped) — cannot decrement `expected` twice for one slot.
+    awaited: Vec<bool>,
     received: usize,
     /// Live slots the round still waits for (dead-connection slots are
     /// excluded up front and when a connection drops mid-round).
@@ -277,11 +284,12 @@ impl RoundTable {
         self.owners.extend_from_slice(owners);
         self.filled.clear();
         self.filled.resize(selected.len(), false);
+        self.awaited.clear();
+        self.awaited.extend(
+            owners.iter().map(|&c| c != usize::MAX && alive.get(c).copied().unwrap_or(false)),
+        );
         self.received = 0;
-        self.expected = owners
-            .iter()
-            .filter(|&&c| c != usize::MAX && alive.get(c).copied().unwrap_or(false))
-            .count();
+        self.expected = self.awaited.iter().filter(|&&a| a).count();
     }
 
     /// Validate a submission for `(t, worker)` from `conn`; on success
@@ -359,12 +367,16 @@ impl RoundTable {
     }
 
     /// A connection died mid-round: stop waiting for its unfilled slots.
+    /// Idempotent, and safe after [`Self::settle_conn`] — each slot is
+    /// released at most once (see `awaited`), so a shard that dies right
+    /// after its frame settled cannot drive `expected` below zero.
     pub fn drop_conn(&mut self, conn: usize) {
         if !self.open {
             return;
         }
         for (k, &owner) in self.owners.iter().enumerate() {
-            if owner == conn && !self.filled[k] {
+            if owner == conn && self.awaited[k] && !self.filled[k] {
+                self.awaited[k] = false;
                 self.expected -= 1;
             }
         }
@@ -668,5 +680,29 @@ mod tests {
         assert!(!tb.complete());
         assert_eq!(tb.submit(1, 3, 1), Ok(2));
         assert!(tb.complete(), "slot 1 no longer awaited");
+    }
+
+    #[test]
+    fn settle_then_drop_releases_each_slot_once() {
+        // The settle-then-die sequence: shard 0's merged frame arrives
+        // without one of its workers (settled), then the shard dies in
+        // the same open round (dropped). Before the `awaited` flags this
+        // decremented `expected` twice for the unfilled slot —
+        // underflowing the counter and wedging the round.
+        let mut tb = RoundTable::new();
+        let alive = vec![true, true];
+        tb.open(0, 6, &[0, 1, 3, 4], &[0, 0, 1, 1], &alive);
+        assert_eq!(tb.submit(0, 0, 0), Ok(0));
+        tb.settle_conn(0); // frame applied; worker 1 sat out
+        tb.drop_conn(0); // the shard dies before the round closes
+        assert!(!tb.complete(), "shard 1 still owes two slots");
+        assert_eq!(tb.submit(0, 3, 1), Ok(2));
+        assert_eq!(tb.submit(0, 4, 1), Ok(3));
+        assert!(tb.complete());
+        // Repeated drops of either connection stay no-ops.
+        tb.drop_conn(0);
+        tb.drop_conn(1);
+        assert!(tb.complete());
+        assert_eq!(tb.received(), 3);
     }
 }

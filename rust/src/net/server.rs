@@ -34,6 +34,8 @@ use crate::compressors::{CompressedGrad, PackedTernary};
 use crate::coordinator::{RoundLoop, RunHistory, TrainingRun, VoteAccumulator, WorkerSampler};
 use crate::snapshot::{CoordinatorSnapshot, SnapshotPolicy};
 
+use super::events::EventLog;
+use super::faults::FaultInjector;
 use super::protocol::{PhaseTracker, Roster, RoundTable};
 use super::reactor::{Mux, MuxEvent};
 use super::wire::{self, Msg, MsgType, RejectReason, WireBuf};
@@ -71,6 +73,23 @@ pub struct ServeOptions {
     /// it from the env it constructs; 0 (the default) disables the
     /// environment check but keeps every other fingerprint guard.
     pub env_fingerprint: u64,
+    /// Structured per-round event log (DESIGN.md §15); `None` disables.
+    pub event_log: Option<Arc<EventLog>>,
+    /// Strict self-healing (the soak contract): `Some(k)` re-opens any
+    /// round that closed with unfilled slots — an owner died, or a
+    /// respawn re-rostered mid-round and left stale slot owners — and
+    /// re-broadcasts it (same cohort, fresh owners, one bounded
+    /// re-coverage wait per attempt), up to `k` attempts per round,
+    /// failing the run loudly if the round still cannot fill. Every
+    /// round then closes with its *full* cohort, which is what makes a
+    /// churned RunHistory bit-identical to an uninterrupted one.
+    /// `None` keeps the legacy elastic behaviour: partial rounds close
+    /// as partial participation, only the all-hosts-dead case re-opens
+    /// (capped at 3 attempts).
+    pub heal_attempts: Option<usize>,
+    /// In-process fault injection for this role (DESIGN.md §15);
+    /// `None` runs clean.
+    pub faults: Option<FaultInjector>,
 }
 
 impl ServeOptions {
@@ -84,6 +103,9 @@ impl ServeOptions {
             drain_after: None,
             resume: None,
             env_fingerprint: 0,
+            event_log: None,
+            heal_attempts: None,
+            faults: None,
         }
     }
 }
@@ -132,6 +154,7 @@ impl NetCoordinator {
                 .map_err(NetError::Snapshot)?;
         }
         let env_tag = opts.env_fingerprint;
+        let resumed = opts.resume.is_some();
         let lp = match opts.resume.take() {
             Some(snap) => RoundLoop::resume(run, d, workers, streaming, env_tag, snap)
                 .map_err(NetError::Snapshot)?,
@@ -139,6 +162,15 @@ impl NetCoordinator {
         };
         let mut mux = Mux::new(opts.max_payload)?;
         mux.listen(listener)?;
+        if let Some(fi) = &opts.faults {
+            mux.set_send_delay(fi.send_delay());
+        }
+        if let Some(log) = &opts.event_log {
+            log.emit(
+                "serve_start",
+                &[("resumed", resumed as u64), ("round", lp.start_round() as u64)],
+            );
+        }
 
         let phase = PhaseTracker::resumed_at(lp.start_round());
         let drv = Driver {
@@ -167,6 +199,7 @@ impl NetCoordinator {
             wbuf: WireBuf::new(),
             frame: Vec::new(),
             evs: Vec::new(),
+            rounds_since_snap: 0,
         };
         let result = drv.drive(eval);
 
@@ -219,6 +252,9 @@ struct Driver<'a> {
     wbuf: WireBuf,
     frame: Vec<u8>,
     evs: Vec<MuxEvent>,
+    /// Completed rounds since the last snapshot write (the event log's
+    /// `snap_age`; 0 right after a resume — a snapshot was just read).
+    rounds_since_snap: u64,
 }
 
 impl<'a> Driver<'a> {
@@ -251,6 +287,7 @@ impl<'a> Driver<'a> {
         for t in start..self.run.rounds {
             self.round(t, eval)?;
             let done = t + 1;
+            self.rounds_since_snap += 1;
             // `>=` rather than `==`: a resumed coordinator whose start
             // round is already past the drain mark drains after its
             // first completed round instead of silently never draining.
@@ -259,12 +296,15 @@ impl<'a> Driver<'a> {
             if let Some(policy) = &self.opts.snapshot {
                 if policy.due(done, self.run.rounds) || draining {
                     self.lp.to_snapshot().save(&policy.path).map_err(NetError::Snapshot)?;
+                    self.rounds_since_snap = 0;
+                    self.emit("snapshot", &[("t", t as u64)]);
                 }
             }
             if draining {
                 // Graceful SIGTERM-style drain: the round is complete and
                 // snapshotted; exit without Fin so the fleet reconnects
                 // to the successor coordinator.
+                self.emit("drain", &[("rounds", done as u64)]);
                 return Err(NetError::Drained { rounds_done: done });
             }
         }
@@ -282,6 +322,7 @@ impl<'a> Driver<'a> {
         // reactor a bounded window to flush before the teardown.
         self.drain_outgoing();
         self.phase.finish();
+        self.emit("fin", &[("rounds", self.run.rounds as u64)]);
         Ok(())
     }
 
@@ -312,12 +353,17 @@ impl<'a> Driver<'a> {
         // all-hosts-dead attempt reuses the same cohort.
         let n = self.lp.select(t);
         self.phase.open_round(t);
-        let mut down_client = 0u64;
-        let mut down_shard = 0u64;
         let mut sel_ids: Vec<u64> = Vec::with_capacity(n);
         let mut attempts = 0usize;
 
         loop {
+            // Wire accounting is per attempt: only the attempt that
+            // actually closes the round is annotated into the ledger,
+            // so a healed (re-broadcast) round reports exactly the
+            // bytes an uninterrupted round would — re-broadcasts are
+            // operational noise, not training traffic.
+            let mut down_client = 0u64;
+            let mut down_shard = 0u64;
             // Slot owners come from the rendezvous roster. A worker whose
             // host died (its claim was released) and has no replacement
             // yet gets the unowned sentinel — a straggler from the start,
@@ -374,6 +420,7 @@ impl<'a> Driver<'a> {
                     self.mark_dead(conn);
                 }
             }
+            self.emit("round_open", &[("t", t as u64), ("attempt", attempts as u64)]);
             self.phase.aggregate(t);
 
             // Collect until every live slot filled or the deadline expires.
@@ -414,23 +461,52 @@ impl<'a> Driver<'a> {
                 self.votes.counts_into(&mut self.lp.server.counts);
             }
             let stragglers = n - n_eff;
-            if n_eff == 0 {
-                // Zero live submissions. A covered roster means the
-                // cohort's hosts are alive yet silent — fatal, exactly as
-                // before. An uncovered one means every host died: give
-                // the fleet's reconnect-with-backoff one bounded
-                // re-rendezvous window to re-claim, then re-broadcast
-                // the same round (worker rounds are pure, so recomputing
-                // is harmless). Capped so a pathologically flapping
+            let strict = self.opts.heal_attempts;
+            if n_eff < n && (strict.is_some() || n_eff == 0) {
+                // Legacy (`strict == None`): only the all-hosts-dead
+                // case re-opens. Zero live submissions with a covered
+                // roster means the cohort's hosts are alive yet silent —
+                // fatal, exactly as before. An uncovered one means every
+                // host died: give the fleet's reconnect-with-backoff one
+                // bounded re-rendezvous window to re-claim, then
+                // re-broadcast the same round (worker rounds are pure,
+                // so recomputing is harmless).
+                //
+                // Strict (`strict == Some(cap)`, the soak contract):
+                // ANY shortfall heals — with no deadline a round can
+                // only close short because an owner died, or because a
+                // respawn re-rostered mid-round and left the table's
+                // slot owners stale (the respawn-races-the-round case:
+                // the roster is covered again but the new connection
+                // cannot fill the old owner's slots). Both re-open with
+                // fresh owners. Capped so a pathologically flapping
                 // fleet cannot spin a round forever.
                 attempts += 1;
-                if self.roster.covered() || attempts >= 3 {
-                    return Err(NetError::Protocol(format!(
-                        "round {t}: no submissions arrived"
-                    )));
+                let fatal = match strict {
+                    None => self.roster.covered() || attempts >= 3,
+                    Some(cap) => attempts >= cap.max(1),
+                };
+                if fatal {
+                    return Err(NetError::Protocol(if n_eff == 0 {
+                        format!("round {t}: no submissions arrived")
+                    } else {
+                        format!(
+                            "round {t}: {n_eff} of {n} submissions after {attempts} attempts"
+                        )
+                    }));
                 }
+                self.emit(
+                    "recoverage",
+                    &[
+                        ("t", t as u64),
+                        ("missing", stragglers as u64),
+                        ("attempt", attempts as u64),
+                    ],
+                );
                 self.phase.reopen_round(t);
-                self.await_recoverage(t)?;
+                if !self.roster.covered() {
+                    self.await_recoverage(t)?;
+                }
                 continue;
             }
             self.lp.finish_round(t, lr, n_eff, eval, &mut None);
@@ -442,7 +518,22 @@ impl<'a> Driver<'a> {
                 self.shard_up,
                 down_shard,
             );
-            self.fold_rejects();
+            let rejects = self.table.take_rejects();
+            self.lp.ledger.add_rejects(&rejects);
+            self.emit(
+                "round_close",
+                &[
+                    ("t", t as u64),
+                    ("senders", n_eff as u64),
+                    ("stragglers", stragglers as u64),
+                    ("up_bytes", self.up_bytes),
+                    ("down_bytes", down_client + self.down_extra),
+                    ("shard_up", self.shard_up),
+                    ("shard_down", down_shard),
+                    ("rejects", rejects.iter().sum()),
+                    ("snap_age", self.rounds_since_snap),
+                ],
+            );
             self.phase.broadcast(t);
             return Ok(());
         }
@@ -592,6 +683,10 @@ impl<'a> Driver<'a> {
             // path elastic federation depends on.
             Some(Ok(())) => {
                 self.is_shard[conn] = shard;
+                self.emit(
+                    "reclaim",
+                    &[("conn", conn as u64), ("shard", shard as u64), ("lo", lo), ("hi", hi)],
+                );
                 let msg = Msg::Welcome {
                     client_id: conn as u64,
                     workers: self.m as u64,
@@ -788,6 +883,13 @@ impl<'a> Driver<'a> {
         }
     }
 
+    /// Emit one event-log line if a log is configured.
+    fn emit(&self, event: &str, fields: &[(&str, u64)]) {
+        if let Some(log) = &self.opts.event_log {
+            log.emit(event, fields);
+        }
+    }
+
     fn send(&mut self, conn: usize, msg: &Msg) -> bool {
         self.frame.clear();
         self.wbuf.encode(msg, &mut self.frame);
@@ -808,8 +910,19 @@ impl<'a> Driver<'a> {
             // Free the range so a reconnecting agent can re-claim it,
             // and stop awaiting the open round's unfilled slots — both
             // immediately, not at the deadline.
-            self.roster.release(conn);
+            let freed = self.roster.release(conn);
             self.table.drop_conn(conn);
+            let (lo, hi) = freed.unwrap_or((0, 0));
+            self.emit(
+                "conn_dead",
+                &[
+                    ("conn", conn as u64),
+                    ("shard", self.is_shard.get(conn).copied().unwrap_or(false) as u64),
+                    ("claimed", freed.is_some() as u64),
+                    ("lo", lo as u64),
+                    ("hi", hi as u64),
+                ],
+            );
         }
     }
 }

@@ -23,12 +23,15 @@
 //! Like the root it is single-threaded: one [`Mux`] readiness loop
 //! carries the upstream connection and every downstream client.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::compressors::PackedTernary;
 use crate::coordinator::{TrainingRun, VoteAccumulator, WorkerSampler};
 
+use super::client::retriable;
+use super::faults::FaultInjector;
 use super::protocol::{Phase, PhaseTracker, Roster, RoundTable};
 use super::reactor::{Mux, MuxEvent};
 use super::wire::{self, Msg, MsgType, ShardRec, WireBuf};
@@ -59,6 +62,24 @@ pub struct ShardOptions {
     /// Environment fingerprint downstream claims must match (0 disables
     /// the check, exactly as on the root).
     pub env_fingerprint: u64,
+    /// Upstream self-healing window: on losing the root connection
+    /// (root crash, drain/restart, injected partition) keep redialing
+    /// with exponential backoff for this long instead of failing the
+    /// shard. `None` is the legacy fail-fast behaviour. The abandoned
+    /// round is void — the respawned root re-broadcasts it after this
+    /// shard re-claims its range, so the run stays bit-identical.
+    pub reconnect: Option<Duration>,
+    /// Re-resolve the upstream endpoint from this `(file, line)` on
+    /// every dial instead of using the static `upstream` address — a
+    /// respawned root binds a fresh port and republishes it, and a
+    /// shard that cached the dead address would redial into the void.
+    pub upstream_file: Option<(PathBuf, usize)>,
+    /// Deterministic fault injection for soak runs (`None` in
+    /// production): outbound send delay plus scheduled upstream
+    /// partitions, scoped to the shard role by [`FaultPlan::injector`].
+    ///
+    /// [`FaultPlan::injector`]: super::faults::FaultPlan::injector
+    pub faults: Option<FaultInjector>,
 }
 
 impl ShardOptions {
@@ -73,6 +94,9 @@ impl ShardOptions {
             max_payload: wire::MAX_PAYLOAD,
             handshake_timeout: Duration::from_secs(30),
             env_fingerprint: 0,
+            reconnect: None,
+            upstream_file: None,
+            faults: None,
         }
     }
 }
@@ -97,6 +121,9 @@ pub struct ShardStats {
     /// Typed rejects the root issued against this shard's merged frames
     /// (a late shard is a straggler like any other).
     pub rejects_from_root: u64,
+    /// Times the upstream link was lost and re-rendezvoused (0 unless
+    /// [`ShardOptions::reconnect`] is set).
+    pub upstream_reconnects: u64,
 }
 
 /// A bound-but-not-yet-serving shard; binding first lets callers learn
@@ -160,9 +187,12 @@ impl ShardCoordinator {
         let mut stats = ShardStats::default();
         let cfg = run.config_fingerprint(dim, workers, 0);
         let (upstream, commit) =
-            handshake_upstream(&opts, run, workers, dim, cfg, &mut stats)?;
+            handshake_with_retry(&opts, run, workers, dim, cfg, &mut stats)?;
 
         let mut mux = Mux::new(opts.max_payload)?;
+        if let Some(fi) = &opts.faults {
+            mux.set_send_delay(fi.send_delay());
+        }
         let up = mux.adopt(upstream)?;
         mux.listen(listener)?;
 
@@ -172,6 +202,7 @@ impl ShardCoordinator {
             d: dim,
             cfg,
             commit,
+            faults: opts.faults.clone(),
             opts: &opts,
             mux,
             up,
@@ -205,11 +236,31 @@ impl ShardCoordinator {
     }
 }
 
-/// Blocking upstream rendezvous: `ShardHello` → `Welcome` (whose shape
-/// must match the run this shard was built for). Returns the connected
-/// stream plus the root's selection commitment, which the shard relays
-/// verbatim in its own downstream `Welcome`s.
-fn handshake_upstream(
+/// The upstream address for the next dial: the static option, or —
+/// when [`ShardOptions::upstream_file`] is set — re-read from the
+/// endpoint file so a respawned root's fresh port is picked up. A
+/// missing or still-blank line is a *retriable* I/O miss (the root may
+/// not have republished yet), not a config error.
+fn resolve_upstream(opts: &ShardOptions) -> Result<Endpoint, NetError> {
+    let Some((path, line)) = &opts.upstream_file else {
+        return Ok(opts.upstream.clone());
+    };
+    let body = std::fs::read_to_string(path)?;
+    let text = body.lines().nth(*line).map(str::trim).unwrap_or("");
+    if text.is_empty() {
+        return Err(NetError::Io(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            format!("endpoint file {} has no line {} yet", path.display(), line),
+        )));
+    }
+    Endpoint::parse(text)
+}
+
+/// [`handshake_upstream`] with the fleet agents' backoff discipline
+/// (25 ms doubling, capped at 1 s) inside the
+/// [`ShardOptions::reconnect`] window, re-resolving the endpoint before
+/// every dial. Without a window it is a single attempt, as before.
+fn handshake_with_retry(
     opts: &ShardOptions,
     run: &TrainingRun,
     workers: usize,
@@ -217,7 +268,40 @@ fn handshake_upstream(
     cfg: u64,
     stats: &mut ShardStats,
 ) -> Result<(Stream, [u64; 4]), NetError> {
-    let mut conn = Stream::connect(&opts.upstream)?;
+    let deadline = opts.reconnect.map(|w| Instant::now() + w);
+    let mut backoff = Duration::from_millis(25);
+    loop {
+        let attempt = resolve_upstream(opts)
+            .and_then(|ep| handshake_upstream(&ep, opts, run, workers, dim, cfg, stats));
+        match attempt {
+            Ok(ok) => return Ok(ok),
+            Err(e) if retriable(&e) => {
+                let Some(dl) = deadline else { return Err(e) };
+                if Instant::now() + backoff >= dl {
+                    return Err(e);
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Blocking upstream rendezvous: `ShardHello` → `Welcome` (whose shape
+/// must match the run this shard was built for). Returns the connected
+/// stream plus the root's selection commitment, which the shard relays
+/// verbatim in its own downstream `Welcome`s.
+fn handshake_upstream(
+    upstream: &Endpoint,
+    opts: &ShardOptions,
+    run: &TrainingRun,
+    workers: usize,
+    dim: usize,
+    cfg: u64,
+    stats: &mut ShardStats,
+) -> Result<(Stream, [u64; 4]), NetError> {
+    let mut conn = Stream::connect(upstream)?;
     conn.set_read_timeout(Some(opts.handshake_timeout))?;
     let mut wbuf = WireBuf::new();
     let mut out = Vec::new();
@@ -283,8 +367,13 @@ struct ShardDriver<'a> {
     m: usize,
     d: usize,
     cfg: u64,
-    /// Root's selection commitment, relayed in downstream `Welcome`s.
+    /// Root's selection commitment, relayed in downstream `Welcome`s
+    /// (refreshed on upstream reconnect — a respawned root resumed from
+    /// a snapshot carries the same commitment forward).
     commit: [u64; 4],
+    /// Shard-scoped fault injector (owned: `partition_now` keeps
+    /// fired-round state).
+    faults: Option<FaultInjector>,
     opts: &'a ShardOptions,
     mux: Mux,
     /// Upstream connection id inside the mux (adopted first, so 0).
@@ -331,7 +420,7 @@ impl<'a> ShardDriver<'a> {
                 return Ok(());
             }
             if !self.mux.is_open(self.up) {
-                return Err(NetError::Disconnected);
+                self.reconnect_upstream()?;
             }
             // A deferred round starts the moment the fleet covers the
             // range — and fails the shard if it never does.
@@ -459,6 +548,16 @@ impl<'a> ShardDriver<'a> {
             self.mux.close(self.up);
             return;
         };
+        // Scheduled partition: sever our own upstream link at this
+        // round boundary instead of relaying it. The serve loop's
+        // reconnect path re-rendezvouses; the root reclaims the range
+        // and (under strict healing) re-broadcasts the round.
+        if let Some(fi) = &mut self.faults {
+            if fi.partition_now(t) {
+                self.mux.close(self.up);
+                return;
+            }
+        }
         self.abandon_round();
         // The global cohort, filtered to this shard's slice — in the
         // global selection order, which every tier preserves.
@@ -529,6 +628,56 @@ impl<'a> ShardDriver<'a> {
                 self.phase.open_round(t);
             }
         }
+    }
+
+    /// The upstream link is gone (root crash, drain/restart, injected
+    /// partition, or a root-side protocol violation that made us hang
+    /// up). With a [`ShardOptions::reconnect`] window: void the open
+    /// round — the root has already released this shard's claim and,
+    /// under strict healing, will re-broadcast after we re-claim — and
+    /// block on the backoff redial, re-resolving the endpoint so a
+    /// respawned root's fresh port is found. Downstream sessions are
+    /// fenced (dropped) with the epoch; reconnecting clients re-claim
+    /// and see the round again via the relayed re-broadcast. Without a
+    /// reconnect window this is the legacy fail-fast.
+    fn reconnect_upstream(&mut self) -> Result<(), NetError> {
+        if self.opts.reconnect.is_none() {
+            return Err(NetError::Disconnected);
+        }
+        self.abandon_round();
+        if self.alive.get(self.up).copied().unwrap_or(false) {
+            self.alive[self.up] = false;
+        }
+        // Epoch fence: drop every downstream session before redialing.
+        // A client update still in flight for the voided round dies
+        // with its socket instead of landing after the new epoch opens
+        // as a Late/Duplicate typed reject — reject tallies ride merged
+        // frames into the root's ledger, so a healed run must produce
+        // none that the uninterrupted run would not. The fleet's
+        // reconnect-with-backoff re-claims on a fresh socket and
+        // recomputes from the re-broadcast (worker rounds are pure).
+        for conn in 0..self.alive.len() {
+            if conn != self.up && self.alive[conn] {
+                self.mark_dead(conn);
+            }
+        }
+        let (stream, commit) = handshake_with_retry(
+            self.opts,
+            self.run,
+            self.m,
+            self.d,
+            self.cfg,
+            &mut self.stats,
+        )?;
+        let conn = self.mux.adopt(stream)?;
+        // No pump ran during the blocking redial, so no Accepted event
+        // raced the id: adopt order == arrival order still holds.
+        debug_assert_eq!(conn, self.alive.len(), "conn ids are arrival-ordered");
+        self.alive.push(true);
+        self.up = conn;
+        self.commit = commit;
+        self.stats.upstream_reconnects += 1;
+        Ok(())
     }
 
     /// Close the local round and stream the merged frame upstream.

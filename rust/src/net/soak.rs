@@ -1,0 +1,638 @@
+//! Churn soak harness: run a full sharded federation as **child
+//! processes**, kill and respawn them on a seeded [`FaultPlan`]
+//! schedule, and prove the final run history is **bit-identical** to an
+//! uninterrupted reference run of the same configuration.
+//!
+//! # Process model
+//!
+//! One supervisor (this module, in-process) forks `1 + K + K` children
+//! of the sparsignd binary itself:
+//!
+//! * the **root** (`serve --shards 0 --snapshot … --snapshot-every 1
+//!   --event-log …`), which publishes its bound endpoint to a
+//!   single-line `root.ep`;
+//! * `K` **shard relays** (`shard --index i …`), each publishing its
+//!   bound endpoint to a single-line `shard{i}.ep` and resolving its
+//!   upstream from line 0 of the composed `endpoints.txt` on every
+//!   (re)connect;
+//! * `K` **fleet processes** (`fleet --shard-line i …`), each hosting
+//!   the worker slice `chunk_bounds(m, K, i)` and dialing line `1 + i`
+//!   of `endpoints.txt`.
+//!
+//! Every endpoint file has exactly **one writer**: children own their
+//! own `*.ep` line, and only the supervisor composes the multi-line
+//! `endpoints.txt` (atomically, via tmp + rename). This removes the
+//! read-modify-write race a shared multi-line file would have when a
+//! respawned child re-publishes concurrently with another's startup.
+//!
+//! # Deterministic fault injection
+//!
+//! Kills are keyed to the root's structured event log, not wall-clock
+//! sleeps: the root snapshots **every** round, and each `snapshot{t}`
+//! event marks a durable boundary (`done = t + 1` rounds are fully
+//! committed). The supervisor replays `done = 1, 2, 3, …` through
+//! [`FaultSchedule::actions_after`] as boundaries appear and executes
+//! the resulting kills with SIGKILL — no cooperative shutdown, by
+//! design. A killed root is respawned with `--resume`; killed shards
+//! and fleets are respawned fresh (they are stateless between rounds).
+//!
+//! Bit-identity then follows from four properties proved elsewhere in
+//! the tree: snapshots resume bit-exactly (snapshot v3), strict
+//! self-healing re-opens any round that closed short so every round
+//! settles with full coverage, per-attempt accounting resets mean a
+//! healed round ledgers exactly the bytes of its closing attempt, and
+//! worker rounds are pure functions of `(seed, round, worker, params)`.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use super::events::{event_field, parse_events};
+use super::faults::{FaultAction, FaultPlan};
+use super::NetError;
+
+/// Configuration for [`run_soak`].
+#[derive(Debug, Clone)]
+pub struct SoakOptions {
+    /// Rounds per run (both reference and faulted).
+    pub rounds: usize,
+    /// Total worker count (split across shards by `chunk_bounds`).
+    pub clients: usize,
+    /// Shard-relay count (`K`); one fleet process per shard.
+    pub shards: usize,
+    /// Fault plan spec (the `FaultPlan` grammar); empty = no faults,
+    /// which still runs both pipelines and must compare equal.
+    pub faults: String,
+    /// Seed for the fault schedule and injectors.
+    pub fault_seed: u64,
+    /// Use Unix-domain sockets instead of loopback TCP.
+    pub uds: bool,
+    /// Scratch directory; `reference/` and `faulted/` subtrees are
+    /// created (and clobbered) inside it.
+    pub dir: PathBuf,
+    /// Path of the sparsignd binary to fork (normally
+    /// `std::env::current_exe()`; explicit for testability).
+    pub binary: PathBuf,
+    /// Extra CLI flags forwarded verbatim to every child (training
+    /// configuration: `--dim`, `--alpha`, `--seed`, …).
+    pub pass: Vec<(String, String)>,
+    /// Watchdog: a pipeline that has not finished within this budget is
+    /// killed and the soak fails.
+    pub timeout: Duration,
+    /// `--heal-attempts` forwarded to the root (strict self-healing cap).
+    pub heal_attempts: usize,
+    /// `--reconnect-secs` forwarded to shards and fleets.
+    pub reconnect_secs: u64,
+}
+
+impl SoakOptions {
+    /// Defaults matching the CI soak-smoke job; callers override
+    /// `dir`/`binary` at minimum.
+    pub fn new(dir: PathBuf, binary: PathBuf) -> Self {
+        SoakOptions {
+            rounds: 40,
+            clients: 8,
+            shards: 2,
+            faults: String::new(),
+            fault_seed: 7,
+            uds: false,
+            dir,
+            binary,
+            pass: Vec::new(),
+            timeout: Duration::from_secs(600),
+            heal_attempts: 10,
+            reconnect_secs: 60,
+        }
+    }
+}
+
+/// Outcome of a soak: the byte-comparison verdict plus restart and
+/// round counters recovered from the faulted run's event log.
+#[derive(Debug, Clone)]
+pub struct SoakReport {
+    /// `true` iff the faulted run's `--history-json` is byte-identical
+    /// to the uninterrupted reference run's.
+    pub identical: bool,
+    /// Coordinator (root) kills executed by the schedule.
+    pub coordinator_restarts: usize,
+    /// Shard-relay kills executed by the schedule.
+    pub shard_restarts: usize,
+    /// Fleet-process kills executed by the schedule.
+    pub agent_restarts: usize,
+    /// Distinct rounds that closed in the faulted run (re-runs of a
+    /// round after a resume count once).
+    pub rounds_closed: usize,
+    /// Rounds the faulted root re-opened under strict healing.
+    pub recoverages: usize,
+    /// Path of the reference run's history JSON.
+    pub reference_json: PathBuf,
+    /// Path of the faulted run's history JSON.
+    pub faulted_json: PathBuf,
+    /// Path of the faulted run's event log.
+    pub event_log: PathBuf,
+}
+
+/// Run the reference pipeline (no faults) and the faulted pipeline
+/// (under `opts.faults`), compare their history JSON byte-for-byte,
+/// and report restart counters. Both pipelines use the same child
+/// supervisor; the reference simply has an empty schedule.
+pub fn run_soak(opts: &SoakOptions) -> Result<SoakReport, NetError> {
+    if opts.shards == 0 {
+        return Err(NetError::Config("soak needs --shards >= 1".into()));
+    }
+    if opts.rounds == 0 {
+        return Err(NetError::Config("soak needs --rounds >= 1".into()));
+    }
+    if opts.clients < opts.shards {
+        return Err(NetError::Config(format!(
+            "soak needs --clients >= --shards ({} < {})",
+            opts.clients, opts.shards
+        )));
+    }
+    // Parse eagerly so a bad spec fails before any process is forked.
+    let plan = FaultPlan::parse(&opts.faults, opts.fault_seed).map_err(NetError::Config)?;
+
+    let reference = run_pipeline(opts, "reference", None)?;
+    let faulted = run_pipeline(opts, "faulted", Some(&plan))?;
+
+    let ref_body = std::fs::read(&reference.history)?;
+    let faulted_body = std::fs::read(&faulted.history)?;
+    let events_body = std::fs::read_to_string(&faulted.events).unwrap_or_default();
+    let (rounds_closed, recoverages) = count_progress(&events_body);
+
+    Ok(SoakReport {
+        identical: ref_body == faulted_body,
+        coordinator_restarts: faulted.coordinator_restarts,
+        shard_restarts: faulted.shard_restarts,
+        agent_restarts: faulted.agent_restarts,
+        rounds_closed,
+        recoverages,
+        reference_json: reference.history,
+        faulted_json: faulted.history,
+        event_log: faulted.events,
+    })
+}
+
+/// Distinct `round_close` rounds and total `recoverage` events in an
+/// event-log body. Distinct because a round re-run after a resume
+/// appears twice in the log but settles once in the history.
+fn count_progress(events_body: &str) -> (usize, usize) {
+    let mut closed: Vec<u64> = Vec::new();
+    let mut recoverages = 0usize;
+    for (event, fields) in parse_events(events_body) {
+        match event.as_str() {
+            "round_close" => {
+                if let Some(t) = event_field(&fields, "t") {
+                    let t = t as u64;
+                    if !closed.contains(&t) {
+                        closed.push(t);
+                    }
+                }
+            }
+            "recoverage" => recoverages += 1,
+            _ => {}
+        }
+    }
+    (closed.len(), recoverages)
+}
+
+/// Per-pipeline result handed back to [`run_soak`].
+struct PipelineOutcome {
+    history: PathBuf,
+    events: PathBuf,
+    coordinator_restarts: usize,
+    shard_restarts: usize,
+    agent_restarts: usize,
+}
+
+/// Paths shared by all children of one pipeline.
+struct Paths {
+    dir: PathBuf,
+    logs: PathBuf,
+    root_ep: PathBuf,
+    shard_eps: Vec<PathBuf>,
+    endpoints: PathBuf,
+    snapshot: PathBuf,
+    events: PathBuf,
+    history: PathBuf,
+}
+
+impl Paths {
+    fn new(base: &Path, tag: &str, shards: usize) -> std::io::Result<Paths> {
+        let dir = base.join(tag);
+        // Clobber any previous run of this tag so stale endpoint files
+        // or a stale snapshot cannot leak into a fresh pipeline.
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        let logs = dir.join("logs");
+        std::fs::create_dir_all(&logs)?;
+        Ok(Paths {
+            shard_eps: (0..shards).map(|i| dir.join(format!("shard{i}.ep"))).collect(),
+            root_ep: dir.join("root.ep"),
+            endpoints: dir.join("endpoints.txt"),
+            snapshot: dir.join("snap.bin"),
+            events: dir.join("events.jsonl"),
+            history: dir.join("history.json"),
+            logs,
+            dir,
+        })
+    }
+}
+
+/// One supervised child. `gen` bumps on every respawn so UDS socket
+/// paths and log files never collide with a dead generation's.
+struct Slot {
+    child: Child,
+    gen: usize,
+}
+
+/// Kills every still-running child on drop so a supervisor error (or
+/// watchdog fire) cannot leak orphan processes.
+struct Fleet {
+    root: Option<Slot>,
+    shards: Vec<Option<Slot>>,
+    fleets: Vec<Option<Slot>>,
+}
+
+impl Fleet {
+    fn kill_all(&mut self) {
+        let slots = self
+            .root
+            .iter_mut()
+            .chain(self.shards.iter_mut().flatten())
+            .chain(self.fleets.iter_mut().flatten());
+        for slot in slots {
+            let _ = slot.child.kill();
+            let _ = slot.child.wait();
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.kill_all();
+    }
+}
+
+fn kill_slot(slot: &mut Slot) {
+    let _ = slot.child.kill();
+    let _ = slot.child.wait();
+}
+
+/// Fork the full topology, babysit it (endpoint composition, fault
+/// execution, watchdog), and return once the root exits cleanly.
+fn run_pipeline(
+    opts: &SoakOptions,
+    tag: &str,
+    plan: Option<&FaultPlan>,
+) -> Result<PipelineOutcome, NetError> {
+    let paths = Paths::new(&opts.dir, tag, opts.shards)?;
+    let mut schedule = plan.map(|p| p.schedule(opts.shards, opts.shards));
+    let fault_spec = plan.filter(|p| !p.is_empty()).map(|_| opts.faults.as_str());
+
+    let mut fleet = Fleet {
+        root: Some(spawn_root(opts, &paths, 0, false, fault_spec)?),
+        shards: (0..opts.shards)
+            .map(|i| spawn_shard(opts, &paths, i, 0, fault_spec).map(Some))
+            .collect::<Result<_, _>>()?,
+        fleets: (0..opts.shards)
+            .map(|i| spawn_fleet(opts, &paths, i, 0, fault_spec).map(Some))
+            .collect::<Result<_, _>>()?,
+    };
+
+    let deadline = Instant::now() + opts.timeout;
+    let mut composed = String::new();
+    let mut done = 0usize; // boundaries replayed through the schedule
+    let mut coordinator_restarts = 0usize;
+    let mut shard_restarts = 0usize;
+    let mut agent_restarts = 0usize;
+
+    loop {
+        if Instant::now() > deadline {
+            fleet.kill_all();
+            return Err(NetError::Protocol(format!(
+                "soak {tag}: watchdog fired after {:?} (see {})",
+                opts.timeout,
+                paths.logs.display()
+            )));
+        }
+
+        compose_endpoints(&paths, &mut composed)?;
+
+        // Root exit ends the pipeline: clean exit means Fin went out
+        // and the history JSON is on disk; anything else is fatal.
+        let root_status = match fleet.root.as_mut() {
+            Some(slot) => slot.child.try_wait()?,
+            None => None,
+        };
+        if let Some(status) = root_status {
+            fleet.root = None;
+            if !status.success() {
+                fleet.kill_all();
+                return Err(NetError::Protocol(format!(
+                    "soak {tag}: coordinator exited with {status} (see {})",
+                    paths.logs.display()
+                )));
+            }
+            break;
+        }
+
+        // A shard or fleet child must only exit after Fin (success) —
+        // kills never race this check because the supervisor reaps a
+        // kill synchronously below. Nonzero means a real crash.
+        let mut crashed: Option<(&'static str, usize, std::process::ExitStatus)> = None;
+        for (kind, slots) in [("shard", &mut fleet.shards), ("fleet", &mut fleet.fleets)] {
+            for (i, entry) in slots.iter_mut().enumerate() {
+                let Some(slot) = entry.as_mut() else { continue };
+                if let Some(status) = slot.child.try_wait()? {
+                    if status.success() {
+                        *entry = None;
+                    } else {
+                        crashed = Some((kind, i, status));
+                    }
+                }
+            }
+        }
+        if let Some((kind, i, status)) = crashed {
+            fleet.kill_all();
+            return Err(NetError::Protocol(format!(
+                "soak {tag}: {kind} {i} exited with {status} (see {})",
+                paths.logs.display()
+            )));
+        }
+
+        // Replay newly durable boundaries through the fault schedule.
+        // `snapshot{t}` is emitted after the save returns, so a kill
+        // issued for boundary `done = t + 1` can always resume.
+        if let Some(sched) = schedule.as_mut() {
+            let durable = latest_boundary(&paths.events);
+            while done < durable {
+                done += 1;
+                for action in sched.actions_after(done) {
+                    match action {
+                        FaultAction::KillCoordinator => {
+                            if let Some(slot) = fleet.root.as_mut() {
+                                kill_slot(slot);
+                                let gen = slot.gen + 1;
+                                *slot = spawn_root(opts, &paths, gen, true, fault_spec)?;
+                                coordinator_restarts += 1;
+                            }
+                        }
+                        FaultAction::KillShard(i) => {
+                            if let Some(slot) = fleet.shards[i].as_mut() {
+                                kill_slot(slot);
+                                let gen = slot.gen + 1;
+                                *slot = spawn_shard(opts, &paths, i, gen, fault_spec)?;
+                                shard_restarts += 1;
+                            }
+                        }
+                        FaultAction::KillAgent(i) => {
+                            if let Some(slot) = fleet.fleets[i].as_mut() {
+                                kill_slot(slot);
+                                let gen = slot.gen + 1;
+                                *slot = spawn_fleet(opts, &paths, i, gen, fault_spec)?;
+                                agent_restarts += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Grace period: shards and fleets exit on their own after relaying
+    // Fin, but a child respawned at the last boundary may never have
+    // seen it — reap what finishes, then kill the rest without error.
+    let grace = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < grace {
+        let mut live = false;
+        for entry in fleet.shards.iter_mut().chain(fleet.fleets.iter_mut()) {
+            if let Some(slot) = entry.as_mut() {
+                if slot.child.try_wait()?.is_some() {
+                    *entry = None;
+                } else {
+                    live = true;
+                }
+            }
+        }
+        if !live {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    fleet.kill_all();
+
+    if !paths.history.exists() {
+        return Err(NetError::Protocol(format!(
+            "soak {tag}: coordinator exited without writing {}",
+            paths.history.display()
+        )));
+    }
+    Ok(PipelineOutcome {
+        history: paths.history,
+        events: paths.events,
+        coordinator_restarts,
+        shard_restarts,
+        agent_restarts,
+    })
+}
+
+/// Highest `done` count made durable so far: `snapshot{t}` means rounds
+/// `0..=t` are committed, i.e. `done = t + 1`. Reads the whole log each
+/// poll; at soak scale (hundreds of rounds, one line each) that is
+/// cheaper than being clever.
+fn latest_boundary(events: &Path) -> usize {
+    let Ok(body) = std::fs::read_to_string(events) else { return 0 };
+    let mut done = 0usize;
+    for (event, fields) in parse_events(&body) {
+        if event == "snapshot" {
+            if let Some(t) = event_field(&fields, "t") {
+                done = done.max(t as usize + 1);
+            }
+        }
+    }
+    done
+}
+
+/// Compose `endpoints.txt` (line 0 = root, line `1 + i` = shard `i`)
+/// from the single-writer per-child files. Missing or still-empty
+/// children yield a blank line, which readers treat as retriable.
+/// Written atomically, and only when the body actually changed.
+fn compose_endpoints(paths: &Paths, last: &mut String) -> std::io::Result<()> {
+    let mut body = String::new();
+    body.push_str(&first_line(&paths.root_ep));
+    body.push('\n');
+    for ep in &paths.shard_eps {
+        body.push_str(&first_line(ep));
+        body.push('\n');
+    }
+    if body != *last {
+        let tmp = paths.dir.join("endpoints.txt.tmp");
+        std::fs::write(&tmp, &body)?;
+        std::fs::rename(&tmp, &paths.endpoints)?;
+        *last = body;
+    }
+    Ok(())
+}
+
+fn first_line(path: &Path) -> String {
+    std::fs::read_to_string(path)
+        .ok()
+        .and_then(|b| b.lines().next().map(|l| l.trim().to_string()))
+        .unwrap_or_default()
+}
+
+/// Listen endpoint for generation `gen` of a child. TCP binds an
+/// ephemeral port; UDS gets a generation-suffixed path so a respawn
+/// never fights the dead generation's stale socket file.
+fn listen_endpoint(opts: &SoakOptions, paths: &Paths, name: &str, gen: usize) -> String {
+    if opts.uds {
+        format!("uds://{}", paths.dir.join(format!("{name}-g{gen}.sock")).display())
+    } else {
+        "tcp://127.0.0.1:0".to_string()
+    }
+}
+
+/// Shared `Command` scaffolding: the subcommand first (it is
+/// positional), then the common training flags, the fault spec, a
+/// per-generation log file, and no inherited stdin.
+fn child_command(
+    opts: &SoakOptions,
+    paths: &Paths,
+    subcommand: &str,
+    name: &str,
+    gen: usize,
+    fault_spec: Option<&str>,
+) -> std::io::Result<Command> {
+    let log = std::fs::File::create(paths.logs.join(format!("{name}-g{gen}.log")))?;
+    let err = log.try_clone()?;
+    let mut cmd = Command::new(&opts.binary);
+    cmd.stdin(Stdio::null()).stdout(Stdio::from(log)).stderr(Stdio::from(err));
+    cmd.arg(subcommand);
+    cmd.arg("--clients").arg(opts.clients.to_string());
+    cmd.arg("--rounds").arg(opts.rounds.to_string());
+    for (flag, value) in &opts.pass {
+        cmd.arg(format!("--{flag}")).arg(value);
+    }
+    if let Some(spec) = fault_spec {
+        cmd.arg("--faults").arg(spec);
+        cmd.arg("--fault-seed").arg(opts.fault_seed.to_string());
+    }
+    Ok(cmd)
+}
+
+fn spawn(mut cmd: Command, gen: usize) -> Result<Slot, NetError> {
+    let child = cmd.spawn()?;
+    Ok(Slot { child, gen })
+}
+
+fn spawn_root(
+    opts: &SoakOptions,
+    paths: &Paths,
+    gen: usize,
+    resume: bool,
+    fault_spec: Option<&str>,
+) -> Result<Slot, NetError> {
+    let mut cmd = child_command(opts, paths, "serve", "root", gen, fault_spec)?;
+    cmd.arg("--addr").arg(listen_endpoint(opts, paths, "root", gen));
+    cmd.arg("--endpoint-file").arg(&paths.root_ep);
+    cmd.arg("--snapshot").arg(&paths.snapshot);
+    cmd.arg("--snapshot-every").arg("1");
+    cmd.arg("--event-log").arg(&paths.events);
+    cmd.arg("--heal-attempts").arg(opts.heal_attempts.to_string());
+    cmd.arg("--history-json").arg(&paths.history);
+    cmd.arg("--rendezvous-secs").arg("120");
+    if resume {
+        cmd.arg("--resume").arg(&paths.snapshot);
+    }
+    spawn(cmd, gen)
+}
+
+fn spawn_shard(
+    opts: &SoakOptions,
+    paths: &Paths,
+    i: usize,
+    gen: usize,
+    fault_spec: Option<&str>,
+) -> Result<Slot, NetError> {
+    let mut cmd = child_command(opts, paths, "shard", &format!("shard{i}"), gen, fault_spec)?;
+    cmd.arg("--index").arg(i.to_string());
+    cmd.arg("--shard-count").arg(opts.shards.to_string());
+    cmd.arg("--listen").arg(listen_endpoint(opts, paths, &format!("shard{i}"), gen));
+    cmd.arg("--connect-file").arg(&paths.endpoints);
+    cmd.arg("--publish-file").arg(&paths.shard_eps[i]);
+    cmd.arg("--reconnect-secs").arg(opts.reconnect_secs.to_string());
+    spawn(cmd, gen)
+}
+
+fn spawn_fleet(
+    opts: &SoakOptions,
+    paths: &Paths,
+    i: usize,
+    gen: usize,
+    fault_spec: Option<&str>,
+) -> Result<Slot, NetError> {
+    let mut cmd = child_command(opts, paths, "fleet", &format!("fleet{i}"), gen, fault_spec)?;
+    cmd.arg("--connect-file").arg(&paths.endpoints);
+    cmd.arg("--shard-line").arg(i.to_string());
+    cmd.arg("--shard-count").arg(opts.shards.to_string());
+    cmd.arg("--reconnect-secs").arg(opts.reconnect_secs.to_string());
+    spawn(cmd, gen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_progress_dedups_rerun_rounds_and_counts_recoverages() {
+        let body = "\
+{\"event\":\"round_close\",\"t\":0}\n\
+{\"event\":\"snapshot\",\"t\":0}\n\
+{\"event\":\"round_close\",\"t\":1}\n\
+{\"event\":\"recoverage\",\"t\":2,\"missing\":3}\n\
+{\"event\":\"round_close\",\"t\":2}\n\
+{\"event\":\"round_close\",\"t\":1}\n";
+        let (closed, recoverages) = count_progress(body);
+        assert_eq!(closed, 3, "re-run of round 1 after a resume counts once");
+        assert_eq!(recoverages, 1);
+    }
+
+    #[test]
+    fn latest_boundary_is_monotone_over_the_log() {
+        let dir = std::env::temp_dir().join(format!("soak-boundary-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        assert_eq!(latest_boundary(&path), 0, "missing log means no boundary");
+        std::fs::write(
+            &path,
+            "{\"event\":\"snapshot\",\"t\":4}\n{\"event\":\"snapshot\",\"t\":2}\n",
+        )
+        .unwrap();
+        assert_eq!(latest_boundary(&path), 5, "max wins even out of order");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compose_endpoints_blanks_missing_children_and_writes_atomically() {
+        let dir = std::env::temp_dir().join(format!("soak-compose-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let paths = Paths::new(&dir, "t", 2).unwrap();
+        std::fs::write(&paths.root_ep, "tcp://127.0.0.1:9001\n").unwrap();
+        std::fs::write(&paths.shard_eps[1], "tcp://127.0.0.1:9003\n").unwrap();
+        let mut last = String::new();
+        compose_endpoints(&paths, &mut last).unwrap();
+        let body = std::fs::read_to_string(&paths.endpoints).unwrap();
+        assert_eq!(body, "tcp://127.0.0.1:9001\n\ntcp://127.0.0.1:9003\n");
+        // Unchanged inputs must not rewrite the file (mtime-stable).
+        let before = std::fs::metadata(&paths.endpoints).unwrap().modified().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        compose_endpoints(&paths, &mut last).unwrap();
+        let after = std::fs::metadata(&paths.endpoints).unwrap().modified().unwrap();
+        assert_eq!(before, after);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -25,8 +25,8 @@ use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
 use sparsignd::model::ModelKind;
 use sparsignd::net::client::loopback_endpoint;
 use sparsignd::net::{
-    run_fleet_range, run_loopback, run_loopback_sharded, FleetOptions, NetCoordinator, NetError,
-    ServeOptions, ShardCoordinator, ShardOptions,
+    run_fleet_range, run_loopback, run_loopback_sharded, FaultPlan, FaultRole, FleetOptions,
+    NetCoordinator, NetError, ServeOptions, ShardCoordinator, ShardOptions,
 };
 use sparsignd::optim::LrSchedule;
 use sparsignd::util::rng::Pcg64;
@@ -354,6 +354,177 @@ fn refused_shard_respawn_reclaims_and_stays_bit_identical() {
     assert!(hist.ledger.total_shard_uplink_wire_bytes() > 0);
     fleet_a.expect("fleet a");
     fleet_b.expect("fleet b");
+}
+
+/// Strict self-healing (`heal_attempts`): a round that closes below
+/// full coverage is re-opened, and a shard respawned into the freed
+/// range re-covers it, so the completed run is **bit-identical** to the
+/// in-process engine — the churn-soak contract, in-process. The doomed
+/// shard claims its range and dies during the run (its own rendezvous
+/// bound trips); under the legacy policy its slice would be stragglers
+/// forever, under strict healing the root parks the short round until
+/// the replacement re-claims.
+#[test]
+fn strict_healing_reopens_short_rounds_until_a_respawned_shard_recovers() {
+    let workers = 8;
+    let rounds = 4;
+    let e = env(workers);
+    let run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 0.7 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        rounds,
+    );
+    let mut rng = Pcg64::seed_from(33);
+    let init = e.init_params(&mut rng);
+    let in_process = run.run(&e, init.clone(), &|p| e.evaluate(p));
+
+    let mut serve_opts = ServeOptions::new(loopback_endpoint(false));
+    serve_opts.rendezvous_timeout = Duration::from_secs(30);
+    serve_opts.heal_attempts = Some(4);
+    let coordinator = NetCoordinator::bind(serve_opts).expect("root bind");
+    let root_ep = coordinator.local_endpoint().clone();
+    let mid = workers / 2;
+    let live = ShardCoordinator::bind(ShardOptions::new(
+        root_ep.clone(),
+        loopback_endpoint(false),
+        0,
+        mid,
+    ))
+    .expect("live shard bind");
+    let live_ep = live.local_endpoint().clone();
+    let mut doomed_opts =
+        ShardOptions::new(root_ep.clone(), loopback_endpoint(false), mid, workers);
+    doomed_opts.rendezvous_timeout = Duration::from_millis(300);
+    let doomed = ShardCoordinator::bind(doomed_opts).expect("doomed shard bind");
+
+    let fleet_opts = FleetOptions { agents: 1, ..FleetOptions::default() };
+    let eval = |p: &[f32]| e.evaluate(p);
+    let (root_out, fleet_a, fleet_b) = std::thread::scope(|s| {
+        let root = s.spawn(|| coordinator.serve(&run, workers, init, &eval));
+        let live_h = s.spawn(|| live.run(&run, workers, e.dim()));
+        let doomed_h = s.spawn(|| doomed.run(&run, workers, e.dim()));
+        let fa = s.spawn(|| run_fleet_range(&live_ep, &run, &e, 0, mid, &fleet_opts));
+
+        // Let the doomed shard die first (rendezvous bound 300ms), then
+        // respawn its range; the root is parked on the short round.
+        std::thread::sleep(Duration::from_millis(1_000));
+        let doomed_err =
+            doomed_h.join().expect("doomed thread").expect_err("doomed shard must die");
+        assert!(
+            matches!(&doomed_err, NetError::Protocol(s) if s.contains("never covered")),
+            "unexpected doomed-shard exit: {doomed_err}"
+        );
+        let respawn = ShardCoordinator::bind(ShardOptions::new(
+            root_ep.clone(),
+            loopback_endpoint(false),
+            mid,
+            workers,
+        ))
+        .expect("respawn bind");
+        let respawn_ep = respawn.local_endpoint().clone();
+        let r_h = s.spawn(|| respawn.run(&run, workers, e.dim()));
+        let fb = s.spawn(|| run_fleet_range(&respawn_ep, &run, &e, mid, workers, &fleet_opts));
+
+        let root_out = root.join().expect("root thread");
+        live_h.join().expect("live thread").expect("live shard run");
+        r_h.join().expect("respawn thread").expect("respawned shard run");
+        (root_out, fa.join().expect("fleet a"), fb.join().expect("fleet b"))
+    });
+
+    let hist = root_out.expect("root must heal to completion");
+    assert_identical(&in_process, &hist);
+    assert_eq!(hist.ledger.total_rejects(), 0);
+    for t in 0..rounds {
+        let rc = hist.ledger.get(t).unwrap();
+        assert_eq!(rc.senders, workers, "round {t} must close fully covered");
+        assert_eq!(rc.stragglers, 0, "round {t} stragglers");
+    }
+    fleet_a.expect("fleet a stats");
+    fleet_b.expect("fleet b stats");
+}
+
+/// A `partition:shard:round=2` fault: the shard severs its own upstream
+/// at the open of round 2 and takes the reconnect path — epoch-fencing
+/// its downstream sessions so no in-flight update of the voided round
+/// can land as a reject after the re-open. The root heals the short
+/// round, the fleet re-claims through the fence, and the completed run
+/// stays bit-identical with zero rejects anywhere.
+#[test]
+fn partitioned_shard_reconnects_fences_downstream_and_stays_bit_identical() {
+    let workers = 8;
+    let rounds = 5;
+    let e = env(workers);
+    let run = base_run(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        rounds,
+    );
+    let mut rng = Pcg64::seed_from(33);
+    let init = e.init_params(&mut rng);
+    let in_process = run.run(&e, init.clone(), &|p| e.evaluate(p));
+    let plan = FaultPlan::parse("partition:shard:round=2", 7).expect("fault plan");
+
+    let mut serve_opts = ServeOptions::new(loopback_endpoint(false));
+    serve_opts.rendezvous_timeout = Duration::from_secs(30);
+    serve_opts.heal_attempts = Some(4);
+    let coordinator = NetCoordinator::bind(serve_opts).expect("root bind");
+    let root_ep = coordinator.local_endpoint().clone();
+    let mid = workers / 2;
+    let steady = ShardCoordinator::bind(ShardOptions::new(
+        root_ep.clone(),
+        loopback_endpoint(false),
+        0,
+        mid,
+    ))
+    .expect("steady shard bind");
+    let steady_ep = steady.local_endpoint().clone();
+    let mut flaky_opts =
+        ShardOptions::new(root_ep.clone(), loopback_endpoint(false), mid, workers);
+    flaky_opts.reconnect = Some(Duration::from_secs(20));
+    flaky_opts.faults = Some(plan.injector(FaultRole::Shard));
+    let flaky = ShardCoordinator::bind(flaky_opts).expect("flaky shard bind");
+    let flaky_ep = flaky.local_endpoint().clone();
+
+    let steady_fleet = FleetOptions { agents: 1, ..FleetOptions::default() };
+    // The fenced fleet must survive its sessions being dropped by the
+    // reconnecting shard (Sign is stateless, so replay is sound).
+    let fenced_fleet = FleetOptions {
+        agents: 1,
+        reconnect: Some(Duration::from_secs(20)),
+        ..FleetOptions::default()
+    };
+    let eval = |p: &[f32]| e.evaluate(p);
+    let (root_out, flaky_out, fenced_out) = std::thread::scope(|s| {
+        let root = s.spawn(|| coordinator.serve(&run, workers, init, &eval));
+        let steady_h = s.spawn(|| steady.run(&run, workers, e.dim()));
+        let flaky_h = s.spawn(|| flaky.run(&run, workers, e.dim()));
+        let fa = s.spawn(|| run_fleet_range(&steady_ep, &run, &e, 0, mid, &steady_fleet));
+        let fb = s.spawn(|| run_fleet_range(&flaky_ep, &run, &e, mid, workers, &fenced_fleet));
+        let root_out = root.join().expect("root thread");
+        steady_h.join().expect("steady thread").expect("steady shard run");
+        let flaky_out = flaky_h.join().expect("flaky thread").expect("flaky shard run");
+        fa.join().expect("steady fleet").expect("steady fleet stats");
+        (root_out, flaky_out, fb.join().expect("fenced fleet"))
+    });
+
+    let hist = root_out.expect("root must heal the partitioned round");
+    assert_identical(&in_process, &hist);
+    assert_eq!(hist.ledger.total_rejects(), 0, "the fence must prevent every reject");
+    for t in 0..rounds {
+        let rc = hist.ledger.get(t).unwrap();
+        assert_eq!(rc.senders, workers, "round {t} must close fully covered");
+        assert_eq!(rc.stragglers, 0, "round {t} stragglers");
+    }
+    assert_eq!(flaky_out.upstream_reconnects, 1, "exactly one scheduled partition");
+    let fenced_stats = fenced_out.expect("fenced fleet stats");
+    assert!(
+        fenced_stats.reconnects >= 1,
+        "the fence must have dropped (and recovered) the downstream session"
+    );
 }
 
 /// `chunk_bounds` is the contract both sides of the tree share: the
