@@ -22,6 +22,10 @@
 //!  10. the sharded aggregation tree (DESIGN.md §14): 100k multiplexed
 //!      virtual clients through 2–4 aggregator shards over loopback
 //!      sockets, bit-identical to the in-process engine
+//!  11. the streaming data plane (DESIGN.md §16): row-gather throughput
+//!      over an mmap-backed `.sgds` store, then the same 100k-client
+//!      sharded cohort trained off the store — asserting its peak RSS
+//!      stays within 2× of the synthetic baseline above
 //!
 //! `cargo bench --bench perf_hotpaths` runs the full configuration;
 //! `-- --smoke` (or `PERF_SMOKE=1`) shrinks every section for CI.
@@ -727,6 +731,150 @@ fn bench_shard(rep: &mut Report, smoke: bool) {
     }
 }
 
+/// §16: the streaming data plane. Builds a 100k-client `.sgds` store,
+/// then (a) walks every manifest range gathering rows straight off the
+/// mapping — `data_store_rows_per_sec` — and (b) reruns the sharded
+/// 100k-virtual-client cohort of `bench_shard` with the store-backed
+/// `ClassifierEnv` as the gradient source, bit-diffed against the
+/// in-process engine. Runs directly after `bench_shard` on purpose:
+/// VmHWM is a monotone process-wide high-water mark, so the `≤ 2×`
+/// assert below says "mapping and streaming the store added at most one
+/// more baseline's worth of peak memory on top of the synthetic run".
+fn bench_store(rep: &mut Report, smoke: bool) {
+    use sparsignd::coordinator::ClassifierEnv;
+    use sparsignd::data::{
+        write_store, DirichletPartitioner, ShardStore, SyntheticSpec, SyntheticTask,
+    };
+    use sparsignd::model::ModelKind;
+    use sparsignd::net;
+
+    let m = 100_000;
+    let dim = if smoke { 16 } else { 32 };
+    let rows_per_client = if smoke { 1 } else { 2 };
+    let shards = if smoke { 2 } else { 4 };
+    let rounds = if smoke { 2 } else { 3 };
+    let batch = if smoke { 4 } else { 8 };
+    let baseline_rss = vm_hwm_mib();
+
+    let path = std::env::temp_dir()
+        .join(format!("sparsignd-bench-store-{}.sgds", std::process::id()));
+    {
+        // Scoped so the in-RAM task and the encode buffer are freed
+        // before training: the run below must live off the mapping.
+        let task = SyntheticTask::generate(
+            SyntheticSpec {
+                dim,
+                classes: 10,
+                modes: 1,
+                separation: 1.8,
+                noise: 0.25,
+                label_noise: 0.0,
+                train: m * rows_per_client,
+                test: 5_000,
+            },
+            41,
+        );
+        let fed = DirichletPartitioner { alpha: 0.5, workers: m }
+            .partition_exact(&task.train, &mut Pcg64::seed_from(42));
+        write_store(&path, &task.train, &task.test, &fed, 0.5, 41).expect("write store");
+    }
+    let store = ShardStore::open(&path).expect("open store");
+    let info = store.info();
+    println!(
+        "\n-- data store: {m} client shards, {} train rows, dim {dim} \
+         ({:.1} MiB mapped) --",
+        info.rows_train,
+        info.file_bytes as f64 / (1 << 20) as f64
+    );
+
+    // (a) Streaming gather: every row of every client range, in manifest
+    // order, straight off the mapping.
+    let env = ClassifierEnv::from_store(
+        &store,
+        ModelKind::Linear { inputs: store.dim(), classes: store.classes() }.build(),
+        batch,
+    );
+    let passes = if smoke { 2 } else { 5 };
+    let t0 = std::time::Instant::now();
+    let mut acc = 0.0f32;
+    for _ in 0..passes {
+        for w in 0..env.fed.workers() {
+            for j in 0..env.fed.shard_len(w) {
+                let row = env.train.row(env.fed.index(w, j));
+                acc += row[0] + row[dim - 1];
+            }
+        }
+    }
+    std::hint::black_box(acc);
+    let rows_streamed = info.rows_train * passes;
+    let rows_per_sec = rows_streamed as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "  streaming gather: {:.2}M rows/s ({passes} passes over the manifest)",
+        rows_per_sec / 1e6
+    );
+    rep.num("data_store_rows_per_sec", rows_per_sec);
+
+    // (b) The 100k-client sharded cohort, trained off the store.
+    let run = TrainingRun {
+        algorithm: Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 1.0 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        schedule: LrSchedule::Const { lr: 0.05 },
+        rounds,
+        participation: 0.3,
+        eval_every: 0,
+        seed: 43,
+        attack: None,
+        selection: Default::default(),
+        allow_stateful_with_sampling: false,
+        threads: None,
+    };
+    let init = env.init_params(&mut Pcg64::seed_from(44));
+    let in_process = run.run(&env, init.clone(), &|_p| (0.0, 0.0));
+    let uds = cfg!(unix);
+    let serve_opts = net::ServeOptions::new(net::client::loopback_endpoint(uds));
+    let fleet_opts = net::FleetOptions::default();
+    let t0 = std::time::Instant::now();
+    let (wire_hist, _stats, _shard_stats) = net::run_loopback_sharded(
+        &run,
+        &env,
+        init,
+        &|_p| (0.0, 0.0),
+        serve_opts,
+        &fleet_opts,
+        shards,
+        uds,
+    )
+    .expect("store-backed sharded loopback");
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        in_process.final_params, wire_hist.final_params,
+        "store-backed sharded run diverged from the in-process engine"
+    );
+    let rps = rounds as f64 / dt;
+    println!(
+        "  {rounds} rounds through {shards} shards in {dt:.2}s → {rps:.2} rounds/s \
+         (store-fed cohort, bit-identical)"
+    );
+    rep.num("store_shard_clients", m as f64);
+    rep.num("store_shard_rounds_per_sec", rps);
+    if let Some(mib) = vm_hwm_mib() {
+        rep.num("store_shard_peak_rss_mib", mib);
+        if let Some(base) = baseline_rss {
+            println!("  peak RSS {mib:.1} MiB vs {base:.1} MiB synthetic baseline");
+            assert!(
+                mib <= base * 2.0,
+                "store-backed peak RSS {mib:.1} MiB exceeds 2x the synthetic \
+                 baseline {base:.1} MiB"
+            );
+        }
+    }
+    drop(env);
+    drop(store);
+    let _ = std::fs::remove_file(&path);
+}
+
 /// §12: coordinator snapshot write/load at d = 1e5 — the elastic-resume
 /// overhead a production deployment pays every k rounds. Write includes
 /// the full atomic dance (temp file + fsync + rename); load includes
@@ -1021,6 +1169,7 @@ fn main() {
         bench_engine_10k(&mut rep, true);
         bench_transport(&mut rep, true);
         bench_shard(&mut rep, true);
+        bench_store(&mut rep, true);
         bench_snapshot(&mut rep, true);
         bench_golomb(1 << 14);
         bench_gemm(&mut rep, true);
@@ -1034,6 +1183,7 @@ fn main() {
         bench_engine_10k(&mut rep, false);
         bench_transport(&mut rep, false);
         bench_shard(&mut rep, false);
+        bench_store(&mut rep, false);
         bench_snapshot(&mut rep, false);
         bench_golomb(1 << 20);
         bench_gemm(&mut rep, false);

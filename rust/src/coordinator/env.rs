@@ -65,6 +65,13 @@ pub struct ClassifierEnv {
     pub test: Dataset,
     pub fed: FederatedDataset,
     pub batch: usize,
+    /// Content hash of the `.sgds` store this environment streams from
+    /// (`None` for in-memory synthetic data). Folded into
+    /// [`GradientSource::env_fingerprint`] so a fleet client whose store
+    /// file drifted — different download, different partition seed, bit
+    /// rot that slipped past its local CRC check — is refused at
+    /// rendezvous exactly like a drifted config.
+    pub store_hash: Option<u64>,
 }
 
 impl ClassifierEnv {
@@ -77,7 +84,26 @@ impl ClassifierEnv {
     ) -> Self {
         assert!(batch > 0);
         assert!(fed.workers() > 0);
-        Self { model, train, test, fed, batch }
+        Self { model, train, test, fed, batch, store_hash: None }
+    }
+
+    /// Build an environment over an open `.sgds` store: zero-copy feature
+    /// views into the mapping, the store's embedded Dirichlet partition,
+    /// and the store content hash mixed into the environment fingerprint.
+    pub fn from_store(
+        store: &crate::data::ShardStore,
+        model: Box<dyn Model>,
+        batch: usize,
+    ) -> Self {
+        let mut env = Self::new(
+            model,
+            store.train_dataset(),
+            store.test_dataset(),
+            store.federated(),
+            batch,
+        );
+        env.store_hash = Some(store.content_hash());
+        env
     }
 
     /// Evaluate (loss, accuracy) on the test split, in chunks.
@@ -158,7 +184,9 @@ impl GradientSource for ClassifierEnv {
     /// Structural hash of the dataset, partition and batch shape: dims,
     /// split sizes, per-worker shard sizes, every shard's first index,
     /// a stride-sampled slice of the training features (bit-exact) and
-    /// labels. Cheap (cold path, O(workers + 64) work) yet sensitive to
+    /// labels — plus, for store-backed environments, the whole-file
+    /// `.sgds` content hash. Cheap (cold path, O(workers + 64) work at
+    /// build time) yet sensitive to
     /// the drifts a rebuilt environment can smuggle in — a different
     /// Dirichlet α reshapes the shards, a different generator seed moves
     /// the sampled feature bits, a different `--batch` changes the batch
@@ -172,9 +200,10 @@ impl GradientSource for ClassifierEnv {
         push(&mut buf, self.test.len() as u64);
         push(&mut buf, self.batch as u64);
         push(&mut buf, self.fed.workers() as u64);
-        for shard in &self.fed.shards {
-            push(&mut buf, shard.len() as u64);
-            push(&mut buf, shard.first().copied().unwrap_or(0) as u64);
+        for m in 0..self.fed.workers() {
+            let len = self.fed.shard_len(m);
+            push(&mut buf, len as u64);
+            push(&mut buf, if len > 0 { self.fed.index(m, 0) as u64 } else { 0 });
         }
         let stride = (self.train.x.len() / 64).max(1);
         for i in (0..self.train.x.len()).step_by(stride) {
@@ -183,6 +212,10 @@ impl GradientSource for ClassifierEnv {
         let stride = (self.train.y.len() / 64).max(1);
         for i in (0..self.train.y.len()).step_by(stride) {
             push(&mut buf, self.train.y[i] as u64);
+        }
+        if let Some(h) = self.store_hash {
+            push(&mut buf, 1);
+            push(&mut buf, h);
         }
         crate::snapshot::fingerprint_bytes(&buf)
     }

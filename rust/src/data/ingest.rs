@@ -1,0 +1,279 @@
+//! Parsers for the raw dataset downloads the paper evaluates on —
+//! IDX (Fashion-MNIST/MNIST) and the CIFAR-10/100 binary format — feeding
+//! the `dataset` CLI converter. Inputs must be **pre-decompressed** (the
+//! crate is dependency-free, so there is no gzip decoder; `gunzip` the
+//! downloads first, as the CI `dataset-parity` job does).
+//!
+//! Both parsers follow the hostile-input policy: magic and counts are
+//! validated against the true file length before any allocation sized by
+//! a header field, labels are range-checked, and every failure is a typed
+//! [`IngestError`] — never a panic.
+
+use std::path::Path;
+
+use super::Dataset;
+
+/// IDX magic for a rank-3 u8 tensor (image files).
+const IDX_IMAGES_MAGIC: u32 = 0x0000_0803;
+/// IDX magic for a rank-1 u8 tensor (label files).
+const IDX_LABELS_MAGIC: u32 = 0x0000_0801;
+
+/// CIFAR binary row payload: 32×32×3 channel-planar bytes.
+const CIFAR_PIXELS: usize = 3072;
+
+/// Raw-input caps (far above any real corpus, far below an OOM).
+const MAX_RAW_BYTES: u64 = 1 << 32;
+const MAX_RAW_ROWS: usize = 1 << 24;
+const MAX_RAW_DIM: usize = 1 << 22;
+
+/// Typed raw-dataset parse failure.
+#[derive(Debug)]
+pub enum IngestError {
+    /// Filesystem-level failure.
+    Io(std::io::Error),
+    /// File does not start with the expected IDX magic.
+    BadMagic { got: u32, want: u32 },
+    /// Structural mismatch (declared counts vs. byte length, caps, …).
+    Malformed(&'static str),
+    /// Image and label files disagree on the example count.
+    CountMismatch { images: usize, labels: usize },
+}
+
+impl std::fmt::Display for IngestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IngestError::Io(e) => write!(f, "ingest io error: {e}"),
+            IngestError::BadMagic { got, want } => {
+                write!(f, "bad IDX magic {got:#010x} (want {want:#010x})")
+            }
+            IngestError::Malformed(what) => write!(f, "malformed raw dataset: {what}"),
+            IngestError::CountMismatch { images, labels } => {
+                write!(f, "image/label count mismatch: {images} images vs {labels} labels")
+            }
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+impl From<std::io::Error> for IngestError {
+    fn from(e: std::io::Error) -> Self {
+        IngestError::Io(e)
+    }
+}
+
+fn read_capped(path: &Path) -> Result<Vec<u8>, IngestError> {
+    let len = std::fs::metadata(path)?.len();
+    if len > MAX_RAW_BYTES {
+        return Err(IngestError::Malformed("raw file exceeds size cap"));
+    }
+    Ok(std::fs::read(path)?)
+}
+
+fn u32be(bytes: &[u8], at: usize) -> Result<u32, IngestError> {
+    let b = bytes
+        .get(at..at + 4)
+        .ok_or(IngestError::Malformed("truncated IDX header"))?;
+    Ok(u32::from_be_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+/// Parse an IDX image/label file pair (e.g. Fashion-MNIST
+/// `train-images-idx3-ubyte` + `train-labels-idx1-ubyte`) into a
+/// [`Dataset`] with pixels scaled to `[0, 1]`.
+pub fn load_idx_pair(images: &Path, labels: &Path, classes: usize) -> Result<Dataset, IngestError> {
+    let img = read_capped(images)?;
+    let magic = u32be(&img, 0)?;
+    if magic != IDX_IMAGES_MAGIC {
+        return Err(IngestError::BadMagic { got: magic, want: IDX_IMAGES_MAGIC });
+    }
+    let n = u32be(&img, 4)? as usize;
+    let rows = u32be(&img, 8)? as usize;
+    let cols = u32be(&img, 12)? as usize;
+    if n > MAX_RAW_ROWS {
+        return Err(IngestError::Malformed("IDX example count over cap"));
+    }
+    let dim = rows
+        .checked_mul(cols)
+        .filter(|d| (1..=MAX_RAW_DIM).contains(d))
+        .ok_or(IngestError::Malformed("IDX image dims out of range"))?;
+    let need = n
+        .checked_mul(dim)
+        .and_then(|v| v.checked_add(16))
+        .ok_or(IngestError::Malformed("IDX size overflow"))?;
+    if img.len() != need {
+        return Err(IngestError::Malformed("IDX image payload length mismatch"));
+    }
+
+    let lab = read_capped(labels)?;
+    let magic = u32be(&lab, 0)?;
+    if magic != IDX_LABELS_MAGIC {
+        return Err(IngestError::BadMagic { got: magic, want: IDX_LABELS_MAGIC });
+    }
+    let ln = u32be(&lab, 4)? as usize;
+    if ln != n {
+        return Err(IngestError::CountMismatch { images: n, labels: ln });
+    }
+    if lab.len() != ln.checked_add(8).ok_or(IngestError::Malformed("IDX size overflow"))? {
+        return Err(IngestError::Malformed("IDX label payload length mismatch"));
+    }
+
+    let mut x = Vec::with_capacity(n * dim);
+    for &b in &img[16..] {
+        x.push(b as f32 / 255.0);
+    }
+    let mut y = Vec::with_capacity(n);
+    for &b in &lab[8..] {
+        let label = b as usize;
+        if label >= classes {
+            return Err(IngestError::Malformed("IDX label out of class range"));
+        }
+        y.push(label);
+    }
+    Ok(Dataset { x: x.into(), y, dim, classes })
+}
+
+/// Parse one or more CIFAR binary batch files (`data_batch_*.bin` /
+/// `test_batch.bin` for CIFAR-10 with `label_bytes = 1`, `train.bin` /
+/// `test.bin` for CIFAR-100 with `label_bytes = 2`, where the **last**
+/// label byte is the fine label) into a [`Dataset`] with pixels scaled
+/// to `[0, 1]`.
+pub fn load_cifar_binary(
+    paths: &[&Path],
+    classes: usize,
+    label_bytes: usize,
+) -> Result<Dataset, IngestError> {
+    if paths.is_empty() {
+        return Err(IngestError::Malformed("no CIFAR batch files given"));
+    }
+    if !(1..=2).contains(&label_bytes) {
+        return Err(IngestError::Malformed("CIFAR label width must be 1 or 2"));
+    }
+    let record = label_bytes + CIFAR_PIXELS;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for path in paths {
+        let bytes = read_capped(path)?;
+        if bytes.is_empty() || bytes.len() % record != 0 {
+            return Err(IngestError::Malformed("CIFAR batch is not a whole number of records"));
+        }
+        let n = bytes.len() / record;
+        if y.len() + n > MAX_RAW_ROWS {
+            return Err(IngestError::Malformed("CIFAR example count over cap"));
+        }
+        x.reserve(n * CIFAR_PIXELS);
+        y.reserve(n);
+        for rec in bytes.chunks_exact(record) {
+            let label = rec[label_bytes - 1] as usize;
+            if label >= classes {
+                return Err(IngestError::Malformed("CIFAR label out of class range"));
+            }
+            y.push(label);
+            for &b in &rec[label_bytes..] {
+                x.push(b as f32 / 255.0);
+            }
+        }
+    }
+    Ok(Dataset { x: x.into(), y, dim: CIFAR_PIXELS, classes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("sgds_ingest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    fn idx_images(n: usize, rows: usize, cols: usize, fill: u8) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(&IDX_IMAGES_MAGIC.to_be_bytes());
+        v.extend_from_slice(&(n as u32).to_be_bytes());
+        v.extend_from_slice(&(rows as u32).to_be_bytes());
+        v.extend_from_slice(&(cols as u32).to_be_bytes());
+        v.resize(16 + n * rows * cols, fill);
+        v
+    }
+
+    fn idx_labels(labels: &[u8]) -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(&IDX_LABELS_MAGIC.to_be_bytes());
+        v.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+        v.extend_from_slice(labels);
+        v
+    }
+
+    #[test]
+    fn idx_roundtrip() {
+        let img = tmp("ok-images", &idx_images(3, 2, 2, 128));
+        let lab = tmp("ok-labels", &idx_labels(&[0, 1, 2]));
+        let d = load_idx_pair(&img, &lab, 10).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim, 4);
+        assert_eq!(d.y, vec![0, 1, 2]);
+        assert!((d.row(0)[0] - 128.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn idx_rejects_bad_magic_truncation_and_label_range() {
+        let mut bad = idx_images(2, 2, 2, 0);
+        bad[0] = 0xff;
+        let img = tmp("bad-magic", &bad);
+        let lab = tmp("bm-labels", &idx_labels(&[0, 1]));
+        assert!(matches!(
+            load_idx_pair(&img, &lab, 10),
+            Err(IngestError::BadMagic { .. })
+        ));
+
+        let mut short = idx_images(2, 2, 2, 0);
+        short.pop();
+        let img = tmp("short-images", &short);
+        assert!(matches!(
+            load_idx_pair(&img, &lab, 10),
+            Err(IngestError::Malformed(_))
+        ));
+
+        let img = tmp("oor-images", &idx_images(2, 2, 2, 0));
+        let lab = tmp("oor-labels", &idx_labels(&[0, 9]));
+        assert!(matches!(
+            load_idx_pair(&img, &lab, 4),
+            Err(IngestError::Malformed(_))
+        ));
+
+        let lab = tmp("count-labels", &idx_labels(&[0]));
+        assert!(matches!(
+            load_idx_pair(&img, &lab, 10),
+            Err(IngestError::CountMismatch { images: 2, labels: 1 })
+        ));
+    }
+
+    #[test]
+    fn cifar_binary_roundtrip_and_rejections() {
+        // Two records, CIFAR-100 style (coarse byte then fine byte).
+        let mut bytes = Vec::new();
+        for (coarse, fine) in [(1u8, 7u8), (0, 3)] {
+            bytes.push(coarse);
+            bytes.push(fine);
+            bytes.resize(bytes.len() + CIFAR_PIXELS, 255u8);
+        }
+        let p = tmp("c100.bin", &bytes);
+        let d = load_cifar_binary(&[&p], 100, 2).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.dim, CIFAR_PIXELS);
+        assert_eq!(d.y, vec![7, 3]);
+        assert!((d.row(1)[0] - 1.0).abs() < 1e-6);
+
+        let ragged = tmp("ragged.bin", &bytes[..bytes.len() - 1]);
+        assert!(matches!(
+            load_cifar_binary(&[&ragged], 100, 2),
+            Err(IngestError::Malformed(_))
+        ));
+        assert!(matches!(
+            load_cifar_binary(&[&p], 5, 2),
+            Err(IngestError::Malformed(_))
+        ));
+    }
+}

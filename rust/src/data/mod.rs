@@ -1,26 +1,97 @@
-//! Datasets and federated partitioning.
+//! Datasets, federated partitioning, and the on-disk shard store.
 //!
-//! The sandbox has no network access and none of the paper's image corpora,
-//! so the experiment suite runs on **synthetic classification tasks**
-//! generated to stress the same mechanism the paper studies: the sign/
-//! magnitude statistics of worker gradients under **Dirichlet(α) label
-//! skew** (Hsu et al. 2019) — see DESIGN.md §3 for the substitution
-//! argument. The partitioner itself is exactly the paper's protocol and
-//! works unchanged on real data.
+//! Two data paths feed the experiment suite:
+//!
+//! - **Synthetic classification tasks** ([`SyntheticTask`]) generated to
+//!   stress the mechanism the paper studies — the sign/magnitude statistics
+//!   of worker gradients under **Dirichlet(α) label skew** (Hsu et al.
+//!   2019). They need no downloads, run in milliseconds, and are what the
+//!   fast presets and most CI jobs use; DESIGN.md §3 argues when the
+//!   substitution is sound.
+//! - **Real image corpora** streamed from a versioned, CRC-guarded,
+//!   mmap-backed `.sgds` store ([`ShardStore`], `data/store.rs`): the
+//!   `dataset` CLI subcommand converts IDX / CIFAR-binary downloads
+//!   (Fashion-MNIST, CIFAR-10/100) into store files whose embedded manifest
+//!   pins a seeded Dirichlet(α) partition, and `train`/`serve`/`fleet
+//!   --data` reproduce the paper's accuracy-vs-communication curves on them
+//!   end-to-end (DESIGN.md §16, EXPERIMENTS.md §Paper-parity).
+//!
+//! The partitioner itself is exactly the paper's protocol and is shared by
+//! both paths; [`Features`] lets a [`Dataset`] borrow its feature matrix
+//! zero-copy from a store mapping instead of owning a heap copy.
 
+mod ingest;
 mod partition;
+mod store;
 mod synthetic;
 
+pub use ingest::{load_cifar_binary, load_idx_pair, IngestError};
 pub use partition::{partition_report, DirichletPartitioner, PartitionReport};
+pub use store::{
+    encode_store, write_store, MappedSlice, ShardStore, StoreError, StoreInfo, STORE_VERSION,
+};
 pub use synthetic::{SyntheticSpec, SyntheticTask};
 
 use crate::util::rng::Pcg64;
 
-/// An in-memory dense classification dataset (row-major features).
+/// Backing storage for a dataset's `n × dim` feature matrix: either an
+/// owned heap vector (synthetic tasks, tests) or a zero-copy view into an
+/// open [`ShardStore`] mapping (the mapping is kept alive by refcount, so
+/// the view can never dangle).
+#[derive(Clone)]
+pub enum Features {
+    /// Heap-owned features.
+    Owned(Vec<f32>),
+    /// Borrowed zero-copy from an `.sgds` mapping.
+    Mapped(MappedSlice),
+}
+
+impl Features {
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            Features::Owned(v) => v,
+            Features::Mapped(m) => m.as_slice(),
+        }
+    }
+}
+
+impl std::ops::Deref for Features {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<f32>> for Features {
+    fn from(v: Vec<f32>) -> Self {
+        Features::Owned(v)
+    }
+}
+
+impl PartialEq for Features {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Features {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self {
+            Features::Owned(_) => "owned",
+            Features::Mapped(_) => "mapped",
+        };
+        write!(f, "Features({kind}, len={})", self.as_slice().len())
+    }
+}
+
+/// A dense classification dataset (row-major features). The feature matrix
+/// may be heap-owned or a zero-copy store mapping — see [`Features`]; the
+/// read contract (`row`/`gather_into`) is identical either way.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     /// `n × dim` features.
-    pub x: Vec<f32>,
+    pub x: Features,
     /// `n` labels in `[0, classes)`.
     pub y: Vec<usize>,
     pub dim: usize,
@@ -80,37 +151,93 @@ pub struct BatchScratch {
     pub y: Vec<usize>,
 }
 
-/// A dataset split across `M` workers: shard `m` holds indices into the
-/// shared base dataset. Cloning is cheap-ish (indices only) — the feature
-/// matrix is shared by reference at the engine level.
-#[derive(Clone, Debug)]
+/// Per-worker shard membership: either explicit index lists (the in-memory
+/// partitioner output, where shards may overlap when `n < M·⌈n/M⌉`) or
+/// contiguous `(start, len)` ranges into a store whose rows were written
+/// grouped by client — disjoint and exhaustive by construction, O(1)
+/// memory per worker.
+#[derive(Clone, Debug, PartialEq)]
+enum ShardMap {
+    Explicit(Vec<Vec<usize>>),
+    Ranges(Vec<(usize, usize)>),
+}
+
+/// A dataset split across `M` workers: shard `m` names indices into the
+/// shared base dataset. Cloning is cheap-ish (indices only; ranges are
+/// O(M)) — the feature matrix is shared by reference at the engine level.
+#[derive(Clone, Debug, PartialEq)]
 pub struct FederatedDataset {
-    /// Per-worker example indices.
-    pub shards: Vec<Vec<usize>>,
+    shards: ShardMap,
 }
 
 impl FederatedDataset {
+    /// Build from explicit per-worker index lists.
+    pub fn from_shards(shards: Vec<Vec<usize>>) -> Self {
+        FederatedDataset { shards: ShardMap::Explicit(shards) }
+    }
+
+    /// Build from contiguous per-worker `(start, len)` ranges (the store
+    /// manifest representation).
+    pub fn from_ranges(ranges: Vec<(usize, usize)>) -> Self {
+        FederatedDataset { shards: ShardMap::Ranges(ranges) }
+    }
+
     pub fn workers(&self) -> usize {
-        self.shards.len()
+        match &self.shards {
+            ShardMap::Explicit(s) => s.len(),
+            ShardMap::Ranges(r) => r.len(),
+        }
+    }
+
+    /// Number of examples held by worker `m`.
+    pub fn shard_len(&self, m: usize) -> usize {
+        match &self.shards {
+            ShardMap::Explicit(s) => s[m].len(),
+            ShardMap::Ranges(r) => r[m].1,
+        }
+    }
+
+    /// The `j`-th example index of worker `m`.
+    pub fn index(&self, m: usize, j: usize) -> usize {
+        match &self.shards {
+            ShardMap::Explicit(s) => s[m][j],
+            ShardMap::Ranges(r) => {
+                debug_assert!(j < r[m].1);
+                r[m].0 + j
+            }
+        }
+    }
+
+    /// Iterate worker `m`'s example indices.
+    pub fn shard_indices(&self, m: usize) -> impl Iterator<Item = usize> + '_ {
+        (0..self.shard_len(m)).map(move |j| self.index(m, j))
     }
 
     /// Sample a mini-batch (with replacement, matching the paper's
     /// stochastic-gradient model) of `batch` indices from worker `m` into
     /// a caller-provided scratch buffer (cleared, then filled). The RNG
-    /// draw sequence is identical to [`Self::sample_batch`].
-    pub fn sample_batch_into(
-        &self,
-        m: usize,
-        batch: usize,
-        rng: &mut Pcg64,
-        out: &mut Vec<usize>,
-    ) {
-        let shard = &self.shards[m];
-        assert!(!shard.is_empty(), "worker {m} has an empty shard");
+    /// draw sequence is identical to [`Self::sample_batch`], and — given
+    /// equal shard lengths — identical across the two [`ShardMap`]
+    /// representations, which is what keeps store-backed fleet runs
+    /// bit-identical to the in-process engine.
+    pub fn sample_batch_into(&self, m: usize, batch: usize, rng: &mut Pcg64, out: &mut Vec<usize>) {
+        let len = self.shard_len(m);
+        assert!(len > 0, "worker {m} has an empty shard");
         out.clear();
         out.reserve(batch);
-        for _ in 0..batch {
-            out.push(shard[rng.index(shard.len())]);
+        match &self.shards {
+            ShardMap::Explicit(s) => {
+                let shard = &s[m];
+                for _ in 0..batch {
+                    out.push(shard[rng.index(len)]);
+                }
+            }
+            ShardMap::Ranges(r) => {
+                let start = r[m].0;
+                for _ in 0..batch {
+                    out.push(start + rng.index(len));
+                }
+            }
         }
     }
 
@@ -123,7 +250,10 @@ impl FederatedDataset {
 
     /// Total examples across shards.
     pub fn total(&self) -> usize {
-        self.shards.iter().map(|s| s.len()).sum()
+        match &self.shards {
+            ShardMap::Explicit(s) => s.iter().map(|s| s.len()).sum(),
+            ShardMap::Ranges(r) => r.iter().map(|&(_, len)| len).sum(),
+        }
     }
 }
 
@@ -133,7 +263,7 @@ mod tests {
 
     fn tiny() -> Dataset {
         Dataset {
-            x: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            x: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0].into(),
             y: vec![0, 1, 0],
             dim: 2,
             classes: 2,
@@ -152,7 +282,7 @@ mod tests {
 
     #[test]
     fn batch_sampling_in_range() {
-        let fed = FederatedDataset { shards: vec![vec![0, 2], vec![1]] };
+        let fed = FederatedDataset::from_shards(vec![vec![0, 2], vec![1]]);
         let mut rng = Pcg64::seed_from(1);
         let b = fed.sample_batch(0, 16, &mut rng);
         assert_eq!(b.len(), 16);
@@ -169,7 +299,7 @@ mod tests {
         assert_eq!(bx, vec![4.0, 5.0, 0.0, 1.0]);
         assert_eq!(by, vec![0, 0]);
         // Identical RNG draw sequence: same seed ⇒ same indices.
-        let fed = FederatedDataset { shards: vec![vec![0, 1, 2]] };
+        let fed = FederatedDataset::from_shards(vec![vec![0, 1, 2]]);
         let a = fed.sample_batch(0, 8, &mut Pcg64::seed_from(9));
         let mut b = vec![42usize; 3];
         fed.sample_batch_into(0, 8, &mut Pcg64::seed_from(9), &mut b);
@@ -177,9 +307,47 @@ mod tests {
     }
 
     #[test]
+    fn range_shards_draw_identically_to_explicit() {
+        // A range shard and an explicit shard naming the same contiguous
+        // indices must consume the RNG identically and yield the same
+        // batches — the bit-identity contract behind `fleet --data`.
+        let explicit = FederatedDataset::from_shards(vec![vec![5, 6, 7, 8], vec![9, 10]]);
+        let ranges = FederatedDataset::from_ranges(vec![(5, 4), (9, 2)]);
+        assert_eq!(explicit.workers(), ranges.workers());
+        assert_eq!(explicit.total(), ranges.total());
+        for m in 0..2 {
+            assert_eq!(explicit.shard_len(m), ranges.shard_len(m));
+            let a = explicit.sample_batch(m, 32, &mut Pcg64::seed_from(77));
+            let b = ranges.sample_batch(m, 32, &mut Pcg64::seed_from(77));
+            assert_eq!(a, b);
+            let idx: Vec<usize> = ranges.shard_indices(m).collect();
+            let want: Vec<usize> = explicit.shard_indices(m).collect();
+            assert_eq!(idx, want);
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_wrappers_for_ranges() {
+        let fed = FederatedDataset::from_ranges(vec![(3, 5)]);
+        let a = fed.sample_batch(0, 8, &mut Pcg64::seed_from(9));
+        let mut b = Vec::new();
+        fed.sample_batch_into(0, 8, &mut Pcg64::seed_from(9), &mut b);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&i| (3..8).contains(&i)));
+    }
+
+    #[test]
     #[should_panic(expected = "empty shard")]
     fn empty_shard_panics() {
-        let fed = FederatedDataset { shards: vec![vec![]] };
+        let fed = FederatedDataset::from_shards(vec![vec![]]);
+        let mut rng = Pcg64::seed_from(2);
+        fed.sample_batch(0, 1, &mut rng);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty shard")]
+    fn empty_range_shard_panics() {
+        let fed = FederatedDataset::from_ranges(vec![(4, 0)]);
         let mut rng = Pcg64::seed_from(2);
         fed.sample_batch(0, 1, &mut rng);
     }

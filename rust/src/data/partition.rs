@@ -6,6 +6,12 @@
 //! > training examples that belong to the corresponding class."
 //!
 //! Low α ⇒ each worker sees a few classes (severe skew); large α ⇒ IID.
+//!
+//! Two variants are provided: [`DirichletPartitioner::partition`] (the
+//! original sampler — shards may overlap when `n < M·⌈n/M⌉`) and
+//! [`DirichletPartitioner::partition_exact`], which draws **without
+//! replacement** so shards are disjoint, exhaustive, and nonempty by
+//! construction — the form required by the `.sgds` store manifest.
 
 use super::{Dataset, FederatedDataset};
 use crate::util::rng::Pcg64;
@@ -20,19 +26,15 @@ pub struct DirichletPartitioner {
 }
 
 impl DirichletPartitioner {
-    /// Partition `data` into `self.workers` shards.
-    ///
-    /// Each worker draws class proportions `p ~ Dir(α·1_C)` and receives
-    /// `⌈n/M⌉` examples sampled class-by-class from per-class pools
-    /// (without replacement while a pool lasts, then cycling the pool —
-    /// bounded deviation from the drawn proportions, never an empty
-    /// shard).
-    pub fn partition(&self, data: &Dataset, rng: &mut Pcg64) -> FederatedDataset {
+    fn check(&self, data: &Dataset) {
         assert!(self.alpha > 0.0, "Dirichlet α must be > 0, got {}", self.alpha);
         assert!(self.workers > 0, "need at least one worker");
         assert!(!data.is_empty(), "cannot partition an empty dataset");
+    }
+
+    /// Shuffled per-class index pools.
+    fn pools(&self, data: &Dataset, rng: &mut Pcg64) -> Vec<Vec<usize>> {
         let classes = data.classes;
-        // Per-class index pools, shuffled.
         let mut pools: Vec<Vec<usize>> = vec![Vec::new(); classes];
         for (i, &y) in data.y.iter().enumerate() {
             assert!(y < classes, "label {y} out of range");
@@ -41,6 +43,20 @@ impl DirichletPartitioner {
         for pool in pools.iter_mut() {
             rng.shuffle(pool);
         }
+        pools
+    }
+
+    /// Partition `data` into `self.workers` shards.
+    ///
+    /// Each worker draws class proportions `p ~ Dir(α·1_C)` and receives
+    /// `⌈n/M⌉` examples sampled class-by-class from per-class pools
+    /// (without replacement while a pool lasts, then cycling the pool —
+    /// bounded deviation from the drawn proportions, never an empty
+    /// shard).
+    pub fn partition(&self, data: &Dataset, rng: &mut Pcg64) -> FederatedDataset {
+        self.check(data);
+        let classes = data.classes;
+        let pools = self.pools(data, rng);
         let mut cursor = vec![0usize; classes];
         let present: Vec<usize> =
             (0..classes).filter(|&c| !pools[c].is_empty()).collect();
@@ -78,7 +94,85 @@ impl DirichletPartitioner {
             }
             shards.push(shard);
         }
-        FederatedDataset { shards }
+        FederatedDataset::from_shards(shards)
+    }
+
+    /// Partition `data` into disjoint, exhaustive, **nonempty** shards.
+    ///
+    /// Shard sizes are fixed up front (the first `n mod M` workers get
+    /// `⌈n/M⌉` examples, the rest `⌊n/M⌋` — the round-robin backfill that
+    /// guarantees no worker draws zero samples even at extreme α); each
+    /// worker then fills its quota by Dirichlet(α) class draws from the
+    /// per-class pools **without replacement**, renormalizing over the
+    /// classes that still have stock. Every train row lands in exactly
+    /// one shard, which is what [`super::encode_store`] requires of a
+    /// store manifest. Requires `n ≥ M`.
+    pub fn partition_exact(&self, data: &Dataset, rng: &mut Pcg64) -> FederatedDataset {
+        self.check(data);
+        assert!(
+            data.len() >= self.workers,
+            "need at least one example per worker: n={} < M={}",
+            data.len(),
+            self.workers
+        );
+        let classes = data.classes;
+        let pools = self.pools(data, rng);
+        let mut cursor = vec![0usize; classes];
+        let n = data.len();
+        let base = n / self.workers;
+        let extra = n % self.workers;
+
+        let mut probs = vec![0.0f64; classes];
+        let mut shards = Vec::with_capacity(self.workers);
+        for m in 0..self.workers {
+            let quota = base + usize::from(m < extra);
+            let p = rng.dirichlet(self.alpha, classes);
+            let mut shard = Vec::with_capacity(quota);
+            for _ in 0..quota {
+                // Renormalize over classes with remaining stock; pools
+                // drain as we go, so this is recomputed per draw.
+                let mut z = 0.0;
+                let mut avail = 0usize;
+                for c in 0..classes {
+                    if cursor[c] < pools[c].len() {
+                        probs[c] = p[c];
+                        z += p[c];
+                        avail += 1;
+                    } else {
+                        probs[c] = 0.0;
+                    }
+                }
+                debug_assert!(avail > 0, "pools drained before quotas were met");
+                if z <= 0.0 {
+                    let u = 1.0 / avail as f64;
+                    for c in 0..classes {
+                        probs[c] = if cursor[c] < pools[c].len() { u } else { 0.0 };
+                    }
+                } else {
+                    for v in probs.iter_mut() {
+                        *v /= z;
+                    }
+                }
+                let c = rng.categorical(&probs);
+                debug_assert!(cursor[c] < pools[c].len());
+                shard.push(pools[c][cursor[c]]);
+                cursor[c] += 1;
+            }
+            shards.push(shard);
+        }
+        // Defensive guard (unreachable with the fixed quotas above, which
+        // are ≥ 1 whenever n ≥ M): backfill any empty shard from the
+        // largest one so downstream code never sees an empty client.
+        for m in 0..shards.len() {
+            if shards[m].is_empty() {
+                let donor = (0..shards.len())
+                    .max_by_key(|&d| shards[d].len())
+                    .expect("at least one shard");
+                let moved = shards[donor].pop().expect("donor shard nonempty");
+                shards[m].push(moved);
+            }
+        }
+        FederatedDataset::from_shards(shards)
     }
 }
 
@@ -108,12 +202,12 @@ pub fn partition_report(data: &Dataset, fed: &FederatedDataset) -> PartitionRepo
     let mut class_fractions = Vec::with_capacity(fed.workers());
     let mut max_sum = 0.0;
     let mut tv_sum = 0.0;
-    for shard in &fed.shards {
+    for m in 0..fed.workers() {
         let mut hist = vec![0.0f64; classes];
-        for &i in shard {
+        for i in fed.shard_indices(m) {
             hist[data.y[i]] += 1.0;
         }
-        let total = shard.len().max(1) as f64;
+        let total = fed.shard_len(m).max(1) as f64;
         for h in hist.iter_mut() {
             *h /= total;
         }
@@ -163,10 +257,10 @@ mod tests {
         let mut rng = Pcg64::seed_from(1);
         let fed = part.partition(&data, &mut rng);
         assert_eq!(fed.workers(), 20);
-        assert!(fed.shards.iter().all(|s| !s.is_empty()));
+        assert!((0..fed.workers()).all(|m| fed.shard_len(m) > 0));
         assert!(fed.total() >= data.len());
-        for s in &fed.shards {
-            assert!(s.iter().all(|&i| i < data.len()));
+        for m in 0..fed.workers() {
+            assert!(fed.shard_indices(m).all(|i| i < data.len()));
         }
     }
 
@@ -210,7 +304,7 @@ mod tests {
         let part = DirichletPartitioner { alpha: 0.3, workers: 10 };
         let a = part.partition(&data, &mut Pcg64::seed_from(4));
         let b = part.partition(&data, &mut Pcg64::seed_from(4));
-        assert_eq!(a.shards, b.shards);
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -226,6 +320,58 @@ mod tests {
         let data = task();
         let fed = DirichletPartitioner { alpha: 1.0, workers: 1 }
             .partition(&data, &mut Pcg64::seed_from(6));
-        assert_eq!(fed.shards[0].len(), data.len());
+        assert_eq!(fed.shard_len(0), data.len());
+    }
+
+    #[test]
+    fn exact_partition_is_disjoint_exhaustive_and_skews_with_alpha() {
+        let data = task();
+        let mut skews = Vec::new();
+        // Both α extremes from the pin: 0.05 (near one-class shards) and
+        // 100 (near IID). Either way, every row appears exactly once and
+        // no shard is empty.
+        for &alpha in &[0.05, 100.0] {
+            let part = DirichletPartitioner { alpha, workers: 64 };
+            let fed = part.partition_exact(&data, &mut Pcg64::seed_from(12));
+            assert_eq!(fed.workers(), 64);
+            assert_eq!(fed.total(), data.len());
+            let mut seen = vec![false; data.len()];
+            for m in 0..fed.workers() {
+                assert!(fed.shard_len(m) > 0, "α={alpha}: empty shard {m}");
+                for i in fed.shard_indices(m) {
+                    assert!(!seen[i], "α={alpha}: row {i} assigned twice");
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "α={alpha}: uncovered rows");
+            skews.push(partition_report(&data, &fed).mean_max_fraction);
+        }
+        assert!(
+            skews[0] > skews[1] + 0.2,
+            "α=0.05 skew {} should exceed α=100 skew {}",
+            skews[0],
+            skews[1]
+        );
+    }
+
+    #[test]
+    fn exact_partition_deterministic_and_balanced() {
+        let data = task();
+        let part = DirichletPartitioner { alpha: 0.3, workers: 7 };
+        let a = part.partition_exact(&data, &mut Pcg64::seed_from(4));
+        let b = part.partition_exact(&data, &mut Pcg64::seed_from(4));
+        assert_eq!(a, b);
+        // Quotas differ by at most one example.
+        let lens: Vec<usize> = (0..a.workers()).map(|m| a.shard_len(m)).collect();
+        let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        assert!(hi - lo <= 1, "{lens:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one example per worker")]
+    fn exact_partition_rejects_more_workers_than_rows() {
+        let data = task();
+        DirichletPartitioner { alpha: 1.0, workers: 4_000 }
+            .partition_exact(&data, &mut Pcg64::seed_from(8));
     }
 }

@@ -1,0 +1,817 @@
+//! `.sgds` — the versioned, CRC-guarded, mmap-backed on-disk shard store.
+//!
+//! A store file holds one dataset (train + test split) plus an embedded
+//! Dirichlet(α) partition manifest, laid out so the engine and the net
+//! fleet can stream mini-batches **zero-copy** straight out of the file
+//! mapping: train rows are written grouped by client, so each client's
+//! shard is a contiguous `(start, len)` row range and
+//! [`FederatedDataset::from_ranges`] needs O(clients) memory regardless of
+//! dataset size.
+//!
+//! ## Grammar (all integers varint unless sized; see DESIGN.md §16)
+//!
+//! ```text
+//! store   := magic:u32be("SGDS") version:u8(=1) kind:u8(=1)
+//!            meta_len:varint meta[meta_len]
+//!            pad (zero bytes to the next 64-byte file offset)
+//!            features: (rows_train + rows_test) · dim × f32le   (train rows
+//!                      grouped by client, then test rows)
+//!            labels:   (rows_train + rows_test) × u32le
+//!            crc:u32le                    (CRC-32 of every preceding byte)
+//! meta    := dim rows_train rows_test classes clients
+//!            alpha:f64le seed:u64le
+//!            shard_len[clients]           (each ≥ 1, Σ == rows_train)
+//! ```
+//!
+//! Shard *lengths* rather than `(start, end)` pairs make the manifest
+//! disjoint and exhaustive **by construction** — ranges are derived by
+//! running sum, so the only cross-field checks needed are `Σ len ==
+//! rows_train` and `len ≥ 1`.
+//!
+//! ## Hostile-input discipline
+//!
+//! Loading follows the same policy as `net/wire` and `snapshot`: magic /
+//! version / kind first, then the whole-file CRC, then semantic decoding
+//! where every count is capped *before* any allocation and every derived
+//! offset is revalidated against the true byte length (the file must be
+//! exactly as long as the header implies — no trailing bytes). Any
+//! violation is a typed [`StoreError`], never a panic. See
+//! `tests/property_suite.rs` for the mutation/truncation fuzz pins.
+//!
+//! ## mmap safety argument
+//!
+//! The mapping is `PROT_READ` + `MAP_PRIVATE` over a file that is written
+//! atomically (tmp + fsync + rename) and never modified in place, so no
+//! writer aliases it. All reads go through slices bounded by the
+//! validated header, the f32 view is only taken on little-endian targets
+//! at 4-byte-aligned offsets (the feature block is 64-byte aligned in the
+//! file and mappings are page-aligned; non-unix or misaligned fallbacks
+//! copy into an owned `Vec<f32>`), and every [`MappedSlice`] holds an
+//! `Arc` on the mapping so a view can never outlive it. Truncating a
+//! store file while it is mapped is outside the threat model (as for any
+//! mmap consumer); corruption at rest is caught by the CRC.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::{Dataset, FederatedDataset};
+use crate::net::wire::{crc32, push_varint, Cursor, WireError};
+use crate::snapshot::fingerprint_bytes;
+
+/// First four bytes of every store file: `b"SGDS"`.
+pub const STORE_MAGIC: u32 = u32::from_be_bytes(*b"SGDS");
+/// Current store format version.
+pub const STORE_VERSION: u8 = 1;
+/// Kind byte: dense f32 classification dataset.
+pub const KIND_DATASET: u8 = 1;
+
+/// Decoder caps, enforced before any allocation.
+pub const MAX_STORE_BYTES: u64 = 1 << 33;
+const MAX_STORE_DIM: usize = 1 << 26;
+const MAX_STORE_ROWS: usize = 1 << 28;
+const MAX_STORE_CLIENTS: usize = 1 << 24;
+const MAX_STORE_CLASSES: usize = 1 << 16;
+
+/// Feature-block alignment (file offset); also the widest SIMD vector the
+/// kernels use, so mapped rows can be loaded with aligned moves.
+const FEATURE_ALIGN: usize = 64;
+
+/// Typed store-load failure — the `.sgds` analogue of
+/// [`crate::snapshot::SnapshotError`].
+#[derive(Debug)]
+pub enum StoreError {
+    /// Filesystem-level failure (open/read/write/rename/fsync/mmap).
+    Io(std::io::Error),
+    /// Fewer bytes than the header implies.
+    Truncated { need: usize, have: usize },
+    /// First four bytes are not `b"SGDS"`.
+    BadMagic { got: u32 },
+    /// Unsupported format version.
+    BadVersion { got: u8 },
+    /// Unknown kind byte.
+    BadKind { got: u8 },
+    /// Whole-file checksum mismatch.
+    BadCrc { want: u32, got: u32 },
+    /// File (or declared block) exceeds a decoder cap.
+    Oversized { len: u64, max: u64 },
+    /// Structurally invalid (bad varint, cap violation, manifest not
+    /// covering the train rows, label out of range, trailing bytes, …).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "store io error: {e}"),
+            StoreError::Truncated { need, have } => {
+                write!(f, "truncated store: need {need} bytes, have {have}")
+            }
+            StoreError::BadMagic { got } => write!(f, "bad store magic {got:#010x}"),
+            StoreError::BadVersion { got } => write!(f, "unsupported store version {got}"),
+            StoreError::BadKind { got } => write!(f, "unknown store kind {got}"),
+            StoreError::BadCrc { want, got } => {
+                write!(f, "store crc mismatch: want {want:#010x}, got {got:#010x}")
+            }
+            StoreError::Oversized { len, max } => {
+                write!(f, "store block of {len} bytes exceeds cap {max}")
+            }
+            StoreError::Malformed(what) => write!(f, "malformed store: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}
+
+impl From<WireError> for StoreError {
+    fn from(e: WireError) -> Self {
+        match e {
+            WireError::Truncated { need, have } => StoreError::Truncated { need, have },
+            WireError::BadMagic { got } => StoreError::BadMagic { got },
+            WireError::BadVersion { got } => StoreError::BadVersion { got },
+            WireError::BadMsgType { got } => StoreError::BadKind { got },
+            WireError::BadCrc { want, got } => StoreError::BadCrc { want, got },
+            WireError::Oversized { len, max } => {
+                StoreError::Oversized { len: len as u64, max: max as u64 }
+            }
+            WireError::Malformed(what) => StoreError::Malformed(what),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The byte mapping.
+
+#[cfg(unix)]
+mod sys {
+    pub const PROT_READ: i32 = 0x1;
+    pub const MAP_PRIVATE: i32 = 0x02;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+/// Owner of the raw store bytes: a read-only file mapping on unix, an
+/// owned buffer otherwise (and for in-memory decodes).
+enum Mapping {
+    #[cfg(unix)]
+    Mmap { ptr: *const u8, len: usize },
+    Owned(Vec<u8>),
+}
+
+// SAFETY: the mapping is immutable for its whole lifetime — PROT_READ,
+// MAP_PRIVATE, file written atomically and never modified in place — so
+// shared references to its bytes are sound across threads.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    fn as_bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+            // bytes, unmapped only in `Drop`.
+            Mapping::Mmap { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Mapping::Owned(v) => v,
+        }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Mapping::Mmap { ptr, len } = *self {
+            // SAFETY: exactly one munmap of the region mmap gave us.
+            unsafe { sys::munmap(ptr as *mut u8, len) };
+        }
+    }
+}
+
+/// A zero-copy `&[f32]` view into an open store mapping. Cloning is
+/// refcount-cheap; the `Arc` keeps the mapping alive so the view cannot
+/// dangle. Constructed only on little-endian targets at 4-byte-aligned
+/// offsets (checked), so the reinterpretation is always valid.
+#[derive(Clone)]
+pub struct MappedSlice {
+    map: Arc<Mapping>,
+    /// Byte offset of the f32 block inside the mapping.
+    off: usize,
+    /// Element (not byte) count.
+    len: usize,
+}
+
+impl MappedSlice {
+    pub fn as_slice(&self) -> &[f32] {
+        let bytes = self.map.as_bytes();
+        debug_assert!(self.off + self.len * 4 <= bytes.len());
+        let ptr = bytes[self.off..].as_ptr();
+        debug_assert_eq!(ptr as usize % std::mem::align_of::<f32>(), 0);
+        // SAFETY: bounds and alignment validated at construction (and
+        // re-asserted above); the mapping is immutable and outlives
+        // `self` via the Arc; f32 has no invalid bit patterns.
+        unsafe { std::slice::from_raw_parts(ptr as *const f32, self.len) }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The parsed store.
+
+/// Summary of an open store (what `dataset info` prints).
+#[derive(Clone, Debug)]
+pub struct StoreInfo {
+    pub dim: usize,
+    pub rows_train: usize,
+    pub rows_test: usize,
+    pub classes: usize,
+    pub clients: usize,
+    pub alpha: f64,
+    pub seed: u64,
+    pub file_bytes: usize,
+    pub content_hash: u64,
+    pub min_shard: usize,
+    pub max_shard: usize,
+}
+
+impl StoreInfo {
+    pub fn summary(&self) -> String {
+        format!(
+            "sgds v{STORE_VERSION}: {} train + {} test rows, dim {}, {} classes, \
+             {} clients (shard {}..{} rows), alpha {}, seed {}, {} bytes, hash {:016x}",
+            self.rows_train,
+            self.rows_test,
+            self.dim,
+            self.classes,
+            self.clients,
+            self.min_shard,
+            self.max_shard,
+            self.alpha,
+            self.seed,
+            self.file_bytes,
+            self.content_hash,
+        )
+    }
+}
+
+/// An open, fully validated `.sgds` store. All accessors are infallible:
+/// every invariant was checked at load time.
+pub struct ShardStore {
+    map: Arc<Mapping>,
+    dim: usize,
+    rows_train: usize,
+    rows_test: usize,
+    classes: usize,
+    alpha: f64,
+    seed: u64,
+    /// Per-client `(start, len)` row ranges, derived from the manifest.
+    ranges: Vec<(usize, usize)>,
+    /// Byte offset of the feature block (64-aligned).
+    feat_off: usize,
+    /// Byte offset of the label block.
+    label_off: usize,
+    /// FNV-1a 64 over the entire file — folded into
+    /// [`crate::coordinator::GradientSource::env_fingerprint`] so a
+    /// drifted fleet is refused at rendezvous.
+    content_hash: u64,
+}
+
+impl ShardStore {
+    /// Map and validate a store file.
+    pub fn open(path: &Path) -> Result<Self, StoreError> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        if len > MAX_STORE_BYTES {
+            return Err(StoreError::Oversized { len, max: MAX_STORE_BYTES });
+        }
+        if len == 0 {
+            return Err(StoreError::Truncated { need: 11, have: 0 });
+        }
+        let map = Self::map_file(&file, len as usize)?;
+        Self::decode(map)
+    }
+
+    #[cfg(unix)]
+    fn map_file(file: &std::fs::File, len: usize) -> Result<Mapping, StoreError> {
+        use std::os::unix::io::AsRawFd;
+        // SAFETY: fd is open for the duration of the call; length is the
+        // file's true size; flags request a private read-only mapping.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr.is_null() || ptr as isize == -1 {
+            return Err(StoreError::Io(std::io::Error::last_os_error()));
+        }
+        Ok(Mapping::Mmap { ptr, len })
+    }
+
+    #[cfg(not(unix))]
+    fn map_file(file: &std::fs::File, len: usize) -> Result<Mapping, StoreError> {
+        use std::io::Read;
+        let mut buf = Vec::with_capacity(len);
+        let mut f = file;
+        f.read_to_end(&mut buf)?;
+        Ok(Mapping::Owned(buf))
+    }
+
+    /// Validate an in-memory store image (fuzz tests, non-file sources).
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self, StoreError> {
+        if bytes.len() as u64 > MAX_STORE_BYTES {
+            return Err(StoreError::Oversized { len: bytes.len() as u64, max: MAX_STORE_BYTES });
+        }
+        Self::decode(Mapping::Owned(bytes))
+    }
+
+    fn decode(map: Mapping) -> Result<Self, StoreError> {
+        let bytes = map.as_bytes();
+        // Smallest conceivable store: header + 1-byte meta-len + 4-byte crc.
+        if bytes.len() < 11 {
+            return Err(StoreError::Truncated { need: 11, have: bytes.len() });
+        }
+        let magic = u32::from_be_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+        if magic != STORE_MAGIC {
+            return Err(StoreError::BadMagic { got: magic });
+        }
+        if bytes[4] != STORE_VERSION {
+            return Err(StoreError::BadVersion { got: bytes[4] });
+        }
+        if bytes[5] != KIND_DATASET {
+            return Err(StoreError::BadKind { got: bytes[5] });
+        }
+        // Whole-file CRC before semantic decoding: a flipped bit anywhere
+        // is caught here, so the field parsers below only ever see bytes
+        // the producer wrote.
+        let crc_at = bytes.len() - 4;
+        let want = crc32(&bytes[..crc_at]);
+        let got = u32::from_le_bytes([
+            bytes[crc_at],
+            bytes[crc_at + 1],
+            bytes[crc_at + 2],
+            bytes[crc_at + 3],
+        ]);
+        if want != got {
+            return Err(StoreError::BadCrc { want, got });
+        }
+
+        let mut c = Cursor::new(&bytes[6..crc_at]);
+        let meta_len = c.count(c.remaining(), "meta length exceeds file")?;
+        let meta = c.take(meta_len)?;
+        let meta_end = 6 + c.pos();
+
+        let mut m = Cursor::new(meta);
+        let dim = m.count(MAX_STORE_DIM, "store dim over cap")?;
+        let rows_train = m.count(MAX_STORE_ROWS, "train rows over cap")?;
+        let rows_test = m.count(MAX_STORE_ROWS, "test rows over cap")?;
+        let classes = m.count(MAX_STORE_CLASSES, "classes over cap")?;
+        let clients = m.count(MAX_STORE_CLIENTS, "clients over cap")?;
+        if dim == 0 {
+            return Err(StoreError::Malformed("dim must be >= 1"));
+        }
+        if rows_train == 0 || rows_test == 0 {
+            return Err(StoreError::Malformed("train and test splits must be nonempty"));
+        }
+        if classes < 2 {
+            return Err(StoreError::Malformed("need at least two classes"));
+        }
+        if clients == 0 {
+            return Err(StoreError::Malformed("need at least one client"));
+        }
+        let alpha = m.f64()?;
+        let seed = m.u64le()?;
+        if !(alpha.is_finite() && alpha > 0.0) {
+            return Err(StoreError::Malformed("manifest alpha must be finite and > 0"));
+        }
+        // Each shard length costs >= 1 manifest byte, so this bound makes
+        // the Vec allocation below proportional to bytes actually present.
+        if clients > m.remaining() {
+            return Err(StoreError::Malformed("client count exceeds manifest bytes"));
+        }
+        let mut ranges = Vec::with_capacity(clients);
+        let mut start = 0usize;
+        for _ in 0..clients {
+            let len = m.count(rows_train, "shard length exceeds train rows")?;
+            if len == 0 {
+                return Err(StoreError::Malformed("empty client shard in manifest"));
+            }
+            if len > rows_train - start {
+                return Err(StoreError::Malformed("manifest overruns train rows"));
+            }
+            ranges.push((start, len));
+            start += len;
+        }
+        if start != rows_train {
+            return Err(StoreError::Malformed("manifest does not cover all train rows"));
+        }
+        m.done()?;
+
+        // Cross-check the derived layout against the true byte length.
+        let feat_off = meta_end.next_multiple_of(FEATURE_ALIGN);
+        let rows = rows_train
+            .checked_add(rows_test)
+            .ok_or(StoreError::Malformed("row count overflow"))?;
+        let feat_bytes = rows
+            .checked_mul(dim)
+            .and_then(|v| v.checked_mul(4))
+            .ok_or(StoreError::Malformed("feature block overflow"))?;
+        let label_off = feat_off
+            .checked_add(feat_bytes)
+            .ok_or(StoreError::Malformed("feature block overflow"))?;
+        let total = label_off
+            .checked_add(rows * 4)
+            .and_then(|v| v.checked_add(4))
+            .ok_or(StoreError::Malformed("label block overflow"))?;
+        match total.cmp(&bytes.len()) {
+            std::cmp::Ordering::Greater => {
+                return Err(StoreError::Truncated { need: total, have: bytes.len() })
+            }
+            std::cmp::Ordering::Less => {
+                return Err(StoreError::Malformed("trailing bytes after label block"))
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        if bytes[meta_end..feat_off].iter().any(|&b| b != 0) {
+            return Err(StoreError::Malformed("nonzero padding before feature block"));
+        }
+        // Labels are validated here once so `labels()` below is infallible.
+        let labels = &bytes[label_off..label_off + rows * 4];
+        for chunk in labels.chunks_exact(4) {
+            let y = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]) as usize;
+            if y >= classes {
+                return Err(StoreError::Malformed("label out of class range"));
+            }
+        }
+
+        let content_hash = fingerprint_bytes(bytes);
+        Ok(ShardStore {
+            map: Arc::new(map),
+            dim,
+            rows_train,
+            rows_test,
+            classes,
+            alpha,
+            seed,
+            ranges,
+            feat_off,
+            label_off,
+            content_hash,
+        })
+    }
+
+    pub fn content_hash(&self) -> u64 {
+        self.content_hash
+    }
+
+    pub fn clients(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    pub fn info(&self) -> StoreInfo {
+        let min_shard = self.ranges.iter().map(|&(_, l)| l).min().unwrap_or(0);
+        let max_shard = self.ranges.iter().map(|&(_, l)| l).max().unwrap_or(0);
+        StoreInfo {
+            dim: self.dim,
+            rows_train: self.rows_train,
+            rows_test: self.rows_test,
+            classes: self.classes,
+            clients: self.ranges.len(),
+            alpha: self.alpha,
+            seed: self.seed,
+            file_bytes: self.map.as_bytes().len(),
+            content_hash: self.content_hash,
+            min_shard,
+            max_shard,
+        }
+    }
+
+    /// Features for rows `[row0, row0 + rows)` — zero-copy on
+    /// little-endian targets (the block is 4-byte aligned by
+    /// construction), an owned decode otherwise.
+    fn features(&self, row0: usize, rows: usize) -> super::Features {
+        let off = self.feat_off + row0 * self.dim * 4;
+        let len = rows * self.dim;
+        let base = self.map.as_bytes()[off..].as_ptr() as usize;
+        if cfg!(target_endian = "little") && base % std::mem::align_of::<f32>() == 0 {
+            return super::Features::Mapped(MappedSlice { map: Arc::clone(&self.map), off, len });
+        }
+        let bytes = &self.map.as_bytes()[off..off + len * 4];
+        let mut v = Vec::with_capacity(len);
+        for chunk in bytes.chunks_exact(4) {
+            v.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        super::Features::Owned(v)
+    }
+
+    fn labels(&self, row0: usize, rows: usize) -> Vec<usize> {
+        let off = self.label_off + row0 * 4;
+        let bytes = &self.map.as_bytes()[off..off + rows * 4];
+        bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
+            .collect()
+    }
+
+    /// The train split as a [`Dataset`] (features zero-copy where the
+    /// target allows).
+    pub fn train_dataset(&self) -> Dataset {
+        Dataset {
+            x: self.features(0, self.rows_train),
+            y: self.labels(0, self.rows_train),
+            dim: self.dim,
+            classes: self.classes,
+        }
+    }
+
+    /// The held-out test split.
+    pub fn test_dataset(&self) -> Dataset {
+        Dataset {
+            x: self.features(self.rows_train, self.rows_test),
+            y: self.labels(self.rows_train, self.rows_test),
+            dim: self.dim,
+            classes: self.classes,
+        }
+    }
+
+    /// The embedded partition as per-client contiguous row ranges.
+    pub fn federated(&self) -> FederatedDataset {
+        FederatedDataset::from_ranges(self.ranges.clone())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Writing.
+
+/// Encode a store image: `train` rows are regrouped by client following
+/// `fed`, which must cover every train row exactly once with nonempty
+/// shards (use [`super::DirichletPartitioner::partition_exact`]).
+pub fn encode_store(
+    train: &Dataset,
+    test: &Dataset,
+    fed: &FederatedDataset,
+    alpha: f64,
+    seed: u64,
+) -> Result<Vec<u8>, StoreError> {
+    if train.dim != test.dim || train.classes != test.classes {
+        return Err(StoreError::Malformed("train/test dim or classes mismatch"));
+    }
+    if train.dim == 0 || train.dim > MAX_STORE_DIM {
+        return Err(StoreError::Malformed("dim out of range"));
+    }
+    if train.is_empty() || test.is_empty() {
+        return Err(StoreError::Malformed("train and test splits must be nonempty"));
+    }
+    if train.len() > MAX_STORE_ROWS || test.len() > MAX_STORE_ROWS {
+        return Err(StoreError::Malformed("row count over cap"));
+    }
+    if train.classes < 2 || train.classes > MAX_STORE_CLASSES {
+        return Err(StoreError::Malformed("classes out of range"));
+    }
+    if fed.workers() == 0 || fed.workers() > MAX_STORE_CLIENTS {
+        return Err(StoreError::Malformed("client count out of range"));
+    }
+    if !(alpha.is_finite() && alpha > 0.0) {
+        return Err(StoreError::Malformed("manifest alpha must be finite and > 0"));
+    }
+    let mut seen = vec![false; train.len()];
+    for m in 0..fed.workers() {
+        if fed.shard_len(m) == 0 {
+            return Err(StoreError::Malformed("empty client shard in manifest"));
+        }
+        for i in fed.shard_indices(m) {
+            if i >= train.len() || seen[i] {
+                return Err(StoreError::Malformed(
+                    "manifest must cover each train row exactly once",
+                ));
+            }
+            seen[i] = true;
+        }
+    }
+    if !seen.iter().all(|&s| s) {
+        return Err(StoreError::Malformed("manifest must cover each train row exactly once"));
+    }
+
+    let mut meta = Vec::new();
+    push_varint(&mut meta, train.dim as u64);
+    push_varint(&mut meta, train.len() as u64);
+    push_varint(&mut meta, test.len() as u64);
+    push_varint(&mut meta, train.classes as u64);
+    push_varint(&mut meta, fed.workers() as u64);
+    meta.extend_from_slice(&alpha.to_le_bytes());
+    meta.extend_from_slice(&seed.to_le_bytes());
+    for m in 0..fed.workers() {
+        push_varint(&mut meta, fed.shard_len(m) as u64);
+    }
+
+    let rows = train.len() + test.len();
+    let mut out = Vec::new();
+    out.extend_from_slice(&STORE_MAGIC.to_be_bytes());
+    out.push(STORE_VERSION);
+    out.push(KIND_DATASET);
+    push_varint(&mut out, meta.len() as u64);
+    out.extend_from_slice(&meta);
+    let feat_off = out.len().next_multiple_of(FEATURE_ALIGN);
+    out.resize(feat_off, 0);
+    out.reserve(rows * train.dim * 4 + rows * 4 + 4);
+    for m in 0..fed.workers() {
+        for i in fed.shard_indices(m) {
+            for &v in train.row(i) {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    for i in 0..test.len() {
+        for &v in test.row(i) {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    for m in 0..fed.workers() {
+        for i in fed.shard_indices(m) {
+            out.extend_from_slice(&(train.y[i] as u32).to_le_bytes());
+        }
+    }
+    for &y in &test.y {
+        out.extend_from_slice(&(y as u32).to_le_bytes());
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    if out.len() as u64 > MAX_STORE_BYTES {
+        return Err(StoreError::Oversized { len: out.len() as u64, max: MAX_STORE_BYTES });
+    }
+    Ok(out)
+}
+
+/// Encode and atomically write a store (tmp + fsync + rename + parent
+/// fsync, the [`crate::snapshot`] discipline), returning its content
+/// hash.
+pub fn write_store(
+    path: &Path,
+    train: &Dataset,
+    test: &Dataset,
+    fed: &FederatedDataset,
+    alpha: f64,
+    seed: u64,
+) -> Result<u64, StoreError> {
+    let bytes = encode_store(train, test, fed, alpha, seed)?;
+    let hash = fingerprint_bytes(&bytes);
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(hash)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+    use crate::util::rng::Pcg64;
+
+    fn small_store_bytes() -> (Vec<u8>, crate::data::SyntheticTask) {
+        let task = SyntheticTask::generate(
+            SyntheticSpec { train: 96, test: 16, ..SyntheticSpec::fmnist_like().with_dim(12) },
+            7,
+        );
+        let part = DirichletPartitioner { alpha: 0.5, workers: 8 };
+        let fed = part.partition_exact(&task.train, &mut Pcg64::seed_from(3));
+        let bytes = encode_store(&task.train, &task.test, &fed, 0.5, 3).unwrap();
+        (bytes, task)
+    }
+
+    #[test]
+    fn roundtrip_preserves_rows_and_partition() {
+        let (bytes, task) = small_store_bytes();
+        let store = ShardStore::from_bytes(bytes).unwrap();
+        assert_eq!(store.dim(), task.train.dim);
+        assert_eq!(store.classes(), task.train.classes);
+        assert_eq!(store.clients(), 8);
+        let train = store.train_dataset();
+        let test = store.test_dataset();
+        assert_eq!(train.len(), task.train.len());
+        assert_eq!(test.len(), task.test.len());
+        // Test split is written in order; train rows are a permutation.
+        assert_eq!(test.x, task.test.x);
+        assert_eq!(test.y, task.test.y);
+        let fed = store.federated();
+        assert_eq!(fed.total(), task.train.len());
+        // Multiset of (row, label) pairs must survive the regrouping.
+        let mut got: Vec<(Vec<u32>, usize)> = (0..train.len())
+            .map(|i| (train.row(i).iter().map(|v| v.to_bits()).collect(), train.y[i]))
+            .collect();
+        let mut want: Vec<(Vec<u32>, usize)> = (0..task.train.len())
+            .map(|i| (task.train.row(i).iter().map(|v| v.to_bits()).collect(), task.train.y[i]))
+            .collect();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn open_is_zero_copy_and_matches_from_bytes() {
+        let (bytes, _) = small_store_bytes();
+        let dir = std::env::temp_dir().join(format!("sgds_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sgds");
+        std::fs::write(&path, &bytes).unwrap();
+        let a = ShardStore::open(&path).unwrap();
+        let b = ShardStore::from_bytes(bytes).unwrap();
+        assert_eq!(a.content_hash(), b.content_hash());
+        let ta = a.train_dataset();
+        let tb = b.train_dataset();
+        assert_eq!(ta.x, tb.x);
+        assert_eq!(ta.y, tb.y);
+        #[cfg(all(unix, target_endian = "little"))]
+        assert!(matches!(ta.x, crate::data::Features::Mapped(_)));
+        std::fs::remove_file(&path).unwrap();
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn write_store_is_atomic_and_hash_stable() {
+        let (bytes, task) = small_store_bytes();
+        let dir = std::env::temp_dir().join(format!("sgds_test_w_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.sgds");
+        let part = DirichletPartitioner { alpha: 0.5, workers: 8 };
+        let fed = part.partition_exact(&task.train, &mut Pcg64::seed_from(3));
+        let h = write_store(&path, &task.train, &task.test, &fed, 0.5, 3).unwrap();
+        assert!(!path.with_extension("sgds.tmp").exists(), "tmp file left behind");
+        let store = ShardStore::open(&path).unwrap();
+        assert_eq!(store.content_hash(), h);
+        assert_eq!(h, fingerprint_bytes(&bytes), "encoding must be deterministic");
+        std::fs::remove_file(&path).unwrap();
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn rejects_duplicating_partition() {
+        // The legacy partitioner may duplicate rows (it cycles pools);
+        // encode_store must refuse such a manifest.
+        let task = SyntheticTask::generate(
+            SyntheticSpec { train: 10, test: 4, ..SyntheticSpec::fmnist_like().with_dim(4) },
+            1,
+        );
+        let fed = FederatedDataset::from_shards(vec![vec![0, 1, 1], vec![2, 3]]);
+        let err = encode_store(&task.train, &task.test, &fed, 0.5, 1).unwrap_err();
+        assert!(matches!(err, StoreError::Malformed(_)), "{err}");
+    }
+
+    #[test]
+    fn version_bump_is_refused() {
+        let (mut bytes, _) = small_store_bytes();
+        bytes[4] = STORE_VERSION + 1;
+        let n = bytes.len();
+        let crc = crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        match ShardStore::from_bytes(bytes) {
+            Err(StoreError::BadVersion { got }) => assert_eq!(got, STORE_VERSION + 1),
+            other => panic!("expected BadVersion, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn bad_crc_is_refused() {
+        let (mut bytes, _) = small_store_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(matches!(ShardStore::from_bytes(bytes), Err(StoreError::BadCrc { .. })));
+    }
+}

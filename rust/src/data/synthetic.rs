@@ -136,7 +136,7 @@ impl SyntheticTask {
                     class
                 };
             }
-            Dataset { x, y, dim: spec.dim, classes: spec.classes }
+            Dataset { x: x.into(), y, dim: spec.dim, classes: spec.classes }
         };
         let train = make_split(spec.train, rng);
         let test = make_split(spec.test, rng);

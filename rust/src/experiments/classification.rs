@@ -75,6 +75,18 @@ pub fn build_model(kind: &ModelKind) -> Box<dyn crate::model::Model> {
 
 /// Run the full sweep a config describes.
 pub fn run_classification(cfg: &ExperimentConfig) -> ExperimentReport {
+    run_classification_with(cfg, &|seed| build_env(cfg, seed ^ 0xda7a))
+}
+
+/// [`run_classification`] with a caller-supplied environment builder
+/// (called once per seed with the run seed). The synthetic path folds the
+/// seed into the generator; the store-backed paper-parity runner plugs in
+/// [`ClassifierEnv::from_store`] here and ignores it — the dataset and
+/// partition are pinned by the `.sgds` file, only init/sampling re-roll.
+pub fn run_classification_with(
+    cfg: &ExperimentConfig,
+    build: &dyn Fn(u64) -> ClassifierEnv,
+) -> ExperimentReport {
     cfg.validate().unwrap_or_else(|e| panic!("invalid config '{}': {e}", cfg.name));
     let mut table = TablePrinter::new(
         format!(
@@ -112,7 +124,7 @@ pub fn run_classification(cfg: &ExperimentConfig) -> ExperimentReport {
             .unwrap_or(cfg.lr);
         let mut runs: Vec<RunHistory> = Vec::with_capacity(cfg.seeds.len());
         for &seed in &cfg.seeds {
-            let env = build_env(cfg, seed ^ 0xda7a);
+            let env = build(seed);
             if runs.is_empty() {
                 let rep = partition_report(&env.train, &env.fed);
                 hetero = rep.mean_max_fraction;

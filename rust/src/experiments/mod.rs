@@ -14,11 +14,15 @@
 
 pub mod ablations;
 pub mod classification;
+pub mod parity;
 mod presets;
 mod rosenbrock;
 pub mod theory;
 
-pub use classification::{build_env, run_classification, ExperimentReport};
+pub use classification::{
+    build_env, run_classification, run_classification_with, ExperimentReport,
+};
+pub use parity::{paper_reference, parity_config, retain_algorithms, run_parity, ParityOutcome};
 pub use presets::{
     attack_sweep_configs, fig3_config, table1_config, table2_config, table3_config,
     tables4_7_configs,

@@ -1,0 +1,188 @@
+//! Paper-parity runner: the accuracy-vs-communication experiments on
+//! **real datasets** streamed from an `.sgds` store, reported against the
+//! paper's published targets (EXPERIMENTS.md §Paper-parity keeps the
+//! running table; the CI `dataset-parity` job asserts the committed
+//! accuracy floor on Fashion-MNIST).
+//!
+//! The reproduction protocol per dataset is exactly the preset configs —
+//! Table 1 (Fashion-MNIST, α=0.1, M=100, 200 rounds, batch 128, constant
+//! LR), Table 2 (CIFAR-10, α=0.5, 20% participation, 3000 rounds,
+//! [`crate::optim::LrSchedule::paper_cifar10`]), Tables 4–7 (CIFAR-100,
+//! 5000 rounds, [`crate::optim::LrSchedule::paper_cifar100`]) — with the
+//! dataset, partition, and heterogeneity pinned by the store manifest
+//! rather than re-rolled per seed: only model init and batch sampling
+//! vary across seeds, matching how the paper re-runs on a fixed split.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::ClassifierEnv;
+use crate::data::ShardStore;
+use crate::experiments::classification::run_classification_with;
+use crate::experiments::{table1_config, table2_config, tables4_7_configs, ExperimentReport};
+use crate::metrics::TablePrinter;
+use crate::model::ModelKind;
+
+/// The paper's headline accuracy target for a dataset — the top target the
+/// preset configs commit to (Table 1 / Table 2 / Tables 4–7) — plus the
+/// table it comes from.
+pub fn paper_reference(dataset: &str) -> Option<(&'static str, f64)> {
+    match dataset {
+        "fmnist" => Some(("Table 1", 0.74)),
+        "cifar10" => Some(("Table 2", 0.74)),
+        "cifar100" => Some(("Tables 4-7", 0.40)),
+        _ => None,
+    }
+}
+
+/// The paper-scale protocol config for a dataset (roster, rounds, batch,
+/// LR schedule, targets). The caller may shrink rounds/seeds/roster for
+/// short-horizon CI runs; the dataset/partition fields are overridden by
+/// the store at run time.
+pub fn parity_config(dataset: &str) -> Result<ExperimentConfig, String> {
+    match dataset {
+        "fmnist" => Ok(table1_config(true)),
+        "cifar10" => Ok(table2_config(true)),
+        "cifar100" => Ok(tables4_7_configs(true, &[0.3]).remove(0)),
+        other => Err(format!("unknown parity dataset '{other}' (fmnist|cifar10|cifar100)")),
+    }
+}
+
+/// Keep only the roster rows whose label contains one of `patterns`
+/// (case-sensitive substring match) — how CI trims the 8-row paper roster
+/// to a short-horizon subset. Errors if nothing survives.
+pub fn retain_algorithms(cfg: &mut ExperimentConfig, patterns: &[&str]) -> Result<(), String> {
+    let keep: Vec<bool> = cfg
+        .algorithms
+        .iter()
+        .map(|a| {
+            let label = a.label();
+            patterns.iter().any(|p| label.contains(p))
+        })
+        .collect();
+    if !keep.iter().any(|&k| k) {
+        return Err(format!("no roster row matches {patterns:?}"));
+    }
+    let mut it = keep.iter();
+    cfg.algorithms.retain(|_| *it.next().unwrap());
+    if !cfg.lr_overrides.is_empty() {
+        let mut it = keep.iter();
+        cfg.lr_overrides.retain(|_| *it.next().unwrap());
+    }
+    Ok(())
+}
+
+/// Outcome of a parity run: the standard sweep report plus the
+/// ours-vs-paper table and the best final accuracy (what the CI floor
+/// gates on).
+pub struct ParityOutcome {
+    pub report: ExperimentReport,
+    /// Rendered "ours vs paper" table for EXPERIMENTS.md.
+    pub parity_table: String,
+    /// Best final accuracy across roster rows (mean over seeds).
+    pub best_acc: f64,
+}
+
+/// Run the parity sweep for `cfg` over an open store. `hidden` selects the
+/// model: empty ⇒ linear softmax, otherwise an MLP with those widths
+/// (input/class dims always come from the store).
+pub fn run_parity(
+    store: &ShardStore,
+    mut cfg: ExperimentConfig,
+    dataset: &str,
+    hidden: &[usize],
+) -> ParityOutcome {
+    let info = store.info();
+    cfg.model = if hidden.is_empty() {
+        ModelKind::Linear { inputs: store.dim(), classes: store.classes() }
+    } else {
+        ModelKind::Mlp { inputs: store.dim(), hidden: hidden.to_vec(), classes: store.classes() }
+    };
+    // Partition fields travel with the store; mirror them into the config
+    // so titles and attack-plan population sizes agree with the env.
+    cfg.alpha = info.alpha;
+    cfg.workers = info.clients;
+    let model = cfg.model.clone();
+    let batch = cfg.batch;
+    let report = run_classification_with(&cfg, &|_seed| {
+        ClassifierEnv::from_store(store, model.build(), batch)
+    });
+
+    let (table_name, target) = paper_reference(dataset).unwrap_or(("?", f64::NAN));
+    let mut table = TablePrinter::new(
+        format!(
+            "Paper parity: {dataset} ({} clients, alpha={}, {} rounds, batch {})",
+            info.clients, info.alpha, cfg.rounds, cfg.batch
+        ),
+        &["Algorithm", "Final acc (ours)", &format!("Paper target ({table_name})"), "Delta"],
+    );
+    let mut best_acc = 0.0f64;
+    for s in &report.summaries {
+        best_acc = best_acc.max(s.final_acc_mean);
+        table.add_row(vec![
+            s.label.clone(),
+            format!("{:.4}", s.final_acc_mean),
+            format!("{target:.2}"),
+            format!("{:+.4}", s.final_acc_mean - target),
+        ]);
+    }
+    ParityOutcome { report, parity_table: table.render(), best_acc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{write_store, DirichletPartitioner, SyntheticSpec, SyntheticTask};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn parity_configs_resolve_and_validate() {
+        for d in ["fmnist", "cifar10", "cifar100"] {
+            let cfg = parity_config(d).unwrap();
+            cfg.validate().unwrap();
+            assert!(paper_reference(d).is_some());
+        }
+        assert!(parity_config("mnist-ception").is_err());
+    }
+
+    #[test]
+    fn retain_algorithms_trims_roster_and_lrs() {
+        let mut cfg = parity_config("fmnist").unwrap();
+        let before = cfg.algorithms.len();
+        retain_algorithms(&mut cfg, &["sparsignSGD"]).unwrap();
+        assert!(!cfg.algorithms.is_empty() && cfg.algorithms.len() < before);
+        assert_eq!(cfg.lr_overrides.len(), cfg.algorithms.len());
+        cfg.validate().unwrap();
+        assert!(retain_algorithms(&mut cfg, &["no-such-algorithm"]).is_err());
+    }
+
+    #[test]
+    fn short_horizon_parity_learns_on_a_store() {
+        // End-to-end: synthetic task → .sgds → store-backed parity sweep.
+        let task = SyntheticTask::generate(
+            SyntheticSpec { train: 600, test: 120, ..SyntheticSpec::fmnist_like().with_dim(24) },
+            13,
+        );
+        let fed = DirichletPartitioner { alpha: 0.5, workers: 12 }
+            .partition_exact(&task.train, &mut Pcg64::seed_from(2));
+        let dir = std::env::temp_dir().join(format!("sgds_parity_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.sgds");
+        write_store(&path, &task.train, &task.test, &fed, 0.5, 2).unwrap();
+        let store = ShardStore::open(&path).unwrap();
+
+        let mut cfg = parity_config("fmnist").unwrap();
+        retain_algorithms(&mut cfg, &["sparsignSGD(B=1)"]).unwrap();
+        cfg.rounds = 60;
+        cfg.eval_every = 10;
+        cfg.seeds = vec![0];
+        cfg.batch = 16;
+        let out = run_parity(&store, cfg, "fmnist", &[]);
+        assert!(out.parity_table.contains("Paper target"));
+        assert!(
+            out.best_acc > 0.25,
+            "store-backed run should beat 10-class chance: {}",
+            out.best_acc
+        );
+        std::fs::remove_file(&path).unwrap();
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

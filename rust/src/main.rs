@@ -6,6 +6,14 @@
 //! sparsignd fig1      [--rounds N] [--lr X] [--csv out.csv]
 //! sparsignd fig2      [--rounds N] [--lr X] [--csv out.csv]
 //! sparsignd theory    [--trials N]
+//! sparsignd dataset   convert --out F.sgds --clients M --alpha A --seed S
+//!                     (--synthetic fmnist|cifar10|cifar100 [--scale F] [--dim D]
+//!                      | --format idx --images F --labels F --test-images F --test-labels F
+//!                      | --format cifar10|cifar100 --bins f1,f2,… --test-bins f)
+//! sparsignd dataset   info --data F.sgds
+//! sparsignd parity    --data F.sgds --dataset fmnist|cifar10|cifar100 [--rounds N]
+//!                     [--algs substr,…] [--hidden h1,h2] [--trials N] [--min-acc X]
+//!                     [--csv out.csv]
 //! sparsignd serve     [--addr EP] [--clients M] [--rounds N] [--deadline-ms D]
 //!                     [--shards N] [--snapshot F [--snapshot-every K]] [--resume F]
 //!                     [--drain-after N] [--endpoint-file F] [--history-json F]
@@ -28,7 +36,10 @@ use sparsignd::coordinator::{
     Algorithm, AggregationRule, AttackPlan, ClassifierEnv, GradientSource, RunHistory,
     TrainingRun,
 };
-use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+use sparsignd::data::{
+    load_cifar_binary, load_idx_pair, write_store, Dataset, DirichletPartitioner, ShardStore,
+    SyntheticSpec, SyntheticTask,
+};
 use sparsignd::experiments;
 use sparsignd::metrics::write_csv;
 use sparsignd::model::ModelKind;
@@ -45,6 +56,8 @@ fn main() {
         Some("fig1") => cmd_fig(&args, true),
         Some("fig2") => cmd_fig(&args, false),
         Some("theory") => cmd_theory(&args),
+        Some("dataset") => cmd_dataset(&args),
+        Some("parity") => cmd_parity(&args),
         Some("serve") => cmd_serve(&args),
         Some("shard") => cmd_shard(&args),
         Some("fleet") => cmd_fleet(&args),
@@ -75,6 +88,14 @@ fn usage() {
          \x20 fig1       Rosenbrock wrong-aggregation figure (sign vs sparsign)\n\
          \x20 fig2       Rosenbrock worker-sampling figure\n\
          \x20 theory     Theorem 1 Monte-Carlo bound check\n\
+         \x20 dataset    convert — build a .sgds store (mmap-ready, CRC-guarded,\n\
+         \x20            embedded Dirichlet(α) partition) from --synthetic\n\
+         \x20            fmnist|cifar10|cifar100 or --format idx|cifar10|cifar100\n\
+         \x20            downloads; info — print an existing store's header\n\
+         \x20 parity     paper-parity accuracy-vs-communication sweep streamed\n\
+         \x20            from --data F.sgds (--dataset picks the paper protocol,\n\
+         \x20            --algs trims the roster, --hidden h1,h2 swaps in an MLP,\n\
+         \x20            --min-acc X exits 1 below the accuracy floor)\n\
          \x20 serve      run the federation coordinator on a TCP/UDS endpoint\n\
          \x20            (--shards N adds in-process aggregator shards, endpoint\n\
          \x20            file gains one shard line each; --snapshot/--resume/\n\
@@ -98,13 +119,18 @@ fn usage() {
          \x20            uninterrupted reference run of the same flags\n\
          \x20 benchdiff  diff a fresh BENCH_*.json against the committed\n\
          \x20            baseline; exit 1 on >tolerance throughput regression\n\
-         \x20 artifacts  list AOT artifacts + staleness"
+         \x20 artifacts  list AOT artifacts + staleness\n\
+         \n\
+         train/serve/fleet/shard/soak also accept --data F.sgds: the run streams\n\
+         the store's dataset and embedded partition instead of regenerating a\n\
+         synthetic task (--dim/--classes/--alpha are then pinned by the store;\n\
+         --hidden h1,h2 swaps the linear model for an MLP)"
     );
 }
 
 fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &ArgMap) -> Result<(), String> {
     for (k, v) in args.flag_pairs() {
-        if matches!(k, "preset" | "only" | "csv" | "trials" | "config") {
+        if matches!(k, "preset" | "only" | "csv" | "trials" | "config" | "data" | "hidden") {
             continue; // launcher-level flags
         }
         cfg.apply_override(k, v)?;
@@ -131,7 +157,35 @@ fn cmd_train(args: &ArgMap) -> i32 {
         eprintln!("{e}");
         return 2;
     }
-    let report = experiments::run_classification(&cfg);
+    let report = if let Some(path) = args.get_str("data") {
+        // Store-backed run: the dataset, partition and heterogeneity are
+        // pinned by the .sgds file; only model init and batch sampling
+        // vary across seeds.
+        let store = match ShardStore::open(std::path::Path::new(path)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("--data {path}: {e}");
+                return 2;
+            }
+        };
+        let hidden = match args.get_str("hidden").map(parse_hidden).transpose() {
+            Ok(h) => h.unwrap_or_default(),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        cfg.model = store_model(&store, hidden);
+        cfg.alpha = store.info().alpha;
+        cfg.workers = store.clients();
+        let model = cfg.model.clone();
+        let batch = cfg.batch;
+        experiments::run_classification_with(&cfg, &|_seed| {
+            ClassifierEnv::from_store(&store, model.build(), batch)
+        })
+    } else {
+        experiments::run_classification(&cfg)
+    };
     println!("{}", report.table());
     println!(
         "partition skew (mean max class fraction): {:.3}",
@@ -251,9 +305,230 @@ fn cmd_theory(args: &ArgMap) -> i32 {
     }
 }
 
+/// Parse `--hidden h1,h2,…` into MLP layer widths.
+fn parse_hidden(spec: &str) -> Result<Vec<usize>, String> {
+    spec.split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().map_err(|_| format!("--hidden: bad width '{t}'")))
+        .collect()
+}
+
+/// Model for a store-backed run: linear softmax unless `--hidden` widths
+/// were given (input/class dims always come from the store).
+fn store_model(store: &ShardStore, hidden: Vec<usize>) -> ModelKind {
+    if hidden.is_empty() {
+        ModelKind::Linear { inputs: store.dim(), classes: store.classes() }
+    } else {
+        ModelKind::Mlp { inputs: store.dim(), hidden, classes: store.classes() }
+    }
+}
+
+/// `dataset convert|info` — build or inspect an `.sgds` store.
+fn cmd_dataset(args: &ArgMap) -> i32 {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") => {
+            let Some(path) = args.get_str("data") else {
+                eprintln!("usage: dataset info --data F.sgds");
+                return 2;
+            };
+            match ShardStore::open(std::path::Path::new(path)) {
+                Ok(store) => {
+                    println!("{path}: {}", store.info().summary());
+                    0
+                }
+                Err(e) => {
+                    eprintln!("{path}: {e}");
+                    1
+                }
+            }
+        }
+        Some("convert") => cmd_dataset_convert(args),
+        _ => {
+            eprintln!("usage: dataset convert|info … (run `sparsignd` for the flag list)");
+            2
+        }
+    }
+}
+
+/// Load the (train, test) pair a `dataset convert` invocation describes.
+fn convert_sources(args: &ArgMap) -> Result<(Dataset, Dataset), String> {
+    if let Some(name) = args.get_str("synthetic") {
+        let mut spec = match name {
+            "fmnist" => SyntheticSpec::fmnist_like(),
+            "cifar10" => SyntheticSpec::cifar10_like(),
+            "cifar100" => SyntheticSpec::cifar100_like(),
+            other => {
+                return Err(format!("unknown --synthetic '{other}' (fmnist|cifar10|cifar100)"))
+            }
+        };
+        spec = spec.scaled(args.get::<f64>("scale", 1.0));
+        if let Some(dim) = args.get_str("dim") {
+            spec = spec.with_dim(dim.parse().map_err(|_| format!("--dim: bad value '{dim}'"))?);
+        }
+        // Same seed-salt convention as the launcher's synthetic path.
+        let task = SyntheticTask::generate(spec, args.get::<u64>("seed", 7) ^ 0x5e7);
+        return Ok((task.train, task.test));
+    }
+    let need = |k: &str| args.get_str(k).ok_or_else(|| format!("missing --{k}"));
+    match args.str_or("format", "") {
+        "idx" => {
+            let classes = args.get::<usize>("classes", 10);
+            let pair = |img: &str, lbl: &str| -> Result<Dataset, String> {
+                load_idx_pair(std::path::Path::new(img), std::path::Path::new(lbl), classes)
+                    .map_err(|e| format!("{img}: {e}"))
+            };
+            let train = pair(need("images")?, need("labels")?)?;
+            let test = pair(need("test-images")?, need("test-labels")?)?;
+            Ok((train, test))
+        }
+        fmt @ ("cifar10" | "cifar100") => {
+            let (classes, label_bytes) = if fmt == "cifar10" { (10, 1) } else { (100, 2) };
+            let load = |spec: &str, tag: &str| -> Result<Dataset, String> {
+                let paths: Vec<std::path::PathBuf> = spec
+                    .split(',')
+                    .map(|s| s.trim())
+                    .filter(|s| !s.is_empty())
+                    .map(std::path::PathBuf::from)
+                    .collect();
+                let refs: Vec<&std::path::Path> = paths.iter().map(|p| p.as_path()).collect();
+                load_cifar_binary(&refs, classes, label_bytes).map_err(|e| format!("{tag}: {e}"))
+            };
+            let train = load(need("bins")?, "train bins")?;
+            let test = load(need("test-bins")?, "test bins")?;
+            Ok((train, test))
+        }
+        "" => Err("need --synthetic NAME or --format idx|cifar10|cifar100".into()),
+        other => Err(format!("unknown --format '{other}'")),
+    }
+}
+
+fn cmd_dataset_convert(args: &ArgMap) -> i32 {
+    let Some(out) = args.get_str("out") else {
+        eprintln!("dataset convert needs --out F.sgds");
+        return 2;
+    };
+    let clients = args.get::<usize>("clients", 100);
+    let alpha = args.get::<f64>("alpha", 0.5);
+    let seed = args.get::<u64>("seed", 7);
+    if clients == 0 {
+        eprintln!("--clients must be positive");
+        return 2;
+    }
+    let (train, test) = match convert_sources(args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if train.len() < clients {
+        eprintln!("{} train rows cannot give every one of {clients} clients data", train.len());
+        return 2;
+    }
+    // `partition_exact` (not `partition`): a store is a long-lived
+    // artifact, so every client shard is guaranteed non-empty.
+    let mut rng = Pcg64::seed_from(seed ^ 0x9a57);
+    let fed = DirichletPartitioner { alpha, workers: clients }.partition_exact(&train, &mut rng);
+    match write_store(std::path::Path::new(out), &train, &test, &fed, alpha, seed) {
+        Ok(_hash) => match ShardStore::open(std::path::Path::new(out)) {
+            Ok(store) => {
+                println!("wrote {out}: {}", store.info().summary());
+                0
+            }
+            Err(e) => {
+                eprintln!("reopen {out}: {e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("write {out}: {e}");
+            1
+        }
+    }
+}
+
+/// `parity` — the paper-parity sweep over a streamed `.sgds` store.
+fn cmd_parity(args: &ArgMap) -> i32 {
+    let Some(path) = args.get_str("data") else {
+        eprintln!("parity needs --data F.sgds (build one with `dataset convert`)");
+        return 2;
+    };
+    let dataset = args.str_or("dataset", "fmnist");
+    let store = match ShardStore::open(std::path::Path::new(path)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("--data {path}: {e}");
+            return 2;
+        }
+    };
+    let mut cfg = match experiments::parity_config(dataset) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if let Some(spec) = args.get_str("algs") {
+        let pats: Vec<&str> = spec.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+        if let Err(e) = experiments::retain_algorithms(&mut cfg, &pats) {
+            eprintln!("--algs: {e}");
+            return 2;
+        }
+    }
+    if args.has("rounds") {
+        cfg.rounds = args.get::<usize>("rounds", cfg.rounds);
+    }
+    if args.has("batch") {
+        cfg.batch = args.get::<usize>("batch", cfg.batch);
+    }
+    if args.has("eval-every") {
+        cfg.eval_every = args.get::<usize>("eval-every", cfg.eval_every);
+    }
+    if args.has("trials") {
+        let trials = args.get::<usize>("trials", cfg.seeds.len()).max(1);
+        cfg.seeds = (0..trials as u64).collect();
+    }
+    let hidden = match args.get_str("hidden").map(parse_hidden).transpose() {
+        Ok(h) => h.unwrap_or_default(),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let out = experiments::run_parity(&store, cfg, dataset, &hidden);
+    println!("{}", out.report.table());
+    println!("{}", out.parity_table);
+    if let Some(csv) = args.get_str("csv") {
+        let mut rows = Vec::new();
+        for (label, series) in &out.report.series {
+            for (round, acc, bits) in series {
+                rows.push(vec![
+                    label.clone(),
+                    round.to_string(),
+                    format!("{acc:.6}"),
+                    format!("{bits:.0}"),
+                ]);
+            }
+        }
+        let headers = ["algorithm", "round", "acc", "cum_uplink_bits"];
+        if let Err(e) = write_csv(csv, &headers, &rows) {
+            eprintln!("csv {csv}: {e}");
+            return 1;
+        }
+        println!("wrote {csv}");
+    }
+    let floor = args.get::<f64>("min-acc", 0.0);
+    if out.best_acc < floor {
+        eprintln!("best final accuracy {:.4} is below --min-acc {floor}", out.best_acc);
+        return 1;
+    }
+    0
+}
+
 /// Shared `serve`/`fleet` run shape: both sides of a distributed run
 /// must build it from the same flags (the dataset, partition and init
-/// are all derived from `--seed`).
+/// are all derived from `--seed`, or pinned by a shared `--data` store).
 struct NetSetup {
     env: ClassifierEnv,
     run: TrainingRun,
@@ -293,28 +568,58 @@ fn net_setup(args: &ArgMap) -> Result<NetSetup, String> {
         other => return Err(format!("unknown --aggregation '{other}'")),
     };
 
-    let task = SyntheticTask::generate(
-        SyntheticSpec {
-            dim,
-            classes,
-            modes: 1,
-            separation: 1.8,
-            noise: 0.25,
-            label_noise: 0.0,
-            train: (clients * batch * 4).max(512),
-            test: (clients * batch).max(256),
-        },
-        seed ^ 0x5e7,
-    );
-    let mut rng = Pcg64::seed_from(seed ^ 0x9a57);
-    let fed = DirichletPartitioner { alpha, workers: clients }.partition(&task.train, &mut rng);
-    let env = ClassifierEnv::new(
-        ModelKind::Linear { inputs: dim, classes }.build(),
-        task.train,
-        task.test,
-        fed,
-        batch,
-    );
+    let env = if let Some(path) = args.get_str("data") {
+        // Store-backed run: the dataset and partition are pinned by the
+        // .sgds file, whose content hash lands in the environment
+        // fingerprint — a fleet holding a different store (different
+        // download, different --alpha conversion) is refused at
+        // rendezvous instead of silently training on drifted data.
+        for k in ["dim", "classes", "alpha"] {
+            if args.has(k) {
+                return Err(format!(
+                    "--{k} conflicts with --data (the store pins the dataset and partition)"
+                ));
+            }
+        }
+        let store = ShardStore::open(std::path::Path::new(path))
+            .map_err(|e| format!("--data {path}: {e}"))?;
+        if args.has("clients") && clients != store.clients() {
+            return Err(format!(
+                "--clients {clients} disagrees with the store's {} client shards \
+                 (drop the flag or rebuild the store)",
+                store.clients()
+            ));
+        }
+        let hidden = args.get_str("hidden").map(parse_hidden).transpose()?.unwrap_or_default();
+        let model = store_model(&store, hidden);
+        ClassifierEnv::from_store(&store, model.build(), batch)
+    } else {
+        let task = SyntheticTask::generate(
+            SyntheticSpec {
+                dim,
+                classes,
+                modes: 1,
+                separation: 1.8,
+                noise: 0.25,
+                label_noise: 0.0,
+                train: (clients * batch * 4).max(512),
+                test: (clients * batch).max(256),
+            },
+            seed ^ 0x5e7,
+        );
+        let mut rng = Pcg64::seed_from(seed ^ 0x9a57);
+        let fed = DirichletPartitioner { alpha, workers: clients }.partition(&task.train, &mut rng);
+        ClassifierEnv::new(
+            ModelKind::Linear { inputs: dim, classes }.build(),
+            task.train,
+            task.test,
+            fed,
+            batch,
+        )
+    };
+    // The attack plan's population is the served cohort — for a store
+    // run that is the store's client count, not the --clients default.
+    let clients = env.fed.workers();
     let mut init_rng = Pcg64::seed_from(seed ^ 0x1417);
     let init = env.init_params(&mut init_rng);
 
@@ -984,6 +1289,8 @@ fn cmd_soak(args: &ArgMap) -> i32 {
         "selection",
         "compressor",
         "aggregation",
+        "data",
+        "hidden",
     ] {
         if let Some(v) = args.get_str(key) {
             opts.pass.push((key.to_string(), v.to_string()));
@@ -1099,6 +1406,8 @@ const GATED_KEYS: &[&str] = &[
     "wire_encode_frames_per_sec",
     "wire_decode_frames_per_sec",
     "shard_rounds_per_sec",
+    "data_store_rows_per_sec",
+    "store_shard_rounds_per_sec",
 ];
 
 fn cmd_benchdiff(args: &ArgMap) -> i32 {

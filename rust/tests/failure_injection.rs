@@ -21,7 +21,7 @@ fn tiny_dataset(n: usize) -> Dataset {
     let mut x = vec![0.0f32; n * dim];
     rng.fill_normal(&mut x, 0.0, 1.0);
     let y: Vec<usize> = (0..n).map(|i| i % 2).collect();
-    Dataset { x, y, dim, classes: 2 }
+    Dataset { x: x.into(), y, dim, classes: 2 }
 }
 
 fn tiny_env() -> ClassifierEnv {
@@ -121,8 +121,8 @@ fn zero_gradient_rounds_are_stable() {
     let n = 32;
     let x = vec![0.0f32; n * 4];
     let y = vec![0usize; n];
-    let data = Dataset { x, y, dim: 4, classes: 2 };
-    let fed = FederatedDataset { shards: vec![(0..n).collect(); 2] };
+    let data = Dataset { x: x.into(), y, dim: 4, classes: 2 };
+    let fed = FederatedDataset::from_shards(vec![(0..n).collect(); 2]);
     let env = ClassifierEnv::new(
         ModelKind::Linear { inputs: 4, classes: 2 }.build(),
         data.clone(),
@@ -149,7 +149,7 @@ fn zero_gradient_rounds_are_stable() {
 #[test]
 fn single_worker_single_example_trains() {
     let data = tiny_dataset(1);
-    let fed = FederatedDataset { shards: vec![vec![0]] };
+    let fed = FederatedDataset::from_shards(vec![vec![0]]);
     let env = ClassifierEnv::new(
         ModelKind::Linear { inputs: 4, classes: 2 }.build(),
         data.clone(),

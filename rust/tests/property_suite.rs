@@ -914,3 +914,244 @@ fn wire_hostile_dims_never_allocate() {
     let err = read.unwrap_err();
     assert!(matches!(err, NetError::Wire(WireError::Oversized { .. })), "{err}");
 }
+
+// ---------------------------------------------------------------------
+// Store-loader hardening (DESIGN.md §16): `.sgds` images face the same
+// hostility battery as the wire and snapshot codecs — random corruption,
+// truncation, and forged-but-checksummed headers all land on typed
+// `StoreError`s, with caps enforced before the allocations they bound.
+// ---------------------------------------------------------------------
+
+use sparsignd::data::{
+    encode_store, Dataset, DirichletPartitioner, FederatedDataset, ShardStore, StoreError,
+    SyntheticSpec, SyntheticTask, STORE_VERSION,
+};
+
+/// Small but fully populated store image (multi-client manifest, distinct
+/// train/test splits) for the corruption battery.
+fn small_store_image(seed: u64) -> Vec<u8> {
+    let task = SyntheticTask::generate(
+        SyntheticSpec { train: 60, test: 12, ..SyntheticSpec::fmnist_like().with_dim(6) },
+        seed,
+    );
+    let fed = DirichletPartitioner { alpha: 0.5, workers: 5 }
+        .partition_exact(&task.train, &mut Pcg64::seed_from(seed ^ 0x51));
+    encode_store(&task.train, &task.test, &fed, 0.5, seed).unwrap()
+}
+
+/// Independent re-encoding of the SGDS v1 grammar (DESIGN.md §16):
+/// header, varint meta with an explicitly forgeable client count, the
+/// 64-byte-aligned feature block, labels, and a whole-file CRC.
+/// Deliberately not built on `encode_store`, so the hostile cases below
+/// can violate every cross-field invariant while still carrying a valid
+/// checksum — proving the semantic validators, not just the CRC, reject
+/// them.
+#[derive(Clone, Copy)]
+struct Forge<'a> {
+    dim: u64,
+    rows_train: u64,
+    rows_test: u64,
+    classes: u64,
+    declared_clients: u64,
+    shard_lens: &'a [u64],
+    alpha: f64,
+    feat: &'a [f32],
+    labels: &'a [u32],
+}
+
+impl Forge<'_> {
+    fn build(&self) -> Vec<u8> {
+        let mut meta = Vec::new();
+        for v in [self.dim, self.rows_train, self.rows_test, self.classes, self.declared_clients] {
+            wire::push_varint(&mut meta, v);
+        }
+        meta.extend_from_slice(&self.alpha.to_le_bytes());
+        meta.extend_from_slice(&9u64.to_le_bytes()); // manifest seed
+        for &l in self.shard_lens {
+            wire::push_varint(&mut meta, l);
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(b"SGDS");
+        out.push(STORE_VERSION);
+        out.push(1); // kind: dense f32 dataset
+        wire::push_varint(&mut out, meta.len() as u64);
+        out.extend_from_slice(&meta);
+        let feat_off = out.len().next_multiple_of(64);
+        out.resize(feat_off, 0);
+        for &v in self.feat {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for &y in self.labels {
+            out.extend_from_slice(&y.to_le_bytes());
+        }
+        seal(&mut out);
+        out
+    }
+}
+
+/// Append a fresh whole-file CRC — so tampered images decode far enough
+/// to reach the semantic validators instead of dying at the checksum.
+fn seal(out: &mut Vec<u8>) {
+    let crc = wire::crc32(out);
+    out.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// A consistent four-row, two-client image every hostile case perturbs.
+fn forge_base() -> Forge<'static> {
+    Forge {
+        dim: 2,
+        rows_train: 4,
+        rows_test: 2,
+        classes: 2,
+        declared_clients: 2,
+        shard_lens: &[2, 2],
+        alpha: 0.5,
+        feat: &[1.0, -2.0, 0.5, 3.0, 0.0, -1.5, 2.25, 4.0, 0.25, -0.75, 1.5, 0.125],
+        labels: &[0, 1, 1, 0, 1, 0],
+    }
+}
+
+/// Golden layout pin for store version 1: an independent re-encoding of
+/// the grammar must byte-match `encode_store` for a fixed dataset. Any
+/// layout change breaks this test, forcing a STORE_VERSION bump (and a
+/// new golden) rather than a silent format drift.
+#[test]
+fn store_v1_golden_layout() {
+    let train = Dataset {
+        x: vec![1.0, -2.0, 0.5, 3.0, 0.0, -1.5, 2.25, 4.0].into(),
+        y: vec![0, 1, 1, 0],
+        dim: 2,
+        classes: 2,
+    };
+    let test = Dataset {
+        x: vec![0.25, -0.75, 1.5, 0.125].into(),
+        y: vec![1, 0],
+        dim: 2,
+        classes: 2,
+    };
+    let fed = FederatedDataset::from_ranges(vec![(0, 2), (2, 2)]);
+    let got = encode_store(&train, &test, &fed, 0.5, 9).unwrap();
+    // Ranges (0,2),(2,2) regroup the train rows in identity order; the
+    // test rows and all labels follow in the same order — exactly the
+    // flat feat/labels in `forge_base`.
+    let want = forge_base().build();
+    assert_eq!(got, want, "store v1 layout drifted — bump STORE_VERSION");
+    let store = ShardStore::from_bytes(want).expect("golden image decodes");
+    assert_eq!((store.dim(), store.classes(), store.clients()), (2, 2, 2));
+}
+
+#[test]
+fn prop_store_single_byte_mutations_yield_typed_errors() {
+    let image = small_store_image(0x190);
+    check(
+        cfg(96, 0x191),
+        |rng| (rng.index(image.len()), 1 + rng.index(255) as u8),
+        |&(at, flip)| {
+            let mut bad = image.clone();
+            bad[at] ^= flip;
+            // The first six bytes land on BadMagic/BadVersion/BadKind;
+            // everywhere else the whole-file CRC — checked before any
+            // field parsing — reads as BadCrc. Nothing ever decodes.
+            match ShardStore::from_bytes(bad) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("mutation at {at} (^{flip:#x}) decoded")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_store_truncations_yield_typed_errors() {
+    let image = small_store_image(0x192);
+    check(
+        cfg(64, 0x193),
+        |rng| rng.index(image.len()),
+        |&cut| match ShardStore::from_bytes(image[..cut].to_vec()) {
+            Err(StoreError::Truncated { .. } | StoreError::BadCrc { .. }) => Ok(()),
+            Err(other) => Err(format!("cut {cut}: wrong error {other}")),
+            Ok(_) => Err(format!("cut {cut}: decoded a prefix")),
+        },
+    );
+}
+
+/// Forged headers with valid checksums: every cross-field invariant the
+/// decoder enforces must reject its violation as a typed `Malformed`,
+/// with caps checked before the manifest/feature work they bound.
+#[test]
+fn store_hostile_headers_yield_typed_errors() {
+    let base = forge_base();
+    match ShardStore::from_bytes(base.build()) {
+        Ok(_) => {}
+        Err(e) => panic!("baseline forge must load: {e}"),
+    }
+    let cases = [
+        ("dim over cap", Forge { dim: 1 << 40, ..base }.build()),
+        ("rows over cap", Forge { rows_train: 1 << 40, ..base }.build()),
+        ("zero dim", Forge { dim: 0, ..base }.build()),
+        ("one class", Forge { classes: 1, ..base }.build()),
+        ("clients exceed manifest bytes", Forge { declared_clients: 100_000, ..base }.build()),
+        ("empty client shard", Forge { shard_lens: &[0, 4], ..base }.build()),
+        ("manifest overruns train rows", Forge { shard_lens: &[3, 3], ..base }.build()),
+        ("manifest undercovers train rows", Forge { shard_lens: &[2, 1], ..base }.build()),
+        ("zero alpha", Forge { alpha: 0.0, ..base }.build()),
+        ("NaN alpha", Forge { alpha: f64::NAN, ..base }.build()),
+        ("label out of class range", Forge { labels: &[0, 1, 1, 0, 1, 9], ..base }.build()),
+    ];
+    for (what, bytes) in cases {
+        match ShardStore::from_bytes(bytes) {
+            Err(StoreError::Malformed(_)) => {}
+            other => panic!("{what}: expected Malformed, got {:?}", other.err()),
+        }
+    }
+}
+
+/// Well-formed headers whose declared layout disagrees with the bytes
+/// actually present — or that smuggle data into the alignment gap — are
+/// refused even under a correct checksum, and a layout whose declared
+/// feature block dwarfs the file costs only an O(manifest-bytes)
+/// allocation to refuse.
+#[test]
+fn store_layout_cross_checks_catch_padding_trailing_and_huge_declarations() {
+    let good = forge_base().build();
+
+    // Nonzero alignment padding (a covert channel): the meta block of
+    // this image ends at byte 30, so bytes 30..64 are the alignment gap.
+    let mut padded = good.clone();
+    padded.truncate(good.len() - 4);
+    assert_eq!(padded[40], 0, "expected alignment padding at byte 40");
+    padded[40] = 1;
+    seal(&mut padded);
+    match ShardStore::from_bytes(padded) {
+        Err(StoreError::Malformed(_)) => {}
+        other => panic!("padding: expected Malformed, got {:?}", other.err()),
+    }
+
+    // Bytes smuggled after the label block flunk the total-length check.
+    let mut trailing = good.clone();
+    trailing.truncate(good.len() - 4);
+    trailing.extend_from_slice(&[0u8; 4]);
+    seal(&mut trailing);
+    match ShardStore::from_bytes(trailing) {
+        Err(StoreError::Malformed(_)) => {}
+        other => panic!("trailing: expected Malformed, got {:?}", other.err()),
+    }
+
+    // Caps admit dim = 2^26 and rows = 2^28, but the implied ~2^56-byte
+    // feature block dwarfs the file: the length cross-check refuses it as
+    // Truncated without ever touching (or allocating) the declared size.
+    let huge = Forge {
+        dim: 1 << 26,
+        rows_train: 1 << 28,
+        rows_test: 1,
+        declared_clients: 1,
+        shard_lens: &[1 << 28],
+        feat: &[],
+        labels: &[],
+        ..forge_base()
+    }
+    .build();
+    match ShardStore::from_bytes(huge) {
+        Err(StoreError::Truncated { .. }) => {}
+        other => panic!("huge layout: expected Truncated, got {:?}", other.err()),
+    }
+}

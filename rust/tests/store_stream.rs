@@ -1,0 +1,132 @@
+//! Streaming data plane end-to-end (DESIGN.md §16): an `.sgds` store fed
+//! to both sides of a loopback federation must reproduce the in-process
+//! engine bit-identically (the acceptance contract behind `fleet
+//! --data`), and a fleet built from a drifted store must be refused at
+//! rendezvous by the coordinator's environment fingerprint check.
+
+use sparsignd::compressors::CompressorKind;
+use sparsignd::coordinator::{
+    AggregationRule, Algorithm, ClassifierEnv, GradientSource, RunHistory, TrainingRun,
+};
+use sparsignd::data::{write_store, DirichletPartitioner, ShardStore, SyntheticSpec, SyntheticTask};
+use sparsignd::model::ModelKind;
+use sparsignd::net::client::loopback_endpoint;
+use sparsignd::net::{run_loopback, FleetOptions, ServeOptions};
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
+
+fn store_path(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sgds_stream_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.sgds"))
+}
+
+/// Write a small store whose every byte is a function of `seed` (task
+/// generator and partition draw both derive from it).
+fn build_store(tag: &str, seed: u64) -> std::path::PathBuf {
+    let task = SyntheticTask::generate(
+        SyntheticSpec { train: 360, test: 90, ..SyntheticSpec::fmnist_like().with_dim(10) },
+        seed,
+    );
+    let fed = DirichletPartitioner { alpha: 0.5, workers: 9 }
+        .partition_exact(&task.train, &mut Pcg64::seed_from(seed ^ 0x9a57));
+    let path = store_path(tag);
+    write_store(&path, &task.train, &task.test, &fed, 0.5, seed).unwrap();
+    path
+}
+
+fn env_from(path: &std::path::Path, batch: usize) -> ClassifierEnv {
+    let store = ShardStore::open(path).unwrap();
+    let model = ModelKind::Linear { inputs: store.dim(), classes: store.classes() }.build();
+    ClassifierEnv::from_store(&store, model, batch)
+}
+
+fn assert_identical(a: &RunHistory, b: &RunHistory) {
+    assert_eq!(a.final_params, b.final_params, "final params");
+    assert_eq!(a.reports.len(), b.reports.len());
+    for (ra, rb) in a.reports.iter().zip(&b.reports) {
+        assert_eq!(ra.train_loss, rb.train_loss, "round {}", ra.round);
+        assert_eq!(ra.uplink_bits, rb.uplink_bits, "round {}", ra.round);
+        assert_eq!(ra.eval, rb.eval, "round {}", ra.round);
+    }
+    assert_eq!(a.ledger.total_uplink(), b.ledger.total_uplink());
+    assert_eq!(a.ledger.total_uplink_nnz(), b.ledger.total_uplink_nnz());
+}
+
+#[test]
+fn store_backed_loopback_matches_in_process_engine() {
+    let path = build_store("identity", 41);
+    let env = env_from(&path, 12);
+    // The store's feature matrix streams zero-copy on the platforms CI
+    // runs — the loopback run below exercises the mapped read path.
+    #[cfg(all(unix, target_endian = "little"))]
+    assert!(matches!(env.train.x, sparsignd::data::Features::Mapped(_)));
+
+    let mut run = TrainingRun::new(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sparsign { budget: 0.7 },
+            aggregation: AggregationRule::MajorityVote,
+        },
+        LrSchedule::Const { lr: 0.05 },
+        5,
+    );
+    run.eval_every = 2;
+    run.seed = 11;
+
+    let init = env.init_params(&mut Pcg64::seed_from(33));
+    let in_process = run.run(&env, init.clone(), &|p| env.evaluate(p));
+
+    // Armed environment check (as the serve CLI does) — the same store
+    // on both sides must pass it and reproduce the engine bit-for-bit.
+    let mut serve_opts = ServeOptions::new(loopback_endpoint(cfg!(unix)));
+    serve_opts.env_fingerprint = env.env_fingerprint();
+    let fleet_opts = FleetOptions { agents: 3, ..FleetOptions::default() };
+    let eval = |p: &[f32]| env.evaluate(p);
+    let (wire_hist, stats) =
+        run_loopback(&run, &env, init, &eval, serve_opts, &fleet_opts).expect("loopback run");
+    assert_eq!(stats.rejected, 0);
+    assert!(stats.updates_sent > 0);
+    assert_identical(&in_process, &wire_hist);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn drifted_store_changes_fingerprint_and_is_refused_at_rendezvous() {
+    let path_a = build_store("drift_a", 41);
+    let path_b = build_store("drift_b", 42);
+    let env_a = env_from(&path_a, 12);
+    let env_b = env_from(&path_b, 12);
+    // Identical shapes — only the sampled bytes and the embedded
+    // manifest differ, exactly the drift a run config cannot see.
+    assert_eq!(env_a.dim(), env_b.dim());
+    assert_eq!(env_a.workers(), env_b.workers());
+    assert_ne!(env_a.env_fingerprint(), env_b.env_fingerprint());
+    // Reloading the same file is stable; a batch change alone moves it.
+    assert_eq!(env_a.env_fingerprint(), env_from(&path_a, 12).env_fingerprint());
+    assert_ne!(env_a.env_fingerprint(), env_from(&path_a, 24).env_fingerprint());
+
+    // End-to-end: a coordinator armed with store A's environment hash
+    // hangs up on a fleet built from store B, and the run dies at
+    // rendezvous instead of silently diverging.
+    let mut run = TrainingRun::new(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        LrSchedule::Const { lr: 0.05 },
+        2,
+    );
+    run.seed = 11;
+    let init = env_b.init_params(&mut Pcg64::seed_from(33));
+    let mut serve_opts = ServeOptions::new(loopback_endpoint(cfg!(unix)));
+    serve_opts.env_fingerprint = env_a.env_fingerprint();
+    serve_opts.rendezvous_timeout = std::time::Duration::from_millis(1500);
+    let fleet_opts = FleetOptions { agents: 2, ..FleetOptions::default() };
+    let eval = |p: &[f32]| env_b.evaluate(p);
+    let out = run_loopback(&run, &env_b, init, &eval, serve_opts, &fleet_opts);
+    assert!(out.is_err(), "drifted fleet must not complete a run");
+
+    let _ = std::fs::remove_file(&path_a);
+    let _ = std::fs::remove_file(&path_b);
+}
