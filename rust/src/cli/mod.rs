@@ -4,6 +4,12 @@
 //! Grammar: `binary <subcommand> [positional…] [--flag value | --switch]`.
 //! A `--flag` followed by another `--…` token (or end of argv) is treated
 //! as a boolean switch.
+//!
+//! [`ArgMap`] is the untyped substrate; the per-subcommand option
+//! structs in [`opts`] are the real surface — they validate every flag
+//! in one place and reject unknown ones with a typed [`opts::CliError`].
+
+pub mod opts;
 
 use std::collections::HashMap;
 
@@ -87,6 +93,12 @@ impl ArgMap {
     /// All `--key value` pairs (for config override forwarding).
     pub fn flag_pairs(&self) -> impl Iterator<Item = (&str, &str)> {
         self.flags.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Every flag/switch name the caller passed (for unknown-flag
+    /// rejection in [`opts`]).
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.flags.keys().map(|k| k.as_str()).chain(self.switches.iter().map(|s| s.as_str()))
     }
 }
 

@@ -1,0 +1,795 @@
+//! Typed per-subcommand option structs — the launcher's real CLI
+//! surface.
+//!
+//! [`ArgMap`] is a string bag; every subcommand used to fish its flags
+//! out of it ad hoc, which meant three copies of the compressor
+//! grammar, silent fallback to defaults on unparseable values, and no
+//! notion of an *unknown* flag (a typo like `--round 5` just vanished).
+//! The structs here parse and validate in one place:
+//!
+//! * every subcommand rejects flags outside its declared set with a
+//!   typed [`CliError::UnknownFlag`];
+//! * an unparseable value is a typed [`CliError::Invalid`], never a
+//!   silent default;
+//! * the rules both sides of a distributed run must agree on — the
+//!   `--data`-vs-shape-flag conflict, the compressor/aggregation
+//!   grammar, `--attack`/`--selection`/`--faults` parsing — live once,
+//!   in [`NetRunOpts`], and `serve`/`fleet`/`shard` all embed it.
+//!
+//! The launcher maps a `CliError` to `eprintln!` + exit 2, exactly the
+//! contract the ad-hoc code had; embedders get the typed value.
+
+use crate::cli::ArgMap;
+use crate::compressors::{CompressorKind, NormKind};
+use crate::config::parse_selection;
+use crate::coordinator::{AggregationRule, SelectionMode};
+use crate::net::{Endpoint, FaultPlan};
+use std::time::Duration;
+
+/// Why a command line was refused. `Display` renders the operator-facing
+/// message (no prefix — the launcher adds none either).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CliError {
+    /// A flag the subcommand does not declare (typos included).
+    UnknownFlag { subcommand: String, flag: String },
+    /// A declared flag with an unparseable or out-of-range value.
+    Invalid(String),
+    /// Two flags that cannot be combined.
+    Conflict(String),
+    /// A required flag or companion flag is absent.
+    Missing(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::UnknownFlag { subcommand, flag } => {
+                write!(f, "{subcommand}: unknown flag --{flag} (run `sparsignd` for the flag list)")
+            }
+            CliError::Invalid(s) | CliError::Conflict(s) | CliError::Missing(s) => {
+                write!(f, "{s}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// The flags every net-facing subcommand (`serve`/`fleet`/`shard`, and
+/// `soak`'s forwarded set) shares via [`NetRunOpts`].
+pub const NET_RUN_FLAGS: &[&str] = &[
+    "clients",
+    "rounds",
+    "dim",
+    "classes",
+    "batch",
+    "alpha",
+    "seed",
+    "lr",
+    "participation",
+    "eval-every",
+    "compressor",
+    "budget",
+    "b",
+    "levels",
+    "aggregation",
+    "data",
+    "hidden",
+    "attack",
+    "selection",
+    "faults",
+    "fault-seed",
+];
+
+/// Reject any flag outside the union of `lists`.
+fn reject_unknown(args: &ArgMap, subcommand: &str, lists: &[&[&str]]) -> Result<(), CliError> {
+    for name in args.names() {
+        if !lists.iter().any(|l| l.contains(&name)) {
+            return Err(CliError::UnknownFlag {
+                subcommand: subcommand.to_string(),
+                flag: name.to_string(),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Unknown-flag check for subcommands simple enough to keep reading
+/// `ArgMap` directly (`tables`, `fig1`, `theory`, …).
+pub fn check_known(args: &ArgMap, subcommand: &str, allowed: &[&str]) -> Result<(), CliError> {
+    reject_unknown(args, subcommand, &[allowed])
+}
+
+/// Typed flag with default; an unparseable value is an error, not the
+/// default (the one behavioral difference from `ArgMap::get`).
+fn parsed<T: std::str::FromStr>(args: &ArgMap, name: &str, default: T) -> Result<T, CliError> {
+    match args.get_str(name) {
+        None => Ok(default),
+        Some(v) => {
+            v.parse().map_err(|_| CliError::Invalid(format!("flag --{name}: invalid value '{v}'")))
+        }
+    }
+}
+
+/// Optional typed flag (no default).
+fn parsed_opt<T: std::str::FromStr>(args: &ArgMap, name: &str) -> Result<Option<T>, CliError> {
+    match args.get_str(name) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| CliError::Invalid(format!("flag --{name}: invalid value '{v}'"))),
+    }
+}
+
+fn parse_endpoint(args: &ArgMap, name: &str, default: &str) -> Result<Endpoint, CliError> {
+    Endpoint::parse(args.str_or(name, default)).map_err(|e| CliError::Invalid(e.to_string()))
+}
+
+/// Parse `--hidden h1,h2,…` into MLP layer widths.
+pub fn parse_hidden(spec: &str) -> Result<Vec<usize>, CliError> {
+    spec.split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<usize>().map_err(|_| CliError::Invalid(format!("--hidden: bad width '{t}'")))
+        })
+        .collect()
+}
+
+/// The run shape both sides of a distributed run must agree on: the
+/// dataset/partition knobs (or the `--data` store that pins them), the
+/// compression and aggregation grammar, and the Byzantine/fault specs.
+#[derive(Clone, Debug)]
+pub struct NetRunOpts {
+    pub clients: usize,
+    pub rounds: usize,
+    pub dim: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub alpha: f64,
+    pub seed: u64,
+    pub lr: f64,
+    pub participation: f64,
+    pub eval_every: usize,
+    pub compressor: CompressorKind,
+    pub aggregation: AggregationRule,
+    /// `--data F.sgds` — the store pins dataset, partition, and client
+    /// count; shape flags conflict with it (checked here, once).
+    pub data: Option<String>,
+    pub hidden: Vec<usize>,
+    /// Raw `--attack SPEC`; parsed into an `AttackPlan` only after the
+    /// environment fixes the cohort size.
+    pub attack: Option<String>,
+    pub selection: SelectionMode,
+    /// Whether `--clients` was passed explicitly (a store-backed run
+    /// cross-checks it against the store's shard count).
+    pub explicit_clients: bool,
+    pub faults: Option<FaultPlan>,
+}
+
+impl NetRunOpts {
+    pub fn from_args(args: &ArgMap) -> Result<Self, CliError> {
+        let clients = parsed(args, "clients", 64usize)?;
+        let rounds = parsed(args, "rounds", 3usize)?;
+        let dim = parsed(args, "dim", 16usize)?;
+        let classes = parsed(args, "classes", 3usize)?;
+        let batch = parsed(args, "batch", 16usize)?;
+        let alpha = parsed(args, "alpha", 0.5f64)?;
+        let seed = parsed(args, "seed", 7u64)?;
+        let lr = parsed(args, "lr", 0.05f64)?;
+        let participation = parsed(args, "participation", 1.0f64)?;
+        let eval_every = parsed(args, "eval-every", 0usize)?;
+        if clients == 0 || rounds == 0 {
+            return Err(CliError::Invalid("--clients and --rounds must be positive".into()));
+        }
+
+        let compressor = match args.str_or("compressor", "sign") {
+            "sign" => CompressorKind::Sign,
+            "scaledsign" => CompressorKind::ScaledSign,
+            "sparsign" => CompressorKind::Sparsign { budget: parsed(args, "budget", 1.0f32)? },
+            "stosign" => CompressorKind::StoSign { b: parsed(args, "b", 2.0f32)? },
+            "terngrad" => CompressorKind::TernGrad,
+            "qsgd" => {
+                CompressorKind::Qsgd { levels: parsed(args, "levels", 255u32)?, norm: NormKind::L2 }
+            }
+            "identity" => CompressorKind::Identity,
+            other => return Err(CliError::Invalid(format!("unknown --compressor '{other}'"))),
+        };
+        let aggregation = match args.str_or("aggregation", "vote") {
+            "vote" => AggregationRule::MajorityVote,
+            "scaledsign" => AggregationRule::ScaledSign,
+            "mean" => AggregationRule::Mean,
+            other => return Err(CliError::Invalid(format!("unknown --aggregation '{other}'"))),
+        };
+
+        let data = args.get_str("data").map(String::from);
+        if data.is_some() {
+            // The store pins the dataset and partition; a shape flag
+            // would silently disagree with what every other process in
+            // the run streams.
+            for k in ["dim", "classes", "alpha"] {
+                if args.has(k) {
+                    return Err(CliError::Conflict(format!(
+                        "--{k} conflicts with --data (the store pins the dataset and partition)"
+                    )));
+                }
+            }
+        }
+        let hidden = args.get_str("hidden").map(parse_hidden).transpose()?.unwrap_or_default();
+        let attack = args.get_str("attack").map(String::from);
+        let selection =
+            parse_selection(args.str_or("selection", "legacy")).map_err(CliError::Invalid)?;
+        let faults = match args.get_str("faults") {
+            None => None,
+            Some(spec) => Some(
+                FaultPlan::parse(spec, parsed(args, "fault-seed", 7u64)?)
+                    .map_err(|e| CliError::Invalid(format!("--faults: {e}")))?,
+            ),
+        };
+        Ok(NetRunOpts {
+            clients,
+            rounds,
+            dim,
+            classes,
+            batch,
+            alpha,
+            seed,
+            lr,
+            participation,
+            eval_every,
+            compressor,
+            aggregation,
+            data,
+            hidden,
+            attack,
+            selection,
+            explicit_clients: args.has("clients"),
+            faults,
+        })
+    }
+}
+
+/// `train` — launcher-level flags plus the free-form config overrides
+/// (`--rounds 100 --alpha 0.1 …`), which `ExperimentConfig` validates
+/// key-by-key (its own typed unknown-key rejection).
+#[derive(Clone, Debug)]
+pub struct TrainOpts {
+    pub config: Option<String>,
+    pub data: Option<String>,
+    pub hidden: Vec<usize>,
+    /// Every remaining `--key value` pair, forwarded to
+    /// `ExperimentConfig::apply_override`.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl TrainOpts {
+    pub fn from_args(args: &ArgMap) -> Result<Self, CliError> {
+        let hidden = args.get_str("hidden").map(parse_hidden).transpose()?.unwrap_or_default();
+        let overrides = args
+            .flag_pairs()
+            .filter(|(k, _)| {
+                !matches!(*k, "preset" | "only" | "csv" | "trials" | "config" | "data" | "hidden")
+            })
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+        Ok(TrainOpts {
+            config: args.get_str("config").map(String::from),
+            data: args.get_str("data").map(String::from),
+            hidden,
+            overrides,
+        })
+    }
+}
+
+const SERVE_FLAGS: &[&str] = &[
+    "addr",
+    "deadline-ms",
+    "rendezvous-secs",
+    "drain-after",
+    "snapshot",
+    "snapshot-every",
+    "event-log",
+    "heal-attempts",
+    "resume",
+    "shards",
+    "endpoint-file",
+    "history-json",
+    "metrics-addr",
+    "metrics-linger-ms",
+];
+
+/// `serve` — the root coordinator launcher.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub run: NetRunOpts,
+    pub addr: Endpoint,
+    pub round_deadline: Option<Duration>,
+    pub rendezvous_timeout: Duration,
+    pub drain_after: Option<usize>,
+    /// `(path, every)`; `every == 0` means write-on-drain only, which
+    /// requires `drain_after` (validated here).
+    pub snapshot: Option<(String, usize)>,
+    pub event_log: Option<String>,
+    pub heal_attempts: Option<usize>,
+    pub resume: Option<String>,
+    pub shards: usize,
+    pub endpoint_file: Option<String>,
+    pub history_json: Option<String>,
+    /// `--metrics-addr EP`: serve `GET /metrics` + `GET /healthz` here
+    /// (and give each in-process shard its own derived scrape port).
+    pub metrics_addr: Option<Endpoint>,
+    /// `--metrics-linger-ms D`: keep answering scrapes for `D` after
+    /// the final round so an end-of-run scrape can observe the totals.
+    pub metrics_linger: Option<Duration>,
+}
+
+impl ServeOpts {
+    pub fn from_args(args: &ArgMap) -> Result<Self, CliError> {
+        reject_unknown(args, "serve", &[NET_RUN_FLAGS, SERVE_FLAGS])?;
+        let run = NetRunOpts::from_args(args)?;
+        let addr = parse_endpoint(args, "addr", "tcp://127.0.0.1:7070")?;
+        let deadline_ms = parsed(args, "deadline-ms", 0u64)?;
+        let drain_after = match parsed(args, "drain-after", 0usize)? {
+            0 => None,
+            n => Some(n),
+        };
+        let snapshot = match args.get_str("snapshot") {
+            None => None,
+            Some(path) => {
+                let every = parsed(args, "snapshot-every", 0usize)?;
+                // every = 0 means "write on drain only"; without a
+                // drain trigger such a policy can never fire — refuse
+                // rather than hand the operator crash protection that
+                // silently does nothing.
+                if every == 0 && drain_after.is_none() {
+                    return Err(CliError::Missing(
+                        "--snapshot needs a trigger: add --snapshot-every K (periodic) \
+                         and/or --drain-after N (write on drain)"
+                            .into(),
+                    ));
+                }
+                Some((path.to_string(), every))
+            }
+        };
+        let metrics_linger = match parsed(args, "metrics-linger-ms", 0u64)? {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
+        Ok(ServeOpts {
+            run,
+            addr,
+            round_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+            rendezvous_timeout: Duration::from_secs(parsed(args, "rendezvous-secs", 120u64)?),
+            drain_after,
+            snapshot,
+            event_log: args.get_str("event-log").map(String::from),
+            heal_attempts: match parsed(args, "heal-attempts", 0usize)? {
+                0 => None,
+                n => Some(n),
+            },
+            resume: args.get_str("resume").map(String::from),
+            shards: parsed(args, "shards", 0usize)?,
+            endpoint_file: args.get_str("endpoint-file").map(String::from),
+            history_json: args.get_str("history-json").map(String::from),
+            metrics_addr: match args.get_str("metrics-addr") {
+                None => None,
+                Some(_) => Some(parse_endpoint(args, "metrics-addr", "")?),
+            },
+            metrics_linger,
+        })
+    }
+}
+
+const FLEET_FLAGS: &[&str] = &[
+    "agents",
+    "shard-line",
+    "shard-count",
+    "connect",
+    "connect-file",
+    "via-shards",
+    "reconnect-secs",
+    "transport",
+    "shards",
+    "deadline-ms",
+];
+
+/// How a `fleet` invocation finds its coordinator(s).
+#[derive(Clone, Debug)]
+pub enum FleetMode {
+    /// `--shard-line I --shard-count K --connect-file F`: serve worker
+    /// slice I of a K-shard tree, dialing line `1 + I` of the file.
+    ShardLine { file: String, index: usize, count: usize },
+    /// `--via-shards --connect-file F`: split the fleet over every
+    /// shard line of the endpoint file.
+    ViaShards { file: String },
+    /// `--connect-file F`: dial line 0, re-reading on every reconnect.
+    ConnectFile { file: String },
+    /// `--connect EP`: dial a fixed endpoint.
+    Connect { addr: Endpoint },
+    /// Default: self-contained loopback run diffed against the
+    /// in-process engine.
+    Loopback { uds: bool, shards: usize, deadline_ms: u64 },
+}
+
+/// `fleet` — the client-fleet launcher.
+#[derive(Clone, Debug)]
+pub struct FleetOpts {
+    pub run: NetRunOpts,
+    pub agents: Option<usize>,
+    pub reconnect_secs: u64,
+    pub mode: FleetMode,
+}
+
+impl FleetOpts {
+    pub fn from_args(args: &ArgMap) -> Result<Self, CliError> {
+        reject_unknown(args, "fleet", &[NET_RUN_FLAGS, FLEET_FLAGS])?;
+        let run = NetRunOpts::from_args(args)?;
+        let mode = if args.has("shard-line") {
+            let Some(file) = args.get_str("connect-file") else {
+                return Err(CliError::Missing(
+                    "--shard-line needs --connect-file (line 0 root, line 1 + i shard i)".into(),
+                ));
+            };
+            let index = parsed(args, "shard-line", 0usize)?;
+            let count = parsed(args, "shard-count", 0usize)?;
+            if count == 0 || index >= count {
+                return Err(CliError::Invalid(format!(
+                    "--shard-line {index} needs --shard-count K with I < K"
+                )));
+            }
+            FleetMode::ShardLine { file: file.to_string(), index, count }
+        } else if args.has("via-shards") {
+            let Some(file) = args.get_str("connect-file") else {
+                return Err(CliError::Missing(
+                    "--via-shards needs --connect-file (the endpoint layout \
+                     written by `serve --shards N --endpoint-file F`)"
+                        .into(),
+                ));
+            };
+            FleetMode::ViaShards { file: file.to_string() }
+        } else if let Some(file) = args.get_str("connect-file") {
+            FleetMode::ConnectFile { file: file.to_string() }
+        } else if args.get_str("connect").is_some() {
+            FleetMode::Connect { addr: parse_endpoint(args, "connect", "")? }
+        } else {
+            FleetMode::Loopback {
+                uds: args.str_or("transport", "tcp") == "uds",
+                shards: parsed(args, "shards", 0usize)?,
+                deadline_ms: parsed(args, "deadline-ms", 2_000u64)?,
+            }
+        };
+        Ok(FleetOpts {
+            run,
+            agents: parsed_opt::<usize>(args, "agents")?.map(|a| a.max(1)),
+            reconnect_secs: parsed(args, "reconnect-secs", 60u64)?,
+            mode,
+        })
+    }
+}
+
+const SHARD_FLAGS: &[&str] = &[
+    "index",
+    "shard-count",
+    "listen",
+    "connect",
+    "connect-file",
+    "reconnect-secs",
+    "rendezvous-secs",
+    "deadline-ms",
+    "publish-file",
+    "metrics-addr",
+];
+
+/// Where a standalone shard finds its root.
+#[derive(Clone, Debug)]
+pub enum ShardUpstream {
+    /// `--connect-file F`: line 0, re-read on every (re)connect.
+    File { file: String },
+    /// `--connect EP`: a fixed address.
+    Addr { addr: Endpoint },
+}
+
+/// `shard` — one aggregator shard as its own OS process.
+#[derive(Clone, Debug)]
+pub struct ShardOpts {
+    pub run: NetRunOpts,
+    pub index: usize,
+    pub shard_count: usize,
+    pub listen: Endpoint,
+    pub upstream: ShardUpstream,
+    pub reconnect_secs: u64,
+    pub rendezvous_secs: u64,
+    pub deadline_ms: u64,
+    pub publish_file: Option<String>,
+    pub metrics_addr: Option<Endpoint>,
+}
+
+impl ShardOpts {
+    pub fn from_args(args: &ArgMap) -> Result<Self, CliError> {
+        reject_unknown(args, "shard", &[NET_RUN_FLAGS, SHARD_FLAGS])?;
+        let run = NetRunOpts::from_args(args)?;
+        let index = parsed(args, "index", 0usize)?;
+        let shard_count = parsed(args, "shard-count", 0usize)?;
+        if shard_count == 0 || index >= shard_count {
+            return Err(CliError::Invalid(
+                "shard needs --index I --shard-count K with I < K".into(),
+            ));
+        }
+        let upstream = if let Some(file) = args.get_str("connect-file") {
+            ShardUpstream::File { file: file.to_string() }
+        } else if args.get_str("connect").is_some() {
+            ShardUpstream::Addr { addr: parse_endpoint(args, "connect", "")? }
+        } else {
+            return Err(CliError::Missing("shard needs --connect EP or --connect-file F".into()));
+        };
+        Ok(ShardOpts {
+            run,
+            index,
+            shard_count,
+            listen: parse_endpoint(args, "listen", "tcp://127.0.0.1:0")?,
+            upstream,
+            reconnect_secs: parsed(args, "reconnect-secs", 60u64)?,
+            rendezvous_secs: parsed(args, "rendezvous-secs", 120u64)?,
+            deadline_ms: parsed(args, "deadline-ms", 0u64)?,
+            publish_file: args.get_str("publish-file").map(String::from),
+            metrics_addr: match args.get_str("metrics-addr") {
+                None => None,
+                Some(_) => Some(parse_endpoint(args, "metrics-addr", "")?),
+            },
+        })
+    }
+}
+
+const SOAK_FLAGS: &[&str] = &[
+    "dir",
+    "rounds",
+    "clients",
+    "shards",
+    "faults",
+    "fault-seed",
+    "transport",
+    "heal-attempts",
+    "reconnect-secs",
+    "timeout-secs",
+];
+
+/// Flags `soak` forwards verbatim to every child process (the children
+/// rebuild the same environment from the same flags, exactly as a
+/// distributed serve/fleet pair does).
+pub const SOAK_PASS_KEYS: &[&str] = &[
+    "dim",
+    "classes",
+    "batch",
+    "alpha",
+    "seed",
+    "lr",
+    "participation",
+    "eval-every",
+    "selection",
+    "compressor",
+    "aggregation",
+    "data",
+    "hidden",
+];
+
+/// `soak` — the churn-soak supervisor. `None` fields keep the
+/// `net::SoakOptions` defaults.
+#[derive(Clone, Debug)]
+pub struct SoakOpts {
+    pub dir: String,
+    pub rounds: Option<usize>,
+    pub clients: Option<usize>,
+    pub shards: Option<usize>,
+    pub faults: Option<String>,
+    pub fault_seed: Option<u64>,
+    pub uds: bool,
+    pub heal_attempts: Option<usize>,
+    pub reconnect_secs: Option<u64>,
+    pub timeout_secs: u64,
+    pub pass: Vec<(String, String)>,
+}
+
+impl SoakOpts {
+    pub fn from_args(args: &ArgMap) -> Result<Self, CliError> {
+        reject_unknown(args, "soak", &[SOAK_FLAGS, SOAK_PASS_KEYS])?;
+        let mut pass = Vec::new();
+        for &key in SOAK_PASS_KEYS {
+            if let Some(v) = args.get_str(key) {
+                pass.push((key.to_string(), v.to_string()));
+            }
+        }
+        Ok(SoakOpts {
+            dir: args.str_or("dir", "target/soak").to_string(),
+            rounds: parsed_opt(args, "rounds")?,
+            clients: parsed_opt(args, "clients")?,
+            shards: parsed_opt::<usize>(args, "shards")?.map(|s| s.max(1)),
+            faults: args.get_str("faults").map(String::from),
+            fault_seed: parsed_opt(args, "fault-seed")?,
+            uds: args.str_or("transport", "tcp") == "uds",
+            heal_attempts: parsed_opt(args, "heal-attempts")?,
+            reconnect_secs: parsed_opt(args, "reconnect-secs")?,
+            timeout_secs: parsed(args, "timeout-secs", 600u64)?,
+            pass,
+        })
+    }
+}
+
+const PARITY_FLAGS: &[&str] = &[
+    "data",
+    "dataset",
+    "algs",
+    "rounds",
+    "batch",
+    "eval-every",
+    "trials",
+    "hidden",
+    "csv",
+    "min-acc",
+];
+
+/// `parity` — the paper-parity sweep over a streamed `.sgds` store.
+#[derive(Clone, Debug)]
+pub struct ParityOpts {
+    pub data: String,
+    pub dataset: String,
+    pub algs: Option<Vec<String>>,
+    pub rounds: Option<usize>,
+    pub batch: Option<usize>,
+    pub eval_every: Option<usize>,
+    pub trials: Option<usize>,
+    pub hidden: Vec<usize>,
+    pub csv: Option<String>,
+    pub min_acc: f64,
+}
+
+impl ParityOpts {
+    pub fn from_args(args: &ArgMap) -> Result<Self, CliError> {
+        reject_unknown(args, "parity", &[PARITY_FLAGS])?;
+        let Some(data) = args.get_str("data") else {
+            return Err(CliError::Missing(
+                "parity needs --data F.sgds (build one with `dataset convert`)".into(),
+            ));
+        };
+        let algs = args.get_str("algs").map(|spec| {
+            spec.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).map(String::from).collect()
+        });
+        Ok(ParityOpts {
+            data: data.to_string(),
+            dataset: args.str_or("dataset", "fmnist").to_string(),
+            algs,
+            rounds: parsed_opt(args, "rounds")?,
+            batch: parsed_opt(args, "batch")?,
+            eval_every: parsed_opt(args, "eval-every")?,
+            trials: parsed_opt::<usize>(args, "trials")?.map(|t| t.max(1)),
+            hidden: args.get_str("hidden").map(parse_hidden).transpose()?.unwrap_or_default(),
+            csv: args.get_str("csv").map(String::from),
+            min_acc: parsed(args, "min-acc", 0.0f64)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn am(s: &str) -> ArgMap {
+        ArgMap::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn unknown_flags_are_typed_errors() {
+        let err = ServeOpts::from_args(&am("serve --adres tcp://h:1")).unwrap_err();
+        assert_eq!(
+            err,
+            CliError::UnknownFlag { subcommand: "serve".into(), flag: "adres".into() }
+        );
+        assert!(err.to_string().contains("--adres"));
+        // Switch-shaped typos are caught too (`--via-shard` would have
+        // vanished silently under the old ArgMap lookups).
+        let err = FleetOpts::from_args(&am("fleet --via-shard")).unwrap_err();
+        assert!(matches!(err, CliError::UnknownFlag { ref flag, .. } if flag == "via-shard"));
+    }
+
+    #[test]
+    fn unparseable_values_are_errors_not_defaults() {
+        let err = FleetOpts::from_args(&am("fleet --rounds nope")).unwrap_err();
+        assert!(matches!(err, CliError::Invalid(ref s) if s.contains("--rounds")), "{err}");
+        let err = ServeOpts::from_args(&am("serve --deadline-ms -5")).unwrap_err();
+        assert!(matches!(err, CliError::Invalid(_)), "{err}");
+    }
+
+    #[test]
+    fn data_conflicts_with_shape_flags() {
+        let err = FleetOpts::from_args(&am("fleet --data t.sgds --alpha 0.1")).unwrap_err();
+        assert_eq!(
+            err,
+            CliError::Conflict(
+                "--alpha conflicts with --data (the store pins the dataset and partition)".into()
+            )
+        );
+        // --clients is allowed alongside --data (cross-checked against
+        // the store later), and the shape flags parse fine without it.
+        assert!(FleetOpts::from_args(&am("fleet --data t.sgds --clients 64")).is_ok());
+        assert!(FleetOpts::from_args(&am("fleet --dim 32 --alpha 0.1")).is_ok());
+    }
+
+    #[test]
+    fn compressor_and_aggregation_grammar() {
+        let o = NetRunOpts::from_args(&am("fleet --compressor sparsign --budget 0.5")).unwrap();
+        assert_eq!(o.compressor, CompressorKind::Sparsign { budget: 0.5 });
+        let o = NetRunOpts::from_args(&am("fleet --compressor qsgd --levels 15")).unwrap();
+        assert!(matches!(o.compressor, CompressorKind::Qsgd { levels: 15, .. }));
+        let o = NetRunOpts::from_args(&am("fleet --aggregation mean")).unwrap();
+        assert_eq!(o.aggregation, AggregationRule::Mean);
+        let err = NetRunOpts::from_args(&am("fleet --compressor zip")).unwrap_err();
+        assert_eq!(err, CliError::Invalid("unknown --compressor 'zip'".into()));
+    }
+
+    #[test]
+    fn fleet_mode_precedence_matches_the_launcher() {
+        let o = FleetOpts::from_args(&am(
+            "fleet --shard-line 1 --shard-count 2 --connect-file ep.txt --via-shards",
+        ))
+        .unwrap();
+        assert!(matches!(o.mode, FleetMode::ShardLine { index: 1, count: 2, .. }));
+        let o = FleetOpts::from_args(&am("fleet --via-shards --connect-file ep.txt")).unwrap();
+        assert!(matches!(o.mode, FleetMode::ViaShards { .. }));
+        let o = FleetOpts::from_args(&am("fleet --connect tcp://h:1")).unwrap();
+        assert!(matches!(o.mode, FleetMode::Connect { .. }));
+        let o = FleetOpts::from_args(&am("fleet --transport uds --shards 2")).unwrap();
+        assert!(matches!(o.mode, FleetMode::Loopback { uds: true, shards: 2, .. }));
+        // Companion-flag validation.
+        let err = FleetOpts::from_args(&am("fleet --via-shards")).unwrap_err();
+        assert!(matches!(err, CliError::Missing(_)));
+        let err =
+            FleetOpts::from_args(&am("fleet --shard-line 2 --shard-count 2 --connect-file f"))
+                .unwrap_err();
+        assert!(matches!(err, CliError::Invalid(_)));
+    }
+
+    #[test]
+    fn serve_snapshot_needs_a_trigger() {
+        let err = ServeOpts::from_args(&am("serve --snapshot snap.bin")).unwrap_err();
+        assert!(matches!(err, CliError::Missing(ref s) if s.contains("--snapshot-every")));
+        assert!(ServeOpts::from_args(&am("serve --snapshot snap.bin --snapshot-every 3")).is_ok());
+        assert!(ServeOpts::from_args(&am("serve --snapshot snap.bin --drain-after 5")).is_ok());
+    }
+
+    #[test]
+    fn serve_parses_metrics_flags() {
+        let o = ServeOpts::from_args(&am(
+            "serve --metrics-addr tcp://127.0.0.1:9464 --metrics-linger-ms 1500",
+        ))
+        .unwrap();
+        assert_eq!(o.metrics_addr, Some(Endpoint::Tcp("127.0.0.1:9464".into())));
+        assert_eq!(o.metrics_linger, Some(Duration::from_millis(1500)));
+        let o = ServeOpts::from_args(&am("serve")).unwrap();
+        assert!(o.metrics_addr.is_none() && o.metrics_linger.is_none());
+    }
+
+    #[test]
+    fn shard_and_soak_validate() {
+        let err = ShardOpts::from_args(&am("shard --index 0 --shard-count 2")).unwrap_err();
+        assert!(matches!(err, CliError::Missing(ref s) if s.contains("--connect")));
+        let o = ShardOpts::from_args(&am(
+            "shard --index 1 --shard-count 2 --connect-file ep.txt --metrics-addr tcp://h:0",
+        ))
+        .unwrap();
+        assert!(matches!(o.upstream, ShardUpstream::File { .. }));
+        assert!(o.metrics_addr.is_some());
+        let o = SoakOpts::from_args(&am("soak --rounds 40 --seed 7 --transport uds")).unwrap();
+        assert_eq!(o.rounds, Some(40));
+        assert!(o.uds);
+        assert_eq!(o.pass, vec![("seed".to_string(), "7".to_string())]);
+    }
+
+    #[test]
+    fn parity_requires_data() {
+        let err = ParityOpts::from_args(&am("parity --dataset fmnist")).unwrap_err();
+        assert!(matches!(err, CliError::Missing(_)));
+        let o = ParityOpts::from_args(&am("parity --data f.sgds --algs a,b --trials 0")).unwrap();
+        assert_eq!(o.algs, Some(vec!["a".to_string(), "b".to_string()]));
+        assert_eq!(o.trials, Some(1), "--trials floors at one seed");
+    }
+}

@@ -37,6 +37,12 @@
 //!   residual, ledger, metrics history) written atomically, so a killed
 //!   coordinator resumes with a `RunHistory` bit-identical to an
 //!   uninterrupted run.
+//! * **[`metrics::registry`]** — the live observability plane: a
+//!   wait-free Prometheus-style [`MetricsRegistry`] every coordinator
+//!   tier (root and shards) exposes over `GET /metrics` from the same
+//!   reactor thread that runs the protocol, so a whole aggregation
+//!   tree is scrape-able mid-run without a scrape ever delaying a
+//!   round (DESIGN.md §17).
 //! * **[`experiments`]** — one harness per paper table/figure (Fig. 1–3,
 //!   Tables 1–7) that regenerates the reported rows/series.
 //!
@@ -52,6 +58,8 @@
 //!
 //! See `examples/quickstart.rs` for a complete runnable version, and
 //! `DESIGN.md` for the paper → module map.
+//!
+//! [`MetricsRegistry`]: crate::metrics::registry::MetricsRegistry
 
 pub mod cli;
 pub mod coding;
@@ -74,5 +82,8 @@ pub mod prelude {
     pub use crate::compressors::{
         Compressor, CompressorKind, CompressedGrad, SparsignCompressor,
     };
+    pub use crate::metrics::registry::MetricsRegistry;
+    pub use crate::net::{Endpoint, FleetOptions, ServeOptions, ShardOptions};
+    pub use crate::snapshot::SnapshotPolicy;
     pub use crate::util::rng::Pcg64;
 }

@@ -17,6 +17,7 @@
 //! sparsignd serve     [--addr EP] [--clients M] [--rounds N] [--deadline-ms D]
 //!                     [--shards N] [--snapshot F [--snapshot-every K]] [--resume F]
 //!                     [--drain-after N] [--endpoint-file F] [--history-json F]
+//!                     [--metrics-addr EP] [--metrics-linger-ms D]
 //!                     [--attack SPEC] [--selection legacy|committed] …
 //! sparsignd fleet     [--clients M] [--rounds N] [--transport tcp|uds]
 //!                     [--shards N | --via-shards] [--connect EP | --connect-file F]
@@ -26,15 +27,21 @@
 //! sparsignd artifacts
 //! ```
 //!
+//! Every subcommand parses its flags through the typed structs in
+//! [`sparsignd::cli::opts`]: unknown flags and unparseable values are
+//! rejected with a typed error (exit 2), never silently defaulted.
+//!
 //! Everything the launcher does is also available as a library call; the
 //! examples/ binaries show the embedded usage.
 
+use sparsignd::cli::opts::{
+    self, CliError, FleetMode, FleetOpts, ParityOpts, ServeOpts, ShardOpts, ShardUpstream,
+    SoakOpts, TrainOpts,
+};
 use sparsignd::cli::ArgMap;
-use sparsignd::compressors::{CompressorKind, NormKind};
-use sparsignd::config::{parse_selection, ExperimentConfig};
+use sparsignd::config::ExperimentConfig;
 use sparsignd::coordinator::{
-    Algorithm, AggregationRule, AttackPlan, ClassifierEnv, GradientSource, RunHistory,
-    TrainingRun,
+    Algorithm, AttackPlan, ClassifierEnv, GradientSource, RunHistory, TrainingRun,
 };
 use sparsignd::data::{
     load_cifar_binary, load_idx_pair, write_store, Dataset, DirichletPartitioner, ShardStore,
@@ -63,7 +70,7 @@ fn main() {
         Some("fleet") => cmd_fleet(&args),
         Some("soak") => cmd_soak(&args),
         Some("benchdiff") => cmd_benchdiff(&args),
-        Some("artifacts") => cmd_artifacts(),
+        Some("artifacts") => cmd_artifacts(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
             usage();
@@ -75,6 +82,12 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Typed CLI rejection → operator message + exit 2.
+fn cli_err(e: CliError) -> i32 {
+    eprintln!("{e}");
+    2
 }
 
 fn usage() {
@@ -101,12 +114,18 @@ fn usage() {
          \x20            file gains one shard line each; --snapshot/--resume/\n\
          \x20            --drain-after for elastic runs; exit 3 = drained;\n\
          \x20            --event-log F appends structured JSONL, --heal-attempts K\n\
-         \x20            re-opens any round that closes below full coverage)\n\
+         \x20            re-opens any round that closes below full coverage;\n\
+         \x20            --metrics-addr EP serves Prometheus GET /metrics and\n\
+         \x20            GET /healthz from the reactor thread — in-process shards\n\
+         \x20            get derived scrape ports, the endpoint file gains\n\
+         \x20            '# metrics …' comment lines, and --metrics-linger-ms D\n\
+         \x20            keeps answering scrapes for D ms after the final round)\n\
          \x20 shard      run one aggregator shard as its own process:\n\
          \x20            --index I --shard-count K --listen EP, upstream from\n\
          \x20            --connect EP or --connect-file F (line 0, re-read with\n\
          \x20            --reconnect-secs backoff on every upstream loss);\n\
-         \x20            --publish-file F writes the resolved listen endpoint\n\
+         \x20            --publish-file F writes the resolved listen endpoint;\n\
+         \x20            --metrics-addr EP exposes the shard's own scrape port\n\
          \x20 fleet      drive a client fleet; default: loopback run diffed\n\
          \x20            against the in-process engine (exit 1 on mismatch;\n\
          \x20            --shards N routes it through an aggregation tree);\n\
@@ -115,7 +134,8 @@ fn usage() {
          \x20            --shard-line I serves slice I of --shard-count K\n\
          \x20 soak       churn soak: fork a serve/shard/fleet process tree,\n\
          \x20            kill+respawn children on a seeded --faults schedule,\n\
-         \x20            exit 1 unless the history is bit-identical to an\n\
+         \x20            scrape the root's /metrics across respawns, exit 1\n\
+         \x20            unless the history is bit-identical to an\n\
          \x20            uninterrupted reference run of the same flags\n\
          \x20 benchdiff  diff a fresh BENCH_*.json against the committed\n\
          \x20            baseline; exit 1 on >tolerance throughput regression\n\
@@ -128,19 +148,20 @@ fn usage() {
     );
 }
 
-fn apply_cli_overrides(cfg: &mut ExperimentConfig, args: &ArgMap) -> Result<(), String> {
-    for (k, v) in args.flag_pairs() {
-        if matches!(k, "preset" | "only" | "csv" | "trials" | "config" | "data" | "hidden") {
-            continue; // launcher-level flags
-        }
+fn apply_cli_overrides(cfg: &mut ExperimentConfig, t: &TrainOpts) -> Result<(), String> {
+    for (k, v) in &t.overrides {
         cfg.apply_override(k, v)?;
     }
     cfg.validate()
 }
 
 fn cmd_train(args: &ArgMap) -> i32 {
+    let topts = match TrainOpts::from_args(args) {
+        Ok(t) => t,
+        Err(e) => return cli_err(e),
+    };
     let mut cfg = ExperimentConfig::fast_preset();
-    if let Some(path) = args.get_str("config") {
+    if let Some(path) = &topts.config {
         let body = match std::fs::read_to_string(path) {
             Ok(b) => b,
             Err(e) => {
@@ -153,11 +174,11 @@ fn cmd_train(args: &ArgMap) -> i32 {
             return 2;
         }
     }
-    if let Err(e) = apply_cli_overrides(&mut cfg, args) {
+    if let Err(e) = apply_cli_overrides(&mut cfg, &topts) {
         eprintln!("{e}");
         return 2;
     }
-    let report = if let Some(path) = args.get_str("data") {
+    let report = if let Some(path) = &topts.data {
         // Store-backed run: the dataset, partition and heterogeneity are
         // pinned by the .sgds file; only model init and batch sampling
         // vary across seeds.
@@ -168,14 +189,7 @@ fn cmd_train(args: &ArgMap) -> i32 {
                 return 2;
             }
         };
-        let hidden = match args.get_str("hidden").map(parse_hidden).transpose() {
-            Ok(h) => h.unwrap_or_default(),
-            Err(e) => {
-                eprintln!("{e}");
-                return 2;
-            }
-        };
-        cfg.model = store_model(&store, hidden);
+        cfg.model = store_model(&store, topts.hidden.clone());
         cfg.alpha = store.info().alpha;
         cfg.workers = store.clients();
         let model = cfg.model.clone();
@@ -195,6 +209,9 @@ fn cmd_train(args: &ArgMap) -> i32 {
 }
 
 fn cmd_tables(args: &ArgMap) -> i32 {
+    if let Err(e) = opts::check_known(args, "tables", &["preset", "only"]) {
+        return cli_err(e);
+    }
     let paper = args.get_str("preset").map(|p| p == "paper").unwrap_or(false);
     let only: Option<Vec<String>> = args
         .get_str("only")
@@ -226,6 +243,10 @@ fn cmd_tables(args: &ArgMap) -> i32 {
 }
 
 fn cmd_fig(args: &ArgMap, fig1: bool) -> i32 {
+    let name = if fig1 { "fig1" } else { "fig2" };
+    if let Err(e) = opts::check_known(args, name, &["rounds", "lr", "seed", "csv"]) {
+        return cli_err(e);
+    }
     let rounds = args.get::<usize>("rounds", 3_000);
     let lr = args.get::<f64>("lr", 0.01);
     let seed = args.get::<u64>("seed", 7);
@@ -273,6 +294,9 @@ fn cmd_fig(args: &ArgMap, fig1: bool) -> i32 {
 }
 
 fn cmd_theory(args: &ArgMap) -> i32 {
+    if let Err(e) = opts::check_known(args, "theory", &["trials"]) {
+        return cli_err(e);
+    }
     let trials = args.get::<usize>("trials", 20_000);
     let checks = experiments::theory::sweep(
         &[20, 50, 100, 200, 500],
@@ -305,15 +329,6 @@ fn cmd_theory(args: &ArgMap) -> i32 {
     }
 }
 
-/// Parse `--hidden h1,h2,…` into MLP layer widths.
-fn parse_hidden(spec: &str) -> Result<Vec<usize>, String> {
-    spec.split(',')
-        .map(|t| t.trim())
-        .filter(|t| !t.is_empty())
-        .map(|t| t.parse::<usize>().map_err(|_| format!("--hidden: bad width '{t}'")))
-        .collect()
-}
-
 /// Model for a store-backed run: linear softmax unless `--hidden` widths
 /// were given (input/class dims always come from the store).
 fn store_model(store: &ShardStore, hidden: Vec<usize>) -> ModelKind {
@@ -324,8 +339,30 @@ fn store_model(store: &ShardStore, hidden: Vec<usize>) -> ModelKind {
     }
 }
 
+const DATASET_FLAGS: &[&str] = &[
+    "data",
+    "out",
+    "clients",
+    "alpha",
+    "seed",
+    "synthetic",
+    "scale",
+    "dim",
+    "classes",
+    "format",
+    "images",
+    "labels",
+    "test-images",
+    "test-labels",
+    "bins",
+    "test-bins",
+];
+
 /// `dataset convert|info` — build or inspect an `.sgds` store.
 fn cmd_dataset(args: &ArgMap) -> i32 {
+    if let Err(e) = opts::check_known(args, "dataset", DATASET_FLAGS) {
+        return cli_err(e);
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("info") => {
             let Some(path) = args.get_str("data") else {
@@ -450,56 +487,47 @@ fn cmd_dataset_convert(args: &ArgMap) -> i32 {
 
 /// `parity` — the paper-parity sweep over a streamed `.sgds` store.
 fn cmd_parity(args: &ArgMap) -> i32 {
-    let Some(path) = args.get_str("data") else {
-        eprintln!("parity needs --data F.sgds (build one with `dataset convert`)");
-        return 2;
+    let p = match ParityOpts::from_args(args) {
+        Ok(p) => p,
+        Err(e) => return cli_err(e),
     };
-    let dataset = args.str_or("dataset", "fmnist");
-    let store = match ShardStore::open(std::path::Path::new(path)) {
+    let store = match ShardStore::open(std::path::Path::new(&p.data)) {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("--data {path}: {e}");
+            eprintln!("--data {}: {e}", p.data);
             return 2;
         }
     };
-    let mut cfg = match experiments::parity_config(dataset) {
+    let mut cfg = match experiments::parity_config(&p.dataset) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
-    if let Some(spec) = args.get_str("algs") {
-        let pats: Vec<&str> = spec.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+    if let Some(algs) = &p.algs {
+        let pats: Vec<&str> = algs.iter().map(|s| s.as_str()).collect();
         if let Err(e) = experiments::retain_algorithms(&mut cfg, &pats) {
             eprintln!("--algs: {e}");
             return 2;
         }
     }
-    if args.has("rounds") {
-        cfg.rounds = args.get::<usize>("rounds", cfg.rounds);
+    if let Some(rounds) = p.rounds {
+        cfg.rounds = rounds;
     }
-    if args.has("batch") {
-        cfg.batch = args.get::<usize>("batch", cfg.batch);
+    if let Some(batch) = p.batch {
+        cfg.batch = batch;
     }
-    if args.has("eval-every") {
-        cfg.eval_every = args.get::<usize>("eval-every", cfg.eval_every);
+    if let Some(eval_every) = p.eval_every {
+        cfg.eval_every = eval_every;
     }
-    if args.has("trials") {
-        let trials = args.get::<usize>("trials", cfg.seeds.len()).max(1);
+    if let Some(trials) = p.trials {
         cfg.seeds = (0..trials as u64).collect();
     }
-    let hidden = match args.get_str("hidden").map(parse_hidden).transpose() {
-        Ok(h) => h.unwrap_or_default(),
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
-    let out = experiments::run_parity(&store, cfg, dataset, &hidden);
+    let out = experiments::run_parity(&store, cfg, &p.dataset, &p.hidden);
     println!("{}", out.report.table());
     println!("{}", out.parity_table);
-    if let Some(csv) = args.get_str("csv") {
+    if let Some(csv) = &p.csv {
         let mut rows = Vec::new();
         for (label, series) in &out.report.series {
             for (round, acc, bits) in series {
@@ -518,9 +546,8 @@ fn cmd_parity(args: &ArgMap) -> i32 {
         }
         println!("wrote {csv}");
     }
-    let floor = args.get::<f64>("min-acc", 0.0);
-    if out.best_acc < floor {
-        eprintln!("best final accuracy {:.4} is below --min-acc {floor}", out.best_acc);
+    if out.best_acc < p.min_acc {
+        eprintln!("best final accuracy {:.4} is below --min-acc {}", out.best_acc, p.min_acc);
         return 1;
     }
     0
@@ -535,109 +562,75 @@ struct NetSetup {
     init: Vec<f32>,
 }
 
-fn net_setup(args: &ArgMap) -> Result<NetSetup, String> {
-    let clients = args.get::<usize>("clients", 64);
-    let rounds = args.get::<usize>("rounds", 3);
-    let dim = args.get::<usize>("dim", 16);
-    let classes = args.get::<usize>("classes", 3);
-    let batch = args.get::<usize>("batch", 16);
-    let alpha = args.get::<f64>("alpha", 0.5);
-    let seed = args.get::<u64>("seed", 7);
-    let lr = args.get::<f64>("lr", 0.05);
-    let participation = args.get::<f64>("participation", 1.0);
-    if clients == 0 || rounds == 0 {
-        return Err("--clients and --rounds must be positive".into());
-    }
-
-    let compressor = match args.str_or("compressor", "sign") {
-        "sign" => CompressorKind::Sign,
-        "scaledsign" => CompressorKind::ScaledSign,
-        "sparsign" => CompressorKind::Sparsign { budget: args.get::<f32>("budget", 1.0) },
-        "stosign" => CompressorKind::StoSign { b: args.get::<f32>("b", 2.0) },
-        "terngrad" => CompressorKind::TernGrad,
-        "qsgd" => {
-            CompressorKind::Qsgd { levels: args.get::<u32>("levels", 255), norm: NormKind::L2 }
-        }
-        "identity" => CompressorKind::Identity,
-        other => return Err(format!("unknown --compressor '{other}'")),
-    };
-    let aggregation = match args.str_or("aggregation", "vote") {
-        "vote" => AggregationRule::MajorityVote,
-        "scaledsign" => AggregationRule::ScaledSign,
-        "mean" => AggregationRule::Mean,
-        other => return Err(format!("unknown --aggregation '{other}'")),
-    };
-
-    let env = if let Some(path) = args.get_str("data") {
+fn net_setup(o: &opts::NetRunOpts) -> Result<NetSetup, String> {
+    let env = if let Some(path) = &o.data {
         // Store-backed run: the dataset and partition are pinned by the
         // .sgds file, whose content hash lands in the environment
         // fingerprint — a fleet holding a different store (different
         // download, different --alpha conversion) is refused at
         // rendezvous instead of silently training on drifted data.
-        for k in ["dim", "classes", "alpha"] {
-            if args.has(k) {
-                return Err(format!(
-                    "--{k} conflicts with --data (the store pins the dataset and partition)"
-                ));
-            }
-        }
+        // (The shape-flag conflict was already rejected by NetRunOpts.)
         let store = ShardStore::open(std::path::Path::new(path))
             .map_err(|e| format!("--data {path}: {e}"))?;
-        if args.has("clients") && clients != store.clients() {
+        if o.explicit_clients && o.clients != store.clients() {
             return Err(format!(
-                "--clients {clients} disagrees with the store's {} client shards \
+                "--clients {} disagrees with the store's {} client shards \
                  (drop the flag or rebuild the store)",
+                o.clients,
                 store.clients()
             ));
         }
-        let hidden = args.get_str("hidden").map(parse_hidden).transpose()?.unwrap_or_default();
-        let model = store_model(&store, hidden);
-        ClassifierEnv::from_store(&store, model.build(), batch)
+        let model = store_model(&store, o.hidden.clone());
+        ClassifierEnv::from_store(&store, model.build(), o.batch)
     } else {
         let task = SyntheticTask::generate(
             SyntheticSpec {
-                dim,
-                classes,
+                dim: o.dim,
+                classes: o.classes,
                 modes: 1,
                 separation: 1.8,
                 noise: 0.25,
                 label_noise: 0.0,
-                train: (clients * batch * 4).max(512),
-                test: (clients * batch).max(256),
+                train: (o.clients * o.batch * 4).max(512),
+                test: (o.clients * o.batch).max(256),
             },
-            seed ^ 0x5e7,
+            o.seed ^ 0x5e7,
         );
-        let mut rng = Pcg64::seed_from(seed ^ 0x9a57);
-        let fed = DirichletPartitioner { alpha, workers: clients }.partition(&task.train, &mut rng);
+        let mut rng = Pcg64::seed_from(o.seed ^ 0x9a57);
+        let fed = DirichletPartitioner { alpha: o.alpha, workers: o.clients }
+            .partition(&task.train, &mut rng);
         ClassifierEnv::new(
-            ModelKind::Linear { inputs: dim, classes }.build(),
+            ModelKind::Linear { inputs: o.dim, classes: o.classes }.build(),
             task.train,
             task.test,
             fed,
-            batch,
+            o.batch,
         )
     };
     // The attack plan's population is the served cohort — for a store
     // run that is the store's client count, not the --clients default.
     let clients = env.fed.workers();
-    let mut init_rng = Pcg64::seed_from(seed ^ 0x1417);
+    let mut init_rng = Pcg64::seed_from(o.seed ^ 0x1417);
     let init = env.init_params(&mut init_rng);
 
     let mut run = TrainingRun::new(
-        Algorithm::CompressedGd { compressor, aggregation },
-        LrSchedule::Const { lr },
-        rounds,
+        Algorithm::CompressedGd {
+            compressor: o.compressor.clone(),
+            aggregation: o.aggregation,
+        },
+        LrSchedule::Const { lr: o.lr },
+        o.rounds,
     );
-    run.participation = participation;
-    run.eval_every = args.get::<usize>("eval-every", 0);
-    run.seed = seed;
+    run.participation = o.participation;
+    run.eval_every = o.eval_every;
+    run.seed = o.seed;
     // Byzantine knobs. Both sides of a distributed run derive the same
     // plan from the same flags; the coordinator needs it for its
     // config-fingerprint and the in-process diff, the fleet to enact it.
-    if let Some(spec) = args.get_str("attack") {
-        run.attack = Some(AttackPlan::parse(spec, clients, seed)?);
+    if let Some(spec) = &o.attack {
+        run.attack = Some(AttackPlan::parse(spec, clients, o.seed)?);
     }
-    run.selection = parse_selection(args.str_or("selection", "legacy"))?;
+    run.selection = o.selection;
     Ok(NetSetup { env, run, init })
 }
 
@@ -670,12 +663,21 @@ fn diff_histories(a: &RunHistory, b: &RunHistory) -> Result<(), String> {
 /// fleet polling the file never reads a torn layout. Line 0 is the root
 /// coordinator; with `--shards N`, lines `1..=N` are the shard
 /// endpoints in shard order (`fleet --via-shards` maps line `1 + i` to
-/// worker slice `chunk_bounds(m, N, i)`).
-fn write_endpoint_file(path: &str, eps: &[net::Endpoint]) -> std::io::Result<()> {
+/// worker slice `chunk_bounds(m, N, i)`). Metrics scrape endpoints ride
+/// along as trailing `# metrics <who> <ep>` comment lines — *after*
+/// every endpoint line, so line-indexed readers are unaffected.
+fn write_endpoint_file(
+    path: &str,
+    eps: &[net::Endpoint],
+    comments: &[String],
+) -> std::io::Result<()> {
     let tmp = format!("{path}.tmp");
     let mut body = String::new();
     for ep in eps {
         body.push_str(&format!("{ep}\n"));
+    }
+    for c in comments {
+        body.push_str(&format!("{c}\n"));
     }
     std::fs::write(&tmp, body)?;
     std::fs::rename(&tmp, path)
@@ -683,7 +685,8 @@ fn write_endpoint_file(path: &str, eps: &[net::Endpoint]) -> std::io::Result<()>
 
 /// A listen endpoint for in-process shard `i`, in the root's transport
 /// family: an ephemeral TCP port on the root's interface, or the root's
-/// socket path suffixed per shard.
+/// socket path suffixed per shard. Also used to derive per-shard
+/// metrics scrape endpoints from the root's `--metrics-addr`.
 fn shard_listen_endpoint(root: &net::Endpoint, i: usize) -> net::Endpoint {
     #[cfg(not(unix))]
     let _ = i;
@@ -700,51 +703,30 @@ fn shard_listen_endpoint(root: &net::Endpoint, i: usize) -> net::Endpoint {
 }
 
 fn cmd_serve(args: &ArgMap) -> i32 {
-    let setup = match net_setup(args) {
+    let so = match ServeOpts::from_args(args) {
+        Ok(s) => s,
+        Err(e) => return cli_err(e),
+    };
+    let setup = match net_setup(&so.run) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
-    let ep = match net::Endpoint::parse(args.str_or("addr", "tcp://127.0.0.1:7070")) {
-        Ok(ep) => ep,
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
-    let mut opts = net::ServeOptions::new(ep);
-    let deadline_ms = args.get::<u64>("deadline-ms", 0);
-    if deadline_ms > 0 {
-        opts.round_deadline = Some(std::time::Duration::from_millis(deadline_ms));
-    }
-    let secs = args.get::<u64>("rendezvous-secs", 120);
-    opts.rendezvous_timeout = std::time::Duration::from_secs(secs);
-    let drain_after = args.get::<usize>("drain-after", 0);
-    if drain_after > 0 {
-        opts.drain_after = Some(drain_after);
-    }
-    if let Some(path) = args.get_str("snapshot") {
-        let every = args.get::<usize>("snapshot-every", 0);
-        // every = 0 means "write on drain only"; without a drain trigger
-        // such a policy can never fire — refuse rather than hand the
-        // operator crash protection that silently does nothing.
-        if every == 0 && drain_after == 0 {
-            eprintln!(
-                "--snapshot needs a trigger: add --snapshot-every K (periodic) \
-                 and/or --drain-after N (write on drain)"
-            );
-            return 2;
-        }
-        opts.snapshot = Some(SnapshotPolicy::every(path, every));
+    let mut opts = net::ServeOptions::new(so.addr.clone());
+    opts.round_deadline = so.round_deadline;
+    opts.rendezvous_timeout = so.rendezvous_timeout;
+    opts.drain_after = so.drain_after;
+    if let Some((path, every)) = &so.snapshot {
+        opts.snapshot = Some(SnapshotPolicy::every(path.as_str(), *every));
     }
     // Structured JSONL event log. A resumed coordinator appends (the
     // soak supervisor reads one continuous log across restarts); a
     // fresh one truncates.
-    if let Some(path) = args.get_str("event-log") {
+    if let Some(path) = &so.event_log {
         let p = std::path::Path::new(path);
-        let log = if args.get_str("resume").is_some() {
+        let log = if so.resume.is_some() {
             net::EventLog::append(p)
         } else {
             net::EventLog::create(p)
@@ -760,28 +742,23 @@ fn cmd_serve(args: &ArgMap) -> i32 {
     // Strict self-healing: re-open any round that closes below full
     // coverage, up to K attempts per round. 0 (default) keeps the
     // legacy policy (re-open only fully-empty rounds).
-    let heal = args.get::<usize>("heal-attempts", 0);
-    if heal > 0 {
-        opts.heal_attempts = Some(heal);
-    }
-    let fault_plan = match parse_fault_plan(args) {
-        Ok(p) => p,
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
-    if let Some(plan) = &fault_plan {
+    opts.heal_attempts = so.heal_attempts;
+    if let Some(plan) = &so.run.faults {
         let inj = plan.injector(net::FaultRole::Root);
         if !inj.is_empty() {
             opts.faults = Some(inj);
         }
     }
+    // Live observability plane: the reactor answers GET /metrics and
+    // GET /healthz on this second listener; the linger window keeps it
+    // scrapeable after Fin so end-of-run totals are observable.
+    opts.metrics_addr = so.metrics_addr.clone();
+    opts.metrics_linger = so.metrics_linger;
     // Mix the constructed environment's structural hash into snapshot
     // fingerprints so a resume refuses a dataset rebuilt with different
     // --alpha/--batch/--dim flags (same d/M, different data).
     opts.env_fingerprint = setup.env.env_fingerprint();
-    if let Some(path) = args.get_str("resume") {
+    if let Some(path) = &so.resume {
         match CoordinatorSnapshot::load(std::path::Path::new(path)) {
             Ok(snap) => {
                 println!("resuming from {path} (round {})", snap.next_round());
@@ -811,7 +788,7 @@ fn cmd_serve(args: &ArgMap) -> i32 {
     let m = env.fed.workers();
     let d = init.len();
     let root_ep = coordinator.local_endpoint().clone();
-    let shards_n = args.get::<usize>("shards", 0);
+    let shards_n = so.shards;
     let mut shard_coords = Vec::new();
     for i in 0..shards_n.min(m) {
         let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, shards_n.min(m), i);
@@ -825,10 +802,19 @@ fn cmd_serve(args: &ArgMap) -> i32 {
         sopts.rendezvous_timeout = rendezvous;
         sopts.max_payload = max_payload;
         sopts.env_fingerprint = env_fp;
-        sopts.faults = fault_plan
+        sopts.faults = so
+            .run
+            .faults
             .as_ref()
             .map(|p| p.injector(net::FaultRole::Shard))
             .filter(|inj| !inj.is_empty());
+        // Scrape ports cover the whole tree: each in-process shard gets
+        // a metrics endpoint derived from the root's --metrics-addr and
+        // a registry labelled role="shard",shard="i".
+        if let Some(mep) = &so.metrics_addr {
+            sopts.metrics_addr = Some(shard_listen_endpoint(mep, i));
+            sopts.metrics = Some(net::MetricsRegistry::shard(i));
+        }
         match net::ShardCoordinator::bind(sopts) {
             Ok(sc) => shard_coords.push(sc),
             Err(e) => {
@@ -838,13 +824,28 @@ fn cmd_serve(args: &ArgMap) -> i32 {
         }
     }
     println!("coordinator listening on {root_ep}");
+    if let Some(mep) = coordinator.metrics_endpoint() {
+        println!("metrics on {mep}");
+    }
     for (i, sc) in shard_coords.iter().enumerate() {
         println!("shard {i} listening on {}", sc.local_endpoint());
+        if let Some(mep) = sc.metrics_endpoint() {
+            println!("shard {i} metrics on {mep}");
+        }
     }
-    if let Some(path) = args.get_str("endpoint-file") {
+    if let Some(path) = &so.endpoint_file {
         let mut eps = vec![root_ep.clone()];
         eps.extend(shard_coords.iter().map(|sc| sc.local_endpoint().clone()));
-        if let Err(e) = write_endpoint_file(path, &eps) {
+        let mut comments = Vec::new();
+        if let Some(mep) = coordinator.metrics_endpoint() {
+            comments.push(format!("# metrics root {mep}"));
+        }
+        for (i, sc) in shard_coords.iter().enumerate() {
+            if let Some(mep) = sc.metrics_endpoint() {
+                comments.push(format!("# metrics shard{i} {mep}"));
+            }
+        }
+        if let Err(e) = write_endpoint_file(path, &eps, &comments) {
             eprintln!("endpoint-file {path}: {e}");
             return 1;
         }
@@ -875,7 +876,7 @@ fn cmd_serve(args: &ArgMap) -> i32 {
     match served {
         Ok(hist) => {
             print_net_history("serve", &hist);
-            if let Some(path) = args.get_str("history-json") {
+            if let Some(path) = &so.history_json {
                 if let Err(e) = sparsignd::metrics::write_history_json(path, &hist) {
                     eprintln!("history-json {path}: {e}");
                     return 1;
@@ -889,8 +890,8 @@ fn cmd_serve(args: &ArgMap) -> i32 {
         // successor can `--resume`. Exit code 3 lets supervisors tell
         // "drained" from "broken".
         Err(net::NetError::Drained { rounds_done }) => {
-            match args.get_str("snapshot") {
-                Some(path) => println!(
+            match &so.snapshot {
+                Some((path, _)) => println!(
                     "coordinator drained after {rounds_done} rounds (snapshot at {path})"
                 ),
                 None => println!(
@@ -908,7 +909,11 @@ fn cmd_serve(args: &ArgMap) -> i32 {
 }
 
 fn cmd_fleet(args: &ArgMap) -> i32 {
-    let setup = match net_setup(args) {
+    let fo = match FleetOpts::from_args(args) {
+        Ok(f) => f,
+        Err(e) => return cli_err(e),
+    };
+    let setup = match net_setup(&fo.run) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -917,236 +922,220 @@ fn cmd_fleet(args: &ArgMap) -> i32 {
     };
     let NetSetup { env, run, init } = setup;
     let mut fleet_opts = net::FleetOptions::default();
-    if args.has("agents") {
-        fleet_opts.agents = args.get::<usize>("agents", fleet_opts.agents).max(1);
+    if let Some(agents) = fo.agents {
+        fleet_opts.agents = agents;
     }
-    match parse_fault_plan(args) {
-        Ok(plan) => {
-            fleet_opts.faults = plan
-                .as_ref()
-                .map(|p| p.injector(net::FaultRole::Client))
-                .filter(|inj| !inj.is_empty());
-        }
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    }
+    fleet_opts.faults = fo
+        .run
+        .faults
+        .as_ref()
+        .map(|p| p.injector(net::FaultRole::Client))
+        .filter(|inj| !inj.is_empty());
 
-    // `--shard-line I` serves worker slice `chunk_bounds(m, K, I)` of a
-    // K-shard tree as a standalone process, dialing line `1 + I` of the
-    // endpoint file on every (re)connect — the soak supervisor's fleet
-    // unit, where each sub-fleet must be separately killable.
-    if args.has("shard-line") {
-        let Some(path) = args.get_str("connect-file") else {
-            eprintln!("--shard-line needs --connect-file (line 0 root, line 1 + i shard i)");
-            return 2;
-        };
-        let i = args.get::<usize>("shard-line", 0);
-        let k = args.get::<usize>("shard-count", 0);
-        if k == 0 || i >= k {
-            eprintln!("--shard-line {i} needs --shard-count K with I < K");
-            return 2;
-        }
-        let secs = args.get::<u64>("reconnect-secs", 60);
-        if secs > 0 {
-            fleet_opts.reconnect = Some(std::time::Duration::from_secs(secs));
-        }
-        let m = env.fed.workers();
-        let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, k, i);
-        let src = net::EndpointFileLine(path.into(), 1 + i);
-        return match net::run_fleet_range(&src, &run, &env, lo, hi, &fleet_opts) {
-            Ok(stats) => {
-                print_fleet_stats_tag(&format!("fleet shard {i}"), &stats);
-                0
+    match &fo.mode {
+        // `--shard-line I` serves worker slice `chunk_bounds(m, K, I)`
+        // of a K-shard tree as a standalone process, dialing line
+        // `1 + I` of the endpoint file on every (re)connect — the soak
+        // supervisor's fleet unit, where each sub-fleet must be
+        // separately killable.
+        FleetMode::ShardLine { file, index, count } => {
+            let (i, k) = (*index, *count);
+            if fo.reconnect_secs > 0 {
+                fleet_opts.reconnect = Some(std::time::Duration::from_secs(fo.reconnect_secs));
             }
-            Err(e) => {
-                eprintln!("fleet shard {i}: {e}");
-                1
-            }
-        };
-    }
-
-    // `--via-shards` splits the fleet over the shard lines of an
-    // endpoint file written by `serve --shards N`: sub-fleet i dials
-    // line `1 + i` and hosts worker slice `chunk_bounds(m, N, i)` —
-    // the same partition the serving side claimed.
-    if args.has("via-shards") {
-        let Some(path) = args.get_str("connect-file") else {
-            eprintln!(
-                "--via-shards needs --connect-file (the endpoint layout \
-                 written by `serve --shards N --endpoint-file F`)"
-            );
-            return 2;
-        };
-        let body = match std::fs::read_to_string(path) {
-            Ok(b) => b,
-            Err(e) => {
-                eprintln!("connect-file {path}: {e}");
-                return 2;
-            }
-        };
-        let nshards = body.lines().filter(|l| !l.trim().is_empty()).count().saturating_sub(1);
-        if nshards == 0 {
-            eprintln!(
-                "connect-file {path} has no shard lines \
-                 (serve --shards N writes 1 + N lines)"
-            );
-            return 2;
-        }
-        let secs = args.get::<u64>("reconnect-secs", 60);
-        if secs > 0 {
-            fleet_opts.reconnect = Some(std::time::Duration::from_secs(secs));
-        }
-        let m = env.fed.workers();
-        let run_ref = &run;
-        let env_ref = &env;
-        let fo = &fleet_opts;
-        let results: Vec<_> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..nshards)
-                .map(|i| {
-                    let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, nshards, i);
-                    let src = net::EndpointFileLine(path.into(), 1 + i);
-                    s.spawn(move || net::run_fleet_range(&src, run_ref, env_ref, lo, hi, fo))
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join()).collect()
-        });
-        let mut code = 0;
-        for (i, res) in results.into_iter().enumerate() {
-            match res {
-                Ok(Ok(stats)) => print_fleet_stats_tag(&format!("fleet shard {i}"), &stats),
-                Ok(Err(e)) => {
-                    eprintln!("fleet shard {i}: {e}");
-                    code = 1;
+            let m = env.fed.workers();
+            let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, k, i);
+            let src = net::EndpointFileLine(file.into(), 1 + i);
+            match net::run_fleet_range(&src, &run, &env, lo, hi, &fleet_opts) {
+                Ok(stats) => {
+                    print_fleet_stats_tag(&format!("fleet shard {i}"), &stats);
+                    0
                 }
-                Err(_) => {
-                    eprintln!("fleet shard {i}: panicked");
-                    code = 1;
-                }
-            }
-        }
-        return code;
-    }
-
-    // Join an external coordinator when asked (by address or through an
-    // endpoint file, re-read on every reconnect attempt); default is the
-    // self-contained loopback diff against the in-process engine.
-    let src: Option<Box<dyn net::EndpointSource>> =
-        if let Some(path) = args.get_str("connect-file") {
-            Some(Box::new(net::EndpointFile(path.into())))
-        } else if let Some(addr) = args.get_str("connect") {
-            match net::Endpoint::parse(addr) {
-                Ok(ep) => Some(Box::new(ep)),
                 Err(e) => {
-                    eprintln!("{e}");
+                    eprintln!("fleet shard {i}: {e}");
+                    1
+                }
+            }
+        }
+
+        // `--via-shards` splits the fleet over the shard lines of an
+        // endpoint file written by `serve --shards N`: sub-fleet i dials
+        // line `1 + i` and hosts worker slice `chunk_bounds(m, N, i)` —
+        // the same partition the serving side claimed.
+        FleetMode::ViaShards { file } => {
+            let body = match std::fs::read_to_string(file) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("connect-file {file}: {e}");
                     return 2;
                 }
+            };
+            // `# metrics …` comment lines trail the endpoint lines;
+            // only real endpoint lines count toward the shard count.
+            let nshards = body
+                .lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .count()
+                .saturating_sub(1);
+            if nshards == 0 {
+                eprintln!(
+                    "connect-file {file} has no shard lines \
+                     (serve --shards N writes 1 + N lines)"
+                );
+                return 2;
             }
-        } else {
-            None
-        };
-    if let Some(src) = src {
-        // External fleets survive coordinator restarts by default; 0
-        // disables (fail fast on the first connection loss).
-        let secs = args.get::<u64>("reconnect-secs", 60);
-        if secs > 0 {
-            fleet_opts.reconnect = Some(std::time::Duration::from_secs(secs));
+            if fo.reconnect_secs > 0 {
+                fleet_opts.reconnect = Some(std::time::Duration::from_secs(fo.reconnect_secs));
+            }
+            let m = env.fed.workers();
+            let run_ref = &run;
+            let env_ref = &env;
+            let fopts = &fleet_opts;
+            let results: Vec<_> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..nshards)
+                    .map(|i| {
+                        let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, nshards, i);
+                        let src = net::EndpointFileLine(file.into(), 1 + i);
+                        s.spawn(move || net::run_fleet_range(&src, run_ref, env_ref, lo, hi, fopts))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join()).collect()
+            });
+            let mut code = 0;
+            for (i, res) in results.into_iter().enumerate() {
+                match res {
+                    Ok(Ok(stats)) => print_fleet_stats_tag(&format!("fleet shard {i}"), &stats),
+                    Ok(Err(e)) => {
+                        eprintln!("fleet shard {i}: {e}");
+                        code = 1;
+                    }
+                    Err(_) => {
+                        eprintln!("fleet shard {i}: panicked");
+                        code = 1;
+                    }
+                }
+            }
+            code
         }
-        return match net::run_fleet_src(&*src, &run, &env, &fleet_opts) {
-            Ok(stats) => {
-                print_fleet_stats(&stats);
-                0
-            }
-            Err(e) => {
-                eprintln!("fleet: {e}");
-                1
-            }
-        };
-    }
 
-    // Protocol-level attacks (straggle/equivocate) make acceptance
-    // timing-dependent — the in-process engine has no frames to reject —
-    // so the bit-identity diff only gates gradient-level (or honest)
-    // runs. Attacked-transport runs are judged by their typed rejects.
-    let protocol_attacks =
-        run.attack.as_ref().map(|p| p.has_protocol_attacks()).unwrap_or(false);
-    let in_process =
-        (!protocol_attacks).then(|| run.run(&env, init.clone(), &|p| env.evaluate(p)));
-    let uds = args.str_or("transport", "tcp") == "uds";
-    let mut serve_opts = net::ServeOptions::new(net::client::loopback_endpoint(uds));
-    if protocol_attacks {
-        // Stragglers hold updates past the round deadline; without one the
-        // round would wait for them and the attack would degenerate.
-        let deadline_ms = args.get::<u64>("deadline-ms", 2_000);
-        serve_opts.round_deadline = Some(std::time::Duration::from_millis(deadline_ms));
-    }
-    let eval = |p: &[f32]| env.evaluate(p);
-    // `--shards N` routes the same loopback run through an in-process
-    // aggregation tree (N shard tiers between fleet and root); the
-    // bit-identity diff below is the tree's correctness gate.
-    let nshards = args.get::<usize>("shards", 0);
-    let (wire_hist, stats) = if nshards > 0 {
-        let (hist, stats, shard_stats) = match net::run_loopback_sharded(
-            &run,
-            &env,
-            init,
-            &eval,
-            serve_opts,
-            &fleet_opts,
-            nshards,
-            uds,
-        ) {
-            Ok(out) => out,
-            Err(e) => {
-                eprintln!("sharded loopback: {e}");
-                return 1;
+        // Join an external coordinator (by address or through an
+        // endpoint file, re-read on every reconnect attempt). External
+        // fleets survive coordinator restarts by default; 0 disables
+        // (fail fast on the first connection loss).
+        FleetMode::ConnectFile { file } => {
+            if fo.reconnect_secs > 0 {
+                fleet_opts.reconnect = Some(std::time::Duration::from_secs(fo.reconnect_secs));
             }
-        };
-        for (i, st) in shard_stats.iter().enumerate() {
-            print_shard_stats(i, st);
-        }
-        (hist, stats)
-    } else {
-        match net::run_loopback(&run, &env, init, &eval, serve_opts, &fleet_opts) {
-            Ok(out) => out,
-            Err(e) => {
-                eprintln!("loopback: {e}");
-                return 1;
+            let src = net::EndpointFile(file.into());
+            match net::run_fleet_src(&src, &run, &env, &fleet_opts) {
+                Ok(stats) => {
+                    print_fleet_stats(&stats);
+                    0
+                }
+                Err(e) => {
+                    eprintln!("fleet: {e}");
+                    1
+                }
             }
         }
-    };
-    print_net_history("loopback", &wire_hist);
-    print_fleet_stats(&stats);
-    match in_process {
-        None => {
-            println!(
-                "protocol-level attack plan: loopback diff skipped \
-                 (typed rejects above are the acceptance signal)"
-            );
-            0
+        FleetMode::Connect { addr } => {
+            if fo.reconnect_secs > 0 {
+                fleet_opts.reconnect = Some(std::time::Duration::from_secs(fo.reconnect_secs));
+            }
+            match net::run_fleet_src(addr, &run, &env, &fleet_opts) {
+                Ok(stats) => {
+                    print_fleet_stats(&stats);
+                    0
+                }
+                Err(e) => {
+                    eprintln!("fleet: {e}");
+                    1
+                }
+            }
         }
-        Some(in_process) => match diff_histories(&in_process, &wire_hist) {
-            Ok(()) => {
-                println!("RunHistory identical to the in-process engine (same seed): PASS");
-                0
-            }
-            Err(e) => {
-                eprintln!("RunHistory DIVERGED from the in-process engine: {e}");
-                1
-            }
-        },
-    }
-}
 
-/// Parse `--faults SPEC` (with `--fault-seed S`, default 7) into a
-/// [`net::FaultPlan`]; `Ok(None)` when the flag is absent.
-fn parse_fault_plan(args: &ArgMap) -> Result<Option<net::FaultPlan>, String> {
-    let Some(spec) = args.get_str("faults") else {
-        return Ok(None);
-    };
-    let seed = args.get::<u64>("fault-seed", 7);
-    net::FaultPlan::parse(spec, seed).map(Some).map_err(|e| format!("--faults: {e}"))
+        // Default: the self-contained loopback diff against the
+        // in-process engine.
+        FleetMode::Loopback { uds, shards, deadline_ms } => {
+            // Protocol-level attacks (straggle/equivocate) make
+            // acceptance timing-dependent — the in-process engine has
+            // no frames to reject — so the bit-identity diff only gates
+            // gradient-level (or honest) runs. Attacked-transport runs
+            // are judged by their typed rejects.
+            let protocol_attacks =
+                run.attack.as_ref().map(|p| p.has_protocol_attacks()).unwrap_or(false);
+            let in_process =
+                (!protocol_attacks).then(|| run.run(&env, init.clone(), &|p| env.evaluate(p)));
+            let uds = *uds;
+            let mut serve_opts = net::ServeOptions::new(net::client::loopback_endpoint(uds));
+            if protocol_attacks {
+                // Stragglers hold updates past the round deadline; without
+                // one the round would wait for them and the attack would
+                // degenerate.
+                serve_opts.round_deadline = Some(std::time::Duration::from_millis(*deadline_ms));
+            }
+            let eval = |p: &[f32]| env.evaluate(p);
+            // `--shards N` routes the same loopback run through an
+            // in-process aggregation tree (N shard tiers between fleet
+            // and root); the bit-identity diff below is the tree's
+            // correctness gate.
+            let nshards = *shards;
+            let (wire_hist, stats) = if nshards > 0 {
+                let (hist, stats, shard_stats) = match net::run_loopback_sharded(
+                    &run,
+                    &env,
+                    init,
+                    &eval,
+                    serve_opts,
+                    &fleet_opts,
+                    nshards,
+                    uds,
+                ) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        eprintln!("sharded loopback: {e}");
+                        return 1;
+                    }
+                };
+                for (i, st) in shard_stats.iter().enumerate() {
+                    print_shard_stats(i, st);
+                }
+                (hist, stats)
+            } else {
+                match net::run_loopback(&run, &env, init, &eval, serve_opts, &fleet_opts) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        eprintln!("loopback: {e}");
+                        return 1;
+                    }
+                }
+            };
+            print_net_history("loopback", &wire_hist);
+            print_fleet_stats(&stats);
+            match in_process {
+                None => {
+                    println!(
+                        "protocol-level attack plan: loopback diff skipped \
+                         (typed rejects above are the acceptance signal)"
+                    );
+                    0
+                }
+                Some(in_process) => match diff_histories(&in_process, &wire_hist) {
+                    Ok(()) => {
+                        println!(
+                            "RunHistory identical to the in-process engine (same seed): PASS"
+                        );
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("RunHistory DIVERGED from the in-process engine: {e}");
+                        1
+                    }
+                },
+            }
+        }
+    }
 }
 
 /// One aggregator shard as its own OS process: bind `--listen`, publish
@@ -1155,7 +1144,11 @@ fn parse_fault_plan(args: &ArgMap) -> Result<Option<net::FaultPlan>, String> {
 /// rounds until `Fin`. The soak supervisor forks one of these per
 /// shard so each is separately killable.
 fn cmd_shard(args: &ArgMap) -> i32 {
-    let setup = match net_setup(args) {
+    let sh = match ShardOpts::from_args(args) {
+        Ok(s) => s,
+        Err(e) => return cli_err(e),
+    };
+    let setup = match net_setup(&sh.run) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
@@ -1165,65 +1158,40 @@ fn cmd_shard(args: &ArgMap) -> i32 {
     let NetSetup { env, run, init } = setup;
     let m = env.fed.workers();
     let d = init.len();
-    let i = args.get::<usize>("index", 0);
-    let k = args.get::<usize>("shard-count", 0);
-    if k == 0 || i >= k {
-        eprintln!("shard needs --index I --shard-count K with I < K");
-        return 2;
-    }
-    let listen = match net::Endpoint::parse(args.str_or("listen", "tcp://127.0.0.1:0")) {
-        Ok(ep) => ep,
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
+    let i = sh.index;
     // Upstream: a fixed address, or line 0 of an endpoint file re-read
     // on every (re)connect so a respawned root's fresh address is
     // picked up. With a file the fixed endpoint is never dialed; any
     // parseable placeholder satisfies the options struct.
-    let upstream_file = args
-        .get_str("connect-file")
-        .map(|p| (std::path::PathBuf::from(p), 0usize));
-    let upstream = if upstream_file.is_some() {
-        net::Endpoint::Tcp("127.0.0.1:0".into())
-    } else if let Some(addr) = args.get_str("connect") {
-        match net::Endpoint::parse(addr) {
-            Ok(ep) => ep,
-            Err(e) => {
-                eprintln!("{e}");
-                return 2;
-            }
-        }
-    } else {
-        eprintln!("shard needs --connect EP or --connect-file F");
-        return 2;
+    let (upstream, upstream_file) = match &sh.upstream {
+        ShardUpstream::File { file } => (
+            net::Endpoint::Tcp("127.0.0.1:0".into()),
+            Some((std::path::PathBuf::from(file), 0usize)),
+        ),
+        ShardUpstream::Addr { addr } => (addr.clone(), None),
     };
-    let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, k, i);
-    let mut sopts = net::ShardOptions::new(upstream, listen, lo, hi);
+    let (lo, hi) = sparsignd::coordinator::chunk_bounds(m, sh.shard_count, i);
+    let mut sopts = net::ShardOptions::new(upstream, sh.listen.clone(), lo, hi);
     sopts.upstream_file = upstream_file;
-    let secs = args.get::<u64>("reconnect-secs", 60);
-    if secs > 0 {
-        sopts.reconnect = Some(std::time::Duration::from_secs(secs));
+    if sh.reconnect_secs > 0 {
+        sopts.reconnect = Some(std::time::Duration::from_secs(sh.reconnect_secs));
     }
-    sopts.rendezvous_timeout =
-        std::time::Duration::from_secs(args.get::<u64>("rendezvous-secs", 120));
-    let deadline_ms = args.get::<u64>("deadline-ms", 0);
-    if deadline_ms > 0 {
-        sopts.round_deadline = Some(std::time::Duration::from_millis(deadline_ms));
+    sopts.rendezvous_timeout = std::time::Duration::from_secs(sh.rendezvous_secs);
+    if sh.deadline_ms > 0 {
+        sopts.round_deadline = Some(std::time::Duration::from_millis(sh.deadline_ms));
     }
     sopts.env_fingerprint = env.env_fingerprint();
-    match parse_fault_plan(args) {
-        Ok(plan) => {
-            sopts.faults = plan
-                .as_ref()
-                .map(|p| p.injector(net::FaultRole::Shard))
-                .filter(|inj| !inj.is_empty());
-        }
-        Err(e) => {
-            eprintln!("{e}");
-            return 2;
-        }
+    sopts.faults = sh
+        .run
+        .faults
+        .as_ref()
+        .map(|p| p.injector(net::FaultRole::Shard))
+        .filter(|inj| !inj.is_empty());
+    // The shard's own scrape port, labelled by tree position (not by
+    // worker range — the range can move when K changes).
+    if sh.metrics_addr.is_some() {
+        sopts.metrics_addr = sh.metrics_addr.clone();
+        sopts.metrics = Some(net::MetricsRegistry::shard(i));
     }
     let sc = match net::ShardCoordinator::bind(sopts) {
         Ok(sc) => sc,
@@ -1233,8 +1201,16 @@ fn cmd_shard(args: &ArgMap) -> i32 {
         }
     };
     println!("shard {i} listening on {}", sc.local_endpoint());
-    if let Some(path) = args.get_str("publish-file") {
-        if let Err(e) = write_endpoint_file(path, &[sc.local_endpoint().clone()]) {
+    if let Some(mep) = sc.metrics_endpoint() {
+        println!("shard {i} metrics on {mep}");
+    }
+    if let Some(path) = &sh.publish_file {
+        let comments: Vec<String> = sc
+            .metrics_endpoint()
+            .map(|mep| format!("# metrics shard{i} {mep}"))
+            .into_iter()
+            .collect();
+        if let Err(e) = write_endpoint_file(path, &[sc.local_endpoint().clone()], &comments) {
             eprintln!("publish-file {path}: {e}");
             return 1;
         }
@@ -1252,9 +1228,15 @@ fn cmd_shard(args: &ArgMap) -> i32 {
 }
 
 /// Churn soak: run the reference and faulted pipelines via
-/// [`net::run_soak`] and gate on bit-identical history JSON.
+/// [`net::run_soak`] and gate on bit-identical history JSON (and, when
+/// the faulted root exposes a scrape port, on the `/metrics` round
+/// gauge never going backwards across coordinator generations).
 fn cmd_soak(args: &ArgMap) -> i32 {
-    let dir = std::path::PathBuf::from(args.str_or("dir", "target/soak"));
+    let sk = match SoakOpts::from_args(args) {
+        Ok(s) => s,
+        Err(e) => return cli_err(e),
+    };
+    let dir = std::path::PathBuf::from(&sk.dir);
     let binary = match std::env::current_exe() {
         Ok(p) => p,
         Err(e) => {
@@ -1263,39 +1245,33 @@ fn cmd_soak(args: &ArgMap) -> i32 {
         }
     };
     let mut opts = net::SoakOptions::new(dir, binary);
-    opts.rounds = args.get::<usize>("rounds", opts.rounds);
-    opts.clients = args.get::<usize>("clients", opts.clients);
-    opts.shards = args.get::<usize>("shards", opts.shards).max(1);
-    if let Some(spec) = args.get_str("faults") {
-        opts.faults = spec.to_string();
+    if let Some(rounds) = sk.rounds {
+        opts.rounds = rounds;
     }
-    opts.fault_seed = args.get::<u64>("fault-seed", opts.fault_seed);
-    opts.uds = args.str_or("transport", "tcp") == "uds";
-    opts.heal_attempts = args.get::<usize>("heal-attempts", opts.heal_attempts);
-    opts.reconnect_secs = args.get::<u64>("reconnect-secs", opts.reconnect_secs);
-    opts.timeout = std::time::Duration::from_secs(args.get::<u64>("timeout-secs", 600));
+    if let Some(clients) = sk.clients {
+        opts.clients = clients;
+    }
+    if let Some(shards) = sk.shards {
+        opts.shards = shards;
+    }
+    if let Some(spec) = &sk.faults {
+        opts.faults = spec.clone();
+    }
+    if let Some(fault_seed) = sk.fault_seed {
+        opts.fault_seed = fault_seed;
+    }
+    opts.uds = sk.uds;
+    if let Some(heal) = sk.heal_attempts {
+        opts.heal_attempts = heal;
+    }
+    if let Some(secs) = sk.reconnect_secs {
+        opts.reconnect_secs = secs;
+    }
+    opts.timeout = std::time::Duration::from_secs(sk.timeout_secs);
     // Forward the training flags every child must agree on (the soak
     // children each rebuild the same environment from the same flags,
     // exactly as a distributed serve/fleet pair does).
-    for key in [
-        "dim",
-        "classes",
-        "batch",
-        "alpha",
-        "seed",
-        "lr",
-        "participation",
-        "eval-every",
-        "selection",
-        "compressor",
-        "aggregation",
-        "data",
-        "hidden",
-    ] {
-        if let Some(v) = args.get_str(key) {
-            opts.pass.push((key.to_string(), v.to_string()));
-        }
-    }
+    opts.pass = sk.pass.clone();
     match net::run_soak(&opts) {
         Ok(report) => {
             println!(
@@ -1308,17 +1284,27 @@ fn cmd_soak(args: &ArgMap) -> i32 {
                 report.agent_restarts
             );
             println!("[soak] event log: {}", report.event_log.display());
-            if report.identical {
-                println!("[soak] history bit-identical under churn: PASS");
-                0
-            } else {
+            println!(
+                "[soak] metrics: {} scrapes over {} coordinator generations | \
+                 round gauge monotonic: {}",
+                report.metrics_scrapes,
+                report.metrics_generations,
+                if report.round_gauge_monotonic { "PASS" } else { "FAIL" }
+            );
+            if !report.identical {
                 eprintln!(
                     "[soak] history DIVERGED under churn: cmp {} {}",
                     report.reference_json.display(),
                     report.faulted_json.display()
                 );
-                1
+                return 1;
             }
+            println!("[soak] history bit-identical under churn: PASS");
+            if !report.round_gauge_monotonic {
+                eprintln!("[soak] metrics round gauge went backwards across generations");
+                return 1;
+            }
+            0
         }
         Err(e) => {
             eprintln!("soak: {e}");
@@ -1412,6 +1398,9 @@ const GATED_KEYS: &[&str] = &[
 
 fn cmd_benchdiff(args: &ArgMap) -> i32 {
     use sparsignd::metrics::{parse_flat_json, FlatVal};
+    if let Err(e) = opts::check_known(args, "benchdiff", &["baseline", "fresh", "tolerance"]) {
+        return cli_err(e);
+    }
     let (baseline_path, fresh_path) = match (args.get_str("baseline"), args.get_str("fresh")) {
         (Some(b), Some(f)) => (b, f),
         _ => {
@@ -1516,7 +1505,10 @@ fn cmd_benchdiff(args: &ArgMap) -> i32 {
     }
 }
 
-fn cmd_artifacts() -> i32 {
+fn cmd_artifacts(args: &ArgMap) -> i32 {
+    if let Err(e) = opts::check_known(args, "artifacts", &[]) {
+        return cli_err(e);
+    }
     match sparsignd::runtime::Runtime::cpu("artifacts") {
         Ok(rt) => {
             println!("platform: {}", rt.platform());

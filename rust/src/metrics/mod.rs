@@ -6,6 +6,8 @@
 //! seeded [`RunHistory`]s and [`TablePrinter`] renders the paper-style
 //! table.
 
+pub mod registry;
+
 use crate::coordinator::RunHistory;
 use crate::util::stats::{self, fmt_bits, fmt_pct};
 

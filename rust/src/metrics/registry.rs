@@ -1,0 +1,438 @@
+//! Live observability registry: lock-cheap atomic counters/gauges fed
+//! from the points where the coordinator / shard drivers already
+//! observe the facts (`CommLedger` annotation, `PhaseTracker`
+//! transitions, `RoundTable` close, `EventLog` emits), plus a
+//! dependency-free Prometheus text-exposition encoder.
+//!
+//! # Contract
+//!
+//! * **Feeding is wait-free.** Every mutator is a single relaxed
+//!   atomic op; the round hot path never takes a lock or allocates to
+//!   update a metric. Like the [`EventLog`], observability must never
+//!   fail — or slow — the run it observes.
+//! * **Counters bit-match the ledger.** The driver feeds each counter
+//!   at the *same call site*, with the *same value*, as the
+//!   corresponding `CommLedger` annotation, so at run end
+//!   `sparsignd_uplink_wire_bytes_total` equals
+//!   `CommLedger::total_uplink_wire_bytes()` exactly (pinned by
+//!   `tests/metrics_scrape.rs`).
+//! * **Rendering reads live.** [`MetricsRegistry::render`] is called
+//!   from the reactor's HTTP responder on the same thread that pumps
+//!   the protocol; it only loads atomics and formats integers, so a
+//!   scrape costs microseconds and can never stall a round close.
+//!
+//! Label grammar (DESIGN.md §17): every sample carries a `role` label
+//! (`root` or `shard`), shard registries additionally carry
+//! `shard="<index>"`, and the per-kind reject counter fans out over a
+//! `kind` label matching the ledger's `rejects_by_kind` order.
+//!
+//! [`EventLog`]: crate::net::EventLog
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::REJECT_KINDS;
+
+/// Round-phase gauge values (`sparsignd_round_phase`). A scraper can
+/// map the number back through DESIGN.md §17's table.
+pub mod phase {
+    /// Waiting: rendezvous, or between rounds.
+    pub const IDLE: u64 = 0;
+    /// A `RoundOpen` broadcast is out.
+    pub const OPEN: u64 = 1;
+    /// Collecting updates for the open round.
+    pub const AGGREGATE: u64 = 2;
+    /// Folding + broadcasting the round result.
+    pub const BROADCAST: u64 = 3;
+    /// `Fin` sent; the run is over (the linger window scrapes this).
+    pub const FINISHED: u64 = 4;
+}
+
+/// Reject-kind label values, in the ledger's `rejects_by_kind` /
+/// [`RejectReason::index`] order.
+///
+/// [`RejectReason::index`]: crate::net::RejectReason::index
+pub const REJECT_KIND_LABELS: [&str; REJECT_KINDS] =
+    ["bad_round", "not_selected", "duplicate", "late", "unknown_worker", "wrong_client"];
+
+/// The shared registry. Cloned as an `Arc` into the driver (writer) and
+/// the reactor's scrape responder (reader); all fields are plain
+/// `AtomicU64`s so neither side ever blocks the other.
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    /// Pre-rendered constant label set (e.g. `role="shard",shard="1"`).
+    labels: String,
+
+    // Gauges.
+    round_phase: AtomicU64,
+    round: AtomicU64,
+    roster_workers: AtomicU64,
+    cohort_size: AtomicU64,
+    snapshot_age_rounds: AtomicU64,
+
+    // Counters.
+    rounds_closed: AtomicU64,
+    stragglers: AtomicU64,
+    heal_attempts: AtomicU64,
+    upstream_reconnects: AtomicU64,
+    uplink_wire_bytes: AtomicU64,
+    downlink_wire_bytes: AtomicU64,
+    shard_uplink_wire_bytes: AtomicU64,
+    shard_downlink_wire_bytes: AtomicU64,
+    rejects: [AtomicU64; REJECT_KINDS],
+    scrapes: AtomicU64,
+    scrapers_dropped: AtomicU64,
+}
+
+impl MetricsRegistry {
+    fn with_labels(labels: String) -> Arc<Self> {
+        Arc::new(MetricsRegistry {
+            labels,
+            round_phase: AtomicU64::new(phase::IDLE),
+            round: AtomicU64::new(0),
+            roster_workers: AtomicU64::new(0),
+            cohort_size: AtomicU64::new(0),
+            snapshot_age_rounds: AtomicU64::new(0),
+            rounds_closed: AtomicU64::new(0),
+            stragglers: AtomicU64::new(0),
+            heal_attempts: AtomicU64::new(0),
+            upstream_reconnects: AtomicU64::new(0),
+            uplink_wire_bytes: AtomicU64::new(0),
+            downlink_wire_bytes: AtomicU64::new(0),
+            shard_uplink_wire_bytes: AtomicU64::new(0),
+            shard_downlink_wire_bytes: AtomicU64::new(0),
+            rejects: Default::default(),
+            scrapes: AtomicU64::new(0),
+            scrapers_dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Registry for the root coordinator (`role="root"`).
+    pub fn root() -> Arc<Self> {
+        Self::with_labels("role=\"root\"".into())
+    }
+
+    /// Registry for aggregator shard `i` (`role="shard",shard="i"`).
+    pub fn shard(i: usize) -> Arc<Self> {
+        Self::with_labels(format!("role=\"shard\",shard=\"{i}\""))
+    }
+
+    // -- gauge mutators (one relaxed store each) ----------------------
+
+    /// Set the round-phase gauge (a [`phase`] constant).
+    pub fn set_phase(&self, p: u64) {
+        self.round_phase.store(p, Ordering::Relaxed);
+    }
+
+    /// Set the current-round gauge (0-based round index).
+    pub fn set_round(&self, t: u64) {
+        self.round.store(t, Ordering::Relaxed);
+    }
+
+    /// A claim covered `n` more workers (rendezvous / reclaim).
+    pub fn roster_add(&self, n: u64) {
+        self.roster_workers.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A dead connection released a claim over `n` workers.
+    pub fn roster_sub(&self, n: u64) {
+        // Saturating: a release can only follow a claim, but a metrics
+        // bug must never panic the driver.
+        let _ = self.roster_workers.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(n))
+        });
+    }
+
+    /// Set the selected-cohort-size gauge for the open round.
+    pub fn set_cohort(&self, n: u64) {
+        self.cohort_size.store(n, Ordering::Relaxed);
+    }
+
+    /// Set the rounds-since-last-snapshot gauge.
+    pub fn set_snapshot_age(&self, rounds: u64) {
+        self.snapshot_age_rounds.store(rounds, Ordering::Relaxed);
+    }
+
+    // -- counter mutators ---------------------------------------------
+
+    /// Fold one closed round's wire accounting — called at the exact
+    /// `CommLedger::annotate_wire_tiered` call site with the same
+    /// values, which is what makes the totals bit-match `history_json`.
+    pub fn observe_round_close(
+        &self,
+        uplink_wire_bytes: u64,
+        downlink_wire_bytes: u64,
+        shard_uplink_wire_bytes: u64,
+        shard_downlink_wire_bytes: u64,
+        stragglers: u64,
+    ) {
+        self.rounds_closed.fetch_add(1, Ordering::Relaxed);
+        self.uplink_wire_bytes.fetch_add(uplink_wire_bytes, Ordering::Relaxed);
+        self.downlink_wire_bytes.fetch_add(downlink_wire_bytes, Ordering::Relaxed);
+        self.shard_uplink_wire_bytes.fetch_add(shard_uplink_wire_bytes, Ordering::Relaxed);
+        self.shard_downlink_wire_bytes.fetch_add(shard_downlink_wire_bytes, Ordering::Relaxed);
+        self.stragglers.fetch_add(stragglers, Ordering::Relaxed);
+    }
+
+    /// Fold a typed-reject batch — called at the `CommLedger::add_rejects`
+    /// call sites with the same array.
+    pub fn add_rejects(&self, by_kind: &[u64; REJECT_KINDS]) {
+        for (acc, &n) in self.rejects.iter().zip(by_kind) {
+            if n > 0 {
+                acc.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Shard-tier downlink bytes received outside a round close (a
+    /// shard counts upstream control frames per frame, since its
+    /// downlink is not attributable to one local round).
+    pub fn add_shard_downlink_wire_bytes(&self, n: u64) {
+        self.shard_downlink_wire_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// One strict-healing re-open (`recoverage` event).
+    pub fn inc_heal_attempt(&self) {
+        self.heal_attempts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One shard→root redial after an upstream loss (shards only).
+    pub fn inc_upstream_reconnect(&self) {
+        self.upstream_reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One successful `/metrics` response (fed by the reactor).
+    pub fn inc_scrape(&self) {
+        self.scrapes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One scraper connection dropped for hostility (oversized request,
+    /// non-GET, unknown path, over the connection cap).
+    pub fn inc_scraper_dropped(&self) {
+        self.scrapers_dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    // -- rendering ----------------------------------------------------
+
+    /// Render the Prometheus text exposition (format 0.0.4). Pure
+    /// atomic loads + integer formatting; no locks, no I/O.
+    pub fn render(&self) -> String {
+        let mut s = String::with_capacity(2048);
+        let mut gauge = |name: &str, help: &str, v: u64| {
+            sample(&mut s, name, help, "gauge", &self.labels, "", v);
+        };
+        gauge("sparsignd_round_phase", "Round phase (0 idle, 1 open, 2 aggregate, 3 broadcast, 4 finished).", self.round_phase.load(Ordering::Relaxed));
+        gauge("sparsignd_round", "Current 0-based round index.", self.round.load(Ordering::Relaxed));
+        gauge("sparsignd_roster_workers", "Workers covered by live connection claims.", self.roster_workers.load(Ordering::Relaxed));
+        gauge("sparsignd_cohort_size", "Workers selected for the open round.", self.cohort_size.load(Ordering::Relaxed));
+        gauge("sparsignd_snapshot_age_rounds", "Rounds closed since the last snapshot.", self.snapshot_age_rounds.load(Ordering::Relaxed));
+        let mut counter = |name: &str, help: &str, v: u64| {
+            sample(&mut s, name, help, "counter", &self.labels, "", v);
+        };
+        counter("sparsignd_rounds_closed_total", "Rounds closed (ledgered) by this process.", self.rounds_closed.load(Ordering::Relaxed));
+        counter("sparsignd_stragglers_total", "Selected workers that missed a round close.", self.stragglers.load(Ordering::Relaxed));
+        counter("sparsignd_heal_attempts_total", "Strict-healing round re-opens.", self.heal_attempts.load(Ordering::Relaxed));
+        counter("sparsignd_upstream_reconnects_total", "Shard-to-root redials after an upstream loss.", self.upstream_reconnects.load(Ordering::Relaxed));
+        counter("sparsignd_uplink_wire_bytes_total", "Client-tier uplink frame bytes in closed rounds.", self.uplink_wire_bytes.load(Ordering::Relaxed));
+        counter("sparsignd_downlink_wire_bytes_total", "Client-tier downlink frame bytes in closed rounds.", self.downlink_wire_bytes.load(Ordering::Relaxed));
+        counter("sparsignd_shard_uplink_wire_bytes_total", "Shard-tier uplink frame bytes in closed rounds.", self.shard_uplink_wire_bytes.load(Ordering::Relaxed));
+        counter("sparsignd_shard_downlink_wire_bytes_total", "Shard-tier downlink frame bytes in closed rounds.", self.shard_downlink_wire_bytes.load(Ordering::Relaxed));
+        counter("sparsignd_scrapes_total", "Successful /metrics responses.", self.scrapes.load(Ordering::Relaxed));
+        counter("sparsignd_scrapers_dropped_total", "Scraper connections dropped for hostility.", self.scrapers_dropped.load(Ordering::Relaxed));
+        // The per-kind reject counter is one family with a `kind` label.
+        s.push_str("# HELP sparsignd_rejects_total Typed protocol rejects, by kind.\n");
+        s.push_str("# TYPE sparsignd_rejects_total counter\n");
+        for (kind, acc) in REJECT_KIND_LABELS.iter().zip(&self.rejects) {
+            s.push_str(&format!(
+                "sparsignd_rejects_total{{{},kind=\"{kind}\"}} {}\n",
+                self.labels,
+                acc.load(Ordering::Relaxed)
+            ));
+        }
+        s
+    }
+
+    /// Snapshot of the per-kind reject counters (ledger order).
+    pub fn rejects_by_kind(&self) -> [u64; REJECT_KINDS] {
+        let mut out = [0u64; REJECT_KINDS];
+        for (o, acc) in out.iter_mut().zip(&self.rejects) {
+            *o = acc.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+fn sample(
+    s: &mut String,
+    name: &str,
+    help: &str,
+    mtype: &str,
+    labels: &str,
+    extra: &str,
+    v: u64,
+) {
+    s.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {mtype}\n"));
+    s.push_str(&format!("{name}{{{labels}{extra}}} {v}\n"));
+}
+
+/// One parsed exposition sample: metric name, `(label, value)` pairs,
+/// integer sample value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: u64,
+}
+
+/// Parse the subset of the Prometheus text format [`render`] emits
+/// (`name{k="v",…} integer` lines; `#` comment lines skipped). Used by
+/// the scrape tests and the soak supervisor's monotonicity check —
+/// deliberately minimal, like [`parse_flat_json`].
+///
+/// [`render`]: MetricsRegistry::render
+/// [`parse_flat_json`]: super::parse_flat_json
+pub fn parse_exposition(body: &str) -> Result<Vec<Sample>, String> {
+    let mut out = Vec::new();
+    for line in body.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let open = line.find('{').ok_or_else(|| format!("no label block in {line:?}"))?;
+        let close = line.rfind('}').ok_or_else(|| format!("no label close in {line:?}"))?;
+        if close < open {
+            return Err(format!("malformed label block in {line:?}"));
+        }
+        let name = line[..open].to_string();
+        let mut labels = Vec::new();
+        for pair in line[open + 1..close].split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').ok_or_else(|| format!("bad label {pair:?}"))?;
+            let v = v.strip_prefix('"').and_then(|v| v.strip_suffix('"'));
+            let v = v.ok_or_else(|| format!("unquoted label value in {pair:?}"))?;
+            labels.push((k.to_string(), v.to_string()));
+        }
+        let value = line[close + 1..]
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| format!("bad sample value in {line:?}"))?;
+        out.push(Sample { name, labels, value });
+    }
+    Ok(out)
+}
+
+/// The value of `name` in a parsed exposition, requiring every label in
+/// `want` to match. `None` if absent.
+pub fn sample_value(samples: &[Sample], name: &str, want: &[(&str, &str)]) -> Option<u64> {
+    samples
+        .iter()
+        .find(|s| {
+            s.name == name
+                && want.iter().all(|(k, v)| {
+                    s.labels.iter().any(|(lk, lv)| lk == k && lv == v)
+                })
+        })
+        .map(|s| s.value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_render_bit_exact_totals() {
+        let r = MetricsRegistry::root();
+        r.observe_round_close(100, 200, 30, 40, 2);
+        r.observe_round_close(1, 2, 3, 4, 0);
+        r.add_rejects(&[1, 0, 2, 0, 0, 0]);
+        r.add_rejects(&[0, 0, 1, 0, 0, 5]);
+        let samples = parse_exposition(&r.render()).expect("render parses");
+        let root = [("role", "root")];
+        assert_eq!(sample_value(&samples, "sparsignd_rounds_closed_total", &root), Some(2));
+        assert_eq!(sample_value(&samples, "sparsignd_uplink_wire_bytes_total", &root), Some(101));
+        assert_eq!(sample_value(&samples, "sparsignd_downlink_wire_bytes_total", &root), Some(202));
+        assert_eq!(
+            sample_value(&samples, "sparsignd_shard_uplink_wire_bytes_total", &root),
+            Some(33)
+        );
+        assert_eq!(
+            sample_value(&samples, "sparsignd_shard_downlink_wire_bytes_total", &root),
+            Some(44)
+        );
+        assert_eq!(sample_value(&samples, "sparsignd_stragglers_total", &root), Some(2));
+        assert_eq!(r.rejects_by_kind(), [1, 0, 3, 0, 0, 5]);
+        assert_eq!(
+            sample_value(
+                &samples,
+                "sparsignd_rejects_total",
+                &[("role", "root"), ("kind", "duplicate")]
+            ),
+            Some(3)
+        );
+        assert_eq!(
+            sample_value(
+                &samples,
+                "sparsignd_rejects_total",
+                &[("role", "root"), ("kind", "wrong_client")]
+            ),
+            Some(5)
+        );
+    }
+
+    #[test]
+    fn label_grammar_distinguishes_roles_and_shards() {
+        let s1 = MetricsRegistry::shard(1);
+        s1.set_round(7);
+        let body = s1.render();
+        assert!(body.contains("sparsignd_round{role=\"shard\",shard=\"1\"} 7"));
+        let samples = parse_exposition(&body).expect("parses");
+        assert_eq!(
+            sample_value(&samples, "sparsignd_round", &[("role", "shard"), ("shard", "1")]),
+            Some(7)
+        );
+        assert_eq!(sample_value(&samples, "sparsignd_round", &[("shard", "0")]), None);
+    }
+
+    #[test]
+    fn gauges_overwrite_and_roster_saturates() {
+        let r = MetricsRegistry::root();
+        r.set_phase(phase::AGGREGATE);
+        r.set_cohort(32);
+        r.set_snapshot_age(5);
+        r.roster_add(10);
+        r.roster_sub(4);
+        r.roster_sub(100); // saturates at zero, never panics
+        let samples = parse_exposition(&r.render()).expect("parses");
+        let root = [("role", "root")];
+        assert_eq!(sample_value(&samples, "sparsignd_round_phase", &root), Some(2));
+        assert_eq!(sample_value(&samples, "sparsignd_cohort_size", &root), Some(32));
+        assert_eq!(sample_value(&samples, "sparsignd_snapshot_age_rounds", &root), Some(5));
+        assert_eq!(sample_value(&samples, "sparsignd_roster_workers", &root), Some(0));
+    }
+
+    #[test]
+    fn exposition_has_help_and_type_per_family() {
+        let body = MetricsRegistry::root().render();
+        for family in [
+            "sparsignd_round_phase",
+            "sparsignd_rounds_closed_total",
+            "sparsignd_rejects_total",
+        ] {
+            assert_eq!(
+                body.matches(&format!("# HELP {family} ")).count(),
+                1,
+                "exactly one HELP line for {family}"
+            );
+            assert_eq!(body.matches(&format!("# TYPE {family} ")).count(), 1);
+        }
+        // Six kind-labelled samples share the one rejects family.
+        assert_eq!(body.matches("sparsignd_rejects_total{").count(), REJECT_KINDS);
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_exposition("metric_without_labels 3").is_err());
+        assert!(parse_exposition("m{k=unquoted} 3").is_err());
+        assert!(parse_exposition("m{k=\"v\"} not-a-number").is_err());
+        assert!(parse_exposition("# just a comment\n").expect("comments ok").is_empty());
+    }
+}

@@ -153,6 +153,55 @@ impl Default for FleetOptions {
     }
 }
 
+impl FleetOptions {
+    /// Builder entry point — identical to [`Default`], reads better in
+    /// a chain.
+    ///
+    /// ```
+    /// use sparsignd::net::FleetOptions;
+    /// use std::time::Duration;
+    ///
+    /// let opts = FleetOptions::new()
+    ///     .with_agents(4)
+    ///     .with_reconnect(Some(Duration::from_secs(30)));
+    /// assert_eq!(opts.agents, 4);
+    /// assert_eq!(opts.reconnect, Some(Duration::from_secs(30)));
+    /// ```
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Agent thread count (clamped to at least 1).
+    pub fn with_agents(mut self, agents: usize) -> Self {
+        self.agents = agents.max(1);
+        self
+    }
+
+    /// Frame payload cap.
+    pub fn with_max_payload(mut self, cap: usize) -> Self {
+        self.max_payload = cap;
+        self
+    }
+
+    /// Socket read timeout.
+    pub fn with_read_timeout(mut self, timeout: Duration) -> Self {
+        self.read_timeout = timeout;
+        self
+    }
+
+    /// Per-outage reconnect-with-backoff window (`None` fails fast).
+    pub fn with_reconnect(mut self, window: Option<Duration>) -> Self {
+        self.reconnect = window;
+        self
+    }
+
+    /// Deterministic fault injection (soak runs).
+    pub fn with_faults(mut self, faults: Option<FaultInjector>) -> Self {
+        self.faults = faults;
+        self
+    }
+}
+
 /// What the fleet observed, summed over agents.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FleetStats {

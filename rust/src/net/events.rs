@@ -26,6 +26,11 @@
 //! A SIGKILL can tear the final line; [`EventLog::append`] therefore
 //! starts with a newline so the successor's first event never fuses
 //! with a torn tail, and readers skip lines that fail to parse.
+//!
+//! The same drivers that emit here also feed the live scrape counters
+//! in [`crate::metrics::registry::MetricsRegistry`] — the event log is
+//! the durable record, the registry is the instantaneous one; both
+//! observe the same protocol facts at the same call sites.
 
 use std::fmt;
 use std::fs::{File, OpenOptions};

@@ -25,6 +25,13 @@
 //!   virtual clients each through the full protocol, plus the loopback
 //!   harnesses (flat and sharded) the equivalence tests and benches use.
 //!
+//! Every node in the tree — the root coordinator and each shard — can
+//! additionally expose a Prometheus scrape port (`--metrics-addr`): a
+//! minimal HTTP/1.0 `GET /metrics` + `GET /healthz` responder served by
+//! the *same* reactor thread as the protocol, fed from a wait-free
+//! [`MetricsRegistry`](crate::metrics::registry::MetricsRegistry).
+//! Scrapes never block a round (DESIGN.md §17).
+//!
 //! An end-to-end loopback run — compress, frame, send, decode, vote,
 //! broadcast — produces a `RunHistory` **bit-identical** to the
 //! in-process engine on the same seed (`tests/net_loopback.rs`), because
@@ -45,6 +52,7 @@ pub use client::{
     run_fleet, run_fleet_range, run_fleet_src, run_loopback, run_loopback_sharded, EndpointFile,
     EndpointFileLine, EndpointSource, FleetOptions, FleetStats,
 };
+pub use crate::metrics::registry::MetricsRegistry;
 pub use events::EventLog;
 pub use faults::{FaultInjector, FaultPlan, FaultRole, FaultSchedule};
 pub use server::{NetCoordinator, ServeOptions};

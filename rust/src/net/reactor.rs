@@ -30,6 +30,7 @@ use std::time::Duration;
 
 use super::wire;
 use super::{Endpoint, Listener, NetError, Stream};
+use crate::metrics::registry::MetricsRegistry;
 
 /// Readiness report for one registered token.
 #[derive(Clone, Copy, Debug)]
@@ -441,10 +442,37 @@ struct ConnIo {
 }
 
 const LISTENER_TOKEN: u64 = u64::MAX;
+/// The optional second listener: the `/metrics` scrape port.
+const METRICS_LISTENER_TOKEN: u64 = u64::MAX - 1;
+/// Scraper connections live under this token base, in a table separate
+/// from protocol connections — they never surface as [`MuxEvent`]s, so
+/// the driver's arrival-ordered conn-id contract is untouched.
+const HTTP_TOKEN_BASE: u64 = 1 << 62;
+/// Hostile-input cap: a scrape request larger than this is not a
+/// scrape. (A real `GET /metrics HTTP/1.1` with ordinary headers is a
+/// few hundred bytes.)
+const MAX_HTTP_REQUEST: usize = 1024;
+/// At most this many concurrent scraper connections; accepts beyond it
+/// are dropped on the spot so a connection flood cannot grow the table.
+const MAX_HTTP_CONNS: usize = 32;
 /// Keep at most this many spare frame buffers for reuse.
 const SPARE_BUFS: usize = 1024;
 /// Compact a read buffer once its consumed prefix exceeds this.
 const COMPACT_AT: usize = 64 * 1024;
+
+/// One scraper connection: request bytes in, one response out, close.
+struct HttpConn {
+    stream: Stream,
+    rbuf: Vec<u8>,
+    out: OutQueue,
+    /// The response is queued; once `out` drains the conn closes.
+    responded: bool,
+}
+
+/// Byte offset just past the request head's blank line, if complete.
+fn request_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
 
 /// Nonblocking connection multiplexer. Connection ids are assigned in
 /// arrival order and never reused — the protocol layer (roster, round
@@ -453,6 +481,12 @@ pub(crate) struct Mux {
     reactor: Reactor,
     listener: Option<Listener>,
     conns: Vec<Option<ConnIo>>,
+    /// Scrape port + scraper table (see [`Mux::listen_metrics`]). All
+    /// scraper I/O is nonblocking and bounded, so a slow or hostile
+    /// scraper can never stall the protocol pump.
+    metrics_listener: Option<Listener>,
+    metrics: Option<Arc<MetricsRegistry>>,
+    http: Vec<Option<HttpConn>>,
     max_payload: usize,
     events: Vec<Event>,
     spare: Vec<Vec<u8>>,
@@ -468,6 +502,9 @@ impl Mux {
             reactor: Reactor::new()?,
             listener: None,
             conns: Vec::new(),
+            metrics_listener: None,
+            metrics: None,
+            http: Vec::new(),
             max_payload,
             events: Vec::new(),
             spare: Vec::new(),
@@ -491,6 +528,29 @@ impl Mux {
         #[cfg(not(unix))]
         self.reactor.register((), LISTENER_TOKEN, false)?;
         self.listener = Some(listener);
+        Ok(())
+    }
+
+    /// Adopt a bound scrape listener: connections accepted here are
+    /// answered by the built-in `GET /metrics` / `GET /healthz`
+    /// HTTP/1.0 responder (rendering `registry`) and never surface as
+    /// [`MuxEvent`]s. Same hostile-input discipline as the wire path:
+    /// request size capped at [`MAX_HTTP_REQUEST`], connection count at
+    /// [`MAX_HTTP_CONNS`], anything that is not a known `GET` drops the
+    /// connection without a response.
+    pub fn listen_metrics(
+        &mut self,
+        listener: Listener,
+        registry: Arc<MetricsRegistry>,
+    ) -> Result<(), NetError> {
+        assert!(self.metrics_listener.is_none(), "one metrics listener per mux");
+        listener.set_nonblocking(true)?;
+        #[cfg(unix)]
+        self.reactor.register(listener.raw_fd(), METRICS_LISTENER_TOKEN, false)?;
+        #[cfg(not(unix))]
+        self.reactor.register((), METRICS_LISTENER_TOKEN, false)?;
+        self.metrics_listener = Some(listener);
+        self.metrics = Some(registry);
         Ok(())
     }
 
@@ -593,6 +653,16 @@ impl Mux {
             let ev = events[i];
             if ev.token == LISTENER_TOKEN {
                 self.accept_ready(out)?;
+            } else if ev.token == METRICS_LISTENER_TOKEN {
+                self.accept_scrapers();
+            } else if ev.token >= HTTP_TOKEN_BASE {
+                let slot = (ev.token - HTTP_TOKEN_BASE) as usize;
+                if ev.writable {
+                    self.http_flush(slot);
+                }
+                if ev.readable {
+                    self.http_read(slot);
+                }
             } else {
                 let conn = ev.token as usize;
                 if ev.writable {
@@ -622,6 +692,158 @@ impl Mux {
                 // connections are pending.
                 Err(_) => return Ok(()),
             }
+        }
+    }
+
+    // -- scrape responder (never visible to the protocol layer) -------
+
+    fn accept_scrapers(&mut self) {
+        loop {
+            let Some(listener) = self.metrics_listener.as_ref() else { return };
+            match listener.accept_nonblocking() {
+                Ok(Some(stream)) => {
+                    if self.http.iter().filter(|c| c.is_some()).count() >= MAX_HTTP_CONNS {
+                        // Connection flood: refuse on the spot. The
+                        // stream drops here, sending RST/FIN.
+                        if let Some(m) = &self.metrics {
+                            m.inc_scraper_dropped();
+                        }
+                        continue;
+                    }
+                    if self.adopt_scraper(stream).is_err() {
+                        if let Some(m) = &self.metrics {
+                            m.inc_scraper_dropped();
+                        }
+                    }
+                }
+                Ok(None) => return,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn adopt_scraper(&mut self, stream: Stream) -> Result<(), NetError> {
+        stream.set_nonblocking(true)?;
+        let slot = self.http.iter().position(|c| c.is_none()).unwrap_or(self.http.len());
+        #[cfg(unix)]
+        self.reactor.register(stream.raw_fd(), HTTP_TOKEN_BASE + slot as u64, false)?;
+        #[cfg(not(unix))]
+        self.reactor.register((), HTTP_TOKEN_BASE + slot as u64, false)?;
+        let conn =
+            HttpConn { stream, rbuf: Vec::new(), out: OutQueue::default(), responded: false };
+        if slot == self.http.len() {
+            self.http.push(Some(conn));
+        } else {
+            self.http[slot] = Some(conn);
+        }
+        Ok(())
+    }
+
+    fn close_http(&mut self, slot: usize) {
+        if let Some(hc) = self.http.get_mut(slot) {
+            if let Some(conn) = hc.take() {
+                let _ = self.reactor.deregister(HTTP_TOKEN_BASE + slot as u64);
+                conn.stream.shutdown();
+            }
+        }
+    }
+
+    /// Drop a scraper for hostile input and count it.
+    fn drop_scraper(&mut self, slot: usize) {
+        if let Some(m) = &self.metrics {
+            m.inc_scraper_dropped();
+        }
+        self.close_http(slot);
+    }
+
+    fn http_read(&mut self, slot: usize) {
+        let mut chunk = [0u8; 1024];
+        loop {
+            let Some(Some(hc)) = self.http.get_mut(slot) else { return };
+            match std::io::Read::read(&mut hc.stream, &mut chunk) {
+                Ok(0) => {
+                    self.close_http(slot);
+                    return;
+                }
+                Ok(n) => {
+                    if hc.responded {
+                        // Pipelined extras after the request: ignored;
+                        // HTTP/1.0 closes after one response.
+                        continue;
+                    }
+                    hc.rbuf.extend_from_slice(&chunk[..n]);
+                    if let Some(end) = request_end(&hc.rbuf) {
+                        self.http_respond(slot, end);
+                        // `responded` or closed either way; keep
+                        // draining the socket until WouldBlock.
+                        continue;
+                    }
+                    if hc.rbuf.len() > MAX_HTTP_REQUEST {
+                        self.drop_scraper(slot);
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_http(slot);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Answer one complete request (`rbuf[..end]` is the head through
+    /// the blank line). Unknown method/path/version: drop, no response
+    /// — a scrape port does not negotiate with strangers.
+    fn http_respond(&mut self, slot: usize, end: usize) {
+        let Some(Some(hc)) = self.http.get_mut(slot) else { return };
+        let head = &hc.rbuf[..end];
+        let line = head.split(|&b| b == b'\r').next().unwrap_or(head);
+        let Ok(line) = std::str::from_utf8(line) else { return self.drop_scraper(slot) };
+        let mut parts = line.split(' ').filter(|p| !p.is_empty());
+        let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v)) => (m, p, v),
+            _ => return self.drop_scraper(slot),
+        };
+        if method != "GET" || !version.starts_with("HTTP/1.") || parts.next().is_some() {
+            return self.drop_scraper(slot);
+        }
+        let (ctype, body) = match path {
+            "/metrics" => {
+                let Some(reg) = self.metrics.clone() else { return self.drop_scraper(slot) };
+                reg.inc_scrape();
+                ("text/plain; version=0.0.4; charset=utf-8", reg.render())
+            }
+            "/healthz" => ("text/plain; charset=utf-8", "ok\n".to_string()),
+            _ => return self.drop_scraper(slot),
+        };
+        let response = format!(
+            "HTTP/1.0 200 OK\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        let Some(Some(hc)) = self.http.get_mut(slot) else { return };
+        hc.responded = true;
+        hc.out.push(Arc::from(response.into_bytes().as_slice()));
+        self.http_flush(slot);
+    }
+
+    fn http_flush(&mut self, slot: usize) {
+        let Some(Some(hc)) = self.http.get_mut(slot) else { return };
+        match hc.out.flush(&mut hc.stream) {
+            Ok(true) => {
+                if hc.responded {
+                    self.close_http(slot);
+                } else {
+                    let _ = self.reactor.set_write(HTTP_TOKEN_BASE + slot as u64, false);
+                }
+            }
+            // The scraper is slow: leave the remainder queued and let
+            // writability drive the rest. The pump never waits on it.
+            Ok(false) => {
+                let _ = self.reactor.set_write(HTTP_TOKEN_BASE + slot as u64, true);
+            }
+            Err(_) => self.close_http(slot),
         }
     }
 
@@ -1097,5 +1319,96 @@ mod tests {
             .collect();
         assert_eq!(got, reference, "backpressured broadcast corrupted the byte stream");
         assert!(mux.is_open(conn));
+    }
+
+    /// Blocking scraper client: connect, send `req`, collect whatever
+    /// the responder returns until it closes (errors tolerated — a
+    /// dropped hostile conn may RST mid-write).
+    fn spawn_scraper(addr: &Endpoint, req: &[u8]) -> std::thread::JoinHandle<Vec<u8>> {
+        let addr = addr.clone();
+        let req = req.to_vec();
+        std::thread::spawn(move || {
+            let mut s = Stream::connect(&addr).unwrap();
+            let _ = s.write_all(&req);
+            let mut out = Vec::new();
+            let _ = std::io::Read::read_to_end(&mut s, &mut out);
+            out
+        })
+    }
+
+    /// Pump the mux until the scraper thread finishes, asserting the
+    /// scrape traffic never surfaces as protocol events.
+    fn pump_scrape(mux: &mut Mux, h: std::thread::JoinHandle<Vec<u8>>) -> Vec<u8> {
+        let mut events = Vec::new();
+        let mut spins = 0;
+        while !h.is_finished() {
+            events.clear();
+            mux.pump(Some(Duration::from_millis(10)), &mut events).unwrap();
+            assert!(events.is_empty(), "scraper traffic must not surface as MuxEvents");
+            spins += 1;
+            assert!(spins < 2_000, "scrape never completed");
+        }
+        h.join().unwrap()
+    }
+
+    #[test]
+    fn mux_answers_metrics_and_healthz_scrapes() {
+        let ep = Endpoint::Tcp("127.0.0.1:0".into());
+        let listener = Listener::bind(&ep).unwrap();
+        let addr = listener.local_endpoint(&ep);
+        let mut mux = Mux::new(MAX_PAYLOAD).unwrap();
+        let reg = crate::metrics::registry::MetricsRegistry::root();
+        reg.observe_round_close(11, 22, 0, 0, 1);
+        mux.listen_metrics(listener, Arc::clone(&reg)).unwrap();
+
+        let got = pump_scrape(
+            &mut mux,
+            spawn_scraper(&addr, b"GET /metrics HTTP/1.1\r\nHost: x\r\nAccept: */*\r\n\r\n"),
+        );
+        let text = String::from_utf8(got).unwrap();
+        assert!(text.starts_with("HTTP/1.0 200 OK\r\n"), "bad status line: {text:?}");
+        assert!(text.contains("Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n"));
+        assert!(text.contains("sparsignd_uplink_wire_bytes_total{role=\"root\"} 11\n"));
+        assert!(text.contains("sparsignd_rounds_closed_total{role=\"root\"} 1\n"));
+
+        let got = pump_scrape(&mut mux, spawn_scraper(&addr, b"GET /healthz HTTP/1.0\r\n\r\n"));
+        let text = String::from_utf8(got).unwrap();
+        assert!(text.ends_with("\r\n\r\nok\n"), "healthz body: {text:?}");
+    }
+
+    #[test]
+    fn mux_drops_hostile_scrapers_and_keeps_serving() {
+        let ep = Endpoint::Tcp("127.0.0.1:0".into());
+        let listener = Listener::bind(&ep).unwrap();
+        let addr = listener.local_endpoint(&ep);
+        let mut mux = Mux::new(MAX_PAYLOAD).unwrap();
+        let reg = crate::metrics::registry::MetricsRegistry::root();
+        mux.listen_metrics(listener, Arc::clone(&reg)).unwrap();
+
+        // Wrong method, unknown path, and an oversized headerless
+        // request: all dropped without a byte of response.
+        for req in [
+            b"POST /metrics HTTP/1.1\r\n\r\n".to_vec(),
+            b"GET /admin HTTP/1.0\r\n\r\n".to_vec(),
+            vec![b'A'; 4096],
+        ] {
+            let got = pump_scrape(&mut mux, spawn_scraper(&addr, &req));
+            assert!(got.is_empty(), "hostile request got a response: {got:?}");
+        }
+
+        // The responder still answers well-formed scrapes afterwards,
+        // and the drops were counted.
+        let got = pump_scrape(&mut mux, spawn_scraper(&addr, b"GET /metrics HTTP/1.0\r\n\r\n"));
+        let text = String::from_utf8(got).unwrap();
+        let body = text.split("\r\n\r\n").nth(1).expect("response has a body");
+        let samples = crate::metrics::registry::parse_exposition(body).unwrap();
+        assert_eq!(
+            crate::metrics::registry::sample_value(
+                &samples,
+                "sparsignd_scrapers_dropped_total",
+                &[("role", "root")],
+            ),
+            Some(3)
+        );
     }
 }

@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use crate::compressors::{CompressedGrad, PackedTernary};
 use crate::coordinator::{RoundLoop, RunHistory, TrainingRun, VoteAccumulator, WorkerSampler};
+use crate::metrics::registry::{phase as mphase, MetricsRegistry};
 use crate::snapshot::{CoordinatorSnapshot, SnapshotPolicy};
 
 use super::events::EventLog;
@@ -90,9 +91,41 @@ pub struct ServeOptions {
     /// In-process fault injection for this role (DESIGN.md §15);
     /// `None` runs clean.
     pub faults: Option<FaultInjector>,
+    /// Scrape port: serve `GET /metrics` / `GET /healthz` here
+    /// (DESIGN.md §17). `None` disables the observability plane.
+    pub metrics_addr: Option<Endpoint>,
+    /// The registry the scrape port renders. Usually left `None` —
+    /// [`NetCoordinator::bind`] creates a root registry when
+    /// `metrics_addr` is set — but injectable so a test (or an
+    /// embedding) can read the same counters the scraper sees.
+    pub metrics: Option<Arc<MetricsRegistry>>,
+    /// Keep answering scrapes for this long after `Fin` before the
+    /// serve call returns, so an external scraper can deterministically
+    /// observe the *final* counter totals. Skipped on drain/error.
+    pub metrics_linger: Option<Duration>,
 }
 
 impl ServeOptions {
+    /// Coordinator options with every knob at its default: no deadline
+    /// (wait for the full cohort), 30 s rendezvous, no snapshots, no
+    /// event log, no fault injection, no scrape port.
+    ///
+    /// Configure with the `with_*` builders:
+    ///
+    /// ```
+    /// use std::time::Duration;
+    /// use sparsignd::net::{Endpoint, ServeOptions};
+    /// use sparsignd::snapshot::SnapshotPolicy;
+    ///
+    /// let opts = ServeOptions::new(Endpoint::Tcp("127.0.0.1:0".into()))
+    ///     .with_round_deadline(Some(Duration::from_secs(2)))
+    ///     .with_rendezvous_timeout(Duration::from_secs(10))
+    ///     .with_snapshot(Some(SnapshotPolicy::every("snap.bin", 5)))
+    ///     .with_heal_attempts(Some(10))
+    ///     .with_metrics_addr(Some(Endpoint::Tcp("127.0.0.1:9464".into())));
+    /// assert_eq!(opts.heal_attempts, Some(10));
+    /// assert!(opts.metrics_addr.is_some());
+    /// ```
     pub fn new(endpoint: Endpoint) -> Self {
         Self {
             endpoint,
@@ -106,7 +139,70 @@ impl ServeOptions {
             event_log: None,
             heal_attempts: None,
             faults: None,
+            metrics_addr: None,
+            metrics: None,
+            metrics_linger: None,
         }
+    }
+
+    /// Per-round submission deadline (`None` waits for the full cohort).
+    pub fn with_round_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.round_deadline = deadline;
+        self
+    }
+
+    /// Rendezvous / re-coverage wait budget.
+    pub fn with_rendezvous_timeout(mut self, timeout: Duration) -> Self {
+        self.rendezvous_timeout = timeout;
+        self
+    }
+
+    /// Coordinator snapshot policy (DESIGN.md §12).
+    pub fn with_snapshot(mut self, policy: Option<SnapshotPolicy>) -> Self {
+        self.snapshot = policy;
+        self
+    }
+
+    /// Graceful drain after `n` completed rounds.
+    pub fn with_drain_after(mut self, n: Option<usize>) -> Self {
+        self.drain_after = n;
+        self
+    }
+
+    /// Strict self-healing attempt cap (the soak contract).
+    pub fn with_heal_attempts(mut self, attempts: Option<usize>) -> Self {
+        self.heal_attempts = attempts;
+        self
+    }
+
+    /// Structured per-round event log (DESIGN.md §15).
+    pub fn with_event_log(mut self, log: Option<Arc<EventLog>>) -> Self {
+        self.event_log = log;
+        self
+    }
+
+    /// In-process fault injection for the coordinator role.
+    pub fn with_faults(mut self, faults: Option<FaultInjector>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Scrape port for `GET /metrics` / `GET /healthz` (DESIGN.md §17).
+    pub fn with_metrics_addr(mut self, addr: Option<Endpoint>) -> Self {
+        self.metrics_addr = addr;
+        self
+    }
+
+    /// Inject the registry the scrape port renders (tests/embeddings).
+    pub fn with_metrics(mut self, registry: Option<Arc<MetricsRegistry>>) -> Self {
+        self.metrics = registry;
+        self
+    }
+
+    /// Post-`Fin` scrape window (final counters stay observable).
+    pub fn with_metrics_linger(mut self, linger: Option<Duration>) -> Self {
+        self.metrics_linger = linger;
+        self
     }
 }
 
@@ -116,20 +212,45 @@ impl ServeOptions {
 pub struct NetCoordinator {
     listener: Listener,
     local: Endpoint,
+    metrics_listener: Option<Listener>,
+    metrics_local: Option<Endpoint>,
     opts: ServeOptions,
 }
 
 impl NetCoordinator {
-    /// Bind the accept socket.
-    pub fn bind(opts: ServeOptions) -> Result<Self, NetError> {
+    /// Bind the accept socket — and the scrape socket, when
+    /// `opts.metrics_addr` asks for one (creating a root registry
+    /// unless the caller injected their own via `opts.metrics`).
+    pub fn bind(mut opts: ServeOptions) -> Result<Self, NetError> {
         let listener = Listener::bind(&opts.endpoint)?;
         let local = listener.local_endpoint(&opts.endpoint);
-        Ok(Self { listener, local, opts })
+        let (metrics_listener, metrics_local) = match &opts.metrics_addr {
+            Some(addr) => {
+                let l = Listener::bind(addr)?;
+                let resolved = l.local_endpoint(addr);
+                if opts.metrics.is_none() {
+                    opts.metrics = Some(MetricsRegistry::root());
+                }
+                (Some(l), Some(resolved))
+            }
+            None => (None, None),
+        };
+        Ok(Self { listener, local, metrics_listener, metrics_local, opts })
     }
 
     /// The resolved bind address (dial this).
     pub fn local_endpoint(&self) -> &Endpoint {
         &self.local
+    }
+
+    /// The resolved scrape address (`GET /metrics` here), when bound.
+    pub fn metrics_endpoint(&self) -> Option<&Endpoint> {
+        self.metrics_local.as_ref()
+    }
+
+    /// The registry the scrape port renders, when one exists.
+    pub fn metrics_registry(&self) -> Option<&Arc<MetricsRegistry>> {
+        self.opts.metrics.as_ref()
     }
 
     /// Run `run.rounds` federated rounds over the socket and return the
@@ -143,7 +264,7 @@ impl NetCoordinator {
         init: Vec<f32>,
         eval: &dyn Fn(&[f32]) -> (f64, f64),
     ) -> Result<RunHistory, NetError> {
-        let NetCoordinator { listener, local, mut opts } = self;
+        let NetCoordinator { listener, local, metrics_listener, metrics_local, mut opts } = self;
         let d = init.len();
         let n_max = WorkerSampler::new(workers, run.participation).per_round();
         let streaming = run.streams_votes(n_max);
@@ -162,6 +283,10 @@ impl NetCoordinator {
         };
         let mut mux = Mux::new(opts.max_payload)?;
         mux.listen(listener)?;
+        if let Some(l) = metrics_listener {
+            let reg = opts.metrics.clone().unwrap_or_else(MetricsRegistry::root);
+            mux.listen_metrics(l, reg)?;
+        }
         if let Some(fi) = &opts.faults {
             mux.set_send_delay(fi.send_delay());
         }
@@ -173,8 +298,10 @@ impl NetCoordinator {
         }
 
         let phase = PhaseTracker::resumed_at(lp.start_round());
+        let metrics = opts.metrics.clone();
         let drv = Driver {
             run,
+            metrics,
             m: workers,
             lp,
             opts: &opts,
@@ -203,13 +330,19 @@ impl NetCoordinator {
         };
         let result = drv.drive(eval);
 
-        // A UDS socket file outlives its listener; clean up.
+        // A UDS socket file outlives its listener; clean up (the scrape
+        // socket too, when it was UDS-bound).
         #[cfg(unix)]
-        if let Endpoint::Uds(path) = &local {
-            let _ = std::fs::remove_file(path);
+        {
+            if let Endpoint::Uds(path) = &local {
+                let _ = std::fs::remove_file(path);
+            }
+            if let Some(Endpoint::Uds(path)) = &metrics_local {
+                let _ = std::fs::remove_file(path);
+            }
         }
         #[cfg(not(unix))]
-        let _ = &local;
+        let _ = (&local, &metrics_local);
         result
     }
 }
@@ -219,6 +352,10 @@ impl NetCoordinator {
 /// state mutated between [`Mux::pump`] calls.
 struct Driver<'a> {
     run: &'a TrainingRun,
+    /// Observability registry (DESIGN.md §17); `None` when no scrape
+    /// port was asked for. Every feed is a relaxed atomic op at a site
+    /// where the fact is already in hand — never a reason to block.
+    metrics: Option<Arc<MetricsRegistry>>,
     m: usize,
     lp: RoundLoop<'a>,
     opts: &'a ServeOptions,
@@ -288,6 +425,9 @@ impl<'a> Driver<'a> {
             self.round(t, eval)?;
             let done = t + 1;
             self.rounds_since_snap += 1;
+            if let Some(m) = self.met() {
+                m.set_snapshot_age(self.rounds_since_snap);
+            }
             // `>=` rather than `==`: a resumed coordinator whose start
             // round is already past the drain mark drains after its
             // first completed round instead of silently never draining.
@@ -297,6 +437,9 @@ impl<'a> Driver<'a> {
                 if policy.due(done, self.run.rounds) || draining {
                     self.lp.to_snapshot().save(&policy.path).map_err(NetError::Snapshot)?;
                     self.rounds_since_snap = 0;
+                    if let Some(m) = self.met() {
+                        m.set_snapshot_age(0);
+                    }
                     self.emit("snapshot", &[("t", t as u64)]);
                 }
             }
@@ -322,8 +465,34 @@ impl<'a> Driver<'a> {
         // reactor a bounded window to flush before the teardown.
         self.drain_outgoing();
         self.phase.finish();
+        if let Some(m) = self.met() {
+            m.set_phase(mphase::FINISHED);
+        }
         self.emit("fin", &[("rounds", self.run.rounds as u64)]);
+        self.linger_for_scrapes();
         Ok(())
+    }
+
+    /// Post-`Fin` scrape window: keep the reactor pumping (the scrape
+    /// responder included) so an external scraper can observe the final
+    /// counter totals before the sockets vanish. Protocol conns are
+    /// already finished; any events that still arrive are handled
+    /// normally and change nothing.
+    fn linger_for_scrapes(&mut self) {
+        let Some(window) = self.opts.metrics_linger else { return };
+        if self.metrics.is_none() {
+            return;
+        }
+        let deadline = Instant::now() + window;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return;
+            }
+            if self.pump_step(left.min(Duration::from_millis(100)), None).is_err() {
+                return;
+            }
+        }
     }
 
     /// Wait until the fleet covers the worker population.
@@ -353,6 +522,11 @@ impl<'a> Driver<'a> {
         // all-hosts-dead attempt reuses the same cohort.
         let n = self.lp.select(t);
         self.phase.open_round(t);
+        if let Some(m) = self.met() {
+            m.set_round(t as u64);
+            m.set_cohort(n as u64);
+            m.set_phase(mphase::OPEN);
+        }
         let mut sel_ids: Vec<u64> = Vec::with_capacity(n);
         let mut attempts = 0usize;
 
@@ -422,6 +596,9 @@ impl<'a> Driver<'a> {
             }
             self.emit("round_open", &[("t", t as u64), ("attempt", attempts as u64)]);
             self.phase.aggregate(t);
+            if let Some(m) = self.met() {
+                m.set_phase(mphase::AGGREGATE);
+            }
 
             // Collect until every live slot filled or the deadline expires.
             let hard_deadline = self.opts.round_deadline.map(|d| Instant::now() + d);
@@ -504,6 +681,10 @@ impl<'a> Driver<'a> {
                     ],
                 );
                 self.phase.reopen_round(t);
+                if let Some(m) = self.met() {
+                    m.inc_heal_attempt();
+                    m.set_phase(mphase::OPEN);
+                }
                 if !self.roster.covered() {
                     self.await_recoverage(t)?;
                 }
@@ -520,6 +701,19 @@ impl<'a> Driver<'a> {
             );
             let rejects = self.table.take_rejects();
             self.lp.ledger.add_rejects(&rejects);
+            // Same values, same site, as the ledger annotation above —
+            // the scrape counters bit-match `history_json` by
+            // construction.
+            if let Some(m) = self.met() {
+                m.observe_round_close(
+                    self.up_bytes,
+                    down_client + self.down_extra,
+                    self.shard_up,
+                    down_shard,
+                    stragglers as u64,
+                );
+                m.add_rejects(&rejects);
+            }
             self.emit(
                 "round_close",
                 &[
@@ -535,6 +729,9 @@ impl<'a> Driver<'a> {
                 ],
             );
             self.phase.broadcast(t);
+            if let Some(m) = self.met() {
+                m.set_phase(mphase::BROADCAST);
+            }
             return Ok(());
         }
     }
@@ -683,6 +880,9 @@ impl<'a> Driver<'a> {
             // path elastic federation depends on.
             Some(Ok(())) => {
                 self.is_shard[conn] = shard;
+                if let Some(m) = self.met() {
+                    m.roster_add(hi.saturating_sub(lo));
+                }
                 self.emit(
                     "reclaim",
                     &[("conn", conn as u64), ("shard", shard as u64), ("lo", lo), ("hi", hi)],
@@ -846,6 +1046,9 @@ impl<'a> Driver<'a> {
         // Shard-local typed rejects (its own stragglers/equivocators)
         // fold into the same cumulative ledger counters.
         self.lp.ledger.add_rejects(&v.rejects);
+        if let Some(m) = self.met() {
+            m.add_rejects(&v.rejects);
+        }
         // The shard has spoken for its whole range this round: anything
         // unfilled sat out downstream (partial participation), and
         // exactly one merged frame arrives per shard per round — stop
@@ -860,6 +1063,14 @@ impl<'a> Driver<'a> {
     fn fold_rejects(&mut self) {
         let rejects = self.table.take_rejects();
         self.lp.ledger.add_rejects(&rejects);
+        if let Some(m) = self.met() {
+            m.add_rejects(&rejects);
+        }
+    }
+
+    /// The observability registry, if a scrape port is armed.
+    fn met(&self) -> Option<&MetricsRegistry> {
+        self.metrics.as_deref()
     }
 
     /// Bounded post-Fin flush: pump until every live connection's output
@@ -913,6 +1124,9 @@ impl<'a> Driver<'a> {
             let freed = self.roster.release(conn);
             self.table.drop_conn(conn);
             let (lo, hi) = freed.unwrap_or((0, 0));
+            if let Some(m) = self.met() {
+                m.roster_sub((hi as u64).saturating_sub(lo as u64));
+            }
             self.emit(
                 "conn_dead",
                 &[

@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::compressors::PackedTernary;
 use crate::coordinator::{TrainingRun, VoteAccumulator, WorkerSampler};
+use crate::metrics::registry::{phase as mphase, MetricsRegistry};
 
 use super::client::retriable;
 use super::faults::FaultInjector;
@@ -80,6 +81,15 @@ pub struct ShardOptions {
     ///
     /// [`FaultPlan::injector`]: super::faults::FaultPlan::injector
     pub faults: Option<FaultInjector>,
+    /// Scrape port: every shard exposes its own `GET /metrics` /
+    /// `GET /healthz`, so a whole aggregation tree is scrape-able
+    /// (DESIGN.md §17). `None` disables it.
+    pub metrics_addr: Option<Endpoint>,
+    /// The registry the scrape port renders. Callers that know the
+    /// shard's index should inject [`MetricsRegistry::shard`] so the
+    /// `shard="<index>"` label is right; when left `None`,
+    /// [`ShardCoordinator::bind`] falls back to labelling by `lo`.
+    pub metrics: Option<Arc<MetricsRegistry>>,
 }
 
 impl ShardOptions {
@@ -97,7 +107,21 @@ impl ShardOptions {
             reconnect: None,
             upstream_file: None,
             faults: None,
+            metrics_addr: None,
+            metrics: None,
         }
+    }
+
+    /// Scrape port for this shard (DESIGN.md §17).
+    pub fn with_metrics_addr(mut self, addr: Option<Endpoint>) -> Self {
+        self.metrics_addr = addr;
+        self
+    }
+
+    /// Inject the registry the scrape port renders.
+    pub fn with_metrics(mut self, registry: Option<Arc<MetricsRegistry>>) -> Self {
+        self.metrics = registry;
+        self
     }
 }
 
@@ -131,12 +155,15 @@ pub struct ShardStats {
 pub struct ShardCoordinator {
     listener: Listener,
     local: Endpoint,
+    metrics_listener: Option<Listener>,
+    metrics_local: Option<Endpoint>,
     opts: ShardOptions,
 }
 
 impl ShardCoordinator {
-    /// Bind the downstream accept socket.
-    pub fn bind(opts: ShardOptions) -> Result<Self, NetError> {
+    /// Bind the downstream accept socket — and the scrape socket when
+    /// `opts.metrics_addr` asks for one.
+    pub fn bind(mut opts: ShardOptions) -> Result<Self, NetError> {
         if opts.lo >= opts.hi {
             return Err(NetError::Config(format!(
                 "shard range {}..{} is empty",
@@ -145,12 +172,33 @@ impl ShardCoordinator {
         }
         let listener = Listener::bind(&opts.listen)?;
         let local = listener.local_endpoint(&opts.listen);
-        Ok(Self { listener, local, opts })
+        let (metrics_listener, metrics_local) = match &opts.metrics_addr {
+            Some(addr) => {
+                let l = Listener::bind(addr)?;
+                let resolved = l.local_endpoint(addr);
+                if opts.metrics.is_none() {
+                    opts.metrics = Some(MetricsRegistry::shard(opts.lo));
+                }
+                (Some(l), Some(resolved))
+            }
+            None => (None, None),
+        };
+        Ok(Self { listener, local, metrics_listener, metrics_local, opts })
     }
 
     /// The resolved downstream bind address (clients dial this).
     pub fn local_endpoint(&self) -> &Endpoint {
         &self.local
+    }
+
+    /// The resolved scrape address (`GET /metrics` here), when bound.
+    pub fn metrics_endpoint(&self) -> Option<&Endpoint> {
+        self.metrics_local.as_ref()
+    }
+
+    /// The registry the scrape port renders, when one exists.
+    pub fn metrics_registry(&self) -> Option<&Arc<MetricsRegistry>> {
+        self.opts.metrics.as_ref()
     }
 
     /// Rendezvous upstream, serve the downstream fleet until the root
@@ -165,7 +213,7 @@ impl ShardCoordinator {
         workers: usize,
         dim: usize,
     ) -> Result<ShardStats, NetError> {
-        let ShardCoordinator { listener, local, opts } = self;
+        let ShardCoordinator { listener, local, metrics_listener, metrics_local, opts } = self;
         if opts.hi > workers {
             return Err(NetError::Config(format!(
                 "shard range {}..{} exceeds population {workers}",
@@ -195,9 +243,15 @@ impl ShardCoordinator {
         }
         let up = mux.adopt(upstream)?;
         mux.listen(listener)?;
+        if let Some(l) = metrics_listener {
+            let reg = opts.metrics.clone().unwrap_or_else(|| MetricsRegistry::shard(opts.lo));
+            mux.listen_metrics(l, reg)?;
+        }
 
+        let metrics = opts.metrics.clone();
         let drv = ShardDriver {
             run,
+            metrics,
             m: workers,
             d: dim,
             cfg,
@@ -227,11 +281,16 @@ impl ShardCoordinator {
         let result = drv.drive();
 
         #[cfg(unix)]
-        if let Endpoint::Uds(path) = &local {
-            let _ = std::fs::remove_file(path);
+        {
+            if let Endpoint::Uds(path) = &local {
+                let _ = std::fs::remove_file(path);
+            }
+            if let Some(Endpoint::Uds(path)) = &metrics_local {
+                let _ = std::fs::remove_file(path);
+            }
         }
         #[cfg(not(unix))]
-        let _ = &local;
+        let _ = (&local, &metrics_local);
         result
     }
 }
@@ -362,6 +421,9 @@ struct OpenRound {
 /// mutated between [`Mux::pump`] calls, exactly like the root's driver.
 struct ShardDriver<'a> {
     run: &'a TrainingRun,
+    /// Observability registry (DESIGN.md §17); `None` without a scrape
+    /// port. Fed at the same points the [`ShardStats`] fields move.
+    metrics: Option<Arc<MetricsRegistry>>,
     /// Global population / model dimension (the shard validates against
     /// the same shapes the root announces).
     m: usize,
@@ -416,6 +478,9 @@ impl<'a> ShardDriver<'a> {
                 self.drain_outgoing();
                 if matches!(self.phase.phase(), Phase::Broadcast(_)) {
                     self.phase.finish();
+                }
+                if let Some(m) = self.met() {
+                    m.set_phase(mphase::FINISHED);
                 }
                 return Ok(());
             }
@@ -488,6 +553,9 @@ impl<'a> ShardDriver<'a> {
         }
         if conn == self.up {
             self.stats.root_down_bytes += bytes.len() as u64;
+            if let Some(m) = self.met() {
+                m.add_shard_downlink_wire_bytes(bytes.len() as u64);
+            }
             self.on_upstream_frame(bytes);
         } else {
             self.on_downstream_frame(conn, bytes);
@@ -609,6 +677,11 @@ impl<'a> ShardDriver<'a> {
         }
         self.phase.aggregate(t);
         self.stats.rounds_relayed += 1;
+        if let Some(m) = self.met() {
+            m.set_round(t as u64);
+            m.set_cohort(n_local as u64);
+            m.set_phase(mphase::AGGREGATE);
+        }
         let deadline = self.opts.round_deadline.map(|d| Instant::now() + d);
         self.round = Some(OpenRound { t, deadline, up_bytes: 0, down_bytes });
     }
@@ -677,6 +750,9 @@ impl<'a> ShardDriver<'a> {
         self.up = conn;
         self.commit = commit;
         self.stats.upstream_reconnects += 1;
+        if let Some(m) = self.met() {
+            m.inc_upstream_reconnect();
+        }
         Ok(())
     }
 
@@ -723,12 +799,24 @@ impl<'a> ShardDriver<'a> {
         );
         let shared: Arc<[u8]> = Arc::from(out.as_slice());
         self.frame = out;
+        let mut merged_len = 0u64;
         if self.mux.send(self.up, shared) {
             self.stats.root_up_bytes += len as u64;
+            merged_len = len as u64;
         }
+        let stragglers = (self.slot_worker.len() - recs.len()) as u64;
         self.stats.updates_folded += recs.len() as u64;
         self.stats.client_up_bytes += or.up_bytes;
         self.stats.client_down_bytes += or.down_bytes;
+        // Same movements as the ShardStats fields above: client-tier
+        // bytes this round, the merged frame as shard-tier uplink
+        // (downlink is counted per upstream frame), local stragglers,
+        // and the locally-tallied typed rejects riding the frame.
+        if let Some(m) = self.met() {
+            m.observe_round_close(or.up_bytes, or.down_bytes, merged_len, 0, stragglers);
+            m.add_rejects(&rejects);
+            m.set_phase(mphase::BROADCAST);
+        }
         self.phase.broadcast(or.t);
     }
 
@@ -797,6 +885,9 @@ impl<'a> ShardDriver<'a> {
             .map(|(l, h)| self.roster.claim(conn, l, h));
         match claim {
             Some(Ok(())) => {
+                if let Some(m) = self.met() {
+                    m.roster_add(hi.saturating_sub(lo));
+                }
                 let msg = Msg::Welcome {
                     client_id: conn as u64,
                     workers: self.m as u64,
@@ -873,13 +964,21 @@ impl<'a> ShardDriver<'a> {
         self.mark_dead(conn);
     }
 
+    /// The observability registry, if a scrape port is armed.
+    fn met(&self) -> Option<&MetricsRegistry> {
+        self.metrics.as_deref()
+    }
+
     fn mark_dead(&mut self, conn: usize) {
         self.mux.close(conn);
         if conn < self.alive.len() && self.alive[conn] {
             self.alive[conn] = false;
             if conn != self.up {
-                self.roster.release(conn);
+                let freed = self.roster.release(conn);
                 self.table.drop_conn(conn);
+                if let (Some(m), Some((lo, hi))) = (self.met(), freed) {
+                    m.roster_sub((hi - lo) as u64);
+                }
             }
         }
     }

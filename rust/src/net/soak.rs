@@ -43,13 +43,16 @@
 //! healed round ledgers exactly the bytes of its closing attempt, and
 //! worker rounds are pure functions of `(seed, round, worker, params)`.
 
+use std::io::{Read as _, Write as _};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
+use crate::metrics::registry::{parse_exposition, sample_value};
+
 use super::events::{event_field, parse_events};
 use super::faults::{FaultAction, FaultPlan};
-use super::NetError;
+use super::{Endpoint, NetError, Stream};
 
 /// Configuration for [`run_soak`].
 #[derive(Debug, Clone)]
@@ -130,6 +133,16 @@ pub struct SoakReport {
     pub faulted_json: PathBuf,
     /// Path of the faulted run's event log.
     pub event_log: PathBuf,
+    /// Successful `/metrics` scrapes of the faulted root while it ran.
+    pub metrics_scrapes: usize,
+    /// Distinct coordinator generations those scrapes reached — > 1
+    /// proves the scrape port came back after a kill+respawn.
+    pub metrics_generations: usize,
+    /// `true` iff the scraped `sparsignd_round` gauge never went
+    /// backwards across coordinator generations (per-process counters
+    /// reset on respawn by design; the round gauge tracks resumed
+    /// protocol state and must be monotone).
+    pub round_gauge_monotonic: bool,
 }
 
 /// Run the reference pipeline (no faults) and the faulted pipeline
@@ -170,6 +183,9 @@ pub fn run_soak(opts: &SoakOptions) -> Result<SoakReport, NetError> {
         reference_json: reference.history,
         faulted_json: faulted.history,
         event_log: faulted.events,
+        metrics_scrapes: faulted.metrics_scrapes,
+        metrics_generations: faulted.metrics_generations,
+        round_gauge_monotonic: faulted.round_gauge_monotonic,
     })
 }
 
@@ -203,6 +219,85 @@ struct PipelineOutcome {
     coordinator_restarts: usize,
     shard_restarts: usize,
     agent_restarts: usize,
+    metrics_scrapes: usize,
+    metrics_generations: usize,
+    round_gauge_monotonic: bool,
+}
+
+/// Live scrape sidecar: polls the root's `/metrics` (discovered through
+/// the `# metrics root …` comment line of `root.ep`) while the pipeline
+/// runs. A failed connect or a torn body is a missed sample, never an
+/// error — the root may be mid-respawn, and the scrape plane must not
+/// perturb the run it observes.
+struct MetricsWatch {
+    scrapes: usize,
+    generations: Vec<usize>,
+    last_round: u64,
+    regressed: bool,
+    last_poll: Option<Instant>,
+}
+
+impl MetricsWatch {
+    fn new() -> Self {
+        MetricsWatch {
+            scrapes: 0,
+            generations: Vec::new(),
+            last_round: 0,
+            regressed: false,
+            last_poll: None,
+        }
+    }
+
+    /// Scrape at most every 100ms (the supervisor loop spins at 20ms).
+    /// `gen` is the currently supervised root generation; scrapes landed
+    /// against it prove the scrape port survives (or returns after) a
+    /// kill. The `sparsignd_round` gauge must be globally nondecreasing:
+    /// a respawned root resumes from its snapshot, so an observed
+    /// regression means the resume lost protocol state.
+    fn poll(&mut self, root_ep: &Path, gen: Option<usize>) {
+        let Some(gen) = gen else { return };
+        if self.last_poll.map(|t| t.elapsed() < Duration::from_millis(100)).unwrap_or(false) {
+            return;
+        }
+        self.last_poll = Some(Instant::now());
+        let Some(ep) = metrics_endpoint_of(root_ep) else { return };
+        let Some(body) = scrape_metrics(&ep) else { return };
+        let Ok(samples) = parse_exposition(&body) else { return };
+        let Some(round) = sample_value(&samples, "sparsignd_round", &[("role", "root")]) else {
+            return;
+        };
+        self.scrapes += 1;
+        if !self.generations.contains(&gen) {
+            self.generations.push(gen);
+        }
+        if round < self.last_round {
+            self.regressed = true;
+        }
+        self.last_round = self.last_round.max(round);
+    }
+}
+
+/// The scrape endpoint a serving root appends to its endpoint file as a
+/// `# metrics root <ep>` comment line (after the endpoint lines, so
+/// line-indexed readers never see it).
+fn metrics_endpoint_of(ep_file: &Path) -> Option<Endpoint> {
+    let body = std::fs::read_to_string(ep_file).ok()?;
+    body.lines()
+        .filter_map(|l| l.trim().strip_prefix("# metrics root "))
+        .find_map(|rest| Endpoint::parse(rest.trim()).ok())
+}
+
+/// One blocking HTTP/1.0 `GET /metrics`. Returns the body on a 200,
+/// `None` on any connection, timeout, or protocol failure.
+fn scrape_metrics(ep: &Endpoint) -> Option<String> {
+    let mut stream = Stream::connect(ep).ok()?;
+    stream.set_read_timeout(Some(Duration::from_secs(2))).ok()?;
+    stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").ok()?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).ok()?;
+    let text = String::from_utf8(raw).ok()?;
+    let (head, body) = text.split_once("\r\n\r\n")?;
+    head.starts_with("HTTP/1.0 200").then(|| body.to_string())
 }
 
 /// Paths shared by all children of one pipeline.
@@ -307,6 +402,7 @@ fn run_pipeline(
     let mut coordinator_restarts = 0usize;
     let mut shard_restarts = 0usize;
     let mut agent_restarts = 0usize;
+    let mut watch = MetricsWatch::new();
 
     loop {
         if Instant::now() > deadline {
@@ -319,6 +415,7 @@ fn run_pipeline(
         }
 
         compose_endpoints(&paths, &mut composed)?;
+        watch.poll(&paths.root_ep, fleet.root.as_ref().map(|s| s.gen));
 
         // Root exit ends the pipeline: clean exit means Fin went out
         // and the history JSON is on disk; anything else is fatal.
@@ -437,6 +534,9 @@ fn run_pipeline(
         coordinator_restarts,
         shard_restarts,
         agent_restarts,
+        metrics_scrapes: watch.scrapes,
+        metrics_generations: watch.generations.len(),
+        round_gauge_monotonic: !watch.regressed,
     })
 }
 
@@ -538,6 +638,11 @@ fn spawn_root(
 ) -> Result<Slot, NetError> {
     let mut cmd = child_command(opts, paths, "serve", "root", gen, fault_spec)?;
     cmd.arg("--addr").arg(listen_endpoint(opts, paths, "root", gen));
+    // Every generation gets its own scrape port (ephemeral TCP or a
+    // generation-suffixed socket) published via the endpoint file's
+    // `# metrics root …` line; the supervisor's MetricsWatch follows it
+    // across respawns.
+    cmd.arg("--metrics-addr").arg(listen_endpoint(opts, paths, "root-metrics", gen));
     cmd.arg("--endpoint-file").arg(&paths.root_ep);
     cmd.arg("--snapshot").arg(&paths.snapshot);
     cmd.arg("--snapshot-every").arg("1");
@@ -613,6 +718,26 @@ mod tests {
         )
         .unwrap();
         assert_eq!(latest_boundary(&path), 5, "max wins even out of order");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn metrics_endpoint_is_read_from_the_comment_line() {
+        let dir = std::env::temp_dir().join(format!("soak-mep-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("root.ep");
+        std::fs::write(
+            &path,
+            "tcp://127.0.0.1:9001\n# metrics root tcp://127.0.0.1:9464\n",
+        )
+        .unwrap();
+        assert_eq!(
+            metrics_endpoint_of(&path),
+            Some(Endpoint::Tcp("127.0.0.1:9464".into()))
+        );
+        // No comment line (metrics disabled) → no endpoint, no error.
+        std::fs::write(&path, "tcp://127.0.0.1:9001\n").unwrap();
+        assert_eq!(metrics_endpoint_of(&path), None);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -226,6 +226,15 @@ pub struct SnapshotPolicy {
 
 impl SnapshotPolicy {
     /// Snapshot every `every` completed rounds into `path`.
+    ///
+    /// ```
+    /// use sparsignd::snapshot::SnapshotPolicy;
+    ///
+    /// let policy = SnapshotPolicy::every("target/run.snap", 3);
+    /// assert!(policy.due(3, 10) && !policy.due(4, 10));
+    /// // The final round never writes a periodic snapshot:
+    /// assert!(!policy.due(10, 10));
+    /// ```
     pub fn every(path: impl Into<PathBuf>, every: usize) -> Self {
         Self { path: path.into(), every }
     }

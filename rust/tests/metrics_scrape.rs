@@ -1,0 +1,228 @@
+//! Live observability plane, end to end (DESIGN.md §17): scrape a real
+//! coordinator's `GET /metrics` over TCP while a loopback federation
+//! runs, and pin the two contracts the plane makes:
+//!
+//! 1. **Bit-match** — at run end (during the post-`Fin` linger window)
+//!    every scraped counter equals the corresponding `CommLedger` total
+//!    in the returned `RunHistory`: same feed points, same numbers, no
+//!    sampling.
+//! 2. **Isolation** — hostile scrapers (oversized requests, half-open
+//!    connections held across the whole run, a hammer loop) never stall
+//!    a round: the run completes with *no* round deadline configured and
+//!    its history stays bit-identical to the in-process engine.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use sparsignd::compressors::CompressorKind;
+use sparsignd::coordinator::{AggregationRule, Algorithm, ClassifierEnv, TrainingRun};
+use sparsignd::data::{DirichletPartitioner, SyntheticSpec, SyntheticTask};
+use sparsignd::metrics::registry::{parse_exposition, sample_value, Sample};
+use sparsignd::model::ModelKind;
+use sparsignd::net::{run_fleet, Endpoint, FleetOptions, NetCoordinator, ServeOptions};
+use sparsignd::optim::LrSchedule;
+use sparsignd::util::rng::Pcg64;
+
+fn env(workers: usize) -> ClassifierEnv {
+    let task = SyntheticTask::generate(
+        SyntheticSpec {
+            dim: 12,
+            classes: 3,
+            modes: 1,
+            separation: 1.8,
+            noise: 0.25,
+            label_noise: 0.0,
+            train: 480,
+            test: 120,
+        },
+        41,
+    );
+    let mut rng = Pcg64::seed_from(42);
+    let fed = DirichletPartitioner { alpha: 0.5, workers }.partition(&task.train, &mut rng);
+    ClassifierEnv::new(
+        ModelKind::Linear { inputs: 12, classes: 3 }.build(),
+        task.train,
+        task.test,
+        fed,
+        16,
+    )
+}
+
+fn base_run(rounds: usize) -> TrainingRun {
+    let mut run = TrainingRun::new(
+        Algorithm::CompressedGd {
+            compressor: CompressorKind::Sign,
+            aggregation: AggregationRule::MajorityVote,
+        },
+        LrSchedule::Const { lr: 0.05 },
+        rounds,
+    );
+    run.eval_every = 0;
+    run.seed = 21;
+    run
+}
+
+/// One blocking HTTP/1.0 GET. `Some(body)` on a 200, `None` on a closed
+/// connection or non-200 — exactly what a scraper sees.
+fn http_get(addr: &str, path: &str) -> Option<String> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(10))).ok()?;
+    s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes()).ok()?;
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).ok()?;
+    let text = String::from_utf8(buf).ok()?;
+    let (head, body) = text.split_once("\r\n\r\n")?;
+    head.starts_with("HTTP/1.0 200").then(|| body.to_string())
+}
+
+fn scrape(addr: &str) -> Vec<Sample> {
+    let body = http_get(addr, "/metrics").expect("scrape answered");
+    parse_exposition(&body).expect("exposition parses")
+}
+
+/// A serving coordinator with a scrape port on an ephemeral TCP port;
+/// returns `(coordinator, dial endpoint, scrape "host:port")`.
+fn bind_with_metrics(opts: ServeOptions) -> (NetCoordinator, Endpoint, String) {
+    let coordinator = NetCoordinator::bind(
+        opts.with_metrics_addr(Some(Endpoint::Tcp("127.0.0.1:0".into()))),
+    )
+    .expect("bind");
+    let ep = coordinator.local_endpoint().clone();
+    let scrape_addr = match coordinator.metrics_endpoint().expect("metrics bound") {
+        Endpoint::Tcp(addr) => addr.clone(),
+        #[cfg(unix)]
+        other => panic!("expected a TCP scrape endpoint, got {other}"),
+    };
+    (coordinator, ep, scrape_addr)
+}
+
+#[test]
+fn scraped_counters_bit_match_the_ledger_at_run_end() {
+    let workers = 10;
+    let rounds = 5;
+    let e = env(workers);
+    let run = base_run(rounds);
+    let mut rng = Pcg64::seed_from(43);
+    let init = e.init_params(&mut rng);
+
+    let serve_opts = ServeOptions::new(Endpoint::Tcp("127.0.0.1:0".into()))
+        .with_metrics_linger(Some(Duration::from_secs(3)));
+    let (coordinator, ep, scrape_addr) = bind_with_metrics(serve_opts);
+    let fleet_opts = FleetOptions::new().with_agents(3);
+
+    let eval = |p: &[f32]| e.evaluate(p);
+    let (hist, linger_samples) = std::thread::scope(|s| {
+        let server = s.spawn(|| coordinator.serve(&run, workers, init, &eval));
+        let fleet = s.spawn(|| run_fleet(&ep, &run, &e, &fleet_opts));
+        fleet.join().expect("fleet thread").expect("fleet run");
+        // The fleet saw Fin, so the coordinator is now inside its
+        // linger window: totals are final and still scrape-able.
+        assert_eq!(http_get(&scrape_addr, "/healthz").as_deref(), Some("ok\n"));
+        assert_eq!(http_get(&scrape_addr, "/nope"), None, "unknown path gets no response");
+        let samples = scrape(&scrape_addr);
+        (server.join().expect("server thread").expect("serve"), samples)
+    });
+
+    let root = [("role", "root")];
+    let get = |name: &str| sample_value(&linger_samples, name, &root);
+    assert_eq!(get("sparsignd_rounds_closed_total"), Some(rounds as u64));
+    assert_eq!(get("sparsignd_round_phase"), Some(4), "FINISHED during linger");
+    assert_eq!(
+        get("sparsignd_uplink_wire_bytes_total"),
+        Some(hist.ledger.total_uplink_wire_bytes())
+    );
+    assert_eq!(
+        get("sparsignd_downlink_wire_bytes_total"),
+        Some(hist.ledger.total_downlink_wire_bytes())
+    );
+    assert_eq!(
+        get("sparsignd_stragglers_total"),
+        Some(hist.ledger.total_stragglers() as u64)
+    );
+    assert_eq!(
+        get("sparsignd_shard_uplink_wire_bytes_total"),
+        Some(hist.ledger.total_shard_uplink_wire_bytes())
+    );
+    assert!(hist.ledger.total_uplink_wire_bytes() > 0, "a real run moved real bytes");
+    // Reject counters: one labelled sample per kind, each equal to the
+    // ledger's typed counter (all zero on an honest run — equality is
+    // the contract either way).
+    let kinds = ["bad_round", "not_selected", "duplicate", "late", "unknown_worker", "wrong_client"];
+    for (i, kind) in kinds.iter().enumerate() {
+        assert_eq!(
+            sample_value(
+                &linger_samples,
+                "sparsignd_rejects_total",
+                &[("role", "root"), ("kind", kind)],
+            ),
+            Some(hist.ledger.rejects_by_kind()[i]),
+            "kind {kind}"
+        );
+    }
+}
+
+#[test]
+fn hostile_scrapers_never_stall_a_round() {
+    let workers = 8;
+    let rounds = 4;
+    let e = env(workers);
+    let run = base_run(rounds);
+    let mut rng = Pcg64::seed_from(44);
+    let init = e.init_params(&mut rng);
+    // The in-process reference this hammered run must still bit-match.
+    let expected = run.run(&e, init.clone(), &|p| e.evaluate(p));
+
+    // No round deadline: if a slow or malicious scraper could stall the
+    // reactor, this run would simply hang (and the test harness would
+    // time out) — completing at all is the isolation proof.
+    let serve_opts = ServeOptions::new(Endpoint::Tcp("127.0.0.1:0".into()))
+        .with_metrics_linger(Some(Duration::from_millis(500)));
+    let (coordinator, ep, scrape_addr) = bind_with_metrics(serve_opts);
+    let fleet_opts = FleetOptions::new().with_agents(2);
+
+    // Half-open connection held across the entire run: connects, never
+    // sends a byte, never reads.
+    let half_open = TcpStream::connect(&scrape_addr).expect("half-open connect");
+
+    // Oversized request: blows the request cap, gets the connection
+    // dropped with no response bytes ever written.
+    let mut oversized = TcpStream::connect(&scrape_addr).expect("oversized connect");
+    oversized.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let _ = oversized.write_all(&[b'A'; 4096]);
+    let mut got = Vec::new();
+    let _ = oversized.read_to_end(&mut got);
+    assert!(got.is_empty(), "hostile request must get no response, got {} bytes", got.len());
+
+    let stop = AtomicBool::new(false);
+    let eval = |p: &[f32]| e.evaluate(p);
+    let hist = std::thread::scope(|s| {
+        let server = s.spawn(|| coordinator.serve(&run, workers, init, &eval));
+        // Hammer loop: full scrapes as fast as the responder answers,
+        // for the whole duration of the run.
+        let hammer = s.spawn(|| {
+            let mut ok = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                if http_get(&scrape_addr, "/metrics").is_some() {
+                    ok += 1;
+                }
+            }
+            ok
+        });
+        let fleet = s.spawn(|| run_fleet(&ep, &run, &e, &fleet_opts));
+        fleet.join().expect("fleet thread").expect("fleet run");
+        stop.store(true, Ordering::Relaxed);
+        let scrapes = hammer.join().expect("hammer thread");
+        assert!(scrapes > 0, "the hammer loop must have landed real scrapes");
+        server.join().expect("server thread").expect("serve")
+    });
+    drop(half_open);
+
+    // A good scrape still works after the hostile ones were dropped
+    // (checked above via the hammer loop), and the protocol outcome is
+    // untouched by any of it.
+    assert_eq!(expected.final_params, hist.final_params, "history bit-identical under hammering");
+    assert_eq!(expected.reports.len(), hist.reports.len());
+    assert_eq!(hist.ledger.total_stragglers(), 0, "no round closed short");
+}

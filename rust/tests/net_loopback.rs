@@ -83,7 +83,7 @@ fn loopback_vs_in_process(
     let in_process = run.run(&e, init.clone(), &|p| e.evaluate(p));
 
     let serve_opts = ServeOptions::new(loopback_endpoint(uds));
-    let fleet_opts = FleetOptions { agents, ..FleetOptions::default() };
+    let fleet_opts = FleetOptions::new().with_agents(agents);
     let eval = |p: &[f32]| e.evaluate(p);
     let (wire_hist, stats) =
         run_loopback(run, &e, init, &eval, serve_opts, &fleet_opts).expect("loopback run");
